@@ -1,0 +1,72 @@
+//! Design-space exploration (paper §5.2 / Fig 13) with the pure-Rust
+//! scalar backend: sweep KC-P mapping variants x PEs x bandwidth under
+//! the Eyeriss budget and print the Pareto picture.
+//!
+//! ```sh
+//! cargo run --release --example dse_explore
+//! ```
+
+use anyhow::Result;
+
+use maestro::dse::engine::sweep;
+use maestro::dse::pareto::{best, pareto_front, Optimize};
+use maestro::dse::space::DesignSpace;
+use maestro::model::zoo::vgg16;
+use maestro::report::experiments::{compare_optima, design_space_scatter};
+use maestro::util::table::Table;
+
+fn main() -> Result<()> {
+    let layer = vgg16::conv2();
+    let space = DesignSpace::fig13("kc-p", 12);
+    println!(
+        "sweeping {} candidate designs (KC-P variants x PEs x bandwidth) under 16 mm2 / 450 mW",
+        space.size()
+    );
+    let (points, stats) = sweep(&[&layer], &space, 2)?;
+    let macs = layer.macs() as f64;
+    println!(
+        "evaluated {} ({} skipped by budget pruning), {} valid, {:.2}s -> {:.0} designs/s",
+        stats.evaluated,
+        stats.total_designs - stats.evaluated,
+        stats.valid,
+        stats.seconds,
+        stats.rate()
+    );
+
+    print!("{}", design_space_scatter(&points, macs, "KC-P on VGG16-CONV2"));
+
+    let front = pareto_front(&points, |p| p.runtime, |p| p.energy_pj);
+    let mut t = Table::new(&["variant", "PEs", "BW", "L1 (el)", "L2 (el)", "thrpt (MAC/cyc)", "energy (uJ)", "area", "power"]);
+    for &i in front.iter().take(12) {
+        let p = &points[i];
+        t.row(&[
+            p.dataflow.clone(),
+            p.pes.to_string(),
+            p.bandwidth.to_string(),
+            p.l1.to_string(),
+            p.l2.to_string(),
+            format!("{:.1}", p.throughput(macs)),
+            format!("{:.1}", p.energy_pj / 1e6),
+            format!("{:.2}", p.area_mm2),
+            format!("{:.0}", p.power_mw),
+        ]);
+    }
+    println!("Pareto front (first 12 of {}):", front.len());
+    print!("{}", t.render());
+
+    for (name, o) in [("throughput", Optimize::Throughput), ("energy", Optimize::Energy), ("EDP", Optimize::Edp)] {
+        if let Some(p) = best(&points, o, macs) {
+            println!(
+                "{name}-optimal: {} pes={} bw={} thrpt={:.1} energy={:.1}uJ area={:.2}mm2 power={:.0}mW",
+                p.dataflow, p.pes, p.bandwidth, p.throughput(macs), p.energy_pj / 1e6, p.area_mm2, p.power_mw
+            );
+        }
+    }
+    if let Some(c) = compare_optima(&points, macs) {
+        println!(
+            "energy-opt vs throughput-opt: power x{:.2}, SRAM x{:.1}, EDP -{:.0}%, throughput {:.0}%",
+            c.power_ratio, c.sram_ratio, c.edp_improvement * 100.0, c.throughput_fraction * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: analyze one convolution layer under the five Table 3
+//! dataflows and print runtime, energy, reuse, and buffer requirements.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use maestro::engine::analysis::{algorithmic_max_reuse, analyze_layer};
+use maestro::hw::config::HwConfig;
+use maestro::ir::{parser, styles};
+use maestro::model::layer::Layer;
+use maestro::model::tensor::TensorKind;
+use maestro::util::table::{num, Table};
+
+fn main() -> Result<()> {
+    // A layer: VGG16-style conv, 64 -> 128 channels at 112x112.
+    let layer = Layer::conv2d("demo", 1, 128, 64, 114, 114, 3, 3, 1);
+    // Hardware: 256 PEs, 16 elements/cycle NoC, 2KB L1 / 1MB L2.
+    let hw = HwConfig::fig10_default();
+
+    println!("layer: {layer}");
+    println!("hw: {} PEs, NoC {} el/cyc, L1 {} el, L2 {} el\n", hw.num_pes, hw.noc_bandwidth, hw.l1_size, hw.l2_size);
+
+    let mut t = Table::new(&[
+        "dataflow", "runtime (cyc)", "util", "energy (uJ)", "filter reuse", "input reuse", "L1 req (el)", "peak BW",
+    ]);
+    for df in styles::all_styles() {
+        let s = analyze_layer(&layer, &df, &hw)?;
+        t.row(&[
+            df.name.clone(),
+            num(s.runtime),
+            format!("{:.2}", s.util),
+            num(s.energy.total() / 1e6),
+            format!("{:.1}", s.reuse_factor(TensorKind::Filter)),
+            format!("{:.1}", s.reuse_factor(TensorKind::Input)),
+            s.l1_req.to_string(),
+            format!("{:.1}", s.peak_bw_need),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nalgorithmic max reuse: filter {:.1}, input {:.1}",
+        algorithmic_max_reuse(&layer, TensorKind::Filter),
+        algorithmic_max_reuse(&layer, TensorKind::Input)
+    );
+
+    // Dataflows are plain text — write your own:
+    let custom = parser::parse_dataflow(
+        "Dataflow my-ws {
+            TemporalMap(1,1) K;
+            TemporalMap(4,4) C;
+            TemporalMap(Sz(R),1) Y;
+            SpatialMap(Sz(S),1) X;
+         }",
+    )?;
+    let s = analyze_layer(&layer, &custom, &hw)?;
+    println!("\ncustom dataflow '{}' runtime: {} cycles (util {:.2})", custom.name, num(s.runtime), s.util);
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Model validation (paper Fig 9): compare the analytical engine against
+//! the cycle-level schedule simulator on a matrix of layers x dataflows.
+//!
+//! ```sh
+//! cargo run --release --example validate_model
+//! ```
+
+use anyhow::Result;
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::layer::Layer;
+use maestro::sim::cycle::simulate;
+use maestro::util::table::{num, Table};
+
+fn main() -> Result<()> {
+    let layers = vec![
+        Layer::conv2d("small-early", 1, 16, 8, 34, 34, 3, 3, 1),
+        Layer::conv2d("small-late", 1, 64, 64, 16, 16, 3, 3, 1),
+        Layer::conv2d("pointwise", 1, 64, 32, 28, 28, 1, 1, 1),
+        Layer::conv2d("strided", 1, 32, 16, 33, 33, 3, 3, 2),
+        Layer::depthwise("depthwise", 1, 32, 30, 30, 3, 3, 1),
+    ];
+    let hw = HwConfig { num_pes: 64, ..HwConfig::fig10_default() };
+
+    let mut t = Table::new(&["layer", "dataflow", "sim cycles", "model cycles", "error %"]);
+    let mut errs: Vec<f64> = Vec::new();
+    for layer in &layers {
+        for df in styles::all_styles() {
+            let Ok(sim) = simulate(layer, &df, &hw, 30_000_000) else { continue };
+            let Ok(ana) = analyze_layer(layer, &df, &hw) else { continue };
+            let err = (ana.runtime - sim.cycles).abs() / sim.cycles * 100.0;
+            errs.push(err);
+            t.row(&[layer.name.clone(), df.name.clone(), num(sim.cycles), num(ana.runtime), format!("{err:.2}")]);
+        }
+    }
+    print!("{}", t.render());
+    let avg = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
+    println!("\naverage |error| over {} (layer, dataflow) pairs: {avg:.2}% (paper: 3.9% vs RTL)", errs.len());
+    Ok(())
+}

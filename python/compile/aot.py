@@ -1,0 +1,49 @@
+"""AOT pipeline: lower the L2 evaluation graph (containing the L1 Pallas
+kernel) to HLO *text* and write `artifacts/dse_eval.hlo.txt`.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (a no-op when the artifact is newer than its
+inputs). Python never runs on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_path: str) -> int:
+    lowered = jax.jit(model.evaluate_designs).lower(*model.example_shapes())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/dse_eval.hlo.txt")
+    args = ap.parse_args()
+    n = build(args.out)
+    print(f"wrote {n} chars of HLO text to {args.out} "
+          f"(C_MAX={model.C_MAX}, D_MAX={model.D_MAX}, S_WIDTH={model.S_WIDTH})")
+
+
+if __name__ == "__main__":
+    main()

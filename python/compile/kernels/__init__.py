@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the MAESTRO reproduction.
+
+`dse_eval` is the DSE hot-spot: batched evaluation of design points
+against a flattened iteration-case table. `ref` is the pure-jnp oracle
+the pytest suite checks the kernel against.
+"""
+
+from . import dse_eval, ref  # noqa: F401

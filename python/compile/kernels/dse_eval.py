@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: batched DSE design-point evaluation.
+
+The DSE hot path evaluates the same flattened case table against
+thousands of (bandwidth, latency, L1, L2) design points. That is a dense
+rank-2 broadcast + reduction — a VPU workload, tiled over the design
+axis so each grid step works on a ``BLOCK_D x C`` tile with the case
+table resident in VMEM across steps (its BlockSpec index map is
+constant).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+no accelerator for MAESTRO itself; the kernel is written for TPU VMEM
+budgets — a ``(BLOCK_D=128) x (C=1024)`` f32 intermediate is 512 KB,
+several of which fit comfortably in 16 MB VMEM alongside the 32 KB case
+table — but always *executed* with ``interpret=True`` because the CPU
+PJRT plugin cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Design points per grid step.
+BLOCK_D = 128
+
+
+def _dse_kernel(cases_ref, designs_ref, scalars_ref, rt_ref, en_ref, ar_ref, pw_ref, va_ref):
+    """One grid step: evaluate BLOCK_D designs against the case table."""
+    cases = cases_ref[...]        # (C, 8), VMEM-resident across steps
+    designs = designs_ref[...]    # (BLOCK_D, 4)
+    scalars = scalars_ref[...]    # (32,)
+
+    occ = cases[:, 0][None, :]
+    ingress = cases[:, 1][None, :]
+    egress = cases[:, 2][None, :]
+    compute = cases[:, 3][None, :]
+    inner_comm = cases[:, 4][None, :]
+    inner_steps = cases[:, 5][None, :]
+    red = cases[:, 6][None, :]
+    is_init = cases[:, 7][None, :]
+
+    bw = jnp.maximum(designs[:, 0], 1.0)[:, None]
+    lat = designs[:, 1][:, None]
+
+    # Pipe-model delays (broadcast to (BLOCK_D, C)).
+    in_d = jnp.where(ingress > 0.0, jnp.ceil(ingress / bw) + lat, 0.0)
+    out_d = jnp.where(egress > 0.0, jnp.ceil(egress / bw) + lat, 0.0)
+    bw_share = jnp.maximum(bw / jnp.maximum(scalars[ref.S_UNITS0], 1.0), 1.0)
+    inner_d = jnp.where(
+        inner_comm > 0.0,
+        jnp.ceil(inner_comm / bw_share) + lat * inner_steps,
+        0.0,
+    )
+    cmp_d = jnp.maximum(compute + red, inner_d)
+    steady = jnp.maximum(jnp.maximum(in_d, cmp_d), out_d)
+    delay = jnp.where(is_init > 0.5, in_d + cmp_d + out_d, steady)
+    runtime = jnp.sum(occ * delay, axis=1)
+    rt_ref[...] = runtime
+
+    # Energy from activity totals + Cacti-fit curves.
+    l1 = jnp.maximum(designs[:, 2], 1.0)
+    l2 = jnp.maximum(designs[:, 3], 1.0)
+    e_l1r = scalars[ref.S_L1A] + scalars[ref.S_L1B] * jnp.sqrt(l1)
+    e_l2r = scalars[ref.S_L2A] + scalars[ref.S_L2B] * jnp.sqrt(l2)
+    wf = scalars[ref.S_WF]
+    energy = (
+        scalars[ref.S_MACS] * scalars[ref.S_MAC_PJ]
+        + scalars[ref.S_L1R] * e_l1r
+        + scalars[ref.S_L1W] * e_l1r * wf
+        + scalars[ref.S_L2R] * e_l2r
+        + scalars[ref.S_L2W] * e_l2r * wf
+        + scalars[ref.S_NOC] * scalars[ref.S_HOPS] * scalars[ref.S_HOP_PJ]
+    )
+    en_ref[...] = energy
+
+    # Area/power regressions (bus linear, arbiter quadratic).
+    bw1 = designs[:, 0]
+    pes = scalars[ref.S_PES]
+    arb = pes * pes
+    area = (
+        pes * scalars[ref.S_PE_AREA]
+        + pes * l1 * scalars[ref.S_SRAM_AREA]
+        + l2 * scalars[ref.S_SRAM_AREA]
+        + bw1 * scalars[ref.S_BUS_AREA]
+        + arb * scalars[ref.S_ARB_AREA]
+    )
+    # Total power = static regression + dynamic (1 pJ/cycle = 1 mW at
+    # the 1 GHz reference clock).
+    power = (
+        pes * scalars[ref.S_PE_POWER]
+        + pes * l1 * scalars[ref.S_SRAM_POWER]
+        + l2 * scalars[ref.S_SRAM_POWER]
+        + bw1 * scalars[ref.S_BUS_POWER]
+        + arb * scalars[ref.S_ARB_POWER]
+        + energy / jnp.maximum(runtime, 1.0)
+    )
+    ar_ref[...] = area
+    pw_ref[...] = power
+    va_ref[...] = jnp.where(
+        (area <= scalars[ref.S_AREA_BUDGET]) & (power <= scalars[ref.S_POWER_BUDGET]),
+        1.0,
+        0.0,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def dse_eval(cases, designs, scalars, block_d: int = BLOCK_D):
+    """Batched evaluation: ``(runtime, energy, area, power, valid)``.
+
+    ``designs.shape[0]`` must be a multiple of ``block_d``.
+    """
+    c, f = cases.shape
+    d, w = designs.shape
+    assert f == 8 and w == 4, (cases.shape, designs.shape)
+    assert d % block_d == 0, f"designs ({d}) must be a multiple of block_d ({block_d})"
+    grid = (d // block_d,)
+    out_shape = [jax.ShapeDtypeStruct((d,), jnp.float32) for _ in range(5)]
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    return pl.pallas_call(
+        _dse_kernel,
+        grid=grid,
+        in_specs=[
+            # Case table + scalars: resident, same block every step.
+            pl.BlockSpec((c, f), lambda i: (0, 0)),
+            pl.BlockSpec((block_d, 4), lambda i: (i, 0)),
+            pl.BlockSpec((32,), lambda i: (0,)),
+        ],
+        out_specs=[vec_spec] * 5,
+        out_shape=out_shape,
+        # CPU PJRT cannot execute Mosaic custom-calls; interpret=True
+        # lowers to plain HLO (see /opt/xla-example/README.md).
+        interpret=True,
+    )(cases, designs, scalars)

@@ -1,0 +1,138 @@
+"""Pure-jnp oracle for the batched DSE evaluator.
+
+Implements exactly the formulas of the Rust scalar evaluator
+(`rust/src/dse/engine.rs::eval_runtime` / `eval_energy` and
+`rust/src/hw/area.rs::evaluate`); the Pallas kernel is checked against
+this module, and this module is cross-checked against Rust by the
+integration test `rust/tests/pjrt_runtime.rs`.
+
+Inputs (see `rust/src/runtime/mod.rs::scalars_layout` for the scalar
+vector layout):
+
+* ``cases``   f32[C, 8]  — rows ``(occ, ingress, egress, compute,
+  inner_comm, inner_steps, red_delay, is_init)``; zero-occurrence rows
+  are padding.
+* ``designs`` f32[D, 4]  — rows ``(bandwidth, latency, l1, l2)``.
+* ``scalars`` f32[32]    — activity totals, energy-curve and area/power
+  regression constants, budgets.
+
+Outputs: ``(runtime[D], energy[D], area[D], power[D], valid[D])``.
+"""
+
+import jax.numpy as jnp
+
+# Scalar-vector indices (mirrors rust/src/runtime/mod.rs).
+S_UNITS0 = 0
+S_MACS = 1
+S_L2R = 2
+S_L2W = 3
+S_L1R = 4
+S_L1W = 5
+S_NOC = 6
+S_HOPS = 7
+S_PES = 8
+S_AREA_BUDGET = 9
+S_POWER_BUDGET = 10
+S_L1A = 11
+S_L1B = 12
+S_L2A = 13
+S_L2B = 14
+S_WF = 15
+S_MAC_PJ = 16
+S_HOP_PJ = 17
+S_PE_AREA = 18
+S_SRAM_AREA = 19
+S_BUS_AREA = 20
+S_ARB_AREA = 21
+S_PE_POWER = 22
+S_SRAM_POWER = 23
+S_BUS_POWER = 24
+S_ARB_POWER = 25
+
+
+def runtime_ref(cases, designs, scalars):
+    """Runtime (cycles) per design: sum over cases of occ x delay."""
+    occ = cases[:, 0][None, :]          # (1, C)
+    ingress = cases[:, 1][None, :]
+    egress = cases[:, 2][None, :]
+    compute = cases[:, 3][None, :]
+    inner_comm = cases[:, 4][None, :]
+    inner_steps = cases[:, 5][None, :]
+    red = cases[:, 6][None, :]
+    is_init = cases[:, 7][None, :]
+
+    bw = jnp.maximum(designs[:, 0], 1.0)[:, None]   # (D, 1)
+    lat = designs[:, 1][:, None]
+
+    in_d = jnp.where(ingress > 0.0, jnp.ceil(ingress / bw) + lat, 0.0)
+    out_d = jnp.where(egress > 0.0, jnp.ceil(egress / bw) + lat, 0.0)
+    bw_share = jnp.maximum(bw / jnp.maximum(scalars[S_UNITS0], 1.0), 1.0)
+    inner_d = jnp.where(
+        inner_comm > 0.0,
+        jnp.ceil(inner_comm / bw_share) + lat * inner_steps,
+        0.0,
+    )
+    cmp_d = jnp.maximum(compute + red, inner_d)
+    steady = jnp.maximum(jnp.maximum(in_d, cmp_d), out_d)
+    delay = jnp.where(is_init > 0.5, in_d + cmp_d + out_d, steady)
+    return jnp.sum(occ * delay, axis=1)
+
+
+def energy_ref(designs, scalars):
+    """Energy (pJ) per design from activity totals + Cacti-fit curves."""
+    l1 = jnp.maximum(designs[:, 2], 1.0)
+    l2 = jnp.maximum(designs[:, 3], 1.0)
+    e_l1r = scalars[S_L1A] + scalars[S_L1B] * jnp.sqrt(l1)
+    e_l2r = scalars[S_L2A] + scalars[S_L2B] * jnp.sqrt(l2)
+    wf = scalars[S_WF]
+    return (
+        scalars[S_MACS] * scalars[S_MAC_PJ]
+        + scalars[S_L1R] * e_l1r
+        + scalars[S_L1W] * e_l1r * wf
+        + scalars[S_L2R] * e_l2r
+        + scalars[S_L2W] * e_l2r * wf
+        + scalars[S_NOC] * scalars[S_HOPS] * scalars[S_HOP_PJ]
+    )
+
+
+def area_power_ref(designs, scalars):
+    """Area (mm2) and power (mW) regressions (bus linear, arbiter
+    quadratic — paper §5.2)."""
+    bw = designs[:, 0]
+    l1 = designs[:, 2]
+    l2 = designs[:, 3]
+    pes = scalars[S_PES]
+    arb_pairs = pes * pes
+    area = (
+        pes * scalars[S_PE_AREA]
+        + pes * l1 * scalars[S_SRAM_AREA]
+        + l2 * scalars[S_SRAM_AREA]
+        + bw * scalars[S_BUS_AREA]
+        + arb_pairs * scalars[S_ARB_AREA]
+    )
+    power = (
+        pes * scalars[S_PE_POWER]
+        + pes * l1 * scalars[S_SRAM_POWER]
+        + l2 * scalars[S_SRAM_POWER]
+        + bw * scalars[S_BUS_POWER]
+        + arb_pairs * scalars[S_ARB_POWER]
+    )
+    return area, power
+
+
+def evaluate_ref(cases, designs, scalars):
+    """Full reference: (runtime, energy, area, power, valid).
+
+    Power = static regression + dynamic (workload energy over runtime;
+    1 pJ/cycle = 1 mW at the 1 GHz reference clock).
+    """
+    runtime = runtime_ref(cases, designs, scalars)
+    energy = energy_ref(designs, scalars)
+    area, static_power = area_power_ref(designs, scalars)
+    power = static_power + energy / jnp.maximum(runtime, 1.0)
+    valid = jnp.where(
+        (area <= scalars[S_AREA_BUDGET]) & (power <= scalars[S_POWER_BUDGET]),
+        1.0,
+        0.0,
+    )
+    return runtime, energy, area, power, valid

@@ -1,0 +1,47 @@
+"""Layer-2 JAX model: the batched DSE evaluation graph.
+
+Wraps the L1 Pallas kernel (`kernels.dse_eval`) at the fixed shapes the
+AOT artifact exports. The Rust runtime (`rust/src/runtime/mod.rs`) pads
+its case tables and design batches to these shapes; keep the constants
+in sync (an integration test on the Rust side checks the artifact's
+entry layout).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dse_eval as dse_eval_kernel
+
+# Artifact shapes — must match rust/src/runtime/mod.rs.
+C_MAX = 128    # case rows per invocation (row-chunked by the Rust runtime)
+D_MAX = 512    # design points per invocation
+S_WIDTH = 32   # scalar vector width
+
+
+# Design-axis block for the exported artifact. On CPU-PJRT the grid loop
+# lowers to an HLO while-loop whose per-step slicing dominates small
+# batches; one full-width grid step is fastest (EXPERIMENTS.md §Perf).
+# On a real TPU, BLOCK_D-sized steps bound VMEM (kernels/dse_eval.py).
+EXPORT_BLOCK_D = D_MAX
+
+
+def evaluate_designs(cases, designs, scalars):
+    """The exported entry point.
+
+    cases   f32[C_MAX, 8], designs f32[D_MAX, 4], scalars f32[S_WIDTH]
+    returns (runtime, energy, area, power, valid), each f32[D_MAX].
+    """
+    cases = jnp.asarray(cases, jnp.float32)
+    designs = jnp.asarray(designs, jnp.float32)
+    scalars = jnp.asarray(scalars, jnp.float32)
+    return dse_eval_kernel.dse_eval(cases, designs, scalars, block_d=EXPORT_BLOCK_D)
+
+
+def example_shapes():
+    """ShapeDtypeStructs for AOT lowering."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((C_MAX, 8), jnp.float32),
+        jax.ShapeDtypeStruct((D_MAX, 4), jnp.float32),
+        jax.ShapeDtypeStruct((S_WIDTH,), jnp.float32),
+    )

@@ -1,0 +1,138 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The Pallas kernel must agree with the pure-jnp reference (`ref.py`) to
+float32 tolerance across randomized case tables, design batches and
+scalar vectors. Hypothesis sweeps shapes and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dse_eval, ref
+
+
+def make_inputs(rng, n_cases, n_designs, pad_to=None):
+    """Random but realistic case table / design batch / scalars."""
+    c = pad_to or n_cases
+    cases = np.zeros((c, 8), np.float32)
+    cases[:n_cases, 0] = rng.integers(1, 1_000_000, n_cases)          # occ
+    cases[:n_cases, 1] = rng.integers(0, 100_000, n_cases)            # ingress
+    cases[:n_cases, 2] = rng.integers(0, 50_000, n_cases)             # egress
+    cases[:n_cases, 3] = rng.integers(1, 10_000, n_cases)             # compute
+    cases[:n_cases, 4] = rng.integers(0, 20_000, n_cases)             # inner comm
+    cases[:n_cases, 5] = rng.integers(0, 64, n_cases)                 # inner steps
+    cases[:n_cases, 6] = rng.integers(0, 8, n_cases)                  # red delay
+    cases[0, 7] = 1.0                                                 # init row
+
+    designs = np.zeros((n_designs, 4), np.float32)
+    designs[:, 0] = rng.integers(1, 256, n_designs)                   # bw
+    designs[:, 1] = rng.integers(0, 8, n_designs)                     # lat
+    designs[:, 2] = rng.integers(64, 65_536, n_designs)               # l1
+    designs[:, 3] = rng.integers(1_024, 4_000_000, n_designs)         # l2
+
+    scalars = np.zeros(32, np.float32)
+    scalars[ref.S_UNITS0] = rng.integers(1, 64)
+    scalars[ref.S_MACS] = rng.integers(1, 10**9)
+    scalars[ref.S_L2R] = rng.integers(1, 10**8)
+    scalars[ref.S_L2W] = rng.integers(1, 10**8)
+    scalars[ref.S_L1R] = rng.integers(1, 10**9)
+    scalars[ref.S_L1W] = rng.integers(1, 10**9)
+    scalars[ref.S_NOC] = rng.integers(1, 10**8)
+    scalars[ref.S_HOPS] = 2.0
+    scalars[ref.S_PES] = rng.integers(8, 2048)
+    scalars[ref.S_AREA_BUDGET] = 16.0
+    scalars[ref.S_POWER_BUDGET] = 450.0
+    scalars[ref.S_L1A] = 0.35
+    scalars[ref.S_L1B] = 0.0266
+    scalars[ref.S_L2A] = 2.0
+    scalars[ref.S_L2B] = 0.0138
+    scalars[ref.S_WF] = 1.1
+    scalars[ref.S_MAC_PJ] = 0.2
+    scalars[ref.S_HOP_PJ] = 0.06
+    scalars[ref.S_PE_AREA] = 0.0016
+    scalars[ref.S_SRAM_AREA] = 7.0e-6
+    scalars[ref.S_BUS_AREA] = 0.004
+    scalars[ref.S_ARB_AREA] = 1.0e-7
+    scalars[ref.S_PE_POWER] = 0.12
+    scalars[ref.S_SRAM_POWER] = 2.2e-4
+    scalars[ref.S_BUS_POWER] = 0.8
+    scalars[ref.S_ARB_POWER] = 2.0e-5
+    return cases, designs, scalars
+
+
+def assert_kernel_matches_ref(cases, designs, scalars, block_d):
+    got = dse_eval.dse_eval(cases, designs, scalars, block_d=block_d)
+    want = ref.evaluate_ref(cases, designs, scalars)
+    names = ["runtime", "energy", "area", "power", "valid"]
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5,
+            err_msg=f"kernel vs ref mismatch on {name}",
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_cases=st.integers(min_value=1, max_value=96),
+    n_designs=st.sampled_from([8, 16, 32, 64]),
+    block_d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_cases, n_designs, block_d, seed):
+    if n_designs % block_d != 0:
+        block_d = n_designs
+    rng = np.random.default_rng(seed)
+    cases, designs, scalars = make_inputs(rng, n_cases, n_designs)
+    assert_kernel_matches_ref(cases, designs, scalars, block_d)
+
+
+def test_kernel_at_artifact_shapes():
+    """Exercise the exact shapes the AOT artifact exports."""
+    from compile import model
+
+    rng = np.random.default_rng(7)
+    cases, designs, scalars = make_inputs(rng, model.C_MAX - 20, model.D_MAX, pad_to=model.C_MAX)
+    assert_kernel_matches_ref(cases, designs, scalars, dse_eval.BLOCK_D)
+
+
+def test_zero_padding_is_inert():
+    """Padded (occ=0) rows must not change the runtime."""
+    rng = np.random.default_rng(11)
+    cases, designs, scalars = make_inputs(rng, 20, 16)
+    padded = np.zeros((64, 8), np.float32)
+    padded[:20] = cases[:20]
+    r1 = np.asarray(dse_eval.dse_eval(cases, designs, scalars, block_d=16)[0])
+    r2 = np.asarray(dse_eval.dse_eval(padded, designs, scalars, block_d=16)[0])
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+def test_runtime_monotone_in_bandwidth():
+    rng = np.random.default_rng(3)
+    cases, _, scalars = make_inputs(rng, 40, 8)
+    bws = np.array([1, 2, 4, 8, 16, 32, 64, 128], np.float32)
+    designs = np.zeros((8, 4), np.float32)
+    designs[:, 0] = bws
+    designs[:, 1] = 2.0
+    designs[:, 2] = 1024.0
+    designs[:, 3] = 200_000.0
+    rt = np.asarray(dse_eval.dse_eval(cases, designs, scalars, block_d=8)[0])
+    assert (np.diff(rt) <= 1e-3).all(), rt
+
+
+def test_validity_budget_edges():
+    """Designs exactly at the budget are valid; beyond are not."""
+    rng = np.random.default_rng(5)
+    cases, designs, scalars = make_inputs(rng, 10, 8)
+    _, _, area, power, valid = (np.asarray(x) for x in ref.evaluate_ref(cases, designs, scalars))
+    inside = (area <= scalars[ref.S_AREA_BUDGET]) & (power <= scalars[ref.S_POWER_BUDGET])
+    np.testing.assert_array_equal(valid > 0.5, inside)
+
+
+def test_bad_shapes_rejected():
+    rng = np.random.default_rng(9)
+    cases, designs, scalars = make_inputs(rng, 10, 8)
+    with pytest.raises(AssertionError):
+        dse_eval.dse_eval(cases[:, :7], designs, scalars, block_d=8)
+    with pytest.raises(AssertionError):
+        dse_eval.dse_eval(cases, designs, scalars, block_d=3)  # 8 % 3 != 0

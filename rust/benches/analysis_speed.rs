@@ -1,0 +1,57 @@
+//! Analysis speed — the paper's §4.5 claim: MAESTRO runs in ~10 ms per
+//! (layer, dataflow) vs 7.2-28.8 hours of RTL simulation (1029-4116x).
+//!
+//! Measures per-layer analysis latency across the Table 3 dataflows and
+//! the VGG16 conv stack, and the analytic-vs-simulator speedup on a
+//! bounded layer.
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::layer::Layer;
+use maestro::model::zoo::vgg16;
+use maestro::sim::cycle::simulate;
+use maestro::util::benchkit::{bench, bench_throughput, section};
+
+fn main() {
+    let hw = HwConfig::fig10_default();
+
+    section("analysis latency per (layer, dataflow) — paper: ~10 ms");
+    for df in styles::all_styles() {
+        let layer = vgg16::conv13();
+        if analyze_layer(&layer, &df, &hw).is_err() {
+            continue;
+        }
+        bench(&format!("analyze vgg16-conv13 under {}", df.name), 3, 25, || {
+            analyze_layer(&layer, &df, &hw).unwrap().runtime
+        });
+    }
+
+    section("whole-network analysis throughput");
+    let net = vgg16::conv_only();
+    bench_throughput("analyze 13 VGG16 conv layers (KC-P)", 13, 2, 10, || {
+        let mut acc = 0.0;
+        for l in &net.layers {
+            acc += analyze_layer(l, &styles::kc_p(), &hw).unwrap().runtime;
+        }
+        acc
+    });
+
+    section("analytic model vs cycle-level simulator (RTL substitute)");
+    let layer = Layer::conv2d("cmp", 1, 32, 32, 34, 34, 3, 3, 1);
+    let h64 = HwConfig::maeri_64();
+    let t0 = std::time::Instant::now();
+    let sim = simulate(&layer, &styles::x_p(), &h64, 100_000_000).unwrap();
+    let sim_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let ana = analyze_layer(&layer, &styles::x_p(), &h64).unwrap();
+    let ana_s = t1.elapsed().as_secs_f64();
+    println!(
+        "simulator: {:.3}s ({} steps) | analytic: {:.6}s | speedup {:.0}x (paper: 1029-4116x vs RTL) | runtime err {:.2}%",
+        sim_s,
+        sim.steps,
+        ana_s,
+        sim_s / ana_s.max(1e-9),
+        (ana.runtime - sim.cycles).abs() / sim.cycles * 100.0
+    );
+}

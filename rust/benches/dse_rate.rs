@@ -1,0 +1,144 @@
+//! DSE rate — the paper's headline systems number: "480M designs
+//! searched, 2.5M valid, at an average effective rate of 0.17M designs
+//! per second" (§1, §5.2, Fig 13c).
+//!
+//! Measures: (a) the pruned scalar sweep rate, (b) the coordinator with
+//! multiple workers, and (c) the PJRT batched evaluator (the AOT Pallas
+//! kernel) vs the scalar backend on identical jobs.
+
+use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::dse::engine::sweep;
+use maestro::dse::space::{geometric_range, kc_p_variants, DesignSpace};
+use maestro::model::zoo::vgg16;
+use maestro::runtime::{BatchEvaluator, DesignIn};
+use maestro::util::benchkit::{bench_throughput, fmt_rate, section};
+
+fn space(resolution: usize) -> DesignSpace {
+    DesignSpace::fig13("kc-p", resolution)
+}
+
+fn main() {
+    let layer = vgg16::conv2();
+
+    section("DSE rate (a): pruned scalar sweep (single thread)");
+    for resolution in [16usize, 32, 48] {
+        let sp = space(resolution);
+        let (points, stats) = sweep(&[&layer], &sp, 2).unwrap();
+        println!(
+            "resolution {resolution:>3}: {:>8} designs ({} evaluated, {} valid) in {:.2}s -> effective rate {}/s (paper avg 0.17M/s)",
+            stats.total_designs,
+            stats.evaluated,
+            stats.valid,
+            stats.seconds,
+            fmt_rate(stats.rate()),
+        );
+        assert!(!points.is_empty());
+    }
+
+    section("DSE rate (b): coordinator scaling (scalar backend)");
+    let designs: Vec<DesignIn> = geometric_range(1, 256, 64)
+        .into_iter()
+        .map(|bw| DesignIn { bandwidth: bw as f64, latency: 2.0, l1: 0.0, l2: 0.0 })
+        .collect();
+    let mk_jobs = || -> Vec<DseJob> {
+        let mut jobs = Vec::new();
+        let mut id = 0;
+        for variant in kc_p_variants() {
+            for pes in geometric_range(8, 2048, 24) {
+                id += 1;
+                jobs.push(DseJob {
+                    id,
+                    layers: vec![layer.clone()],
+                    variant: variant.clone(),
+                    pes,
+                    designs: designs.clone(),
+                    noc_hops: 2,
+                    area_budget: 16.0,
+                    power_budget: 450.0,
+                });
+            }
+        }
+        jobs
+    };
+    for workers in [1usize, 2, 4, 8] {
+        let jobs = mk_jobs();
+        let n_designs: u64 = jobs.iter().map(|j| j.designs.len() as u64).sum();
+        let t0 = std::time::Instant::now();
+        let (results, _metrics) = run_jobs(jobs, Backend::Scalar, workers).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "workers {workers}: {} jobs, {} designs in {secs:.2}s -> {}/s",
+            results.len(),
+            n_designs,
+            fmt_rate(n_designs as f64 / secs)
+        );
+    }
+
+    section("DSE rate (c): PJRT batched evaluator vs scalar (same jobs, full batches)");
+    // Dense per-job sweep that fills the artifact's 512-design batches:
+    // 64 bandwidths x 4 latencies x 2 L1 placements.
+    let dense_designs: Vec<DesignIn> = {
+        let mut v = Vec::new();
+        for bw in geometric_range(1, 256, 64) {
+            for lat in [1u64, 2, 4, 8] {
+                for l1_scale in [1u64, 4] {
+                    v.push(DesignIn {
+                        bandwidth: bw as f64,
+                        latency: lat as f64,
+                        l1: (512 * l1_scale) as f64,
+                        l2: 262_144.0,
+                    });
+                }
+            }
+        }
+        v
+    };
+    let mk_dense_jobs = || -> Vec<DseJob> {
+        let mut jobs = Vec::new();
+        let mut id = 0;
+        for variant in kc_p_variants() {
+            for pes in geometric_range(8, 2048, 24) {
+                id += 1;
+                jobs.push(DseJob {
+                    id,
+                    layers: vec![layer.clone()],
+                    variant: variant.clone(),
+                    pes,
+                    designs: dense_designs.clone(),
+                    noc_hops: 2,
+                    area_budget: 16.0,
+                    power_budget: 450.0,
+                });
+            }
+        }
+        jobs
+    };
+    let artifact = BatchEvaluator::default_path();
+    if artifact.exists() {
+        for (name, backend) in [
+            ("scalar", Backend::Scalar),
+            ("pjrt  ", Backend::Pjrt(artifact.clone())),
+        ] {
+            let jobs = mk_dense_jobs();
+            let n_designs: u64 = jobs.iter().map(|j| j.designs.len() as u64).sum();
+            let t0 = std::time::Instant::now();
+            let _ = run_jobs(jobs, backend, 4).unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            println!("{name}: {} designs in {secs:.2}s -> {}/s", n_designs, fmt_rate(n_designs as f64 / secs));
+        }
+    } else {
+        println!("artifact missing (run `make artifacts`); skipping PJRT comparison");
+    }
+
+    section("DSE rate (d): raw scalar evaluation throughput");
+    let table = maestro::dse::engine::build_case_table(&[&layer], &kc_p_variants()[3], 256).unwrap();
+    bench_throughput("eval_runtime x10k designs", 10_000, 2, 10, || {
+        let mut acc = 0.0;
+        for bw in 1..=100u64 {
+            for lat in 0..100u64 {
+                acc += maestro::dse::engine::eval_runtime(&table, bw, lat % 5);
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,151 @@
+//! Fig 10 — runtime and energy of the five Table 3 dataflows across the
+//! five evaluation DNNs (256 PEs, 16 elements/cycle ≈ 32 GB/s NoC),
+//! plus (f): per-operator-class averages and the adaptive dataflow.
+//!
+//! Paper's qualitative shape to reproduce: KC-P lowest runtime/energy
+//! overall; YR-P most energy-efficient on VGG16; YX-P fastest on UNet;
+//! adaptive ≈ 37% runtime and 10% energy reduction.
+
+use std::collections::BTreeMap;
+
+use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::layer::OpClass;
+use maestro::model::zoo;
+use maestro::util::benchkit::{bench, section};
+use maestro::util::table::{num, Table};
+
+fn main() {
+    let hw = HwConfig::fig10_default();
+    let dataflows = styles::all_styles();
+
+    section("Fig 10 (a-e): runtime and energy per (model, dataflow), 256 PEs / 16 el-per-cyc NoC");
+    let mut t = Table::new(&["model", "dataflow", "runtime (Mcyc)", "energy (uJ)", "layers"]);
+    let mut results: BTreeMap<(String, String), (f64, f64)> = BTreeMap::new();
+
+    for model in zoo::FIG10_MODELS {
+        let net = zoo::by_name(model).unwrap();
+        for df in &dataflows {
+            let Ok(s) = analyze_network(&net, df, &hw, true) else { continue };
+            t.row(&[
+                model.to_string(),
+                df.name.clone(),
+                format!("{:.1}", s.runtime / 1e6),
+                num(s.energy.total() / 1e6),
+                s.per_layer.len().to_string(),
+            ]);
+            results.insert((model.to_string(), df.name.clone()), (s.runtime, s.energy.total()));
+        }
+    }
+    print!("{}", t.render());
+
+    // Paper shape checks (reported, not asserted — benches are reports).
+    if let (Some(&(kc_rt, kc_en)), Some(&(yr_rt, yr_en))) = (
+        results.get(&("vgg16".into(), "KC-P".into())),
+        results.get(&("vgg16".into(), "YR-P".into())),
+    ) {
+        println!(
+            "shape check [VGG16]: YR-P energy {} KC-P energy (paper: YR-P more efficient); KC-P runtime {} YR-P",
+            if yr_en < kc_en { "<" } else { ">=" },
+            if kc_rt < yr_rt { "<" } else { ">=" },
+        );
+    }
+    if let (Some(&(kc_rt, _)), Some(&(yx_rt, _))) = (
+        results.get(&("unet".into(), "KC-P".into())),
+        results.get(&("unet".into(), "YX-P".into())),
+    ) {
+        println!(
+            "shape check [UNet]: YX-P runtime {} KC-P runtime (paper: YX-P faster on UNet)",
+            if yx_rt < kc_rt { "<" } else { ">=" },
+        );
+    }
+
+    // ---- (f): operator-class averages + adaptive --------------------
+    section("Fig 10 (f): per-operator-class best dataflow + adaptive gains");
+    let mut tf = Table::new(&["op class", "layers", "best static df", "adaptive runtime gain", "adaptive energy gain"]);
+    for class in OpClass::all() {
+        let mut per_df_runtime: BTreeMap<String, f64> = BTreeMap::new();
+        let mut per_df_energy: BTreeMap<String, f64> = BTreeMap::new();
+        let mut adaptive_runtime = 0.0;
+        let mut adaptive_energy = 0.0;
+        let mut n = 0u32;
+        for model in zoo::FIG10_MODELS {
+            let net = zoo::by_name(model).unwrap();
+            for layer in net.layers_of(class) {
+                let mut best_rt = f64::INFINITY;
+                let mut best_en = f64::INFINITY;
+                for df in &dataflows {
+                    if let Ok(s) = analyze_layer(layer, df, &hw) {
+                        *per_df_runtime.entry(df.name.clone()).or_insert(0.0) += s.runtime;
+                        *per_df_energy.entry(df.name.clone()).or_insert(0.0) += s.energy.total();
+                        best_rt = best_rt.min(s.runtime);
+                        best_en = best_en.min(s.energy.total());
+                    }
+                }
+                if best_rt.is_finite() {
+                    adaptive_runtime += best_rt;
+                    adaptive_energy += best_en;
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            continue;
+        }
+        let (best_df, best_static) = per_df_runtime
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, v)| (k.clone(), *v))
+            .unwrap();
+        let best_static_en = per_df_energy.values().cloned().fold(f64::INFINITY, f64::min);
+        tf.row(&[
+            class.name().to_string(),
+            n.to_string(),
+            best_df,
+            format!("{:.1}%", (1.0 - adaptive_runtime / best_static) * 100.0),
+            format!("{:.1}%", (1.0 - adaptive_energy / best_static_en) * 100.0),
+        ]);
+    }
+    print!("{}", tf.render());
+
+    // Whole-suite adaptive summary (the paper's 37% / 10% headline is
+    // vs per-model static dataflows).
+    let mut static_best_rt = 0.0;
+    let mut static_best_en = 0.0;
+    let mut adpt_rt = 0.0;
+    let mut adpt_en = 0.0;
+    for model in zoo::FIG10_MODELS {
+        let net = zoo::by_name(model).unwrap();
+        let mut best_rt = f64::INFINITY;
+        let mut best_en = f64::INFINITY;
+        for df in &dataflows {
+            if let Ok(s) = analyze_network(&net, df, &hw, true) {
+                best_rt = best_rt.min(s.runtime);
+                best_en = best_en.min(s.energy.total());
+            }
+        }
+        static_best_rt += best_rt;
+        static_best_en += best_en;
+        adpt_rt += adaptive_network(&net, &dataflows, &hw, Objective::Runtime).unwrap().runtime;
+        adpt_en += adaptive_network(&net, &dataflows, &hw, Objective::Energy).unwrap().energy.total();
+    }
+    println!(
+        "adaptive vs best-static-per-model: runtime -{:.1}%, energy -{:.1}%  (paper: ~37% / ~10% vs a single static dataflow)",
+        (1.0 - adpt_rt / static_best_rt) * 100.0,
+        (1.0 - adpt_en / static_best_en) * 100.0
+    );
+
+    bench("fig10 full grid (5 models x 5 dataflows)", 0, 3, || {
+        let mut acc = 0.0;
+        for model in zoo::FIG10_MODELS {
+            let net = zoo::by_name(model).unwrap();
+            for df in &dataflows {
+                if let Ok(s) = analyze_network(&net, df, &hw, true) {
+                    acc += s.runtime;
+                }
+            }
+        }
+        acc
+    });
+}

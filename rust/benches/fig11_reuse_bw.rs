@@ -1,0 +1,92 @@
+//! Fig 11 — reuse factors and NoC bandwidth requirements of the Table 3
+//! dataflows on the four representative operators (256 PEs):
+//! early layer (ResNet50 CONV1), late layer (VGG16 CONV13), DWCONV
+//! (MobileNetV2), PWCONV (MobileNetV2 bottleneck expand), plus the
+//! algorithmic maximum ("A" bars).
+//!
+//! Paper shape: YR-P has much higher activation/filter reuse in early
+//! layers (5.8x / 15.17x vs KC-P); in late layers YR-P and KC-P reuse
+//! factors converge (<11% apart); YX-P needs the most bandwidth on
+//! point-wise convolution.
+
+use maestro::engine::analysis::{algorithmic_max_reuse, analyze_layer};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::layer::Layer;
+use maestro::model::tensor::TensorKind;
+use maestro::model::zoo::{mobilenet_v2, resnet50, vgg16};
+use maestro::util::benchkit::section;
+use maestro::util::table::Table;
+
+fn operators() -> Vec<(&'static str, Layer)> {
+    vec![
+        ("early (ResNet50 CONV1)", resnet50::conv1()),
+        ("late (VGG16 CONV13)", vgg16::conv13()),
+        ("DWCONV (MobileNetV2)", mobilenet_v2::dwconv_exemplar()),
+        ("PWCONV (MobileNetV2)", mobilenet_v2::bottleneck1_pw()),
+    ]
+}
+
+fn main() {
+    let hw = HwConfig::fig10_default();
+
+    section("Fig 11 (a): activation (input) reuse factor");
+    let mut ta = Table::new(&["operator", "C-P", "X-P", "YX-P", "YR-P", "KC-P", "A (max)"]);
+    section_body(&mut ta, &hw, TensorKind::Input);
+    print!("{}", ta.render());
+
+    section("Fig 11 (b): filter reuse factor");
+    let mut tf = Table::new(&["operator", "C-P", "X-P", "YX-P", "YR-P", "KC-P", "A (max)"]);
+    section_body(&mut tf, &hw, TensorKind::Filter);
+    print!("{}", tf.render());
+
+    section("Fig 11 (c): NoC bandwidth requirement (elements/cycle)");
+    let mut tb = Table::new(&["operator", "C-P", "X-P", "YX-P", "YR-P", "KC-P"]);
+    for (name, layer) in operators() {
+        let mut row = vec![name.to_string()];
+        for df in styles::all_styles() {
+            let cell = match analyze_layer(&layer, &df, &hw) {
+                Ok(s) => format!("{:.1}", s.peak_bw_need),
+                Err(_) => "n/a".into(),
+            };
+            row.push(cell);
+        }
+        tb.row(&row);
+    }
+    print!("{}", tb.render());
+
+    // The paper's headline ratios on the early layer.
+    let early = resnet50::conv1();
+    let yr = analyze_layer(&early, &styles::yr_p(), &hw);
+    let kc = analyze_layer(&early, &styles::kc_p(), &hw);
+    if let (Ok(yr), Ok(kc)) = (yr, kc) {
+        println!(
+            "early-layer reuse ratio YR-P/KC-P: activation {:.1}x (paper 5.8x), filter {:.1}x (paper 15.17x)",
+            yr.reuse_factor(TensorKind::Input) / kc.reuse_factor(TensorKind::Input),
+            yr.reuse_factor(TensorKind::Filter) / kc.reuse_factor(TensorKind::Filter),
+        );
+    }
+    let late = vgg16::conv13();
+    if let (Ok(yr), Ok(kc)) = (
+        analyze_layer(&late, &styles::yr_p(), &hw),
+        analyze_layer(&late, &styles::kc_p(), &hw),
+    ) {
+        let d = (yr.reuse_factor(TensorKind::Input) / kc.reuse_factor(TensorKind::Input) - 1.0).abs() * 100.0;
+        println!("late-layer YR-P vs KC-P activation reuse difference: {d:.1}% (paper <11%)");
+    }
+}
+
+fn section_body(t: &mut Table, hw: &HwConfig, kind: TensorKind) {
+    for (name, layer) in operators() {
+        let mut row = vec![name.to_string()];
+        for df in styles::all_styles() {
+            let cell = match analyze_layer(&layer, &df, hw) {
+                Ok(s) => format!("{:.1}", s.reuse_factor(kind)),
+                Err(_) => "n/a".into(),
+            };
+            row.push(cell);
+        }
+        row.push(format!("{:.1}", algorithmic_max_reuse(&layer, kind)));
+        t.row(&row);
+    }
+}

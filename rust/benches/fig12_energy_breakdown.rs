@@ -1,0 +1,59 @@
+//! Fig 12 — energy breakdown (MAC / L1 / L2 scratchpad) of the Table 3
+//! dataflows, normalized to C-P's MAC energy, on the four
+//! representative operators.
+//!
+//! Paper shape: L2 access energy dominates for low-reuse dataflows
+//! (C-P); YR-P/KC-P keep L2 energy small through reuse; MAC energy is
+//! constant across dataflows for a fixed operator.
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::zoo::{mobilenet_v2, resnet50, vgg16};
+use maestro::util::benchkit::section;
+use maestro::util::table::Table;
+
+fn main() {
+    let hw = HwConfig::fig10_default();
+    let operators = vec![
+        ("early (ResNet50 CONV1)", resnet50::conv1()),
+        ("late (VGG16 CONV13)", vgg16::conv13()),
+        ("DWCONV (MobileNetV2)", mobilenet_v2::dwconv_exemplar()),
+        ("PWCONV (MobileNetV2)", mobilenet_v2::bottleneck1_pw()),
+    ];
+
+    for (name, layer) in operators {
+        section(&format!("Fig 12 [{name}]: energy breakdown, normalized to C-P MAC energy"));
+        // C-P MAC energy as the normalizer (the paper's convention).
+        let Ok(cp) = analyze_layer(&layer, &styles::c_p(), &hw) else {
+            println!("  C-P unmappable on this operator; skipping");
+            continue;
+        };
+        let norm = cp.energy.mac.max(1e-12);
+        let mut t = Table::new(&["dataflow", "MAC", "L1", "L2", "NoC", "total"]);
+        for df in styles::all_styles() {
+            let Ok(s) = analyze_layer(&layer, &df, &hw) else { continue };
+            t.row(&[
+                df.name.clone(),
+                format!("{:.2}", s.energy.mac / norm),
+                format!("{:.2}", s.energy.l1 / norm),
+                format!("{:.2}", s.energy.l2 / norm),
+                format!("{:.2}", s.energy.noc / norm),
+                format!("{:.2}", s.energy.total() / norm),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    // Shape summary: C-P should pay the most L2 energy on the late layer.
+    let late = vgg16::conv13();
+    let mut l2: Vec<(String, f64)> = styles::all_styles()
+        .iter()
+        .filter_map(|df| analyze_layer(&late, df, &hw).ok().map(|s| (df.name.clone(), s.energy.l2)))
+        .collect();
+    l2.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!(
+        "\nshape check [late layer]: highest L2 energy = {} (paper: C-P, 'no local reuse')",
+        l2.first().map(|x| x.0.as_str()).unwrap_or("?")
+    );
+}

@@ -1,0 +1,74 @@
+//! Fig 13 — the DSE design space of KC-P and YR-P accelerators on an
+//! early (VGG16 CONV2) and a late (VGG16 CONV13) layer, under the
+//! Eyeriss chip budget (16 mm², 450 mW): area/buffer vs throughput
+//! scatters, throughput-/energy-optimized points, and (c) the sweep
+//! statistics (designs, valid designs, DSE rate).
+
+use maestro::dse::engine::sweep;
+use maestro::dse::pareto::{best, pareto_front, Optimize};
+use maestro::dse::space::DesignSpace;
+use maestro::model::zoo::vgg16;
+use maestro::report::experiments::{buffer_scatter, compare_optima, design_space_scatter};
+use maestro::util::benchkit::section;
+use maestro::util::table::Table;
+
+fn main() {
+    let layers = [("VGG16-CONV2 (early)", vgg16::conv2()), ("VGG16-CONV13 (late)", vgg16::conv13())];
+    let mut stats_rows = Table::new(&["family", "layer", "designs", "evaluated", "valid", "secs", "rate (designs/s)"]);
+
+    for family in ["kc-p", "yr-p"] {
+        for (lname, layer) in &layers {
+            section(&format!("Fig 13: {family} on {lname}, budget 16 mm2 / 450 mW"));
+            let space = DesignSpace::fig13(family, 14);
+            let (points, stats) = sweep(&[layer], &space, 2).unwrap();
+            let macs = layer.macs() as f64;
+            print!("{}", design_space_scatter(&points, macs, &format!("{family} {lname}: area vs throughput")));
+            print!("{}", buffer_scatter(&points, macs, &format!("{family} {lname}: buffer vs throughput")));
+            let front = pareto_front(&points, |p| p.runtime, |p| p.energy_pj);
+            println!("pareto front (runtime vs energy): {} points of {} valid", front.len(), stats.valid);
+            if let Some(t) = best(&points, Optimize::Throughput, macs) {
+                println!(
+                    "  throughput-opt *: pes={} bw={} L1={}el L2={}el area={:.2}mm2 power={:.0}mW thrpt={:.1} MAC/cyc [{}]",
+                    t.pes, t.bandwidth, t.l1, t.l2, t.area_mm2, t.power_mw, t.throughput(macs), t.dataflow
+                );
+            }
+            if let Some(e) = best(&points, Optimize::Energy, macs) {
+                println!(
+                    "  energy-opt     +: pes={} bw={} L1={}el L2={}el area={:.2}mm2 power={:.0}mW energy={:.1}uJ [{}]",
+                    e.pes, e.bandwidth, e.l1, e.l2, e.area_mm2, e.power_mw, e.energy_pj / 1e6, e.dataflow
+                );
+            }
+            if let Some(c) = compare_optima(&points, macs) {
+                println!(
+                    "  energy-opt vs throughput-opt: power x{:.2} (paper 2.16x on CONV11), SRAM x{:.1} (paper 10.6x), PEs {:.0}% (paper 80%), EDP -{:.0}% (paper 65%), throughput {:.0}% (paper 62%)",
+                    c.power_ratio, c.sram_ratio, c.pe_ratio * 100.0, c.edp_improvement * 100.0, c.throughput_fraction * 100.0
+                );
+            }
+            stats_rows.row(&[
+                family.to_string(),
+                lname.to_string(),
+                stats.total_designs.to_string(),
+                stats.evaluated.to_string(),
+                stats.valid.to_string(),
+                format!("{:.2}", stats.seconds),
+                format!("{:.0}", stats.rate()),
+            ]);
+        }
+    }
+
+    // The intro's CONV11 KC-P example.
+    section("Intro headline: KC-P on VGG16 CONV11");
+    let conv11 = vgg16::conv11();
+    let space = DesignSpace::fig13("kc-p", 14);
+    let (points, _) = sweep(&[&conv11], &space, 2).unwrap();
+    if let Some(c) = compare_optima(&points, conv11.macs() as f64) {
+        println!(
+            "energy- vs throughput-optimized: power x{:.2} (paper 2.16x), SRAM x{:.1} (paper 10.6x), PEs {:.0}% (paper 80%), EDP improvement {:.0}% (paper 65%), throughput {:.0}% (paper 62%)",
+            c.power_ratio, c.sram_ratio, c.pe_ratio * 100.0, c.edp_improvement * 100.0, c.throughput_fraction * 100.0
+        );
+    }
+
+    section("Fig 13 (c): DSE sweep statistics");
+    print!("{}", stats_rows.render());
+    println!("(paper: 0.46M-3.3K designs/s per run, 0.17M/s average; see also `cargo bench --bench dse_rate`)");
+}

@@ -1,0 +1,89 @@
+//! Fig 9 — runtime model validation.
+//!
+//! Paper: MAESTRO's estimated runtime vs MAERI RTL simulation (VGG16,
+//! 64 PEs) and Eyeriss's reported delay (AlexNet, 168 PEs), within 3.9%
+//! average absolute error.
+//!
+//! Here: analytical engine vs the cycle-level schedule simulator (the
+//! RTL substitute, DESIGN.md §4). Late VGG layers are channel-scaled
+//! 1/8 to keep the step-walking ground truth tractable in bench time —
+//! the relative-error metric is unaffected (both models see the same
+//! layer).
+
+use std::time::Instant;
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::layer::Layer;
+use maestro::model::zoo::{alexnet, vgg16};
+use maestro::sim::cycle::simulate;
+use maestro::util::benchkit::section;
+use maestro::util::table::{num, Table};
+
+/// Scale channel dims down to keep the simulator walk below ~2M steps.
+fn scaled(l: &Layer) -> Layer {
+    let mut l = l.clone();
+    while l.c * l.k > 64 * 64 {
+        if l.c >= l.k && l.c >= 16 {
+            l.c /= 2;
+        } else if l.k >= 16 {
+            l.k /= 2;
+        } else {
+            break;
+        }
+    }
+    l
+}
+
+fn validate(name: &str, layers: &[Layer], hw: &HwConfig, df_name: &str) {
+    let df = styles::by_name(df_name).unwrap();
+    section(&format!("Fig 9 [{name}]: MAESTRO vs cycle-sim, {} PEs, {}", hw.num_pes, df.name));
+    let mut t = Table::new(&["layer", "sim cycles", "model cycles", "err %", "sim ms", "model us", "speedup"]);
+    let mut errs = Vec::new();
+    let mut speedups = Vec::new();
+    for layer in layers {
+        let layer = scaled(layer);
+        let t0 = Instant::now();
+        let sim = match simulate(&layer, &df, hw, 60_000_000) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("  {}: sim skipped ({e})", layer.name);
+                continue;
+            }
+        };
+        let sim_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let ana = analyze_layer(&layer, &df, hw).unwrap();
+        let model_us = t1.elapsed().as_secs_f64() * 1e6;
+        let err = (ana.runtime - sim.cycles).abs() / sim.cycles * 100.0;
+        errs.push(err);
+        let speedup = sim_ms * 1e3 / model_us.max(1e-9);
+        speedups.push(speedup);
+        t.row(&[
+            layer.name.clone(),
+            num(sim.cycles),
+            num(ana.runtime),
+            format!("{err:.2}"),
+            format!("{sim_ms:.1}"),
+            format!("{model_us:.0}"),
+            format!("{speedup:.0}x"),
+        ]);
+    }
+    print!("{}", t.render());
+    let avg = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
+    let avg_speedup = speedups.iter().sum::<f64>() / speedups.len().max(1) as f64;
+    println!("average |error| = {avg:.2}%   (paper: 3.9% vs RTL)");
+    println!("average model-vs-sim speedup = {avg_speedup:.0}x (paper: 1029-4116x vs RTL)");
+}
+
+fn main() {
+    // MAERI-like: VGG16 conv stack on 64 PEs, row-stationary (YR-P).
+    validate("MAERI/VGG16", &vgg16::conv_only().layers, &HwConfig::maeri_64(), "yr-p");
+    // Eyeriss: AlexNet conv stack on 168 PEs, row-stationary.
+    validate("Eyeriss/AlexNet", &alexnet::conv_only().layers, &HwConfig::eyeriss_168(), "yr-p");
+    // Cross-dataflow robustness: X-P and KC-P on a mid VGG layer.
+    let mid = vec![vgg16::conv_only().layers[4].clone()];
+    validate("cross-check/X-P", &mid, &HwConfig::maeri_64(), "x-p");
+    validate("cross-check/KC-P", &mid, &HwConfig::fig10_default(), "kc-p");
+}

@@ -1,0 +1,50 @@
+//! Table 1 — reuse opportunities by (spatially mapped dim x innermost
+//! temporally mapped dim), generated from the reuse-analysis rules and
+//! printed in the paper's layout. The unit test
+//! `engine::reuse::tests::table1_matches_paper_conv2d` asserts the key
+//! cells; this bench renders the full table.
+
+use maestro::engine::reuse::{table1, Opportunity};
+use maestro::model::layer::Layer;
+use maestro::util::benchkit::{bench, section};
+use maestro::util::table::Table;
+
+fn sym(o: Opportunity) -> &'static str {
+    match o {
+        Opportunity::Multicast => "Multicast",
+        Opportunity::Reduction => "Reduction",
+        Opportunity::None => "-",
+    }
+}
+
+fn main() {
+    section("Table 1: reuse opportunities (CONV2D coupling; F=filter, I=input, O=output)");
+    let layer = Layer::conv2d("ref", 1, 64, 64, 58, 58, 3, 3, 1);
+    let rows = table1(&layer);
+    let mut t = Table::new(&["spatial dim", "innermost temporal", "sp.F", "sp.I", "sp.O", "tm.F", "tm.I", "tm.O"]);
+    for r in &rows {
+        t.row(&[
+            r.spatial_dim.to_string(),
+            r.innermost_temporal.to_string(),
+            sym(r.spatial[0]).into(),
+            sym(r.spatial[1]).into(),
+            sym(r.spatial[2]).into(),
+            sym(r.temporal[0]).into(),
+            sym(r.temporal[1]).into(),
+            sym(r.temporal[2]).into(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Depthwise comparison: output couples C, flipping the C rows.
+    section("Table 1 variant: depthwise coupling (output couples C)");
+    let dw = Layer::depthwise("dw", 1, 64, 58, 58, 3, 3, 1);
+    let rows = table1(&dw);
+    let c_row = rows.iter().find(|r| r.spatial_dim == maestro::ir::dims::Dim::C).unwrap();
+    println!(
+        "spatial C on depthwise: output {} (dense conv: Reduction)",
+        sym(c_row.spatial[2])
+    );
+
+    bench("table1 generation", 2, 20, || table1(&layer).len());
+}

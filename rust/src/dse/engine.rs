@@ -1,0 +1,426 @@
+//! The DSE engine: flattened case tables, scalar design-point
+//! evaluation, and the budget-pruned sweep (paper §5.2's "skips design
+//! spaces ... by checking the minimum area and power of all the possible
+//! design points from inner loops").
+//!
+//! The flattened case table is the contract between the Rust scalar
+//! evaluator and the AOT-compiled batched evaluator (L1 Pallas kernel):
+//! both implement the same formula over the same rows, and an
+//! integration test cross-checks them.
+
+use anyhow::{ensure, Result};
+
+use crate::engine::analysis::analyze_layer;
+use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
+use crate::engine::noc::reduction_delay;
+use crate::engine::reuse::{psum_revisits, tensor_usage};
+use crate::hw::area;
+use crate::hw::config::{HwConfig, ReductionSupport};
+use crate::hw::energy::EnergyModel;
+use crate::ir::dataflow::Dataflow;
+use crate::model::layer::Layer;
+use crate::model::tensor::{couplings, TensorKind, ALL_TENSORS};
+
+/// Number of features per case row (the AOT artifact's row width).
+pub const CASE_FEATURES: usize = 8;
+
+/// One flattened level-0 iteration case.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CaseRow {
+    pub occurrences: f64,
+    /// Elements entering the level per step (incl. psum re-ingress).
+    pub ingress: f64,
+    /// Elements leaving per step.
+    pub egress: f64,
+    /// Compute cycles per step (PE MACs, or flattened inner-level MAC
+    /// cycles, incl. reduction-tree delay).
+    pub compute: f64,
+    /// Inner-level communication volume per step (elements; served at
+    /// the per-cluster bandwidth share).
+    pub inner_comm: f64,
+    /// Inner-level steps (each pays the NoC latency once).
+    pub inner_steps: f64,
+    /// Level-0 reduction delay adder.
+    pub red_delay: f64,
+    /// 1.0 for the global-init case (delays add instead of max).
+    pub is_init: f64,
+}
+
+impl CaseRow {
+    pub fn to_features(self) -> [f32; CASE_FEATURES] {
+        [
+            self.occurrences as f32,
+            self.ingress as f32,
+            self.egress as f32,
+            self.compute as f32,
+            self.inner_comm as f32,
+            self.inner_steps as f32,
+            self.red_delay as f32,
+            self.is_init as f32,
+        ]
+    }
+}
+
+/// Bandwidth-independent activity totals (drive the energy model).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Activity {
+    pub macs: f64,
+    pub l2_reads: f64,
+    pub l2_writes: f64,
+    pub l1_reads: f64,
+    pub l1_writes: f64,
+    pub noc_delivered: f64,
+}
+
+/// The flattened evaluation table for (workload, dataflow variant, #PEs).
+#[derive(Debug, Clone)]
+pub struct CaseTable {
+    pub rows: Vec<CaseRow>,
+    pub activity: Activity,
+    /// Per-PE L1 requirement (elements) the DSE places.
+    pub l1_req: u64,
+    /// L2 staging requirement (elements) the DSE places.
+    pub l2_req: u64,
+    pub pes: u64,
+    /// Top-level cluster count (bandwidth sharing divisor for
+    /// inner-level communication).
+    pub units0: u64,
+}
+
+/// Build the flattened case table for a set of layers (rows concatenate;
+/// runtime and energy are additive across layers).
+pub fn build_case_table(layers: &[&Layer], dataflow: &Dataflow, pes: u64) -> Result<CaseTable> {
+    ensure!(!layers.is_empty(), "case table needs at least one layer");
+    // Reference config for activity extraction (bandwidth-independent).
+    let hw = HwConfig { num_pes: pes, ..HwConfig::fig10_default() };
+    let mut rows = Vec::new();
+    let mut activity = Activity::default();
+    let mut l1_req = 0u64;
+    let mut l2_req = 0u64;
+    let mut units0 = 1u64;
+
+    for layer in layers {
+        let resolved = dataflow.resolve(layer, pes)?;
+        units0 = units0.max(resolved.levels[0].units);
+        // Activity + buffer reqs from the full analytical engine.
+        let stats = analyze_layer(layer, dataflow, &hw)?;
+        activity.macs += stats.macs;
+        activity.l2_reads += stats.l2_reads.iter().sum::<f64>();
+        activity.l2_writes += stats.l2_writes.iter().sum::<f64>();
+        activity.l1_reads += stats.l1_reads;
+        activity.l1_writes += stats.l1_writes;
+        activity.noc_delivered += stats.noc_delivered;
+        l1_req = l1_req.max(stats.l1_req);
+        l2_req = l2_req.max(stats.l2_req);
+
+        // Flattened level-0 rows.
+        let level0 = &resolved.levels[0];
+        let sched = build_schedule(level0, &level0.parent_tile, layer)?;
+        let classes = transition_classes(&sched)?;
+        let revisits = psum_revisits(&sched, layer) as f64;
+        let coup = couplings(layer);
+
+        // Inner-level totals per one level-0 step, by tile (flattened
+        // double-buffering approximation: inner compute and inner
+        // communication race; see module docs).
+        // Inner-level totals per one level-0 step. `entry` carries the
+        // outer transition's filter/input fresh fractions: data retained
+        // in PE buffers across outer steps is not re-streamed inside the
+        // cluster (mirrors `analysis::analyze_levels`'s entry_fresh).
+        let inner_totals = |tile: &crate::ir::dims::DimMap<u64>, entry: [f64; 2]| -> Result<(f64, f64, f64)> {
+            if resolved.levels.len() == 1 {
+                return Ok((0.0, 0.0, 0.0));
+            }
+            let inner = &resolved.levels[1];
+            let is = build_schedule(inner, tile, layer)?;
+            let ics = transition_classes(&is)?;
+            let irev = psum_revisits(&is, layer) as f64;
+            let mut mac_cycles = 0.0;
+            let mut comm = 0.0;
+            let mut steps = 0.0;
+            for c in &ics {
+                let occ = c.occurrences as f64;
+                steps += occ;
+                let m = macs_per_unit(&is, c, layer) as f64;
+                let mut red = 0.0f64;
+                let mut ingress = 0.0;
+                let mut egress = 0.0;
+                for (ci, kind) in ALL_TENSORS.iter().enumerate() {
+                    let mut u = tensor_usage(&is, c, &coup[ci], *kind);
+                    if u.footprint_unit == 0 {
+                        continue;
+                    }
+                    if *kind == TensorKind::Output {
+                        let e = u.unique_fresh();
+                        egress += e;
+                        ingress += e * (irev - 1.0) / irev;
+                        if u.spatially_reduced {
+                            red = red.max(reduction_delay(ReductionSupport::Tree, c.active));
+                        }
+                    } else {
+                        u.fresh *= entry[ci];
+                        ingress += u.unique_fresh();
+                    }
+                }
+                mac_cycles += occ * ((m * layer.sparsity_macs_scale()).ceil().max(1.0) + red);
+                comm += occ * (ingress + egress);
+            }
+            Ok((mac_cycles, comm, steps))
+        };
+
+        for class in &classes {
+            let occ = class.occurrences as f64;
+            let active = class.active.max(1);
+            let mut ingress = 0.0;
+            let mut egress = 0.0;
+            let mut red = 0.0f64;
+            let mut class_fresh = [1.0f64, 1.0];
+            for (ci, kind) in ALL_TENSORS.iter().enumerate() {
+                let u = tensor_usage(&sched, class, &coup[ci], *kind);
+                if *kind != TensorKind::Output {
+                    class_fresh[ci] = u.fresh;
+                }
+                if u.footprint_unit == 0 {
+                    continue;
+                }
+                if *kind == TensorKind::Output {
+                    let e = u.unique_fresh();
+                    egress += e;
+                    ingress += e * (revisits - 1.0) / revisits;
+                    if u.spatially_reduced {
+                        red = red.max(reduction_delay(ReductionSupport::Tree, active));
+                    }
+                } else {
+                    ingress += u.unique_fresh();
+                }
+            }
+            let (compute, inner_comm, inner_steps) = if resolved.levels.len() > 1 {
+                inner_totals(&class.tile, class_fresh)?
+            } else {
+                let m = macs_per_unit(&sched, class, layer) as f64;
+                ((m * layer.sparsity_macs_scale()).ceil().max(1.0), 0.0, 0.0)
+            };
+            rows.push(CaseRow {
+                occurrences: occ,
+                ingress,
+                egress,
+                compute,
+                inner_comm,
+                inner_steps,
+                red_delay: red,
+                is_init: if matches!(class.advanced, Advanced::GlobalInit) { 1.0 } else { 0.0 },
+            });
+        }
+    }
+
+    Ok(CaseTable { rows, activity, l1_req, l2_req, pes, units0 })
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub dataflow: String,
+    pub pes: u64,
+    pub bandwidth: u64,
+    /// Placed per-PE L1 (elements).
+    pub l1: u64,
+    /// Placed L2 (elements).
+    pub l2: u64,
+    pub runtime: f64,
+    pub energy_pj: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub valid: bool,
+}
+
+impl DesignPoint {
+    pub fn throughput(&self, macs: f64) -> f64 {
+        macs / self.runtime.max(1.0)
+    }
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.runtime
+    }
+}
+
+/// Scalar evaluation of a case table at (bandwidth, latency) — the exact
+/// formula the AOT batched evaluator implements.
+pub fn eval_runtime(table: &CaseTable, bandwidth: u64, latency: u64) -> f64 {
+    let bw = bandwidth.max(1) as f64;
+    let lat = latency as f64;
+    let bw_share = (bandwidth as f64 / table.units0 as f64).max(1.0);
+    let mut total = 0.0;
+    for r in &table.rows {
+        let in_d = if r.ingress > 0.0 { (r.ingress / bw).ceil() + lat } else { 0.0 };
+        let out_d = if r.egress > 0.0 { (r.egress / bw).ceil() + lat } else { 0.0 };
+        let inner_comm_d = if r.inner_comm > 0.0 {
+            (r.inner_comm / bw_share).ceil() + lat * r.inner_steps
+        } else {
+            0.0
+        };
+        let cmp = (r.compute + r.red_delay).max(inner_comm_d);
+        let delay = if r.is_init > 0.5 { in_d + cmp + out_d } else { in_d.max(cmp).max(out_d) };
+        total += r.occurrences * delay;
+    }
+    total
+}
+
+/// Scalar energy evaluation at placed buffer sizes — mirrors
+/// `analysis::analyze_layer`'s energy model over the precomputed
+/// activity.
+pub fn eval_energy(activity: &Activity, l1: u64, l2: u64, noc_hops: u64) -> f64 {
+    let em = EnergyModel::for_sizes(l1, l2);
+    activity.macs * em.mac_pj
+        + activity.l1_reads * em.l1_read_pj
+        + activity.l1_writes * em.l1_write_pj
+        + activity.l2_reads * em.l2_read_pj
+        + activity.l2_writes * em.l2_write_pj
+        + activity.noc_delivered * noc_hops.max(1) as f64 * em.noc_hop_pj
+}
+
+/// Sweep statistics (Fig 13 (c)).
+#[derive(Debug, Clone, Default)]
+pub struct SweepStats {
+    /// Candidates in the nominal space.
+    pub total_designs: u64,
+    /// Candidates actually evaluated (not skipped by pruning).
+    pub evaluated: u64,
+    /// Valid designs (within budget).
+    pub valid: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+impl SweepStats {
+    /// Effective DSE rate: designs covered per second (skipped designs
+    /// count — that is the paper's "effective DSE rate").
+    pub fn rate(&self) -> f64 {
+        self.total_designs as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// Run a pruned scalar sweep over a design space for a workload.
+///
+/// Pruning mirrors §5.2: before entering the bandwidth loop for a
+/// (variant, PEs) pair, the minimum achievable area/power (smallest
+/// bandwidth, required buffers) is checked against the budget; if it
+/// already exceeds, the whole inner loop is skipped but still counted.
+pub fn sweep(
+    layers: &[&Layer],
+    space: &super::space::DesignSpace,
+    noc_hops: u64,
+) -> Result<(Vec<DesignPoint>, SweepStats)> {
+    let t0 = std::time::Instant::now();
+    let mut points = Vec::new();
+    let mut stats = SweepStats { total_designs: space.size(), ..Default::default() };
+    let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
+
+    for variant in &space.variants {
+        for &pes in &space.pes {
+            let table = match build_case_table(layers, variant, pes) {
+                Ok(t) => t,
+                Err(_) => continue, // unmappable (variant, pes): skip silently
+            };
+            // Minimum-cost pruning for the whole bandwidth loop.
+            let min_ap = area::evaluate(pes, table.l1_req, table.l2_req, min_bw);
+            if min_ap.area_mm2 > space.area_budget_mm2 || min_ap.power_mw > space.power_budget_mw {
+                continue;
+            }
+            let energy = eval_energy(&table.activity, table.l1_req, table.l2_req, noc_hops);
+            for &bw in &space.bandwidths {
+                stats.evaluated += 1;
+                let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
+                let runtime = eval_runtime(&table, bw, space.noc_latency);
+                // Total power = static (regression) + dynamic (workload
+                // energy over runtime; 1 pJ/cycle = 1 mW at 1 GHz).
+                let power = ap.power_mw + energy / runtime.max(1.0);
+                let valid = ap.area_mm2 <= space.area_budget_mm2 && power <= space.power_budget_mw;
+                if valid {
+                    stats.valid += 1;
+                }
+                points.push(DesignPoint {
+                    dataflow: variant.name.clone(),
+                    pes,
+                    bandwidth: bw,
+                    l1: table.l1_req,
+                    l2: table.l2_req,
+                    runtime,
+                    energy_pj: energy,
+                    area_mm2: ap.area_mm2,
+                    power_mw: power,
+                    valid,
+                });
+            }
+        }
+    }
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((points, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::{kc_p_ct, DesignSpace};
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn case_table_builds_for_styles() {
+        let layer = vgg16::conv13();
+        for df in styles::all_styles() {
+            let t = build_case_table(&[&layer], &df, 256).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+            assert!(!t.rows.is_empty());
+            assert!(t.activity.macs > 0.0);
+            let occ: f64 = t.rows.iter().map(|r| r.occurrences).sum();
+            assert!(occ >= 1.0);
+        }
+    }
+
+    #[test]
+    fn scalar_eval_matches_full_engine_shape() {
+        // The flattened evaluator must track the full engine closely for
+        // single-level dataflows (where flattening is exact).
+        let layer = vgg16::conv13();
+        let df = styles::x_p();
+        let table = build_case_table(&[&layer], &df, 256).unwrap();
+        for bw in [4u64, 16, 64] {
+            let hw = HwConfig { noc_bandwidth: bw, ..HwConfig::fig10_default() };
+            let full = analyze_layer(&layer, &df, &hw).unwrap();
+            let flat = eval_runtime(&table, bw, hw.noc_latency);
+            let err = (flat - full.runtime).abs() / full.runtime;
+            assert!(err < 0.02, "bw={bw}: flat {flat} vs full {} ({err})", full.runtime);
+        }
+    }
+
+    #[test]
+    fn runtime_monotone_in_bandwidth() {
+        let layer = vgg16::conv2();
+        let table = build_case_table(&[&layer], &kc_p_ct(64), 256).unwrap();
+        let mut prev = f64::INFINITY;
+        for bw in [1u64, 2, 4, 8, 16, 32, 64, 128] {
+            let rt = eval_runtime(&table, bw, 2);
+            assert!(rt <= prev + 1e-6, "bw={bw}: {rt} > {prev}");
+            prev = rt;
+        }
+    }
+
+    #[test]
+    fn energy_monotone_in_buffer_sizes() {
+        let layer = vgg16::conv2();
+        let table = build_case_table(&[&layer], &kc_p_ct(64), 256).unwrap();
+        let e1 = eval_energy(&table.activity, 512, 100_000, 2);
+        let e2 = eval_energy(&table.activity, 2048, 400_000, 2);
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn sweep_produces_valid_and_invalid() {
+        let layer = vgg16::conv13();
+        let space = DesignSpace::fig13("kc-p", 6);
+        let (points, stats) = sweep(&[&layer], &space, 2).unwrap();
+        assert!(!points.is_empty());
+        assert!(stats.valid > 0, "no valid designs");
+        assert!(stats.valid <= stats.evaluated);
+        assert!(points.iter().any(|p| !p.valid) || stats.evaluated < stats.total_designs);
+        assert!(stats.rate() > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Hardware design-space exploration (paper §5.2): parameter sweeps with
+//! invalid-design skipping, optimization objectives, and Pareto fronts.
+
+pub mod engine;
+pub mod pareto;
+pub mod space;

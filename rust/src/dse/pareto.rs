@@ -1,0 +1,120 @@
+//! Pareto-front extraction and objective-optimal selection over DSE
+//! design points (the stars and crosses of Fig 13).
+
+use crate::dse::engine::DesignPoint;
+
+/// Objective for picking a single optimum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimize {
+    Throughput,
+    Energy,
+    Edp,
+}
+
+/// The objective value (lower is better).
+pub fn objective_value(p: &DesignPoint, o: Optimize, macs: f64) -> f64 {
+    match o {
+        Optimize::Throughput => -p.throughput(macs),
+        Optimize::Energy => p.energy_pj,
+        Optimize::Edp => p.edp(),
+    }
+}
+
+/// Best valid design under an objective. Near-ties (within 0.1% of the
+/// optimum) break toward lower runtime — a cheaper design that is also
+/// faster is strictly preferable, and flat regions of the energy
+/// landscape are common when activity counts dominate.
+pub fn best<'a>(points: &'a [DesignPoint], o: Optimize, macs: f64) -> Option<&'a DesignPoint> {
+    let opt = points
+        .iter()
+        .filter(|p| p.valid)
+        .map(|p| objective_value(p, o, macs))
+        .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))?;
+    let tol = opt.abs() * 1e-3;
+    points
+        .iter()
+        .filter(|p| p.valid && objective_value(p, o, macs) <= opt + tol)
+        .min_by(|a, b| a.runtime.partial_cmp(&b.runtime).unwrap_or(std::cmp::Ordering::Equal))
+}
+
+/// 2-D Pareto front minimizing both `fx` and `fy` over the valid points.
+/// Returns indices into `points`, sorted by `fx`.
+pub fn pareto_front<FX, FY>(points: &[DesignPoint], fx: FX, fy: FY) -> Vec<usize>
+where
+    FX: Fn(&DesignPoint) -> f64,
+    FY: Fn(&DesignPoint) -> f64,
+{
+    let mut idx: Vec<usize> = (0..points.len()).filter(|&i| points[i].valid).collect();
+    idx.sort_by(|&a, &b| {
+        fx(&points[a])
+            .partial_cmp(&fx(&points[b]))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(
+                fy(&points[a])
+                    .partial_cmp(&fy(&points[b]))
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for i in idx {
+        let y = fy(&points[i]);
+        if y < best_y {
+            best_y = y;
+            front.push(i);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dp(runtime: f64, energy: f64, valid: bool) -> DesignPoint {
+        DesignPoint {
+            dataflow: "t".into(),
+            pes: 64,
+            bandwidth: 16,
+            l1: 512,
+            l2: 100_000,
+            runtime,
+            energy_pj: energy,
+            area_mm2: 1.0,
+            power_mw: 1.0,
+            valid,
+        }
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let pts = vec![dp(10.0, 10.0, true), dp(5.0, 20.0, true), dp(20.0, 5.0, true), dp(12.0, 12.0, true)];
+        let front = pareto_front(&pts, |p| p.runtime, |p| p.energy_pj);
+        // (5,20), (10,10), (20,5) are non-dominated; (12,12) dominated by (10,10).
+        assert_eq!(front.len(), 3);
+        assert!(!front.contains(&3));
+    }
+
+    #[test]
+    fn front_skips_invalid() {
+        let pts = vec![dp(1.0, 1.0, false), dp(5.0, 5.0, true)];
+        let front = pareto_front(&pts, |p| p.runtime, |p| p.energy_pj);
+        assert_eq!(front, vec![1]);
+    }
+
+    #[test]
+    fn best_under_objectives() {
+        let pts = vec![dp(10.0, 10.0, true), dp(5.0, 40.0, true), dp(40.0, 2.0, true)];
+        let macs = 1000.0;
+        assert_eq!(best(&pts, Optimize::Throughput, macs).unwrap().runtime, 5.0);
+        assert_eq!(best(&pts, Optimize::Energy, macs).unwrap().energy_pj, 2.0);
+        // EDP: 100, 200, 80 -> the last.
+        assert_eq!(best(&pts, Optimize::Edp, macs).unwrap().runtime, 40.0);
+    }
+
+    #[test]
+    fn best_none_when_all_invalid() {
+        let pts = vec![dp(1.0, 1.0, false)];
+        assert!(best(&pts, Optimize::Energy, 1.0).is_none());
+    }
+}

@@ -1,0 +1,188 @@
+//! Design-space definition (paper §5.2): the four swept hardware
+//! parameters (#PEs, L1 size, L2 size, NoC bandwidth) plus dataflow
+//! *mapping variants* (tile-size knobs of the Table 3 styles), under an
+//! area/power budget.
+//!
+//! Note on buffer sizing: following §5.2 ("the DSE tool places the exact
+//! amount buffers MAESTRO reported"), L1/L2 capacities are *derived* from
+//! each mapping variant's buffer requirement rather than swept blindly —
+//! the buffer axis of the space is explored through the mapping variants
+//! (KC-P's C-tile, YX-P's X-tile, YR-P's C/K tiles), which is what makes
+//! "larger buffers do not always provide higher throughput" visible in
+//! Fig 13.
+
+use crate::ir::dataflow::Dataflow;
+use crate::ir::dims::Dim::*;
+use crate::ir::directive::{Directive as D, Extent as E};
+
+/// A swept design space.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub pes: Vec<u64>,
+    pub bandwidths: Vec<u64>,
+    pub noc_latency: u64,
+    pub variants: Vec<Dataflow>,
+    /// Area budget, mm^2 (Fig 13 uses Eyeriss's 16 mm^2).
+    pub area_budget_mm2: f64,
+    /// Power budget, mW (450 mW).
+    pub power_budget_mw: f64,
+}
+
+impl DesignSpace {
+    /// Number of candidate designs (before validity filtering).
+    pub fn size(&self) -> u64 {
+        (self.pes.len() * self.bandwidths.len() * self.variants.len()) as u64
+    }
+
+    /// The Fig 13 space for a dataflow family ("kc-p" or "yr-p"), at a
+    /// given sweep resolution (designs grow ~ resolution^2).
+    pub fn fig13(family: &str, resolution: usize) -> DesignSpace {
+        let pes = geometric_range(8, 2048, resolution);
+        let bandwidths = geometric_range(1, 256, resolution);
+        let variants = match family {
+            "kc-p" => kc_p_variants(),
+            "yr-p" => yr_p_variants(),
+            "yx-p" => yx_p_variants(),
+            _ => kc_p_variants(),
+        };
+        DesignSpace {
+            pes,
+            bandwidths,
+            noc_latency: 2,
+            variants,
+            area_budget_mm2: 16.0,
+            power_budget_mw: 450.0,
+        }
+    }
+}
+
+/// `n` geometrically spaced integers in `[lo, hi]` (deduplicated).
+pub fn geometric_range(lo: u64, hi: u64, n: usize) -> Vec<u64> {
+    assert!(lo >= 1 && hi >= lo && n >= 2);
+    let (lof, hif) = (lo as f64, hi as f64);
+    let mut out: Vec<u64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            (lof * (hif / lof).powf(t)).round() as u64
+        })
+        .collect();
+    out.dedup();
+    out
+}
+
+/// KC-P (NVDLA-like) with a parametric C-tile / cluster size.
+pub fn kc_p_ct(ct: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("KC-P(ct={ct})"),
+        vec![
+            D::spatial(E::lit(1), E::lit(1), K),
+            D::temporal(E::lit(ct), E::lit(ct), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::temporal(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::cluster(E::lit(ct)),
+            D::spatial(E::lit(1), E::lit(1), C),
+        ],
+    )
+}
+
+/// YR-P (Eyeriss-like) with parametric C/K tiles.
+pub fn yr_p_ck(c_tile: u64, k_tile: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("YR-P(c={c_tile},k={k_tile})"),
+        vec![
+            D::temporal(E::lit(c_tile), E::lit(c_tile), C),
+            D::temporal(E::lit(k_tile), E::lit(k_tile), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::sz(R)),
+            D::spatial(E::lit(1), E::lit(1), Y),
+            D::spatial(E::lit(1), E::lit(1), R),
+        ],
+    )
+}
+
+/// YX-P (ShiDianNao-like) with a parametric X tile.
+pub fn yx_p_xt(xt: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("YX-P(xt={xt})"),
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz_plus(S, xt as i64 - 1), E::lit(xt), X),
+            D::temporal(E::lit(1), E::lit(1), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::lit(xt)),
+            D::spatial(E::sz(S), E::lit(1), X),
+        ],
+    )
+}
+
+/// The default KC-P mapping-variant sweep.
+pub fn kc_p_variants() -> Vec<Dataflow> {
+    [4, 8, 16, 32, 64, 128].iter().map(|&ct| kc_p_ct(ct)).collect()
+}
+
+/// The default YR-P variant sweep.
+pub fn yr_p_variants() -> Vec<Dataflow> {
+    let mut v = Vec::new();
+    for c in [1, 2, 4, 8] {
+        for k in [1, 2, 4] {
+            v.push(yr_p_ck(c, k));
+        }
+    }
+    v
+}
+
+/// The default YX-P variant sweep.
+pub fn yx_p_variants() -> Vec<Dataflow> {
+    [2, 4, 8, 16, 32].iter().map(|&xt| yx_p_xt(xt)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn geometric_range_shape() {
+        let r = geometric_range(8, 2048, 9);
+        assert_eq!(r.first(), Some(&8));
+        assert_eq!(r.last(), Some(&2048));
+        assert!(r.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn kc_variants_resolve() {
+        let layer = vgg16::conv13();
+        for df in kc_p_variants() {
+            df.resolve(&layer, 512).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+        }
+    }
+
+    #[test]
+    fn yr_variants_resolve() {
+        let layer = vgg16::conv2();
+        for df in yr_p_variants() {
+            df.resolve(&layer, 256).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+        }
+    }
+
+    #[test]
+    fn yx_variants_resolve() {
+        let layer = vgg16::conv2();
+        for df in yx_p_variants() {
+            df.resolve(&layer, 256).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+        }
+    }
+
+    #[test]
+    fn fig13_space_is_nontrivial() {
+        let s = DesignSpace::fig13("kc-p", 16);
+        assert!(s.size() > 500);
+    }
+}

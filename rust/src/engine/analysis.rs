@@ -1,0 +1,640 @@
+//! Performance + cost analysis (Fig 8): walks a resolved dataflow's
+//! cluster levels recursively — "the outstanding delay of a cluster
+//! level becomes the computation delay of the next cluster level above"
+//! (§4.4) — accumulating runtime with double buffering, buffer access
+//! counts, buffer size requirements, NoC bandwidth needs, and energy.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::hw::config::{HwConfig, ReductionSupport};
+use crate::hw::energy::EnergyModel;
+use crate::ir::dataflow::{Dataflow, ResolvedDataflow, ResolvedLevel};
+use crate::ir::dims::DimMap;
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+use crate::model::tensor::{couplings, tensor_elements, TensorKind, ALL_TENSORS};
+
+use super::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
+use super::noc::{level_bandwidth, pipe_delay, reduction_delay};
+use super::reuse::{psum_revisits, tensor_usage};
+
+/// Energy split in picojoules (Fig 12's stack).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac: f64,
+    pub l1: f64,
+    pub l2: f64,
+    pub noc: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mac + self.l1 + self.l2 + self.noc
+    }
+}
+
+/// Full analysis result for one (layer, dataflow, hardware) triple.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub layer: String,
+    pub dataflow: String,
+    /// Total cycles.
+    pub runtime: f64,
+    /// MACs performed (exact; equals `layer.macs()` — tested).
+    pub macs: f64,
+    /// Effective PE utilization: macs / (runtime x PEs x throughput).
+    pub util: f64,
+    /// L2 (upstream, global buffer) reads per tensor [F, I, O].
+    pub l2_reads: [f64; 3],
+    /// L2 writes per tensor [F, I, O].
+    pub l2_writes: [f64; 3],
+    /// Elements written into local (L1 / cluster) buffers.
+    pub l1_fills: f64,
+    /// L1 operand + psum accesses driven by MACs.
+    pub l1_reads: f64,
+    pub l1_writes: f64,
+    /// Elements moved over the NoC (delivered volume).
+    pub noc_delivered: f64,
+    /// Per-PE L1 requirement (elements, double-buffered).
+    pub l1_req: u64,
+    /// L2 staging requirement (elements, double-buffered).
+    pub l2_req: u64,
+    /// Peak NoC bandwidth demand (elements/cycle) to stay
+    /// compute-bound.
+    pub peak_bw_need: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerStats {
+    /// Reuse factor of a tensor: local accesses per L2 fetch (Fig 11).
+    pub fn reuse_factor(&self, t: TensorKind) -> f64 {
+        let idx = t_idx(t);
+        let fetches = if t == TensorKind::Output {
+            self.l2_writes[idx].max(1.0)
+        } else {
+            self.l2_reads[idx].max(1.0)
+        };
+        self.macs / fetches
+    }
+
+    /// Throughput in MACs/cycle.
+    pub fn throughput(&self) -> f64 {
+        self.macs / self.runtime.max(1.0)
+    }
+
+    /// Energy-delay product (pJ x cycles).
+    pub fn edp(&self) -> f64 {
+        self.energy.total() * self.runtime
+    }
+}
+
+fn t_idx(t: TensorKind) -> usize {
+    match t {
+        TensorKind::Filter => 0,
+        TensorKind::Input => 1,
+        TensorKind::Output => 2,
+    }
+}
+
+/// Traffic/energy contributions of one executed subtree.
+#[derive(Debug, Clone, Default)]
+struct SubOut {
+    runtime: f64,
+    macs: f64,
+    l2_reads: [f64; 3],
+    l2_writes: [f64; 3],
+    l1_cluster_reads: f64,
+    l1_fills: f64,
+    noc_delivered: f64,
+    l1_req: u64,
+    l2_req: u64,
+    peak_bw_need: f64,
+}
+
+/// Analyze a layer under a dataflow and hardware config.
+pub fn analyze_layer(layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
+    hw.validate()?;
+    layer.validate()?;
+    let resolved = dataflow.resolve(layer, hw.num_pes)?;
+    analyze_resolved(layer, &resolved, hw)
+}
+
+/// Analyze with an already-resolved dataflow (used by the DSE hot path
+/// to amortize resolution).
+pub fn analyze_resolved(
+    layer: &Layer,
+    resolved: &ResolvedDataflow,
+    hw: &HwConfig,
+) -> Result<LayerStats> {
+    let mut cache: HashMap<CacheKey, SubOut> = HashMap::new();
+    let top_tile = resolved.levels[0].parent_tile;
+    let out = analyze_levels(&resolved.levels, &top_tile, [1.0, 1.0, 1.0], layer, hw, 0, 1, &mut cache)?;
+
+    ensure!(out.macs > 0.0, "no MACs analyzed");
+    let mac_scale = layer.sparsity_macs_scale();
+    let macs = out.macs * mac_scale;
+    let runtime = out.runtime.max(1.0);
+
+    // Energy from activity counts (Fig 12's model: activity x Cacti
+    // energies). L1 operand traffic: 2 operand reads + 1 psum
+    // read-modify-write pair per MAC, plus the fills counted above.
+    let em = EnergyModel::for_sizes(hw.l1_size, hw.l2_size);
+    let l1_reads = 3.0 * macs + out.l1_cluster_reads;
+    let l1_writes = macs + out.l1_fills;
+    let l2r: f64 = out.l2_reads.iter().sum();
+    let l2w: f64 = out.l2_writes.iter().sum();
+    let energy = EnergyBreakdown {
+        mac: macs * em.mac_pj,
+        l1: l1_reads * em.l1_read_pj + l1_writes * em.l1_write_pj,
+        l2: l2r * em.l2_read_pj + l2w * em.l2_write_pj,
+        noc: out.noc_delivered * hw.noc_latency.max(1) as f64 * em.noc_hop_pj,
+    };
+
+    Ok(LayerStats {
+        layer: layer.name.clone(),
+        dataflow: resolved.name.clone(),
+        runtime,
+        macs,
+        util: macs / (runtime * (hw.num_pes * hw.pe_throughput) as f64),
+        l2_reads: out.l2_reads,
+        l2_writes: out.l2_writes,
+        l1_fills: out.l1_fills,
+        l1_reads,
+        l1_writes,
+        noc_delivered: out.noc_delivered,
+        l1_req: out.l1_req,
+        l2_req: out.l2_req,
+        peak_bw_need: out.peak_bw_need,
+        energy,
+    })
+}
+
+type CacheKey = (usize, [u64; 7], [u64; 3]);
+
+/// Recursive core: analyze `levels[0]` over `parent_tile`; deeper levels
+/// provide the per-step compute delay.
+///
+/// `entry_fresh` carries the *outer* transition's fresh fractions for
+/// [filter, input, output]: data a PE retained from the previous outer
+/// step is not re-streamed inside the cluster, so inner ingress of the
+/// pure input tensors scales by the outer fresh fraction. Outputs always
+/// carry 1.0 — partial sums flow upward on every visit (accumulation
+/// traffic repeats even when the output coordinates do not change).
+fn analyze_levels(
+    levels: &[ResolvedLevel],
+    parent_tile: &DimMap<u64>,
+    entry_fresh: [f64; 3],
+    layer: &Layer,
+    hw: &HwConfig,
+    depth: usize,
+    outer_units: u64,
+    cache: &mut HashMap<CacheKey, SubOut>,
+) -> Result<SubOut> {
+    let key = (
+        levels.len(),
+        tile_key(parent_tile),
+        [entry_fresh[0].to_bits(), entry_fresh[1].to_bits(), entry_fresh[2].to_bits()],
+    );
+    if let Some(hit) = cache.get(&key) {
+        return Ok(hit.clone());
+    }
+
+    let level = &levels[0];
+    let sched = build_schedule(level, parent_tile, layer)?;
+    let classes = transition_classes(&sched)?;
+    let revisits = psum_revisits(&sched, layer) as f64;
+    let coup = couplings(layer);
+    let bw = level_bandwidth(hw, outer_units);
+    let inner_units = outer_units * sched.units;
+
+    let mut out = SubOut::default();
+    let mut l1_working_max: u64 = 0;
+    let mut l2_working_max: f64 = 0.0;
+
+    for class in &classes {
+        let occ = class.occurrences as f64;
+        let active = class.active.max(1);
+
+        // ---- Tensor usages ------------------------------------------
+        // Fresh fractions chain through `entry_fresh`: data the level
+        // retained across the *outer* step is not re-streamed here.
+        let mut ingress_total = 0.0; // parent-buffer reads this step
+        let mut egress_total = 0.0; // parent-buffer writes this step
+        let mut delivered_total = 0.0; // into this level's unit buffers
+        let mut red_delay = 0.0f64;
+        let mut footprint_sum: u64 = 0;
+        let mut class_fresh = [1.0f64, 1.0, 1.0];
+
+        for (ci, kind) in ALL_TENSORS.iter().enumerate() {
+            let mut u = tensor_usage(&sched, class, &coup[ci], *kind);
+            if *kind != TensorKind::Output {
+                u.fresh *= entry_fresh[ci];
+            }
+            class_fresh[ci] = u.fresh;
+            if u.footprint_unit == 0 {
+                continue;
+            }
+            footprint_sum += u.footprint_unit;
+            match *kind {
+                TensorKind::Output => {
+                    // Egress volume: reduced across units when spatial
+                    // reduction exists and is supported.
+                    let reduced = u.spatially_reduced;
+                    let egress_unique = if reduced && hw.reduction == ReductionSupport::None {
+                        // Unsupported: every unit sends its psums up.
+                        u.fresh * (u.footprint_unit * active) as f64
+                    } else {
+                        u.unique_fresh()
+                    };
+                    // Partial-sum revisits: all but the final visit come
+                    // back down for further accumulation (parent RMW).
+                    let psum_ingress = egress_unique * (revisits - 1.0) / revisits;
+                    egress_total += egress_unique;
+                    ingress_total += psum_ingress;
+                    out.l2_writes[t_idx(*kind)] += occ * egress_unique;
+                    out.l2_reads[t_idx(*kind)] += occ * psum_ingress;
+                    delivered_total += psum_ingress;
+                    if reduced && hw.reduction != ReductionSupport::None {
+                        red_delay = red_delay.max(reduction_delay(hw.reduction, active));
+                    } else if reduced {
+                        red_delay = red_delay.max(reduction_delay(ReductionSupport::None, active));
+                    }
+                }
+                _ => {
+                    let unique = if hw.multicast {
+                        u.unique_fresh()
+                    } else {
+                        u.delivered_fresh(active)
+                    };
+                    ingress_total += unique;
+                    delivered_total += u.delivered_fresh(active);
+                    out.l2_reads[t_idx(*kind)] += occ * unique;
+                }
+            }
+        }
+
+        // ---- Compute delay: recurse or PE base case -----------------
+        let (compute_delay, macs_unit, inner) = if levels.len() > 1 {
+            let inner_entry = [class_fresh[0], class_fresh[1], 1.0];
+            let sub = analyze_levels(&levels[1..], &class.tile, inner_entry, layer, hw, depth + 1, inner_units, cache)?;
+            let d = sub.runtime;
+            let m = sub.macs;
+            (d, m, Some(sub))
+        } else {
+            let m = macs_per_unit(&sched, class, layer) as f64;
+            let d = (m * layer.sparsity_macs_scale() / hw.pe_throughput as f64).ceil().max(1.0);
+            (d, m, None)
+        };
+
+        // ---- Delays (pipe model + double buffering, Fig 8) ----------
+        let in_delay = pipe_delay(ingress_total, bw, hw.noc_latency);
+        let out_delay = pipe_delay(egress_total, bw, hw.noc_latency);
+        let cmp_delay = compute_delay + red_delay;
+        let delay = if matches!(class.advanced, Advanced::GlobalInit) {
+            in_delay + cmp_delay + out_delay
+        } else {
+            in_delay.max(cmp_delay).max(out_delay)
+        };
+        out.runtime += occ * delay;
+        out.macs += occ * macs_unit * active as f64;
+        out.l1_fills += occ * delivered_total;
+        out.noc_delivered += occ * (delivered_total + egress_total);
+        out.peak_bw_need = out
+            .peak_bw_need
+            .max((ingress_total + egress_total) / cmp_delay.max(1.0));
+
+        // ---- Inner-level traffic scaled by this class ---------------
+        if let Some(sub) = inner {
+            let scale = occ * active as f64;
+            // Inner ingress draws on this level's unit buffers (cluster
+            // scratch): charge as L1-class accesses, not L2.
+            out.l1_cluster_reads += scale * (sub.l2_reads.iter().sum::<f64>() + sub.l2_writes.iter().sum::<f64>());
+            out.l1_fills += scale * sub.l1_fills;
+            out.l1_cluster_reads += scale * sub.l1_cluster_reads;
+            out.noc_delivered += scale * sub.noc_delivered;
+            out.l1_req = out.l1_req.max(sub.l1_req);
+        }
+
+        // ---- Working sets for buffer sizing --------------------------
+        l1_working_max = l1_working_max.max(footprint_sum);
+        l2_working_max = l2_working_max.max(ingress_total + egress_total);
+    }
+
+    // Buffer requirements (double buffering, Fig 8's 2x max rule).
+    if levels.len() == 1 {
+        out.l1_req = out.l1_req.max(2 * l1_working_max);
+    }
+    if depth == 0 {
+        out.l2_req = (2.0 * l2_working_max).ceil() as u64;
+    }
+
+    cache.insert(key, out.clone());
+    Ok(out)
+}
+
+fn tile_key(t: &DimMap<u64>) -> [u64; 7] {
+    let mut k = [0u64; 7];
+    for (i, (_, v)) in t.iter().enumerate() {
+        k[i] = v;
+    }
+    k
+}
+
+/// Whole-network aggregate.
+#[derive(Debug, Clone)]
+pub struct NetworkStats {
+    pub network: String,
+    pub dataflow: String,
+    pub per_layer: Vec<LayerStats>,
+    pub runtime: f64,
+    pub energy: EnergyBreakdown,
+    pub macs: f64,
+}
+
+/// Analyze every layer of a network under one dataflow; layers the
+/// dataflow cannot resolve on (e.g. cluster size exceeding PEs) are
+/// returned as errors unless `skip_invalid`.
+pub fn analyze_network(
+    net: &Network,
+    dataflow: &Dataflow,
+    hw: &HwConfig,
+    skip_invalid: bool,
+) -> Result<NetworkStats> {
+    let mut per_layer = Vec::new();
+    for layer in &net.layers {
+        match analyze_layer(layer, dataflow, hw) {
+            Ok(s) => per_layer.push(s),
+            Err(e) if skip_invalid => {
+                let _ = e;
+                continue;
+            }
+            Err(e) => return Err(e.context(format!("layer {}", layer.name))),
+        }
+    }
+    ensure!(!per_layer.is_empty(), "no layer analyzable under {}", dataflow.name);
+    let runtime = per_layer.iter().map(|s| s.runtime).sum();
+    let macs = per_layer.iter().map(|s| s.macs).sum();
+    let energy = per_layer.iter().fold(EnergyBreakdown::default(), |a, s| EnergyBreakdown {
+        mac: a.mac + s.energy.mac,
+        l1: a.l1 + s.energy.l1,
+        l2: a.l2 + s.energy.l2,
+        noc: a.noc + s.energy.noc,
+    });
+    Ok(NetworkStats {
+        network: net.name.clone(),
+        dataflow: dataflow.name.clone(),
+        per_layer,
+        runtime,
+        energy,
+        macs,
+    })
+}
+
+/// Objective for dataflow selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Runtime,
+    Energy,
+    Edp,
+}
+
+/// Adaptive dataflow (§5.1): per layer, choose the best of the candidate
+/// dataflows under the objective. Returns the per-layer winners.
+pub fn adaptive_network(
+    net: &Network,
+    candidates: &[Dataflow],
+    hw: &HwConfig,
+    objective: Objective,
+) -> Result<NetworkStats> {
+    ensure!(!candidates.is_empty(), "adaptive: no candidate dataflows");
+    let mut per_layer: Vec<LayerStats> = Vec::new();
+    for layer in &net.layers {
+        let mut best: Option<LayerStats> = None;
+        for df in candidates {
+            if let Ok(s) = analyze_layer(layer, df, hw) {
+                let better = match &best {
+                    None => true,
+                    Some(b) => score(&s, objective) < score(b, objective),
+                };
+                if better {
+                    best = Some(s);
+                }
+            }
+        }
+        if let Some(b) = best {
+            per_layer.push(b);
+        }
+    }
+    ensure!(!per_layer.is_empty(), "adaptive: nothing analyzable");
+    let runtime = per_layer.iter().map(|s| s.runtime).sum();
+    let macs = per_layer.iter().map(|s| s.macs).sum();
+    let energy = per_layer.iter().fold(EnergyBreakdown::default(), |a, s| EnergyBreakdown {
+        mac: a.mac + s.energy.mac,
+        l1: a.l1 + s.energy.l1,
+        l2: a.l2 + s.energy.l2,
+        noc: a.noc + s.energy.noc,
+    });
+    Ok(NetworkStats { network: net.name.clone(), dataflow: "adaptive".into(), per_layer, runtime, energy, macs })
+}
+
+fn score(s: &LayerStats, o: Objective) -> f64 {
+    match o {
+        Objective::Runtime => s.runtime,
+        Objective::Energy => s.energy.total(),
+        Objective::Edp => s.edp(),
+    }
+}
+
+/// The algorithmic maximum reuse factor of a tensor (Fig 11's "A" bars):
+/// MACs / tensor size.
+pub fn algorithmic_max_reuse(layer: &Layer, t: TensorKind) -> f64 {
+    let size = tensor_elements(layer, t).max(1);
+    layer.macs() as f64 / size as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn hw() -> HwConfig {
+        HwConfig::fig10_default()
+    }
+
+    #[test]
+    fn mac_conservation_all_styles() {
+        let layer = vgg16::conv13();
+        for df in styles::all_styles() {
+            let s = analyze_layer(&layer, &df, &hw()).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+            assert!(
+                (s.macs - layer.macs() as f64).abs() < 1e-6 * layer.macs() as f64,
+                "{}: macs {} != {}",
+                df.name,
+                s.macs,
+                layer.macs()
+            );
+        }
+    }
+
+    #[test]
+    fn runtime_at_least_compute_roofline() {
+        let layer = vgg16::conv2();
+        let h = hw();
+        for df in styles::all_styles() {
+            let s = analyze_layer(&layer, &df, &h).unwrap();
+            let roofline = layer.macs() as f64 / (h.num_pes * h.pe_throughput) as f64;
+            assert!(s.runtime >= roofline * 0.99, "{}: runtime {} < roofline {roofline}", df.name, s.runtime);
+            assert!(s.util <= 1.0 + 1e-9, "{}: util {}", df.name, s.util);
+        }
+    }
+
+    #[test]
+    fn l2_reads_cover_tensor_sizes() {
+        use crate::model::tensor::tensor_elements;
+        let layer = vgg16::conv13();
+        for df in styles::all_styles() {
+            let s = analyze_layer(&layer, &df, &hw()).unwrap();
+            // Every tensor must be fetched at least once...
+            assert!(
+                s.l2_reads[0] >= 0.999 * tensor_elements(&layer, TensorKind::Filter) as f64,
+                "{}: filter reads {}",
+                df.name,
+                s.l2_reads[0]
+            );
+            assert!(
+                s.l2_reads[1] >= 0.999 * tensor_elements(&layer, TensorKind::Input) as f64,
+                "{}: input reads {}",
+                df.name,
+                s.l2_reads[1]
+            );
+            // ...and outputs written at least once.
+            assert!(
+                s.l2_writes[2] >= 0.999 * tensor_elements(&layer, TensorKind::Output) as f64,
+                "{}: output writes {}",
+                df.name,
+                s.l2_writes[2]
+            );
+        }
+    }
+
+    #[test]
+    fn weight_stationary_fetches_weights_once() {
+        // X-P fetches each filter element exactly once from L2.
+        use crate::model::tensor::tensor_elements;
+        let layer = vgg16::conv13();
+        let s = analyze_layer(&layer, &styles::x_p(), &hw()).unwrap();
+        let fsize = tensor_elements(&layer, TensorKind::Filter) as f64;
+        assert!(
+            (s.l2_reads[0] - fsize).abs() / fsize < 0.01,
+            "X-P filter reads {} vs size {fsize}",
+            s.l2_reads[0]
+        );
+    }
+
+    #[test]
+    fn no_multicast_increases_energy_and_reads() {
+        let layer = vgg16::conv2();
+        let mut h = hw();
+        let base = analyze_layer(&layer, &styles::kc_p(), &h).unwrap();
+        h.multicast = false;
+        let nom = analyze_layer(&layer, &styles::kc_p(), &h).unwrap();
+        assert!(nom.l2_reads[1] > base.l2_reads[1] * 1.5, "input reads should blow up without multicast");
+        assert!(nom.energy.total() > base.energy.total());
+    }
+
+    #[test]
+    fn no_reduction_support_increases_egress() {
+        // C-P spatially reduces outputs at level 0 (across C-parallel
+        // PEs); without hardware support every PE sends its psums to L2.
+        let layer = vgg16::conv2();
+        let mut h = hw();
+        let base = analyze_layer(&layer, &styles::c_p(), &h).unwrap();
+        h.reduction = ReductionSupport::None;
+        let nor = analyze_layer(&layer, &styles::c_p(), &h).unwrap();
+        assert!(
+            nor.l2_writes[2] > base.l2_writes[2] * 1.5,
+            "no-reduction writes {} vs base {}",
+            nor.l2_writes[2],
+            base.l2_writes[2]
+        );
+        assert!(nor.energy.total() > base.energy.total());
+    }
+
+    #[test]
+    fn smaller_bandwidth_never_faster() {
+        let layer = vgg16::conv2();
+        let mut h = hw();
+        let fast = analyze_layer(&layer, &styles::yx_p(), &h).unwrap();
+        h.noc_bandwidth = 2;
+        let slow = analyze_layer(&layer, &styles::yx_p(), &h).unwrap();
+        assert!(slow.runtime >= fast.runtime);
+    }
+
+    #[test]
+    fn network_analysis_aggregates() {
+        let net = vgg16::conv_only();
+        let s = analyze_network(&net, &styles::kc_p(), &hw(), false).unwrap();
+        assert_eq!(s.per_layer.len(), net.layers.len());
+        let sum: f64 = s.per_layer.iter().map(|l| l.runtime).sum();
+        assert!((s.runtime - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adaptive_never_worse_than_best_single() {
+        let net = crate::model::zoo::by_name("mobilenetv2").unwrap();
+        let h = hw();
+        let cands = styles::all_styles();
+        let adaptive = adaptive_network(&net, &cands, &h, Objective::Runtime).unwrap();
+        for df in &cands {
+            if let Ok(s) = analyze_network(&net, df, &h, true) {
+                if s.per_layer.len() == adaptive.per_layer.len() {
+                    assert!(
+                        adaptive.runtime <= s.runtime * 1.0001,
+                        "adaptive {} vs {} {}",
+                        adaptive.runtime,
+                        df.name,
+                        s.runtime
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_factor_below_algorithmic_max() {
+        let layer = vgg16::conv2();
+        for df in styles::all_styles() {
+            let s = analyze_layer(&layer, &df, &hw()).unwrap();
+            for t in [TensorKind::Filter, TensorKind::Input] {
+                let max = algorithmic_max_reuse(&layer, t);
+                let r = s.reuse_factor(t);
+                assert!(
+                    r <= max * 1.001,
+                    "{} {:?}: reuse {r} > algorithmic max {max}",
+                    df.name,
+                    t
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_layer_analyzable() {
+        let layer = crate::model::layer::Layer::fully_connected("fc", 1, 1000, 4096);
+        for df in styles::all_styles() {
+            if let Ok(s) = analyze_layer(&layer, &df, &hw()) {
+                assert!((s.macs - layer.macs() as f64).abs() < 1.0, "{}", df.name);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_analyzable() {
+        let layer = crate::model::zoo::mobilenet_v2::dwconv_exemplar();
+        let s = analyze_layer(&layer, &styles::yr_p(), &hw()).unwrap();
+        assert!((s.macs - layer.macs() as f64).abs() < 1e-6 * layer.macs() as f64);
+    }
+}

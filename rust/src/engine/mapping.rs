@@ -1,0 +1,679 @@
+//! Mapping analysis: per-level dimension schedules and the iteration-case
+//! enumeration (Fig 8's `ExtractDataIterationCases`).
+//!
+//! Normative semantics are DESIGN.md §6. In brief: each cluster level is
+//! a loop nest over its dimension maps (directive order, outermost
+//! first). Spatially-mapped dims distribute positions across the level's
+//! units and contribute a *fold* pseudo-loop when positions exceed units.
+//! Every (full/edge position) combination together with "which loop just
+//! incremented" forms a *transition class* — the unit of accounting for
+//! runtime, traffic and energy. Classes are exact: their occurrence-
+//! weighted MAC counts sum to the layer's MAC total (a property test
+//! enforces this).
+//!
+//! Windowed activation dims (Y sliding against R, X against S) are
+//! iterated in *output space*: a map of `(size, offset)` over Y with
+//! window `w = parent R tile` produces `(size − w)/stride + 1` output
+//! rows per position and must advance by exactly `size − w + stride`
+//! input rows (gapless, non-overlapping outputs — validated at resolve
+//! time and re-checked here).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::ir::dataflow::ResolvedLevel;
+use crate::ir::dims::{Dim, DimMap};
+use crate::model::layer::Layer;
+
+/// How a dimension's indices advance at one level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimSched {
+    pub dim: Dim,
+    pub spatial: bool,
+    /// Input-space chunk per position.
+    pub size: u64,
+    /// Input-space step between positions (stride-scaled).
+    pub offset: u64,
+    /// Windowed (output-space) semantics?
+    pub windowed: bool,
+    /// Window extent (parent tile of the partner dim) when windowed.
+    pub win: u64,
+    /// Layer stride (1 for non-activation dims).
+    pub stride: u64,
+    /// Number of full positions.
+    pub positions_full: u64,
+    /// Input-space size of the trailing edge position (0 = none).
+    pub edge_in: u64,
+    /// Outputs (or elements, for non-windowed dims) per full position.
+    pub out_per_pos: u64,
+    /// Outputs/elements at the edge position.
+    pub out_edge: u64,
+    /// Member of the level's joint spatial group?
+    pub joint_spatial: bool,
+}
+
+impl DimSched {
+    pub fn total_positions(&self) -> u64 {
+        self.positions_full + if self.edge_in > 0 { 1 } else { 0 }
+    }
+
+    pub fn has_edge(&self) -> bool {
+        self.edge_in > 0
+    }
+
+    /// Input-space tile size in a given state.
+    pub fn in_size(&self, state: PosState) -> u64 {
+        match state {
+            PosState::Normal => self.size,
+            PosState::Edge => self.edge_in,
+        }
+    }
+
+    /// Output-space (or element) count in a given state.
+    pub fn out_size(&self, state: PosState) -> u64 {
+        match state {
+            PosState::Normal => self.out_per_pos,
+            PosState::Edge => self.out_edge,
+        }
+    }
+
+    /// Fresh input-space elements when *this* dim increments into
+    /// `state` (overlap with the previous position subtracted).
+    pub fn fresh_in(&self, state: PosState) -> u64 {
+        let overlap = self.size.saturating_sub(self.offset);
+        match state {
+            PosState::Normal => self.size - overlap.min(self.size - 1),
+            PosState::Edge => self.edge_in.saturating_sub(overlap).max(if self.edge_in > 0 { 1 } else { 0 }),
+        }
+    }
+}
+
+/// Position state of one loop within a transition class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PosState {
+    /// Any full position.
+    Normal,
+    /// The trailing partial position.
+    Edge,
+}
+
+/// The loop that advanced to create a step (or the global first step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advanced {
+    /// The very first step of the level's schedule.
+    GlobalInit,
+    /// Temporal loop over `dims[idx]` incremented.
+    Temporal { idx: usize },
+    /// The spatial fold loop advanced (all spatial dims jump together).
+    Fold,
+}
+
+/// One level's schedule: ordered loops + the spatial fold.
+#[derive(Debug, Clone)]
+pub struct LevelSchedule {
+    /// Loop dims in directive order (outermost first); every canonical
+    /// dim appears exactly once.
+    pub dims: Vec<DimSched>,
+    /// Units (sub-clusters / PEs) at this level.
+    pub units: u64,
+    /// Spatial positions jointly distributed across units.
+    pub spatial_positions: u64,
+    /// Full folds of the spatial loop (each `units` wide).
+    pub folds_full: u64,
+    /// Active units in the trailing partial fold (0 = exact fit).
+    pub fold_edge_units: u64,
+    /// Index (into `dims`) where the fold loop sits in the order
+    /// (= position of the first spatial map); None if level has no
+    /// spatial map.
+    pub fold_order_idx: Option<usize>,
+    /// The parent tile this schedule iterates over.
+    pub parent_tile: DimMap<u64>,
+}
+
+impl LevelSchedule {
+    pub fn fold_total(&self) -> u64 {
+        self.folds_full + if self.fold_edge_units > 0 { 1 } else { 0 }
+    }
+
+    /// Active units in a fold state.
+    pub fn active_units(&self, fold_state: PosState) -> u64 {
+        match fold_state {
+            PosState::Normal => self.units.min(self.spatial_positions.max(1)),
+            PosState::Edge => self.fold_edge_units,
+        }
+    }
+
+    pub fn spatial_dims(&self) -> Vec<&DimSched> {
+        self.dims.iter().filter(|d| d.spatial).collect()
+    }
+
+    pub fn sched_of(&self, dim: Dim) -> &DimSched {
+        self.dims.iter().find(|d| d.dim == dim).expect("every dim scheduled")
+    }
+
+    /// Total steps of this level's schedule (product of temporal position
+    /// counts and fold count).
+    pub fn total_steps(&self) -> u64 {
+        let mut steps = self.fold_total().max(1);
+        for d in &self.dims {
+            if !d.spatial {
+                steps *= d.total_positions();
+            }
+        }
+        steps
+    }
+}
+
+/// One transition class: a set of schedule steps sharing tile sizes,
+/// active units and the advanced loop. `occurrences` steps of the level
+/// behave identically for performance/cost purposes.
+#[derive(Debug, Clone)]
+pub struct TransitionClass {
+    pub advanced: Advanced,
+    /// Per-loop position state, parallel to `LevelSchedule::dims`
+    /// (spatial dims are always `Normal` — spatial edges are rejected at
+    /// build time).
+    pub states: Vec<PosState>,
+    /// Fold-loop state.
+    pub fold_state: PosState,
+    pub occurrences: u64,
+    /// Per-dim input-space tile, per unit, for this class.
+    pub tile: DimMap<u64>,
+    /// Active units.
+    pub active: u64,
+}
+
+/// Build the schedule for a resolved level against a concrete parent
+/// tile (which may be smaller than the one the level was resolved with,
+/// when an outer edge class recurses into it).
+pub fn build_schedule(
+    level: &ResolvedLevel,
+    parent_tile: &DimMap<u64>,
+    layer: &Layer,
+) -> Result<LevelSchedule> {
+    let mut dims = Vec::with_capacity(level.maps.len());
+    // Joint windowed spatial pair (Eyeriss diagonal): act+win both spatial.
+    let spatial_set: Vec<Dim> = level.maps.iter().filter(|m| m.spatial).map(|m| m.dim).collect();
+    let joint_pair = |d: Dim| -> bool {
+        match d.window_partner() {
+            Some(w) => spatial_set.contains(&d) && spatial_set.contains(&w),
+            None => d.is_window() && {
+                // R's partner is Y, S's is X.
+                let act = if d == Dim::R { Dim::Y } else { Dim::X };
+                spatial_set.contains(&d) && spatial_set.contains(&act)
+            },
+        }
+    };
+
+    for m in &level.maps {
+        let total = parent_tile.get(m.dim).max(1);
+        let size = m.size.min(total);
+        let offset = m.offset;
+        let stride = if matches!(m.dim, Dim::Y | Dim::X) { layer.stride } else { 1 };
+        let is_joint = m.spatial && joint_pair(m.dim);
+
+        let windowed = layer.windowed(m.dim)
+            && matches!(m.dim, Dim::Y | Dim::X)
+            && !is_joint;
+        let sched = if windowed {
+            let win_dim = m.dim.window_partner().unwrap();
+            let win = parent_tile.get(win_dim).min(total).max(1);
+            ensure!(
+                size >= win,
+                "{} tile {size} smaller than its {win_dim} window {win} (and not jointly spatial)",
+                m.dim
+            );
+            // Total outputs available in the parent tile.
+            let out_total = (total - win) / stride + 1;
+            if size >= total {
+                DimSched {
+                    dim: m.dim,
+                    spatial: m.spatial,
+                    size: total,
+                    offset: total.max(1),
+                    windowed: true,
+                    win,
+                    stride,
+                    positions_full: 1,
+                    edge_in: 0,
+                    out_per_pos: out_total,
+                    out_edge: 0,
+                    joint_spatial: false,
+                }
+            } else {
+                // Gapless, non-overlapping output tiling requires
+                // offset == size - win + stride; sliding-window maps are
+                // *augmented* to that step (the paper's cluster analysis
+                // engine handles "stride handling, and so on" — a user
+                // offset of 1 means "slide", and the window geometry
+                // fixes the only valid slide distance).
+                ensure!(
+                    offset <= size - win + 1,
+                    "windowed map {} size {size} offset {offset}: offset would skip outputs (max gapless step {})",
+                    m.dim,
+                    size - win + 1
+                );
+                let offset = size - win + stride;
+                let out_per_pos = (size - win) / stride + 1;
+                let positions_full = out_total / out_per_pos;
+                let rem_out = out_total % out_per_pos;
+                let edge_in = if rem_out > 0 { win + (rem_out - 1) * stride } else { 0 };
+                DimSched {
+                    dim: m.dim,
+                    spatial: m.spatial,
+                    size,
+                    offset,
+                    windowed: true,
+                    win,
+                    stride,
+                    positions_full,
+                    edge_in,
+                    out_per_pos,
+                    out_edge: rem_out,
+                    joint_spatial: false,
+                }
+            }
+        } else {
+            // Direct dims: positions tile the extent exactly; offsets
+            // must equal size (gapless, no recompute). Joint spatial
+            // windowed pairs additionally require size 1 (the Eyeriss
+            // diagonal is the supported joint pattern).
+            if is_joint {
+                ensure!(
+                    size == 1 && offset == 1,
+                    "joint spatial map on {} must be SpatialMap(1,1) (Eyeriss-diagonal pattern)",
+                    m.dim
+                );
+            } else if size < total {
+                ensure!(
+                    offset == size,
+                    "direct map {} size {size} offset {offset}: offset must equal size (offset < size recomputes data, > size skips it)",
+                    m.dim
+                );
+            }
+            let size = size.min(total);
+            let positions_full = total / size;
+            let rem = total % size;
+            DimSched {
+                dim: m.dim,
+                spatial: m.spatial,
+                size,
+                offset: size,
+                windowed: false,
+                win: 1,
+                stride,
+                positions_full,
+                edge_in: rem,
+                out_per_pos: size,
+                out_edge: rem,
+                joint_spatial: is_joint,
+            }
+        };
+        if sched.spatial {
+            ensure!(
+                !sched.has_edge(),
+                "spatial map on {} leaves a partial edge position; choose a size/offset that tiles the extent exactly",
+                m.dim
+            );
+        }
+        dims.push(sched);
+    }
+
+    // Spatial joint position count: all spatial dims advance together;
+    // their position counts must agree (or be 1 for degenerate dims).
+    let spatials: Vec<&DimSched> = dims.iter().filter(|d| d.spatial).collect();
+    let mut spatial_positions = 1;
+    let mut fold_order_idx = None;
+    if !spatials.is_empty() {
+        let counts: Vec<u64> = spatials.iter().map(|d| d.total_positions()).collect();
+        spatial_positions = *counts.iter().max().unwrap();
+        for (d, &c) in spatials.iter().zip(&counts) {
+            ensure!(
+                c == spatial_positions || c == 1,
+                "joint spatial maps disagree on position count ({} has {c}, group has {spatial_positions})",
+                d.dim
+            );
+        }
+        fold_order_idx = dims.iter().position(|d| d.spatial);
+    }
+    let units = level.units.max(1);
+    let (folds_full, fold_edge_units) = if spatial_positions <= units {
+        (1, 0)
+    } else {
+        (spatial_positions / units, spatial_positions % units)
+    };
+
+    Ok(LevelSchedule {
+        dims,
+        units,
+        spatial_positions,
+        folds_full,
+        fold_edge_units,
+        fold_order_idx,
+        parent_tile: *parent_tile,
+    })
+}
+
+/// Enumerate all transition classes of a level schedule. Exactness: the
+/// occurrence sum equals [`LevelSchedule::total_steps`].
+pub fn transition_classes(s: &LevelSchedule) -> Result<Vec<TransitionClass>> {
+    // The loop order: temporal dims in directive order, with the fold
+    // loop spliced at fold_order_idx. Represent loops as (LoopRef).
+    #[derive(Clone, Copy, PartialEq)]
+    enum LoopRef {
+        Dim(usize),
+        Fold,
+    }
+    let mut order: Vec<LoopRef> = Vec::new();
+    for (i, d) in s.dims.iter().enumerate() {
+        if Some(i) == s.fold_order_idx {
+            order.push(LoopRef::Fold);
+        }
+        if !d.spatial {
+            order.push(LoopRef::Dim(i));
+        }
+    }
+    if s.fold_order_idx.is_some() && !order.contains(&LoopRef::Fold) {
+        order.push(LoopRef::Fold);
+    }
+    // Position counts per loop.
+    let count = |l: &LoopRef| -> u64 {
+        match l {
+            LoopRef::Dim(i) => s.dims[*i].total_positions(),
+            LoopRef::Fold => s.fold_total(),
+        }
+    };
+    let edge_of = |l: &LoopRef| -> bool {
+        match l {
+            LoopRef::Dim(i) => s.dims[*i].has_edge(),
+            LoopRef::Fold => s.fold_edge_units > 0,
+        }
+    };
+
+    // Enumerate state vectors over loops-with-edges x advanced loop.
+    let edged: Vec<usize> = (0..order.len()).filter(|&i| edge_of(&order[i])).collect();
+    ensure!(edged.len() <= 12, "too many edged loops ({})", edged.len());
+    let mut classes = Vec::new();
+
+    let build_class = |states_by_loop: &dyn Fn(usize) -> PosState,
+                       advanced: Advanced,
+                       occ: u64|
+     -> TransitionClass {
+        let mut tile: DimMap<u64> = DimMap::filled(1);
+        let mut dim_states = vec![PosState::Normal; s.dims.len()];
+        let mut fold_state = PosState::Normal;
+        for (li, l) in order.iter().enumerate() {
+            let st = states_by_loop(li);
+            match l {
+                LoopRef::Dim(i) => {
+                    dim_states[*i] = st;
+                    tile.set(s.dims[*i].dim, s.dims[*i].in_size(st));
+                }
+                LoopRef::Fold => fold_state = st,
+            }
+        }
+        for d in s.dims.iter().filter(|d| d.spatial) {
+            tile.set(d.dim, d.size);
+        }
+        let active = s.active_units(fold_state);
+        TransitionClass { advanced, states: dim_states, fold_state, occurrences: occ, tile, active }
+    };
+
+    // Global init: every loop at position 0 (Normal unless the loop has
+    // only an edge position, which cannot happen: positions_full >= 1).
+    classes.push(build_class(&|_| PosState::Normal, Advanced::GlobalInit, 1));
+
+    // For each advanced loop a, and each assignment of Normal/Edge to
+    // the edged loops compatible with the transition (inner loops reset
+    // to Normal; the advanced loop's target state; outer loops free):
+    for (ai, a) in order.iter().enumerate() {
+        let a_total = count(a);
+        if a_total <= 1 {
+            continue;
+        }
+        // Target states for the advanced loop.
+        let mut targets = vec![(PosState::Normal, a_total - 1 - if edge_of(a) { 1 } else { 0 })];
+        if edge_of(a) {
+            targets.push((PosState::Edge, 1));
+        }
+        // Free (outer) edged loops.
+        let free: Vec<usize> = edged.iter().copied().filter(|&e| e < ai).collect();
+        for (a_state, a_transitions) in targets {
+            if a_transitions == 0 {
+                continue;
+            }
+            for mask in 0..(1u32 << free.len()) {
+                let state_of = |li: usize| -> PosState {
+                    if li == ai {
+                        a_state
+                    } else if li > ai {
+                        PosState::Normal // inner loops reset
+                    } else if free.iter().position(|&e| e == li).map(|k| mask >> k & 1 == 1).unwrap_or(false) {
+                        PosState::Edge
+                    } else {
+                        PosState::Normal
+                    }
+                };
+                // Occurrences: advanced transitions x outer loop position
+                // counts matching the state assignment.
+                let mut occ = a_transitions;
+                for (li, l) in order.iter().enumerate().take(ai) {
+                    let c = match state_of(li) {
+                        PosState::Normal => {
+                            let t = count(l);
+                            t - if edge_of(l) { 1 } else { 0 }
+                        }
+                        PosState::Edge => 1,
+                    };
+                    occ = occ.saturating_mul(c);
+                }
+                if occ == 0 {
+                    continue;
+                }
+                let advanced = match a {
+                    LoopRef::Dim(i) => Advanced::Temporal { idx: *i },
+                    LoopRef::Fold => Advanced::Fold,
+                };
+                classes.push(build_class(&state_of, advanced, occ));
+            }
+        }
+    }
+
+    // Exactness check: sum of occurrences == total steps.
+    let total: u64 = classes.iter().map(|c| c.occurrences).sum();
+    let want = s.total_steps();
+    if total != want {
+        bail!("transition class enumeration inexact: {total} != {want}");
+    }
+    Ok(classes)
+}
+
+/// Exact per-unit MAC count of one class's tile: the product over dims of
+/// per-dim contributions, with windowed pairs contributing
+/// `out_rows x window-partner tile` and joint pairs contributing their
+/// diagonal count.
+pub fn macs_per_unit(s: &LevelSchedule, class: &TransitionClass, layer: &Layer) -> u64 {
+    let mut macs: u64 = 1;
+    for d in &s.dims {
+        let state = class.states[s.dims.iter().position(|x| x.dim == d.dim).unwrap()];
+        match d.dim {
+            Dim::Y | Dim::X => {
+                if d.joint_spatial {
+                    // Joint diagonal: one (act, win) pair per unit.
+                    macs *= 1;
+                } else if d.windowed {
+                    macs *= d.out_size(if d.spatial { PosState::Normal } else { state });
+                } else {
+                    // Non-windowed activation dim (FC/residual): direct.
+                    macs *= d.in_size(state);
+                }
+            }
+            Dim::R | Dim::S => {
+                if d.joint_spatial {
+                    macs *= d.size; // 1, by validation
+                } else {
+                    macs *= d.in_size(if d.spatial { PosState::Normal } else { state });
+                }
+            }
+            _ => {
+                macs *= d.in_size(if d.spatial { PosState::Normal } else { state });
+            }
+        }
+    }
+    // Depthwise: K is the channel multiplier and C both iterate; the
+    // formula above already multiplies both, matching Layer::macs.
+    let _ = layer;
+    macs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn sched_for(df: &crate::ir::dataflow::Dataflow, layer: &Layer, pes: u64) -> LevelSchedule {
+        let r = df.resolve(layer, pes).unwrap();
+        build_schedule(&r.levels[0], &r.levels[0].parent_tile, layer).unwrap()
+    }
+
+    #[test]
+    fn cp_schedule_shape() {
+        let layer = vgg16::conv2();
+        let s = sched_for(&styles::c_p(), &layer, 256);
+        // C spatially mapped: 64 positions over C=64, all on 64 of 256 units.
+        assert_eq!(s.spatial_positions, 64);
+        assert_eq!(s.folds_full, 1);
+        assert_eq!(s.fold_edge_units, 0);
+        assert_eq!(s.active_units(PosState::Normal), 64);
+        // Y windowed: size 3 (=R), offset 1, 224 output rows.
+        let y = s.sched_of(Dim::Y);
+        assert!(y.windowed);
+        assert_eq!(y.out_per_pos, 1);
+        assert_eq!(y.positions_full, 224);
+    }
+
+    #[test]
+    fn class_occurrences_sum_to_steps() {
+        let layer = vgg16::conv2();
+        for df in styles::all_styles() {
+            let r = df.resolve(&layer, 256).unwrap();
+            for level in &r.levels {
+                let s = build_schedule(level, &level.parent_tile, &layer).unwrap();
+                let classes = transition_classes(&s).unwrap();
+                let sum: u64 = classes.iter().map(|c| c.occurrences).sum();
+                assert_eq!(sum, s.total_steps(), "{} level", df.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_conservation_single_level() {
+        // Single-level dataflows: class MACs x active units must equal
+        // the layer MAC total exactly.
+        let layer = vgg16::conv2();
+        for df in [styles::c_p(), styles::x_p()] {
+            let r = df.resolve(&layer, 256).unwrap();
+            let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+            let classes = transition_classes(&s).unwrap();
+            let total: u64 = classes
+                .iter()
+                .map(|c| c.occurrences * c.active * macs_per_unit(&s, c, &layer))
+                .sum();
+            assert_eq!(total, layer.macs(), "{}", df.name);
+        }
+    }
+
+    #[test]
+    fn fold_arises_when_positions_exceed_units() {
+        let layer = vgg16::conv2(); // K = 64
+        // KC-P level 0: K spatial (64 positions) over 256/64 = 4 clusters.
+        let r = styles::kc_p().resolve(&layer, 256).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        assert_eq!(s.spatial_positions, 64);
+        assert_eq!(s.units, 4);
+        assert_eq!(s.folds_full, 16);
+        assert_eq!(s.fold_edge_units, 0);
+    }
+
+    #[test]
+    fn edge_positions_detected() {
+        // C=100 with TemporalMap(64,64) C -> edge of 36.
+        let layer = crate::model::layer::Layer::conv2d("t", 1, 8, 100, 10, 10, 3, 3, 1);
+        let r = styles::kc_p().resolve(&layer, 256).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let c = s.sched_of(Dim::C);
+        assert_eq!(c.positions_full, 1);
+        assert_eq!(c.edge_in, 36);
+        assert_eq!(c.total_positions(), 2);
+    }
+
+    #[test]
+    fn yr_joint_inner_level() {
+        let layer = vgg16::conv2();
+        let r = styles::yr_p().resolve(&layer, 256).unwrap();
+        let inner = build_schedule(&r.levels[1], &r.levels[1].parent_tile, &layer).unwrap();
+        let y = inner.sched_of(Dim::Y);
+        let rr = inner.sched_of(Dim::R);
+        assert!(y.joint_spatial && rr.joint_spatial);
+        assert_eq!(inner.spatial_positions, 3);
+        assert_eq!(inner.units, 3);
+    }
+
+    #[test]
+    fn windowed_bad_offset_rejected() {
+        use crate::ir::directive::{Directive as D, Extent as E};
+        let layer = vgg16::conv2();
+        // Y size 4 (win 3) covers 2 output rows per position; offset 3
+        // would skip output rows.
+        let df = crate::ir::dataflow::Dataflow::new(
+            "bad-window",
+            vec![
+                D::spatial(E::lit(1), E::lit(1), Dim::K),
+                D::temporal(E::lit(4), E::lit(3), Dim::Y),
+            ],
+        );
+        let r = df.resolve(&layer, 8);
+        if let Ok(r) = r {
+            assert!(build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).is_err());
+        }
+    }
+
+    #[test]
+    fn windowed_offset_is_augmented() {
+        use crate::ir::directive::{Directive as D, Extent as E};
+        let layer = vgg16::conv2();
+        // Y size 4 (win 3) with slide offset 1: augmented to the only
+        // valid step, size - win + stride = 2.
+        let df = crate::ir::dataflow::Dataflow::new(
+            "slide",
+            vec![
+                D::spatial(E::lit(1), E::lit(1), Dim::K),
+                D::temporal(E::lit(4), E::lit(1), Dim::Y),
+            ],
+        );
+        let r = df.resolve(&layer, 8).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        assert_eq!(s.sched_of(Dim::Y).offset, 2);
+        assert_eq!(s.sched_of(Dim::Y).out_per_pos, 2);
+    }
+
+    #[test]
+    fn stride_two_windows() {
+        let layer = crate::model::layer::Layer::conv2d("s2", 1, 8, 4, 11, 11, 3, 3, 2);
+        use crate::ir::directive::{Directive as D, Extent as E};
+        let df = crate::ir::dataflow::Dataflow::new(
+            "w",
+            vec![
+                D::spatial(E::lit(1), E::lit(1), Dim::K),
+                D::temporal(E::sz(Dim::R), E::lit(1), Dim::Y),
+                D::temporal(E::sz(Dim::S), E::lit(1), Dim::X),
+            ],
+        );
+        let r = df.resolve(&layer, 8).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let y = s.sched_of(Dim::Y);
+        assert_eq!(y.positions_full, 5); // (11-3)/2+1
+        assert_eq!(y.out_per_pos, 1);
+        assert_eq!(y.offset, 2);
+    }
+}

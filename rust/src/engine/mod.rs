@@ -1,0 +1,19 @@
+//! The MAESTRO analytical core — the five engines of Fig 7:
+//!
+//! * tensor analysis lives in [`crate::model::tensor`] (dimension
+//!   coupling);
+//! * [`mapping`] — cluster + mapping analysis: per-level dimension
+//!   schedules and the Init/Steady/Edge iteration-case (transition
+//!   class) enumeration of Fig 8;
+//! * [`reuse`] — the reuse analysis engine: per-(class, tensor)
+//!   footprints, fresh-data fractions, and spatial uniqueness (multicast
+//!   / reduction detection), plus the qualitative Table 1 generator;
+//! * [`noc`] — the pipe NoC model (§4.2);
+//! * [`analysis`] — recursive performance + cost analysis (runtime,
+//!   buffer accesses and sizing, energy, bandwidth requirements), layer
+//!   and network entry points, and the adaptive-dataflow selector.
+
+pub mod analysis;
+pub mod mapping;
+pub mod noc;
+pub mod reuse;

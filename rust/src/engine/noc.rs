@@ -1,0 +1,66 @@
+//! The analytical NoC model (paper §4.2): a *pipe* with two parameters —
+//! width (bandwidth, elements/cycle) and length (average latency,
+//! cycles) — plus the spatial reuse-support switches of Table 2.
+
+use crate::hw::config::{HwConfig, ReductionSupport};
+
+/// Pipe-model delay for moving `elements` through a pipe of `bandwidth`
+/// elements/cycle and `latency` cycles: pipelined, so the latency is paid
+/// once per transfer.
+pub fn pipe_delay(elements: f64, bandwidth: u64, latency: u64) -> f64 {
+    if elements <= 0.0 {
+        return 0.0;
+    }
+    (elements / bandwidth.max(1) as f64).ceil() + latency as f64
+}
+
+/// Extra cycles to spatially reduce partial sums across `fan_in` units
+/// (Table 2's fan-in column).
+pub fn reduction_delay(support: ReductionSupport, fan_in: u64) -> f64 {
+    if fan_in <= 1 {
+        return 0.0;
+    }
+    match support {
+        // No hardware: reduction is serialized through the parent buffer;
+        // the traffic cost is charged separately (egress x fan_in), the
+        // serialization shows up as a fan_in-deep merge.
+        ReductionSupport::None => fan_in as f64,
+        ReductionSupport::Tree => (fan_in as f64).log2().ceil(),
+        ReductionSupport::Forward => (fan_in - 1) as f64,
+    }
+}
+
+/// Effective bandwidth share of one sub-group at a hierarchy level:
+/// the top level sees the full pipe; each of `outer_units` inner groups
+/// shares it (bisection view, §4.2's guidance for hierarchical NoCs).
+pub fn level_bandwidth(hw: &HwConfig, outer_units: u64) -> u64 {
+    (hw.noc_bandwidth / outer_units.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipe_delay_basics() {
+        assert_eq!(pipe_delay(0.0, 16, 2), 0.0);
+        assert_eq!(pipe_delay(16.0, 16, 2), 3.0); // 1 + latency 2
+        assert_eq!(pipe_delay(17.0, 16, 2), 4.0); // ceil(17/16) + 2
+    }
+
+    #[test]
+    fn reduction_delays() {
+        assert_eq!(reduction_delay(ReductionSupport::Tree, 64), 6.0);
+        assert_eq!(reduction_delay(ReductionSupport::Forward, 64), 63.0);
+        assert_eq!(reduction_delay(ReductionSupport::None, 64), 64.0);
+        assert_eq!(reduction_delay(ReductionSupport::Tree, 1), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_sharing() {
+        let hw = HwConfig::fig10_default(); // bw 16
+        assert_eq!(level_bandwidth(&hw, 1), 16);
+        assert_eq!(level_bandwidth(&hw, 4), 4);
+        assert_eq!(level_bandwidth(&hw, 64), 1); // floor at 1
+    }
+}

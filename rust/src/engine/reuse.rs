@@ -1,0 +1,559 @@
+//! Reuse analysis (paper §3.3, §4.1): for each (transition class, tensor)
+//! compute the per-unit footprint, the *fresh* fraction (new data this
+//! step — its complement is temporal reuse), and the *unique* union
+//! across the level's active units (its gap to `footprint x active` is
+//! spatial reuse: multicast for inputs, reduction for outputs).
+//!
+//! Also generates the qualitative reuse-opportunity matrix of Table 1
+//! from the same rules, which a unit test checks against the paper.
+
+use crate::ir::dims::Dim;
+use crate::model::layer::Layer;
+use crate::model::tensor::{couplings, Coupling, TensorDim, TensorKind};
+
+use super::mapping::{Advanced, DimSched, LevelSchedule, PosState, TransitionClass};
+
+/// Quantitative usage of one tensor in one transition class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorUsage {
+    /// Elements resident per unit per step.
+    pub footprint_unit: u64,
+    /// Union of footprints across the class's active units.
+    pub unique_union: u64,
+    /// Fraction of the footprint that is new this step (0 = fully
+    /// temporally reused / stationary).
+    pub fresh: f64,
+    /// Spatial reduction applies (outputs whose coordinates are
+    /// invariant across units while a reduction dim varies spatially).
+    pub spatially_reduced: bool,
+}
+
+impl TensorUsage {
+    /// New elements read from the parent buffer this step (multicast
+    /// collapsing duplicates across units).
+    pub fn unique_fresh(&self) -> f64 {
+        self.fresh * self.unique_union as f64
+    }
+
+    /// New elements delivered into unit buffers this step (before any
+    /// multicast collapse), for `active` units.
+    pub fn delivered_fresh(&self, active: u64) -> f64 {
+        self.fresh * (self.footprint_unit * active) as f64
+    }
+}
+
+/// Does advancing `d` move the *output* tensor (directly coupled, or the
+/// activation side of a windowed coupling)? The window side (R/S) and
+/// uncoupled dims (C for normal conv) are reduction dims instead.
+pub fn output_advancing(coupling: &Coupling, d: Dim) -> bool {
+    coupling.dims.iter().any(|td| match td {
+        TensorDim::Direct(x) => *x == d,
+        TensorDim::Windowed { act, .. } => *act == d,
+    })
+}
+
+/// Is `d` a reduction dimension for this layer (contributes to outputs
+/// without addressing them)?
+pub fn is_reduction_dim(layer: &Layer, d: Dim) -> bool {
+    let [f, i, o] = couplings(layer);
+    (f.couples(d) || i.couples(d)) && !output_advancing(&o, d)
+}
+
+/// Compute the usage of one tensor in one class of a level schedule.
+pub fn tensor_usage(
+    s: &LevelSchedule,
+    class: &TransitionClass,
+    coupling: &Coupling,
+    kind: TensorKind,
+) -> TensorUsage {
+    if coupling.dims.is_empty() {
+        return TensorUsage { footprint_unit: 0, unique_union: 0, fresh: 0.0, spatially_reduced: false };
+    }
+    let state_of = |d: Dim| -> PosState {
+        let idx = s.dims.iter().position(|x| x.dim == d).expect("dim scheduled");
+        if s.dims[idx].spatial {
+            PosState::Normal
+        } else {
+            class.states[idx]
+        }
+    };
+    let sched_of = |d: Dim| -> &DimSched { s.sched_of(d) };
+    let active = class.active.max(1);
+
+    // --- Footprint and union, per tensor dimension -----------------
+    let mut footprint: u64 = 1;
+    let mut union: u64 = 1;
+    for td in &coupling.dims {
+        let (len_unit, len_union) = match td {
+            TensorDim::Direct(d) => {
+                let ds = sched_of(*d);
+                let len = ds.in_size(state_of(*d));
+                let uni = if ds.spatial {
+                    // Units hold consecutive positions offset apart:
+                    // union length collapses halo overlap.
+                    (active - 1) * ds.offset + len
+                } else {
+                    len
+                };
+                (len, uni)
+            }
+            TensorDim::Windowed { act, win } => {
+                let a = sched_of(*act);
+                let w = sched_of(*win);
+                if a.joint_spatial && w.joint_spatial {
+                    // Eyeriss diagonal: act - win invariant across units.
+                    (1, 1)
+                } else {
+                    let rows = if a.windowed { a.out_size(state_of(*act)) } else {
+                        // Degenerate (FC-like): single output element.
+                        1
+                    };
+                    let uni = if a.spatial {
+                        // Units compute disjoint output chunks.
+                        active * rows.max(1)
+                    } else {
+                        rows
+                    };
+                    (rows.max(1), uni.max(1))
+                }
+            }
+        };
+        footprint = footprint.saturating_mul(len_unit.max(1));
+        union = union.saturating_mul(len_union.max(1));
+    }
+
+    // --- Fresh fraction --------------------------------------------
+    let fresh = fresh_fraction(s, class, coupling, kind);
+
+    // --- Spatial reduction (outputs only) ---------------------------
+    let spatially_reduced = kind == TensorKind::Output
+        && active > 1
+        && union < footprint.saturating_mul(active)
+        && s.dims.iter().any(|d| {
+            d.spatial && {
+                let layer_agnostic_reduction = {
+                    // A spatial dim is a reduction dim for this tensor if
+                    // it does not advance it but couples the computation:
+                    // conservative check via coupling absence.
+                    !output_advancing(coupling, d.dim)
+                };
+                layer_agnostic_reduction
+            }
+        });
+
+    TensorUsage { footprint_unit: footprint, unique_union: union, fresh, spatially_reduced }
+}
+
+/// Fresh-data fraction for a tensor at a transition class (DESIGN.md
+/// §6.3 rules).
+fn fresh_fraction(
+    s: &LevelSchedule,
+    class: &TransitionClass,
+    coupling: &Coupling,
+    kind: TensorKind,
+) -> f64 {
+    // Order of loops, with the fold spliced in, matching mapping.rs.
+    #[derive(Clone, Copy, PartialEq)]
+    enum L {
+        Dim(usize),
+        Fold,
+    }
+    let mut order: Vec<L> = Vec::new();
+    for (i, d) in s.dims.iter().enumerate() {
+        if Some(i) == s.fold_order_idx {
+            order.push(L::Fold);
+        }
+        if !d.spatial {
+            order.push(L::Dim(i));
+        }
+    }
+    if s.fold_order_idx.is_some() && !order.contains(&L::Fold) {
+        order.push(L::Fold);
+    }
+
+    let loop_couples = |l: &L| -> bool {
+        match l {
+            L::Dim(i) => {
+                let d = s.dims[*i].dim;
+                if kind == TensorKind::Output {
+                    output_advancing(coupling, d)
+                } else {
+                    coupling.couples(d)
+                }
+            }
+            L::Fold => s.dims.iter().filter(|d| d.spatial).any(|d| {
+                if kind == TensorKind::Output {
+                    output_advancing(coupling, d.dim)
+                } else {
+                    coupling.couples(d.dim)
+                }
+            }),
+        }
+    };
+    let loop_positions = |l: &L| -> u64 {
+        match l {
+            L::Dim(i) => s.dims[*i].total_positions(),
+            L::Fold => s.fold_total(),
+        }
+    };
+
+    match class.advanced {
+        Advanced::GlobalInit => 1.0,
+        Advanced::Fold => {
+            // Inner temporal loops (after the fold in order) reset too.
+            let fold_pos = order.iter().position(|l| *l == L::Fold).unwrap();
+            let inner_restream = order[fold_pos + 1..]
+                .iter()
+                .any(|l| loop_positions(l) > 1 && loop_couples(l));
+            if loop_couples(&L::Fold) || inner_restream {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Advanced::Temporal { idx } => {
+            let pos = order
+                .iter()
+                .position(|l| matches!(l, L::Dim(i) if *i == idx))
+                .expect("advanced loop in order");
+            // Inner coupled loops reset -> full restream.
+            let inner_restream = order[pos + 1..]
+                .iter()
+                .any(|l| loop_positions(l) > 1 && loop_couples(l));
+            if kind == TensorKind::Output {
+                // Output tiles are disjoint across advancing positions;
+                // reduction-dim advances revisit the same outputs
+                // (accounted via the psum revisit factor in analysis).
+                let d = s.dims[idx].dim;
+                return if output_advancing(coupling, d) || inner_restream { 1.0 } else { 0.0 };
+            }
+            if inner_restream {
+                return 1.0;
+            }
+            let d = &s.dims[idx];
+            if coupling.couples(d.dim) {
+                let state = class.states[idx];
+                let fresh = d.fresh_in(state) as f64;
+                let size = d.in_size(state).max(1) as f64;
+                (fresh / size).clamp(0.0, 1.0)
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Psum revisit factor of a level schedule: the product of position
+/// counts of reduction loops *outer* to the innermost output-advancing
+/// loop. Egressed output tiles are final with fraction `1/revisits`;
+/// the rest are partial sums that re-enter later (read-modify-write at
+/// the parent buffer).
+pub fn psum_revisits(s: &LevelSchedule, layer: &Layer) -> u64 {
+    let [_, _, o] = couplings(layer);
+    #[derive(Clone, Copy, PartialEq)]
+    enum L {
+        Dim(usize),
+        Fold,
+    }
+    let mut order: Vec<L> = Vec::new();
+    for (i, d) in s.dims.iter().enumerate() {
+        if Some(i) == s.fold_order_idx {
+            order.push(L::Fold);
+        }
+        if !d.spatial {
+            order.push(L::Dim(i));
+        }
+    }
+    if s.fold_order_idx.is_some() && !order.contains(&L::Fold) {
+        order.push(L::Fold);
+    }
+    let advancing = |l: &L| -> bool {
+        match l {
+            L::Dim(i) => output_advancing(&o, s.dims[*i].dim),
+            L::Fold => s.dims.iter().filter(|d| d.spatial).any(|d| output_advancing(&o, d.dim)),
+        }
+    };
+    let positions = |l: &L| -> u64 {
+        match l {
+            L::Dim(i) => s.dims[*i].total_positions(),
+            L::Fold => s.fold_total(),
+        }
+    };
+    let reduction = |l: &L| -> bool {
+        match l {
+            L::Dim(i) => is_reduction_dim(layer, s.dims[*i].dim),
+            L::Fold => s.dims.iter().filter(|d| d.spatial).any(|d| is_reduction_dim(layer, d.dim)),
+        }
+    };
+    // Innermost advancing loop with >1 positions.
+    let innermost_adv = order
+        .iter()
+        .rposition(|l| advancing(l) && positions(l) > 1)
+        .unwrap_or(0);
+    order[..innermost_adv]
+        .iter()
+        .filter(|l| reduction(l) && positions(l) > 1)
+        .map(|l| positions(l))
+        .product::<u64>()
+        .max(1)
+}
+
+// ---------------------------------------------------------------------
+// Table 1: qualitative reuse opportunities.
+// ---------------------------------------------------------------------
+
+/// Qualitative reuse opportunity of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opportunity {
+    Multicast,
+    Reduction,
+    None,
+}
+
+/// One row of Table 1: reuse opportunity per tensor for a choice of
+/// spatially-mapped dim and innermost temporally-mapped dim.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub spatial_dim: Dim,
+    pub innermost_temporal: Dim,
+    /// (filter, input, output) spatial opportunities.
+    pub spatial: [Opportunity; 3],
+    /// (filter, input, output) temporal opportunities.
+    pub temporal: [Opportunity; 3],
+}
+
+/// Generate Table 1 for standard CONV2D coupling: for each spatially
+/// mapped dim and each innermost temporal dim, which tensors can be
+/// multicast (spatially or temporally) and which reduced.
+///
+/// Rules (derived from the same machinery as the quantitative engine):
+/// a tensor *not coupled* to the spatial dim is spatially multicast; the
+/// output is spatially *reduced* when the spatial dim is a reduction
+/// dim. Temporally: a tensor not coupled to the innermost temporal dim
+/// is temporally multicast (stationary); the output is temporally
+/// reduced when that dim is a reduction dim.
+pub fn table1(layer: &Layer) -> Vec<Table1Row> {
+    let [f, i, o] = couplings(layer);
+    let couples = |c: &Coupling, kind: TensorKind, d: Dim| -> bool {
+        if kind == TensorKind::Output {
+            output_advancing(c, d)
+        } else {
+            c.couples(d)
+        }
+    };
+    let spatial_dims = [Dim::K, Dim::C, Dim::R, Dim::Y];
+    let mut rows = Vec::new();
+    for sd in spatial_dims {
+        for td in spatial_dims {
+            if td == sd {
+                continue;
+            }
+            let spatial = [
+                (TensorKind::Filter, &f),
+                (TensorKind::Input, &i),
+                (TensorKind::Output, &o),
+            ]
+            .map(|(kind, c)| {
+                if !couples(c, kind, sd) {
+                    Opportunity::Multicast
+                } else if kind == TensorKind::Output && is_reduction_dim(layer, sd) {
+                    Opportunity::Reduction
+                } else {
+                    Opportunity::None
+                }
+            });
+            let temporal = [
+                (TensorKind::Filter, &f),
+                (TensorKind::Input, &i),
+                (TensorKind::Output, &o),
+            ]
+            .map(|(kind, c)| {
+                if !couples(c, kind, td) {
+                    Opportunity::Multicast
+                } else if kind == TensorKind::Output && is_reduction_dim(layer, td) {
+                    Opportunity::Reduction
+                } else {
+                    Opportunity::None
+                }
+            });
+            // An output that is a reduction target temporally: the output
+            // is *coupled-invariant* while the reduction dim iterates —
+            // the paper marks this as a Reduction opportunity on O.
+            let mut temporal = temporal;
+            if is_reduction_dim(layer, td) {
+                temporal[2] = Opportunity::Reduction;
+            }
+            let mut spatial = spatial;
+            if is_reduction_dim(layer, sd) {
+                spatial[2] = Opportunity::Reduction;
+            }
+            rows.push(Table1Row { spatial_dim: sd, innermost_temporal: td, spatial, temporal });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mapping::{build_schedule, transition_classes};
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn conv() -> Layer {
+        vgg16::conv2()
+    }
+
+    #[test]
+    fn table1_matches_paper_conv2d() {
+        let rows = table1(&conv());
+        let find = |sd: Dim, td: Dim| -> &Table1Row {
+            rows.iter()
+                .find(|r| r.spatial_dim == sd && r.innermost_temporal == td)
+                .unwrap()
+        };
+        use Opportunity::{Multicast, Reduction};
+        let no = Opportunity::None;
+        // Paper Table 1, spatial K row: Input multicast; with innermost C:
+        // output temporal reduction.
+        let r = find(Dim::K, Dim::C);
+        assert_eq!(r.spatial, [no, Multicast, no]);
+        assert_eq!(r.temporal[2], Reduction);
+        // Spatial C: output spatially reduced.
+        let r = find(Dim::C, Dim::K);
+        assert_eq!(r.spatial[2], Reduction);
+        // Spatial C, filter+input coupled -> no multicast on them.
+        assert_eq!(r.spatial[0], no);
+        assert_eq!(r.spatial[1], no);
+        // Innermost K: filter coupled (no reuse), input multicast.
+        assert_eq!(r.temporal[0], no);
+        assert_eq!(r.temporal[1], Multicast);
+        // Spatial R: input not R-coupled -> multicast.
+        let r = find(Dim::R, Dim::K);
+        assert_eq!(r.spatial[1], Multicast);
+        // Spatial R is a reduction dim -> output spatially reduced.
+        assert_eq!(r.spatial[2], Reduction);
+        // Spatial Y row: filter multicast; innermost C: output reduction.
+        let r = find(Dim::Y, Dim::C);
+        assert_eq!(r.spatial[0], Multicast);
+        assert_eq!(r.temporal[2], Reduction);
+    }
+
+    #[test]
+    fn weight_stationary_filter_not_fresh() {
+        // X-P: filter fresh only on K/C advances, never on Y.
+        let layer = conv();
+        let r = styles::x_p().resolve(&layer, 64).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [f, _, _] = couplings(&layer);
+        for c in &classes {
+            if let Advanced::Temporal { idx } = c.advanced {
+                let d = s.dims[idx].dim;
+                let u = tensor_usage(&s, c, &f, TensorKind::Filter);
+                if d == Dim::Y {
+                    assert_eq!(u.fresh, 0.0, "filter must be stationary across Y steps");
+                }
+                if d == Dim::K || d == Dim::C {
+                    assert_eq!(u.fresh, 1.0, "filter fully fresh on {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_window_partial_input_reuse() {
+        // X-P: input fresh on Y advance = offset/size = 1/3 for R=3.
+        let layer = conv();
+        let r = styles::x_p().resolve(&layer, 64).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [_, i, _] = couplings(&layer);
+        let mut saw_y = false;
+        for c in &classes {
+            if let Advanced::Temporal { idx } = c.advanced {
+                if s.dims[idx].dim == Dim::Y && c.states[idx] == PosState::Normal {
+                    let u = tensor_usage(&s, c, &i, TensorKind::Input);
+                    // X-P folds X spatially; if X folds>1 the reset
+                    // restreams; with enough PEs folds==1 and the Y
+                    // advance shows the 1/3 halo reuse.
+                    if s.fold_total() == 1 {
+                        assert!((u.fresh - 1.0 / 3.0).abs() < 1e-9, "fresh={}", u.fresh);
+                    }
+                    saw_y = true;
+                }
+            }
+        }
+        assert!(saw_y);
+    }
+
+    #[test]
+    fn c_spatial_reduces_outputs() {
+        // C-P: outputs spatially reduced across C-parallel units.
+        let layer = conv();
+        let r = styles::c_p().resolve(&layer, 64).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [_, _, o] = couplings(&layer);
+        let u = tensor_usage(&s, &classes[0], &o, TensorKind::Output);
+        assert!(u.spatially_reduced);
+        assert_eq!(u.unique_union, u.footprint_unit); // invariant across units
+    }
+
+    #[test]
+    fn k_spatial_outputs_disjoint() {
+        let layer = conv();
+        let r = styles::kc_p().resolve(&layer, 256).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [_, _, o] = couplings(&layer);
+        let c0 = &classes[0];
+        let u = tensor_usage(&s, c0, &o, TensorKind::Output);
+        assert!(!u.spatially_reduced);
+        assert_eq!(u.unique_union, u.footprint_unit * c0.active);
+    }
+
+    #[test]
+    fn input_multicast_when_k_spatial() {
+        let layer = conv();
+        let r = styles::kc_p().resolve(&layer, 256).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [_, i, _] = couplings(&layer);
+        let u = tensor_usage(&s, &classes[0], &i, TensorKind::Input);
+        assert_eq!(u.unique_union, u.footprint_unit, "input identical across K units");
+    }
+
+    #[test]
+    fn halo_collapses_union() {
+        // X-P: X spatial size S=3 offset 1 -> union over a units =
+        // (a-1) + 3 << 3a.
+        let layer = conv();
+        let r = styles::x_p().resolve(&layer, 64).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        let classes = transition_classes(&s).unwrap();
+        let [_, i, _] = couplings(&layer);
+        let c0 = &classes[0];
+        let u = tensor_usage(&s, c0, &i, TensorKind::Input);
+        let a = c0.active;
+        // Footprint along X = 3, union along X = (a-1)+3; other dims equal.
+        assert_eq!(u.unique_union * 3, u.footprint_unit * ((a - 1) + 3));
+    }
+
+    #[test]
+    fn psum_revisit_factors() {
+        let layer = conv();
+        // X-P: C iterates outside Y (innermost advancing = X-fold/Y):
+        // every output revisited C times.
+        let r = styles::x_p().resolve(&layer, 64).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        assert_eq!(psum_revisits(&s, &layer), layer.c);
+        // C-P: C is spatial (inside nothing temporal) -> innermost
+        // advancing loops are Y/X; no reduction loop outer to them except
+        // none (K outermost is advancing; C is the fold, which sits at
+        // the spatial map position - innermost). Revisits = 1.
+        let r = styles::c_p().resolve(&layer, 256).unwrap();
+        let s = build_schedule(&r.levels[0], &r.levels[0].parent_tile, &layer).unwrap();
+        assert_eq!(psum_revisits(&s, &layer), 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Area and power regression models for the DSE (paper §5.2).
+//!
+//! "For the cost of building blocks, we implement float/fixed point
+//! multiplier and adder, bus, bus arbiter, and global/local scratchpad in
+//! RTL and synthesize them using 28nm technology. For bus and arbiter
+//! cost, we fit the costs into a linear and quadratic model" — we
+//! reproduce exactly those regression *forms* with representative 28 nm
+//! constants (substitution documented in DESIGN.md §4):
+//!
+//! * 16-bit MAC PE (mult + adder + control): ~1600 um², ~0.12 mW static+
+//!   dynamic at 1 GHz nominal activity.
+//! * SRAM: ~0.35 um²/bit macro density plus periphery ≈ linear in bits.
+//! * Bus: linear in width (wires). Arbiter: quadratic in requesters
+//!   (matrix arbiter).
+//!
+//! The Fig 13 budget (Eyeriss chip: 16 mm², 450 mW) sits in the middle of
+//! this model's reachable space, which is what the experiment needs.
+
+/// Area/power of one candidate design. Units: mm² and mW.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaPower {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+}
+
+/// Regression constants (28 nm).
+pub mod consts {
+    /// PE (MAC + pipeline registers + local control), mm².
+    pub const PE_AREA_MM2: f64 = 0.0016;
+    /// PE power at full utilization, mW.
+    pub const PE_POWER_MW: f64 = 0.12;
+    /// SRAM area per element (2 B = 16 bit at 0.35 um²/bit + periphery).
+    pub const SRAM_AREA_MM2_PER_EL: f64 = 7.0e-6;
+    /// SRAM leakage+dynamic power per element, mW.
+    pub const SRAM_POWER_MW_PER_EL: f64 = 2.2e-4;
+    /// Bus: linear in width (elements/cycle of bandwidth), mm² per lane.
+    pub const BUS_AREA_MM2_PER_LANE: f64 = 0.004;
+    /// Bus power per lane, mW.
+    pub const BUS_POWER_MW_PER_LANE: f64 = 0.8;
+    /// Matrix arbiter: quadratic in requesters. mm² per grant-pair.
+    pub const ARB_AREA_MM2_PER_PAIR: f64 = 1.0e-7;
+    /// Arbiter power per grant-pair, mW.
+    pub const ARB_POWER_MW_PER_PAIR: f64 = 2.0e-5;
+}
+
+/// Evaluate the regression model for a design: `pes` PEs, per-PE L1 of
+/// `l1_elements`, shared L2 of `l2_elements`, NoC of `bw` lanes.
+pub fn evaluate(pes: u64, l1_elements: u64, l2_elements: u64, bw: u64) -> AreaPower {
+    use consts::*;
+    let pes_f = pes as f64;
+    let l1_total = (l1_elements * pes) as f64;
+    let l2_f = l2_elements as f64;
+    let bw_f = bw as f64;
+    // Arbiter arbitrates `pes` requesters onto the bus: quadratic.
+    let arb_pairs = pes_f * pes_f;
+    AreaPower {
+        area_mm2: pes_f * PE_AREA_MM2
+            + l1_total * SRAM_AREA_MM2_PER_EL
+            + l2_f * SRAM_AREA_MM2_PER_EL
+            + bw_f * BUS_AREA_MM2_PER_LANE
+            + arb_pairs * ARB_AREA_MM2_PER_PAIR,
+        power_mw: pes_f * PE_POWER_MW
+            + l1_total * SRAM_POWER_MW_PER_EL
+            + l2_f * SRAM_POWER_MW_PER_EL
+            + bw_f * BUS_POWER_MW_PER_LANE
+            + arb_pairs * ARB_POWER_MW_PER_PAIR,
+    }
+}
+
+/// Kernel-facing coefficient vector for the AOT evaluator, ordered as
+/// [pe_area, sram_area_per_el, bus_area_per_lane, arb_area_per_pair,
+///  pe_power, sram_power_per_el, bus_power_per_lane, arb_power_per_pair].
+pub fn coefficients() -> [f64; 8] {
+    use consts::*;
+    [
+        PE_AREA_MM2,
+        SRAM_AREA_MM2_PER_EL,
+        BUS_AREA_MM2_PER_LANE,
+        ARB_AREA_MM2_PER_PAIR,
+        PE_POWER_MW,
+        SRAM_POWER_MW_PER_EL,
+        BUS_POWER_MW_PER_LANE,
+        ARB_POWER_MW_PER_PAIR,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_scale_design_fits_budget() {
+        // 168 PEs, 0.5KB L1 each, 100KB L2, 12-lane NoC should sit well
+        // inside 16 mm2 / 450 mW (Eyeriss-like).
+        let ap = evaluate(168, 256, 51_200, 12);
+        assert!(ap.area_mm2 < 16.0, "area {}", ap.area_mm2);
+        assert!(ap.power_mw < 450.0, "power {}", ap.power_mw);
+    }
+
+    #[test]
+    fn big_designs_exceed_budget() {
+        let ap = evaluate(4096, 4096, 4_000_000, 256);
+        assert!(ap.area_mm2 > 16.0 || ap.power_mw > 450.0);
+    }
+
+    #[test]
+    fn monotone_in_every_parameter() {
+        let base = evaluate(128, 512, 100_000, 16);
+        assert!(evaluate(256, 512, 100_000, 16).area_mm2 > base.area_mm2);
+        assert!(evaluate(128, 1024, 100_000, 16).area_mm2 > base.area_mm2);
+        assert!(evaluate(128, 512, 200_000, 16).power_mw > base.power_mw);
+        assert!(evaluate(128, 512, 100_000, 32).power_mw > base.power_mw);
+    }
+
+    #[test]
+    fn arbiter_is_quadratic() {
+        use consts::*;
+        let a1 = evaluate(100, 1, 1, 1).area_mm2;
+        let a2 = evaluate(200, 1, 1, 1).area_mm2;
+        let arb1 = 100.0 * 100.0 * ARB_AREA_MM2_PER_PAIR;
+        let arb2 = 200.0 * 200.0 * ARB_AREA_MM2_PER_PAIR;
+        let lin = 100.0 * PE_AREA_MM2 + 100.0 * SRAM_AREA_MM2_PER_EL;
+        assert!((a2 - a1 - (arb2 - arb1) - lin).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,113 @@
+//! Abstract accelerator configuration (paper Fig 2): PE array + L1
+//! scratchpads + shared L2 + NoC, with the reuse-support switches of
+//! Table 2/5.
+
+use anyhow::{ensure, Result};
+
+/// How spatial reduction is implemented (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReductionSupport {
+    /// No hardware support: psums travel to the parent buffer and are
+    /// merged by read-modify-write there.
+    None,
+    /// Adder tree: log2(fan-in) pipeline stages.
+    Tree,
+    /// Reduce-and-forward chain (systolic): fan-in - 1 forwarding hops.
+    Forward,
+}
+
+/// One accelerator design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Total processing elements.
+    pub num_pes: u64,
+    /// Per-PE L1 scratchpad capacity, in data elements.
+    pub l1_size: u64,
+    /// Shared L2 buffer capacity, in data elements.
+    pub l2_size: u64,
+    /// NoC bandwidth: data elements per cycle deliverable from/to L2.
+    pub noc_bandwidth: u64,
+    /// NoC average latency in cycles (the pipe model's length, §4.2).
+    pub noc_latency: u64,
+    /// Spatial multicast support (fan-out NoC). Without it, multicast
+    /// traffic is replicated per destination (Table 5 "No multicast").
+    pub multicast: bool,
+    /// Spatial reduction support (Table 5 "No Sp. reduction").
+    pub reduction: ReductionSupport,
+    /// MACs per PE per cycle.
+    pub pe_throughput: u64,
+    /// Clock, used only to convert cycles to seconds in reports.
+    pub clock_ghz: f64,
+}
+
+impl HwConfig {
+    /// The 256-PE / 32 GBps configuration of Fig 10 (32 GBps at 1 GHz and
+    /// 2-byte elements = 16 elements/cycle).
+    pub fn fig10_default() -> HwConfig {
+        HwConfig {
+            num_pes: 256,
+            l1_size: 1024,     // 2 KB of 2-byte elements (paper's L1)
+            l2_size: 524_288,  // 1 MB of 2-byte elements (paper's L2)
+            noc_bandwidth: 16,
+            noc_latency: 2,
+            multicast: true,
+            reduction: ReductionSupport::Tree,
+            pe_throughput: 1,
+            clock_ghz: 1.0,
+        }
+    }
+
+    /// MAERI-like 64-PE config used by the Fig 9 validation.
+    pub fn maeri_64() -> HwConfig {
+        HwConfig { num_pes: 64, noc_bandwidth: 16, ..HwConfig::fig10_default() }
+    }
+
+    /// Eyeriss-like 168-PE config used by the Fig 9 validation.
+    pub fn eyeriss_168() -> HwConfig {
+        HwConfig {
+            num_pes: 168,
+            // Two-level hierarchical bus with dedicated channels per
+            // tensor — §4.2 models it as ~3x bandwidth.
+            noc_bandwidth: 12,
+            ..HwConfig::fig10_default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.num_pes >= 1, "num_pes must be >= 1");
+        ensure!(self.noc_bandwidth >= 1, "noc_bandwidth must be >= 1");
+        ensure!(self.pe_throughput >= 1, "pe_throughput must be >= 1");
+        ensure!(self.l1_size >= 1 && self.l2_size >= 1, "buffer sizes must be >= 1");
+        Ok(())
+    }
+
+    /// Convert cycles to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e9) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        HwConfig::fig10_default().validate().unwrap();
+        HwConfig::maeri_64().validate().unwrap();
+        HwConfig::eyeriss_168().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = HwConfig::fig10_default();
+        c.num_pes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cycle_conversion() {
+        let c = HwConfig::fig10_default();
+        assert!((c.cycles_to_ms(1e9) - 1000.0).abs() < 1e-9);
+    }
+}

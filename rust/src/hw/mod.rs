@@ -1,0 +1,6 @@
+//! Hardware models: accelerator configuration, the Cacti-fit energy
+//! model, and the area/power regression models the DSE uses (§5.2).
+
+pub mod area;
+pub mod config;
+pub mod energy;

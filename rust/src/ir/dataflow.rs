@@ -1,0 +1,485 @@
+//! A dataflow: an ordered list of directives, split into cluster levels,
+//! with validation and resolution against a concrete layer.
+//!
+//! Semantics (DESIGN.md §6.2, derived from paper §3):
+//!
+//! * Directives are listed outermost-first. `Cluster(n)` closes the
+//!   current level; directives above it map across the logical clusters it
+//!   creates, directives below map within one cluster.
+//! * Level 0 distributes across `⌊PEs / Π cluster_sizes⌋` top-level
+//!   clusters; level `i ≥ 1` across `cluster_size_i` sub-units.
+//! * Each level receives a *parent tile* per dimension (level 0: the full
+//!   layer). `Sz(d)` extents resolve against the parent tile, so the same
+//!   dataflow text adapts to any layer — the paper's dataflow-vs-mapping
+//!   distinction.
+//! * Dimensions a level does not mention are auto-augmented as fully
+//!   unrolled `TemporalMap(tile, tile)` (the paper's cluster analysis
+//!   engine "augment[s] the given dataflow descriptions for missing
+//!   directives").
+//! * Consecutive `SpatialMap`s within one level distribute **jointly**:
+//!   the same sub-cluster index drives both dims (the Eyeriss diagonal of
+//!   Fig 6 — `SpatialMap(1,1) Y; SpatialMap(1,1) R`).
+
+use std::fmt;
+
+use anyhow::{ensure, Context, Result};
+
+use super::dims::{Dim, DimMap, ALL_DIMS};
+use super::directive::{Directive, Extent, ResolvedMap};
+use crate::model::layer::Layer;
+
+/// A dataflow description: named, ordered directives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dataflow {
+    pub name: String,
+    pub directives: Vec<Directive>,
+}
+
+/// One cluster level of a dataflow, before resolution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LevelSpec {
+    /// Maps in data-movement order (outermost first).
+    pub maps: Vec<Directive>,
+    /// Size of the cluster created *below* this level (None for the
+    /// innermost level, whose units are PEs).
+    pub cluster_below: Option<Extent>,
+}
+
+/// A fully resolved cluster level for a specific layer + PE count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResolvedLevel {
+    /// Number of parallel sub-units at this level (clusters or PEs).
+    pub units: u64,
+    /// Maps in order, outermost first. Every canonical dim appears
+    /// exactly once (auto-augmented maps included).
+    pub maps: Vec<ResolvedMap>,
+    /// The per-dimension tile this level hands each sub-unit per step
+    /// (= resolved map size, clamped to the parent tile).
+    pub tile: DimMap<u64>,
+    /// The parent tile this level iterates over.
+    pub parent_tile: DimMap<u64>,
+}
+
+impl ResolvedLevel {
+    /// The spatial maps of this level (jointly distributed).
+    pub fn spatial_maps(&self) -> Vec<ResolvedMap> {
+        self.maps.iter().copied().filter(|m| m.spatial).collect()
+    }
+
+    /// Temporal maps, outermost first.
+    pub fn temporal_maps(&self) -> Vec<ResolvedMap> {
+        self.maps.iter().copied().filter(|m| !m.spatial).collect()
+    }
+
+    /// The map for a given dim (always present after augmentation).
+    pub fn map_of(&self, d: Dim) -> ResolvedMap {
+        self.maps
+            .iter()
+            .copied()
+            .find(|m| m.dim == d)
+            .expect("augmented level must contain every dim")
+    }
+}
+
+/// A dataflow resolved against (layer, total PEs): one [`ResolvedLevel`]
+/// per cluster level, outermost first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResolvedDataflow {
+    pub name: String,
+    pub levels: Vec<ResolvedLevel>,
+}
+
+impl ResolvedDataflow {
+    /// Total PEs actually addressable by the resolved hierarchy
+    /// (Π units over levels).
+    pub fn addressable_pes(&self) -> u64 {
+        self.levels.iter().map(|l| l.units).product()
+    }
+}
+
+impl Dataflow {
+    pub fn new(name: &str, directives: Vec<Directive>) -> Dataflow {
+        Dataflow { name: name.to_string(), directives }
+    }
+
+    /// Split the directive list into cluster levels.
+    pub fn levels(&self) -> Result<Vec<LevelSpec>> {
+        let mut levels = Vec::new();
+        let mut current = Vec::new();
+        for d in &self.directives {
+            match d {
+                Directive::Cluster { size } => {
+                    ensure!(
+                        !current.is_empty(),
+                        "dataflow '{}': Cluster directive with no maps above it",
+                        self.name
+                    );
+                    levels.push(LevelSpec { maps: current, cluster_below: Some(*size) });
+                    current = Vec::new();
+                }
+                other => current.push(other.clone()),
+            }
+        }
+        ensure!(
+            !current.is_empty(),
+            "dataflow '{}': trailing Cluster directive with no maps below it",
+            self.name
+        );
+        levels.push(LevelSpec { maps: current, cluster_below: None });
+        Ok(levels)
+    }
+
+    /// Structural validation that does not need a layer: each level maps
+    /// each dim at most once; map directives only; at least one spatial or
+    /// temporal map per level.
+    pub fn validate_structure(&self) -> Result<()> {
+        for (li, level) in self.levels()?.iter().enumerate() {
+            let mut seen: Vec<Dim> = Vec::new();
+            for m in &level.maps {
+                let d = m
+                    .dim()
+                    .with_context(|| format!("dataflow '{}': non-map directive inside level {li}", self.name))?;
+                ensure!(
+                    !seen.contains(&d),
+                    "dataflow '{}': dim {d} mapped twice in level {li}",
+                    self.name
+                );
+                seen.push(d);
+            }
+            // Spatial maps must be consecutive (joint distribution shares
+            // one sub-cluster index; interleaving with temporal maps would
+            // be ambiguous).
+            let spatial_idx: Vec<usize> = level
+                .maps
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.is_spatial())
+                .map(|(i, _)| i)
+                .collect();
+            for w in spatial_idx.windows(2) {
+                ensure!(
+                    w[1] == w[0] + 1,
+                    "dataflow '{}': spatial maps in level {li} must be consecutive (joint distribution)",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve against a layer and a total PE count, producing concrete
+    /// per-level maps, tiles and unit counts. Also validates coverage
+    /// (every output element is produced by some step) and PE divisibility.
+    pub fn resolve(&self, layer: &Layer, total_pes: u64) -> Result<ResolvedDataflow> {
+        self.validate_structure()?;
+        ensure!(total_pes > 0, "resolve: total_pes must be > 0");
+        let specs = self.levels()?;
+
+        // --- Unit counts per level ------------------------------------
+        // Cluster extents resolve against the *layer* (Table 3 uses
+        // Cluster(Sz(R))); level-0 units = floor(P / product(cluster sizes)).
+        let layer_dim = |d: Dim| layer.dim(d);
+        let mut cluster_sizes = Vec::new();
+        for spec in &specs {
+            if let Some(ext) = &spec.cluster_below {
+                let sz = ext.resolve(&layer_dim)?;
+                ensure!(sz > 0, "dataflow '{}': Cluster size resolved to 0", self.name);
+                cluster_sizes.push(sz);
+            }
+        }
+        let inner_product: u64 = cluster_sizes.iter().product();
+        ensure!(
+            inner_product <= total_pes,
+            "dataflow '{}': cluster sizes (product {inner_product}) exceed total PEs {total_pes}",
+            self.name
+        );
+        let mut units_per_level = vec![(total_pes / inner_product).max(1)];
+        units_per_level.extend(cluster_sizes.iter().copied());
+
+        // --- Per-level resolution --------------------------------------
+        let mut parent_tile: DimMap<u64> = DimMap::default();
+        for d in ALL_DIMS {
+            parent_tile.set(d, layer.dim(d));
+        }
+        let mut levels = Vec::new();
+        for (li, spec) in specs.iter().enumerate() {
+            let level = resolve_level(
+                &self.name,
+                li,
+                spec,
+                &parent_tile,
+                units_per_level[li],
+                layer,
+            )?;
+            parent_tile = level.tile;
+            levels.push(level);
+        }
+
+        let resolved = ResolvedDataflow { name: self.name.clone(), levels };
+        validate_coverage(&resolved, layer).with_context(|| {
+            format!("dataflow '{}' fails coverage validation on layer '{}'", self.name, layer.name)
+        })?;
+        Ok(resolved)
+    }
+}
+
+impl fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Dataflow {} {{", self.name)?;
+        for d in &self.directives {
+            writeln!(f, "  {d};")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Resolve one level: concrete extents, stride handling, augmentation of
+/// missing dims as fully-unrolled temporal maps.
+fn resolve_level(
+    name: &str,
+    li: usize,
+    spec: &LevelSpec,
+    parent_tile: &DimMap<u64>,
+    units: u64,
+    _layer: &Layer,
+) -> Result<ResolvedLevel> {
+    let parent = |d: Dim| parent_tile.get(d);
+    let mut maps: Vec<ResolvedMap> = Vec::new();
+    for m in &spec.maps {
+        let (size_ext, offset_ext, dim, spatial) = match m {
+            Directive::SpatialMap { size, offset, dim } => (size, offset, *dim, true),
+            Directive::TemporalMap { size, offset, dim } => (size, offset, *dim, false),
+            Directive::Cluster { .. } => unreachable!("validated earlier"),
+        };
+        let total = parent(dim);
+        let size = size_ext.resolve(&parent)?.min(total.max(1)).max(1);
+        let offset = offset_ext.resolve(&parent)?;
+        ensure!(size > 0, "dataflow '{name}': level {li} {dim} map size 0");
+        ensure!(offset > 0, "dataflow '{name}': level {li} {dim} map offset 0");
+        // Stride handling happens in the schedule builder (the cluster
+        // analysis engine "augments the given dataflow descriptions for
+        // ... stride handling"): windowed offsets are derived from the
+        // window geometry there, so user offsets stay untouched here.
+        maps.push(ResolvedMap { dim, size, offset, spatial });
+    }
+
+    // Augment missing dims as fully-unrolled temporal maps, appended at
+    // the innermost position in canonical order. A fully-unrolled map has
+    // exactly one step, so its position among other unrolled maps does
+    // not affect the schedule; placing them innermost matches MAESTRO's
+    // convention (Fig 6 directives "with asterisks").
+    for d in ALL_DIMS {
+        if !maps.iter().any(|m| m.dim == d) {
+            let t = parent(d).max(1);
+            maps.push(ResolvedMap { dim: d, size: t, offset: t, spatial: false });
+        }
+    }
+
+    // The tile handed to each sub-unit per step = map size per dim.
+    let mut tile: DimMap<u64> = DimMap::default();
+    for m in &maps {
+        tile.set(m.dim, m.size);
+    }
+
+    Ok(ResolvedLevel { units, maps, tile, parent_tile: *parent_tile, })
+}
+
+/// Coverage validation: every map must cover its parent-tile extent
+/// without skipping indices a downstream consumer needs.
+///
+/// * Non-windowed dims: consecutive positions must not leave gaps
+///   (`offset ≤ size`).
+/// * Windowed activation dims (Y with R below, X with S below): output
+///   positions must be contiguous (`offset ≤ size − window + 1`, where
+///   `window` is the parent R/S tile iterated at or below this level),
+///   scaled by stride.
+fn validate_coverage(rdf: &ResolvedDataflow, layer: &Layer) -> Result<()> {
+    for (li, level) in rdf.levels.iter().enumerate() {
+        for m in &level.maps {
+            let total = level.parent_tile.get(m.dim);
+            if m.size >= total {
+                continue; // single position, trivially covered
+            }
+            let window = match m.dim.window_partner() {
+                Some(w) if layer.windowed(m.dim) => level.parent_tile.get(w).min(m.size),
+                _ => 1,
+            };
+            // Windowed dims: a position covers (size - window + 1)
+            // output steps, so a larger offset skips outputs. (Stride is
+            // applied in the schedule builder; user offsets are in
+            // output steps.)
+            let max_gapless = (m.size - window + 1).max(1);
+            ensure!(
+                m.offset <= max_gapless,
+                "level {li}: {m} skips data over extent {total} (offset {} > max gapless step {max_gapless})",
+                m.offset
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::Layer;
+
+    fn conv_layer() -> Layer {
+        Layer::conv2d("t", 1, 16, 8, 10, 10, 3, 3, 1)
+    }
+
+    fn df_simple() -> Dataflow {
+        // Output-stationary 1D-ish: spatial over K, temporal over C.
+        Dataflow::new(
+            "simple",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::lit(1), Extent::lit(1), Dim::C),
+                Directive::temporal(Extent::sz(Dim::R), Extent::lit(1), Dim::Y),
+                Directive::temporal(Extent::sz(Dim::S), Extent::lit(1), Dim::X),
+            ],
+        )
+    }
+
+    #[test]
+    fn levels_split_on_cluster() {
+        let df = Dataflow::new(
+            "two-level",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::cluster(Extent::lit(4)),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C),
+            ],
+        );
+        let levels = df.levels().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert!(levels[0].cluster_below.is_some());
+        assert!(levels[1].cluster_below.is_none());
+    }
+
+    #[test]
+    fn trailing_cluster_rejected() {
+        let df = Dataflow::new(
+            "bad",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::cluster(Extent::lit(4)),
+            ],
+        );
+        assert!(df.levels().is_err());
+    }
+
+    #[test]
+    fn duplicate_dim_rejected() {
+        let df = Dataflow::new(
+            "dup",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::lit(1), Extent::lit(1), Dim::K),
+            ],
+        );
+        assert!(df.validate_structure().is_err());
+    }
+
+    #[test]
+    fn nonconsecutive_spatial_rejected() {
+        let df = Dataflow::new(
+            "split-spatial",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::Y),
+                Directive::temporal(Extent::lit(1), Extent::lit(1), Dim::C),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::R),
+            ],
+        );
+        assert!(df.validate_structure().is_err());
+    }
+
+    #[test]
+    fn resolve_augments_missing_dims() {
+        let layer = conv_layer();
+        let r = df_simple().resolve(&layer, 8).unwrap();
+        assert_eq!(r.levels.len(), 1);
+        let level = &r.levels[0];
+        // All 7 dims present after augmentation.
+        assert_eq!(level.maps.len(), 7);
+        // N, R, S were missing: fully unrolled.
+        assert_eq!(level.map_of(Dim::R).size, 3);
+        assert_eq!(level.map_of(Dim::N).size, 1);
+        assert_eq!(level.units, 8);
+    }
+
+    #[test]
+    fn resolve_two_level_units() {
+        let layer = conv_layer();
+        let df = Dataflow::new(
+            "kc",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::sz(Dim::R), Extent::lit(1), Dim::Y),
+                Directive::temporal(Extent::sz(Dim::S), Extent::lit(1), Dim::X),
+                Directive::cluster(Extent::lit(4)),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C),
+            ],
+        );
+        let r = df.resolve(&layer, 64).unwrap();
+        assert_eq!(r.levels.len(), 2);
+        assert_eq!(r.levels[0].units, 16); // 64 / 4
+        assert_eq!(r.levels[1].units, 4);
+        assert_eq!(r.addressable_pes(), 64);
+        // Inner level parent tile: C tile from level 0 = full C (augmented).
+        assert_eq!(r.levels[1].parent_tile.get(Dim::C), 8);
+    }
+
+    #[test]
+    fn cluster_larger_than_pes_rejected() {
+        let layer = conv_layer();
+        let df = Dataflow::new(
+            "big-cluster",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::cluster(Extent::lit(128)),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C),
+            ],
+        );
+        assert!(df.resolve(&layer, 64).is_err());
+    }
+
+    #[test]
+    fn coverage_rejects_gapping_offset() {
+        let layer = conv_layer();
+        // Y window of 3 (R=3) but offset 4: output rows skipped.
+        let df = Dataflow::new(
+            "gappy",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::sz(Dim::R), Extent::lit(4), Dim::Y),
+            ],
+        );
+        assert!(df.resolve(&layer, 8).is_err());
+    }
+
+    #[test]
+    fn stride_kept_for_schedule_builder() {
+        let layer = Layer::conv2d("s2", 1, 16, 8, 11, 11, 3, 3, 2);
+        let df = Dataflow::new(
+            "win",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::sz(Dim::R), Extent::lit(1), Dim::Y),
+                Directive::temporal(Extent::sz(Dim::S), Extent::lit(1), Dim::X),
+            ],
+        );
+        let r = df.resolve(&layer, 8).unwrap();
+        // Resolution keeps the user's slide offset; the schedule builder
+        // derives the stride-aware step (engine::mapping tests cover it).
+        assert_eq!(r.levels[0].map_of(Dim::Y).offset, 1);
+        assert_eq!(r.levels[0].map_of(Dim::Y).size, 3);
+    }
+
+    #[test]
+    fn display_roundtrips_shape() {
+        let s = df_simple().to_string();
+        assert!(s.contains("SpatialMap(1,1) K"));
+        assert!(s.contains("TemporalMap(Sz(R),1) Y"));
+    }
+}

@@ -1,0 +1,180 @@
+//! The seven canonical DNN tensor dimensions (paper Figure 1).
+//!
+//! MAESTRO uses an *input-centric* view: `Y`/`X` index input activation
+//! rows/columns; output rows/columns are derived as `Y' = (Y - R)/stride
+//! + 1` (§4.1 "it aligns with MAESTRO's input-centric cost model").
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// A DNN tensor dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Batch.
+    N,
+    /// Output channels.
+    K,
+    /// Input channels.
+    C,
+    /// Input activation rows.
+    Y,
+    /// Input activation columns.
+    X,
+    /// Filter rows.
+    R,
+    /// Filter columns.
+    S,
+}
+
+/// All dimensions in canonical order (outermost-first convention used by
+/// the default loop nest N → K → C → Y → X → R → S).
+pub const ALL_DIMS: [Dim; 7] = [Dim::N, Dim::K, Dim::C, Dim::Y, Dim::X, Dim::R, Dim::S];
+
+impl Dim {
+    /// Parse from the DSL's single-letter name.
+    pub fn parse(s: &str) -> Result<Dim> {
+        Ok(match s.trim() {
+            "N" => Dim::N,
+            "K" => Dim::K,
+            "C" => Dim::C,
+            "Y" => Dim::Y,
+            "X" => Dim::X,
+            "R" => Dim::R,
+            "S" => Dim::S,
+            // Output-centric aliases: Y'/X' are accepted and normalized to
+            // the input-centric Y/X (paper Table 1: "X/Y should be
+            // interpreted as X'/Y' as appropriate").
+            "Y'" => Dim::Y,
+            "X'" => Dim::X,
+            other => bail!("unknown dimension '{other}' (expected N,K,C,Y,X,R,S)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dim::N => "N",
+            Dim::K => "K",
+            Dim::C => "C",
+            Dim::Y => "Y",
+            Dim::X => "X",
+            Dim::R => "R",
+            Dim::S => "S",
+        }
+    }
+
+    /// The sliding-window partner: Y is windowed by R, X by S.
+    pub fn window_partner(&self) -> Option<Dim> {
+        match self {
+            Dim::Y => Some(Dim::R),
+            Dim::X => Some(Dim::S),
+            _ => None,
+        }
+    }
+
+    /// True for the filter dims that window an activation dim.
+    pub fn is_window(&self) -> bool {
+        matches!(self, Dim::R | Dim::S)
+    }
+
+    /// Index into `ALL_DIMS` (stable across the codebase; used for dense
+    /// per-dimension arrays in the hot engines).
+    pub fn index(&self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::K => 1,
+            Dim::C => 2,
+            Dim::Y => 3,
+            Dim::X => 4,
+            Dim::R => 5,
+            Dim::S => 6,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A dense per-dimension map (one slot per canonical dim). Cheaper and
+/// more ergonomic than `HashMap<Dim, T>` in the analysis hot paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimMap<T> {
+    slots: [T; 7],
+}
+
+impl<T: Copy + Default> Default for DimMap<T> {
+    fn default() -> Self {
+        DimMap { slots: [T::default(); 7] }
+    }
+}
+
+impl<T: Copy> DimMap<T> {
+    pub fn filled(value: T) -> Self {
+        DimMap { slots: [value; 7] }
+    }
+
+    pub fn get(&self, d: Dim) -> T {
+        self.slots[d.index()]
+    }
+
+    pub fn set(&mut self, d: Dim, v: T) {
+        self.slots[d.index()] = v;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Dim, T)> + '_ {
+        ALL_DIMS.iter().map(move |&d| (d, self.get(d)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in ALL_DIMS {
+            assert_eq!(Dim::parse(d.name()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn output_aliases_normalize() {
+        assert_eq!(Dim::parse("Y'").unwrap(), Dim::Y);
+        assert_eq!(Dim::parse("X'").unwrap(), Dim::X);
+    }
+
+    #[test]
+    fn unknown_dim_errors() {
+        assert!(Dim::parse("Z").is_err());
+    }
+
+    #[test]
+    fn window_partners() {
+        assert_eq!(Dim::Y.window_partner(), Some(Dim::R));
+        assert_eq!(Dim::X.window_partner(), Some(Dim::S));
+        assert_eq!(Dim::K.window_partner(), None);
+        assert!(Dim::R.is_window() && Dim::S.is_window());
+    }
+
+    #[test]
+    fn dimmap_roundtrip() {
+        let mut m: DimMap<u64> = DimMap::default();
+        for (i, d) in ALL_DIMS.iter().enumerate() {
+            m.set(*d, i as u64 * 10);
+        }
+        for (i, d) in ALL_DIMS.iter().enumerate() {
+            assert_eq!(m.get(*d), i as u64 * 10);
+        }
+        assert_eq!(m.iter().count(), 7);
+    }
+
+    #[test]
+    fn indices_are_canonical() {
+        for (i, d) in ALL_DIMS.iter().enumerate() {
+            assert_eq!(d.index(), i);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! The data-centric directives (paper §3.1): `SpatialMap(size, offset) d`,
+//! `TemporalMap(size, offset) d`, and `Cluster(n)`.
+//!
+//! Sizes may be *symbolic* (`Sz(R)` in Table 3): they resolve against a
+//! concrete layer's dimension sizes at analysis time, which is exactly the
+//! paper's dataflow-vs-mapping distinction (§2.4 — schedules that differ
+//! only in concrete bounds are instances of the same dataflow).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::dims::Dim;
+
+/// A map size/offset that is either a literal or a reference to a layer
+/// dimension's full size (`Sz(R)`), optionally with an additive adjustment
+/// (Table 3 YX-P uses `8 + Sz(S) - 1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Extent {
+    /// A literal count.
+    Lit(u64),
+    /// `Sz(dim) + adjust` — resolved against the layer at analysis time.
+    /// `adjust` may be negative (e.g. `Sz(S) - 1`).
+    SzOf { dim: Dim, adjust: i64 },
+}
+
+impl Extent {
+    pub fn lit(v: u64) -> Extent {
+        Extent::Lit(v)
+    }
+
+    pub fn sz(dim: Dim) -> Extent {
+        Extent::SzOf { dim, adjust: 0 }
+    }
+
+    pub fn sz_plus(dim: Dim, adjust: i64) -> Extent {
+        Extent::SzOf { dim, adjust }
+    }
+
+    /// Resolve against a layer-dimension lookup.
+    pub fn resolve(&self, dim_size: &dyn Fn(Dim) -> u64) -> Result<u64> {
+        match *self {
+            Extent::Lit(v) => Ok(v),
+            Extent::SzOf { dim, adjust } => {
+                let base = dim_size(dim) as i64 + adjust;
+                if base <= 0 {
+                    bail!("extent Sz({dim}){adjust:+} resolved to non-positive {base}");
+                }
+                Ok(base as u64)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Extent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Extent::Lit(v) => write!(f, "{v}"),
+            Extent::SzOf { dim, adjust } if adjust == 0 => write!(f, "Sz({dim})"),
+            Extent::SzOf { dim, adjust } => write!(f, "Sz({dim}){adjust:+}"),
+        }
+    }
+}
+
+/// One dataflow directive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Directive {
+    /// Distribute `dim` across sub-clusters: sub-cluster `p` covers
+    /// indices `[p*offset, p*offset + size)` (folding over time when
+    /// sub-clusters run out — §3.2).
+    SpatialMap { size: Extent, offset: Extent, dim: Dim },
+    /// Distribute `dim` across time steps within each sub-cluster; all
+    /// sub-clusters see identical indices per step.
+    TemporalMap { size: Extent, offset: Extent, dim: Dim },
+    /// Close the current cluster level: group the units below into
+    /// logical clusters of `size` (§3.2 "PE clustering").
+    Cluster { size: Extent },
+}
+
+impl Directive {
+    pub fn spatial(size: Extent, offset: Extent, dim: Dim) -> Directive {
+        Directive::SpatialMap { size, offset, dim }
+    }
+
+    pub fn temporal(size: Extent, offset: Extent, dim: Dim) -> Directive {
+        Directive::TemporalMap { size, offset, dim }
+    }
+
+    pub fn cluster(size: Extent) -> Directive {
+        Directive::Cluster { size }
+    }
+
+    /// The mapped dimension, if this is a map directive.
+    pub fn dim(&self) -> Option<Dim> {
+        match self {
+            Directive::SpatialMap { dim, .. } | Directive::TemporalMap { dim, .. } => Some(*dim),
+            Directive::Cluster { .. } => None,
+        }
+    }
+
+    pub fn is_spatial(&self) -> bool {
+        matches!(self, Directive::SpatialMap { .. })
+    }
+
+    pub fn is_temporal(&self) -> bool {
+        matches!(self, Directive::TemporalMap { .. })
+    }
+
+    pub fn is_cluster(&self) -> bool {
+        matches!(self, Directive::Cluster { .. })
+    }
+}
+
+impl fmt::Display for Directive {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Directive::SpatialMap { size, offset, dim } => {
+                write!(f, "SpatialMap({size},{offset}) {dim}")
+            }
+            Directive::TemporalMap { size, offset, dim } => {
+                write!(f, "TemporalMap({size},{offset}) {dim}")
+            }
+            Directive::Cluster { size } => write!(f, "Cluster({size})"),
+        }
+    }
+}
+
+/// A map directive with its extents resolved to concrete counts for a
+/// specific layer. This is what the analysis engines operate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolvedMap {
+    pub dim: Dim,
+    pub size: u64,
+    pub offset: u64,
+    pub spatial: bool,
+}
+
+impl ResolvedMap {
+    /// Number of map positions needed to cover a dimension of extent
+    /// `total`: full positions first, plus one partial *edge* position if
+    /// the tail is not covered. Matches §6.2 in DESIGN.md.
+    pub fn positions(&self, total: u64) -> MapPositions {
+        let size = self.size.min(total);
+        if size >= total {
+            return MapPositions { full: 1, edge_size: 0 };
+        }
+        // Positions whose window [p*offset, p*offset+size) fits entirely.
+        let full = (total - size) / self.offset + 1;
+        let covered = (full - 1) * self.offset + size;
+        let edge = total.saturating_sub(covered);
+        MapPositions { full, edge_size: edge.min(size) }
+    }
+}
+
+/// Coverage of a dimension by a map: `full` complete positions and an
+/// optional trailing partial position of `edge_size` indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MapPositions {
+    pub full: u64,
+    pub edge_size: u64,
+}
+
+impl MapPositions {
+    pub fn total(&self) -> u64 {
+        self.full + if self.edge_size > 0 { 1 } else { 0 }
+    }
+}
+
+impl fmt::Display for ResolvedMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = if self.spatial { "SpatialMap" } else { "TemporalMap" };
+        write!(f, "{kind}({},{}) {}", self.size, self.offset, self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dim6(_d: Dim) -> u64 {
+        6
+    }
+
+    #[test]
+    fn extent_resolution() {
+        assert_eq!(Extent::lit(4).resolve(&dim6).unwrap(), 4);
+        assert_eq!(Extent::sz(Dim::R).resolve(&dim6).unwrap(), 6);
+        assert_eq!(Extent::sz_plus(Dim::S, -1).resolve(&dim6).unwrap(), 5);
+        assert!(Extent::sz_plus(Dim::S, -6).resolve(&dim6).is_err());
+    }
+
+    #[test]
+    fn extent_display() {
+        assert_eq!(Extent::lit(3).to_string(), "3");
+        assert_eq!(Extent::sz(Dim::R).to_string(), "Sz(R)");
+        assert_eq!(Extent::sz_plus(Dim::S, -1).to_string(), "Sz(S)-1");
+        assert_eq!(Extent::sz_plus(Dim::X, 7).to_string(), "Sz(X)+7");
+    }
+
+    #[test]
+    fn directive_display() {
+        let d = Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K);
+        assert_eq!(d.to_string(), "SpatialMap(1,1) K");
+        let c = Directive::cluster(Extent::lit(64));
+        assert_eq!(c.to_string(), "Cluster(64)");
+    }
+
+    #[test]
+    fn positions_exact_cover() {
+        // size 2, offset 2 over extent 6: positions at 0,2,4 — all full.
+        let m = ResolvedMap { dim: Dim::X, size: 2, offset: 2, spatial: false };
+        let p = m.positions(6);
+        assert_eq!(p.full, 3);
+        assert_eq!(p.edge_size, 0);
+        assert_eq!(p.total(), 3);
+    }
+
+    #[test]
+    fn positions_with_edge() {
+        // size 2, offset 2 over extent 7: full at 0,2,4 then edge of 1 at 6.
+        let m = ResolvedMap { dim: Dim::X, size: 2, offset: 2, spatial: false };
+        let p = m.positions(7);
+        assert_eq!(p.full, 3);
+        assert_eq!(p.edge_size, 1);
+        assert_eq!(p.total(), 4);
+    }
+
+    #[test]
+    fn positions_overlapping_window() {
+        // Sliding window: size 3, offset 1 over extent 6: positions 0..=3 full.
+        let m = ResolvedMap { dim: Dim::Y, size: 3, offset: 1, spatial: false };
+        let p = m.positions(6);
+        assert_eq!(p.full, 4);
+        assert_eq!(p.edge_size, 0);
+    }
+
+    #[test]
+    fn positions_size_covers_all() {
+        let m = ResolvedMap { dim: Dim::C, size: 10, offset: 10, spatial: false };
+        let p = m.positions(6);
+        assert_eq!(p.full, 1);
+        assert_eq!(p.edge_size, 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Compute-centric loop-nest notation (paper §2.5) and its conversion to
+//! data-centric directives — the auto-generation path §3.2 envisions
+//! ("the data-centric representation could be either auto-generated from
+//! a loop nest version of the dataflow ... or manually written").
+//!
+//! A loop nest is an ordered list of loops, outermost first, each either
+//! `for` (temporal) or `parallel_for` (spatial), with a tile size. Tiled
+//! dims appear as two loops (outer tile loop + inner intra-tile loop);
+//! the conversion collapses the *innermost* occurrence of each dim into a
+//! map whose size is the tile extent and whose offset equals the tile
+//! step, and inserts `Cluster` boundaries at `parallel_for` transitions
+//! below the first spatial loop.
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use super::dataflow::Dataflow;
+use super::dims::Dim;
+use super::directive::{Directive, Extent};
+
+/// One loop in a compute-centric nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loop {
+    pub dim: Dim,
+    /// Trip extent of this loop in elements of `dim` (symbolic `Sz` loops
+    /// use the full dimension).
+    pub extent: Extent,
+    /// Step between consecutive iterations (= tile size of loops nested
+    /// inside over the same dim, or 1).
+    pub step: Extent,
+    /// `parallel_for` vs `for`.
+    pub parallel: bool,
+}
+
+/// A compute-centric schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopNest {
+    pub name: String,
+    pub loops: Vec<Loop>,
+}
+
+impl LoopNest {
+    pub fn new(name: &str, loops: Vec<Loop>) -> LoopNest {
+        LoopNest { name: name.into(), loops }
+    }
+
+    /// Convert into data-centric directives.
+    ///
+    /// Each loop becomes a map over its dim with `size = step_of_loop`
+    /// interpreted as the chunk handed downward and `offset = step`;
+    /// `parallel_for` becomes `SpatialMap`. A run of sequential loops
+    /// after a parallel run maps inside the same cluster level; a *new*
+    /// parallel run after sequential loops opens a new cluster level via
+    /// `Cluster`, whose size the caller supplies per level (hardware
+    /// fan-out is not part of the loop nest).
+    pub fn to_dataflow(&self, cluster_sizes: &[Extent]) -> Result<Dataflow> {
+        ensure!(!self.loops.is_empty(), "loop nest '{}' is empty", self.name);
+        let mut directives = Vec::new();
+        let mut cluster_iter = cluster_sizes.iter();
+        let mut prev_parallel = self.loops[0].parallel;
+        let mut seen_sequential_since_parallel = !self.loops[0].parallel;
+        for l in &self.loops {
+            // A parallel loop appearing after sequential loops (below an
+            // earlier parallel loop) starts a nested cluster level.
+            if l.parallel && !prev_parallel && seen_sequential_since_parallel && !directives.is_empty()
+                && directives.iter().any(|d: &Directive| d.is_spatial())
+            {
+                let size = cluster_iter
+                    .next()
+                    .copied()
+                    .unwrap_or(Extent::sz(l.dim));
+                directives.push(Directive::cluster(size));
+            }
+            let map = if l.parallel {
+                Directive::spatial(l.step, l.step, l.dim)
+            } else {
+                Directive::temporal(l.step, l.step, l.dim)
+            };
+            directives.push(map);
+            if l.parallel {
+                seen_sequential_since_parallel = false;
+            } else {
+                seen_sequential_since_parallel = true;
+            }
+            prev_parallel = l.parallel;
+        }
+        let df = Dataflow::new(&self.name, directives);
+        df.validate_structure()?;
+        Ok(df)
+    }
+}
+
+impl fmt::Display for LoopNest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "// loop nest {}", self.name)?;
+        for (i, l) in self.loops.iter().enumerate() {
+            let kw = if l.parallel { "parallel_for" } else { "for" };
+            writeln!(
+                f,
+                "{:indent$}{kw} {} in 0..{} step {}",
+                "",
+                l.dim,
+                l.extent,
+                l.step,
+                indent = i * 2
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse the textual loop-nest form:
+///
+/// ```text
+/// loopnest os-1d
+/// parallel_for X step 1
+/// for S step 1
+/// ```
+pub fn parse(text: &str) -> Result<LoopNest> {
+    let mut name = String::from("unnamed");
+    let mut loops = Vec::new();
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("loopnest ") {
+            name = rest.trim().into();
+            continue;
+        }
+        let (parallel, rest) = if let Some(r) = line.strip_prefix("parallel_for ") {
+            (true, r)
+        } else if let Some(r) = line.strip_prefix("for ") {
+            (false, r)
+        } else {
+            anyhow::bail!("loop nest line not understood: '{line}'");
+        };
+        let toks: Vec<&str> = rest.split_whitespace().collect();
+        ensure!(
+            toks.len() == 3 && toks[1] == "step",
+            "expected '<dim> step <n>': '{line}'"
+        );
+        let dim = Dim::parse(toks[0])?;
+        let step = super::parser::parse_extent(toks[2])?;
+        loops.push(Loop { dim, extent: Extent::sz(dim), step, parallel });
+    }
+    ensure!(!loops.is_empty(), "loop nest has no loops");
+    Ok(LoopNest::new(&name, loops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_output_stationary() {
+        // Figure 4(b): parallel over X' chunks, temporal over S.
+        let nest = LoopNest::new(
+            "os-1d",
+            vec![
+                Loop { dim: Dim::X, extent: Extent::sz(Dim::X), step: Extent::lit(2), parallel: true },
+                Loop { dim: Dim::S, extent: Extent::sz(Dim::S), step: Extent::lit(3), parallel: false },
+            ],
+        );
+        let df = nest.to_dataflow(&[]).unwrap();
+        assert_eq!(df.directives.len(), 2);
+        assert_eq!(df.directives[0], Directive::spatial(Extent::lit(2), Extent::lit(2), Dim::X));
+        assert_eq!(df.directives[1], Directive::temporal(Extent::lit(3), Extent::lit(3), Dim::S));
+    }
+
+    #[test]
+    fn nested_parallel_inserts_cluster() {
+        let nest = LoopNest::new(
+            "two-level",
+            vec![
+                Loop { dim: Dim::K, extent: Extent::sz(Dim::K), step: Extent::lit(1), parallel: true },
+                Loop { dim: Dim::C, extent: Extent::sz(Dim::C), step: Extent::lit(64), parallel: false },
+                Loop { dim: Dim::C, extent: Extent::lit(64), step: Extent::lit(1), parallel: true },
+            ],
+        );
+        let df = nest.to_dataflow(&[Extent::lit(64)]).unwrap();
+        assert!(df.directives.iter().any(|d| d.is_cluster()));
+        // Structure: SpatialMap K; TemporalMap C; Cluster(64); SpatialMap C.
+        assert_eq!(df.directives.len(), 4);
+    }
+
+    #[test]
+    fn parse_text_form() {
+        let nest = parse("loopnest ws\nfor K step 1\nparallel_for X step 2\nfor S step 3\n").unwrap();
+        assert_eq!(nest.name, "ws");
+        assert_eq!(nest.loops.len(), 3);
+        assert!(nest.loops[1].parallel);
+        let df = nest.to_dataflow(&[]).unwrap();
+        assert_eq!(df.directives.len(), 3);
+    }
+
+    #[test]
+    fn display_renders_nest() {
+        let nest = parse("loopnest x\nfor K step 1\n").unwrap();
+        assert!(nest.to_string().contains("for K in 0..Sz(K) step 1"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("loopnest x\nwhile K step 1\n").is_err());
+        assert!(parse("loopnest x\nfor K by 1\n").is_err());
+        assert!(parse("loopnest empty\n").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! The data-centric dataflow intermediate representation (paper §3).
+//!
+//! * [`dims`] — the seven canonical DNN dimensions (N, K, C, Y, X, R, S).
+//! * [`directive`] — `SpatialMap`, `TemporalMap` and `Cluster` directives.
+//! * [`dataflow`] — an ordered directive list with validation,
+//!   canonicalization, and per-cluster-level splitting.
+//! * [`parser`] — the MAESTRO-style DSL text format (parse + emit).
+//! * [`loopnest`] — the compute-centric loop-nest notation of §2.5 and its
+//!   conversion into data-centric directives (§3.2 envisions exactly this
+//!   auto-generation path).
+//! * [`styles`] — the five evaluation dataflows of Table 3 (C-P, X-P,
+//!   YX-P, YR-P, KC-P) plus the Fig 6 row-stationary example.
+
+pub mod dataflow;
+pub mod dims;
+pub mod directive;
+pub mod loopnest;
+pub mod parser;
+pub mod styles;

@@ -1,0 +1,261 @@
+//! Text format for dataflows — a MAESTRO-style DSL (parse + emit).
+//!
+//! ```text
+//! Dataflow kc-p {
+//!   SpatialMap(1,1) K;
+//!   TemporalMap(64,64) C;
+//!   TemporalMap(Sz(R),1) Y;
+//!   TemporalMap(8+Sz(S)-1,8) X;   # arithmetic over Sz() is allowed
+//!   Cluster(64);
+//!   SpatialMap(1,1) C;
+//! }
+//! ```
+//!
+//! Extents are integer expressions over literals and at most one `Sz(dim)`
+//! term (Table 3's `8+Sz(S)-1`). `#` or `//` start comments. Several
+//! dataflow blocks may appear in one file.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::dataflow::Dataflow;
+use super::dims::Dim;
+use super::directive::{Directive, Extent};
+
+/// Parse every `Dataflow name { ... }` block in `text`.
+pub fn parse_dataflows(text: &str) -> Result<Vec<Dataflow>> {
+    let clean = strip_comments(text);
+    let mut out = Vec::new();
+    let mut rest = clean.as_str();
+    loop {
+        let Some(start) = rest.find("Dataflow") else { break };
+        let after = &rest[start + "Dataflow".len()..];
+        let open = after.find('{').context("Dataflow: missing '{'")?;
+        let name = after[..open].trim().to_string();
+        ensure!(!name.is_empty(), "Dataflow block without a name");
+        let body_start = open + 1;
+        let close = after[body_start..]
+            .find('}')
+            .with_context(|| format!("Dataflow {name}: missing '}}'"))?;
+        let body = &after[body_start..body_start + close];
+        let directives = parse_directives(body).with_context(|| format!("in dataflow '{name}'"))?;
+        let df = Dataflow::new(&name, directives);
+        df.validate_structure()?;
+        out.push(df);
+        rest = &after[body_start + close + 1..];
+    }
+    ensure!(!out.is_empty(), "no 'Dataflow name {{ ... }}' blocks found");
+    Ok(out)
+}
+
+/// Parse a single dataflow (first block in the text).
+pub fn parse_dataflow(text: &str) -> Result<Dataflow> {
+    Ok(parse_dataflows(text)?.remove(0))
+}
+
+/// Emit the DSL text for a dataflow (round-trips through the parser).
+pub fn emit(df: &Dataflow) -> String {
+    let mut s = format!("Dataflow {} {{\n", df.name);
+    for d in &df.directives {
+        s.push_str(&format!("  {d};\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+fn strip_comments(text: &str) -> String {
+    text.lines()
+        .map(|l| {
+            let l = l.split('#').next().unwrap_or("");
+            l.split("//").next().unwrap_or("")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn parse_directives(body: &str) -> Result<Vec<Directive>> {
+    let mut out = Vec::new();
+    for stmt in body.split(';') {
+        let stmt = stmt.trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        out.push(parse_directive(stmt)?);
+    }
+    ensure!(!out.is_empty(), "empty dataflow body");
+    Ok(out)
+}
+
+fn parse_directive(stmt: &str) -> Result<Directive> {
+    let (head, rest) = stmt
+        .split_once('(')
+        .with_context(|| format!("directive '{stmt}': missing '('"))?;
+    let close = rest
+        .rfind(')')
+        .with_context(|| format!("directive '{stmt}': missing ')'"))?;
+    let args = &rest[..close];
+    let tail = rest[close + 1..].trim();
+    match head.trim() {
+        "Cluster" => {
+            ensure!(tail.is_empty(), "Cluster takes no dimension: '{stmt}'");
+            Ok(Directive::cluster(parse_extent(args)?))
+        }
+        kind @ ("SpatialMap" | "TemporalMap") => {
+            let (a, b) = split_top_level_comma(args)
+                .with_context(|| format!("directive '{stmt}': expected (size, offset)"))?;
+            let size = parse_extent(&a)?;
+            let offset = parse_extent(&b)?;
+            let dim = Dim::parse(tail)
+                .with_context(|| format!("directive '{stmt}': bad dimension"))?;
+            Ok(if kind == "SpatialMap" {
+                Directive::spatial(size, offset, dim)
+            } else {
+                Directive::temporal(size, offset, dim)
+            })
+        }
+        other => bail!("unknown directive '{other}' in '{stmt}'"),
+    }
+}
+
+/// Split "a, b" at the comma that is not inside `Sz(...)` parens.
+fn split_top_level_comma(args: &str) -> Result<(String, String)> {
+    let mut depth = 0i32;
+    for (i, ch) in args.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth -= 1,
+            ',' if depth == 0 => {
+                return Ok((args[..i].to_string(), args[i + 1..].to_string()));
+            }
+            _ => {}
+        }
+    }
+    bail!("expected two comma-separated extents in '({args})'")
+}
+
+/// Parse an extent expression: `±term ± term ...` where a term is an
+/// integer literal or `Sz(dim)`. At most one `Sz` term.
+pub fn parse_extent(expr: &str) -> Result<Extent> {
+    let expr = expr.trim();
+    ensure!(!expr.is_empty(), "empty extent");
+    let mut lit: i64 = 0;
+    let mut sz_dim: Option<Dim> = None;
+    // Tokenize into signed terms.
+    let mut rest = expr;
+    let mut sign = 1i64;
+    while !rest.is_empty() {
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix('+') {
+            sign = 1;
+            rest = r;
+            continue;
+        }
+        if let Some(r) = rest.strip_prefix('-') {
+            sign = -1;
+            rest = r;
+            continue;
+        }
+        if let Some(r) = rest.strip_prefix("Sz(") {
+            let close = r.find(')').with_context(|| format!("extent '{expr}': Sz missing ')'"))?;
+            let dim = Dim::parse(&r[..close])?;
+            ensure!(sign == 1, "extent '{expr}': negative Sz() term unsupported");
+            ensure!(sz_dim.is_none(), "extent '{expr}': at most one Sz() term");
+            sz_dim = Some(dim);
+            rest = &r[close + 1..];
+            sign = 1;
+            continue;
+        }
+        // Integer literal.
+        let end = rest
+            .char_indices()
+            .take_while(|(_, c)| c.is_ascii_digit())
+            .map(|(i, c)| i + c.len_utf8())
+            .last()
+            .with_context(|| format!("extent '{expr}': expected number or Sz(dim) at '{rest}'"))?;
+        let v: i64 = rest[..end].parse()?;
+        lit += sign * v;
+        rest = &rest[end..];
+        sign = 1;
+    }
+    Ok(match sz_dim {
+        Some(dim) => Extent::sz_plus(dim, lit),
+        None => {
+            ensure!(lit > 0, "extent '{expr}' must be positive (got {lit})");
+            Extent::lit(lit as u64)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KC_P: &str = "
+# NVDLA-like
+Dataflow kc-p {
+  SpatialMap(1,1) K;
+  TemporalMap(64,64) C;
+  TemporalMap(Sz(R),Sz(R)) R;
+  TemporalMap(Sz(S),Sz(S)) S;
+  TemporalMap(Sz(R),1) Y;
+  TemporalMap(Sz(S),1) X;
+  Cluster(64);
+  SpatialMap(1,1) C;
+}";
+
+    #[test]
+    fn parse_kc_p() {
+        let df = parse_dataflow(KC_P).unwrap();
+        assert_eq!(df.name, "kc-p");
+        assert_eq!(df.directives.len(), 8);
+        assert!(df.directives[6].is_cluster());
+    }
+
+    #[test]
+    fn roundtrip_through_emit() {
+        let df = parse_dataflow(KC_P).unwrap();
+        let df2 = parse_dataflow(&emit(&df)).unwrap();
+        assert_eq!(df, df2);
+    }
+
+    #[test]
+    fn extent_arithmetic() {
+        use crate::ir::dims::Dim;
+        assert_eq!(parse_extent("8").unwrap(), Extent::lit(8));
+        assert_eq!(parse_extent("Sz(R)").unwrap(), Extent::sz(Dim::R));
+        assert_eq!(parse_extent("8+Sz(S)-1").unwrap(), Extent::sz_plus(Dim::S, 7));
+        assert_eq!(parse_extent(" Sz(S) - 1 ").unwrap(), Extent::sz_plus(Dim::S, -1));
+        assert!(parse_extent("Sz(R)+Sz(S)").is_err());
+        assert!(parse_extent("0").is_err());
+        assert!(parse_extent("q").is_err());
+    }
+
+    #[test]
+    fn yx_p_windowed_extent() {
+        let df = parse_dataflow(
+            "Dataflow yx {
+               SpatialMap(Sz(R),1) Y;
+               TemporalMap(8+Sz(S)-1,8) X;
+               Cluster(8);
+               SpatialMap(Sz(S),1) X;
+             }",
+        )
+        .unwrap();
+        assert_eq!(df.directives.len(), 4);
+    }
+
+    #[test]
+    fn multiple_blocks() {
+        let text = format!("{KC_P}\nDataflow other {{ SpatialMap(1,1) K; }}");
+        let dfs = parse_dataflows(&text).unwrap();
+        assert_eq!(dfs.len(), 2);
+        assert_eq!(dfs[1].name, "other");
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(parse_dataflow("Dataflow x { Blorp(1,1) K; }").is_err());
+        assert!(parse_dataflow("Dataflow x { SpatialMap(1) K; }").is_err());
+        assert!(parse_dataflow("no blocks here").is_err());
+        assert!(parse_dataflow("Dataflow x { Cluster(4) K; }").is_err());
+    }
+}

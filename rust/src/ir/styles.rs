@@ -1,0 +1,202 @@
+//! The five evaluation dataflows of Table 3, plus the Fig 6
+//! row-stationary pedagogical example.
+//!
+//! Names follow the paper's partitioning-strategy convention (spatial
+//! dims from the upper-most cluster level). Two cells of Table 3 contain
+//! obvious typos (`TemporalMap(Sz(S),Sz(R)) R` in YR-P and
+//! `TemporalMap(Sz(R),Sz(S)) S` in KC-P); we use the intended
+//! `(Sz(R),Sz(R)) R` / `(Sz(S),Sz(S)) S` forms, which match the cited
+//! accelerators.
+
+use super::dataflow::Dataflow;
+use super::dims::Dim::*;
+use super::directive::{Directive as D, Extent as E};
+
+/// C-Partitioned: input-channel parallelism, large spatial reduction,
+/// no local reuse (Table 3 row 1).
+pub fn c_p() -> Dataflow {
+    Dataflow::new(
+        "C-P",
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::temporal(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::spatial(E::lit(1), E::lit(1), C),
+        ],
+    )
+}
+
+/// X-Partitioned: input-column parallelism, weight-stationary, spatial
+/// halo reuse (Table 3 row 2).
+pub fn x_p() -> Dataflow {
+    Dataflow::new(
+        "X-P",
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::temporal(E::lit(1), E::lit(1), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::temporal(E::sz(R), E::lit(1), Y),
+            D::spatial(E::sz(S), E::lit(1), X),
+        ],
+    )
+}
+
+/// YX-Partitioned: 2D activation parallelism, output-stationary —
+/// ShiDianNao-motivated (Table 3 row 3).
+pub fn yx_p() -> Dataflow {
+    Dataflow::new(
+        "YX-P",
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz_plus(S, 7), E::lit(8), X), // 8 + Sz(S) - 1
+            D::temporal(E::lit(1), E::lit(1), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::lit(8)),
+            D::spatial(E::sz(S), E::lit(1), X),
+        ],
+    )
+}
+
+/// YR-Partitioned: activation-row + filter-row parallelism,
+/// row-stationary — Eyeriss-motivated (Table 3 row 4).
+pub fn yr_p() -> Dataflow {
+    Dataflow::new(
+        "YR-P",
+        vec![
+            D::temporal(E::lit(2), E::lit(2), C),
+            D::temporal(E::lit(2), E::lit(2), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::sz(R)),
+            D::spatial(E::lit(1), E::lit(1), Y),
+            D::spatial(E::lit(1), E::lit(1), R),
+        ],
+    )
+}
+
+/// KC-Partitioned: input/output channel parallelism, 64-way spatial
+/// reduction, weight-stationary — NVDLA-motivated (Table 3 row 5).
+pub fn kc_p() -> Dataflow {
+    Dataflow::new(
+        "KC-P",
+        vec![
+            D::spatial(E::lit(1), E::lit(1), K),
+            D::temporal(E::lit(64), E::lit(64), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::temporal(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::cluster(E::lit(64)),
+            D::spatial(E::lit(1), E::lit(1), C),
+        ],
+    )
+}
+
+/// The Fig 6 row-stationary example on a 6-PE accelerator: two clusters
+/// of three PEs (used by the extended-example test and docs).
+pub fn row_stationary_fig6() -> Dataflow {
+    Dataflow::new(
+        "row-stationary-fig6",
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::temporal(E::lit(1), E::lit(1), C),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::cluster(E::sz(R)),
+            D::spatial(E::lit(1), E::lit(1), Y),
+            D::spatial(E::lit(1), E::lit(1), R),
+        ],
+    )
+}
+
+/// The five Table 3 dataflows, in the paper's order.
+pub fn all_styles() -> Vec<Dataflow> {
+    vec![c_p(), x_p(), yx_p(), yr_p(), kc_p()]
+}
+
+/// Look a style up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Dataflow> {
+    match name.to_ascii_lowercase().replace('_', "-").as_str() {
+        "c-p" | "cp" => Some(c_p()),
+        "x-p" | "xp" => Some(x_p()),
+        "yx-p" | "yxp" => Some(yx_p()),
+        "yr-p" | "yrp" => Some(yr_p()),
+        "kc-p" | "kcp" => Some(kc_p()),
+        "row-stationary-fig6" => Some(row_stationary_fig6()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn all_styles_are_structurally_valid() {
+        for df in all_styles() {
+            df.validate_structure().unwrap_or_else(|e| panic!("{}: {e}", df.name));
+        }
+    }
+
+    #[test]
+    fn all_styles_resolve_on_vgg16_conv2_at_256_pes() {
+        let layer = vgg16::conv2();
+        for df in all_styles() {
+            let r = df.resolve(&layer, 256).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+            assert!(r.addressable_pes() <= 256, "{}", df.name);
+        }
+    }
+
+    #[test]
+    fn styles_roundtrip_through_dsl() {
+        for df in all_styles() {
+            let text = parser::emit(&df);
+            let back = parser::parse_dataflow(&text).unwrap();
+            assert_eq!(df, back, "DSL round-trip for {}", df.name);
+        }
+    }
+
+    #[test]
+    fn cluster_structure() {
+        // Single-level: C-P, X-P. Two-level: YX-P, YR-P, KC-P.
+        assert_eq!(c_p().levels().unwrap().len(), 1);
+        assert_eq!(x_p().levels().unwrap().len(), 1);
+        assert_eq!(yx_p().levels().unwrap().len(), 2);
+        assert_eq!(yr_p().levels().unwrap().len(), 2);
+        assert_eq!(kc_p().levels().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn kc_p_units_at_256() {
+        let r = kc_p().resolve(&vgg16::conv13(), 256).unwrap();
+        assert_eq!(r.levels[0].units, 4); // 256/64 K-clusters
+        assert_eq!(r.levels[1].units, 64); // C-parallel PEs
+    }
+
+    #[test]
+    fn yr_p_joint_inner_spatial() {
+        let r = yr_p().resolve(&vgg16::conv2(), 256).unwrap();
+        let inner = &r.levels[1];
+        let spatial = inner.spatial_maps();
+        assert_eq!(spatial.len(), 2);
+        assert_eq!(spatial[0].dim, crate::ir::dims::Dim::Y);
+        assert_eq!(spatial[1].dim, crate::ir::dims::Dim::R);
+        assert_eq!(inner.units, 3); // Cluster(Sz(R)), R = 3
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("kc-p").unwrap().name, "KC-P");
+        assert_eq!(by_name("KC_P").unwrap().name, "KC-P");
+        assert!(by_name("zz-p").is_none());
+    }
+}

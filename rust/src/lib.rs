@@ -1,0 +1,48 @@
+//! # maestro — a reproduction of "Understanding Reuse, Performance, and
+//! Hardware Cost of DNN Dataflows: A Data-Centric Approach" (MICRO-52).
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! depends on (see `DESIGN.md` for the inventory):
+//!
+//! * [`ir`] — the data-centric directive IR (`SpatialMap`, `TemporalMap`,
+//!   `Cluster`, data-movement order), a MAESTRO-style DSL parser, a
+//!   compute-centric loop-nest notation and its conversion to directives,
+//!   and the five evaluation dataflow styles of Table 3.
+//! * [`model`] — 7-dimensional tensor/layer descriptions (the *tensor
+//!   analysis engine*: dimension coupling), and a model zoo (VGG16,
+//!   AlexNet, ResNet50, ResNeXt50, MobileNetV2, UNet, DCGAN).
+//! * [`engine`] — the analytical core: cluster analysis, mapping /
+//!   iteration-case analysis, reuse analysis, performance analysis with
+//!   the NoC pipe model, and cost analysis.
+//! * [`hw`] — hardware configuration, Cacti-fit energy model, and the
+//!   area/power regression models used by the DSE.
+//! * [`sim`] — a cycle-level schedule simulator used as the RTL-substitute
+//!   ground truth for Fig 9 style validation.
+//! * [`dse`] — the hardware design-space exploration engine (sweep with
+//!   invalid-design skipping, Pareto extraction, objectives).
+//! * [`runtime`] — PJRT (xla crate) loader/executor for the AOT-compiled
+//!   batched evaluator (`artifacts/dse_eval.hlo.txt`).
+//! * [`coordinator`] — the L3 orchestration: worker threads, design-point
+//!   batching, backpressure, metrics.
+//! * [`report`] — table/CSV/ASCII-scatter emitters for the experiment
+//!   drivers.
+//! * [`util`] — CLI parsing, a mini property-test harness, a bench
+//!   harness, and a deterministic PRNG (offline image substitutes for
+//!   clap/proptest/criterion).
+
+pub mod coordinator;
+pub mod dse;
+pub mod engine;
+pub mod hw;
+pub mod ir;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use engine::analysis::{analyze_layer, analyze_network, LayerStats, NetworkStats};
+pub use hw::config::HwConfig;
+pub use ir::dataflow::Dataflow;
+pub use model::layer::Layer;
+pub use model::network::Network;

@@ -1,0 +1,232 @@
+//! `maestro` CLI — the leader entrypoint.
+//!
+//! ```text
+//! maestro analyze  --model vgg16 --layer conv2_2 --dataflow kc-p [--pes 256 --bw 16]
+//! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime]
+//! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
+//! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12]
+//! maestro table1
+//! maestro zoo
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::dse::pareto::{best, Optimize};
+use maestro::dse::space::DesignSpace;
+use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::zoo;
+use maestro::report::experiments;
+use maestro::runtime::{BatchEvaluator, DesignIn};
+use maestro::sim::cycle::simulate;
+use maestro::util::cli::{usage, Args, FlagSpec};
+use maestro::util::table::{num, Table};
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "model", takes_value: true, help: "zoo network name (see `maestro zoo`)" },
+        FlagSpec { name: "layer", takes_value: true, help: "layer name within the model" },
+        FlagSpec { name: "dataflow", takes_value: true, help: "c-p | x-p | yx-p | yr-p | kc-p | adaptive" },
+        FlagSpec { name: "pes", takes_value: true, help: "number of PEs (default 256)" },
+        FlagSpec { name: "bw", takes_value: true, help: "NoC bandwidth, elements/cycle (default 16)" },
+        FlagSpec { name: "objective", takes_value: true, help: "runtime | energy | edp (default runtime)" },
+        FlagSpec { name: "family", takes_value: true, help: "DSE dataflow family: kc-p | yr-p | yx-p" },
+        FlagSpec { name: "layer-model", takes_value: true, help: "model providing the DSE layer" },
+        FlagSpec { name: "resolution", takes_value: true, help: "DSE sweep resolution per axis (default 12)" },
+        FlagSpec { name: "pjrt", takes_value: false, help: "use the AOT PJRT evaluator for DSE" },
+        FlagSpec { name: "workers", takes_value: true, help: "coordinator worker threads (default 4)" },
+        FlagSpec { name: "max-steps", takes_value: true, help: "simulator step budget (default 200M)" },
+        FlagSpec { name: "csv", takes_value: false, help: "emit CSV instead of aligned tables" },
+    ]
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = flags();
+    let args = Args::parse(&argv, &spec, true)?;
+    let Some(cmd) = args.subcommand.clone() else {
+        println!("maestro — data-centric DNN dataflow cost model (MICRO-52 reproduction)");
+        println!("subcommands: analyze | network | validate | dse | table1 | zoo");
+        println!("{}", usage(&spec));
+        return Ok(());
+    };
+
+    match cmd.as_str() {
+        "zoo" => {
+            let mut t = Table::new(&["network", "layers", "GMACs"]);
+            for name in zoo::ALL {
+                let n = zoo::by_name(name)?;
+                t.row(&[name.to_string(), n.layers.len().to_string(), format!("{:.2}", n.macs() as f64 / 1e9)]);
+            }
+            print!("{}", t.render());
+        }
+        "analyze" => {
+            let (layer, _) = pick_layer(&args)?;
+            let hw = pick_hw(&args)?;
+            let dfname = args.opt("dataflow", "all");
+            println!("layer: {layer}");
+            if dfname == "all" {
+                let stats = experiments::dataflow_comparison(&layer, &hw)?;
+                let t = experiments::stats_table(&stats);
+                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+            } else {
+                let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
+                let s = analyze_layer(&layer, &df, &hw)?;
+                let t = experiments::stats_table(&[s]);
+                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+            }
+        }
+        "network" => {
+            let model = args.opt_required("model")?;
+            let net = zoo::by_name(&model)?;
+            let hw = pick_hw(&args)?;
+            let objective = match args.opt("objective", "runtime").as_str() {
+                "energy" => Objective::Energy,
+                "edp" => Objective::Edp,
+                _ => Objective::Runtime,
+            };
+            let dfname = args.opt("dataflow", "adaptive");
+            let stats = if dfname == "adaptive" {
+                adaptive_network(&net, &styles::all_styles(), &hw, objective)?
+            } else {
+                let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
+                analyze_network(&net, &df, &hw, true)?
+            };
+            let mut t = Table::new(&["network", "dataflow", "layers", "runtime(cyc)", "energy(uJ)", "GMACs"]);
+            t.row(&[
+                stats.network.clone(),
+                stats.dataflow.clone(),
+                stats.per_layer.len().to_string(),
+                num(stats.runtime),
+                num(stats.energy.total() / 1e6),
+                format!("{:.2}", stats.macs / 1e9),
+            ]);
+            print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+        }
+        "validate" => {
+            let (layer, _) = pick_layer(&args)?;
+            let hw = pick_hw(&args)?;
+            let dfname = args.opt("dataflow", "x-p");
+            let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
+            let max_steps = args.opt_u64("max-steps", 200_000_000)?;
+            let sim = simulate(&layer, &df, &hw, max_steps)?;
+            let ana = analyze_layer(&layer, &df, &hw)?;
+            let err = (ana.runtime - sim.cycles).abs() / sim.cycles * 100.0;
+            let mut t = Table::new(&["what", "cycles", "L2 reads", "L2 writes"]);
+            t.row(&["analytical".into(), num(ana.runtime), num(ana.l2_reads.iter().sum::<f64>()), num(ana.l2_writes.iter().sum::<f64>())]);
+            t.row(&["cycle-sim".into(), num(sim.cycles), num(sim.l2_reads.iter().sum::<f64>()), num(sim.l2_writes)]);
+            print!("{}", t.render());
+            println!("runtime error: {err:.2}%  (sim walked {} steps)", sim.steps);
+        }
+        "dse" => {
+            let family = args.opt("family", "kc-p");
+            let (layer, _) = pick_layer(&args)?;
+            let resolution = args.opt_u64("resolution", 12)? as usize;
+            let space = DesignSpace::fig13(&family, resolution);
+            let workers = args.opt_u64("workers", 4)? as usize;
+            let backend = if args.has("pjrt") {
+                Backend::Pjrt(BatchEvaluator::default_path())
+            } else {
+                Backend::Scalar
+            };
+            // Jobs: one per (variant, pes); designs sweep bandwidth.
+            let mut jobs = Vec::new();
+            let mut id = 0u64;
+            for variant in &space.variants {
+                for &pes in &space.pes {
+                    id += 1;
+                    jobs.push(DseJob {
+                        id,
+                        layers: vec![layer.clone()],
+                        variant: variant.clone(),
+                        pes,
+                        designs: space
+                            .bandwidths
+                            .iter()
+                            .map(|&bw| DesignIn { bandwidth: bw as f64, latency: space.noc_latency as f64, l1: 0.0, l2: 0.0 })
+                            .collect(),
+                        noc_hops: space.noc_latency,
+                        area_budget: space.area_budget_mm2,
+                        power_budget: space.power_budget_mw,
+                    });
+                }
+            }
+            let t0 = std::time::Instant::now();
+            let (results, metrics) = run_jobs(jobs, backend, workers)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let macs = results.iter().map(|r| r.macs).fold(0.0, f64::max);
+            let mut points = Vec::new();
+            for r in &results {
+                points.extend(r.points());
+            }
+            println!("{}", metrics.summary(wall));
+            println!("designs: {} total, {} valid", points.len(), points.iter().filter(|p| p.valid).count());
+            print!("{}", experiments::design_space_scatter(&points, macs, &format!("{family} design space ({})", layer.name)));
+            if let Some(t) = best(&points, Optimize::Throughput, macs) {
+                println!("throughput-opt: pes={} bw={} area={:.2}mm2 power={:.0}mW thrpt={:.1}", t.pes, t.bandwidth, t.area_mm2, t.power_mw, t.throughput(macs));
+            }
+            if let Some(e) = best(&points, Optimize::Energy, macs) {
+                println!("energy-opt:     pes={} bw={} area={:.2}mm2 power={:.0}mW energy={:.2}uJ", e.pes, e.bandwidth, e.area_mm2, e.power_mw, e.energy_pj / 1e6);
+            }
+        }
+        "table1" => {
+            use maestro::engine::reuse::{table1, Opportunity};
+            let layer = maestro::model::layer::Layer::conv2d("ref", 1, 64, 64, 56, 56, 3, 3, 1);
+            let rows = table1(&layer);
+            let sym = |o: Opportunity| match o {
+                Opportunity::Multicast => "Multicast",
+                Opportunity::Reduction => "Reduction",
+                Opportunity::None => "-",
+            };
+            let mut t = Table::new(&["spatial", "innermost", "sp F", "sp I", "sp O", "tm F", "tm I", "tm O"]);
+            for r in rows {
+                t.row(&[
+                    r.spatial_dim.to_string(),
+                    r.innermost_temporal.to_string(),
+                    sym(r.spatial[0]).into(),
+                    sym(r.spatial[1]).into(),
+                    sym(r.spatial[2]).into(),
+                    sym(r.temporal[0]).into(),
+                    sym(r.temporal[1]).into(),
+                    sym(r.temporal[2]).into(),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        other => bail!("unknown subcommand '{other}'\n{}", usage(&spec)),
+    }
+    Ok(())
+}
+
+/// Resolve --model/--layer into a concrete layer (default: VGG16 conv2_2,
+/// the paper's early-layer exemplar).
+fn pick_layer(args: &Args) -> Result<(maestro::model::layer::Layer, String)> {
+    let model = args.opt("model", args.opt("layer-model", "vgg16").as_str());
+    let net = zoo::by_name(&model)?;
+    let lname = args.opt("layer", "");
+    let layer = if lname.is_empty() {
+        net.layers[0].clone()
+    } else {
+        net.layers
+            .iter()
+            .find(|l| l.name == lname)
+            .with_context(|| {
+                format!(
+                    "layer '{lname}' not in {model}; first few: {}",
+                    net.layers.iter().take(8).map(|l| l.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })?
+            .clone()
+    };
+    Ok((layer, model))
+}
+
+fn pick_hw(args: &Args) -> Result<HwConfig> {
+    let mut hw = HwConfig::fig10_default();
+    hw.num_pes = args.opt_u64("pes", hw.num_pes)?;
+    hw.noc_bandwidth = args.opt_u64("bw", hw.noc_bandwidth)?;
+    hw.validate()?;
+    Ok(hw)
+}

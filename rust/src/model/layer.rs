@@ -1,0 +1,331 @@
+//! Layer descriptions: the seven-dimensional shapes of Figure 1 plus the
+//! operator taxonomy of Table 4.
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use crate::ir::dims::Dim;
+
+/// Supported operator types (Table 4 + §4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Dense 2D convolution (possibly strided).
+    Conv2d,
+    /// 1x1 convolution — no filter-plane parallelism, no convolutional
+    /// reuse (Table 4).
+    PointwiseConv,
+    /// Depth-wise convolution — output couples C, not K.
+    DepthwiseConv,
+    /// Fully-connected / GEMM (also LSTM projections).
+    FullyConnected,
+    /// Transposed convolution (UNet up-conv, DCGAN). Modeled on the
+    /// zero-up-sampled input grid — see [`Layer::transposed_conv`].
+    TransposedConv,
+    /// Max/avg pooling (weightless window op).
+    Pooling,
+    /// Residual (skip connection) elementwise add.
+    ResidualAdd,
+    /// One LSTM gate GEMM (i/f/g/o).
+    LstmGate,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv2d => "conv2d",
+            Op::PointwiseConv => "pointwise",
+            Op::DepthwiseConv => "depthwise",
+            Op::FullyConnected => "fc",
+            Op::TransposedConv => "transposed",
+            Op::Pooling => "pooling",
+            Op::ResidualAdd => "residual",
+            Op::LstmGate => "lstm-gate",
+        }
+    }
+}
+
+/// Operator classes used by the case studies (Table 4 / Fig 10f). The
+/// early/late split follows the paper's footnote: `C > Y ⇒ late layer`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    ConvEarly,
+    ConvLate,
+    FullyConnected,
+    Pointwise,
+    Depthwise,
+    Residual,
+    Transposed,
+    Other,
+}
+
+impl OpClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::ConvEarly => "CONV2D-early",
+            OpClass::ConvLate => "CONV2D-late",
+            OpClass::FullyConnected => "FC",
+            OpClass::Pointwise => "PWCONV",
+            OpClass::Depthwise => "DWCONV",
+            OpClass::Residual => "Residual",
+            OpClass::Transposed => "TRCONV",
+            OpClass::Other => "Other",
+        }
+    }
+
+    pub fn all() -> [OpClass; 7] {
+        [
+            OpClass::ConvEarly,
+            OpClass::ConvLate,
+            OpClass::FullyConnected,
+            OpClass::Pointwise,
+            OpClass::Depthwise,
+            OpClass::Residual,
+            OpClass::Transposed,
+        ]
+    }
+}
+
+/// One DNN layer with concrete dimensions. `Y`/`X` are *input* activation
+/// extents (input-centric convention, §4.1); output extents are derived.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    /// Batch.
+    pub n: u64,
+    /// Output channels (channel multiplier for depthwise; = C for residual).
+    pub k: u64,
+    /// Input channels.
+    pub c: u64,
+    /// Input rows.
+    pub y: u64,
+    /// Input columns.
+    pub x: u64,
+    /// Filter rows.
+    pub r: u64,
+    /// Filter columns.
+    pub s: u64,
+    /// Convolution stride (1 for FC/residual).
+    pub stride: u64,
+}
+
+impl Layer {
+    pub fn conv2d(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, stride: u64) -> Layer {
+        let op = if r == 1 && s == 1 { Op::PointwiseConv } else { Op::Conv2d };
+        Layer { name: name.into(), op, n, k, c, y, x, r, s, stride }
+    }
+
+    pub fn depthwise(name: &str, n: u64, c: u64, y: u64, x: u64, r: u64, s: u64, stride: u64) -> Layer {
+        Layer { name: name.into(), op: Op::DepthwiseConv, n, k: 1, c, y, x, r, s, stride }
+    }
+
+    pub fn fully_connected(name: &str, n: u64, k: u64, c: u64) -> Layer {
+        Layer { name: name.into(), op: Op::FullyConnected, n, k, c, y: 1, x: 1, r: 1, s: 1, stride: 1 }
+    }
+
+    pub fn pooling(name: &str, n: u64, c: u64, y: u64, x: u64, r: u64, stride: u64) -> Layer {
+        Layer { name: name.into(), op: Op::Pooling, n, k: 1, c, y, x, r, s: r, stride }
+    }
+
+    pub fn residual(name: &str, n: u64, k: u64, y: u64, x: u64) -> Layer {
+        Layer { name: name.into(), op: Op::ResidualAdd, n, k, c: 1, y, x, r: 1, s: 1, stride: 1 }
+    }
+
+    pub fn lstm_gate(name: &str, n: u64, hidden: u64, input: u64) -> Layer {
+        Layer { name: name.into(), op: Op::LstmGate, n, k: hidden, c: input, y: 1, x: 1, r: 1, s: 1, stride: 1 }
+    }
+
+    /// Transposed convolution producing `up × ` upscaled outputs. We model
+    /// it on the zero-up-sampled input grid (input extent × up), which
+    /// preserves the data-movement pattern and exposes the structured
+    /// output sparsity Table 4 mentions; MAC counting discounts the zero
+    /// rows via [`Layer::sparsity_macs_scale`].
+    pub fn transposed_conv(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, up: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            op: Op::TransposedConv,
+            n,
+            k,
+            c,
+            y: y * up,
+            x: x * up,
+            r,
+            s,
+            stride: 1,
+        }
+    }
+
+    /// Fraction of MACs that are non-trivial (zero-skipping on the
+    /// up-sampled grid of a transposed conv; 1.0 elsewhere).
+    pub fn sparsity_macs_scale(&self) -> f64 {
+        match self.op {
+            // 1 in up^2 input points is non-zero; up is recoverable from
+            // nothing here, so we use the common up=2 of UNet/DCGAN.
+            Op::TransposedConv => 0.25,
+            _ => 1.0,
+        }
+    }
+
+    /// Extent of a loop dimension.
+    pub fn dim(&self, d: Dim) -> u64 {
+        match d {
+            Dim::N => self.n,
+            Dim::K => self.k,
+            Dim::C => self.c,
+            Dim::Y => self.y,
+            Dim::X => self.x,
+            Dim::R => self.r,
+            Dim::S => self.s,
+        }
+    }
+
+    /// Output extent for a windowed activation dim: `(act − win)/stride + 1`.
+    pub fn out_extent(&self, act: Dim, win: Dim) -> u64 {
+        let a = self.dim(act);
+        let w = self.dim(win);
+        if a < w {
+            0
+        } else {
+            (a - w) / self.stride + 1
+        }
+    }
+
+    /// Output rows / columns.
+    pub fn y_out(&self) -> u64 {
+        self.out_extent(Dim::Y, Dim::R)
+    }
+    pub fn x_out(&self) -> u64 {
+        self.out_extent(Dim::X, Dim::S)
+    }
+
+    /// Whether an activation dim slides a window for this op.
+    pub fn windowed(&self, d: Dim) -> bool {
+        matches!(d, Dim::Y | Dim::X)
+            && !matches!(self.op, Op::FullyConnected | Op::ResidualAdd | Op::LstmGate)
+    }
+
+    /// Total multiply-accumulates (dense; transposed conv reports the
+    /// dense count — use [`Layer::effective_macs`] for the sparsity-aware
+    /// number).
+    pub fn macs(&self) -> u64 {
+        let base = self.n * self.y_out() * self.x_out() * self.r * self.s * self.c;
+        match self.op {
+            Op::DepthwiseConv => base * self.k, // k = channel multiplier
+            Op::Pooling | Op::ResidualAdd => {
+                // One op per output element.
+                self.n * self.k.max(1) * self.c.max(1) * self.y_out() * self.x_out()
+            }
+            _ => base * self.k,
+        }
+    }
+
+    /// MACs after structured-sparsity discounting (§4.4 — uniformly
+    /// distributed sparsity model).
+    pub fn effective_macs(&self) -> f64 {
+        self.macs() as f64 * self.sparsity_macs_scale()
+    }
+
+    /// Operator classification for the case studies. Paper footnote 2:
+    /// "If C > Y, late layer. Else, early layer."
+    pub fn class(&self) -> OpClass {
+        match self.op {
+            Op::PointwiseConv => OpClass::Pointwise,
+            Op::DepthwiseConv => OpClass::Depthwise,
+            Op::FullyConnected | Op::LstmGate => OpClass::FullyConnected,
+            Op::ResidualAdd => OpClass::Residual,
+            Op::TransposedConv => OpClass::Transposed,
+            Op::Pooling => OpClass::Other,
+            Op::Conv2d => {
+                if self.c > self.y {
+                    OpClass::ConvLate
+                } else {
+                    OpClass::ConvEarly
+                }
+            }
+        }
+    }
+
+    /// Basic sanity checks used by parsers and the zoo audit test.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n >= 1 && self.k >= 1 && self.c >= 1, "layer {}: channel/batch dims must be >= 1", self.name);
+        ensure!(self.y >= self.r && self.x >= self.s, "layer {}: activation smaller than filter", self.name);
+        ensure!(self.stride >= 1, "layer {}: stride must be >= 1", self.name);
+        ensure!(self.y_out() >= 1 && self.x_out() >= 1, "layer {}: empty output", self.name);
+        Ok(())
+    }
+}
+
+impl fmt::Display for Layer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}] N{} K{} C{} Y{} X{} R{} S{} /{}",
+            self.name, self.op.name(), self.n, self.k, self.c, self.y, self.x, self.r, self.s, self.stride
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims() {
+        let l = Layer::conv2d("c", 1, 64, 3, 224, 224, 3, 3, 1);
+        assert_eq!(l.y_out(), 222);
+        assert_eq!(l.x_out(), 222);
+        let s2 = Layer::conv2d("c2", 1, 64, 3, 224, 224, 7, 7, 2);
+        assert_eq!(s2.y_out(), (224 - 7) / 2 + 1);
+    }
+
+    #[test]
+    fn pointwise_autodetected() {
+        let l = Layer::conv2d("pw", 1, 256, 64, 56, 56, 1, 1, 1);
+        assert_eq!(l.op, Op::PointwiseConv);
+        assert_eq!(l.class(), OpClass::Pointwise);
+    }
+
+    #[test]
+    fn macs_closed_form() {
+        let l = Layer::conv2d("c", 2, 8, 4, 10, 12, 3, 3, 1);
+        // N*K*C*Y'*X'*R*S = 2*8*4*8*10*9
+        assert_eq!(l.macs(), 2 * 8 * 4 * 8 * 10 * 9);
+    }
+
+    #[test]
+    fn depthwise_macs_drop_k() {
+        let l = Layer::depthwise("dw", 1, 32, 10, 10, 3, 3, 1);
+        assert_eq!(l.macs(), 32 * 8 * 8 * 9);
+        assert_eq!(l.class(), OpClass::Depthwise);
+    }
+
+    #[test]
+    fn early_late_classification() {
+        // VGG16 conv1: C=3, Y=224 -> early.
+        assert_eq!(Layer::conv2d("c1", 1, 64, 3, 224, 224, 3, 3, 1).class(), OpClass::ConvEarly);
+        // VGG16 conv13: C=512, Y=14 -> late.
+        assert_eq!(Layer::conv2d("c13", 1, 512, 512, 16, 16, 3, 3, 1).class(), OpClass::ConvLate);
+    }
+
+    #[test]
+    fn fc_is_degenerate_conv() {
+        let l = Layer::fully_connected("fc", 1, 1000, 4096);
+        assert_eq!(l.y_out(), 1);
+        assert_eq!(l.macs(), 1000 * 4096);
+        assert!(!l.windowed(Dim::Y));
+    }
+
+    #[test]
+    fn transposed_upsamples_and_discounts() {
+        let l = Layer::transposed_conv("up", 1, 64, 128, 28, 28, 2, 2, 2);
+        assert_eq!(l.y, 56);
+        assert!(l.effective_macs() < l.macs() as f64);
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        assert!(Layer::conv2d("bad", 1, 8, 4, 2, 2, 3, 3, 1).validate().is_err());
+        assert!(Layer::conv2d("ok", 1, 8, 4, 8, 8, 3, 3, 1).validate().is_ok());
+    }
+}

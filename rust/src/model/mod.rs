@@ -1,0 +1,8 @@
+//! DNN model descriptions: layers, tensors with dimension coupling (the
+//! paper's *tensor analysis engine*, §4.1), whole networks, and a model
+//! zoo covering every network the evaluation uses (§5).
+
+pub mod layer;
+pub mod network;
+pub mod tensor;
+pub mod zoo;

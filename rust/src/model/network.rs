@@ -1,0 +1,192 @@
+//! Whole-network descriptions and a small text format for user models.
+//!
+//! The text format mirrors the layer constructors:
+//!
+//! ```text
+//! network vgg16-tiny
+//! # name      op         N K   C  Y   X   R S stride
+//! conv1:      conv2d     1 64  3  224 224 3 3 1
+//! fc1:        fc         1 1000 4096
+//! dw3:        depthwise  1 32 112 112 3 3 1     # N C Y X R S stride
+//! up1:        transposed 1 64 128 28 28 2 2 2   # last = upscale
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::layer::{Layer, OpClass};
+
+/// An ordered list of layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Network {
+        Network { name: name.into(), layers }
+    }
+
+    /// Total dense MACs.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Layers of a given operator class.
+    pub fn layers_of(&self, class: OpClass) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.class() == class).collect()
+    }
+
+    /// Validate all layers.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "network {} has no layers", self.name);
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Parse the text model format (see module docs). `#` starts a
+    /// comment; blank lines are skipped.
+    pub fn parse(text: &str) -> Result<Network> {
+        let mut name = String::from("unnamed");
+        let mut layers = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: &str| format!("model line {}: {m}: '{line}'", lineno + 1);
+            if let Some(rest) = line.strip_prefix("network ") {
+                name = rest.trim().to_string();
+                continue;
+            }
+            let (lname, rest) = line
+                .split_once(':')
+                .with_context(|| err("expected 'name: op dims...'"))?;
+            let toks: Vec<&str> = rest.split_whitespace().collect();
+            ensure!(!toks.is_empty(), err("missing op"));
+            let nums: Result<Vec<u64>> = toks[1..]
+                .iter()
+                .map(|t| t.parse::<u64>().with_context(|| err("bad integer")))
+                .collect();
+            let nums = nums?;
+            let lname = lname.trim();
+            let need = |n: usize| -> Result<()> {
+                ensure!(nums.len() == n, err(&format!("op {} expects {n} integers, got {}", toks[0], nums.len())));
+                Ok(())
+            };
+            let layer = match toks[0] {
+                "conv2d" => {
+                    need(8)?;
+                    Layer::conv2d(lname, nums[0], nums[1], nums[2], nums[3], nums[4], nums[5], nums[6], nums[7])
+                }
+                "depthwise" => {
+                    need(7)?;
+                    Layer::depthwise(lname, nums[0], nums[1], nums[2], nums[3], nums[4], nums[5], nums[6])
+                }
+                "fc" => {
+                    need(3)?;
+                    Layer::fully_connected(lname, nums[0], nums[1], nums[2])
+                }
+                "pooling" => {
+                    need(6)?;
+                    Layer::pooling(lname, nums[0], nums[1], nums[2], nums[3], nums[4], nums[5])
+                }
+                "residual" => {
+                    need(4)?;
+                    Layer::residual(lname, nums[0], nums[1], nums[2], nums[3])
+                }
+                "transposed" => {
+                    need(8)?;
+                    Layer::transposed_conv(lname, nums[0], nums[1], nums[2], nums[3], nums[4], nums[5], nums[6], nums[7])
+                }
+                "lstm-gate" => {
+                    need(3)?;
+                    Layer::lstm_gate(lname, nums[0], nums[1], nums[2])
+                }
+                other => bail!(err(&format!("unknown op '{other}'"))),
+            };
+            layers.push(layer);
+        }
+        let net = Network { name, layers };
+        net.validate()?;
+        Ok(net)
+    }
+
+    /// Emit the text format (round-trips through [`Network::parse`]).
+    pub fn emit(&self) -> String {
+        let mut out = format!("network {}\n", self.name);
+        for l in &self.layers {
+            use crate::model::layer::Op::*;
+            let line = match l.op {
+                Conv2d | PointwiseConv => format!(
+                    "{}: conv2d {} {} {} {} {} {} {} {}",
+                    l.name, l.n, l.k, l.c, l.y, l.x, l.r, l.s, l.stride
+                ),
+                DepthwiseConv => format!(
+                    "{}: depthwise {} {} {} {} {} {} {}",
+                    l.name, l.n, l.c, l.y, l.x, l.r, l.s, l.stride
+                ),
+                FullyConnected => format!("{}: fc {} {} {}", l.name, l.n, l.k, l.c),
+                Pooling => format!("{}: pooling {} {} {} {} {} {}", l.name, l.n, l.c, l.y, l.x, l.r, l.stride),
+                ResidualAdd => format!("{}: residual {} {} {} {}", l.name, l.n, l.k, l.y, l.x),
+                TransposedConv => format!(
+                    // Upscale already folded into y/x; emit with up=1.
+                    "{}: transposed {} {} {} {} {} {} {} 1",
+                    l.name, l.n, l.k, l.c, l.y, l.x, l.r, l.s
+                ),
+                LstmGate => format!("{}: lstm-gate {} {} {}", l.name, l.n, l.k, l.c),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+network tiny
+# comment line
+conv1: conv2d 1 64 3 224 224 3 3 1
+pw1: conv2d 1 128 64 56 56 1 1 1
+dw1: depthwise 1 64 56 56 3 3 1
+fc1: fc 1 1000 4096
+";
+
+    #[test]
+    fn parse_sample() {
+        let n = Network::parse(SAMPLE).unwrap();
+        assert_eq!(n.name, "tiny");
+        assert_eq!(n.layers.len(), 4);
+        assert_eq!(n.layers[0].k, 64);
+        assert_eq!(n.layers[1].op, crate::model::layer::Op::PointwiseConv);
+    }
+
+    #[test]
+    fn parse_rejects_bad_arity() {
+        assert!(Network::parse("network x\nc: conv2d 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_op() {
+        assert!(Network::parse("network x\nc: warp 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let n = Network::parse(SAMPLE).unwrap();
+        let n2 = Network::parse(&n.emit()).unwrap();
+        assert_eq!(n, n2);
+    }
+
+    #[test]
+    fn macs_sum() {
+        let n = Network::parse(SAMPLE).unwrap();
+        assert_eq!(n.macs(), n.layers.iter().map(|l| l.macs()).sum::<u64>());
+    }
+}

@@ -1,0 +1,216 @@
+//! Tensor dimension coupling — the *tensor analysis engine* (paper §4.1).
+//!
+//! "The tensor analysis engine identifies dimension coupling for each
+//! tensor based on specified layer operations." A dimension is *coupled*
+//! to a tensor when changing its index moves the tensor footprint. The
+//! activation dims Y/X couple to the output through the sliding window
+//! `y' = (y − r)/stride`, which the engines handle via
+//! [`TensorDim::Windowed`].
+
+use crate::ir::dims::Dim;
+use crate::model::layer::{Layer, Op};
+
+/// The three operand roles of the supported operations (two inputs, one
+/// output — §4.4 "all the operations represented as the loop nest with
+/// two input tensors and one output tensor").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Weights.
+    Filter,
+    /// Input activation.
+    Input,
+    /// Output activation (partial sums until reduction completes).
+    Output,
+}
+
+pub const ALL_TENSORS: [TensorKind; 3] = [TensorKind::Filter, TensorKind::Input, TensorKind::Output];
+
+impl TensorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TensorKind::Filter => "filter",
+            TensorKind::Input => "input",
+            TensorKind::Output => "output",
+        }
+    }
+}
+
+/// How one loop dimension addresses a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorDim {
+    /// The tensor is indexed directly by this dim.
+    Direct(Dim),
+    /// The tensor is indexed by the *difference* of an activation dim and
+    /// its window dim (`y' = y − r`), divided by stride.
+    Windowed { act: Dim, win: Dim },
+}
+
+/// The coupling signature of one tensor of one layer: the list of tensor
+/// dimensions in canonical order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Coupling {
+    pub kind: TensorKind,
+    pub dims: Vec<TensorDim>,
+}
+
+impl Coupling {
+    /// Is a loop dim coupled to this tensor (directly or through a
+    /// window)?
+    pub fn couples(&self, d: Dim) -> bool {
+        self.dims.iter().any(|td| match td {
+            TensorDim::Direct(x) => *x == d,
+            TensorDim::Windowed { act, win } => *act == d || *win == d,
+        })
+    }
+
+    /// Direct coupling only (Table 1's checkmarks use this distinction:
+    /// outputs couple to Y/X as Y'/X').
+    pub fn couples_directly(&self, d: Dim) -> bool {
+        self.dims.iter().any(|td| matches!(td, TensorDim::Direct(x) if *x == d))
+    }
+}
+
+/// Compute the coupling of all three tensors for a layer — the tensor
+/// analysis engine. Users with exotic operators can construct `Coupling`
+/// values directly; everything downstream consumes only this signature,
+/// which is what gives MAESTRO its generality (§4.1).
+pub fn couplings(layer: &Layer) -> [Coupling; 3] {
+    use Dim::*;
+    use TensorDim::*;
+    match layer.op {
+        Op::Conv2d | Op::PointwiseConv | Op::FullyConnected | Op::TransposedConv => [
+            Coupling { kind: TensorKind::Filter, dims: vec![Direct(K), Direct(C), Direct(R), Direct(S)] },
+            Coupling { kind: TensorKind::Input, dims: vec![Direct(N), Direct(C), Direct(Y), Direct(X)] },
+            Coupling {
+                kind: TensorKind::Output,
+                dims: vec![
+                    Direct(N),
+                    Direct(K),
+                    Windowed { act: Y, win: R },
+                    Windowed { act: X, win: S },
+                ],
+            },
+        ],
+        // Depth-wise convolution: output couples the *input* channel dim,
+        // not K (paper §4.1's depth-wise example). K carries the channel
+        // multiplier (usually 1).
+        Op::DepthwiseConv => [
+            Coupling { kind: TensorKind::Filter, dims: vec![Direct(K), Direct(C), Direct(R), Direct(S)] },
+            Coupling { kind: TensorKind::Input, dims: vec![Direct(N), Direct(C), Direct(Y), Direct(X)] },
+            Coupling {
+                kind: TensorKind::Output,
+                dims: vec![
+                    Direct(N),
+                    Direct(K),
+                    Direct(C),
+                    Windowed { act: Y, win: R },
+                    Windowed { act: X, win: S },
+                ],
+            },
+        ],
+        // Pooling has no filter tensor; model the window as a weightless
+        // filter so the same engines apply (filter footprint 0 is handled
+        // by `tensor_bytes`).
+        Op::Pooling => [
+            Coupling { kind: TensorKind::Filter, dims: vec![] },
+            Coupling { kind: TensorKind::Input, dims: vec![Direct(N), Direct(C), Direct(Y), Direct(X)] },
+            Coupling {
+                kind: TensorKind::Output,
+                dims: vec![
+                    Direct(N),
+                    Direct(C),
+                    Windowed { act: Y, win: R },
+                    Windowed { act: X, win: S },
+                ],
+            },
+        ],
+        // Residual add: elementwise over (N, C/K, Y, X); both inputs have
+        // the output's shape. We give the second operand the Filter role.
+        Op::ResidualAdd => [
+            Coupling { kind: TensorKind::Filter, dims: vec![Direct(N), Direct(K), Direct(Y), Direct(X)] },
+            Coupling { kind: TensorKind::Input, dims: vec![Direct(N), Direct(K), Direct(Y), Direct(X)] },
+            Coupling { kind: TensorKind::Output, dims: vec![Direct(N), Direct(K), Direct(Y), Direct(X)] },
+        ],
+        // LSTM gates are GEMMs (hidden x weight); modeled like FC.
+        Op::LstmGate => [
+            Coupling { kind: TensorKind::Filter, dims: vec![Direct(K), Direct(C)] },
+            Coupling { kind: TensorKind::Input, dims: vec![Direct(N), Direct(C)] },
+            Coupling { kind: TensorKind::Output, dims: vec![Direct(N), Direct(K)] },
+        ],
+    }
+}
+
+/// Number of elements of one tensor of a layer.
+pub fn tensor_elements(layer: &Layer, kind: TensorKind) -> u64 {
+    let c = &couplings(layer)[match kind {
+        TensorKind::Filter => 0,
+        TensorKind::Input => 1,
+        TensorKind::Output => 2,
+    }];
+    if c.dims.is_empty() {
+        return 0;
+    }
+    c.dims
+        .iter()
+        .map(|td| match td {
+            TensorDim::Direct(d) => layer.dim(*d),
+            TensorDim::Windowed { act, win } => layer.out_extent(*act, *win),
+        })
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::Layer;
+
+    #[test]
+    fn conv_coupling_matches_paper() {
+        let l = Layer::conv2d("c", 1, 64, 32, 56, 56, 3, 3, 1);
+        let [f, i, o] = couplings(&l);
+        // Filter couples K, C, R, S but not N, Y, X.
+        assert!(f.couples(Dim::K) && f.couples(Dim::C) && f.couples(Dim::R) && f.couples(Dim::S));
+        assert!(!f.couples(Dim::N) && !f.couples(Dim::Y) && !f.couples(Dim::X));
+        // Input couples N, C, Y, X but not K, R, S.
+        assert!(i.couples(Dim::N) && i.couples(Dim::C) && i.couples(Dim::Y) && i.couples(Dim::X));
+        assert!(!i.couples(Dim::K) && !i.couples(Dim::R) && !i.couples(Dim::S));
+        // Output couples N, K and (via window) Y, X, R, S; not C.
+        assert!(o.couples(Dim::N) && o.couples(Dim::K));
+        assert!(o.couples(Dim::Y) && o.couples(Dim::R));
+        assert!(!o.couples(Dim::C));
+        // But Y couples the output only through the window.
+        assert!(!o.couples_directly(Dim::Y));
+        assert!(o.couples_directly(Dim::K));
+    }
+
+    #[test]
+    fn depthwise_output_couples_c_not_k_parallelism() {
+        let l = Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1);
+        let [_, _, o] = couplings(&l);
+        assert!(o.couples(Dim::C));
+    }
+
+    #[test]
+    fn fc_tensor_sizes() {
+        // FC 4096 -> 1000 as conv with Y=R=1, X=S=1.
+        let l = Layer::fully_connected("fc", 1, 1000, 4096);
+        assert_eq!(tensor_elements(&l, TensorKind::Filter), 4096 * 1000);
+        assert_eq!(tensor_elements(&l, TensorKind::Input), 4096);
+        assert_eq!(tensor_elements(&l, TensorKind::Output), 1000);
+    }
+
+    #[test]
+    fn conv_tensor_sizes() {
+        let l = Layer::conv2d("c", 2, 8, 4, 10, 12, 3, 3, 1);
+        assert_eq!(tensor_elements(&l, TensorKind::Filter), 8 * 4 * 3 * 3);
+        assert_eq!(tensor_elements(&l, TensorKind::Input), 2 * 4 * 10 * 12);
+        assert_eq!(tensor_elements(&l, TensorKind::Output), 2 * 8 * 8 * 10);
+    }
+
+    #[test]
+    fn pooling_has_no_filter() {
+        let l = Layer::pooling("p", 1, 32, 56, 56, 2, 2);
+        assert_eq!(tensor_elements(&l, TensorKind::Filter), 0);
+        assert!(tensor_elements(&l, TensorKind::Output) > 0);
+    }
+}

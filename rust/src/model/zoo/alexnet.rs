@@ -1,0 +1,50 @@
+//! AlexNet (Krizhevsky et al., 2012) — single-tower variant used in the
+//! Eyeriss papers (what Fig 9's Eyeriss validation runs).
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// AlexNet conv1-conv5 + fc6-fc8, batch 1.
+pub fn network() -> Network {
+    let layers = vec![
+        // conv1: 96 x 3 x 11x11 / s4 over 227x227 -> 55x55.
+        Layer::conv2d("conv1", 1, 96, 3, 227, 227, 11, 11, 4),
+        // conv2: 256 x 96 x 5x5 / s1 pad 2 over 27x27 -> 27x27 (post-pool input 31).
+        Layer::conv2d("conv2", 1, 256, 96, 31, 31, 5, 5, 1),
+        // conv3: 384 x 256 x 3x3 / s1 pad 1 over 13x13 -> 13x13.
+        Layer::conv2d("conv3", 1, 384, 256, 15, 15, 3, 3, 1),
+        // conv4: 384 x 384 x 3x3 / s1 pad 1.
+        Layer::conv2d("conv4", 1, 384, 384, 15, 15, 3, 3, 1),
+        // conv5: 256 x 384 x 3x3 / s1 pad 1.
+        Layer::conv2d("conv5", 1, 256, 384, 15, 15, 3, 3, 1),
+        Layer::fully_connected("fc6", 1, 4096, 9216), // 256*6*6
+        Layer::fully_connected("fc7", 1, 4096, 4096),
+        Layer::fully_connected("fc8", 1, 1000, 4096),
+    ];
+    Network::new("alexnet", layers)
+}
+
+/// The conv stack only (Eyeriss reports conv-layer processing delay).
+pub fn conv_only() -> Network {
+    let mut n = network();
+    n.layers.truncate(5);
+    n.name = "alexnet-conv".into();
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_output_is_55() {
+        let l = &network().layers[0];
+        assert_eq!(l.y_out(), 55);
+        assert_eq!(l.x_out(), 55);
+    }
+
+    #[test]
+    fn conv_stack_is_five() {
+        assert_eq!(conv_only().layers.len(), 5);
+    }
+}

@@ -1,0 +1,38 @@
+//! DCGAN generator (Radford et al., 2015) — Table 4's other transposed-
+//! convolution exemplar: project + four fractionally-strided convs
+//! 4x4 kernels, doubling spatial extent 4 -> 64.
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// DCGAN generator for 64x64 output.
+pub fn network() -> Network {
+    let layers = vec![
+        // Project z(100) -> 4x4x1024 as an FC.
+        Layer::fully_connected("project", 1, 1024 * 4 * 4, 100),
+        Layer::transposed_conv("tconv1", 1, 512, 1024, 4, 4, 4, 4, 2),
+        Layer::transposed_conv("tconv2", 1, 256, 512, 8, 8, 4, 4, 2),
+        Layer::transposed_conv("tconv3", 1, 128, 256, 16, 16, 4, 4, 2),
+        Layer::transposed_conv("tconv4", 1, 3, 128, 32, 32, 4, 4, 2),
+    ];
+    Network::new("dcgan", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_tconvs() {
+        let n = network();
+        use crate::model::layer::Op;
+        assert_eq!(n.layers.iter().filter(|l| l.op == Op::TransposedConv).count(), 4);
+    }
+
+    #[test]
+    fn upsampled_extents() {
+        let n = network();
+        let t1 = n.layers.iter().find(|l| l.name == "tconv1").unwrap();
+        assert_eq!(t1.y, 8); // 4 * up(2)
+    }
+}

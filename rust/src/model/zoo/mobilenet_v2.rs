@@ -1,0 +1,106 @@
+//! MobileNetV2 (Sandler et al., 2018): inverted residual bottlenecks as
+//! fine-grained operators — expand pointwise, depthwise 3x3, project
+//! pointwise (+ residual when stride 1 and shapes match).
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// One inverted residual: in_c --t*--> depthwise/s --> out_c.
+fn inverted_residual(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    in_c: u64,
+    out_c: u64,
+    hw_in: u64,
+    stride: u64,
+    expand: u64,
+) -> u64 {
+    let mid = in_c * expand;
+    let hw_out = hw_in / stride;
+    if expand > 1 {
+        layers.push(Layer::conv2d(&format!("{name}_expand"), 1, mid, in_c, hw_in, hw_in, 1, 1, 1));
+    }
+    layers.push(Layer::depthwise(&format!("{name}_dw"), 1, mid, hw_in + 2, hw_in + 2, 3, 3, stride));
+    layers.push(Layer::conv2d(&format!("{name}_project"), 1, out_c, mid, hw_out, hw_out, 1, 1, 1));
+    if stride == 1 && in_c == out_c {
+        layers.push(Layer::residual(&format!("{name}_add"), 1, out_c, hw_out, hw_out));
+    }
+    hw_out
+}
+
+/// MobileNetV2 1.0x at 224x224.
+pub fn network() -> Network {
+    let mut layers = Vec::new();
+    // conv1: 32 x 3 x 3x3 / s2 pad 1 over 224 -> 112.
+    layers.push(Layer::conv2d("conv1", 1, 32, 3, 226, 226, 3, 3, 2));
+    // (t, c, n, s) rows from the paper.
+    let cfg: [(u64, u64, usize, u64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_c = 32u64;
+    let mut hw = 112u64;
+    for (bi, (t, c, n, s)) in cfg.iter().enumerate() {
+        for rep in 0..*n {
+            let stride = if rep == 0 { *s } else { 1 };
+            let name = format!("bneck{}_{}", bi + 1, rep + 1);
+            hw = inverted_residual(&mut layers, &name, in_c, *c, hw, stride, *t);
+            in_c = *c;
+        }
+    }
+    // Final 1x1 conv to 1280 + classifier.
+    layers.push(Layer::conv2d("conv_last", 1, 1280, 320, 7, 7, 1, 1, 1));
+    layers.push(Layer::fully_connected("fc", 1, 1000, 1280));
+    Network::new("mobilenetv2", layers)
+}
+
+/// The PWCONV exemplar of Fig 11: "first conv of bottleneck1 in
+/// MobileNetV2" — bneck2_1's expand (bottleneck1 has expand 1, so the
+/// first *pointwise* conv of the bottleneck sequence is bneck2_1_expand).
+pub fn bottleneck1_pw() -> Layer {
+    network()
+        .layers
+        .iter()
+        .find(|l| l.name == "bneck2_1_expand")
+        .expect("bneck2_1_expand present")
+        .clone()
+}
+
+/// A representative depthwise layer (for the DWCONV column).
+pub fn dwconv_exemplar() -> Layer {
+    network()
+        .layers
+        .iter()
+        .find(|l| l.name == "bneck2_1_dw")
+        .expect("bneck2_1_dw present")
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_magnitude() {
+        // MobileNetV2 ~0.3 GMACs.
+        let g = network().macs() as f64 / 1e9;
+        assert!((0.2..0.5).contains(&g), "mobilenetv2 GMACs = {g}");
+    }
+
+    #[test]
+    fn final_spatial_is_7() {
+        let last_conv = network().layers.iter().rfind(|l| l.name == "conv_last").unwrap().clone();
+        assert_eq!(last_conv.y_out(), 7);
+    }
+
+    #[test]
+    fn exemplars_exist() {
+        assert_eq!(bottleneck1_pw().r, 1);
+        assert_eq!(dwconv_exemplar().op, crate::model::layer::Op::DepthwiseConv);
+    }
+}

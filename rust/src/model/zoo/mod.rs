@@ -1,0 +1,106 @@
+//! Model zoo: the networks used in the paper's evaluation (§5, Fig 9-13).
+//!
+//! Shapes use batch 1 and the standard ImageNet-era configurations; each
+//! network file documents its source. `Y`/`X` are input extents with the
+//! original padding folded in (input-centric convention: a padded 3x3/s1
+//! conv over a 56x56 map is recorded as Y = X = 58 so that Y' = 56 —
+//! MAESTRO models data movement, and the padded halo is data that is
+//! staged like any other).
+
+pub mod alexnet;
+pub mod dcgan;
+pub mod mobilenet_v2;
+pub mod resnet50;
+pub mod resnext50;
+pub mod unet;
+pub mod vgg16;
+
+use anyhow::{bail, Result};
+
+use crate::model::network::Network;
+
+/// Look a zoo network up by name.
+pub fn by_name(name: &str) -> Result<Network> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "vgg16" => vgg16::network(),
+        "vgg16-conv" => vgg16::conv_only(),
+        "alexnet" => alexnet::network(),
+        "resnet50" => resnet50::network(),
+        "resnext50" => resnext50::network(),
+        "mobilenetv2" | "mobilenet_v2" => mobilenet_v2::network(),
+        "unet" => unet::network(),
+        "dcgan" => dcgan::network(),
+        other => bail!("unknown zoo network '{other}' (try vgg16, alexnet, resnet50, resnext50, mobilenetv2, unet, dcgan)"),
+    })
+}
+
+/// All zoo names (for CLI help and audit tests).
+pub const ALL: [&str; 7] = [
+    "vgg16", "alexnet", "resnet50", "resnext50", "mobilenetv2", "unet", "dcgan",
+];
+
+/// The five models of Fig 10.
+pub const FIG10_MODELS: [&str; 5] = ["resnet50", "vgg16", "resnext50", "mobilenetv2", "unet"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_validate() {
+        for name in ALL {
+            let n = by_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            n.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!n.layers.is_empty(), "{name} empty");
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(by_name("lenet-9000").is_err());
+    }
+
+    #[test]
+    fn vgg16_macs_magnitude() {
+        // VGG16 conv stack is ~15.3 GMACs at 224x224; accept 14-17 G.
+        let n = by_name("vgg16-conv").unwrap();
+        let g = n.macs() as f64 / 1e9;
+        assert!((14.0..17.0).contains(&g), "vgg16 conv GMACs = {g}");
+    }
+
+    #[test]
+    fn alexnet_macs_magnitude() {
+        // AlexNet conv stack ~0.66 GMACs (single-GPU variant ~1.07); accept 0.5-1.3 G.
+        let n = by_name("alexnet").unwrap();
+        let conv_macs: u64 = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, crate::model::layer::Op::Conv2d | crate::model::layer::Op::PointwiseConv))
+            .map(|l| l.macs())
+            .sum();
+        let g = conv_macs as f64 / 1e9;
+        assert!((0.5..1.3).contains(&g), "alexnet conv GMACs = {g}");
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise_and_pointwise() {
+        let n = by_name("mobilenetv2").unwrap();
+        use crate::model::layer::OpClass;
+        assert!(!n.layers_of(OpClass::Depthwise).is_empty());
+        assert!(!n.layers_of(OpClass::Pointwise).is_empty());
+    }
+
+    #[test]
+    fn unet_has_transposed() {
+        let n = by_name("unet").unwrap();
+        use crate::model::layer::OpClass;
+        assert!(!n.layers_of(OpClass::Transposed).is_empty());
+    }
+
+    #[test]
+    fn resnet_residual_links_present() {
+        let n = by_name("resnet50").unwrap();
+        use crate::model::layer::OpClass;
+        assert!(!n.layers_of(OpClass::Residual).is_empty());
+    }
+}

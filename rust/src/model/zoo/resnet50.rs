@@ -1,0 +1,86 @@
+//! ResNet-50 (He et al., CVPR'16): bottleneck blocks expressed as the
+//! fine-grained operators of Table 4 (1x1 pointwise, 3x3 conv, 1x1
+//! pointwise, residual add).
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// Append one bottleneck block: in_c -> mid_c (1x1) -> mid_c (3x3/stride)
+/// -> out_c (1x1) + residual.
+fn bottleneck(layers: &mut Vec<Layer>, stage: &str, idx: usize, in_c: u64, mid_c: u64, out_c: u64, hw_in: u64, stride: u64) -> u64 {
+    let p = format!("{stage}_{idx}");
+    let hw_out = hw_in / stride;
+    layers.push(Layer::conv2d(&format!("{p}_pw1"), 1, mid_c, in_c, hw_in, hw_in, 1, 1, 1));
+    // 3x3 pad-1: input extent hw_in + 2 so output = hw_in / stride.
+    layers.push(Layer::conv2d(&format!("{p}_conv3"), 1, mid_c, mid_c, hw_in + 2, hw_in + 2, 3, 3, stride));
+    layers.push(Layer::conv2d(&format!("{p}_pw2"), 1, out_c, mid_c, hw_out, hw_out, 1, 1, 1));
+    layers.push(Layer::residual(&format!("{p}_add"), 1, out_c, hw_out, hw_out));
+    hw_out
+}
+
+/// ResNet-50: conv1, 4 stages of [3, 4, 6, 3] bottlenecks, fc.
+pub fn network() -> Network {
+    let mut layers = Vec::new();
+    // conv1: 7x7/s2 pad 3 over 224 -> 112 (input extent 224+6=230).
+    layers.push(Layer::conv2d("conv1", 1, 64, 3, 230, 230, 7, 7, 2));
+    // (after 3x3/s2 maxpool -> 56x56)
+    layers.push(Layer::pooling("pool1", 1, 64, 113, 113, 3, 2));
+    let stages: [(&str, usize, u64, u64, u64, u64); 4] = [
+        // (name, blocks, in_c of first block, mid, out, input hw)
+        ("conv2", 3, 64, 64, 256, 56),
+        ("conv3", 4, 256, 128, 512, 56),
+        ("conv4", 6, 512, 256, 1024, 28),
+        ("conv5", 3, 1024, 512, 2048, 14),
+    ];
+    for (name, blocks, first_in, mid, out, hw) in stages {
+        let mut hw_cur = hw;
+        let mut in_c = first_in;
+        for b in 0..blocks {
+            // First block of conv3/4/5 downsamples.
+            let stride = if b == 0 && name != "conv2" { 2 } else { 1 };
+            hw_cur = bottleneck(&mut layers, name, b + 1, in_c, mid, out, hw_cur, stride);
+            in_c = out;
+        }
+    }
+    layers.push(Layer::fully_connected("fc1000", 1, 1000, 2048));
+    Network::new("resnet50", layers)
+}
+
+/// CONV1 — the "early layer" exemplar of Fig 11.
+pub fn conv1() -> Layer {
+    network().layers[0].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_matches_published() {
+        let l = conv1();
+        assert_eq!(l.y_out(), 112);
+        assert_eq!(l.k, 64);
+    }
+
+    #[test]
+    fn block_counts() {
+        let n = network();
+        // 16 bottlenecks x 4 ops + conv1 + pool1 + fc = 67 layers.
+        assert_eq!(n.layers.len(), 16 * 4 + 3);
+    }
+
+    #[test]
+    fn total_macs_magnitude() {
+        // ~3.8-4.1 GMACs for ResNet-50.
+        let g = network().macs() as f64 / 1e9;
+        assert!((3.0..5.0).contains(&g), "resnet50 GMACs = {g}");
+    }
+
+    #[test]
+    fn stage_output_sizes() {
+        let n = network();
+        let last = n.layers.iter().rfind(|l| l.name.contains("conv5") && l.name.contains("pw2")).unwrap();
+        assert_eq!(last.y_out(), 7);
+        assert_eq!(last.k, 2048);
+    }
+}

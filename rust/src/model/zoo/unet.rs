@@ -1,0 +1,76 @@
+//! U-Net (Ronneberger et al., MICCAI'15): the 572x572 biomedical
+//! segmentation network — wide shallow activations, contracting path,
+//! and transposed-conv up-path (Table 4's TRCONV exemplar).
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// Classic U-Net (valid convs, 572x572 input).
+pub fn network() -> Network {
+    let mut layers = Vec::new();
+    // Contracting path: double 3x3 valid convs, then 2x2 maxpool.
+    let down: [(u64, u64, u64); 5] = [
+        // (in_c, out_c, input hw)
+        (1, 64, 572),
+        (64, 128, 284),
+        (128, 256, 140),
+        (256, 512, 68),
+        (512, 1024, 32),
+    ];
+    for (i, (in_c, out_c, hw)) in down.iter().enumerate() {
+        let lvl = i + 1;
+        layers.push(Layer::conv2d(&format!("down{lvl}_conv1"), 1, *out_c, *in_c, *hw, *hw, 3, 3, 1));
+        layers.push(Layer::conv2d(&format!("down{lvl}_conv2"), 1, *out_c, *out_c, hw - 2, hw - 2, 3, 3, 1));
+        if lvl < 5 {
+            layers.push(Layer::pooling(&format!("pool{lvl}"), 1, *out_c, hw - 4, hw - 4, 2, 2));
+        }
+    }
+    // Expanding path: 2x2 up-conv (transposed), concat, double 3x3 convs.
+    let up: [(u64, u64, u64); 4] = [
+        // (in_c, out_c, pre-upsample hw)
+        (1024, 512, 28),
+        (512, 256, 52),
+        (256, 128, 100),
+        (128, 64, 196),
+    ];
+    for (i, (in_c, out_c, hw)) in up.iter().enumerate() {
+        let lvl = i + 1;
+        layers.push(Layer::transposed_conv(&format!("up{lvl}_upconv"), 1, *out_c, *in_c, *hw, *hw, 2, 2, 2));
+        let hw2 = hw * 2;
+        // After concat, channels double.
+        layers.push(Layer::conv2d(&format!("up{lvl}_conv1"), 1, *out_c, *in_c, hw2, hw2, 3, 3, 1));
+        layers.push(Layer::conv2d(&format!("up{lvl}_conv2"), 1, *out_c, *out_c, hw2 - 2, hw2 - 2, 3, 3, 1));
+    }
+    // Final 1x1 conv to 2 classes.
+    layers.push(Layer::conv2d("out_conv", 1, 2, 64, 388, 388, 1, 1, 1));
+    Network::new("unet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_is_572_wide() {
+        let n = network();
+        assert_eq!(n.layers[0].y, 572);
+        // Output segmentation map is 388x388 in the classic config.
+        let last = n.layers.last().unwrap();
+        assert_eq!(last.y_out(), 388);
+    }
+
+    #[test]
+    fn has_four_upconvs() {
+        let n = network();
+        let ups = n.layers.iter().filter(|l| l.name.contains("upconv")).count();
+        assert_eq!(ups, 4);
+    }
+
+    #[test]
+    fn macs_magnitude() {
+        // U-Net 572x572 is heavy: ~170 GMACs dense (the up-path runs on
+        // the upsampled grids).
+        let g = network().macs() as f64 / 1e9;
+        assert!((100.0..250.0).contains(&g), "unet GMACs = {g}");
+    }
+}

@@ -1,0 +1,85 @@
+//! VGG16 (Simonyan & Zisserman, ICLR'15) — configuration D.
+//!
+//! 13 3x3/s1 same-padded conv layers + 3 FC layers. Input-centric
+//! convention: padded inputs (Y = out + 2) so Y' matches the published
+//! output sizes.
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// Full VGG16: conv1_1 .. conv5_3 + fc6/fc7/fc8.
+pub fn network() -> Network {
+    let mut layers = conv_only().layers;
+    layers.push(Layer::fully_connected("fc6", 1, 4096, 25088)); // 512*7*7
+    layers.push(Layer::fully_connected("fc7", 1, 4096, 4096));
+    layers.push(Layer::fully_connected("fc8", 1, 1000, 4096));
+    Network::new("vgg16", layers)
+}
+
+/// The 13-layer conv stack (what Fig 9's MAERI validation and Fig 13's
+/// DSE use).
+pub fn conv_only() -> Network {
+    // (name, K, C, out_hw): 3x3/s1 pad-1 conv => input extent out_hw + 2.
+    let cfg: [(&str, u64, u64, u64); 13] = [
+        ("conv1_1", 64, 3, 224),
+        ("conv1_2", 64, 64, 224),
+        ("conv2_1", 128, 64, 112),
+        ("conv2_2", 128, 128, 112),
+        ("conv3_1", 256, 128, 56),
+        ("conv3_2", 256, 256, 56),
+        ("conv3_3", 256, 256, 56),
+        ("conv4_1", 512, 256, 28),
+        ("conv4_2", 512, 512, 28),
+        ("conv4_3", 512, 512, 28),
+        ("conv5_1", 512, 512, 14),
+        ("conv5_2", 512, 512, 14),
+        ("conv5_3", 512, 512, 14),
+    ];
+    let layers = cfg
+        .iter()
+        .map(|&(name, k, c, out)| Layer::conv2d(name, 1, k, c, out + 2, out + 2, 3, 3, 1))
+        .collect();
+    Network::new("vgg16-conv", layers)
+}
+
+/// The early/late exemplar layers used throughout §5.2 (Fig 13, Table 5):
+/// CONV2 (early: wide & shallow) and CONV13 (late: narrow & deep).
+pub fn conv2() -> Layer {
+    conv_only().layers[1].clone()
+}
+pub fn conv13() -> Layer {
+    conv_only().layers[12].clone()
+}
+/// CONV11 — the intro's NVDLA-style DSE example layer.
+pub fn conv11() -> Layer {
+    conv_only().layers[10].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs_three_fcs() {
+        let n = network();
+        assert_eq!(n.layers.len(), 16);
+        assert_eq!(conv_only().layers.len(), 13);
+    }
+
+    #[test]
+    fn output_sizes_match_published() {
+        for l in conv_only().layers {
+            // Same-padded 3x3/s1: Y' = Y - 2.
+            assert_eq!(l.y_out(), l.y - 2, "{}", l.name);
+        }
+        assert_eq!(conv2().y_out(), 224);
+        assert_eq!(conv13().y_out(), 14);
+    }
+
+    #[test]
+    fn early_late_exemplars() {
+        use crate::model::layer::OpClass;
+        assert_eq!(conv2().class(), OpClass::ConvEarly);
+        assert_eq!(conv13().class(), OpClass::ConvLate);
+    }
+}

@@ -1,0 +1,134 @@
+//! Shared experiment drivers: the benches and examples call these to
+//! regenerate the paper's tables/figures, so the logic is tested once
+//! here and formatted consistently.
+
+use anyhow::Result;
+
+use crate::dse::engine::DesignPoint;
+use crate::dse::pareto::{best, Optimize};
+use crate::engine::analysis::{analyze_layer, LayerStats};
+use crate::hw::config::HwConfig;
+
+use crate::ir::styles;
+use crate::model::layer::Layer;
+use crate::util::table::{num, Scatter, Table};
+
+/// Fig 10-style row: one (model/layer, dataflow) runtime+energy pair.
+pub fn dataflow_comparison(layer: &Layer, hw: &HwConfig) -> Result<Vec<LayerStats>> {
+    let mut out = Vec::new();
+    for df in styles::all_styles() {
+        if let Ok(s) = analyze_layer(layer, &df, hw) {
+            out.push(s);
+        }
+    }
+    Ok(out)
+}
+
+/// Render per-dataflow stats as a table.
+pub fn stats_table(stats: &[LayerStats]) -> Table {
+    let mut t = Table::new(&[
+        "dataflow", "runtime(cyc)", "energy(uJ)", "util", "L2 rd", "L2 wr", "peak BW", "L1 req", "L2 req",
+    ]);
+    for s in stats {
+        t.row(&[
+            s.dataflow.clone(),
+            num(s.runtime),
+            num(s.energy.total() / 1e6),
+            format!("{:.3}", s.util),
+            num(s.l2_reads.iter().sum::<f64>()),
+            num(s.l2_writes.iter().sum::<f64>()),
+            num(s.peak_bw_need),
+            s.l1_req.to_string(),
+            s.l2_req.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig 13-style scatter: area vs throughput, with optima marked.
+pub fn design_space_scatter(points: &[DesignPoint], macs: f64, title: &str) -> String {
+    let mut sc = Scatter::new(title, "area (mm2)", "throughput (MACs/cycle)");
+    for p in points.iter().filter(|p| p.valid) {
+        sc.point(p.area_mm2, p.throughput(macs), '.');
+    }
+    if let Some(t) = best(points, Optimize::Throughput, macs) {
+        sc.point(t.area_mm2, t.throughput(macs), '*');
+    }
+    if let Some(e) = best(points, Optimize::Energy, macs) {
+        sc.point(e.area_mm2, e.throughput(macs), '+');
+    }
+    sc.render(72, 18)
+}
+
+/// Buffer-vs-throughput scatter (Fig 13 second column).
+pub fn buffer_scatter(points: &[DesignPoint], macs: f64, title: &str) -> String {
+    let mut sc = Scatter::new(title, "total buffer (KB)", "throughput (MACs/cycle)");
+    for p in points.iter().filter(|p| p.valid) {
+        let kb = (p.l1 * p.pes + p.l2) as f64 * 2.0 / 1024.0;
+        sc.point(kb, p.throughput(macs), '.');
+    }
+    sc.render(72, 18)
+}
+
+/// The energy-vs-throughput optimized comparison of §1 / §5.2.
+pub struct OptimaComparison {
+    pub throughput_opt: DesignPoint,
+    pub energy_opt: DesignPoint,
+    pub power_ratio: f64,
+    pub sram_ratio: f64,
+    pub pe_ratio: f64,
+    pub edp_improvement: f64,
+    pub throughput_fraction: f64,
+}
+
+/// Compare the throughput- and energy-optimized design points.
+pub fn compare_optima(points: &[DesignPoint], macs: f64) -> Option<OptimaComparison> {
+    let t = best(points, Optimize::Throughput, macs)?.clone();
+    let e = best(points, Optimize::Energy, macs)?.clone();
+    let sram = |p: &DesignPoint| (p.l1 * p.pes + p.l2) as f64;
+    Some(OptimaComparison {
+        power_ratio: t.power_mw / e.power_mw.max(1e-9),
+        sram_ratio: sram(&e) / sram(&t).max(1e-9),
+        pe_ratio: e.pes as f64 / t.pes as f64,
+        edp_improvement: 1.0 - e.edp() / t.edp().max(1e-9),
+        throughput_fraction: e.throughput(macs) / t.throughput(macs).max(1e-9),
+        throughput_opt: t,
+        energy_opt: e,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn comparison_runs_all_styles() {
+        let stats = dataflow_comparison(&vgg16::conv13(), &HwConfig::fig10_default()).unwrap();
+        assert!(stats.len() >= 4, "most styles must analyze conv13");
+        let t = stats_table(&stats);
+        assert!(t.render().contains("KC-P"));
+    }
+
+    #[test]
+    fn optima_comparison_on_synthetic_points() {
+        use crate::dse::engine::DesignPoint;
+        let mk = |pes, runtime: f64, energy: f64, power, l1, l2| DesignPoint {
+            dataflow: "t".into(),
+            pes,
+            bandwidth: 16,
+            l1,
+            l2,
+            runtime,
+            energy_pj: energy,
+            area_mm2: 10.0,
+            power_mw: power,
+            valid: true,
+        };
+        let pts = vec![mk(256, 100.0, 1000.0, 400.0, 512, 100_000), mk(200, 160.0, 500.0, 200.0, 4096, 500_000)];
+        let c = compare_optima(&pts, 1e6).unwrap();
+        assert!(c.power_ratio > 1.0);
+        assert!(c.sram_ratio > 1.0);
+        assert!(c.throughput_fraction < 1.0);
+    }
+}

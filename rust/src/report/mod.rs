@@ -1,0 +1,3 @@
+//! Experiment report emitters shared by the benches and examples.
+
+pub mod experiments;

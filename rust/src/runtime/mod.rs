@@ -1,0 +1,265 @@
+//! PJRT runtime: load the AOT-compiled batched DSE evaluator
+//! (`artifacts/dse_eval.hlo.txt`, produced once by `make artifacts` from
+//! the L1 Pallas kernel + L2 JAX graph) and execute it from the Rust hot
+//! path. Python is never on this path — the HLO text is compiled by the
+//! `xla` crate's PJRT CPU client at startup.
+//!
+//! The artifact contract (shapes, scalar layout, formulas) is shared
+//! with `python/compile/model.py`; [`scalars_layout`] documents it and
+//! integration tests cross-check the numbers against the scalar Rust
+//! evaluator in [`crate::dse::engine`].
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::dse::engine::{CaseTable, CASE_FEATURES};
+use crate::hw::area;
+use crate::hw::energy;
+
+/// Maximum case rows per artifact invocation (must match
+/// `python/compile/model.py:C_MAX`).
+pub const C_MAX: usize = 128;
+/// Design points per invocation (must match `model.py:D_MAX`).
+pub const D_MAX: usize = 512;
+/// Scalar vector width (must match `model.py:S_WIDTH`).
+pub const S_WIDTH: usize = 32;
+
+/// One design point input: bandwidth, latency, placed L1/L2 (elements).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignIn {
+    pub bandwidth: f64,
+    pub latency: f64,
+    pub l1: f64,
+    pub l2: f64,
+}
+
+/// One evaluated output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOut {
+    pub runtime: f64,
+    pub energy_pj: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub valid: bool,
+}
+
+/// Build the scalar input vector for a case table + budgets.
+/// Layout (indices):
+/// ```text
+///  0 units0            1 activity.macs      2 activity.l2_reads
+///  3 activity.l2_writes 4 activity.l1_reads 5 activity.l1_writes
+///  6 activity.noc      7 noc_hops           8 pes
+///  9 area_budget      10 power_budget
+/// 11 L1_A  12 L1_B  13 L2_A  14 L2_B  15 write_factor
+/// 16 mac_pj  17 noc_hop_pj
+/// 18 pe_area 19 sram_area 20 bus_area 21 arb_area
+/// 22 pe_power 23 sram_power 24 bus_power 25 arb_power
+/// 26..31 reserved (0)
+/// ```
+pub fn scalars_layout(
+    table: &CaseTable,
+    noc_hops: u64,
+    area_budget: f64,
+    power_budget: f64,
+) -> [f32; S_WIDTH] {
+    let mut s = [0f32; S_WIDTH];
+    s[0] = table.units0 as f32;
+    s[1] = table.activity.macs as f32;
+    s[2] = table.activity.l2_reads as f32;
+    s[3] = table.activity.l2_writes as f32;
+    s[4] = table.activity.l1_reads as f32;
+    s[5] = table.activity.l1_writes as f32;
+    s[6] = table.activity.noc_delivered as f32;
+    s[7] = noc_hops as f32;
+    s[8] = table.pes as f32;
+    s[9] = area_budget as f32;
+    s[10] = power_budget as f32;
+    // Energy-curve constants from the Rust model — one source of truth
+    // for both evaluators.
+    s[11] = energy::L1_A as f32;
+    s[12] = energy::L1_B as f32;
+    s[13] = energy::L2_A as f32;
+    s[14] = energy::L2_B as f32;
+    s[15] = energy::WRITE_FACTOR as f32;
+    s[16] = 0.2; // mac pJ
+    s[17] = 0.06; // NoC hop pJ
+    let ac = area::coefficients();
+    for (i, v) in ac.iter().enumerate() {
+        s[18 + i] = *v as f32;
+    }
+    s
+}
+
+/// The compiled batched evaluator.
+pub struct BatchEvaluator {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BatchEvaluator {
+    /// Load + compile the HLO-text artifact on the PJRT CPU client.
+    pub fn load(path: &Path) -> Result<BatchEvaluator> {
+        ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling artifact")?;
+        Ok(BatchEvaluator { exe })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_path() -> std::path::PathBuf {
+        std::path::PathBuf::from(
+            std::env::var("MAESTRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )
+        .join("dse_eval.hlo.txt")
+    }
+
+    /// Evaluate up to [`D_MAX`] designs against a case table. Larger
+    /// design lists are chunked by the coordinator, larger case tables
+    /// are row-chunked here (runtime is additive across row chunks;
+    /// energy/area/validity come from the scalar inputs and are computed
+    /// on the first chunk only).
+    pub fn evaluate(
+        &self,
+        table: &CaseTable,
+        designs: &[DesignIn],
+        noc_hops: u64,
+        area_budget: f64,
+        power_budget: f64,
+    ) -> Result<Vec<EvalOut>> {
+        ensure!(designs.len() <= D_MAX, "at most {D_MAX} designs per call");
+        let mut out: Vec<EvalOut> = vec![
+            EvalOut { runtime: 0.0, energy_pj: 0.0, area_mm2: 0.0, power_mw: 0.0, valid: false };
+            designs.len()
+        ];
+        let n_chunks = table.rows.len().div_ceil(C_MAX).max(1);
+        let mut chunk0_runtime = vec![0f64; designs.len()];
+        for chunk in 0..n_chunks {
+            let rows = &table.rows[chunk * C_MAX..((chunk + 1) * C_MAX).min(table.rows.len())];
+            // Case tensor, zero-padded (occurrences 0 contribute nothing).
+            let mut cases = vec![0f32; C_MAX * CASE_FEATURES];
+            for (i, r) in rows.iter().enumerate() {
+                cases[i * CASE_FEATURES..(i + 1) * CASE_FEATURES].copy_from_slice(&r.to_features());
+            }
+            // Design tensor, padded by repeating the first design.
+            let mut dvec = vec![0f32; D_MAX * 4];
+            for i in 0..D_MAX {
+                let d = designs[i.min(designs.len() - 1)];
+                dvec[i * 4] = d.bandwidth as f32;
+                dvec[i * 4 + 1] = d.latency as f32;
+                dvec[i * 4 + 2] = d.l1 as f32;
+                dvec[i * 4 + 3] = d.l2 as f32;
+            }
+            let mut scal = scalars_layout(table, noc_hops, area_budget, power_budget);
+            if chunk > 0 {
+                // Energy/area already counted on chunk 0.
+                for v in scal[1..8].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            let c_lit = xla::Literal::vec1(&cases).reshape(&[C_MAX as i64, CASE_FEATURES as i64])?;
+            let d_lit = xla::Literal::vec1(&dvec).reshape(&[D_MAX as i64, 4])?;
+            let s_lit = xla::Literal::vec1(&scal);
+            let result = self.exe.execute::<xla::Literal>(&[c_lit, d_lit, s_lit])?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            ensure!(parts.len() == 5, "artifact must return 5 outputs, got {}", parts.len());
+            let runtime = parts[0].to_vec::<f32>()?;
+            let energy = parts[1].to_vec::<f32>()?;
+            let area_v = parts[2].to_vec::<f32>()?;
+            let power_v = parts[3].to_vec::<f32>()?;
+            let valid_v = parts[4].to_vec::<f32>()?;
+            for (i, o) in out.iter_mut().enumerate() {
+                o.runtime += runtime[i] as f64;
+                if chunk == 0 {
+                    chunk0_runtime[i] = (runtime[i] as f64).max(1.0);
+                    o.energy_pj = energy[i] as f64;
+                    o.area_mm2 = area_v[i] as f64;
+                    o.power_mw = power_v[i] as f64;
+                    o.valid = valid_v[i] > 0.5;
+                }
+            }
+        }
+        // Multi-chunk tables: the kernel computed the dynamic-power term
+        // against chunk 0's runtime only; rebase it onto the summed
+        // runtime and re-check the power budget.
+        if n_chunks > 1 {
+            for (i, o) in out.iter_mut().enumerate() {
+                let static_power = o.power_mw - o.energy_pj / chunk0_runtime[i];
+                o.power_mw = static_power + o.energy_pj / o.runtime.max(1.0);
+                o.valid = o.area_mm2 <= area_budget && o.power_mw <= power_budget;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Scalar (pure-Rust) reference of the artifact formulas — used as the
+/// fallback backend and the cross-check oracle.
+pub fn evaluate_scalar(
+    table: &CaseTable,
+    designs: &[DesignIn],
+    noc_hops: u64,
+    area_budget: f64,
+    power_budget: f64,
+) -> Vec<EvalOut> {
+    use crate::dse::engine::{eval_energy, eval_runtime};
+    designs
+        .iter()
+        .map(|d| {
+            let runtime = eval_runtime(table, d.bandwidth as u64, d.latency as u64);
+            let energy = eval_energy(&table.activity, d.l1 as u64, d.l2 as u64, noc_hops);
+            let ap = area::evaluate(table.pes, d.l1 as u64, d.l2 as u64, d.bandwidth as u64);
+            // Total power = static regression + dynamic (1 pJ/cycle =
+            // 1 mW at the 1 GHz reference clock).
+            let power = ap.power_mw + energy / runtime.max(1.0);
+            EvalOut {
+                runtime,
+                energy_pj: energy,
+                area_mm2: ap.area_mm2,
+                power_mw: power,
+                valid: ap.area_mm2 <= area_budget && power <= power_budget,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::engine::build_case_table;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn scalar_layout_is_stable() {
+        let layer = vgg16::conv13();
+        let table = build_case_table(&[&layer], &styles::x_p(), 64).unwrap();
+        let s = scalars_layout(&table, 2, 16.0, 450.0);
+        assert_eq!(s[0], table.units0 as f32);
+        assert_eq!(s[8], 64.0);
+        assert_eq!(s[9], 16.0);
+        // Energy anchors: L1 curve at 1024 elements ~ 1.2 pJ.
+        let l1 = s[11] as f64 + s[12] as f64 * (1024f64).sqrt();
+        assert!((l1 - 1.2).abs() < 0.1, "l1 curve {l1}");
+    }
+
+    #[test]
+    fn evaluate_scalar_consistent_with_dse_engine() {
+        let layer = vgg16::conv13();
+        let table = build_case_table(&[&layer], &styles::kc_p(), 256).unwrap();
+        let d = DesignIn { bandwidth: 16.0, latency: 2.0, l1: table.l1_req as f64, l2: table.l2_req as f64 };
+        let out = evaluate_scalar(&table, &[d], 2, 16.0, 450.0);
+        let want = crate::dse::engine::eval_runtime(&table, 16, 2);
+        assert_eq!(out[0].runtime, want);
+    }
+
+    #[test]
+    fn loading_missing_artifact_errors_cleanly() {
+        assert!(BatchEvaluator::load(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

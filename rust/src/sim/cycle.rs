@@ -1,0 +1,674 @@
+//! Cycle-level schedule simulator — the ground-truth substitute for the
+//! paper's RTL validation (Fig 9; substitution documented in DESIGN.md
+//! §4).
+//!
+//! Unlike the analytical engine (closed-form transition classes with
+//! amortized double buffering), this simulator *walks every step* of the
+//! schedule with an explicit three-stage transfer pipeline:
+//!
+//! ```text
+//! fetch[i]   starts when the fetch channel frees   (fetch_done[i-1])
+//! compute[i] starts at max(fetch_done[i], compute_done[i-1])
+//! drain[i]   starts at max(compute_done[i], drain_done[i-1])
+//! ```
+//!
+//! Data movement is derived from *explicit per-step index intervals* and
+//! interval set-difference against the previous step's resident data —
+//! no fresh-fraction formulas, no iteration-case merging. The two models
+//! share only the schedule semantics (`engine::mapping::build_schedule`),
+//! which is the specification both implement.
+
+use anyhow::{ensure, Result};
+
+use crate::engine::mapping::{build_schedule, LevelSchedule, PosState};
+use crate::engine::noc::{level_bandwidth, pipe_delay, reduction_delay};
+use crate::hw::config::{HwConfig, ReductionSupport};
+use crate::ir::dataflow::Dataflow;
+use crate::ir::dims::{Dim, DimMap};
+use crate::model::layer::Layer;
+use crate::model::tensor::{couplings, Coupling, TensorDim, ALL_TENSORS};
+
+/// Result of a cycle-level simulation.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub cycles: f64,
+    /// Unique L2 fetches per tensor [F, I, O-psum-reingress].
+    pub l2_reads: [f64; 3],
+    /// L2 writes (output psums + finals).
+    pub l2_writes: f64,
+    pub steps: u64,
+    pub macs: f64,
+}
+
+/// Per-dimension index interval `[start, start+len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+struct Iv {
+    start: u64,
+    len: u64,
+}
+
+impl Iv {
+    fn end(&self) -> u64 {
+        self.start + self.len
+    }
+    fn overlap(&self, o: &Iv) -> u64 {
+        let lo = self.start.max(o.start);
+        let hi = self.end().min(o.end());
+        hi.saturating_sub(lo)
+    }
+}
+
+/// Axis-aligned box footprint of a tensor (one interval per tensor dim).
+#[derive(Debug, Clone, Default, PartialEq)]
+struct Box_ {
+    ivs: Vec<Iv>,
+}
+
+impl Box_ {
+    fn volume(&self) -> u64 {
+        self.ivs.iter().map(|iv| iv.len).product()
+    }
+    /// |self \ prev| for axis-aligned boxes.
+    fn new_vs(&self, prev: &Box_) -> u64 {
+        if prev.ivs.len() != self.ivs.len() {
+            return self.volume();
+        }
+        let overlap: u64 = self.ivs.iter().zip(&prev.ivs).map(|(a, b)| a.overlap(b)).product();
+        self.volume() - overlap.min(self.volume())
+    }
+}
+
+/// Simulate a (layer, dataflow, hardware) triple. `max_steps` bounds the
+/// walk (error if exceeded) so tests cannot hang.
+pub fn simulate(layer: &Layer, dataflow: &Dataflow, hw: &HwConfig, max_steps: u64) -> Result<SimResult> {
+    let resolved = dataflow.resolve(layer, hw.num_pes)?;
+    ensure!(resolved.levels.len() <= 2, "simulator supports <= 2 cluster levels");
+    let top = build_schedule(&resolved.levels[0], &resolved.levels[0].parent_tile, layer)?;
+    let inner_level = resolved.levels.get(1);
+
+    let mut sim = LevelSim::new(&top, layer, hw, level_bandwidth(hw, 1), DimMap::default());
+    let mut res = SimResult::default();
+    let mut fetch_done = 0.0f64;
+    let mut compute_done = 0.0f64;
+    let mut drain_done = 0.0f64;
+
+    // Persistent inner-cluster buffer state (global coordinates): data a
+    // PE retained across outer steps is not re-streamed inside the
+    // cluster. Outputs reset per outer step (psums re-commit upward).
+    let mut inner_state: [Option<Box_>; 3] = [None, None, None];
+
+    let mut odo = Odometer::new(&top);
+    loop {
+        res.steps += 1;
+        ensure!(res.steps <= max_steps, "simulation exceeded {max_steps} steps");
+
+        let step = sim.step_footprints(&odo);
+        // Unique fetch: union box across units minus previous union box.
+        let mut fetch_elems = 0.0;
+        for (ti, _) in ALL_TENSORS.iter().enumerate() {
+            if ti == 2 {
+                continue; // outputs handled on the drain side
+            }
+            let newly = if hw.multicast {
+                step.union_new[ti] as f64
+            } else {
+                step.per_unit_new[ti] as f64
+            };
+            res.l2_reads[ti] += newly;
+            fetch_elems += newly;
+        }
+        // Partial-sum re-ingress: when the output tile entering this
+        // step was visited in an earlier reduction sweep (an outer
+        // reduction loop is mid-flight), its psums come back down for
+        // further accumulation (parent read-modify-write).
+        if step.out_new_union > 0 && sim.psum_revisit_active(&odo) {
+            let psum = if step.out_reduced && hw.reduction == ReductionSupport::None {
+                step.out_new_per_unit as f64 * step.active as f64
+            } else {
+                step.out_new_union as f64
+            };
+            res.l2_reads[2] += psum;
+            fetch_elems += psum;
+        }
+
+        // Compute time: inner level (if any) or PE MACs.
+        let (ct, macs) = match inner_level {
+            None => {
+                let m = step.macs_per_unit as f64 * layer.sparsity_macs_scale();
+                ((m / hw.pe_throughput as f64).ceil().max(1.0), step.macs_per_unit as f64 * step.active as f64)
+            }
+            Some(level) => {
+                let origin = sim.origins(&odo);
+                let (t, m) = simulate_inner(
+                    level,
+                    &step.tile,
+                    origin,
+                    layer,
+                    hw,
+                    top.units,
+                    &mut inner_state,
+                    max_steps,
+                )?;
+                (t, m * step.active as f64)
+            }
+        };
+        res.macs += macs * layer.sparsity_macs_scale();
+
+        // Drain: output tile leaves when its footprint shifts; simulate by
+        // draining the *newly produced* output volume each step (the
+        // non-fresh steps produce psum updates that stay local).
+        let mut drain_elems = step.out_new_union as f64;
+        let mut red = 0.0;
+        if step.out_reduced {
+            if hw.reduction == ReductionSupport::None {
+                drain_elems = step.out_new_per_unit as f64 * step.active as f64;
+            }
+            red = reduction_delay(hw.reduction, step.active);
+        }
+        res.l2_writes += drain_elems;
+
+        // Three-stage pipeline bookkeeping.
+        let f_start = fetch_done;
+        fetch_done = f_start + pipe_delay(fetch_elems, sim.bw, hw.noc_latency);
+        let c_start = fetch_done.max(compute_done);
+        compute_done = c_start + ct + red;
+        let d_start = compute_done.max(drain_done);
+        drain_done = d_start + pipe_delay(drain_elems, sim.bw, hw.noc_latency);
+
+        sim.retire(step);
+        if !odo.advance() {
+            break;
+        }
+    }
+    res.cycles = drain_done.max(compute_done);
+    Ok(res)
+}
+
+/// Simulate the inner level over a fixed parent tile at a global-space
+/// `origin`; `state` persists PE-retained data across outer steps.
+/// Returns (cycles, macs per one cluster execution).
+#[allow(clippy::too_many_arguments)]
+fn simulate_inner(
+    level: &crate::ir::dataflow::ResolvedLevel,
+    parent_tile: &DimMap<u64>,
+    origin: DimMap<u64>,
+    layer: &Layer,
+    hw: &HwConfig,
+    outer_units: u64,
+    state: &mut [Option<Box_>; 3],
+    max_steps: u64,
+) -> Result<(f64, f64)> {
+    let sched = build_schedule(level, parent_tile, layer)?;
+    let bw = level_bandwidth(hw, outer_units);
+    let mut sim = LevelSim::new(&sched, layer, hw, bw, origin);
+    // Retained filter/input data carries over; psums re-commit upward.
+    sim.prev_union[0] = state[0].take();
+    sim.prev_union[1] = state[1].take();
+    let mut odo = Odometer::new(&sched);
+    let mut fetch_done = 0.0f64;
+    let mut compute_done = 0.0f64;
+    let mut drain_done = 0.0f64;
+    let mut macs_total = 0.0;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        ensure!(steps <= max_steps, "inner simulation exceeded {max_steps} steps");
+        let step = sim.step_footprints(&odo);
+        let mut fetch_elems = 0.0;
+        for ti in 0..2 {
+            fetch_elems += if hw.multicast { step.union_new[ti] as f64 } else { step.per_unit_new[ti] as f64 };
+        }
+        if step.out_new_union > 0 && sim.psum_revisit_active(&odo) {
+            fetch_elems += if step.out_reduced && hw.reduction == ReductionSupport::None {
+                step.out_new_per_unit as f64 * step.active as f64
+            } else {
+                step.out_new_union as f64
+            };
+        }
+        let m = step.macs_per_unit as f64;
+        let ct = (m * layer.sparsity_macs_scale() / hw.pe_throughput as f64).ceil().max(1.0);
+        macs_total += m * step.active as f64;
+        let mut drain_elems = step.out_new_union as f64;
+        let mut red = 0.0;
+        if step.out_reduced {
+            if hw.reduction == ReductionSupport::None {
+                drain_elems = step.out_new_per_unit as f64 * step.active as f64;
+            }
+            red = reduction_delay(hw.reduction, step.active);
+        }
+        let f_start = fetch_done;
+        fetch_done = f_start + pipe_delay(fetch_elems, bw, hw.noc_latency);
+        let c_start = fetch_done.max(compute_done);
+        compute_done = c_start + ct + red;
+        let d_start = compute_done.max(drain_done);
+        drain_done = d_start + pipe_delay(drain_elems, bw, hw.noc_latency);
+        sim.retire(step);
+        if !odo.advance() {
+            break;
+        }
+    }
+    state[0] = sim.prev_union[0].take();
+    state[1] = sim.prev_union[1].take();
+    Ok((drain_done.max(compute_done), macs_total))
+}
+
+/// The nested-loop odometer over a level schedule (temporal loops +
+/// spatial fold, in directive order).
+struct Odometer {
+    /// (is_fold, dim index, total positions), outermost first.
+    loops: Vec<(bool, usize, u64)>,
+    pos: Vec<u64>,
+}
+
+impl Odometer {
+    fn new(s: &LevelSchedule) -> Odometer {
+        let mut loops = Vec::new();
+        for (i, d) in s.dims.iter().enumerate() {
+            if Some(i) == s.fold_order_idx {
+                loops.push((true, usize::MAX, s.fold_total()));
+            }
+            if !d.spatial {
+                loops.push((false, i, d.total_positions()));
+            }
+        }
+        if s.fold_order_idx.is_some() && !loops.iter().any(|l| l.0) {
+            loops.push((true, usize::MAX, s.fold_total()));
+        }
+        let pos = vec![0; loops.len()];
+        Odometer { loops, pos }
+    }
+
+    /// Advance the innermost loop; returns false when the walk is done.
+    fn advance(&mut self) -> bool {
+        for i in (0..self.loops.len()).rev() {
+            self.pos[i] += 1;
+            if self.pos[i] < self.loops[i].2 {
+                return true;
+            }
+            self.pos[i] = 0;
+        }
+        false
+    }
+
+    fn fold_pos(&self) -> u64 {
+        self.loops
+            .iter()
+            .zip(&self.pos)
+            .find(|((is_fold, _, _), _)| *is_fold)
+            .map(|(_, &p)| p)
+            .unwrap_or(0)
+    }
+
+    fn dim_pos(&self, dim_idx: usize) -> u64 {
+        self.loops
+            .iter()
+            .zip(&self.pos)
+            .find(|((is_fold, di, _), _)| !*is_fold && *di == dim_idx)
+            .map(|(_, &p)| p)
+            .unwrap_or(0)
+    }
+}
+
+/// One step's concrete footprints.
+struct StepFootprints {
+    tile: DimMap<u64>,
+    active: u64,
+    macs_per_unit: u64,
+    /// New elements per tensor, summed over units (no multicast collapse).
+    per_unit_new: [u64; 3],
+    /// New elements in the union box across units.
+    union_new: [u64; 3],
+    out_new_union: u64,
+    out_new_per_unit: u64,
+    out_reduced: bool,
+    /// Union boxes to retire into `prev`.
+    union_boxes: [Box_; 3],
+}
+
+/// Per-level simulation state: previous resident boxes.
+struct LevelSim<'a> {
+    s: &'a LevelSchedule,
+    layer: &'a Layer,
+    coup: [Coupling; 3],
+    prev_union: [Option<Box_>; 3],
+    bw: u64,
+    /// Global-space offset of this level's iteration (inner levels
+    /// iterate within the outer level's current tile).
+    origin: DimMap<u64>,
+}
+
+impl<'a> LevelSim<'a> {
+    fn new(
+        s: &'a LevelSchedule,
+        layer: &'a Layer,
+        _hw: &HwConfig,
+        bw: u64,
+        origin: DimMap<u64>,
+    ) -> LevelSim<'a> {
+        LevelSim { s, layer, coup: couplings(layer), prev_union: [None, None, None], bw, origin }
+    }
+
+    /// Global origins of the current step's unit-0 tile (handed to the
+    /// inner level so its intervals live in the same coordinate space).
+    fn origins(&self, odo: &Odometer) -> DimMap<u64> {
+        let mut o: DimMap<u64> = DimMap::default();
+        for d in &self.s.dims {
+            o.set(d.dim, self.dim_iv(odo, d.dim, 0).start);
+        }
+        o
+    }
+
+    /// Interval of a loop dim at the odometer's position, for unit `u`.
+    fn dim_iv(&self, odo: &Odometer, dim: Dim, unit: u64) -> Iv {
+        let idx = self.s.dims.iter().position(|d| d.dim == dim).unwrap();
+        let d = &self.s.dims[idx];
+        let base = self.origin.get(dim);
+        if d.spatial {
+            let joint_pos = odo.fold_pos() * self.s.units + unit;
+            let pos = joint_pos.min(d.total_positions().saturating_sub(1));
+            Iv { start: base + pos * d.offset, len: d.size }
+        } else {
+            let pos = odo.dim_pos(idx);
+            let state = if pos >= d.positions_full { PosState::Edge } else { PosState::Normal };
+            Iv { start: base + pos * d.offset, len: d.in_size(state) }
+        }
+    }
+
+    /// Output-space interval derived from act/win intervals.
+    fn out_iv(&self, act: Iv, win_dim: Dim, odo: &Odometer, unit: u64) -> Iv {
+        let w = self.dim_iv(odo, win_dim, unit);
+        let stride = self.layer.stride.max(1);
+        // Window semantics: outputs whose full window lies inside `act`,
+        // relative to the window's current start.
+        if act.len >= w.len {
+            // y' = (y - r) / stride over y in act, r in the *full* parent
+            // window for this level; use the windowed dim's `win` field.
+            let dsched = self.s.sched_of(if win_dim == Dim::R { Dim::Y } else { Dim::X });
+            let winlen = dsched.win.max(1);
+            if act.len < winlen {
+                // Joint diagonal: single output coordinate.
+                return Iv { start: act.start.saturating_sub(w.start) / stride, len: 1 };
+            }
+            let rows = (act.len - winlen) / stride + 1;
+            Iv { start: act.start / stride, len: rows.max(1) }
+        } else {
+            Iv { start: act.start.saturating_sub(w.start) / stride, len: 1 }
+        }
+    }
+
+    fn tensor_box(&self, odo: &Odometer, coupling: &Coupling, unit: u64) -> Box_ {
+        let mut ivs = Vec::with_capacity(coupling.dims.len());
+        for td in &coupling.dims {
+            let iv = match td {
+                TensorDim::Direct(d) => self.dim_iv(odo, *d, unit),
+                TensorDim::Windowed { act, win } => {
+                    let a = self.dim_iv(odo, *act, unit);
+                    self.out_iv(a, *win, odo, unit)
+                }
+            };
+            ivs.push(iv);
+        }
+        Box_ { ivs }
+    }
+
+    /// Union box across active units (footprints are consecutive along
+    /// spatial dims, so the union of boxes is a box).
+    fn union_box(&self, odo: &Odometer, coupling: &Coupling, active: u64) -> Box_ {
+        if active <= 1 {
+            return self.tensor_box(odo, coupling, 0);
+        }
+        let first = self.tensor_box(odo, coupling, 0);
+        let last = self.tensor_box(odo, coupling, active - 1);
+        let ivs = first
+            .ivs
+            .iter()
+            .zip(&last.ivs)
+            .map(|(a, b)| {
+                let start = a.start.min(b.start);
+                let end = a.end().max(b.end());
+                Iv { start, len: end - start }
+            })
+            .collect();
+        Box_ { ivs }
+    }
+
+    fn step_footprints(&mut self, odo: &Odometer) -> StepFootprints {
+        let fold_pos = odo.fold_pos();
+        let active = if self.s.spatial_positions <= self.s.units {
+            self.s.spatial_positions.max(1)
+        } else if fold_pos < self.s.folds_full {
+            self.s.units
+        } else {
+            self.s.fold_edge_units.max(1)
+        };
+
+        // Tile handed to each unit.
+        let mut tile: DimMap<u64> = DimMap::filled(1);
+        for d in &self.s.dims {
+            let iv = self.dim_iv(odo, d.dim, 0);
+            tile.set(d.dim, iv.len);
+        }
+
+        // MACs per unit from concrete intervals.
+        let macs_per_unit = self.macs_from_tile(odo);
+
+        let mut per_unit_new = [0u64; 3];
+        let mut union_new = [0u64; 3];
+        let mut union_boxes: [Box_; 3] = [Box_::default(), Box_::default(), Box_::default()];
+        for (ti, _) in ALL_TENSORS.iter().enumerate() {
+            if self.coup[ti].dims.is_empty() {
+                continue;
+            }
+            // Per-unit sum of new elements.
+            let mut sum_new = 0u64;
+            let mut prev_unit_box: Option<Box_> = None;
+            for u in 0..active {
+                let b = self.tensor_box(odo, &self.coup[ti], u);
+                // Against the same step's previous unit (halo share) and
+                // the previous step's union (temporal reuse).
+                let mut newv = match &self.prev_union[ti] {
+                    Some(p) => b.new_vs(p),
+                    None => b.volume(),
+                };
+                if let Some(pu) = &prev_unit_box {
+                    newv = newv.min(b.new_vs(pu));
+                }
+                sum_new += newv;
+                prev_unit_box = Some(b);
+            }
+            per_unit_new[ti] = sum_new;
+            let ub = self.union_box(odo, &self.coup[ti], active);
+            union_new[ti] = match &self.prev_union[ti] {
+                Some(p) => ub.new_vs(p),
+                None => ub.volume(),
+            };
+            union_boxes[ti] = ub;
+        }
+
+        // Output spatial reduction: unit boxes identical while some
+        // spatial dim varies.
+        let out_reduced = active > 1 && {
+            let b0 = self.tensor_box(odo, &self.coup[2], 0);
+            let b1 = self.tensor_box(odo, &self.coup[2], active - 1);
+            b0 == b1 && self.s.dims.iter().any(|d| d.spatial && !self.coup[2].couples_directly(d.dim))
+        };
+        let out_new_per_unit = {
+            let b = self.tensor_box(odo, &self.coup[2], 0);
+            match &self.prev_union[2] {
+                Some(p) => b.new_vs(p),
+                None => b.volume(),
+            }
+        };
+
+        StepFootprints {
+            tile,
+            active,
+            macs_per_unit,
+            per_unit_new,
+            union_new,
+            out_new_union: union_new[2],
+            out_new_per_unit,
+            out_reduced,
+            union_boxes,
+        }
+    }
+
+    /// Is the current step re-visiting previously retired output tiles?
+    /// True when any reduction-dim loop *outer* to the innermost
+    /// output-advancing loop is past its first position (mirrors
+    /// `engine::reuse::psum_revisits`, which the analytical model uses
+    /// to amortize the same traffic).
+    fn psum_revisit_active(&self, odo: &Odometer) -> bool {
+        let o = &self.coup[2];
+        let advancing = |l: &(bool, usize, u64)| -> bool {
+            if l.0 {
+                self.s
+                    .dims
+                    .iter()
+                    .filter(|d| d.spatial)
+                    .any(|d| crate::engine::reuse::output_advancing(o, d.dim))
+            } else {
+                crate::engine::reuse::output_advancing(o, self.s.dims[l.1].dim)
+            }
+        };
+        let reduction = |l: &(bool, usize, u64)| -> bool {
+            if l.0 {
+                self.s
+                    .dims
+                    .iter()
+                    .filter(|d| d.spatial)
+                    .any(|d| crate::engine::reuse::is_reduction_dim(self.layer, d.dim))
+            } else {
+                crate::engine::reuse::is_reduction_dim(self.layer, self.s.dims[l.1].dim)
+            }
+        };
+        let innermost_adv = odo
+            .loops
+            .iter()
+            .rposition(|l| advancing(l) && l.2 > 1)
+            .unwrap_or(0);
+        odo.loops[..innermost_adv]
+            .iter()
+            .zip(&odo.pos)
+            .any(|(l, &p)| reduction(l) && l.2 > 1 && p > 0)
+    }
+
+    fn retire(&mut self, step: StepFootprints) {
+        for (ti, b) in step.union_boxes.into_iter().enumerate() {
+            if !b.ivs.is_empty() {
+                self.prev_union[ti] = Some(b);
+            }
+        }
+    }
+
+    /// Exact MAC count for one unit's tile at the current position.
+    fn macs_from_tile(&self, odo: &Odometer) -> u64 {
+        let mut macs: u64 = 1;
+        for d in &self.s.dims {
+            let iv = self.dim_iv(odo, d.dim, 0);
+            match d.dim {
+                Dim::Y | Dim::X => {
+                    if d.joint_spatial {
+                        macs *= 1;
+                    } else if d.windowed {
+                        let winlen = d.win.max(1);
+                        let rows = if iv.len >= winlen { (iv.len - winlen) / d.stride.max(1) + 1 } else { 1 };
+                        macs *= rows;
+                    } else {
+                        macs *= iv.len;
+                    }
+                }
+                Dim::R | Dim::S => {
+                    if d.joint_spatial {
+                        macs *= 1;
+                    } else {
+                        macs *= iv.len;
+                    }
+                }
+                _ => macs *= iv.len,
+            }
+        }
+        macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::styles;
+    use crate::model::tensor::TensorKind;
+
+    fn small_layer() -> Layer {
+        Layer::conv2d("small", 1, 8, 6, 12, 12, 3, 3, 1)
+    }
+
+    fn hw(pes: u64) -> HwConfig {
+        HwConfig { num_pes: pes, ..HwConfig::fig10_default() }
+    }
+
+    #[test]
+    fn sim_mac_conservation() {
+        let layer = small_layer();
+        for df in [styles::c_p(), styles::x_p(), styles::yx_p(), styles::yr_p()] {
+            let r = simulate(&layer, &df, &hw(16), 10_000_000).unwrap_or_else(|e| panic!("{}: {e}", df.name));
+            assert!(
+                (r.macs - layer.macs() as f64).abs() < 1e-6 * layer.macs() as f64,
+                "{}: {} != {}",
+                df.name,
+                r.macs,
+                layer.macs()
+            );
+        }
+    }
+
+    #[test]
+    fn sim_fetches_cover_tensors() {
+        use crate::model::tensor::tensor_elements;
+        let layer = small_layer();
+        let r = simulate(&layer, &styles::x_p(), &hw(16), 10_000_000).unwrap();
+        assert!(r.l2_reads[0] >= tensor_elements(&layer, TensorKind::Filter) as f64 * 0.999);
+        assert!(r.l2_reads[1] >= tensor_elements(&layer, TensorKind::Input) as f64 * 0.999);
+        assert!(r.l2_writes >= tensor_elements(&layer, TensorKind::Output) as f64 * 0.999);
+    }
+
+    #[test]
+    fn sim_respects_compute_roofline() {
+        let layer = small_layer();
+        let h = hw(16);
+        let r = simulate(&layer, &styles::yx_p(), &h, 10_000_000).unwrap();
+        let roofline = layer.macs() as f64 / (h.num_pes * h.pe_throughput) as f64;
+        assert!(r.cycles >= roofline, "{} < {roofline}", r.cycles);
+    }
+
+    #[test]
+    fn sim_step_budget_enforced() {
+        let layer = small_layer();
+        assert!(simulate(&layer, &styles::x_p(), &hw(16), 3).is_err());
+    }
+
+    #[test]
+    fn analytical_model_matches_simulator_within_tolerance() {
+        // The Fig 9 claim: analytical runtime within a few % of the
+        // step-walking ground truth. Use a moderate layer so the test is
+        // fast; the bench runs the full VGG16/AlexNet validation.
+        use crate::engine::analysis::analyze_layer;
+        let layer = Layer::conv2d("v", 1, 16, 16, 18, 18, 3, 3, 1);
+        let h = hw(32);
+        for df in [styles::x_p(), styles::kc_p(), styles::yx_p()] {
+            let sim = match simulate(&layer, &df, &h, 50_000_000) {
+                Ok(r) => r,
+                Err(_) => continue, // dataflow invalid at this PE count
+            };
+            let ana = analyze_layer(&layer, &df, &h).unwrap();
+            let err = (ana.runtime - sim.cycles).abs() / sim.cycles;
+            assert!(
+                err < 0.15,
+                "{}: analytical {} vs sim {} ({}%)",
+                df.name,
+                ana.runtime,
+                sim.cycles,
+                err * 100.0
+            );
+        }
+    }
+}

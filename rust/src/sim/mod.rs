@@ -1,0 +1,4 @@
+//! Cycle-level reference simulator — the RTL-simulation substitute used
+//! to validate the analytical model (Fig 9). See [`cycle`].
+
+pub mod cycle;

@@ -1,0 +1,156 @@
+//! Minimal benchmarking harness (criterion substitute).
+//!
+//! `cargo bench` targets in this repo are declared with `harness = false`
+//! and drive this module directly. Each measurement runs a warm-up, then
+//! `samples` timed iterations, and reports min / median / mean / p95 plus
+//! derived throughput. Results are printed as aligned text (captured into
+//! `bench_output.txt` by the Makefile) — the experiment benches also emit
+//! the paper-figure tables around these timings.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn min(&self) -> Duration {
+        self.samples.iter().copied().min().unwrap_or_default()
+    }
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+    pub fn p95(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((s.len() as f64 * 0.95) as usize).min(s.len().saturating_sub(1));
+        s[idx]
+    }
+}
+
+/// Time `f` with `samples` measured iterations after `warmup` unmeasured
+/// ones. The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: u32, samples: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        out.push(t0.elapsed());
+    }
+    let m = Measurement { name: name.to_string(), samples: out };
+    print_measurement(&m, None);
+    m
+}
+
+/// Like [`bench`] but also reports `items / sec` throughput where `items`
+/// is the amount of work done per iteration (e.g. design points).
+pub fn bench_throughput<T, F: FnMut() -> T>(
+    name: &str,
+    items_per_iter: u64,
+    warmup: u32,
+    samples: u32,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        out.push(t0.elapsed());
+    }
+    let m = Measurement { name: name.to_string(), samples: out };
+    print_measurement(&m, Some(items_per_iter));
+    m
+}
+
+fn print_measurement(m: &Measurement, items: Option<u64>) {
+    let med = m.median();
+    let line = format!(
+        "bench {:<44} min {:>12} med {:>12} mean {:>12}",
+        m.name,
+        fmt_dur(m.min()),
+        fmt_dur(med),
+        fmt_dur(m.mean()),
+    );
+    match items {
+        Some(n) if med.as_nanos() > 0 => {
+            let rate = n as f64 / med.as_secs_f64();
+            println!("{line}  thrpt {:>14}/s", fmt_rate(rate));
+        }
+        _ => println!("{line}"),
+    }
+}
+
+/// Format a duration with an adaptive unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a rate with an adaptive SI suffix.
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header so bench output is navigable per figure/table.
+pub fn section(title: &str) {
+    println!();
+    println!("==== {title} ====");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let m = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.min() <= m.mean() || m.samples.iter().all(|d| d.as_nanos() == 0));
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("us"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(10)).contains("s"));
+        assert_eq!(fmt_rate(2_000_000.0), "2.00M");
+    }
+}

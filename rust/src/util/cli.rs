@@ -1,0 +1,186 @@
+//! Hand-rolled CLI argument parsing (clap substitute).
+//!
+//! Supports `program <subcommand> [--flag value] [--switch] [positional..]`
+//! with typed accessors and an auto-generated usage string. Unknown flags
+//! are errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand, `--key value` options, `--switch`
+/// booleans, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Specification of one accepted flag, used for validation + usage text.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv[1..]`, validating flags against `spec`. The first
+    /// non-flag token is the subcommand when `expect_subcommand` is set.
+    pub fn parse(
+        argv: &[String],
+        spec: &[FlagSpec],
+        expect_subcommand: bool,
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let flag = spec
+                    .iter()
+                    .find(|f| f.name == name)
+                    .with_context(|| format!("unknown flag --{name}\n{}", usage(spec)))?;
+                if flag.takes_value {
+                    i += 1;
+                    let val = argv
+                        .get(i)
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    args.options.insert(name.to_string(), val.clone());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if expect_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// String option with default.
+    pub fn opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn opt_required(&self, name: &str) -> Result<String> {
+        self.options
+            .get(name)
+            .cloned()
+            .with_context(|| format!("missing required flag --{name}"))
+    }
+
+    /// Typed numeric option with default.
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    /// Typed float option with default.
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad float '{v}'")),
+        }
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Parse a comma-separated list of integers (e.g. `--pes 64,128,256`).
+    pub fn opt_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<u64>()
+                        .with_context(|| format!("--{name}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block from a flag spec.
+pub fn usage(spec: &[FlagSpec]) -> String {
+    let mut out = String::from("flags:\n");
+    for f in spec {
+        let arg = if f.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{arg}\n      {}\n", f.name, f.help));
+    }
+    out
+}
+
+/// Validate that a value is one of an allowed set (for enum-ish flags).
+pub fn expect_one_of(name: &str, value: &str, allowed: &[&str]) -> Result<()> {
+    if allowed.contains(&value) {
+        Ok(())
+    } else {
+        bail!("--{name}: '{value}' not in {allowed:?}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "model", takes_value: true, help: "model name" },
+            FlagSpec { name: "pes", takes_value: true, help: "PE list" },
+            FlagSpec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(
+            &sv(&["analyze", "--model", "vgg16", "--verbose", "extra"]),
+            &spec(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("analyze"));
+        assert_eq!(a.opt("model", ""), "vgg16");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&sv(&["--nope"]), &spec(), false).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--model"]), &spec(), false).is_err());
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = Args::parse(&sv(&["--pes", "64, 128,256"]), &spec(), false).unwrap();
+        assert_eq!(a.opt_u64_list("pes", &[]).unwrap(), vec![64, 128, 256]);
+        assert_eq!(a.opt_u64_list("absent", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn one_of() {
+        assert!(expect_one_of("obj", "edp", &["runtime", "energy", "edp"]).is_ok());
+        assert!(expect_one_of("obj", "zap", &["runtime", "energy", "edp"]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared utilities: deterministic PRNG, mini property-test harness,
+//! bench harness, CLI argument parsing, and table formatting.
+//!
+//! The offline build image ships only the `xla` crate's dependency
+//! closure, so these modules stand in for `rand`, `proptest`, `criterion`
+//! and `clap` respectively (see DESIGN.md §4 — substitutions).
+
+pub mod benchkit;
+pub mod cli;
+pub mod propcheck;
+pub mod rng;
+pub mod table;

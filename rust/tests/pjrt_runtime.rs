@@ -1,0 +1,130 @@
+//! Integration: the AOT artifact (L1 Pallas kernel + L2 JAX graph,
+//! lowered to HLO text) loads on the PJRT CPU client and its outputs
+//! match the Rust scalar evaluator — the two implementations of the DSE
+//! evaluation contract.
+//!
+//! Requires `make artifacts`; tests exit early (with a loud message)
+//! when the artifact is absent so `cargo test` remains runnable on a
+//! fresh checkout.
+
+use maestro::dse::engine::build_case_table;
+use maestro::dse::space::kc_p_ct;
+use maestro::ir::styles;
+use maestro::model::zoo::vgg16;
+use maestro::runtime::{evaluate_scalar, BatchEvaluator, DesignIn, D_MAX};
+
+fn artifact() -> Option<BatchEvaluator> {
+    let path = BatchEvaluator::default_path();
+    if !path.exists() {
+        eprintln!(
+            "SKIP: {} missing — run `make artifacts` for the PJRT integration tests",
+            path.display()
+        );
+        return None;
+    }
+    Some(BatchEvaluator::load(&path).expect("artifact must compile on PJRT CPU"))
+}
+
+fn designs(n: usize) -> Vec<DesignIn> {
+    (0..n)
+        .map(|i| DesignIn {
+            bandwidth: (1 + (i * 7) % 255) as f64,
+            latency: (i % 5) as f64,
+            l1: (64 + (i * 131) % 65_000) as f64,
+            l2: (1024 + (i * 7919) % 3_000_000) as f64,
+        })
+        .collect()
+}
+
+#[test]
+fn artifact_matches_scalar_evaluator_kc_p() {
+    let Some(eval) = artifact() else { return };
+    let layer = vgg16::conv13();
+    let table = build_case_table(&[&layer], &kc_p_ct(64), 256).unwrap();
+    let ds = designs(64);
+    let pjrt = eval.evaluate(&table, &ds, 2, 16.0, 450.0).unwrap();
+    let scalar = evaluate_scalar(&table, &ds, 2, 16.0, 450.0);
+    for (i, (p, s)) in pjrt.iter().zip(&scalar).enumerate() {
+        let rel = (p.runtime - s.runtime).abs() / s.runtime.max(1.0);
+        assert!(rel < 2e-3, "design {i}: runtime pjrt {} vs scalar {} (rel {rel})", p.runtime, s.runtime);
+        let erel = (p.energy_pj - s.energy_pj).abs() / s.energy_pj.max(1.0);
+        assert!(erel < 2e-3, "design {i}: energy {} vs {} ({erel})", p.energy_pj, s.energy_pj);
+        assert!((p.area_mm2 - s.area_mm2).abs() / s.area_mm2.max(1e-9) < 1e-3, "design {i} area");
+        assert!((p.power_mw - s.power_mw).abs() / s.power_mw.max(1e-9) < 1e-3, "design {i} power");
+        assert_eq!(p.valid, s.valid, "design {i} validity");
+    }
+}
+
+#[test]
+fn artifact_matches_scalar_across_styles() {
+    let Some(eval) = artifact() else { return };
+    let layer = vgg16::conv2();
+    for df in styles::all_styles() {
+        let Ok(table) = build_case_table(&[&layer], &df, 256) else { continue };
+        let ds = designs(16);
+        let pjrt = eval.evaluate(&table, &ds, 2, 16.0, 450.0).unwrap();
+        let scalar = evaluate_scalar(&table, &ds, 2, 16.0, 450.0);
+        for (p, s) in pjrt.iter().zip(&scalar) {
+            let rel = (p.runtime - s.runtime).abs() / s.runtime.max(1.0);
+            assert!(rel < 5e-3, "{}: runtime {} vs {} ({rel})", df.name, p.runtime, s.runtime);
+        }
+    }
+}
+
+#[test]
+fn artifact_handles_full_batch_and_multi_layer_tables() {
+    let Some(eval) = artifact() else { return };
+    // 13 conv layers stacked into one table: rows well past 100.
+    let net = vgg16::conv_only();
+    let layers: Vec<&maestro::model::layer::Layer> = net.layers.iter().collect();
+    let table = build_case_table(&layers, &kc_p_ct(64), 256).unwrap();
+    let ds = designs(D_MAX);
+    let pjrt = eval.evaluate(&table, &ds, 2, 16.0, 450.0).unwrap();
+    let scalar = evaluate_scalar(&table, &ds, 2, 16.0, 450.0);
+    assert_eq!(pjrt.len(), D_MAX);
+    let mut worst = 0.0f64;
+    for (p, s) in pjrt.iter().zip(&scalar) {
+        worst = worst.max((p.runtime - s.runtime).abs() / s.runtime.max(1.0));
+    }
+    assert!(worst < 5e-3, "worst relative runtime error {worst}");
+}
+
+#[test]
+fn coordinator_end_to_end_with_pjrt_backend() {
+    if !BatchEvaluator::default_path().exists() {
+        eprintln!("SKIP: artifact missing");
+        return;
+    }
+    use maestro::coordinator::{run_jobs, Backend, DseJob};
+    let layer = vgg16::conv13();
+    let jobs: Vec<DseJob> = [64u64, 128, 256]
+        .iter()
+        .enumerate()
+        .map(|(i, &pes)| DseJob {
+            id: i as u64,
+            layers: vec![layer.clone()],
+            variant: kc_p_ct(16),
+            pes,
+            designs: designs(32),
+            noc_hops: 2,
+            area_budget: 16.0,
+            power_budget: 450.0,
+        })
+        .collect();
+    let (results, metrics) =
+        run_jobs(jobs.clone(), Backend::Pjrt(BatchEvaluator::default_path()), 2).unwrap();
+    assert_eq!(results.len(), 3);
+    assert_eq!(
+        metrics.designs_evaluated.load(std::sync::atomic::Ordering::Relaxed),
+        96
+    );
+    // Same jobs through the scalar backend agree.
+    let (scalar_results, _) = run_jobs(jobs, Backend::Scalar, 2).unwrap();
+    for r in &results {
+        let s = scalar_results.iter().find(|s| s.id == r.id).unwrap();
+        for ((_, a), (_, b)) in r.outputs.iter().zip(&s.outputs) {
+            let rel = (a.runtime - b.runtime).abs() / b.runtime.max(1.0);
+            assert!(rel < 5e-3, "job {} runtime {} vs {}", r.id, a.runtime, b.runtime);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Property-based tests over the analysis engines, driven by the
+//! hand-rolled `propcheck` harness (proptest substitute — DESIGN.md §4):
+//! random layers and random *valid* dataflows must satisfy the model's
+//! conservation laws and monotonicities.
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::HwConfig;
+use maestro::ir::dataflow::Dataflow;
+use maestro::ir::dims::Dim;
+use maestro::ir::directive::{Directive, Extent};
+use maestro::ir::parser;
+use maestro::model::layer::Layer;
+use maestro::model::tensor::{tensor_elements, TensorKind};
+use maestro::util::propcheck::{check, close, Check, Config};
+use maestro::util::rng::Rng;
+
+/// Random small conv layer.
+fn gen_layer(rng: &mut Rng) -> Layer {
+    let r = *rng.pick(&[1u64, 3, 5]);
+    let s = *rng.pick(&[1u64, 3]);
+    let stride = if r > 1 && rng.chance(0.3) { 2 } else { 1 };
+    let y = r + stride * rng.range(2, 12);
+    let x = s + stride * rng.range(2, 12);
+    Layer::conv2d(
+        "prop",
+        rng.range(1, 2),
+        rng.range(1, 24),
+        rng.range(1, 24),
+        y,
+        x,
+        r,
+        s,
+        stride,
+    )
+}
+
+/// Random valid dataflow for a layer: a shuffled set of maps with
+/// offsets that satisfy the gapless/non-overlap rules, at most one
+/// spatial map, optional second cluster level over C or K.
+fn gen_dataflow(rng: &mut Rng, layer: &Layer) -> Dataflow {
+    let mut dims = vec![Dim::K, Dim::C, Dim::Y, Dim::X];
+    rng.shuffle(&mut dims);
+    let spatial_dim = *rng.pick(&[Dim::K, Dim::C, Dim::X]);
+    let mut directives = Vec::new();
+    for d in dims {
+        let total = layer.dim(d);
+        let (size, offset) = match d {
+            Dim::Y | Dim::X => {
+                // Windowed: size >= win; user offsets are output-step
+                // slides in [1, size - win + 1] (the builder augments to
+                // the stride-aware step).
+                let win = if d == Dim::Y { layer.r } else { layer.s };
+                let extra = rng.range(0, 3) * layer.stride;
+                let size = (win + extra).min(total).max(win);
+                (size, rng.range(1, size - win + 1))
+            }
+            _ => {
+                let size = rng.range(1, total.max(1));
+                (size, size)
+            }
+        };
+        let dir = if d == spatial_dim && !matches!(d, Dim::Y) {
+            Directive::spatial(Extent::lit(size), Extent::lit(offset), d)
+        } else {
+            Directive::temporal(Extent::lit(size), Extent::lit(offset), d)
+        };
+        directives.push(dir);
+    }
+    // Occasionally add an inner cluster level parallel over C.
+    if rng.chance(0.3) && spatial_dim != Dim::C {
+        directives.push(Directive::cluster(Extent::lit(rng.range(2, 8))));
+        directives.push(Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C));
+    }
+    Dataflow::new("prop-df", directives)
+}
+
+fn hw(rng: &mut Rng) -> HwConfig {
+    HwConfig {
+        num_pes: *rng.pick(&[16u64, 32, 64, 256]),
+        noc_bandwidth: *rng.pick(&[2u64, 8, 16, 64]),
+        noc_latency: rng.range(0, 4),
+        ..HwConfig::fig10_default()
+    }
+}
+
+#[test]
+fn prop_mac_conservation() {
+    check("mac-conservation", Config { cases: 200, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let h = hw(rng);
+        match analyze_layer(&layer, &df, &h) {
+            Err(_) => Check::Discard, // generator may still produce unmappables
+            Ok(s) => close(
+                &format!("macs of {layer} under\n{df}"),
+                s.macs,
+                layer.macs() as f64,
+                1e-9,
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_runtime_at_least_both_rooflines() {
+    check("runtime-roofline", Config { cases: 150, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let h = hw(rng);
+        let Ok(s) = analyze_layer(&layer, &df, &h) else { return Check::Discard };
+        let compute_roofline = layer.macs() as f64 / (h.num_pes * h.pe_throughput) as f64;
+        // Communication roofline: at least the unique input traffic
+        // over the NoC bandwidth.
+        let comm_roofline = (tensor_elements(&layer, TensorKind::Input)
+            + tensor_elements(&layer, TensorKind::Filter)) as f64
+            / h.noc_bandwidth as f64;
+        if s.runtime + 1.0 >= compute_roofline && s.runtime + 1.0 >= comm_roofline * 0.99 {
+            Check::Pass
+        } else {
+            Check::Fail(format!(
+                "runtime {} below roofline max({compute_roofline}, {comm_roofline}) for {layer} under\n{df}",
+                s.runtime
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_traffic_covers_tensors() {
+    check("traffic-lower-bound", Config { cases: 150, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let h = hw(rng);
+        let Ok(s) = analyze_layer(&layer, &df, &h) else { return Check::Discard };
+        for (i, kind) in [TensorKind::Filter, TensorKind::Input, TensorKind::Output].iter().enumerate() {
+            let mut size = tensor_elements(&layer, *kind) as f64;
+            if *kind == TensorKind::Input && layer.stride > 1 {
+                // Strided convs with stride > window legitimately skip
+                // input rows/columns; bound by the touched fraction.
+                let touched = |act: u64, win: u64, out: u64| -> f64 {
+                    (out * win.min(layer.stride) + win.saturating_sub(layer.stride)).min(act) as f64
+                        / act as f64
+                };
+                size *= touched(layer.y, layer.r, layer.y_out()) * touched(layer.x, layer.s, layer.x_out());
+            }
+            let traffic = if *kind == TensorKind::Output { s.l2_writes[i] } else { s.l2_reads[i] };
+            if traffic + 0.5 < size * 0.999 {
+                return Check::Fail(format!(
+                    "{:?} traffic {traffic} < tensor size {size} for {layer} under\n{df}",
+                    kind
+                ));
+            }
+            // And refetch cannot exceed one fetch per MAC.
+            if traffic > s.macs + size {
+                return Check::Fail(format!("{:?} traffic {traffic} > macs {}", kind, s.macs));
+            }
+        }
+        Check::Pass
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotonicity() {
+    check("bw-monotone", Config { cases: 80, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let mut h = hw(rng);
+        h.noc_bandwidth = 2;
+        let Ok(slow) = analyze_layer(&layer, &df, &h) else { return Check::Discard };
+        h.noc_bandwidth = 128;
+        let Ok(fast) = analyze_layer(&layer, &df, &h) else { return Check::Discard };
+        if fast.runtime <= slow.runtime + 1.0 {
+            Check::Pass
+        } else {
+            Check::Fail(format!("bw 128 runtime {} > bw 2 runtime {}", fast.runtime, slow.runtime))
+        }
+    });
+}
+
+#[test]
+fn prop_dsl_roundtrip() {
+    check("dsl-roundtrip", Config { cases: 200, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let text = parser::emit(&df);
+        match parser::parse_dataflow(&text) {
+            Err(e) => Check::Fail(format!("emit->parse failed: {e}\n{text}")),
+            Ok(back) if back == df => Check::Pass,
+            Ok(back) => Check::Fail(format!("roundtrip mismatch:\n{df}\nvs\n{back}")),
+        }
+    });
+}
+
+#[test]
+fn prop_case_table_matches_full_engine_single_level() {
+    use maestro::dse::engine::{build_case_table, eval_runtime};
+    check("flatten-consistency", Config { cases: 60, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        // Single-level only (flattening of inner levels approximates).
+        let mut df = gen_dataflow(rng, &layer);
+        if df.directives.iter().any(|d| d.is_cluster()) {
+            return Check::Discard;
+        }
+        df.name = "flat".into();
+        let h = hw(rng);
+        let Ok(full) = analyze_layer(&layer, &df, &h) else { return Check::Discard };
+        let Ok(table) = build_case_table(&[&layer], &df, h.num_pes) else {
+            return Check::Fail("analyze ok but case table failed".into());
+        };
+        let flat = eval_runtime(&table, h.noc_bandwidth, h.noc_latency);
+        close("flattened vs full runtime", flat, full.runtime, 0.02)
+    });
+}
+
+#[test]
+fn prop_pareto_front_is_nondominated() {
+    use maestro::dse::engine::DesignPoint;
+    use maestro::dse::pareto::pareto_front;
+    check("pareto-nondominated", Config { cases: 100, ..Default::default() }, |rng| {
+        let n = rng.range(2, 60) as usize;
+        let points: Vec<DesignPoint> = (0..n)
+            .map(|i| DesignPoint {
+                dataflow: "p".into(),
+                pes: 64,
+                bandwidth: 8,
+                l1: 512,
+                l2: 1024,
+                runtime: rng.range(1, 1000) as f64,
+                energy_pj: rng.range(1, 1000) as f64,
+                area_mm2: 1.0,
+                power_mw: 1.0,
+                valid: i % 7 != 0,
+            })
+            .collect();
+        let front = pareto_front(&points, |p| p.runtime, |p| p.energy_pj);
+        for &i in &front {
+            for (j, q) in points.iter().enumerate() {
+                if i == j || !q.valid {
+                    continue;
+                }
+                let p = &points[i];
+                if q.runtime < p.runtime && q.energy_pj < p.energy_pj {
+                    return Check::Fail(format!("front point {i} dominated by {j}"));
+                }
+            }
+        }
+        Check::Pass
+    });
+}

@@ -1,0 +1,154 @@
+//! Integration: analytical engine vs cycle-level simulator across a
+//! matrix of (layer x dataflow x hardware) — the Fig 9 validation
+//! contract at test scale. The simulator shares only the schedule
+//! semantics with the analytical engine, making it an independent
+//! ground truth for runtime and traffic.
+
+use maestro::engine::analysis::analyze_layer;
+use maestro::hw::config::{HwConfig, ReductionSupport};
+use maestro::ir::styles;
+use maestro::model::layer::Layer;
+use maestro::model::tensor::{tensor_elements, TensorKind};
+use maestro::sim::cycle::simulate;
+
+const MAX_STEPS: u64 = 40_000_000;
+
+fn layers() -> Vec<Layer> {
+    vec![
+        Layer::conv2d("early", 1, 16, 4, 26, 26, 3, 3, 1),
+        Layer::conv2d("late", 1, 48, 48, 12, 12, 3, 3, 1),
+        Layer::conv2d("pw", 1, 48, 24, 20, 20, 1, 1, 1),
+        Layer::conv2d("strided", 1, 16, 8, 23, 23, 3, 3, 2),
+        Layer::conv2d("rect", 2, 8, 6, 17, 25, 3, 5, 1),
+        Layer::depthwise("dw", 1, 24, 22, 22, 3, 3, 1),
+        Layer::fully_connected("fc", 1, 96, 128),
+    ]
+}
+
+fn hws() -> Vec<HwConfig> {
+    vec![
+        HwConfig { num_pes: 32, ..HwConfig::fig10_default() },
+        HwConfig { num_pes: 64, noc_bandwidth: 4, ..HwConfig::fig10_default() },
+        HwConfig { num_pes: 128, noc_bandwidth: 64, noc_latency: 4, ..HwConfig::fig10_default() },
+    ]
+}
+
+#[test]
+fn runtime_agreement_across_matrix() {
+    let mut checked = 0;
+    let mut worst: (f64, String) = (0.0, String::new());
+    for layer in layers() {
+        for df in styles::all_styles() {
+            for hw in hws() {
+                let Ok(sim) = simulate(&layer, &df, &hw, MAX_STEPS) else { continue };
+                let Ok(ana) = analyze_layer(&layer, &df, &hw) else {
+                    panic!("{} analyzable mismatch on {}", df.name, layer.name)
+                };
+                let err = (ana.runtime - sim.cycles).abs() / sim.cycles;
+                let tag = format!("{} / {} / {}pes bw{}", layer.name, df.name, hw.num_pes, hw.noc_bandwidth);
+                assert!(
+                    err < 0.25,
+                    "{tag}: analytical {} vs sim {} ({:.1}% off)",
+                    ana.runtime,
+                    sim.cycles,
+                    err * 100.0
+                );
+                if err > worst.0 {
+                    worst = (err, tag);
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 50, "matrix too small: only {checked} pairs simulated");
+    println!("validated {checked} (layer, dataflow, hw) pairs; worst error {:.1}% at {}", worst.0 * 100.0, worst.1);
+}
+
+#[test]
+fn mac_counts_agree_exactly() {
+    for layer in layers() {
+        for df in styles::all_styles() {
+            let hw = HwConfig { num_pes: 32, ..HwConfig::fig10_default() };
+            let Ok(sim) = simulate(&layer, &df, &hw, MAX_STEPS) else { continue };
+            let ana = analyze_layer(&layer, &df, &hw).unwrap();
+            let lm = layer.macs() as f64 * layer.sparsity_macs_scale();
+            assert!(
+                (sim.macs - lm).abs() < 1e-6 * lm.max(1.0),
+                "{} / {}: sim macs {} vs layer {}",
+                layer.name,
+                df.name,
+                sim.macs,
+                lm
+            );
+            assert!(
+                (ana.macs - lm).abs() < 1e-6 * lm.max(1.0),
+                "{} / {}: model macs {} vs layer {}",
+                layer.name,
+                df.name,
+                ana.macs,
+                lm
+            );
+        }
+    }
+}
+
+#[test]
+fn traffic_lower_bounds_hold_in_both_models() {
+    let hw = HwConfig { num_pes: 32, ..HwConfig::fig10_default() };
+    for layer in layers() {
+        for df in styles::all_styles() {
+            let Ok(sim) = simulate(&layer, &df, &hw, MAX_STEPS) else { continue };
+            let ana = analyze_layer(&layer, &df, &hw).unwrap();
+            for (ti, kind) in [TensorKind::Filter, TensorKind::Input].iter().enumerate() {
+                let size = tensor_elements(&layer, *kind) as f64;
+                if size == 0.0 {
+                    continue;
+                }
+                assert!(sim.l2_reads[ti] >= size * 0.999, "{} {} sim reads {} < {size}", layer.name, df.name, sim.l2_reads[ti]);
+                assert!(ana.l2_reads[ti] >= size * 0.999, "{} {} ana reads {} < {size}", layer.name, df.name, ana.l2_reads[ti]);
+            }
+            let osize = tensor_elements(&layer, TensorKind::Output) as f64;
+            assert!(sim.l2_writes >= osize * 0.999, "{} {} sim writes", layer.name, df.name);
+        }
+    }
+}
+
+#[test]
+fn hardware_knobs_move_both_models_in_the_same_direction() {
+    let layer = Layer::conv2d("knob", 1, 16, 8, 18, 18, 3, 3, 1);
+    let df = styles::c_p();
+    let base = HwConfig { num_pes: 32, ..HwConfig::fig10_default() };
+
+    // Bandwidth down -> runtime up, in both.
+    let slow = HwConfig { noc_bandwidth: 1, ..base.clone() };
+    let (sb, ss) = (
+        simulate(&layer, &df, &base, MAX_STEPS).unwrap(),
+        simulate(&layer, &df, &slow, MAX_STEPS).unwrap(),
+    );
+    assert!(ss.cycles >= sb.cycles);
+    let (ab, a_s) = (
+        analyze_layer(&layer, &df, &base).unwrap(),
+        analyze_layer(&layer, &df, &slow).unwrap(),
+    );
+    assert!(a_s.runtime >= ab.runtime);
+
+    // Reduction support off -> egress up, in both.
+    let nored = HwConfig { reduction: ReductionSupport::None, ..base.clone() };
+    let sn = simulate(&layer, &df, &nored, MAX_STEPS).unwrap();
+    let an = analyze_layer(&layer, &df, &nored).unwrap();
+    assert!(sn.l2_writes > sb.l2_writes * 1.2, "sim egress should inflate");
+    assert!(an.l2_writes[2] > ab.l2_writes[2] * 1.2, "model egress should inflate");
+}
+
+#[test]
+fn row_stationary_fig6_six_pe_example() {
+    // The paper's extended example: 6 PEs, two clusters of Sz(R)=3.
+    let layer = Layer::conv2d("fig6", 1, 2, 2, 8, 8, 3, 3, 1);
+    let df = styles::row_stationary_fig6();
+    let hw = HwConfig { num_pes: 6, noc_bandwidth: 8, ..HwConfig::fig10_default() };
+    let ana = analyze_layer(&layer, &df, &hw).unwrap();
+    let sim = simulate(&layer, &df, &hw, MAX_STEPS).unwrap();
+    assert!((ana.macs - layer.macs() as f64).abs() < 1.0);
+    let err = (ana.runtime - sim.cycles).abs() / sim.cycles;
+    assert!(err < 0.25, "fig6 example err {:.1}%", err * 100.0);
+}
