@@ -1,6 +1,7 @@
-//! Design-space exploration (paper §5.2 / Fig 13) with the pure-Rust
-//! scalar backend: sweep KC-P mapping variants x PEs x bandwidth under
-//! the Eyeriss budget and print the Pareto picture.
+//! Design-space exploration (paper §5.2 / Fig 13) with the sharded
+//! scalar sweep engine: KC-P mapping variants x PEs x bandwidth under
+//! the Eyeriss budget, folded into a streaming Pareto frontier across
+//! all cores, plus the full scatter for the plots.
 //!
 //! ```sh
 //! cargo run --release --example dse_explore
@@ -8,12 +9,11 @@
 
 use anyhow::Result;
 
-use maestro::dse::engine::sweep;
-use maestro::dse::pareto::{best, pareto_front, Optimize};
+use maestro::dse::engine::{sweep, SweepConfig};
+use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
 use maestro::model::zoo::vgg16;
-use maestro::report::experiments::{compare_optima, design_space_scatter};
-use maestro::util::table::Table;
+use maestro::report::experiments::{compare_optima, design_space_scatter, frontier_table};
 
 fn main() -> Result<()> {
     let layer = vgg16::conv2();
@@ -22,47 +22,28 @@ fn main() -> Result<()> {
         "sweeping {} candidate designs (KC-P variants x PEs x bandwidth) under 16 mm2 / 450 mW",
         space.size()
     );
-    let (points, stats) = sweep(&[&layer], &space, 2)?;
+    // keep_all_points feeds the scatter; drop it for paper-scale spaces
+    // and work from the streaming frontier alone.
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
+    let outcome = sweep(&[&layer], &space, 2, &cfg)?;
     let macs = layer.macs() as f64;
-    println!(
-        "evaluated {} ({} skipped by budget pruning), {} valid, {:.2}s -> {:.0} designs/s",
-        stats.evaluated,
-        stats.total_designs - stats.evaluated,
-        stats.valid,
-        stats.seconds,
-        stats.rate()
-    );
+    println!("{}", outcome.stats.summary());
 
-    print!("{}", design_space_scatter(&points, macs, "KC-P on VGG16-CONV2"));
+    print!("{}", design_space_scatter(&outcome.points, macs, "KC-P on VGG16-CONV2"));
 
-    let front = pareto_front(&points, |p| p.runtime, |p| p.energy_pj);
-    let mut t = Table::new(&["variant", "PEs", "BW", "L1 (el)", "L2 (el)", "thrpt (MAC/cyc)", "energy (uJ)", "area", "power"]);
-    for &i in front.iter().take(12) {
-        let p = &points[i];
-        t.row(&[
-            p.dataflow.clone(),
-            p.pes.to_string(),
-            p.bandwidth.to_string(),
-            p.l1.to_string(),
-            p.l2.to_string(),
-            format!("{:.1}", p.throughput(macs)),
-            format!("{:.1}", p.energy_pj / 1e6),
-            format!("{:.2}", p.area_mm2),
-            format!("{:.0}", p.power_mw),
-        ]);
-    }
-    println!("Pareto front (first 12 of {}):", front.len());
-    print!("{}", t.render());
+    println!("Pareto frontier (first 12 of {}):", outcome.frontier.len());
+    let head = &outcome.frontier[..outcome.frontier.len().min(12)];
+    print!("{}", frontier_table(head, macs).render());
 
     for (name, o) in [("throughput", Optimize::Throughput), ("energy", Optimize::Energy), ("EDP", Optimize::Edp)] {
-        if let Some(p) = best(&points, o, macs) {
+        if let Some(p) = best(&outcome.points, o, macs) {
             println!(
                 "{name}-optimal: {} pes={} bw={} thrpt={:.1} energy={:.1}uJ area={:.2}mm2 power={:.0}mW",
                 p.dataflow, p.pes, p.bandwidth, p.throughput(macs), p.energy_pj / 1e6, p.area_mm2, p.power_mw
             );
         }
     }
-    if let Some(c) = compare_optima(&points, macs) {
+    if let Some(c) = compare_optima(&outcome.points, macs) {
         println!(
             "energy-opt vs throughput-opt: power x{:.2}, SRAM x{:.1}, EDP -{:.0}%, throughput {:.0}%",
             c.power_ratio, c.sram_ratio, c.edp_improvement * 100.0, c.throughput_fraction * 100.0

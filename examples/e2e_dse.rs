@@ -19,8 +19,9 @@
 use anyhow::Result;
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, pareto_front, Optimize};
-use maestro::dse::space::{geometric_range, kc_p_variants, yr_p_variants};
+use maestro::dse::space::{geometric_range, kc_p_variants, yr_p_variants, DesignSpace};
 use maestro::model::zoo::vgg16;
 use maestro::report::experiments::compare_optima;
 use maestro::runtime::{evaluate_scalar, BatchEvaluator, DesignIn};
@@ -39,7 +40,23 @@ fn main() -> Result<()> {
 
     // Workload: the full VGG16 conv stack (13 layers, one case table).
     let net = vgg16::conv_only();
+    let layer_refs: Vec<&maestro::model::layer::Layer> = net.layers.iter().collect();
     println!("workload: {} ({} layers, {:.2} GMACs)", net.name, net.layers.len(), net.macs() as f64 / 1e9);
+
+    // Stage 0: the sharded scalar sweep (streaming frontier, no PJRT) —
+    // the memory-bounded baseline the coordinator path is compared to.
+    let space = DesignSpace::fig13("kc-p", 10);
+    let serial = sweep(&layer_refs, &space, 2, &SweepConfig::serial())?;
+    let sharded = sweep(&layer_refs, &space, 2, &SweepConfig::default())?;
+    println!("sharded sweep, 1 thread:   {}", serial.stats.summary());
+    println!("sharded sweep, all cores:  {}", sharded.stats.summary());
+    println!(
+        "thread scaling: {:.2}x on {} cores; frontier {} points (identical across thread counts: {})",
+        serial.stats.seconds / sharded.stats.seconds.max(1e-9),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        sharded.frontier.len(),
+        serial.frontier == sharded.frontier,
+    );
 
     // Design axes: mapping variants x PEs (jobs), bandwidth (designs).
     let designs: Vec<DesignIn> = geometric_range(1, 256, 48)
@@ -79,7 +96,6 @@ fn main() -> Result<()> {
 
     // Cross-check a sample of PJRT results against the scalar oracle.
     let sample = results.iter().find(|r| !r.outputs.is_empty()).expect("some job mapped");
-    let layer_refs: Vec<&maestro::model::layer::Layer> = net.layers.iter().collect();
     let sample_job_variant = variants
         .iter()
         .find(|v| v.name == sample.dataflow)

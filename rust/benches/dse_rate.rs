@@ -2,37 +2,102 @@
 //! searched, 2.5M valid, at an average effective rate of 0.17M designs
 //! per second" (§1, §5.2, Fig 13c).
 //!
-//! Measures: (a) the pruned scalar sweep rate, (b) the coordinator with
-//! multiple workers, and (c) the PJRT batched evaluator (the AOT Pallas
-//! kernel) vs the scalar backend on identical jobs.
+//! Measures: (a) the sharded sweep engine across thread counts, (b) the
+//! coordinator with multiple workers, and (c) the PJRT batched
+//! evaluator (the AOT Pallas kernel) vs the scalar backend on identical
+//! jobs.
+//!
+//! CI smoke mode: `DSE_SMOKE=1 cargo bench --bench dse_rate` runs the
+//! sharded sweep on the tiny `DesignSpace::ci_smoke` space in seconds
+//! and writes the designs/s + thread-scaling numbers to
+//! `BENCH_dse_rate.json` (override with `DSE_SMOKE_OUT`) — uploaded as
+//! a CI build artifact, no assertions beyond completing.
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
-use maestro::dse::engine::sweep;
+use maestro::dse::engine::{sweep, SweepConfig, SweepStats};
 use maestro::dse::space::{geometric_range, kc_p_variants, DesignSpace};
+use maestro::model::layer::Layer;
 use maestro::model::zoo::vgg16;
 use maestro::runtime::{BatchEvaluator, DesignIn};
 use maestro::util::benchkit::{bench_throughput, fmt_rate, section};
 
-fn space(resolution: usize) -> DesignSpace {
-    DesignSpace::fig13("kc-p", resolution)
+const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn sweep_scaling(layer: &Layer, space: &DesignSpace) -> Vec<(usize, SweepStats)> {
+    let mut runs = Vec::new();
+    for threads in SWEEP_THREADS {
+        let cfg = SweepConfig { threads, ..SweepConfig::default() };
+        let outcome = sweep(&[layer], space, 2, &cfg).unwrap();
+        println!("threads {threads}: {}", outcome.stats.summary());
+        runs.push((threads, outcome.stats));
+    }
+    runs
+}
+
+/// Hand-rolled JSON record (no serde in the image): one object per
+/// thread count, seeding the `BENCH_*.json` trajectory.
+fn scaling_json(resolution: &str, runs: &[(usize, SweepStats)]) -> String {
+    let mut s = String::from("{\n");
+    s += "  \"bench\": \"dse_rate\",\n";
+    s += &format!("  \"space\": \"{resolution}\",\n");
+    s += "  \"runs\": [\n";
+    for (i, (threads, st)) in runs.iter().enumerate() {
+        s += &format!(
+            "    {{\"threads\": {threads}, \"total_designs\": {}, \"evaluated\": {}, \"valid\": {}, \
+             \"pruned\": {}, \"unmappable\": {}, \"seconds\": {:.6}, \"designs_per_s\": {:.1}}}{}\n",
+            st.total_designs,
+            st.evaluated,
+            st.valid,
+            st.pruned,
+            st.unmappable,
+            st.seconds,
+            st.rate(),
+            if i + 1 < runs.len() { "," } else { "" },
+        );
+    }
+    s += "  ]\n}\n";
+    s
+}
+
+/// CI smoke: tiny space, scaling record written to disk, done.
+fn run_smoke(layer: &Layer) {
+    section("DSE bench smoke (CI): sharded sweep on DesignSpace::ci_smoke");
+    let space = DesignSpace::ci_smoke("kc-p");
+    let runs = sweep_scaling(layer, &space);
+    let json = scaling_json("ci_smoke(kc-p)", &runs);
+    let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
+    std::fs::write(&path, json).expect("write bench smoke json");
+    println!("wrote {path}");
 }
 
 fn main() {
     let layer = vgg16::conv2();
+    let smoke = std::env::var("DSE_SMOKE")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
+        .unwrap_or(false);
+    if smoke {
+        run_smoke(&layer);
+        return;
+    }
 
-    section("DSE rate (a): pruned scalar sweep (single thread)");
+    section("DSE rate (a): sharded sweep, single thread across resolutions");
     for resolution in [16usize, 32, 48] {
-        let sp = space(resolution);
-        let (points, stats) = sweep(&[&layer], &sp, 2).unwrap();
+        let sp = DesignSpace::fig13("kc-p", resolution);
+        let out = sweep(&[&layer], &sp, 2, &SweepConfig::serial()).unwrap();
         println!(
-            "resolution {resolution:>3}: {:>8} designs ({} evaluated, {} valid) in {:.2}s -> effective rate {}/s (paper avg 0.17M/s)",
-            stats.total_designs,
-            stats.evaluated,
-            stats.valid,
-            stats.seconds,
-            fmt_rate(stats.rate()),
+            "resolution {resolution:>3}: {} (paper avg 0.17M/s); frontier {} points",
+            out.stats.summary(),
+            out.frontier.len(),
         );
-        assert!(!points.is_empty());
+        assert!(!out.frontier.is_empty());
+    }
+
+    section("DSE rate (a2): sharded sweep thread scaling (resolution 32)");
+    let sp = DesignSpace::fig13("kc-p", 32);
+    let runs = sweep_scaling(&layer, &sp);
+    let base = runs[0].1.seconds;
+    for (threads, st) in &runs[1..] {
+        println!("  speedup x{:.2} at {threads} threads", base / st.seconds.max(1e-9));
     }
 
     section("DSE rate (b): coordinator scaling (scalar backend)");

@@ -4,8 +4,8 @@
 //! scatters, throughput-/energy-optimized points, and (c) the sweep
 //! statistics (designs, valid designs, DSE rate).
 
-use maestro::dse::engine::sweep;
-use maestro::dse::pareto::{best, pareto_front, Optimize};
+use maestro::dse::engine::{sweep, SweepConfig};
+use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
 use maestro::model::zoo::vgg16;
 use maestro::report::experiments::{buffer_scatter, compare_optima, design_space_scatter};
@@ -14,18 +14,23 @@ use maestro::util::table::Table;
 
 fn main() {
     let layers = [("VGG16-CONV2 (early)", vgg16::conv2()), ("VGG16-CONV13 (late)", vgg16::conv13())];
-    let mut stats_rows = Table::new(&["family", "layer", "designs", "evaluated", "valid", "secs", "rate (designs/s)"]);
+    let mut stats_rows = Table::new(&[
+        "family", "layer", "designs", "evaluated", "valid", "pruned", "unmappable", "secs", "rate (designs/s)",
+    ]);
+    // keep_all_points: the figure needs the full scatter, and this
+    // space is small enough to hold.
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
 
     for family in ["kc-p", "yr-p"] {
         for (lname, layer) in &layers {
             section(&format!("Fig 13: {family} on {lname}, budget 16 mm2 / 450 mW"));
             let space = DesignSpace::fig13(family, 14);
-            let (points, stats) = sweep(&[layer], &space, 2).unwrap();
+            let out = sweep(&[layer], &space, 2, &cfg).unwrap();
+            let (points, stats) = (out.points, out.stats);
             let macs = layer.macs() as f64;
             print!("{}", design_space_scatter(&points, macs, &format!("{family} {lname}: area vs throughput")));
             print!("{}", buffer_scatter(&points, macs, &format!("{family} {lname}: buffer vs throughput")));
-            let front = pareto_front(&points, |p| p.runtime, |p| p.energy_pj);
-            println!("pareto front (runtime vs energy): {} points of {} valid", front.len(), stats.valid);
+            println!("pareto front (runtime vs energy): {} points of {} valid", out.frontier.len(), stats.valid);
             if let Some(t) = best(&points, Optimize::Throughput, macs) {
                 println!(
                     "  throughput-opt *: pes={} bw={} L1={}el L2={}el area={:.2}mm2 power={:.0}mW thrpt={:.1} MAC/cyc [{}]",
@@ -50,6 +55,8 @@ fn main() {
                 stats.total_designs.to_string(),
                 stats.evaluated.to_string(),
                 stats.valid.to_string(),
+                stats.pruned.to_string(),
+                stats.unmappable.to_string(),
                 format!("{:.2}", stats.seconds),
                 format!("{:.0}", stats.rate()),
             ]);
@@ -60,7 +67,7 @@ fn main() {
     section("Intro headline: KC-P on VGG16 CONV11");
     let conv11 = vgg16::conv11();
     let space = DesignSpace::fig13("kc-p", 14);
-    let (points, _) = sweep(&[&conv11], &space, 2).unwrap();
+    let points = sweep(&[&conv11], &space, 2, &cfg).unwrap().points;
     if let Some(c) = compare_optima(&points, conv11.macs() as f64) {
         println!(
             "energy- vs throughput-optimized: power x{:.2} (paper 2.16x), SRAM x{:.1} (paper 10.6x), PEs {:.0}% (paper 80%), EDP improvement {:.0}% (paper 65%), throughput {:.0}% (paper 62%)",

@@ -19,6 +19,9 @@ use crate::dse::engine::{build_case_table, CaseTable, DesignPoint};
 use crate::ir::dataflow::Dataflow;
 use crate::model::layer::Layer;
 use crate::runtime::{evaluate_scalar, BatchEvaluator, DesignIn, EvalOut, D_MAX};
+// Re-exported where it was proven: the prep workers below and the
+// sharded DSE sweep share this bounded-queue idiom.
+pub use crate::util::queue::JobQueue;
 
 /// Which evaluation backend executes design batches.
 #[derive(Debug, Clone)]
@@ -128,21 +131,19 @@ pub fn run_jobs(
     let n_jobs = jobs.len();
     let use_pjrt = matches!(backend, Backend::Pjrt(_));
 
-    let (job_tx, job_rx) = sync_channel::<DseJob>(workers * 2);
-    let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+    let (job_tx, job_queue) = JobQueue::<DseJob>::bounded(workers * 2);
     let (prep_tx, prep_rx) = sync_channel::<(DseJob, CaseTable)>(workers * 2);
     let (res_tx, res_rx) = sync_channel::<JobResult>(n_jobs.max(1));
 
     let results = std::thread::scope(|scope| -> Result<Vec<JobResult>> {
         // ---- Prep workers ------------------------------------------
         for _ in 0..workers {
-            let job_rx = Arc::clone(&job_rx);
+            let queue = job_queue.clone();
             let prep_tx = prep_tx.clone();
             let res_tx = res_tx.clone();
             let metrics = Arc::clone(&metrics);
             scope.spawn(move || loop {
-                let job = { job_rx.lock().unwrap().recv() };
-                let Ok(job) = job else { break };
+                let Some(job) = queue.pop() else { break };
                 let t0 = std::time::Instant::now();
                 let layer_refs: Vec<&Layer> = job.layers.iter().collect();
                 let table = build_case_table(&layer_refs, &job.variant, job.pes);

@@ -1,15 +1,22 @@
 //! The DSE engine: flattened case tables, scalar design-point
-//! evaluation, and the budget-pruned sweep (paper §5.2's "skips design
-//! spaces ... by checking the minimum area and power of all the possible
-//! design points from inner loops").
+//! evaluation, and the sharded budget-pruned sweep (paper §5.2's "skips
+//! design spaces ... by checking the minimum area and power of all the
+//! possible design points from inner loops").
 //!
 //! The flattened case table is the contract between the Rust scalar
 //! evaluator and the AOT-compiled batched evaluator (L1 Pallas kernel):
 //! both implement the same formula over the same rows, and an
 //! integration test cross-checks them.
+//!
+//! [`sweep`] splits the (variant, PEs) outer product into contiguous
+//! shards executed by a scoped worker pool (the coordinator's
+//! bounded-queue idiom); each shard folds its survivors into a streaming
+//! Pareto frontier + counters, and shards merge deterministically in
+//! shard order — see [`crate::dse`] module docs for the architecture.
 
 use anyhow::{ensure, Result};
 
+use crate::dse::pareto::ParetoAccumulator;
 use crate::engine::analysis::analyze_layer;
 use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
 use crate::engine::noc::reduction_delay;
@@ -20,6 +27,7 @@ use crate::hw::energy::EnergyModel;
 use crate::ir::dataflow::Dataflow;
 use crate::model::layer::Layer;
 use crate::model::tensor::{couplings, TensorKind, ALL_TENSORS};
+use crate::util::queue::JobQueue;
 
 /// Number of features per case row (the AOT artifact's row width).
 pub const CASE_FEATURES: usize = 8;
@@ -277,15 +285,60 @@ pub fn eval_energy(activity: &Activity, l1: u64, l2: u64, noc_hops: u64) -> f64 
         + activity.noc_delivered * noc_hops.max(1) as f64 * em.noc_hop_pj
 }
 
-/// Sweep statistics (Fig 13 (c)).
-#[derive(Debug, Clone, Default)]
+/// Sweep execution knobs.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// (variant, PEs) pairs per work shard; 0 = auto (`pairs / 64`, at
+    /// least 1). The partition affects load balancing only — results
+    /// are identical for any shard size.
+    pub shard_size: usize,
+    /// Also return every evaluated design point (O(space) memory) —
+    /// needed by the Fig 13 scatter plots and small-space tests. Large
+    /// sweeps should keep the default `false` and use the streaming
+    /// frontier, which bounds memory to O(frontier).
+    pub keep_all_points: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig { threads: 0, shard_size: 0, keep_all_points: false }
+    }
+}
+
+impl SweepConfig {
+    /// Single-threaded reference configuration (the determinism oracle).
+    pub fn serial() -> SweepConfig {
+        SweepConfig { threads: 1, ..SweepConfig::default() }
+    }
+
+    fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// Sweep statistics (Fig 13 (c)). Every candidate in the space lands in
+/// exactly one of `evaluated`, `pruned`, or `unmappable`.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SweepStats {
     /// Candidates in the nominal space.
     pub total_designs: u64,
-    /// Candidates actually evaluated (not skipped by pruning).
+    /// Candidates actually evaluated.
     pub evaluated: u64,
     /// Valid designs (within budget).
     pub valid: u64,
+    /// Candidates skipped because the minimum-cost check (smallest
+    /// bandwidth, required buffers) already exceeded the area/power
+    /// budget (§5.2 pruning).
+    pub pruned: u64,
+    /// Candidates skipped because the (variant, PEs) pair has no legal
+    /// mapping (e.g. cluster size exceeds the PE array).
+    pub unmappable: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
@@ -296,64 +349,191 @@ impl SweepStats {
     pub fn rate(&self) -> f64 {
         self.total_designs as f64 / self.seconds.max(1e-9)
     }
+
+    /// Fold another shard's counters in (wall clock excluded: it is
+    /// measured once around the whole sweep).
+    fn absorb(&mut self, other: &SweepStats) {
+        self.evaluated += other.evaluated;
+        self.valid += other.valid;
+        self.pruned += other.pruned;
+        self.unmappable += other.unmappable;
+    }
+
+    /// One-line human summary, including the skip breakdown.
+    pub fn summary(&self) -> String {
+        format!(
+            "designs={} evaluated={} valid={} pruned={} unmappable={} wall={:.2}s rate={}/s",
+            self.total_designs,
+            self.evaluated,
+            self.valid,
+            self.pruned,
+            self.unmappable,
+            self.seconds,
+            crate::util::benchkit::fmt_rate(self.rate()),
+        )
+    }
 }
 
-/// Run a pruned scalar sweep over a design space for a workload.
+/// Result of a [`sweep`].
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Runtime-energy Pareto frontier over the valid points, sorted by
+    /// (runtime, energy, variant, PEs, bandwidth). Identical for any
+    /// thread count / shard size.
+    pub frontier: Vec<DesignPoint>,
+    /// Every evaluated design point in deterministic (variant, PEs,
+    /// bandwidth) order; empty unless [`SweepConfig::keep_all_points`].
+    pub points: Vec<DesignPoint>,
+    pub stats: SweepStats,
+}
+
+/// Per-shard fold state: frontier + counters (+ points when kept).
+#[derive(Debug, Default)]
+struct ShardOutcome {
+    frontier: ParetoAccumulator,
+    points: Vec<DesignPoint>,
+    stats: SweepStats,
+}
+
+/// Evaluate a contiguous range of (variant, PEs) pair indices. Pair `i`
+/// maps to `variants[i / pes.len()]` and `pes[i % pes.len()]` — the
+/// serial iteration order, so concatenating any contiguous partition's
+/// output replays the single-threaded sweep exactly.
 ///
 /// Pruning mirrors §5.2: before entering the bandwidth loop for a
 /// (variant, PEs) pair, the minimum achievable area/power (smallest
 /// bandwidth, required buffers) is checked against the budget; if it
 /// already exceeds, the whole inner loop is skipped but still counted.
+fn sweep_shard(
+    layers: &[&Layer],
+    space: &super::space::DesignSpace,
+    noc_hops: u64,
+    pairs: std::ops::Range<usize>,
+    keep_all_points: bool,
+) -> ShardOutcome {
+    let mut out = ShardOutcome::default();
+    let n_pes = space.pes.len();
+    let designs_per_pair = space.bandwidths.len() as u64;
+    let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
+    for pair in pairs {
+        let variant = &space.variants[pair / n_pes];
+        let pes = space.pes[pair % n_pes];
+        let Ok(table) = build_case_table(layers, variant, pes) else {
+            out.stats.unmappable += designs_per_pair;
+            continue;
+        };
+        // Minimum-cost pruning for the whole bandwidth loop.
+        let min_ap = area::evaluate(pes, table.l1_req, table.l2_req, min_bw);
+        if min_ap.area_mm2 > space.area_budget_mm2 || min_ap.power_mw > space.power_budget_mw {
+            out.stats.pruned += designs_per_pair;
+            continue;
+        }
+        let energy = eval_energy(&table.activity, table.l1_req, table.l2_req, noc_hops);
+        for &bw in &space.bandwidths {
+            out.stats.evaluated += 1;
+            let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
+            let runtime = eval_runtime(&table, bw, space.noc_latency);
+            // Total power = static (regression) + dynamic (workload
+            // energy over runtime; 1 pJ/cycle = 1 mW at 1 GHz).
+            let power = ap.power_mw + energy / runtime.max(1.0);
+            let valid = ap.area_mm2 <= space.area_budget_mm2 && power <= space.power_budget_mw;
+            if valid {
+                out.stats.valid += 1;
+            }
+            // Streaming mode: only candidates that would actually join
+            // the frontier pay the DesignPoint allocation (invalid or
+            // dominated ones are exactly what offer() would reject).
+            if !keep_all_points && (!valid || !out.frontier.would_admit(runtime, energy)) {
+                continue;
+            }
+            let point = DesignPoint {
+                dataflow: variant.name.clone(),
+                pes,
+                bandwidth: bw,
+                l1: table.l1_req,
+                l2: table.l2_req,
+                runtime,
+                energy_pj: energy,
+                area_mm2: ap.area_mm2,
+                power_mw: power,
+                valid,
+            };
+            out.frontier.offer(&point);
+            if keep_all_points {
+                out.points.push(point);
+            }
+        }
+    }
+    out
+}
+
+/// Run the budget-pruned sweep over a design space, sharded across a
+/// scoped worker pool.
+///
+/// The (variant, PEs) outer product is split into contiguous shards
+/// pulled from a [`JobQueue`] by `config.threads` workers; each shard
+/// prunes locally and folds its survivors into a streaming Pareto
+/// frontier + [`SweepStats`] counters, so memory stays O(frontier)
+/// unless `keep_all_points` asks for the full scatter. Shard results
+/// merge in shard-index order, which replays the serial iteration order
+/// exactly: the frontier, point list, and counts are bit-identical for
+/// any thread count and shard size.
 pub fn sweep(
     layers: &[&Layer],
     space: &super::space::DesignSpace,
     noc_hops: u64,
-) -> Result<(Vec<DesignPoint>, SweepStats)> {
+    config: &SweepConfig,
+) -> Result<SweepOutcome> {
+    ensure!(!layers.is_empty(), "sweep needs at least one layer");
     let t0 = std::time::Instant::now();
-    let mut points = Vec::new();
-    let mut stats = SweepStats { total_designs: space.size(), ..Default::default() };
-    let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
+    let n_pairs = space.pairs();
+    let shard_size = if config.shard_size > 0 { config.shard_size } else { (n_pairs / 64).max(1) };
+    let shards: Vec<(usize, std::ops::Range<usize>)> = (0..n_pairs)
+        .step_by(shard_size)
+        .enumerate()
+        .map(|(index, lo)| (index, lo..(lo + shard_size).min(n_pairs)))
+        .collect();
+    let n_shards = shards.len();
+    let threads = config.effective_threads().min(n_shards).max(1);
+    let keep_all_points = config.keep_all_points;
 
-    for variant in &space.variants {
-        for &pes in &space.pes {
-            let table = match build_case_table(layers, variant, pes) {
-                Ok(t) => t,
-                Err(_) => continue, // unmappable (variant, pes): skip silently
-            };
-            // Minimum-cost pruning for the whole bandwidth loop.
-            let min_ap = area::evaluate(pes, table.l1_req, table.l2_req, min_bw);
-            if min_ap.area_mm2 > space.area_budget_mm2 || min_ap.power_mw > space.power_budget_mw {
-                continue;
-            }
-            let energy = eval_energy(&table.activity, table.l1_req, table.l2_req, noc_hops);
-            for &bw in &space.bandwidths {
-                stats.evaluated += 1;
-                let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
-                let runtime = eval_runtime(&table, bw, space.noc_latency);
-                // Total power = static (regression) + dynamic (workload
-                // energy over runtime; 1 pJ/cycle = 1 mW at 1 GHz).
-                let power = ap.power_mw + energy / runtime.max(1.0);
-                let valid = ap.area_mm2 <= space.area_budget_mm2 && power <= space.power_budget_mw;
-                if valid {
-                    stats.valid += 1;
-                }
-                points.push(DesignPoint {
-                    dataflow: variant.name.clone(),
-                    pes,
-                    bandwidth: bw,
-                    l1: table.l1_req,
-                    l2: table.l2_req,
-                    runtime,
-                    energy_pj: energy,
-                    area_mm2: ap.area_mm2,
-                    power_mw: power,
-                    valid,
+    let mut shard_outcomes: Vec<Option<ShardOutcome>>;
+    if threads <= 1 {
+        shard_outcomes = Vec::with_capacity(n_shards);
+        for (_, range) in shards {
+            shard_outcomes.push(Some(sweep_shard(layers, space, noc_hops, range, keep_all_points)));
+        }
+    } else {
+        let slots: std::sync::Mutex<Vec<Option<ShardOutcome>>> =
+            std::sync::Mutex::new((0..n_shards).map(|_| None).collect());
+        let queue = JobQueue::preloaded(shards);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let queue = queue.clone();
+                let slots = &slots;
+                scope.spawn(move || {
+                    while let Some((index, range)) = queue.pop() {
+                        let shard = sweep_shard(layers, space, noc_hops, range, keep_all_points);
+                        slots.lock().unwrap()[index] = Some(shard);
+                    }
                 });
             }
-        }
+        });
+        shard_outcomes = slots.into_inner().unwrap();
+    }
+
+    // Deterministic merge: shard order == serial pair order.
+    let mut frontier = ParetoAccumulator::new();
+    let mut stats = SweepStats { total_designs: space.size(), ..SweepStats::default() };
+    let mut points = Vec::new();
+    for slot in shard_outcomes {
+        let shard = slot.expect("every queued shard was processed");
+        frontier.merge(&shard.frontier);
+        stats.absorb(&shard.stats);
+        points.extend(shard.points);
     }
     stats.seconds = t0.elapsed().as_secs_f64();
-    Ok((points, stats))
+    Ok(SweepOutcome { frontier: frontier.into_sorted(), points, stats })
 }
 
 #[cfg(test)]
@@ -416,11 +596,39 @@ mod tests {
     fn sweep_produces_valid_and_invalid() {
         let layer = vgg16::conv13();
         let space = DesignSpace::fig13("kc-p", 6);
-        let (points, stats) = sweep(&[&layer], &space, 2).unwrap();
-        assert!(!points.is_empty());
-        assert!(stats.valid > 0, "no valid designs");
-        assert!(stats.valid <= stats.evaluated);
-        assert!(points.iter().any(|p| !p.valid) || stats.evaluated < stats.total_designs);
-        assert!(stats.rate() > 0.0);
+        let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
+        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        assert!(!out.points.is_empty());
+        assert!(out.stats.valid > 0, "no valid designs");
+        assert!(out.stats.valid <= out.stats.evaluated);
+        assert_eq!(
+            out.stats.evaluated + out.stats.pruned + out.stats.unmappable,
+            out.stats.total_designs,
+            "every candidate lands in exactly one bucket"
+        );
+        assert!(out.points.iter().any(|p| !p.valid) || out.stats.evaluated < out.stats.total_designs);
+        assert!(out.stats.rate() > 0.0);
+        let s = out.stats.summary();
+        assert!(s.contains("pruned=") && s.contains("unmappable="), "summary surfaces skips: {s}");
     }
+
+    #[test]
+    fn sweep_frontier_matches_batch_pareto_front() {
+        let layer = vgg16::conv13();
+        let space = DesignSpace::fig13("kc-p", 6);
+        let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
+        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        assert!(!out.frontier.is_empty(), "frontier must be populated");
+        assert!(out.frontier.iter().all(|p| p.valid));
+        let front = crate::dse::pareto::pareto_front(&out.points, |p| p.runtime, |p| p.energy_pj);
+        let batch: Vec<&DesignPoint> = front.iter().map(|&i| &out.points[i]).collect();
+        assert_eq!(out.frontier.len(), batch.len());
+        for (a, b) in out.frontier.iter().zip(&batch) {
+            assert_eq!((a.runtime, a.energy_pj), (b.runtime, b.energy_pj));
+        }
+    }
+
+    // The pruned-vs-unmappable accounting scenario lives in
+    // rust/tests/dse_parallel.rs (unmappable_and_pruned_pairs_are_
+    // distinguished), alongside the determinism contract.
 }

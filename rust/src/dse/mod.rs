@@ -1,6 +1,63 @@
-//! Hardware design-space exploration (paper §5.2): parameter sweeps with
-//! invalid-design skipping, optimization objectives, and Pareto fronts.
+//! Hardware design-space exploration (paper §5.2): sharded parameter
+//! sweeps with invalid-design skipping, optimization objectives, and
+//! Pareto fronts.
+//!
+//! # Sharded sweep architecture
+//!
+//! The paper's flagship result covers 480M designs at an effective
+//! 0.17M designs/s; that scale rules out both a single thread and a
+//! `Vec` of every design point. [`engine::sweep`] therefore runs as:
+//!
+//! ```text
+//!   (variant, PEs) pairs ──(contiguous shards)──> JobQueue
+//!       JobQueue ──> [worker] ─┐  per shard: build case table,
+//!       JobQueue ──> [worker] ─┼─ §5.2 min-cost pruning, eval the
+//!       JobQueue ──> [worker] ─┘  bandwidth axis, fold into a
+//!                                 streaming Pareto frontier + stats
+//!   shard results ──(merged in shard order)──> SweepOutcome
+//! ```
+//!
+//! * **Sharding** — the (variant, PEs) outer product is split into
+//!   contiguous index ranges pulled from a bounded
+//!   [`crate::util::queue::JobQueue`] (the coordinator's proven
+//!   bounded-queue worker idiom, extracted) by a scoped worker pool, so
+//!   the effective DSE rate scales with cores.
+//! * **Streaming accumulation** — each shard folds its design points
+//!   into a [`pareto::ParetoAccumulator`] (runtime-energy frontier over
+//!   valid points) plus [`engine::SweepStats`] counters instead of
+//!   materializing the space; memory is O(frontier), not O(space).
+//! * **Deterministic merge** — shards cover the serial iteration order
+//!   and merge in shard-index order, so the frontier, counts, and (with
+//!   `keep_all_points`) the full point list are bit-identical for any
+//!   thread count and shard size. `rust/tests/dse_parallel.rs` pins
+//!   this contract.
+//! * **Skip accounting** — unmappable (variant, PEs) pairs and
+//!   budget-pruned pairs are counted separately (`unmappable` vs
+//!   `pruned`) and both surface in [`engine::SweepStats::summary`].
+//!
+//! # Knobs ([`engine::SweepConfig`])
+//!
+//! * `threads` — worker threads; `0` = one per available core.
+//! * `shard_size` — (variant, PEs) pairs per shard; `0` = auto. Load
+//!   balancing only; never affects results.
+//! * `keep_all_points` — also return every design point (needed by the
+//!   Fig 13 scatter plots and small-space tests; costs O(space) memory).
+//!
+//! # Reproducing Fig 13
+//!
+//! ```text
+//! cargo run --release -- dse --family kc-p --layer-model vgg16 \
+//!     --resolution 14 --threads 0        # scatter + frontier + optima
+//! cargo bench --bench fig13_dse          # the full figure (both families)
+//! cargo bench --bench dse_rate           # DSE rate + thread scaling
+//! DSE_SMOKE=1 cargo bench --bench dse_rate   # CI smoke: tiny space,
+//!                                            # writes BENCH_dse_rate.json
+//! ```
 
 pub mod engine;
 pub mod pareto;
 pub mod space;
+
+pub use engine::{sweep, SweepConfig, SweepOutcome, SweepStats};
+pub use pareto::ParetoAccumulator;
+pub use space::DesignSpace;

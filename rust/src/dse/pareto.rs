@@ -1,7 +1,85 @@
 //! Pareto-front extraction and objective-optimal selection over DSE
-//! design points (the stars and crosses of Fig 13).
+//! design points (the stars and crosses of Fig 13), plus the streaming
+//! [`ParetoAccumulator`] the sharded sweep folds shard results into.
 
 use crate::dse::engine::DesignPoint;
+
+/// Streaming runtime-energy Pareto accumulator: maintains the frontier
+/// over *valid* design points one offer at a time, without materializing
+/// the full sweep — the memory bound of the sharded sweep engine.
+///
+/// Ties on exact (runtime, energy) are first-wins, so replaying the same
+/// points in the same order always yields the same frontier; the sharded
+/// sweep relies on this (shards merge in shard order, which replays the
+/// serial iteration order) for thread-count-independent results.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoAccumulator {
+    /// Current frontier, in insertion order.
+    points: Vec<DesignPoint>,
+}
+
+impl ParetoAccumulator {
+    pub fn new() -> ParetoAccumulator {
+        ParetoAccumulator::default()
+    }
+
+    /// `a` is at least as good as `b` on both objectives.
+    fn covers(a: &DesignPoint, b: &DesignPoint) -> bool {
+        a.runtime <= b.runtime && a.energy_pj <= b.energy_pj
+    }
+
+    /// Offer one point. Invalid or dominated points are dropped; an
+    /// accepted point evicts the frontier points it covers. Returns
+    /// whether the point joined the frontier.
+    pub fn offer(&mut self, p: &DesignPoint) -> bool {
+        if !p.valid {
+            return false;
+        }
+        if self.points.iter().any(|q| Self::covers(q, p)) {
+            return false;
+        }
+        self.points.retain(|q| !Self::covers(p, q));
+        self.points.push(p.clone());
+        true
+    }
+
+    /// Would a valid point with these objective values join the current
+    /// frontier? Cheap scalar pre-check so hot loops can skip building
+    /// the full `DesignPoint` for dominated candidates.
+    pub fn would_admit(&self, runtime: f64, energy_pj: f64) -> bool {
+        !self.points.iter().any(|q| q.runtime <= runtime && q.energy_pj <= energy_pj)
+    }
+
+    /// Fold another accumulator in, offering its points in their stored
+    /// (insertion) order so the first-wins tie rule is preserved.
+    pub fn merge(&mut self, other: &ParetoAccumulator) {
+        for p in &other.points {
+            self.offer(p);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The frontier, sorted by (runtime, energy, variant, PEs, bandwidth)
+    /// — a total order, so the output is fully deterministic.
+    pub fn into_sorted(mut self) -> Vec<DesignPoint> {
+        self.points.sort_by(|a, b| {
+            a.runtime
+                .total_cmp(&b.runtime)
+                .then(a.energy_pj.total_cmp(&b.energy_pj))
+                .then_with(|| a.dataflow.cmp(&b.dataflow))
+                .then(a.pes.cmp(&b.pes))
+                .then(a.bandwidth.cmp(&b.bandwidth))
+        });
+        self.points
+    }
+}
 
 /// Objective for picking a single optimum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,5 +194,72 @@ mod tests {
     fn best_none_when_all_invalid() {
         let pts = vec![dp(1.0, 1.0, false)];
         assert!(best(&pts, Optimize::Energy, 1.0).is_none());
+    }
+
+    #[test]
+    fn accumulator_matches_batch_front() {
+        let pts = vec![
+            dp(10.0, 10.0, true),
+            dp(5.0, 20.0, true),
+            dp(20.0, 5.0, true),
+            dp(12.0, 12.0, true), // dominated by (10,10)
+            dp(3.0, 3.0, false),  // invalid: ignored even though it dominates all
+        ];
+        let mut acc = ParetoAccumulator::new();
+        for p in &pts {
+            acc.offer(p);
+        }
+        let streamed = acc.into_sorted();
+        let front = pareto_front(&pts, |p| p.runtime, |p| p.energy_pj);
+        let mut batch: Vec<DesignPoint> = front.iter().map(|&i| pts[i].clone()).collect();
+        batch.sort_by(|a, b| a.runtime.total_cmp(&b.runtime));
+        assert_eq!(streamed, batch);
+    }
+
+    #[test]
+    fn accumulator_evicts_dominated_and_keeps_first_tie() {
+        let mut acc = ParetoAccumulator::new();
+        assert!(acc.offer(&dp(10.0, 10.0, true)));
+        // Equal point arrives later: first wins.
+        let mut tie = dp(10.0, 10.0, true);
+        tie.pes = 999;
+        assert!(!acc.offer(&tie));
+        // A dominating point evicts the incumbent.
+        assert!(acc.offer(&dp(8.0, 8.0, true)));
+        assert_eq!(acc.len(), 1);
+        assert_eq!(acc.into_sorted()[0].runtime, 8.0);
+    }
+
+    #[test]
+    fn accumulator_merge_equals_streaming() {
+        // Any contiguous partition, merged in order, must equal the
+        // single streaming pass — the sharded sweep's determinism
+        // contract.
+        let pts: Vec<DesignPoint> = (0..40)
+            .map(|i| {
+                let x = ((i * 7) % 13) as f64 + 1.0;
+                let y = ((i * 11) % 17) as f64 + 1.0;
+                dp(x, y, i % 5 != 0)
+            })
+            .collect();
+        let mut whole = ParetoAccumulator::new();
+        for p in &pts {
+            whole.offer(p);
+        }
+        for chunk_size in [1usize, 3, 7, 40] {
+            let mut merged = ParetoAccumulator::new();
+            for chunk in pts.chunks(chunk_size) {
+                let mut shard = ParetoAccumulator::new();
+                for p in chunk {
+                    shard.offer(p);
+                }
+                merged.merge(&shard);
+            }
+            assert_eq!(
+                merged.clone().into_sorted(),
+                whole.clone().into_sorted(),
+                "chunk_size {chunk_size}"
+            );
+        }
     }
 }

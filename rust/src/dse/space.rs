@@ -31,7 +31,18 @@ pub struct DesignSpace {
 impl DesignSpace {
     /// Number of candidate designs (before validity filtering).
     pub fn size(&self) -> u64 {
-        (self.pes.len() * self.bandwidths.len() * self.variants.len()) as u64
+        (self.pairs() * self.bandwidths.len()) as u64
+    }
+
+    /// Number of (variant, PEs) pairs — the outer product the sharded
+    /// sweep splits into work shards.
+    pub fn pairs(&self) -> usize {
+        self.variants.len() * self.pes.len()
+    }
+
+    /// A seconds-scale Fig 13 space for CI smoke runs and tests.
+    pub fn ci_smoke(family: &str) -> DesignSpace {
+        DesignSpace::fig13(family, 5)
     }
 
     /// The Fig 13 space for a dataflow family ("kc-p" or "yr-p"), at a
@@ -184,5 +195,13 @@ mod tests {
     fn fig13_space_is_nontrivial() {
         let s = DesignSpace::fig13("kc-p", 16);
         assert!(s.size() > 500);
+        assert_eq!(s.size(), (s.pairs() * s.bandwidths.len()) as u64);
+    }
+
+    #[test]
+    fn ci_smoke_space_is_small() {
+        let s = DesignSpace::ci_smoke("kc-p");
+        assert!(s.size() < 500, "smoke space must finish in seconds, got {}", s.size());
+        assert!(s.pairs() >= 4, "still enough pairs to exercise sharding");
     }
 }

@@ -18,10 +18,14 @@
 //!   area/power regression models used by the DSE.
 //! * [`sim`] — a cycle-level schedule simulator used as the RTL-substitute
 //!   ground truth for Fig 9 style validation.
-//! * [`dse`] — the hardware design-space exploration engine (sweep with
-//!   invalid-design skipping, Pareto extraction, objectives).
-//! * [`runtime`] — PJRT (xla crate) loader/executor for the AOT-compiled
-//!   batched evaluator (`artifacts/dse_eval.hlo.txt`).
+//! * [`dse`] — the hardware design-space exploration engine: a sharded
+//!   parallel sweep with §5.2 invalid-design skipping and streaming
+//!   Pareto accumulation (see the module docs for the architecture),
+//!   plus Pareto extraction and objectives.
+//! * [`runtime`] — PJRT (xla crate, behind the `pjrt` cargo feature)
+//!   loader/executor for the AOT-compiled batched evaluator
+//!   (`artifacts/dse_eval.hlo.txt`); a stub that falls back to the
+//!   scalar backend otherwise.
 //! * [`coordinator`] — the L3 orchestration: worker threads, design-point
 //!   batching, backpressure, metrics.
 //! * [`report`] — table/CSV/ASCII-scatter emitters for the experiment

@@ -4,7 +4,7 @@
 //! maestro analyze  --model vgg16 --layer conv2_2 --dataflow kc-p [--pes 256 --bw 16]
 //! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime]
 //! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
-//! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12]
+//! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
 //! maestro table1
 //! maestro zoo
 //! ```
@@ -12,6 +12,7 @@
 use anyhow::{bail, Context, Result};
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::dse::engine::{sweep, DesignPoint, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
 use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
@@ -36,7 +37,8 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "layer-model", takes_value: true, help: "model providing the DSE layer" },
         FlagSpec { name: "resolution", takes_value: true, help: "DSE sweep resolution per axis (default 12)" },
         FlagSpec { name: "pjrt", takes_value: false, help: "use the AOT PJRT evaluator for DSE" },
-        FlagSpec { name: "workers", takes_value: true, help: "coordinator worker threads (default 4)" },
+        FlagSpec { name: "threads", takes_value: true, help: "sweep worker threads (default 0 = all cores)" },
+        FlagSpec { name: "workers", takes_value: true, help: "coordinator workers for --pjrt (default 4); without --pjrt, caps sweep threads when --threads is absent" },
         FlagSpec { name: "max-steps", takes_value: true, help: "simulator step budget (default 200M)" },
         FlagSpec { name: "csv", takes_value: false, help: "emit CSV instead of aligned tables" },
     ]
@@ -125,50 +127,60 @@ fn main() -> Result<()> {
             let (layer, _) = pick_layer(&args)?;
             let resolution = args.opt_u64("resolution", 12)? as usize;
             let space = DesignSpace::fig13(&family, resolution);
-            let workers = args.opt_u64("workers", 4)? as usize;
-            let backend = if args.has("pjrt") {
-                Backend::Pjrt(BatchEvaluator::default_path())
-            } else {
-                Backend::Scalar
-            };
-            // Jobs: one per (variant, pes); designs sweep bandwidth.
-            let mut jobs = Vec::new();
-            let mut id = 0u64;
-            for variant in &space.variants {
-                for &pes in &space.pes {
-                    id += 1;
-                    jobs.push(DseJob {
-                        id,
-                        layers: vec![layer.clone()],
-                        variant: variant.clone(),
-                        pes,
-                        designs: space
-                            .bandwidths
-                            .iter()
-                            .map(|&bw| DesignIn { bandwidth: bw as f64, latency: space.noc_latency as f64, l1: 0.0, l2: 0.0 })
-                            .collect(),
-                        noc_hops: space.noc_latency,
-                        area_budget: space.area_budget_mm2,
-                        power_budget: space.power_budget_mw,
-                    });
+            if args.has("pjrt") {
+                // The PJRT backend goes through the coordinator (the
+                // evaluator thread owns the executable). Jobs: one per
+                // (variant, pes); designs sweep bandwidth.
+                let workers = args.opt_u64("workers", 4)? as usize;
+                let backend = Backend::Pjrt(BatchEvaluator::default_path());
+                let mut jobs = Vec::new();
+                let mut id = 0u64;
+                for variant in &space.variants {
+                    for &pes in &space.pes {
+                        id += 1;
+                        jobs.push(DseJob {
+                            id,
+                            layers: vec![layer.clone()],
+                            variant: variant.clone(),
+                            pes,
+                            designs: space
+                                .bandwidths
+                                .iter()
+                                .map(|&bw| DesignIn { bandwidth: bw as f64, latency: space.noc_latency as f64, l1: 0.0, l2: 0.0 })
+                                .collect(),
+                            noc_hops: space.noc_latency,
+                            area_budget: space.area_budget_mm2,
+                            power_budget: space.power_budget_mw,
+                        });
+                    }
                 }
-            }
-            let t0 = std::time::Instant::now();
-            let (results, metrics) = run_jobs(jobs, backend, workers)?;
-            let wall = t0.elapsed().as_secs_f64();
-            let macs = results.iter().map(|r| r.macs).fold(0.0, f64::max);
-            let mut points = Vec::new();
-            for r in &results {
-                points.extend(r.points());
-            }
-            println!("{}", metrics.summary(wall));
-            println!("designs: {} total, {} valid", points.len(), points.iter().filter(|p| p.valid).count());
-            print!("{}", experiments::design_space_scatter(&points, macs, &format!("{family} design space ({})", layer.name)));
-            if let Some(t) = best(&points, Optimize::Throughput, macs) {
-                println!("throughput-opt: pes={} bw={} area={:.2}mm2 power={:.0}mW thrpt={:.1}", t.pes, t.bandwidth, t.area_mm2, t.power_mw, t.throughput(macs));
-            }
-            if let Some(e) = best(&points, Optimize::Energy, macs) {
-                println!("energy-opt:     pes={} bw={} area={:.2}mm2 power={:.0}mW energy={:.2}uJ", e.pes, e.bandwidth, e.area_mm2, e.power_mw, e.energy_pj / 1e6);
+                let t0 = std::time::Instant::now();
+                let (results, metrics) = run_jobs(jobs, backend, workers)?;
+                let wall = t0.elapsed().as_secs_f64();
+                let macs = results.iter().map(|r| r.macs).fold(0.0, f64::max);
+                let mut points = Vec::new();
+                for r in &results {
+                    points.extend(r.points());
+                }
+                println!("{}", metrics.summary(wall));
+                println!("designs: {} total, {} valid", points.len(), points.iter().filter(|p| p.valid).count());
+                print!("{}", experiments::design_space_scatter(&points, macs, &format!("{family} design space ({})", layer.name)));
+                print_optima(&points, macs);
+            } else {
+                // Default path: the sharded scalar sweep engine.
+                // --workers (the coordinator-era spelling) still caps
+                // parallelism when --threads is not given.
+                let threads = args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize;
+                let cfg = SweepConfig { threads, keep_all_points: true, ..SweepConfig::default() };
+                let outcome = sweep(&[&layer], &space, space.noc_latency, &cfg)?;
+                let macs = layer.macs() as f64;
+                println!("{}", outcome.stats.summary());
+                print!("{}", experiments::design_space_scatter(&outcome.points, macs, &format!("{family} design space ({})", layer.name)));
+                println!("runtime-energy Pareto frontier: {} points", outcome.frontier.len());
+                let head = &outcome.frontier[..outcome.frontier.len().min(12)];
+                let t = experiments::frontier_table(head, macs);
+                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+                print_optima(&outcome.points, macs);
             }
         }
         "table1" => {
@@ -198,6 +210,16 @@ fn main() -> Result<()> {
         other => bail!("unknown subcommand '{other}'\n{}", usage(&spec)),
     }
     Ok(())
+}
+
+/// Print the throughput- and energy-optimal designs of a point set.
+fn print_optima(points: &[DesignPoint], macs: f64) {
+    if let Some(t) = best(points, Optimize::Throughput, macs) {
+        println!("throughput-opt: pes={} bw={} area={:.2}mm2 power={:.0}mW thrpt={:.1}", t.pes, t.bandwidth, t.area_mm2, t.power_mw, t.throughput(macs));
+    }
+    if let Some(e) = best(points, Optimize::Energy, macs) {
+        println!("energy-opt:     pes={} bw={} area={:.2}mm2 power={:.0}mW energy={:.2}uJ", e.pes, e.bandwidth, e.area_mm2, e.power_mw, e.energy_pj / 1e6);
+    }
 }
 
 /// Resolve --model/--layer into a concrete layer (default: VGG16 conv2_2,

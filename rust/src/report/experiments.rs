@@ -45,6 +45,28 @@ pub fn stats_table(stats: &[LayerStats]) -> Table {
     t
 }
 
+/// Render a Pareto frontier (or any design-point list) as a table —
+/// shared by the CLI `dse` subcommand and the DSE examples.
+pub fn frontier_table(points: &[DesignPoint], macs: f64) -> Table {
+    let mut t = Table::new(&[
+        "variant", "PEs", "BW", "L1 (el)", "L2 (el)", "thrpt (MAC/cyc)", "energy (uJ)", "area (mm2)", "power (mW)",
+    ]);
+    for p in points {
+        t.row(&[
+            p.dataflow.clone(),
+            p.pes.to_string(),
+            p.bandwidth.to_string(),
+            p.l1.to_string(),
+            p.l2.to_string(),
+            format!("{:.1}", p.throughput(macs)),
+            format!("{:.1}", p.energy_pj / 1e6),
+            format!("{:.2}", p.area_mm2),
+            format!("{:.0}", p.power_mw),
+        ]);
+    }
+    t
+}
+
 /// Fig 13-style scatter: area vs throughput, with optima marked.
 pub fn design_space_scatter(points: &[DesignPoint], macs: f64, title: &str) -> String {
     let mut sc = Scatter::new(title, "area (mm2)", "throughput (MACs/cycle)");
@@ -108,6 +130,18 @@ mod tests {
         assert!(stats.len() >= 4, "most styles must analyze conv13");
         let t = stats_table(&stats);
         assert!(t.render().contains("KC-P"));
+    }
+
+    #[test]
+    fn frontier_table_renders_points() {
+        use crate::dse::engine::{sweep, SweepConfig};
+        use crate::dse::space::DesignSpace;
+        let layer = vgg16::conv13();
+        let out = sweep(&[&layer], &DesignSpace::ci_smoke("kc-p"), 2, &SweepConfig::serial()).unwrap();
+        assert!(!out.frontier.is_empty());
+        let rendered = frontier_table(&out.frontier, layer.macs() as f64).render();
+        assert!(rendered.contains("KC-P"));
+        assert!(rendered.contains("thrpt"));
     }
 
     #[test]

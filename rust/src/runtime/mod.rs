@@ -8,12 +8,22 @@
 //! with `python/compile/model.py`; [`scalars_layout`] documents it and
 //! integration tests cross-check the numbers against the scalar Rust
 //! evaluator in [`crate::dse::engine`].
+//!
+//! The `xla` crate (and its native XLA toolchain) is only required when
+//! the `pjrt` cargo feature is enabled (see Cargo.toml for how to wire
+//! the dependency in); the default build ships a stub [`BatchEvaluator`]
+//! whose `load` always errors, so every caller falls back to the scalar
+//! path and a clean checkout builds with `anyhow` alone.
 
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{ensure, Context};
 
-use crate::dse::engine::{CaseTable, CASE_FEATURES};
+use crate::dse::engine::CaseTable;
+#[cfg(feature = "pjrt")]
+use crate::dse::engine::CASE_FEATURES;
 use crate::hw::area;
 use crate::hw::energy;
 
@@ -92,10 +102,54 @@ pub fn scalars_layout(
 }
 
 /// The compiled batched evaluator.
+#[cfg(feature = "pjrt")]
 pub struct BatchEvaluator {
     exe: xla::PjRtLoadedExecutable,
 }
 
+/// Stub compiled without the `pjrt` feature: [`BatchEvaluator::load`]
+/// always errors, so callers (coordinator, examples) drop to the scalar
+/// backend.
+#[cfg(not(feature = "pjrt"))]
+pub struct BatchEvaluator {
+    _private: (),
+}
+
+impl BatchEvaluator {
+    /// Default artifact location relative to the repo root.
+    pub fn default_path() -> std::path::PathBuf {
+        std::path::PathBuf::from(
+            std::env::var("MAESTRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )
+        .join("dse_eval.hlo.txt")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl BatchEvaluator {
+    /// Always errors: PJRT support is not compiled in.
+    pub fn load(path: &Path) -> Result<BatchEvaluator> {
+        anyhow::bail!(
+            "PJRT support not compiled in — wire the `xla` dependency in (see the note under \
+             [features] in Cargo.toml) and rebuild with `--features pjrt`; cannot load {}",
+            path.display()
+        )
+    }
+
+    /// Unreachable without a successful [`BatchEvaluator::load`].
+    pub fn evaluate(
+        &self,
+        _table: &CaseTable,
+        _designs: &[DesignIn],
+        _noc_hops: u64,
+        _area_budget: f64,
+        _power_budget: f64,
+    ) -> Result<Vec<EvalOut>> {
+        anyhow::bail!("PJRT support not compiled in")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl BatchEvaluator {
     /// Load + compile the HLO-text artifact on the PJRT CPU client.
     pub fn load(path: &Path) -> Result<BatchEvaluator> {
@@ -108,14 +162,6 @@ impl BatchEvaluator {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).context("compiling artifact")?;
         Ok(BatchEvaluator { exe })
-    }
-
-    /// Default artifact location relative to the repo root.
-    pub fn default_path() -> std::path::PathBuf {
-        std::path::PathBuf::from(
-            std::env::var("MAESTRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-        )
-        .join("dse_eval.hlo.txt")
     }
 
     /// Evaluate up to [`D_MAX`] designs against a case table. Larger

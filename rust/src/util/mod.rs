@@ -8,5 +8,6 @@
 pub mod benchkit;
 pub mod cli;
 pub mod propcheck;
+pub mod queue;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,79 @@
+//! A bounded multi-consumer work queue — the `Arc<Mutex<Receiver>>`
+//! idiom the coordinator's prep workers proved out, extracted here so
+//! the sharded DSE sweep (and any future layer) can share it without a
+//! module cycle.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+/// Clone the queue once per worker; [`JobQueue::pop`] blocks until an
+/// item arrives or every sender is gone.
+pub struct JobQueue<T> {
+    rx: Arc<Mutex<Receiver<T>>>,
+}
+
+impl<T> Clone for JobQueue<T> {
+    fn clone(&self) -> JobQueue<T> {
+        JobQueue { rx: Arc::clone(&self.rx) }
+    }
+}
+
+impl<T: Send> JobQueue<T> {
+    /// Bounded queue; feed work through the returned sender and drop it
+    /// (and all clones) to close the queue.
+    pub fn bounded(cap: usize) -> (SyncSender<T>, JobQueue<T>) {
+        let (tx, rx) = sync_channel(cap.max(1));
+        (tx, JobQueue { rx: Arc::new(Mutex::new(rx)) })
+    }
+
+    /// A queue preloaded with a finite work list and already closed:
+    /// consumers drain the items in order, then see `None`.
+    pub fn preloaded(items: Vec<T>) -> JobQueue<T> {
+        let (tx, queue) = JobQueue::bounded(items.len());
+        for item in items {
+            tx.send(item).expect("preloaded queue has capacity for every item");
+        }
+        queue
+    }
+
+    /// Next item, or `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        self.rx.lock().unwrap().recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preloaded_queue_drains_in_order_then_closes() {
+        let q = JobQueue::preloaded(vec![1, 2, 3]);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        // Empty lists are fine too.
+        let empty = JobQueue::<u32>::preloaded(Vec::new());
+        assert_eq!(empty.pop(), None);
+    }
+
+    #[test]
+    fn shared_queue_consumes_each_item_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = JobQueue::preloaded((0..100u64).collect());
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let q = q.clone();
+                let total = &total;
+                scope.spawn(move || {
+                    while let Some(v) = q.pop() {
+                        total.fetch_add(v, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+}

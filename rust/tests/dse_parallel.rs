@@ -1,0 +1,130 @@
+//! The sharded sweep's determinism and accounting contract: the merged
+//! frontier, point list, and statistics must be bit-identical for any
+//! thread count / shard size, and the counters must match a plain
+//! serial reimplementation of the §5.2 pruned sweep.
+
+use maestro::dse::engine::{
+    build_case_table, eval_energy, eval_runtime, sweep, SweepConfig, SweepStats,
+};
+use maestro::dse::space::{kc_p_ct, DesignSpace};
+use maestro::hw::area;
+use maestro::model::layer::Layer;
+use maestro::model::zoo::vgg16;
+
+fn without_wall_clock(stats: &SweepStats) -> SweepStats {
+    SweepStats { seconds: 0.0, ..stats.clone() }
+}
+
+#[test]
+fn sweep_is_deterministic_across_thread_counts() {
+    let layer = vgg16::conv13();
+    let space = DesignSpace::fig13("kc-p", 6);
+    let reference = sweep(
+        &[&layer],
+        &space,
+        2,
+        &SweepConfig { keep_all_points: true, ..SweepConfig::serial() },
+    )
+    .unwrap();
+    assert!(!reference.frontier.is_empty());
+    for (threads, shard_size) in [(2usize, 0usize), (4, 1), (4, 3), (8, 2), (0, 0)] {
+        let cfg = SweepConfig { threads, shard_size, keep_all_points: true };
+        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        assert_eq!(
+            out.frontier, reference.frontier,
+            "frontier must be bit-identical (threads={threads}, shard_size={shard_size})"
+        );
+        assert_eq!(
+            out.points, reference.points,
+            "full point list must replay serial order (threads={threads}, shard_size={shard_size})"
+        );
+        assert_eq!(
+            without_wall_clock(&out.stats),
+            without_wall_clock(&reference.stats),
+            "counts must match (threads={threads}, shard_size={shard_size})"
+        );
+    }
+}
+
+/// A from-scratch serial reimplementation of the pruned sweep's
+/// accounting, independent of the sharded engine's code path.
+fn serial_reference_counts(layers: &[&Layer], space: &DesignSpace, noc_hops: u64) -> SweepStats {
+    let mut stats = SweepStats { total_designs: space.size(), ..SweepStats::default() };
+    let min_bw = *space.bandwidths.iter().min().unwrap();
+    for variant in &space.variants {
+        for &pes in &space.pes {
+            let Ok(table) = build_case_table(layers, variant, pes) else {
+                stats.unmappable += space.bandwidths.len() as u64;
+                continue;
+            };
+            let min_ap = area::evaluate(pes, table.l1_req, table.l2_req, min_bw);
+            if min_ap.area_mm2 > space.area_budget_mm2 || min_ap.power_mw > space.power_budget_mw {
+                stats.pruned += space.bandwidths.len() as u64;
+                continue;
+            }
+            let energy = eval_energy(&table.activity, table.l1_req, table.l2_req, noc_hops);
+            for &bw in &space.bandwidths {
+                stats.evaluated += 1;
+                let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
+                let runtime = eval_runtime(&table, bw, space.noc_latency);
+                let power = ap.power_mw + energy / runtime.max(1.0);
+                if ap.area_mm2 <= space.area_budget_mm2 && power <= space.power_budget_mw {
+                    stats.valid += 1;
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[test]
+fn sweep_counts_match_serial_reference() {
+    let layer = vgg16::conv2();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let want = serial_reference_counts(&[&layer], &space, 2);
+    for threads in [1usize, 4] {
+        let cfg = SweepConfig { threads, ..SweepConfig::default() };
+        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        assert_eq!(without_wall_clock(&out.stats), without_wall_clock(&want), "threads={threads}");
+    }
+    assert_eq!(want.evaluated + want.pruned + want.unmappable, want.total_designs);
+}
+
+#[test]
+fn unmappable_and_pruned_pairs_are_distinguished() {
+    let layer = vgg16::conv13();
+    // kc_p_ct(64) needs a 64-PE cluster: pes=8 is unmappable, while
+    // pes=4096 maps but exceeds the power budget at any bandwidth.
+    let space = DesignSpace {
+        pes: vec![8, 4096],
+        bandwidths: vec![4, 64],
+        noc_latency: 2,
+        variants: vec![kc_p_ct(64)],
+        area_budget_mm2: 16.0,
+        power_budget_mw: 450.0,
+    };
+    let out = sweep(&[&layer], &space, 2, &SweepConfig::default()).unwrap();
+    assert_eq!(out.stats.unmappable, 2);
+    assert_eq!(out.stats.pruned, 2);
+    assert_eq!(out.stats.evaluated, 0);
+    assert!(out.frontier.is_empty());
+    let summary = out.stats.summary();
+    assert!(summary.contains("pruned=2") && summary.contains("unmappable=2"), "{summary}");
+}
+
+#[test]
+fn streaming_frontier_without_points_matches_keep_all() {
+    let layer = vgg16::conv2();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let lean = sweep(&[&layer], &space, 2, &SweepConfig::default()).unwrap();
+    let full = sweep(
+        &[&layer],
+        &space,
+        2,
+        &SweepConfig { keep_all_points: true, ..SweepConfig::default() },
+    )
+    .unwrap();
+    assert!(lean.points.is_empty(), "keep_all_points=false must not materialize the space");
+    assert_eq!(full.points.len() as u64, full.stats.evaluated);
+    assert_eq!(lean.frontier, full.frontier);
+}

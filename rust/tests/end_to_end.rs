@@ -5,7 +5,7 @@
 //! *shape*).
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
-use maestro::dse::engine::sweep;
+use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
 use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
@@ -84,7 +84,9 @@ fn paper_shape_adaptive_beats_static_on_mixed_models() {
 fn dse_finds_valid_pareto_points_within_budget() {
     let layer = vgg16::conv13();
     let space = DesignSpace::fig13("kc-p", 8);
-    let (points, stats) = sweep(&[&layer], &space, 2).unwrap();
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
+    let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+    let (points, stats) = (out.points, out.stats);
     assert!(stats.valid > 10, "expected a populated valid region, got {}", stats.valid);
     let macs = layer.macs() as f64;
     let t = best(&points, Optimize::Throughput, macs).expect("throughput optimum");

@@ -14,6 +14,10 @@ use maestro::model::zoo::vgg16;
 use maestro::runtime::{evaluate_scalar, BatchEvaluator, DesignIn, D_MAX};
 
 fn artifact() -> Option<BatchEvaluator> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — BatchEvaluator is the scalar-fallback stub");
+        return None;
+    }
     let path = BatchEvaluator::default_path();
     if !path.exists() {
         eprintln!(
