@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use maestro::engine::analysis::{adaptive_network, analyze_network, Objective};
+use maestro::engine::analysis::{adaptive_network_with, analyze_network_with, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
 use maestro::model::zoo;
@@ -18,29 +18,44 @@ fn main() -> Result<()> {
     let net = zoo::by_name("mobilenetv2")?;
     let hw = HwConfig::fig10_default();
     let candidates = styles::all_styles();
+    println!("{}: {} layers, {} unique shapes", net.name, net.layers.len(), net.unique_shapes().len());
+
+    // One Analyzer for every run below: the static baselines already
+    // warm the cache the adaptive pass then replays — each (shape,
+    // dataflow) pair is analyzed exactly once across the whole example.
+    let mut analyzer = Analyzer::new();
 
     // Static baselines.
-    let mut t = Table::new(&["dataflow", "runtime (Mcyc)", "energy (uJ)", "layers mapped"]);
+    let mut t = Table::new(&["dataflow", "runtime (Mcyc)", "energy (uJ)", "layers mapped", "skipped"]);
     let mut best_static = f64::INFINITY;
     for df in &candidates {
-        if let Ok(s) = analyze_network(&net, df, &hw, true) {
+        if let Ok(s) = analyze_network_with(&mut analyzer, &net, df, &hw, true) {
             best_static = best_static.min(s.runtime);
             t.row(&[
                 df.name.clone(),
                 format!("{:.2}", s.runtime / 1e6),
                 num(s.energy.total() / 1e6),
                 s.per_layer.len().to_string(),
+                s.skipped.len().to_string(),
             ]);
         }
     }
-    let adaptive = adaptive_network(&net, &candidates, &hw, Objective::Runtime)?;
+    let adaptive = adaptive_network_with(&mut analyzer, &net, &candidates, &hw, Objective::Runtime)?;
     t.row(&[
         "adaptive".into(),
         format!("{:.2}", adaptive.runtime / 1e6),
         num(adaptive.energy.total() / 1e6),
         adaptive.per_layer.len().to_string(),
+        adaptive.skipped.len().to_string(),
     ]);
     print!("{}", t.render());
+    println!(
+        "analyzer cache: {} hits / {} misses ({} entries) across {} static + 1 adaptive runs",
+        analyzer.cache_hits(),
+        analyzer.cache_misses(),
+        analyzer.cache_len(),
+        candidates.len()
+    );
     println!(
         "\nadaptive runtime gain vs best static: {:.1}% (paper reports ~37% across models vs one static dataflow)",
         (1.0 - adaptive.runtime / best_static) * 100.0

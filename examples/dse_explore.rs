@@ -12,11 +12,13 @@ use anyhow::Result;
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
+use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 use maestro::report::experiments::{compare_optima, design_space_scatter, frontier_table};
 
 fn main() -> Result<()> {
     let layer = vgg16::conv2();
+    let net = Network::single(layer.clone());
     let space = DesignSpace::fig13("kc-p", 12);
     println!(
         "sweeping {} candidate designs (KC-P variants x PEs x bandwidth) under 16 mm2 / 450 mW",
@@ -25,7 +27,7 @@ fn main() -> Result<()> {
     // keep_all_points feeds the scatter; drop it for paper-scale spaces
     // and work from the streaming frontier alone.
     let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
-    let outcome = sweep(&[&layer], &space, 2, &cfg)?;
+    let outcome = sweep(&net, &space, 2, &cfg)?;
     let macs = layer.macs() as f64;
     println!("{}", outcome.stats.summary());
 

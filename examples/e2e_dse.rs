@@ -45,9 +45,11 @@ fn main() -> Result<()> {
 
     // Stage 0: the sharded scalar sweep (streaming frontier, no PJRT) —
     // the memory-bounded baseline the coordinator path is compared to.
+    // The workload is the whole network: each shard's Analyzer dedupes
+    // the conv stack's repeated shapes (see cache= in the summaries).
     let space = DesignSpace::fig13("kc-p", 10);
-    let serial = sweep(&layer_refs, &space, 2, &SweepConfig::serial())?;
-    let sharded = sweep(&layer_refs, &space, 2, &SweepConfig::default())?;
+    let serial = sweep(&net, &space, 2, &SweepConfig::serial())?;
+    let sharded = sweep(&net, &space, 2, &SweepConfig::default())?;
     println!("sharded sweep, 1 thread:   {}", serial.stats.summary());
     println!("sharded sweep, all cores:  {}", sharded.stats.summary());
     println!(
@@ -72,7 +74,7 @@ fn main() -> Result<()> {
             id += 1;
             jobs.push(DseJob {
                 id,
-                layers: net.layers.clone(),
+                network: net.clone(),
                 variant: variant.clone(),
                 pes,
                 designs: designs.clone(),

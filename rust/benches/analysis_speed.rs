@@ -2,19 +2,83 @@
 //! (layer, dataflow) vs 7.2-28.8 hours of RTL simulation (1029-4116x).
 //!
 //! Measures per-layer analysis latency across the Table 3 dataflows and
-//! the VGG16 conv stack, and the analytic-vs-simulator speedup on a
-//! bounded layer.
+//! the VGG16 conv stack, the shape-memoized `Analyzer` against the
+//! uncached per-layer loop on a repeated-shape zoo network (ResNet-50),
+//! and the analytic-vs-simulator speedup on a bounded layer.
+//!
+//! CI smoke mode: `ANALYSIS_SMOKE=1 cargo bench --bench analysis_speed`
+//! runs only the cached-vs-uncached comparison and writes the layers/s
+//! + hit/miss record to `BENCH_analysis_rate.json` (override with
+//! `ANALYSIS_SMOKE_OUT`) — uploaded as a CI build artifact next to
+//! `BENCH_dse_rate.json`.
 
-use maestro::engine::analysis::analyze_layer;
+use maestro::engine::analysis::{analyze_layer, Analyzer};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
 use maestro::model::layer::Layer;
-use maestro::model::zoo::vgg16;
+use maestro::model::network::Network;
+use maestro::model::zoo::{self, vgg16};
 use maestro::sim::cycle::simulate;
 use maestro::util::benchkit::{bench, bench_throughput, section};
 
+/// Cached-vs-uncached whole-network analysis throughput on a
+/// repeated-shape network. Returns (uncached layers/s, cached layers/s,
+/// hits, misses) for `repeats` passes over the network.
+fn cached_vs_uncached(net: &Network, hw: &HwConfig, repeats: u32) -> (f64, f64, u64, u64) {
+    let df = styles::kc_p();
+    // Uncached: the pre-Analyzer per-layer loop.
+    let t0 = std::time::Instant::now();
+    for _ in 0..repeats {
+        for layer in &net.layers {
+            let _ = analyze_layer(layer, &df, hw);
+        }
+    }
+    let uncached_s = t0.elapsed().as_secs_f64();
+    // Cached: one Analyzer across all passes — each unique shape is
+    // analyzed once, everything else replays.
+    let mut analyzer = Analyzer::new();
+    let t1 = std::time::Instant::now();
+    for _ in 0..repeats {
+        for layer in &net.layers {
+            let _ = analyzer.analyze(layer, &df, hw);
+        }
+    }
+    let cached_s = t1.elapsed().as_secs_f64();
+    let total = (net.layers.len() as u64 * repeats as u64) as f64;
+    (total / uncached_s.max(1e-9), total / cached_s.max(1e-9), analyzer.cache_hits(), analyzer.cache_misses())
+}
+
+fn analysis_rate_json(net: &Network, rates: (f64, f64, u64, u64)) -> String {
+    let (uncached, cached, hits, misses) = rates;
+    format!(
+        "{{\n  \"bench\": \"analysis_rate\",\n  \"network\": \"{}\",\n  \"dataflow\": \"KC-P\",\n  \
+         \"layers\": {},\n  \"unique_shapes\": {},\n  \"uncached_layers_per_s\": {uncached:.1},\n  \
+         \"cached_layers_per_s\": {cached:.1},\n  \"speedup\": {:.2},\n  \"cache_hits\": {hits},\n  \
+         \"cache_misses\": {misses}\n}}\n",
+        net.name,
+        net.layers.len(),
+        net.unique_shapes().len(),
+        cached / uncached.max(1e-9),
+    )
+}
+
 fn main() {
     let hw = HwConfig::fig10_default();
+
+    let smoke = std::env::var("ANALYSIS_SMOKE")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
+        .unwrap_or(false);
+    if smoke {
+        section("analysis bench smoke (CI): cached vs uncached layers/s on resnet50");
+        let net = zoo::by_name("resnet50").unwrap();
+        let rates = cached_vs_uncached(&net, &hw, 3);
+        let json = analysis_rate_json(&net, rates);
+        print!("{json}");
+        let path = std::env::var("ANALYSIS_SMOKE_OUT").unwrap_or_else(|_| "BENCH_analysis_rate.json".into());
+        std::fs::write(&path, json).expect("write analysis smoke json");
+        println!("wrote {path}");
+        return;
+    }
 
     section("analysis latency per (layer, dataflow) — paper: ~10 ms");
     for df in styles::all_styles() {
@@ -36,6 +100,19 @@ fn main() {
         }
         acc
     });
+
+    section("shape-memoized Analyzer vs uncached loop (repeated-shape networks)");
+    for name in ["resnet50", "vgg16-conv", "mobilenetv2"] {
+        let net = zoo::by_name(name).unwrap();
+        let (uncached, cached, hits, misses) = cached_vs_uncached(&net, &hw, 5);
+        println!(
+            "{name}: {} layers / {} unique shapes | uncached {uncached:.0} layers/s | \
+             cached {cached:.0} layers/s | speedup x{:.2} | cache {hits}h/{misses}m",
+            net.layers.len(),
+            net.unique_shapes().len(),
+            cached / uncached.max(1e-9),
+        );
+    }
 
     section("analytic model vs cycle-level simulator (RTL substitute)");
     let layer = Layer::conv2d("cmp", 1, 32, 32, 34, 34, 3, 3, 1);

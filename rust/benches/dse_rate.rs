@@ -16,18 +16,18 @@
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, SweepConfig, SweepStats};
 use maestro::dse::space::{geometric_range, kc_p_variants, DesignSpace};
-use maestro::model::layer::Layer;
+use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 use maestro::runtime::{BatchEvaluator, DesignIn};
 use maestro::util::benchkit::{bench_throughput, fmt_rate, section};
 
 const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
 
-fn sweep_scaling(layer: &Layer, space: &DesignSpace) -> Vec<(usize, SweepStats)> {
+fn sweep_scaling(net: &Network, space: &DesignSpace) -> Vec<(usize, SweepStats)> {
     let mut runs = Vec::new();
     for threads in SWEEP_THREADS {
         let cfg = SweepConfig { threads, ..SweepConfig::default() };
-        let outcome = sweep(&[layer], space, 2, &cfg).unwrap();
+        let outcome = sweep(net, space, 2, &cfg).unwrap();
         println!("threads {threads}: {}", outcome.stats.summary());
         runs.push((threads, outcome.stats));
     }
@@ -35,21 +35,30 @@ fn sweep_scaling(layer: &Layer, space: &DesignSpace) -> Vec<(usize, SweepStats)>
 }
 
 /// Hand-rolled JSON record (no serde in the image): one object per
-/// thread count, seeding the `BENCH_*.json` trajectory.
-fn scaling_json(resolution: &str, runs: &[(usize, SweepStats)]) -> String {
+/// thread count, seeding the `BENCH_*.json` trajectory. The workload is
+/// part of the record — PR 2 switched the smoke from a single layer to
+/// the whole VGG16 conv stack, so designs/s is not comparable across
+/// records with different workloads.
+fn scaling_json(resolution: &str, net: &Network, runs: &[(usize, SweepStats)]) -> String {
     let mut s = String::from("{\n");
     s += "  \"bench\": \"dse_rate\",\n";
     s += &format!("  \"space\": \"{resolution}\",\n");
+    s += &format!("  \"workload\": \"{}\",\n", net.name);
+    s += &format!("  \"workload_layers\": {},\n", net.layers.len());
+    s += &format!("  \"workload_unique_shapes\": {},\n", net.unique_shapes().len());
     s += "  \"runs\": [\n";
     for (i, (threads, st)) in runs.iter().enumerate() {
         s += &format!(
             "    {{\"threads\": {threads}, \"total_designs\": {}, \"evaluated\": {}, \"valid\": {}, \
-             \"pruned\": {}, \"unmappable\": {}, \"seconds\": {:.6}, \"designs_per_s\": {:.1}}}{}\n",
+             \"pruned\": {}, \"unmappable\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"seconds\": {:.6}, \"designs_per_s\": {:.1}}}{}\n",
             st.total_designs,
             st.evaluated,
             st.valid,
             st.pruned,
             st.unmappable,
+            st.cache_hits,
+            st.cache_misses,
             st.seconds,
             st.rate(),
             if i + 1 < runs.len() { "," } else { "" },
@@ -59,12 +68,14 @@ fn scaling_json(resolution: &str, runs: &[(usize, SweepStats)]) -> String {
     s
 }
 
-/// CI smoke: tiny space, scaling record written to disk, done.
-fn run_smoke(layer: &Layer) {
-    section("DSE bench smoke (CI): sharded sweep on DesignSpace::ci_smoke");
+/// CI smoke: tiny space, scaling record written to disk, done. The
+/// workload is the whole VGG16 conv stack so the shard Analyzers'
+/// cache_hits/cache_misses land in the JSON trajectory.
+fn run_smoke(net: &Network) {
+    section("DSE bench smoke (CI): sharded network sweep on DesignSpace::ci_smoke");
     let space = DesignSpace::ci_smoke("kc-p");
-    let runs = sweep_scaling(layer, &space);
-    let json = scaling_json("ci_smoke(kc-p)", &runs);
+    let runs = sweep_scaling(net, &space);
+    let json = scaling_json("ci_smoke(kc-p)", net, &runs);
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
     std::fs::write(&path, json).expect("write bench smoke json");
     println!("wrote {path}");
@@ -72,18 +83,19 @@ fn run_smoke(layer: &Layer) {
 
 fn main() {
     let layer = vgg16::conv2();
+    let single = Network::single(layer.clone());
     let smoke = std::env::var("DSE_SMOKE")
         .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
         .unwrap_or(false);
     if smoke {
-        run_smoke(&layer);
+        run_smoke(&vgg16::conv_only());
         return;
     }
 
     section("DSE rate (a): sharded sweep, single thread across resolutions");
     for resolution in [16usize, 32, 48] {
         let sp = DesignSpace::fig13("kc-p", resolution);
-        let out = sweep(&[&layer], &sp, 2, &SweepConfig::serial()).unwrap();
+        let out = sweep(&single, &sp, 2, &SweepConfig::serial()).unwrap();
         println!(
             "resolution {resolution:>3}: {} (paper avg 0.17M/s); frontier {} points",
             out.stats.summary(),
@@ -94,10 +106,24 @@ fn main() {
 
     section("DSE rate (a2): sharded sweep thread scaling (resolution 32)");
     let sp = DesignSpace::fig13("kc-p", 32);
-    let runs = sweep_scaling(&layer, &sp);
+    let runs = sweep_scaling(&single, &sp);
     let base = runs[0].1.seconds;
     for (threads, st) in &runs[1..] {
         println!("  speedup x{:.2} at {threads} threads", base / st.seconds.max(1e-9));
+    }
+
+    section("DSE rate (a3): whole-network sweep (VGG16 conv stack, shape-deduplicated)");
+    let net = vgg16::conv_only();
+    let sp = DesignSpace::fig13("kc-p", 12);
+    for cfg in [SweepConfig::serial(), SweepConfig::default()] {
+        let out = sweep(&net, &sp, 2, &cfg).unwrap();
+        println!(
+            "threads {}: {} ({} layers, {} unique shapes)",
+            if cfg.threads == 1 { "1".to_string() } else { "all".to_string() },
+            out.stats.summary(),
+            net.layers.len(),
+            net.unique_shapes().len(),
+        );
     }
 
     section("DSE rate (b): coordinator scaling (scalar backend)");
@@ -113,7 +139,7 @@ fn main() {
                 id += 1;
                 jobs.push(DseJob {
                     id,
-                    layers: vec![layer.clone()],
+                    network: Network::single(layer.clone()),
                     variant: variant.clone(),
                     pes,
                     designs: designs.clone(),
@@ -166,7 +192,7 @@ fn main() {
                 id += 1;
                 jobs.push(DseJob {
                     id,
-                    layers: vec![layer.clone()],
+                    network: Network::single(layer.clone()),
                     variant: variant.clone(),
                     pes,
                     designs: dense_designs.clone(),

@@ -7,6 +7,7 @@
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
+use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 use maestro::report::experiments::{buffer_scatter, compare_optima, design_space_scatter};
 use maestro::util::benchkit::section;
@@ -25,7 +26,7 @@ fn main() {
         for (lname, layer) in &layers {
             section(&format!("Fig 13: {family} on {lname}, budget 16 mm2 / 450 mW"));
             let space = DesignSpace::fig13(family, 14);
-            let out = sweep(&[layer], &space, 2, &cfg).unwrap();
+            let out = sweep(&Network::single(layer.clone()), &space, 2, &cfg).unwrap();
             let (points, stats) = (out.points, out.stats);
             let macs = layer.macs() as f64;
             print!("{}", design_space_scatter(&points, macs, &format!("{family} {lname}: area vs throughput")));
@@ -67,7 +68,7 @@ fn main() {
     section("Intro headline: KC-P on VGG16 CONV11");
     let conv11 = vgg16::conv11();
     let space = DesignSpace::fig13("kc-p", 14);
-    let points = sweep(&[&conv11], &space, 2, &cfg).unwrap().points;
+    let points = sweep(&Network::single(conv11.clone()), &space, 2, &cfg).unwrap().points;
     if let Some(c) = compare_optima(&points, conv11.macs() as f64) {
         println!(
             "energy- vs throughput-optimized: power x{:.2} (paper 2.16x), SRAM x{:.1} (paper 10.6x), PEs {:.0}% (paper 80%), EDP improvement {:.0}% (paper 65%), throughput {:.0}% (paper 62%)",

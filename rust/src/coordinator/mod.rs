@@ -15,9 +15,11 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::dse::engine::{build_case_table, CaseTable, DesignPoint};
+use crate::dse::engine::{build_case_table_cached, CaseTable, DesignPoint};
+use crate::engine::analysis::Analyzer;
 use crate::ir::dataflow::Dataflow;
 use crate::model::layer::Layer;
+use crate::model::network::Network;
 use crate::runtime::{evaluate_scalar, BatchEvaluator, DesignIn, EvalOut, D_MAX};
 // Re-exported where it was proven: the prep workers below and the
 // sharded DSE sweep share this bounded-queue idiom.
@@ -32,12 +34,13 @@ pub enum Backend {
     Pjrt(std::path::PathBuf),
 }
 
-/// One DSE job: a workload + mapping variant + PE count, with the design
-/// points (bandwidth/latency/buffers) to evaluate.
+/// One DSE job: a whole-network workload + mapping variant + PE count,
+/// with the design points (bandwidth/latency/buffers) to evaluate.
+/// Single-layer workloads wrap with [`Network::single`].
 #[derive(Debug, Clone)]
 pub struct DseJob {
     pub id: u64,
-    pub layers: Vec<Layer>,
+    pub network: Network,
     pub variant: Dataflow,
     pub pes: u64,
     pub designs: Vec<DesignIn>,
@@ -142,61 +145,72 @@ pub fn run_jobs(
             let prep_tx = prep_tx.clone();
             let res_tx = res_tx.clone();
             let metrics = Arc::clone(&metrics);
-            scope.spawn(move || loop {
-                let Some(job) = queue.pop() else { break };
-                let t0 = std::time::Instant::now();
-                let layer_refs: Vec<&Layer> = job.layers.iter().collect();
-                let table = build_case_table(&layer_refs, &job.variant, job.pes);
-                metrics.prep_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                // Buffer placement (§5.2: "the DSE tool places the exact
-                // amount buffers MAESTRO reported"): a non-positive L1/L2
-                // in a design is the "place required" sentinel.
-                let mut job = job;
-                if let Ok(t) = &table {
-                    for d in &mut job.designs {
-                        if d.l1 <= 0.0 {
-                            d.l1 = t.l1_req.max(1) as f64;
-                        }
-                        if d.l2 <= 0.0 {
-                            d.l2 = t.l2_req.max(1) as f64;
+            scope.spawn(move || {
+                // One Analyzer per prep worker: a job's repeated layer
+                // shapes are analyzed once. The cache is cleared per
+                // job — keys include (variant, pes), so cross-job hits
+                // only exist for duplicate jobs and holding entries
+                // would grow memory with the job count — while the
+                // scratch allocation amortizes across the worker's life.
+                let mut analyzer = Analyzer::new();
+                loop {
+                    let Some(job) = queue.pop() else { break };
+                    analyzer.clear_cache();
+                    let t0 = std::time::Instant::now();
+                    let layer_refs: Vec<&Layer> = job.network.layers.iter().collect();
+                    let table = build_case_table_cached(&mut analyzer, &layer_refs, &job.variant, job.pes);
+                    metrics.prep_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    // Buffer placement (§5.2: "the DSE tool places the
+                    // exact amount buffers MAESTRO reported"): a
+                    // non-positive L1/L2 in a design is the "place
+                    // required" sentinel.
+                    let mut job = job;
+                    if let Ok(t) = &table {
+                        for d in &mut job.designs {
+                            if d.l1 <= 0.0 {
+                                d.l1 = t.l1_req.max(1) as f64;
+                            }
+                            if d.l2 <= 0.0 {
+                                d.l2 = t.l2_req.max(1) as f64;
+                            }
                         }
                     }
-                }
-                match table {
-                    Ok(table) if use_pjrt => {
-                        if prep_tx.send((job, table)).is_err() {
-                            break;
+                    match table {
+                        Ok(table) if use_pjrt => {
+                            if prep_tx.send((job, table)).is_err() {
+                                break;
+                            }
                         }
-                    }
-                    Ok(table) => {
-                        let t1 = std::time::Instant::now();
-                        let outs = evaluate_scalar(
-                            &table,
-                            &job.designs,
-                            job.noc_hops,
-                            job.area_budget,
-                            job.power_budget,
-                        );
-                        metrics.eval_nanos.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        metrics.designs_evaluated.fetch_add(job.designs.len() as u64, Ordering::Relaxed);
-                        metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
-                        let _ = res_tx.send(JobResult {
-                            id: job.id,
-                            dataflow: job.variant.name.clone(),
-                            pes: job.pes,
-                            outputs: job.designs.iter().copied().zip(outs).collect(),
-                            macs: table.activity.macs,
-                        });
-                    }
-                    Err(_) => {
-                        metrics.jobs_skipped.fetch_add(1, Ordering::Relaxed);
-                        let _ = res_tx.send(JobResult {
-                            id: job.id,
-                            dataflow: job.variant.name.clone(),
-                            pes: job.pes,
-                            outputs: Vec::new(),
-                            macs: 0.0,
-                        });
+                        Ok(table) => {
+                            let t1 = std::time::Instant::now();
+                            let outs = evaluate_scalar(
+                                &table,
+                                &job.designs,
+                                job.noc_hops,
+                                job.area_budget,
+                                job.power_budget,
+                            );
+                            metrics.eval_nanos.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            metrics.designs_evaluated.fetch_add(job.designs.len() as u64, Ordering::Relaxed);
+                            metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                            let _ = res_tx.send(JobResult {
+                                id: job.id,
+                                dataflow: job.variant.name.clone(),
+                                pes: job.pes,
+                                outputs: job.designs.iter().copied().zip(outs).collect(),
+                                macs: table.activity.macs,
+                            });
+                        }
+                        Err(_) => {
+                            metrics.jobs_skipped.fetch_add(1, Ordering::Relaxed);
+                            let _ = res_tx.send(JobResult {
+                                id: job.id,
+                                dataflow: job.variant.name.clone(),
+                                pes: job.pes,
+                                outputs: Vec::new(),
+                                macs: 0.0,
+                            });
+                        }
                     }
                 }
             });
@@ -293,7 +307,7 @@ mod tests {
             .enumerate()
             .map(|(i, &pes)| DseJob {
                 id: i as u64,
-                layers: vec![layer.clone()],
+                network: Network::single(layer.clone()),
                 variant: kc_p_ct(16),
                 pes,
                 designs: designs(),
@@ -320,7 +334,7 @@ mod tests {
         let layer = vgg16::conv13();
         let job = DseJob {
             id: 9,
-            layers: vec![layer],
+            network: Network::single(layer),
             variant: kc_p_ct(64),
             pes: 8, // cluster 64 > 8 PEs -> unmappable
             designs: designs(),

@@ -14,18 +14,21 @@
 //! Pareto frontier + counters, and shards merge deterministically in
 //! shard order — see [`crate::dse`] module docs for the architecture.
 
+use std::collections::HashMap;
+
 use anyhow::{ensure, Result};
 
 use crate::dse::pareto::ParetoAccumulator;
-use crate::engine::analysis::analyze_layer;
+use crate::engine::analysis::Analyzer;
 use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
 use crate::engine::noc::reduction_delay;
 use crate::engine::reuse::{psum_revisits, tensor_usage};
 use crate::hw::area;
 use crate::hw::config::{HwConfig, ReductionSupport};
 use crate::hw::energy::EnergyModel;
-use crate::ir::dataflow::Dataflow;
-use crate::model::layer::Layer;
+use crate::ir::dataflow::{Dataflow, ResolvedDataflow};
+use crate::model::layer::{Layer, ShapeKey};
+use crate::model::network::Network;
 use crate::model::tensor::{couplings, TensorKind, ALL_TENSORS};
 use crate::util::queue::JobQueue;
 
@@ -81,7 +84,7 @@ pub struct Activity {
 }
 
 /// The flattened evaluation table for (workload, dataflow variant, #PEs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CaseTable {
     pub rows: Vec<CaseRow>,
     pub activity: Activity,
@@ -96,8 +99,26 @@ pub struct CaseTable {
 }
 
 /// Build the flattened case table for a set of layers (rows concatenate;
-/// runtime and energy are additive across layers).
+/// runtime and energy are additive across layers). One-shot wrapper over
+/// [`build_case_table_cached`].
 pub fn build_case_table(layers: &[&Layer], dataflow: &Dataflow, pes: u64) -> Result<CaseTable> {
+    build_case_table_cached(&mut Analyzer::new(), layers, dataflow, pes)
+}
+
+/// Build a case table through a caller-owned [`Analyzer`] (one per sweep
+/// shard / coordinator worker): per-layer activity goes through the
+/// analyzer's shape cache, and the flattened level-0 row blocks are
+/// computed once per distinct [`ShapeKey`] within the call. The table is
+/// assembled per member layer in workload order — cloned blocks, not
+/// scaled occurrences — so rows, activity sums and buffer maxima are
+/// bit-identical to the uncached per-layer path (pinned in
+/// `rust/tests/dse_parallel.rs`).
+pub fn build_case_table_cached(
+    analyzer: &mut Analyzer,
+    layers: &[&Layer],
+    dataflow: &Dataflow,
+    pes: u64,
+) -> Result<CaseTable> {
     ensure!(!layers.is_empty(), "case table needs at least one layer");
     // Reference config for activity extraction (bandwidth-independent).
     let hw = HwConfig { num_pes: pes, ..HwConfig::fig10_default() };
@@ -106,12 +127,24 @@ pub fn build_case_table(layers: &[&Layer], dataflow: &Dataflow, pes: u64) -> Res
     let mut l1_req = 0u64;
     let mut l2_req = 0u64;
     let mut units0 = 1u64;
+    // Per-shape flattened row blocks, local to this (variant, PEs) call.
+    let mut blocks: HashMap<ShapeKey, (u64, Vec<CaseRow>)> = HashMap::new();
 
     for layer in layers {
-        let resolved = dataflow.resolve(layer, pes)?;
-        units0 = units0.max(resolved.levels[0].units);
-        // Activity + buffer reqs from the full analytical engine.
-        let stats = analyze_layer(layer, dataflow, &hw)?;
+        // Activity + buffer reqs from the full analytical engine,
+        // memoized on the layer's shape. The first sighting of a shape
+        // resolves the dataflow once and feeds both the analysis and
+        // the flattened row block; replays touch neither.
+        let key = layer.shape_key();
+        let stats = if blocks.contains_key(&key) {
+            analyzer.analyze(layer, dataflow, &hw)?
+        } else {
+            let resolved = dataflow.resolve(layer, pes)?;
+            let stats = analyzer.analyze_with_resolved(layer, dataflow, &hw, &resolved)?;
+            let block = flatten_level0(layer, &resolved)?;
+            blocks.insert(key, (resolved.levels[0].units, block));
+            stats
+        };
         activity.macs += stats.macs;
         activity.l2_reads += stats.l2_reads.iter().sum::<f64>();
         activity.l2_writes += stats.l2_writes.iter().sum::<f64>();
@@ -121,6 +154,19 @@ pub fn build_case_table(layers: &[&Layer], dataflow: &Dataflow, pes: u64) -> Res
         l1_req = l1_req.max(stats.l1_req);
         l2_req = l2_req.max(stats.l2_req);
 
+        let (layer_units0, block) = &blocks[&key];
+        units0 = units0.max(*layer_units0);
+        rows.extend_from_slice(block);
+    }
+
+    Ok(CaseTable { rows, activity, l1_req, l2_req, pes, units0 })
+}
+
+/// Flatten one layer's level-0 iteration cases into [`CaseRow`]s (the
+/// per-shape unit [`build_case_table_cached`] memoizes).
+fn flatten_level0(layer: &Layer, resolved: &ResolvedDataflow) -> Result<Vec<CaseRow>> {
+    let mut rows = Vec::new();
+    {
         // Flattened level-0 rows.
         let level0 = &resolved.levels[0];
         let sched = build_schedule(level0, &level0.parent_tile, layer)?;
@@ -220,8 +266,7 @@ pub fn build_case_table(layers: &[&Layer], dataflow: &Dataflow, pes: u64) -> Res
             });
         }
     }
-
-    Ok(CaseTable { rows, activity, l1_req, l2_req, pes, units0 })
+    Ok(rows)
 }
 
 /// One evaluated design point.
@@ -339,6 +384,14 @@ pub struct SweepStats {
     /// Candidates skipped because the (variant, PEs) pair has no legal
     /// mapping (e.g. cluster size exceeds the PE array).
     pub unmappable: u64,
+    /// Analyzer layer-cache hits while building case tables: repeated
+    /// layer shapes replayed instead of re-analyzed. Diagnostic only —
+    /// the split (unlike hits + misses per pair) depends on the shard
+    /// partition, so it is excluded from the determinism contract
+    /// (see `rust/tests/dse_parallel.rs`).
+    pub cache_hits: u64,
+    /// Analyzer layer-cache misses (= full layer analyses run).
+    pub cache_misses: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
@@ -357,17 +410,22 @@ impl SweepStats {
         self.valid += other.valid;
         self.pruned += other.pruned;
         self.unmappable += other.unmappable;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
     }
 
-    /// One-line human summary, including the skip breakdown.
+    /// One-line human summary, including the skip breakdown and the
+    /// layer-cache hit/miss split.
     pub fn summary(&self) -> String {
         format!(
-            "designs={} evaluated={} valid={} pruned={} unmappable={} wall={:.2}s rate={}/s",
+            "designs={} evaluated={} valid={} pruned={} unmappable={} cache={}h/{}m wall={:.2}s rate={}/s",
             self.total_designs,
             self.evaluated,
             self.valid,
             self.pruned,
             self.unmappable,
+            self.cache_hits,
+            self.cache_misses,
             self.seconds,
             crate::util::benchkit::fmt_rate(self.rate()),
         )
@@ -400,25 +458,36 @@ struct ShardOutcome {
 /// serial iteration order, so concatenating any contiguous partition's
 /// output replays the single-threaded sweep exactly.
 ///
+/// One [`Analyzer`] serves the whole shard: its layer cache is keyed on
+/// (shape, variant, hardware), so the repeated shapes of a zoo network
+/// are analyzed once per (variant, PEs) pair instead of once per layer,
+/// and the scratch allocations amortize across the shard's pairs.
+///
 /// Pruning mirrors §5.2: before entering the bandwidth loop for a
 /// (variant, PEs) pair, the minimum achievable area/power (smallest
 /// bandwidth, required buffers) is checked against the budget; if it
 /// already exceeds, the whole inner loop is skipped but still counted.
 fn sweep_shard(
-    layers: &[&Layer],
+    net: &Network,
     space: &super::space::DesignSpace,
     noc_hops: u64,
     pairs: std::ops::Range<usize>,
     keep_all_points: bool,
 ) -> ShardOutcome {
     let mut out = ShardOutcome::default();
+    let mut analyzer = Analyzer::new();
+    let layers: Vec<&Layer> = net.layers.iter().collect();
     let n_pes = space.pes.len();
     let designs_per_pair = space.bandwidths.len() as u64;
     let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
     for pair in pairs {
+        // The cache key includes (variant, pes): a finished pair's
+        // entries can never hit again, so drop them before each pair
+        // (counters survive) to keep shard memory at O(unique shapes).
+        analyzer.clear_cache();
         let variant = &space.variants[pair / n_pes];
         let pes = space.pes[pair % n_pes];
-        let Ok(table) = build_case_table(layers, variant, pes) else {
+        let Ok(table) = build_case_table_cached(&mut analyzer, &layers, variant, pes) else {
             out.stats.unmappable += designs_per_pair;
             continue;
         };
@@ -464,11 +533,19 @@ fn sweep_shard(
             }
         }
     }
+    out.stats.cache_hits = analyzer.cache_hits();
+    out.stats.cache_misses = analyzer.cache_misses();
     out
 }
 
 /// Run the budget-pruned sweep over a design space, sharded across a
 /// scoped worker pool.
+///
+/// The workload is a whole [`Network`] — the zoo-scale unit of work;
+/// wrap a single layer with [`Network::single`]. Each worker shard owns
+/// one [`Analyzer`], so repeated layer shapes are analyzed once per
+/// (variant, PEs) pair and the hit/miss split surfaces in
+/// [`SweepStats`].
 ///
 /// The (variant, PEs) outer product is split into contiguous shards
 /// pulled from a [`JobQueue`] by `config.threads` workers; each shard
@@ -476,15 +553,16 @@ fn sweep_shard(
 /// frontier + [`SweepStats`] counters, so memory stays O(frontier)
 /// unless `keep_all_points` asks for the full scatter. Shard results
 /// merge in shard-index order, which replays the serial iteration order
-/// exactly: the frontier, point list, and counts are bit-identical for
-/// any thread count and shard size.
+/// exactly: the frontier, point list, and counts (cache counters aside
+/// — they follow the partition) are bit-identical for any thread count
+/// and shard size.
 pub fn sweep(
-    layers: &[&Layer],
+    net: &Network,
     space: &super::space::DesignSpace,
     noc_hops: u64,
     config: &SweepConfig,
 ) -> Result<SweepOutcome> {
-    ensure!(!layers.is_empty(), "sweep needs at least one layer");
+    ensure!(!net.layers.is_empty(), "sweep needs at least one layer");
     let t0 = std::time::Instant::now();
     let n_pairs = space.pairs();
     let shard_size = if config.shard_size > 0 { config.shard_size } else { (n_pairs / 64).max(1) };
@@ -501,7 +579,7 @@ pub fn sweep(
     if threads <= 1 {
         shard_outcomes = Vec::with_capacity(n_shards);
         for (_, range) in shards {
-            shard_outcomes.push(Some(sweep_shard(layers, space, noc_hops, range, keep_all_points)));
+            shard_outcomes.push(Some(sweep_shard(net, space, noc_hops, range, keep_all_points)));
         }
     } else {
         let slots: std::sync::Mutex<Vec<Option<ShardOutcome>>> =
@@ -513,7 +591,7 @@ pub fn sweep(
                 let slots = &slots;
                 scope.spawn(move || {
                     while let Some((index, range)) = queue.pop() {
-                        let shard = sweep_shard(layers, space, noc_hops, range, keep_all_points);
+                        let shard = sweep_shard(net, space, noc_hops, range, keep_all_points);
                         slots.lock().unwrap()[index] = Some(shard);
                     }
                 });
@@ -540,6 +618,7 @@ pub fn sweep(
 mod tests {
     use super::*;
     use crate::dse::space::{kc_p_ct, DesignSpace};
+    use crate::engine::analysis::analyze_layer;
     use crate::ir::styles;
     use crate::model::zoo::vgg16;
 
@@ -594,10 +673,10 @@ mod tests {
 
     #[test]
     fn sweep_produces_valid_and_invalid() {
-        let layer = vgg16::conv13();
+        let net = Network::single(vgg16::conv13());
         let space = DesignSpace::fig13("kc-p", 6);
         let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
-        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
         assert!(!out.points.is_empty());
         assert!(out.stats.valid > 0, "no valid designs");
         assert!(out.stats.valid <= out.stats.evaluated);
@@ -614,10 +693,10 @@ mod tests {
 
     #[test]
     fn sweep_frontier_matches_batch_pareto_front() {
-        let layer = vgg16::conv13();
+        let net = Network::single(vgg16::conv13());
         let space = DesignSpace::fig13("kc-p", 6);
         let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
-        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
         assert!(!out.frontier.is_empty(), "frontier must be populated");
         assert!(out.frontier.iter().all(|p| p.valid));
         let front = crate::dse::pareto::pareto_front(&out.points, |p| p.runtime, |p| p.energy_pj);
@@ -626,6 +705,66 @@ mod tests {
         for (a, b) in out.frontier.iter().zip(&batch) {
             assert_eq!((a.runtime, a.energy_pj), (b.runtime, b.energy_pj));
         }
+    }
+
+    #[test]
+    fn cached_case_table_bit_identical_to_fresh() {
+        // A warmed shared Analyzer must not change any table bit: same
+        // rows, activity sums, buffer requirements.
+        let net = vgg16::conv_only();
+        let layers: Vec<&Layer> = net.layers.iter().collect();
+        let mut analyzer = Analyzer::new();
+        for &pes in &[64u64, 256] {
+            for variant in [kc_p_ct(16), kc_p_ct(64)] {
+                let warm1 = build_case_table_cached(&mut analyzer, &layers, &variant, pes).unwrap();
+                let warm2 = build_case_table_cached(&mut analyzer, &layers, &variant, pes).unwrap();
+                let fresh = build_case_table(&layers, &variant, pes).unwrap();
+                assert_eq!(warm1, fresh, "{} pes={pes}: first cached build", variant.name);
+                assert_eq!(warm2, fresh, "{} pes={pes}: fully-warm build", variant.name);
+            }
+        }
+        assert!(analyzer.cache_hits() > 0, "the conv stack repeats shapes; hits expected");
+    }
+
+    #[test]
+    fn network_table_equals_per_layer_concatenation() {
+        // The network-level table is the per-layer aggregation, bit for
+        // bit: rows concatenate in layer order, activity/requirements
+        // accumulate in the same order.
+        let net = vgg16::conv_only();
+        let layers: Vec<&Layer> = net.layers.iter().collect();
+        let variant = kc_p_ct(32);
+        let whole = build_case_table(&layers, &variant, 256).unwrap();
+        let mut rows = Vec::new();
+        let mut activity = Activity::default();
+        let (mut l1_req, mut l2_req, mut units0) = (0u64, 0u64, 1u64);
+        for layer in &net.layers {
+            let single = build_case_table(&[layer], &variant, 256).unwrap();
+            rows.extend_from_slice(&single.rows);
+            activity.macs += single.activity.macs;
+            activity.l2_reads += single.activity.l2_reads;
+            activity.l2_writes += single.activity.l2_writes;
+            activity.l1_reads += single.activity.l1_reads;
+            activity.l1_writes += single.activity.l1_writes;
+            activity.noc_delivered += single.activity.noc_delivered;
+            l1_req = l1_req.max(single.l1_req);
+            l2_req = l2_req.max(single.l2_req);
+            units0 = units0.max(single.units0);
+        }
+        assert_eq!(whole.rows, rows);
+        assert_eq!(whole.activity, activity);
+        assert_eq!((whole.l1_req, whole.l2_req, whole.units0), (l1_req, l2_req, units0));
+    }
+
+    #[test]
+    fn network_sweep_surfaces_cache_hits() {
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        let out = sweep(&net, &space, 2, &SweepConfig::serial()).unwrap();
+        assert!(out.stats.cache_hits > 0, "VGG's repeated conv shapes must hit the layer cache");
+        assert!(out.stats.cache_misses > 0);
+        let s = out.stats.summary();
+        assert!(s.contains("cache="), "summary surfaces the hit/miss split: {s}");
     }
 
     // The pruned-vs-unmappable accounting scenario lives in

@@ -10,13 +10,20 @@
 //!
 //! ```text
 //!   (variant, PEs) pairs ──(contiguous shards)──> JobQueue
-//!       JobQueue ──> [worker] ─┐  per shard: build case table,
-//!       JobQueue ──> [worker] ─┼─ §5.2 min-cost pruning, eval the
-//!       JobQueue ──> [worker] ─┘  bandwidth axis, fold into a
+//!       JobQueue ──> [worker + Analyzer] ─┐  per shard: build case
+//!       JobQueue ──> [worker + Analyzer] ─┼─ tables (shape-memoized),
+//!       JobQueue ──> [worker + Analyzer] ─┘  §5.2 min-cost pruning,
+//!                                 eval the bandwidth axis, fold into a
 //!                                 streaming Pareto frontier + stats
 //!   shard results ──(merged in shard order)──> SweepOutcome
 //! ```
 //!
+//! * **Network workloads** — the unit of work is a whole
+//!   [`crate::model::network::Network`] (wrap single layers with
+//!   `Network::single`). Each shard owns one
+//!   [`crate::engine::analysis::Analyzer`], so a zoo network's repeated
+//!   layer shapes are analyzed once per (variant, PEs) pair; the
+//!   hit/miss split surfaces in [`engine::SweepStats::summary`].
 //! * **Sharding** — the (variant, PEs) outer product is split into
 //!   contiguous index ranges pulled from a bounded
 //!   [`crate::util::queue::JobQueue`] (the coordinator's proven
@@ -29,8 +36,10 @@
 //! * **Deterministic merge** — shards cover the serial iteration order
 //!   and merge in shard-index order, so the frontier, counts, and (with
 //!   `keep_all_points`) the full point list are bit-identical for any
-//!   thread count and shard size. `rust/tests/dse_parallel.rs` pins
-//!   this contract.
+//!   thread count and shard size — and identical to the per-layer
+//!   aggregation the shape cache replaces. `rust/tests/dse_parallel.rs`
+//!   pins this contract (cache hit/miss counters follow the shard
+//!   partition and are excluded).
 //! * **Skip accounting** — unmappable (variant, PEs) pairs and
 //!   budget-pruned pairs are counted separately (`unmappable` vs
 //!   `pruned`) and both surface in [`engine::SweepStats::summary`].
@@ -48,6 +57,8 @@
 //! ```text
 //! cargo run --release -- dse --family kc-p --layer-model vgg16 \
 //!     --resolution 14 --threads 0        # scatter + frontier + optima
+//! cargo run --release -- dse --family kc-p --layer-model resnet50 \
+//!     --network                          # whole-network (shape-deduped) sweep
 //! cargo bench --bench fig13_dse          # the full figure (both families)
 //! cargo bench --bench dse_rate           # DSE rate + thread scaling
 //! DSE_SMOKE=1 cargo bench --bench dse_rate   # CI smoke: tiny space,

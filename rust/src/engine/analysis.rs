@@ -3,16 +3,29 @@
 //! level becomes the computation delay of the next cluster level above"
 //! (§4.4) — accumulating runtime with double buffering, buffer access
 //! counts, buffer size requirements, NoC bandwidth needs, and energy.
+//!
+//! # The Analyzer pipeline
+//!
+//! All analysis is a pure function of `(ShapeKey, dataflow, HwConfig)`
+//! — layer *names* never reach a formula. [`Analyzer`] exploits that:
+//! it owns the recursion's scratch memo (reused across calls instead of
+//! reallocated) and a `(ShapeKey, dataflow name, hardware)`-keyed
+//! [`LayerStats`] cache, so whole-network analysis evaluates each
+//! distinct layer shape once and replays the rest (ResNet-50's repeated
+//! bottlenecks, VGG's conv stacks). [`analyze_network`] /
+//! [`adaptive_network`] and the DSE case-table builder all route
+//! through it; cached and uncached results are bit-identical (pinned by
+//! tests here and in `rust/tests/dse_parallel.rs`).
 
 use std::collections::HashMap;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::hw::config::{HwConfig, ReductionSupport};
 use crate::hw::energy::EnergyModel;
 use crate::ir::dataflow::{Dataflow, ResolvedDataflow, ResolvedLevel};
 use crate::ir::dims::DimMap;
-use crate::model::layer::Layer;
+use crate::model::layer::{Layer, ShapeKey};
 use crate::model::network::Network;
 use crate::model::tensor::{couplings, tensor_elements, TensorKind, ALL_TENSORS};
 
@@ -36,7 +49,7 @@ impl EnergyBreakdown {
 }
 
 /// Full analysis result for one (layer, dataflow, hardware) triple.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerStats {
     pub layer: String,
     pub dataflow: String,
@@ -113,7 +126,185 @@ struct SubOut {
     peak_bw_need: f64,
 }
 
-/// Analyze a layer under a dataflow and hardware config.
+/// Cache identity of a hardware config (f64 fields via `to_bits` so the
+/// tuple stays `Eq + Hash`).
+type HwKey = ([u64; 6], bool, u8, u64);
+
+fn hw_key(hw: &HwConfig) -> HwKey {
+    // Exhaustive destructuring (no `..` rest pattern): adding a field
+    // to HwConfig must fail to compile here, not silently alias cache
+    // keys and serve stale stats.
+    let &HwConfig {
+        num_pes,
+        l1_size,
+        l2_size,
+        noc_bandwidth,
+        noc_latency,
+        multicast,
+        reduction,
+        pe_throughput,
+        clock_ghz,
+    } = hw;
+    (
+        [num_pes, l1_size, l2_size, noc_bandwidth, noc_latency, pe_throughput],
+        multicast,
+        match reduction {
+            ReductionSupport::None => 0,
+            ReductionSupport::Tree => 1,
+            ReductionSupport::Forward => 2,
+        },
+        clock_ghz.to_bits(),
+    )
+}
+
+/// The memoization key: canonical layer shape x dataflow identity x
+/// hardware. The dataflow's *name* is its identity — every built-in
+/// style and DSE mapping variant encodes its parameters in the name
+/// (`KC-P(ct=16)`); hand-built dataflows sharing a name with different
+/// directives would alias and must be named apart.
+type AnalysisKey = (ShapeKey, String, HwKey);
+
+/// A cached analysis failure: the name of the layer the diagnosis was
+/// produced on (error chains embed layer names) plus the rendered
+/// chain, so replays for same-shape siblings can attribute it honestly.
+type CachedFailure = (String, String);
+
+/// A reusable analysis context: owns the recursive engine's scratch
+/// memo (allocated once, cleared per call) and a shape-keyed
+/// [`LayerStats`] cache, with hit/miss counters.
+///
+/// Failed analyses are cached too (as the rendered error chain), so a
+/// shape that cannot map under a dataflow is diagnosed once per
+/// network, not once per layer; replayed failures name the layer they
+/// were diagnosed on.
+#[derive(Debug, Default)]
+pub struct Analyzer {
+    stats: HashMap<AnalysisKey, Result<LayerStats, CachedFailure>>,
+    scratch: HashMap<CacheKey, SubOut>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer::default()
+    }
+
+    /// Analyze one (layer, dataflow, hardware) triple, memoized on the
+    /// layer's [`ShapeKey`]. Cache hits are bit-identical to a fresh
+    /// analysis; only the reported `layer` name is rewritten to the
+    /// caller's layer.
+    pub fn analyze(&mut self, layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
+        self.analyze_inner(layer, dataflow, hw, None)
+    }
+
+    /// As [`Analyzer::analyze`], but reuses a dataflow the caller
+    /// already resolved against this layer at `hw.num_pes` PEs, so a
+    /// cache miss skips the internal re-resolution. The caller must
+    /// guarantee `resolved` came from `dataflow.resolve(layer,
+    /// hw.num_pes)` — used by the DSE case-table builder, which needs
+    /// the resolution for its flattened rows anyway.
+    pub(crate) fn analyze_with_resolved(
+        &mut self,
+        layer: &Layer,
+        dataflow: &Dataflow,
+        hw: &HwConfig,
+        resolved: &ResolvedDataflow,
+    ) -> Result<LayerStats> {
+        self.analyze_inner(layer, dataflow, hw, Some(resolved))
+    }
+
+    fn analyze_inner(
+        &mut self,
+        layer: &Layer,
+        dataflow: &Dataflow,
+        hw: &HwConfig,
+        resolved: Option<&ResolvedDataflow>,
+    ) -> Result<LayerStats> {
+        let key = (layer.shape_key(), dataflow.name.clone(), hw_key(hw));
+        if let Some(cached) = self.stats.get(&key) {
+            self.hits += 1;
+            return match cached {
+                Ok(s) => {
+                    let mut s = s.clone();
+                    s.layer = layer.name.clone();
+                    Ok(s)
+                }
+                // Error chains embed the name of the layer they were
+                // produced on; when replaying for a different layer,
+                // say so instead of misattributing the message.
+                Err((diagnosed_on, msg)) if *diagnosed_on == layer.name => Err(anyhow!("{msg}")),
+                Err((diagnosed_on, msg)) => {
+                    Err(anyhow!("{msg} (diagnosed on same-shape layer '{diagnosed_on}')"))
+                }
+            };
+        }
+        self.misses += 1;
+        let out = match resolved {
+            Some(r) => self.compute_resolved(layer, r, hw),
+            None => self.compute(layer, dataflow, hw),
+        };
+        match &out {
+            Ok(s) => self.stats.insert(key, Ok(s.clone())),
+            Err(e) => self.stats.insert(key, Err((layer.name.clone(), format!("{e:#}")))),
+        };
+        out
+    }
+
+    fn compute(&mut self, layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
+        hw.validate()?;
+        layer.validate()?;
+        let resolved = dataflow.resolve(layer, hw.num_pes)?;
+        self.compute_resolved(layer, &resolved, hw)
+    }
+
+    fn compute_resolved(
+        &mut self,
+        layer: &Layer,
+        resolved: &ResolvedDataflow,
+        hw: &HwConfig,
+    ) -> Result<LayerStats> {
+        hw.validate()?;
+        layer.validate()?;
+        self.scratch.clear();
+        analyze_resolved_with(layer, resolved, hw, &mut self.scratch)
+    }
+
+    /// Layer-cache hits since construction (or [`Analyzer::reset`]).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Layer-cache misses (= full analyses actually run).
+    pub fn cache_misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Distinct (shape, dataflow, hardware) entries currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Drop cached per-layer results but keep the hit/miss counters and
+    /// the scratch allocation. DSE shards call this between (variant,
+    /// PEs) pairs: the cache key includes the dataflow and PE count, so
+    /// entries from a finished pair can never hit again — clearing
+    /// bounds memory to O(unique shapes) instead of O(pairs x shapes).
+    pub fn clear_cache(&mut self) {
+        self.stats.clear();
+    }
+
+    /// Drop all cached results and zero the counters.
+    pub fn reset(&mut self) {
+        self.stats.clear();
+        self.scratch.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Analyze a layer under a dataflow and hardware config (one-shot; use
+/// an [`Analyzer`] to memoize across repeated shapes).
 pub fn analyze_layer(layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
     hw.validate()?;
     layer.validate()?;
@@ -129,8 +320,19 @@ pub fn analyze_resolved(
     hw: &HwConfig,
 ) -> Result<LayerStats> {
     let mut cache: HashMap<CacheKey, SubOut> = HashMap::new();
+    analyze_resolved_with(layer, resolved, hw, &mut cache)
+}
+
+/// The core entry: analyze against a caller-provided (cleared) scratch
+/// memo, so a long-lived [`Analyzer`] can reuse one allocation.
+fn analyze_resolved_with(
+    layer: &Layer,
+    resolved: &ResolvedDataflow,
+    hw: &HwConfig,
+    cache: &mut HashMap<CacheKey, SubOut>,
+) -> Result<LayerStats> {
     let top_tile = resolved.levels[0].parent_tile;
-    let out = analyze_levels(&resolved.levels, &top_tile, [1.0, 1.0, 1.0], layer, hw, 0, 1, &mut cache)?;
+    let out = analyze_levels(&resolved.levels, &top_tile, [1.0, 1.0, 1.0], layer, hw, 0, 1, cache)?;
 
     ensure!(out.macs > 0.0, "no MACs analyzed");
     let mac_scale = layer.sparsity_macs_scale();
@@ -342,12 +544,24 @@ fn tile_key(t: &DimMap<u64>) -> [u64; 7] {
     k
 }
 
+/// A layer dropped from a network analysis, with its diagnostic — the
+/// `pruned` vs `unmappable` split of the DSE, mirrored at the network
+/// level so `skip_invalid` never discards silently.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkippedLayer {
+    pub layer: String,
+    pub reason: String,
+}
+
 /// Whole-network aggregate.
 #[derive(Debug, Clone)]
 pub struct NetworkStats {
     pub network: String,
     pub dataflow: String,
     pub per_layer: Vec<LayerStats>,
+    /// Layers dropped (with diagnostics) when `skip_invalid` was set,
+    /// or — for adaptive selection — when no candidate dataflow mapped.
+    pub skipped: Vec<SkippedLayer>,
     pub runtime: f64,
     pub energy: EnergyBreakdown,
     pub macs: f64,
@@ -355,20 +569,35 @@ pub struct NetworkStats {
 
 /// Analyze every layer of a network under one dataflow; layers the
 /// dataflow cannot resolve on (e.g. cluster size exceeding PEs) are
-/// returned as errors unless `skip_invalid`.
+/// returned as errors unless `skip_invalid`, in which case they are
+/// recorded in [`NetworkStats::skipped`] with their diagnostics.
 pub fn analyze_network(
     net: &Network,
     dataflow: &Dataflow,
     hw: &HwConfig,
     skip_invalid: bool,
 ) -> Result<NetworkStats> {
+    analyze_network_with(&mut Analyzer::new(), net, dataflow, hw, skip_invalid)
+}
+
+/// [`analyze_network`] against a caller-owned [`Analyzer`], so repeated
+/// shapes — within this network and across successive calls at the same
+/// hardware — are analyzed once. Results are bit-identical to the
+/// one-shot path.
+pub fn analyze_network_with(
+    analyzer: &mut Analyzer,
+    net: &Network,
+    dataflow: &Dataflow,
+    hw: &HwConfig,
+    skip_invalid: bool,
+) -> Result<NetworkStats> {
     let mut per_layer = Vec::new();
+    let mut skipped = Vec::new();
     for layer in &net.layers {
-        match analyze_layer(layer, dataflow, hw) {
+        match analyzer.analyze(layer, dataflow, hw) {
             Ok(s) => per_layer.push(s),
             Err(e) if skip_invalid => {
-                let _ = e;
-                continue;
+                skipped.push(SkippedLayer { layer: layer.name.clone(), reason: format!("{e:#}") });
             }
             Err(e) => return Err(e.context(format!("layer {}", layer.name))),
         }
@@ -386,6 +615,7 @@ pub fn analyze_network(
         network: net.name.clone(),
         dataflow: dataflow.name.clone(),
         per_layer,
+        skipped,
         runtime,
         energy,
         macs,
@@ -408,23 +638,47 @@ pub fn adaptive_network(
     hw: &HwConfig,
     objective: Objective,
 ) -> Result<NetworkStats> {
+    adaptive_network_with(&mut Analyzer::new(), net, candidates, hw, objective)
+}
+
+/// [`adaptive_network`] against a caller-owned [`Analyzer`]: each
+/// (unique shape, candidate) pair is analyzed once, so a network with
+/// `s` distinct shapes costs `s x candidates` analyses instead of
+/// `layers x candidates`. Layers no candidate maps are recorded in
+/// [`NetworkStats::skipped`] with the last candidate's diagnostic.
+pub fn adaptive_network_with(
+    analyzer: &mut Analyzer,
+    net: &Network,
+    candidates: &[Dataflow],
+    hw: &HwConfig,
+    objective: Objective,
+) -> Result<NetworkStats> {
     ensure!(!candidates.is_empty(), "adaptive: no candidate dataflows");
     let mut per_layer: Vec<LayerStats> = Vec::new();
+    let mut skipped: Vec<SkippedLayer> = Vec::new();
     for layer in &net.layers {
         let mut best: Option<LayerStats> = None;
+        let mut last_err: Option<String> = None;
         for df in candidates {
-            if let Ok(s) = analyze_layer(layer, df, hw) {
-                let better = match &best {
-                    None => true,
-                    Some(b) => score(&s, objective) < score(b, objective),
-                };
-                if better {
-                    best = Some(s);
+            match analyzer.analyze(layer, df, hw) {
+                Ok(s) => {
+                    let better = match &best {
+                        None => true,
+                        Some(b) => score(&s, objective) < score(b, objective),
+                    };
+                    if better {
+                        best = Some(s);
+                    }
                 }
+                Err(e) => last_err = Some(format!("{e:#}")),
             }
         }
-        if let Some(b) = best {
-            per_layer.push(b);
+        match best {
+            Some(b) => per_layer.push(b),
+            None => skipped.push(SkippedLayer {
+                layer: layer.name.clone(),
+                reason: last_err.unwrap_or_else(|| "no candidate dataflow mapped".into()),
+            }),
         }
     }
     ensure!(!per_layer.is_empty(), "adaptive: nothing analyzable");
@@ -436,7 +690,15 @@ pub fn adaptive_network(
         l2: a.l2 + s.energy.l2,
         noc: a.noc + s.energy.noc,
     });
-    Ok(NetworkStats { network: net.name.clone(), dataflow: "adaptive".into(), per_layer, runtime, energy, macs })
+    Ok(NetworkStats {
+        network: net.name.clone(),
+        dataflow: "adaptive".into(),
+        per_layer,
+        skipped,
+        runtime,
+        energy,
+        macs,
+    })
 }
 
 fn score(s: &LayerStats, o: Objective) -> f64 {
@@ -578,8 +840,121 @@ mod tests {
         let net = vgg16::conv_only();
         let s = analyze_network(&net, &styles::kc_p(), &hw(), false).unwrap();
         assert_eq!(s.per_layer.len(), net.layers.len());
+        assert!(s.skipped.is_empty());
         let sum: f64 = s.per_layer.iter().map(|l| l.runtime).sum();
         assert!((s.runtime - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cached_stats_bit_identical_to_uncached() {
+        let layer = vgg16::conv13();
+        let h = hw();
+        for df in styles::all_styles() {
+            let fresh = analyze_layer(&layer, &df, &h).unwrap();
+            let mut analyzer = Analyzer::new();
+            let miss = analyzer.analyze(&layer, &df, &h).unwrap();
+            let hit = analyzer.analyze(&layer, &df, &h).unwrap();
+            assert_eq!(miss, fresh, "{}: analyzer miss must equal the free path", df.name);
+            assert_eq!(hit, fresh, "{}: cache hit must be bit-identical", df.name);
+        }
+    }
+
+    #[test]
+    fn analyzer_memoizes_across_layer_names() {
+        let a = crate::model::layer::Layer::conv2d("first", 1, 128, 64, 58, 58, 3, 3, 1);
+        let b = crate::model::layer::Layer::conv2d("second", 1, 128, 64, 58, 58, 3, 3, 1);
+        let mut analyzer = Analyzer::new();
+        let sa = analyzer.analyze(&a, &styles::kc_p(), &hw()).unwrap();
+        let sb = analyzer.analyze(&b, &styles::kc_p(), &hw()).unwrap();
+        assert_eq!((analyzer.cache_misses(), analyzer.cache_hits()), (1, 1));
+        assert_eq!(analyzer.cache_len(), 1);
+        assert_eq!(sb.layer, "second", "hit must carry the caller's layer name");
+        let renamed = LayerStats { layer: sa.layer.clone(), ..sb.clone() };
+        assert_eq!(renamed, sa, "numbers must match exactly");
+    }
+
+    #[test]
+    fn analyzer_caches_failures_with_diagnostics() {
+        // kc-p needs a 64-wide C cluster: 8 PEs cannot host it.
+        let mut h = hw();
+        h.num_pes = 8;
+        let layer = vgg16::conv13();
+        let mut analyzer = Analyzer::new();
+        let e1 = analyzer.analyze(&layer, &styles::kc_p(), &h).unwrap_err().to_string();
+        let e2 = analyzer.analyze(&layer, &styles::kc_p(), &h).unwrap_err().to_string();
+        assert_eq!((analyzer.cache_misses(), analyzer.cache_hits()), (1, 1));
+        assert!(!e1.is_empty() && e2.contains("exceed"), "diagnostic survives the cache: {e2}");
+    }
+
+    #[test]
+    fn memoized_network_matches_per_layer_loop() {
+        // Whole-network analysis through the shared Analyzer must equal
+        // the naive per-layer loop bit for bit.
+        let net = crate::model::zoo::by_name("resnet50").unwrap();
+        let h = hw();
+        let df = styles::kc_p();
+        let stats = analyze_network(&net, &df, &h, true).unwrap();
+        let mut idx = 0;
+        for layer in &net.layers {
+            match analyze_layer(layer, &df, &h) {
+                Ok(want) => {
+                    assert_eq!(stats.per_layer[idx], want, "layer {}", layer.name);
+                    idx += 1;
+                }
+                Err(_) => assert!(stats.skipped.iter().any(|s| s.layer == layer.name)),
+            }
+        }
+        assert_eq!(idx, stats.per_layer.len());
+        assert_eq!(stats.per_layer.len() + stats.skipped.len(), net.layers.len());
+    }
+
+    #[test]
+    fn skipped_layers_are_recorded_not_silent() {
+        use crate::model::layer::Layer;
+        // "bad" fails validation (activation smaller than filter) and
+        // must land in `skipped` with a diagnostic, not vanish.
+        let net = Network::new(
+            "mixed",
+            vec![
+                Layer::conv2d("ok", 1, 64, 16, 30, 30, 3, 3, 1),
+                Layer::conv2d("bad", 1, 8, 4, 2, 2, 3, 3, 1),
+            ],
+        );
+        let s = analyze_network(&net, &styles::kc_p(), &hw(), true).unwrap();
+        assert_eq!(s.per_layer.len(), 1);
+        assert_eq!(s.skipped.len(), 1);
+        assert_eq!(s.skipped[0].layer, "bad");
+        assert!(!s.skipped[0].reason.is_empty());
+        // Without skip_invalid the same network is a hard error naming
+        // the layer.
+        let err = analyze_network(&net, &styles::kc_p(), &hw(), false).unwrap_err();
+        assert!(format!("{err:#}").contains("bad"));
+    }
+
+    #[test]
+    fn replayed_failure_diagnostics_name_their_source_layer() {
+        use crate::model::layer::Layer;
+        // Two shape-identical unmappable layers: the second's diagnosis
+        // is a cache replay and must say which layer it came from
+        // instead of silently misattributing "bad_a"'s message.
+        let net = Network::new(
+            "bad-twins",
+            vec![
+                Layer::conv2d("ok", 1, 64, 16, 30, 30, 3, 3, 1),
+                Layer::conv2d("bad_a", 1, 8, 4, 2, 2, 3, 3, 1),
+                Layer::conv2d("bad_b", 1, 8, 4, 2, 2, 3, 3, 1),
+            ],
+        );
+        let s = analyze_network(&net, &styles::kc_p(), &hw(), true).unwrap();
+        assert_eq!(s.skipped.len(), 2);
+        assert_eq!(s.skipped[0].layer, "bad_a");
+        assert!(!s.skipped[0].reason.contains("same-shape"), "{}", s.skipped[0].reason);
+        assert_eq!(s.skipped[1].layer, "bad_b");
+        assert!(
+            s.skipped[1].reason.contains("diagnosed on same-shape layer 'bad_a'"),
+            "replay must name its source: {}",
+            s.skipped[1].reason
+        );
     }
 
     #[test]

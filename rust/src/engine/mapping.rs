@@ -17,6 +17,13 @@
 //! rows per position and must advance by exactly `size − w + stride`
 //! input rows (gapless, non-overlapping outputs — validated at resolve
 //! time and re-checked here).
+//!
+//! Shape-determinism contract: everything built here reads only a
+//! layer's `ShapeKey` fields (dimensions, stride, windowing derived
+//! from the op) — never its name. `engine::analysis::Analyzer` relies
+//! on this to replay cached schedules/statistics across same-shaped
+//! layers; a change that makes schedules depend on non-shape state must
+//! extend `model::layer::ShapeKey` accordingly.
 
 use anyhow::{bail, ensure, Result};
 

@@ -45,8 +45,8 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use engine::analysis::{analyze_layer, analyze_network, LayerStats, NetworkStats};
+pub use engine::analysis::{analyze_layer, analyze_network, Analyzer, LayerStats, NetworkStats};
 pub use hw::config::HwConfig;
 pub use ir::dataflow::Dataflow;
-pub use model::layer::Layer;
+pub use model::layer::{Layer, ShapeKey};
 pub use model::network::Network;

@@ -2,21 +2,23 @@
 //!
 //! ```text
 //! maestro analyze  --model vgg16 --layer conv2_2 --dataflow kc-p [--pes 256 --bw 16]
-//! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime]
+//! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime --per-layer]
 //! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
 //! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
+//! maestro dse      --family kc-p --layer-model resnet50 --network   # whole-network sweep
 //! maestro table1
 //! maestro zoo
 //! ```
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, DesignPoint, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
-use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
+use maestro::engine::analysis::{adaptive_network_with, analyze_layer, analyze_network_with, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
+use maestro::model::network::Network;
 use maestro::ir::styles;
 use maestro::model::zoo;
 use maestro::report::experiments;
@@ -36,6 +38,8 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "family", takes_value: true, help: "DSE dataflow family: kc-p | yr-p | yx-p" },
         FlagSpec { name: "layer-model", takes_value: true, help: "model providing the DSE layer" },
         FlagSpec { name: "resolution", takes_value: true, help: "DSE sweep resolution per axis (default 12)" },
+        FlagSpec { name: "network", takes_value: false, help: "dse: sweep the whole model (shape-deduped)" },
+        FlagSpec { name: "per-layer", takes_value: false, help: "network: print the per-layer breakdown" },
         FlagSpec { name: "pjrt", takes_value: false, help: "use the AOT PJRT evaluator for DSE" },
         FlagSpec { name: "threads", takes_value: true, help: "sweep worker threads (default 0 = all cores)" },
         FlagSpec { name: "workers", takes_value: true, help: "coordinator workers for --pjrt (default 4); without --pjrt, caps sweep threads when --threads is absent" },
@@ -90,22 +94,43 @@ fn main() -> Result<()> {
                 _ => Objective::Runtime,
             };
             let dfname = args.opt("dataflow", "adaptive");
+            // One Analyzer for the whole command: each unique layer
+            // shape is analyzed once per (dataflow, hardware).
+            let mut analyzer = Analyzer::new();
             let stats = if dfname == "adaptive" {
-                adaptive_network(&net, &styles::all_styles(), &hw, objective)?
+                adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?
             } else {
                 let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
-                analyze_network(&net, &df, &hw, true)?
+                analyze_network_with(&mut analyzer, &net, &df, &hw, true)?
             };
-            let mut t = Table::new(&["network", "dataflow", "layers", "runtime(cyc)", "energy(uJ)", "GMACs"]);
+            let cols = ["network", "dataflow", "layers", "shapes", "runtime(cyc)", "energy(uJ)", "GMACs"];
+            let mut t = Table::new(&cols);
             t.row(&[
                 stats.network.clone(),
                 stats.dataflow.clone(),
                 stats.per_layer.len().to_string(),
+                net.unique_shapes().len().to_string(),
                 num(stats.runtime),
                 num(stats.energy.total() / 1e6),
                 format!("{:.2}", stats.macs / 1e9),
             ]);
             print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+            if args.has("per-layer") {
+                let pl = experiments::network_layers_table(&stats);
+                print!("{}", if args.has("csv") { pl.to_csv() } else { pl.render() });
+            }
+            if !stats.skipped.is_empty() {
+                println!("skipped {} layer(s):", stats.skipped.len());
+                for s in &stats.skipped {
+                    println!("  {}: {}", s.layer, s.reason);
+                }
+            }
+            println!(
+                "analyzer cache: {} hits / {} misses across {} layers",
+                analyzer.cache_hits(),
+                analyzer.cache_misses(),
+                net.layers.len()
+            );
         }
         "validate" => {
             let (layer, _) = pick_layer(&args)?;
@@ -124,9 +149,31 @@ fn main() -> Result<()> {
         }
         "dse" => {
             let family = args.opt("family", "kc-p");
-            let (layer, _) = pick_layer(&args)?;
             let resolution = args.opt_u64("resolution", 12)? as usize;
             let space = DesignSpace::fig13(&family, resolution);
+            // Workload: one layer by default, the whole (shape-
+            // deduplicated) network with --network. The combination
+            // --network + --layer is contradictory: reject it rather
+            // than silently discarding the layer.
+            let workload = if args.has("network") {
+                ensure!(
+                    args.opt("layer", "").is_empty(),
+                    "--network sweeps every layer of the model; drop --layer"
+                );
+                let model = args.opt("model", args.opt("layer-model", "vgg16").as_str());
+                zoo::by_name(&model)?
+            } else {
+                Network::single(pick_layer(&args)?.0)
+            };
+            let macs = workload.macs() as f64;
+            let shapes = workload.unique_shapes().len();
+            println!(
+                "workload: {} ({} layer(s), {} unique shape(s), {:.2} GMACs)",
+                workload.name,
+                workload.layers.len(),
+                shapes,
+                macs / 1e9
+            );
             if args.has("pjrt") {
                 // The PJRT backend goes through the coordinator (the
                 // evaluator thread owns the executable). Jobs: one per
@@ -140,7 +187,7 @@ fn main() -> Result<()> {
                         id += 1;
                         jobs.push(DseJob {
                             id,
-                            layers: vec![layer.clone()],
+                            network: workload.clone(),
                             variant: variant.clone(),
                             pes,
                             designs: space
@@ -164,7 +211,8 @@ fn main() -> Result<()> {
                 }
                 println!("{}", metrics.summary(wall));
                 println!("designs: {} total, {} valid", points.len(), points.iter().filter(|p| p.valid).count());
-                print!("{}", experiments::design_space_scatter(&points, macs, &format!("{family} design space ({})", layer.name)));
+                let title = format!("{family} design space ({})", workload.name);
+                print!("{}", experiments::design_space_scatter(&points, macs, &title));
                 print_optima(&points, macs);
             } else {
                 // Default path: the sharded scalar sweep engine.
@@ -172,10 +220,10 @@ fn main() -> Result<()> {
                 // parallelism when --threads is not given.
                 let threads = args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize;
                 let cfg = SweepConfig { threads, keep_all_points: true, ..SweepConfig::default() };
-                let outcome = sweep(&[&layer], &space, space.noc_latency, &cfg)?;
-                let macs = layer.macs() as f64;
+                let outcome = sweep(&workload, &space, space.noc_latency, &cfg)?;
                 println!("{}", outcome.stats.summary());
-                print!("{}", experiments::design_space_scatter(&outcome.points, macs, &format!("{family} design space ({})", layer.name)));
+                let title = format!("{family} design space ({})", workload.name);
+                print!("{}", experiments::design_space_scatter(&outcome.points, macs, &title));
                 println!("runtime-energy Pareto frontier: {} points", outcome.frontier.len());
                 let head = &outcome.frontier[..outcome.frontier.len().min(12)];
                 let t = experiments::frontier_table(head, macs);

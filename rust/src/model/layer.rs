@@ -86,6 +86,34 @@ impl OpClass {
     }
 }
 
+/// Canonical, name-independent identity of a layer's compute shape.
+///
+/// Two layers with equal `ShapeKey`s are indistinguishable to every
+/// analysis in this crate: the dataflow resolver, schedule builder,
+/// reuse/performance/cost engines and the DSE case tables read only the
+/// fields captured here (operator, the seven dimension extents, stride,
+/// and the structured-sparsity discount), never the layer's `name`.
+/// That makes the key the memoization unit for whole-network analysis —
+/// ResNet-50's repeated bottleneck blocks or VGG's conv stacks collapse
+/// to one evaluation per distinct key (see `engine::analysis::Analyzer`).
+///
+/// The sparsity discount is stored as `f64::to_bits` so the key stays
+/// `Eq + Hash`; it is derived state today (a function of `op`) but is
+/// included so future per-layer sparsity annotations cannot alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub op: Op,
+    pub n: u64,
+    pub k: u64,
+    pub c: u64,
+    pub y: u64,
+    pub x: u64,
+    pub r: u64,
+    pub s: u64,
+    pub stride: u64,
+    sparsity_bits: u64,
+}
+
 /// One DNN layer with concrete dimensions. `Y`/`X` are *input* activation
 /// extents (input-centric convention, §4.1); output extents are derived.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -164,6 +192,25 @@ impl Layer {
             // nothing here, so we use the common up=2 of UNet/DCGAN.
             Op::TransposedConv => 0.25,
             _ => 1.0,
+        }
+    }
+
+    /// The canonical shape identity of this layer (everything the
+    /// analysis engines read except the name). Layers sharing a key
+    /// produce bit-identical analysis results under any (dataflow,
+    /// hardware) pair.
+    pub fn shape_key(&self) -> ShapeKey {
+        ShapeKey {
+            op: self.op,
+            n: self.n,
+            k: self.k,
+            c: self.c,
+            y: self.y,
+            x: self.x,
+            r: self.r,
+            s: self.s,
+            stride: self.stride,
+            sparsity_bits: self.sparsity_macs_scale().to_bits(),
         }
     }
 
@@ -321,6 +368,37 @@ mod tests {
         let l = Layer::transposed_conv("up", 1, 64, 128, 28, 28, 2, 2, 2);
         assert_eq!(l.y, 56);
         assert!(l.effective_macs() < l.macs() as f64);
+    }
+
+    #[test]
+    fn shape_key_ignores_names() {
+        let a = Layer::conv2d("res2a_branch2b", 1, 64, 64, 58, 58, 3, 3, 1);
+        let b = Layer::conv2d("res2c_branch2b", 1, 64, 64, 58, 58, 3, 3, 1);
+        assert_ne!(a.name, b.name);
+        assert_eq!(a.shape_key(), b.shape_key());
+    }
+
+    #[test]
+    fn shape_key_separates_stride_and_op_class() {
+        let base = Layer::conv2d("a", 1, 64, 64, 58, 58, 3, 3, 1);
+        let strided = Layer::conv2d("a", 1, 64, 64, 58, 58, 3, 3, 2);
+        assert_ne!(base.shape_key(), strided.shape_key(), "stride must be part of the key");
+        // Same seven dims, different operator: depthwise K=1/C=64 vs a
+        // pointwise-free conv with identical extents.
+        let dw = Layer::depthwise("a", 1, 64, 58, 58, 3, 3, 1);
+        let cv = Layer::conv2d("a", 1, 1, 64, 58, 58, 3, 3, 1);
+        assert_eq!((dw.n, dw.k, dw.c, dw.y, dw.x, dw.r, dw.s), (cv.n, cv.k, cv.c, cv.y, cv.x, cv.r, cv.s));
+        assert_ne!(dw.shape_key(), cv.shape_key(), "op class must be part of the key");
+    }
+
+    #[test]
+    fn shape_key_separates_sparsity() {
+        // Transposed conv carries the structured-sparsity discount; a
+        // dense conv with the same geometry must not collide.
+        let dense = Layer::conv2d("d", 1, 64, 128, 56, 56, 2, 2, 1);
+        let sparse = Layer::transposed_conv("u", 1, 64, 128, 28, 28, 2, 2, 2);
+        assert_eq!(dense.macs(), sparse.macs());
+        assert_ne!(dense.shape_key(), sparse.shape_key());
     }
 
     #[test]

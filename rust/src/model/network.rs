@@ -13,7 +13,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::model::layer::{Layer, OpClass};
+use crate::model::layer::{Layer, OpClass, ShapeKey};
 
 /// An ordered list of layers.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -22,14 +22,62 @@ pub struct Network {
     pub layers: Vec<Layer>,
 }
 
+/// One distinct layer shape of a network: a representative layer (the
+/// first occurrence), the member layer names, and the multiplicity.
+/// Produced by [`Network::unique_shapes`] — the accounting/display view
+/// of the dedup the `engine::analysis::Analyzer` performs implicitly
+/// (every layer is replayed through its shape-keyed cache, so each
+/// group costs one analysis; per-layer results are kept, not scaled).
+#[derive(Debug, Clone)]
+pub struct ShapeGroup<'a> {
+    pub key: ShapeKey,
+    /// First layer in network order with this shape.
+    pub layer: &'a Layer,
+    /// Names of every member layer, in network order.
+    pub members: Vec<&'a str>,
+}
+
+impl ShapeGroup<'_> {
+    /// Multiplicity of the shape within the network.
+    pub fn count(&self) -> u64 {
+        self.members.len() as u64
+    }
+}
+
 impl Network {
     pub fn new(name: &str, layers: Vec<Layer>) -> Network {
         Network { name: name.into(), layers }
     }
 
+    /// A single-layer network (the DSE's historical unit of work, now a
+    /// special case of the network-level pipeline).
+    pub fn single(layer: Layer) -> Network {
+        Network { name: layer.name.clone(), layers: vec![layer] }
+    }
+
     /// Total dense MACs.
     pub fn macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Group layers by canonical [`ShapeKey`], in first-occurrence
+    /// order. Repeated shapes (ResNet bottlenecks, VGG conv stacks) are
+    /// what make memoized whole-network analysis cheap: the Analyzer
+    /// computes each group once and replays cache hits for the rest.
+    pub fn unique_shapes(&self) -> Vec<ShapeGroup<'_>> {
+        let mut groups: Vec<ShapeGroup<'_>> = Vec::new();
+        let mut index: std::collections::HashMap<ShapeKey, usize> = std::collections::HashMap::new();
+        for layer in &self.layers {
+            let key = layer.shape_key();
+            match index.get(&key).copied() {
+                Some(i) => groups[i].members.push(&layer.name),
+                None => {
+                    index.insert(key, groups.len());
+                    groups.push(ShapeGroup { key, layer, members: vec![&layer.name] });
+                }
+            }
+        }
+        groups
     }
 
     /// Layers of a given operator class.
@@ -188,5 +236,49 @@ fc1: fc 1 1000 4096
     fn macs_sum() {
         let n = Network::parse(SAMPLE).unwrap();
         assert_eq!(n.macs(), n.layers.iter().map(|l| l.macs()).sum::<u64>());
+    }
+
+    #[test]
+    fn unique_shapes_group_and_preserve_order() {
+        // Four layers, two of them (conv2d 64ch) shape-identical despite
+        // distinct names.
+        let text = "\
+network dup
+a: conv2d 1 64 3 224 224 3 3 1
+b: conv2d 1 128 64 58 58 3 3 1
+c: conv2d 1 128 64 58 58 3 3 1
+d: fc 1 1000 4096
+";
+        let n = Network::parse(text).unwrap();
+        let groups = n.unique_shapes();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].members, vec!["a"]);
+        assert_eq!(groups[1].members, vec!["b", "c"]);
+        assert_eq!(groups[1].count(), 2);
+        assert_eq!(groups[1].layer.name, "b", "representative is the first occurrence");
+        assert_eq!(groups[2].members, vec!["d"]);
+        let total: u64 = groups.iter().map(|g| g.count()).sum();
+        assert_eq!(total, n.layers.len() as u64, "every layer lands in exactly one group");
+    }
+
+    #[test]
+    fn zoo_networks_have_repeated_shapes() {
+        // The premise of the memoized pipeline: real networks repeat
+        // shapes heavily (ResNet-50's bottleneck blocks).
+        let n = crate::model::zoo::by_name("resnet50").unwrap();
+        let unique = n.unique_shapes().len();
+        assert!(
+            unique * 2 <= n.layers.len(),
+            "resnet50: expected >=2x shape reuse, got {unique} unique of {} layers",
+            n.layers.len()
+        );
+    }
+
+    #[test]
+    fn single_wraps_one_layer() {
+        let l = Layer::conv2d("only", 1, 8, 4, 10, 10, 3, 3, 1);
+        let n = Network::single(l.clone());
+        assert_eq!(n.name, "only");
+        assert_eq!(n.layers, vec![l]);
     }
 }

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::dse::engine::DesignPoint;
 use crate::dse::pareto::{best, Optimize};
-use crate::engine::analysis::{analyze_layer, LayerStats};
+use crate::engine::analysis::{analyze_layer, LayerStats, NetworkStats};
 use crate::hw::config::HwConfig;
 
 use crate::ir::styles;
@@ -41,6 +41,27 @@ pub fn stats_table(stats: &[LayerStats]) -> Table {
             s.l1_req.to_string(),
             s.l2_req.to_string(),
         ]);
+    }
+    t
+}
+
+/// Per-layer breakdown of a whole-network analysis (the CLI `network
+/// --per-layer` view): winning dataflow, runtime, energy and
+/// utilization per layer, plus one row per skipped layer with its
+/// diagnostic.
+pub fn network_layers_table(stats: &NetworkStats) -> Table {
+    let mut t = Table::new(&["layer", "dataflow", "runtime(cyc)", "energy(uJ)", "util"]);
+    for s in &stats.per_layer {
+        t.row(&[
+            s.layer.clone(),
+            s.dataflow.clone(),
+            num(s.runtime),
+            num(s.energy.total() / 1e6),
+            format!("{:.3}", s.util),
+        ]);
+    }
+    for s in &stats.skipped {
+        t.row(&[s.layer.clone(), "(skipped)".into(), "-".into(), "-".into(), "-".into()]);
     }
     t
 }
@@ -136,12 +157,34 @@ mod tests {
     fn frontier_table_renders_points() {
         use crate::dse::engine::{sweep, SweepConfig};
         use crate::dse::space::DesignSpace;
+        use crate::model::network::Network;
         let layer = vgg16::conv13();
-        let out = sweep(&[&layer], &DesignSpace::ci_smoke("kc-p"), 2, &SweepConfig::serial()).unwrap();
+        let net = Network::single(layer.clone());
+        let out = sweep(&net, &DesignSpace::ci_smoke("kc-p"), 2, &SweepConfig::serial()).unwrap();
         assert!(!out.frontier.is_empty());
         let rendered = frontier_table(&out.frontier, layer.macs() as f64).render();
         assert!(rendered.contains("KC-P"));
         assert!(rendered.contains("thrpt"));
+    }
+
+    #[test]
+    fn network_layers_table_lists_skips() {
+        use crate::engine::analysis::analyze_network;
+        use crate::ir::styles;
+        use crate::model::layer::Layer;
+        use crate::model::network::Network;
+        let net = Network::new(
+            "mixed",
+            vec![
+                Layer::conv2d("ok", 1, 64, 16, 30, 30, 3, 3, 1),
+                Layer::conv2d("bad", 1, 8, 4, 2, 2, 3, 3, 1),
+            ],
+        );
+        let hw = HwConfig::fig10_default();
+        let stats = analyze_network(&net, &styles::kc_p(), &hw, true).unwrap();
+        let rendered = network_layers_table(&stats).render();
+        assert!(rendered.contains("ok"));
+        assert!(rendered.contains("bad") && rendered.contains("(skipped)"), "{rendered}");
     }
 
     #[test]

@@ -1,35 +1,40 @@
 //! The sharded sweep's determinism and accounting contract: the merged
 //! frontier, point list, and statistics must be bit-identical for any
-//! thread count / shard size, and the counters must match a plain
-//! serial reimplementation of the §5.2 pruned sweep.
+//! thread count / shard size — for single-layer *and* whole-network
+//! workloads — and the counters must match a plain serial
+//! reimplementation of the §5.2 pruned sweep.
+//!
+//! The Analyzer cache hit/miss counters are the one exception: they
+//! follow the shard partition (each shard owns its own cache, so a
+//! shape straddling two shards is a miss in both), carry no result
+//! data, and are zeroed by [`comparable`] before comparison.
 
 use maestro::dse::engine::{
-    build_case_table, eval_energy, eval_runtime, sweep, SweepConfig, SweepStats,
+    build_case_table, build_case_table_cached, eval_energy, eval_runtime, sweep, SweepConfig, SweepStats,
 };
 use maestro::dse::space::{kc_p_ct, DesignSpace};
+use maestro::engine::analysis::Analyzer;
 use maestro::hw::area;
 use maestro::model::layer::Layer;
+use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 
-fn without_wall_clock(stats: &SweepStats) -> SweepStats {
-    SweepStats { seconds: 0.0, ..stats.clone() }
+/// Strip the fields excluded from the determinism contract: wall clock
+/// and the partition-dependent cache counters.
+fn comparable(stats: &SweepStats) -> SweepStats {
+    SweepStats { seconds: 0.0, cache_hits: 0, cache_misses: 0, ..stats.clone() }
 }
 
 #[test]
 fn sweep_is_deterministic_across_thread_counts() {
-    let layer = vgg16::conv13();
+    let net = Network::single(vgg16::conv13());
     let space = DesignSpace::fig13("kc-p", 6);
-    let reference = sweep(
-        &[&layer],
-        &space,
-        2,
-        &SweepConfig { keep_all_points: true, ..SweepConfig::serial() },
-    )
-    .unwrap();
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
+    let reference = sweep(&net, &space, 2, &cfg).unwrap();
     assert!(!reference.frontier.is_empty());
     for (threads, shard_size) in [(2usize, 0usize), (4, 1), (4, 3), (8, 2), (0, 0)] {
         let cfg = SweepConfig { threads, shard_size, keep_all_points: true };
-        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
         assert_eq!(
             out.frontier, reference.frontier,
             "frontier must be bit-identical (threads={threads}, shard_size={shard_size})"
@@ -39,21 +44,65 @@ fn sweep_is_deterministic_across_thread_counts() {
             "full point list must replay serial order (threads={threads}, shard_size={shard_size})"
         );
         assert_eq!(
-            without_wall_clock(&out.stats),
-            without_wall_clock(&reference.stats),
+            comparable(&out.stats),
+            comparable(&reference.stats),
             "counts must match (threads={threads}, shard_size={shard_size})"
         );
     }
 }
 
+#[test]
+fn network_sweep_is_deterministic_across_thread_counts() {
+    // The network-level path: a repeated-shape workload (the VGG16 conv
+    // stack) where the shard-local Analyzer caches actually engage.
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::serial() };
+    let reference = sweep(&net, &space, 2, &cfg).unwrap();
+    assert!(reference.stats.cache_hits > 0, "repeated shapes must hit the shard caches");
+    for (threads, shard_size) in [(2usize, 0usize), (4, 1), (0, 2)] {
+        let cfg = SweepConfig { threads, shard_size, keep_all_points: true };
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(out.frontier, reference.frontier, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(out.points, reference.points, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(comparable(&out.stats), comparable(&reference.stats), "threads={threads}");
+        assert_eq!(
+            out.stats.cache_hits + out.stats.cache_misses,
+            reference.stats.cache_hits + reference.stats.cache_misses,
+            "total layer analyses requested is partition-independent"
+        );
+    }
+}
+
+#[test]
+fn network_sweep_is_layer_name_independent() {
+    // Shape memoization must key on shapes, never names: renaming every
+    // layer cannot move a single bit of the outcome.
+    let net = vgg16::conv_only();
+    let mut renamed = net.clone();
+    for (i, layer) in renamed.layers.iter_mut().enumerate() {
+        layer.name = format!("anon_{i}");
+    }
+    let space = DesignSpace::ci_smoke("kc-p");
+    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
+    let a = sweep(&net, &space, 2, &cfg).unwrap();
+    let b = sweep(&renamed, &space, 2, &cfg).unwrap();
+    assert_eq!(a.frontier, b.frontier);
+    assert_eq!(a.points, b.points);
+    assert_eq!(comparable(&a.stats), comparable(&b.stats));
+}
+
 /// A from-scratch serial reimplementation of the pruned sweep's
-/// accounting, independent of the sharded engine's code path.
-fn serial_reference_counts(layers: &[&Layer], space: &DesignSpace, noc_hops: u64) -> SweepStats {
+/// accounting, independent of the sharded engine's code path. Tables
+/// are built through the uncached one-shot path, so agreement here also
+/// pins "memoized network sweep == per-layer aggregation".
+fn serial_reference_counts(net: &Network, space: &DesignSpace, noc_hops: u64) -> SweepStats {
+    let layers: Vec<&Layer> = net.layers.iter().collect();
     let mut stats = SweepStats { total_designs: space.size(), ..SweepStats::default() };
     let min_bw = *space.bandwidths.iter().min().unwrap();
     for variant in &space.variants {
         for &pes in &space.pes {
-            let Ok(table) = build_case_table(layers, variant, pes) else {
+            let Ok(table) = build_case_table(&layers, variant, pes) else {
                 stats.unmappable += space.bandwidths.len() as u64;
                 continue;
             };
@@ -79,20 +128,51 @@ fn serial_reference_counts(layers: &[&Layer], space: &DesignSpace, noc_hops: u64
 
 #[test]
 fn sweep_counts_match_serial_reference() {
-    let layer = vgg16::conv2();
+    let net = Network::single(vgg16::conv2());
     let space = DesignSpace::ci_smoke("kc-p");
-    let want = serial_reference_counts(&[&layer], &space, 2);
+    let want = serial_reference_counts(&net, &space, 2);
     for threads in [1usize, 4] {
         let cfg = SweepConfig { threads, ..SweepConfig::default() };
-        let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
-        assert_eq!(without_wall_clock(&out.stats), without_wall_clock(&want), "threads={threads}");
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(comparable(&out.stats), comparable(&want), "threads={threads}");
     }
     assert_eq!(want.evaluated + want.pruned + want.unmappable, want.total_designs);
 }
 
 #[test]
+fn network_sweep_counts_match_serial_reference() {
+    // Same contract on a whole-network workload: the sharded memoized
+    // path must agree with uncached per-layer table construction.
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let want = serial_reference_counts(&net, &space, 2);
+    for threads in [1usize, 4] {
+        let cfg = SweepConfig { threads, ..SweepConfig::default() };
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(comparable(&out.stats), comparable(&want), "threads={threads}");
+    }
+}
+
+#[test]
+fn warmed_analyzer_tables_replay_cold_tables() {
+    // One shard-style Analyzer reused across (variant, PEs) pairs must
+    // reproduce every cold-built table bit for bit.
+    let net = vgg16::conv_only();
+    let layers: Vec<&Layer> = net.layers.iter().collect();
+    let mut analyzer = Analyzer::new();
+    for variant in [kc_p_ct(8), kc_p_ct(32)] {
+        for pes in [64u64, 512] {
+            let warm = build_case_table_cached(&mut analyzer, &layers, &variant, pes).unwrap();
+            let cold = build_case_table(&layers, &variant, pes).unwrap();
+            assert_eq!(warm, cold, "{} pes={pes}", variant.name);
+        }
+    }
+    assert!(analyzer.cache_hits() > 0);
+}
+
+#[test]
 fn unmappable_and_pruned_pairs_are_distinguished() {
-    let layer = vgg16::conv13();
+    let net = Network::single(vgg16::conv13());
     // kc_p_ct(64) needs a 64-PE cluster: pes=8 is unmappable, while
     // pes=4096 maps but exceeds the power budget at any bandwidth.
     let space = DesignSpace {
@@ -103,7 +183,7 @@ fn unmappable_and_pruned_pairs_are_distinguished() {
         area_budget_mm2: 16.0,
         power_budget_mw: 450.0,
     };
-    let out = sweep(&[&layer], &space, 2, &SweepConfig::default()).unwrap();
+    let out = sweep(&net, &space, 2, &SweepConfig::default()).unwrap();
     assert_eq!(out.stats.unmappable, 2);
     assert_eq!(out.stats.pruned, 2);
     assert_eq!(out.stats.evaluated, 0);
@@ -114,16 +194,11 @@ fn unmappable_and_pruned_pairs_are_distinguished() {
 
 #[test]
 fn streaming_frontier_without_points_matches_keep_all() {
-    let layer = vgg16::conv2();
+    let net = Network::single(vgg16::conv2());
     let space = DesignSpace::ci_smoke("kc-p");
-    let lean = sweep(&[&layer], &space, 2, &SweepConfig::default()).unwrap();
-    let full = sweep(
-        &[&layer],
-        &space,
-        2,
-        &SweepConfig { keep_all_points: true, ..SweepConfig::default() },
-    )
-    .unwrap();
+    let lean = sweep(&net, &space, 2, &SweepConfig::default()).unwrap();
+    let keep = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
+    let full = sweep(&net, &space, 2, &keep).unwrap();
     assert!(lean.points.is_empty(), "keep_all_points=false must not materialize the space");
     assert_eq!(full.points.len() as u64, full.stats.evaluated);
     assert_eq!(lean.frontier, full.frontier);

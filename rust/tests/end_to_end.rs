@@ -11,6 +11,7 @@ use maestro::dse::space::DesignSpace;
 use maestro::engine::analysis::{adaptive_network, analyze_layer, analyze_network, Objective};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
+use maestro::model::network::Network;
 use maestro::model::tensor::TensorKind;
 use maestro::model::zoo::{self, mobilenet_v2, resnet50, vgg16};
 use maestro::runtime::DesignIn;
@@ -85,7 +86,7 @@ fn dse_finds_valid_pareto_points_within_budget() {
     let layer = vgg16::conv13();
     let space = DesignSpace::fig13("kc-p", 8);
     let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
-    let out = sweep(&[&layer], &space, 2, &cfg).unwrap();
+    let out = sweep(&Network::single(layer.clone()), &space, 2, &cfg).unwrap();
     let (points, stats) = (out.points, out.stats);
     assert!(stats.valid > 10, "expected a populated valid region, got {}", stats.valid);
     let macs = layer.macs() as f64;
@@ -109,7 +110,7 @@ fn coordinator_pipeline_scalar_backend_full_network() {
         .enumerate()
         .map(|(i, &pes)| DseJob {
             id: i as u64,
-            layers: net.layers.clone(),
+            network: net.clone(),
             variant: styles::kc_p(),
             pes,
             designs: designs.clone(),
@@ -145,8 +146,10 @@ f1: fc 1 100 512
     let hw = HwConfig::fig10_default();
     let s = analyze_network(&net, &styles::kc_p(), &hw, true).unwrap();
     assert!(!s.per_layer.is_empty());
+    assert_eq!(s.per_layer.len() + s.skipped.len(), net.layers.len(), "no silent layer drops");
     let a = adaptive_network(&net, &styles::all_styles(), &hw, Objective::Energy).unwrap();
     assert_eq!(a.per_layer.len(), net.layers.len());
+    assert!(a.skipped.is_empty());
 }
 
 mod cli {
@@ -208,6 +211,37 @@ mod cli {
         let (ok, text) = run(&["network", "--model", "mobilenetv2", "--dataflow", "adaptive"]);
         assert!(ok, "{text}");
         assert!(text.contains("adaptive"), "{text}");
+        assert!(text.contains("analyzer cache:"), "cache stats surface: {text}");
+    }
+
+    #[test]
+    fn cli_network_per_layer_breakdown() {
+        let (ok, text) = run(&["network", "--model", "vgg16", "--dataflow", "kc-p", "--per-layer"]);
+        assert!(ok, "{text}");
+        assert!(text.contains("conv2_2"), "per-layer rows present: {text}");
+        assert!(text.contains("shapes"), "unique-shape column present: {text}");
+    }
+
+    #[test]
+    fn cli_dse_network_rejects_layer_flag() {
+        // Contradictory flags must fail loudly, not silently drop one.
+        let (ok, text) = run(&[
+            "dse", "--layer-model", "vgg16", "--layer", "conv2_2", "--network", "--resolution", "5",
+        ]);
+        assert!(!ok);
+        assert!(text.contains("--layer"), "{text}");
+    }
+
+    #[test]
+    fn cli_dse_network_mode() {
+        // Whole-network sweep on a tiny space: must report the workload
+        // and the cache split.
+        let (ok, text) = run(&[
+            "dse", "--family", "kc-p", "--layer-model", "vgg16-conv", "--network", "--resolution", "5",
+        ]);
+        assert!(ok, "{text}");
+        assert!(text.contains("unique shape"), "{text}");
+        assert!(text.contains("cache="), "{text}");
     }
 }
 

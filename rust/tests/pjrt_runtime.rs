@@ -106,7 +106,7 @@ fn coordinator_end_to_end_with_pjrt_backend() {
         .enumerate()
         .map(|(i, &pes)| DseJob {
             id: i as u64,
-            layers: vec![layer.clone()],
+            network: maestro::model::network::Network::single(layer.clone()),
             variant: kc_p_ct(16),
             pes,
             designs: designs(32),

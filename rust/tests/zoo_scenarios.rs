@@ -1,0 +1,89 @@
+//! Zoo-wide scenario audit: every zoo network under every Table 3
+//! dataflow style, at the reference Fig 10 hardware, must either
+//! analyze cleanly or fail with a diagnostic — never silently drop
+//! layers — and analyzed MAC totals must conserve the layers' effective
+//! (sparsity-discounted) MAC counts, which for dense networks equal
+//! `Network::macs()`.
+
+use maestro::engine::analysis::{analyze_network_with, Analyzer};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::zoo;
+
+#[test]
+fn every_zoo_network_analyzes_or_diagnoses_under_every_style() {
+    let hw = HwConfig::fig10_default();
+    // One Analyzer across the whole matrix: the zoo shares shapes
+    // across styles' hardware-identical runs.
+    let mut analyzer = Analyzer::new();
+    for name in zoo::ALL {
+        let net = zoo::by_name(name).unwrap();
+        let n_shapes = net.unique_shapes().len();
+        assert!(n_shapes <= net.layers.len());
+        for df in styles::all_styles() {
+            match analyze_network_with(&mut analyzer, &net, &df, &hw, true) {
+                Ok(stats) => {
+                    // No silent drops: every layer is analyzed or named.
+                    assert_eq!(
+                        stats.per_layer.len() + stats.skipped.len(),
+                        net.layers.len(),
+                        "{name}/{}: accounting",
+                        df.name
+                    );
+                    for s in &stats.skipped {
+                        assert!(!s.reason.is_empty(), "{name}/{}: skip without diagnostic", df.name);
+                    }
+                    // MAC conservation over the analyzed layers.
+                    let analyzed: Vec<&str> = stats.per_layer.iter().map(|s| s.layer.as_str()).collect();
+                    let want: f64 = net
+                        .layers
+                        .iter()
+                        .filter(|l| analyzed.contains(&l.name.as_str()))
+                        .map(|l| l.effective_macs())
+                        .sum();
+                    assert!(
+                        (stats.macs - want).abs() <= 1e-6 * want.max(1.0),
+                        "{name}/{}: analyzed MACs {} != effective total {want}",
+                        df.name,
+                        stats.macs
+                    );
+                    // A fully dense, fully analyzable network conserves
+                    // the closed-form dense total exactly.
+                    let dense = net.layers.iter().all(|l| l.sparsity_macs_scale() == 1.0);
+                    if dense && stats.skipped.is_empty() {
+                        let total = net.macs() as f64;
+                        assert!(
+                            (stats.macs - total).abs() <= 1e-6 * total,
+                            "{name}/{}: {} != Network::macs() {total}",
+                            df.name,
+                            stats.macs
+                        );
+                    }
+                    assert!(stats.runtime > 0.0 && stats.energy.total() > 0.0);
+                }
+                Err(e) => {
+                    // A whole-network failure is acceptable only with a
+                    // usable diagnostic.
+                    let msg = format!("{e:#}");
+                    assert!(!msg.is_empty(), "{name}/{}: empty diagnostic", df.name);
+                }
+            }
+        }
+    }
+    assert!(analyzer.cache_hits() > 0, "the zoo matrix must exercise the shape cache");
+}
+
+#[test]
+fn duplicate_names_do_not_confuse_mac_accounting() {
+    // The audit above matches analyzed layers by name; shape dedup must
+    // keep per-layer stats one-per-layer even when names repeat.
+    use maestro::model::layer::Layer;
+    use maestro::model::network::Network;
+    let l = Layer::conv2d("twin", 1, 32, 16, 30, 30, 3, 3, 1);
+    let net = Network::new("twins", vec![l.clone(), l]);
+    let hw = HwConfig::fig10_default();
+    let stats = analyze_network_with(&mut Analyzer::new(), &net, &styles::kc_p(), &hw, true).unwrap();
+    assert_eq!(stats.per_layer.len(), 2);
+    let want: f64 = net.layers.iter().map(|x| x.effective_macs()).sum();
+    assert!((stats.macs - want).abs() <= 1e-6 * want);
+}
