@@ -6,8 +6,11 @@
 //! cargo run --release --example adaptive_dataflow
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use maestro::cache::SharedStore;
 use maestro::engine::analysis::{adaptive_network_with, analyze_network_with, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
@@ -20,10 +23,13 @@ fn main() -> Result<()> {
     let candidates = styles::all_styles();
     println!("{}: {} layers, {} unique shapes", net.name, net.layers.len(), net.unique_shapes().len());
 
-    // One Analyzer for every run below: the static baselines already
-    // warm the cache the adaptive pass then replays — each (shape,
-    // dataflow) pair is analyzed exactly once across the whole example.
-    let mut analyzer = Analyzer::new();
+    // One SharedStore-backed Analyzer for every run below: the static
+    // baselines already warm the store the adaptive pass then replays —
+    // each (shape, dataflow structure) pair is analyzed exactly once
+    // across the whole example. (The same store could be handed to a
+    // DSE sweep, or flushed to disk — see the e2e_dse example.)
+    let store = Arc::new(SharedStore::new());
+    let mut analyzer = Analyzer::with_store(Arc::clone(&store));
 
     // Static baselines.
     let mut t = Table::new(&["dataflow", "runtime (Mcyc)", "energy (uJ)", "layers mapped", "skipped"]);
@@ -50,10 +56,10 @@ fn main() -> Result<()> {
     ]);
     print!("{}", t.render());
     println!(
-        "analyzer cache: {} hits / {} misses ({} entries) across {} static + 1 adaptive runs",
+        "shared store: {} hits / {} misses ({} entries) across {} static + 1 adaptive runs",
         analyzer.cache_hits(),
         analyzer.cache_misses(),
-        analyzer.cache_len(),
+        store.len(),
         candidates.len()
     );
     println!(

@@ -7,8 +7,11 @@
 //! cargo run --release --example dse_explore
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use maestro::cache::SharedStore;
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
@@ -25,11 +28,20 @@ fn main() -> Result<()> {
         space.size()
     );
     // keep_all_points feeds the scatter; drop it for paper-scale spaces
-    // and work from the streaming frontier alone.
-    let cfg = SweepConfig { keep_all_points: true, ..SweepConfig::default() };
+    // and work from the streaming frontier alone. The shared store
+    // pools every shard's analyses (and could be flushed to disk for
+    // warm restarts — e2e_dse demonstrates that leg).
+    let store = Arc::new(SharedStore::new());
+    let cfg = SweepConfig { keep_all_points: true, cache: Some(Arc::clone(&store)), ..SweepConfig::default() };
     let outcome = sweep(&net, &space, 2, &cfg)?;
     let macs = layer.macs() as f64;
     println!("{}", outcome.stats.summary());
+    println!(
+        "shared store after sweep: {} cached analyses, {} hits / {} misses pooled across shards",
+        store.len(),
+        store.hits(),
+        store.misses()
+    );
 
     print!("{}", design_space_scatter(&outcome.points, macs, "KC-P on VGG16-CONV2"));
 

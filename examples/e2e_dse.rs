@@ -16,8 +16,11 @@
 //!
 //! Output is recorded in EXPERIMENTS.md (experiment X1).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use maestro::cache::SharedStore;
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, pareto_front, Optimize};
@@ -45,11 +48,14 @@ fn main() -> Result<()> {
 
     // Stage 0: the sharded scalar sweep (streaming frontier, no PJRT) —
     // the memory-bounded baseline the coordinator path is compared to.
-    // The workload is the whole network: each shard's Analyzer dedupes
-    // the conv stack's repeated shapes (see cache= in the summaries).
+    // The workload is the whole network: all shards pool one shared
+    // store, so the conv stack's repeated shapes dedupe across the
+    // worker pool (see cache=h/d/m in the summaries).
     let space = DesignSpace::fig13("kc-p", 10);
+    let store = Arc::new(SharedStore::new());
     let serial = sweep(&net, &space, 2, &SweepConfig::serial())?;
-    let sharded = sweep(&net, &space, 2, &SweepConfig::default())?;
+    let cfg = SweepConfig { cache: Some(Arc::clone(&store)), ..SweepConfig::default() };
+    let sharded = sweep(&net, &space, 2, &cfg)?;
     println!("sharded sweep, 1 thread:   {}", serial.stats.summary());
     println!("sharded sweep, all cores:  {}", sharded.stats.summary());
     println!(
@@ -59,6 +65,37 @@ fn main() -> Result<()> {
         sharded.frontier.len(),
         serial.frontier == sharded.frontier,
     );
+
+    // Stage 0b: warm-start persistence. Flush the cold sweep's store,
+    // reload it "in a new process" (a fresh store), and re-run: every
+    // analysis replays from disk and the outcome is bit-identical.
+    let cache_path = std::env::temp_dir().join(format!("maestro_e2e_dse_{}.mcache", std::process::id()));
+    let flushed = store.flush(&cache_path)?;
+    println!(
+        "cache flush: {} records ({} total) -> {}",
+        flushed.written,
+        flushed.total,
+        cache_path.display()
+    );
+    let warm_store = Arc::new(SharedStore::new());
+    let loaded = warm_store.load(&cache_path);
+    if let Some(w) = &loaded.warning {
+        eprintln!("cache load: {w}");
+    }
+    let warm_cfg = SweepConfig { cache: Some(Arc::clone(&warm_store)), ..SweepConfig::default() };
+    let warm = sweep(&net, &space, 2, &warm_cfg)?;
+    println!("warm restart ({} records loaded): {}", loaded.loaded, warm.stats.summary());
+    println!(
+        "warm run: {} disk hits, {} misses, frontier identical to cold: {} | cold {:.2}s -> warm {:.2}s",
+        warm.stats.cache_disk_hits,
+        warm.stats.cache_misses,
+        warm.frontier == sharded.frontier,
+        sharded.stats.seconds,
+        warm.stats.seconds,
+    );
+    assert!(warm.stats.cache_disk_hits > 0, "warm restart must hit the disk-loaded entries");
+    assert_eq!(warm.frontier, sharded.frontier, "warm restart must not move a bit");
+    std::fs::remove_file(&cache_path).ok();
 
     // Design axes: mapping variants x PEs (jobs), bandwidth (designs).
     let designs: Vec<DesignIn> = geometric_range(1, 256, 48)

@@ -7,11 +7,15 @@
 //! and the analytic-vs-simulator speedup on a bounded layer.
 //!
 //! CI smoke mode: `ANALYSIS_SMOKE=1 cargo bench --bench analysis_speed`
-//! runs only the cached-vs-uncached comparison and writes the layers/s
-//! + hit/miss record to `BENCH_analysis_rate.json` (override with
-//! `ANALYSIS_SMOKE_OUT`) — uploaded as a CI build artifact next to
-//! `BENCH_dse_rate.json`.
+//! runs the cached-vs-uncached comparison plus a cache-file warm-start
+//! round trip (cold analyze -> flush -> fresh store load -> warm
+//! analyze) and writes the layers/s + hit/miss + warm-vs-cold record to
+//! `BENCH_analysis_rate.json` (override with `ANALYSIS_SMOKE_OUT`) —
+//! uploaded as a CI build artifact next to `BENCH_dse_rate.json`.
 
+use std::sync::Arc;
+
+use maestro::cache::SharedStore;
 use maestro::engine::analysis::{analyze_layer, Analyzer};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
@@ -48,17 +52,57 @@ fn cached_vs_uncached(net: &Network, hw: &HwConfig, repeats: u32) -> (f64, f64, 
     (total / uncached_s.max(1e-9), total / cached_s.max(1e-9), analyzer.cache_hits(), analyzer.cache_misses())
 }
 
-fn analysis_rate_json(net: &Network, rates: (f64, f64, u64, u64)) -> String {
+/// Cache-file warm start on `net`: analyze cold through a fresh
+/// SharedStore (timed), flush to a temp cache file, reload into another
+/// fresh store ("a new process"), and re-analyze warm (timed). Returns
+/// (cold_s, warm_s, disk_hits, records_loaded).
+fn warm_vs_cold(net: &Network, hw: &HwConfig) -> (f64, f64, u64, usize) {
+    let df = styles::kc_p();
+    let path = std::env::temp_dir().join(format!("maestro_bench_warm_{}.mcache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let cold_store = Arc::new(SharedStore::new());
+    let mut cold = Analyzer::with_store(Arc::clone(&cold_store));
+    let t0 = std::time::Instant::now();
+    for layer in &net.layers {
+        let _ = cold.analyze(layer, &df, hw);
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+    cold_store.flush(&path).expect("flush bench cache file");
+
+    let warm_store = Arc::new(SharedStore::new());
+    let loaded = warm_store.load(&path);
+    assert!(loaded.warning.is_none(), "bench cache file must round-trip: {:?}", loaded.warning);
+    let mut warm = Analyzer::with_store(Arc::clone(&warm_store));
+    let t1 = std::time::Instant::now();
+    for layer in &net.layers {
+        let _ = warm.analyze(layer, &df, hw);
+    }
+    let warm_s = t1.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&path);
+    assert!(warm.disk_hits() > 0, "warm pass must hit disk-loaded entries");
+    (cold_s, warm_s, warm.disk_hits(), loaded.loaded)
+}
+
+fn analysis_rate_json(
+    net: &Network,
+    rates: (f64, f64, u64, u64),
+    warm: (f64, f64, u64, usize),
+) -> String {
     let (uncached, cached, hits, misses) = rates;
+    let (cold_s, warm_s, disk_hits, records) = warm;
     format!(
         "{{\n  \"bench\": \"analysis_rate\",\n  \"network\": \"{}\",\n  \"dataflow\": \"KC-P\",\n  \
          \"layers\": {},\n  \"unique_shapes\": {},\n  \"uncached_layers_per_s\": {uncached:.1},\n  \
          \"cached_layers_per_s\": {cached:.1},\n  \"speedup\": {:.2},\n  \"cache_hits\": {hits},\n  \
-         \"cache_misses\": {misses}\n}}\n",
+         \"cache_misses\": {misses},\n  \"warm_start\": {{\n    \"cold_seconds\": {cold_s:.6},\n    \
+         \"warm_seconds\": {warm_s:.6},\n    \"speedup\": {:.2},\n    \"disk_hits\": {disk_hits},\n    \
+         \"records_loaded\": {records}\n  }}\n}}\n",
         net.name,
         net.layers.len(),
         net.unique_shapes().len(),
         cached / uncached.max(1e-9),
+        cold_s / warm_s.max(1e-9),
     )
 }
 
@@ -69,10 +113,11 @@ fn main() {
         .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
         .unwrap_or(false);
     if smoke {
-        section("analysis bench smoke (CI): cached vs uncached layers/s on resnet50");
+        section("analysis bench smoke (CI): cached vs uncached layers/s + warm start on resnet50");
         let net = zoo::by_name("resnet50").unwrap();
         let rates = cached_vs_uncached(&net, &hw, 3);
-        let json = analysis_rate_json(&net, rates);
+        let warm = warm_vs_cold(&net, &hw);
+        let json = analysis_rate_json(&net, rates, warm);
         print!("{json}");
         let path = std::env::var("ANALYSIS_SMOKE_OUT").unwrap_or_else(|_| "BENCH_analysis_rate.json".into());
         std::fs::write(&path, json).expect("write analysis smoke json");
@@ -111,6 +156,16 @@ fn main() {
             net.layers.len(),
             net.unique_shapes().len(),
             cached / uncached.max(1e-9),
+        );
+    }
+
+    section("cache-file warm start (cold analyze -> flush -> fresh load -> warm analyze)");
+    for name in ["resnet50", "vgg16-conv"] {
+        let net = zoo::by_name(name).unwrap();
+        let (cold_s, warm_s, disk_hits, records) = warm_vs_cold(&net, &hw);
+        println!(
+            "{name}: cold {cold_s:.4}s | warm {warm_s:.4}s (x{:.1}) | {records} records on disk, {disk_hits} disk hits",
+            cold_s / warm_s.max(1e-9)
         );
     }
 

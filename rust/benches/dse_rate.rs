@@ -8,10 +8,12 @@
 //! jobs.
 //!
 //! CI smoke mode: `DSE_SMOKE=1 cargo bench --bench dse_rate` runs the
-//! sharded sweep on the tiny `DesignSpace::ci_smoke` space in seconds
-//! and writes the designs/s + thread-scaling numbers to
-//! `BENCH_dse_rate.json` (override with `DSE_SMOKE_OUT`) — uploaded as
-//! a CI build artifact, no assertions beyond completing.
+//! sharded sweep on the tiny `DesignSpace::ci_smoke` space in seconds,
+//! plus a cache-file warm-start round trip (which *does* assert: the
+//! cache file must load warning-free and the warm sweep must report
+//! disk hits), and writes the designs/s + thread-scaling + warm-start
+//! numbers to `BENCH_dse_rate.json` (override with `DSE_SMOKE_OUT`) —
+//! uploaded as a CI build artifact.
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, SweepConfig, SweepStats};
@@ -39,7 +41,12 @@ fn sweep_scaling(net: &Network, space: &DesignSpace) -> Vec<(usize, SweepStats)>
 /// part of the record — PR 2 switched the smoke from a single layer to
 /// the whole VGG16 conv stack, so designs/s is not comparable across
 /// records with different workloads.
-fn scaling_json(resolution: &str, net: &Network, runs: &[(usize, SweepStats)]) -> String {
+fn scaling_json(
+    resolution: &str,
+    net: &Network,
+    runs: &[(usize, SweepStats)],
+    warm: (&SweepStats, &SweepStats),
+) -> String {
     let mut s = String::from("{\n");
     s += "  \"bench\": \"dse_rate\",\n";
     s += &format!("  \"space\": \"{resolution}\",\n");
@@ -50,32 +57,64 @@ fn scaling_json(resolution: &str, net: &Network, runs: &[(usize, SweepStats)]) -
     for (i, (threads, st)) in runs.iter().enumerate() {
         s += &format!(
             "    {{\"threads\": {threads}, \"total_designs\": {}, \"evaluated\": {}, \"valid\": {}, \
-             \"pruned\": {}, \"unmappable\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
-             \"seconds\": {:.6}, \"designs_per_s\": {:.1}}}{}\n",
+             \"pruned\": {}, \"unmappable\": {}, \"cache_hits\": {}, \"cache_disk_hits\": {}, \
+             \"cache_misses\": {}, \"seconds\": {:.6}, \"designs_per_s\": {:.1}}}{}\n",
             st.total_designs,
             st.evaluated,
             st.valid,
             st.pruned,
             st.unmappable,
             st.cache_hits,
+            st.cache_disk_hits,
             st.cache_misses,
             st.seconds,
             st.rate(),
             if i + 1 < runs.len() { "," } else { "" },
         );
     }
-    s += "  ]\n}\n";
+    s += "  ],\n";
+    let (cold, rewarm) = warm;
+    s += &format!(
+        "  \"warm_start\": {{\"cold_seconds\": {:.6}, \"warm_seconds\": {:.6}, \"cache_disk_hits\": {}, \
+         \"cache_misses_warm\": {}}}\n",
+        cold.seconds, rewarm.seconds, rewarm.cache_disk_hits, rewarm.cache_misses,
+    );
+    s += "}\n";
     s
 }
 
-/// CI smoke: tiny space, scaling record written to disk, done. The
-/// workload is the whole VGG16 conv stack so the shard Analyzers'
-/// cache_hits/cache_misses land in the JSON trajectory.
+/// CI smoke: tiny space, scaling record + a cache-file warm-start round
+/// trip written to disk, done. The workload is the whole VGG16 conv
+/// stack so the shard Analyzers' mem/disk hit and miss counters land in
+/// the JSON trajectory.
 fn run_smoke(net: &Network) {
+    use maestro::cache::SharedStore;
+    use std::sync::Arc;
+
     section("DSE bench smoke (CI): sharded network sweep on DesignSpace::ci_smoke");
     let space = DesignSpace::ci_smoke("kc-p");
     let runs = sweep_scaling(net, &space);
-    let json = scaling_json("ci_smoke(kc-p)", net, &runs);
+
+    // Warm-start leg: cold shared-store sweep -> flush -> fresh store
+    // load -> warm sweep (all analyses replay from disk).
+    let cache_path =
+        std::env::temp_dir().join(format!("maestro_dse_smoke_{}.mcache", std::process::id()));
+    let _ = std::fs::remove_file(&cache_path);
+    let store = Arc::new(SharedStore::new());
+    let cold_cfg = SweepConfig { threads: 1, cache: Some(Arc::clone(&store)), ..SweepConfig::default() };
+    let cold = sweep(net, &space, 2, &cold_cfg).unwrap();
+    store.flush(&cache_path).expect("flush smoke cache");
+    let warm_store = Arc::new(SharedStore::new());
+    let loaded = warm_store.load(&cache_path);
+    assert!(loaded.warning.is_none(), "{:?}", loaded.warning);
+    let warm_cfg = SweepConfig { threads: 1, cache: Some(warm_store), ..SweepConfig::default() };
+    let warm = sweep(net, &space, 2, &warm_cfg).unwrap();
+    let _ = std::fs::remove_file(&cache_path);
+    println!("cache-file cold: {}", cold.stats.summary());
+    println!("cache-file warm: {}", warm.stats.summary());
+    assert!(warm.stats.cache_disk_hits > 0, "warm sweep must report disk hits");
+
+    let json = scaling_json("ci_smoke(kc-p)", net, &runs, (&cold.stats, &warm.stats));
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
     std::fs::write(&path, json).expect("write bench smoke json");
     println!("wrote {path}");

@@ -1,0 +1,263 @@
+//! Cache identity: what makes two analyses "the same computation".
+//!
+//! Every analysis result in this crate is a pure function of three
+//! inputs — a layer's canonical [`ShapeKey`], a dataflow's *structure*,
+//! and the hardware configuration — so the cache key is exactly that
+//! triple, with each component reduced to a stable, name-free value:
+//!
+//! * [`DataflowFingerprint`] — a 128-bit FNV-1a hash over the ordered
+//!   directive list (map kinds, dims, sizes, offsets, and cluster
+//!   structure). Names never enter the hash, so two hand-built
+//!   dataflows that share a name but differ structurally get distinct
+//!   keys (no aliasing), while differently-named but structurally
+//!   identical dataflows share one entry. The encoding each directive
+//!   feeds is tag-prefixed and fixed-width per field, so the byte
+//!   stream is prefix-free: distinct directive lists cannot collide by
+//!   concatenation.
+//! * [`HwKey`] — the hardware config flattened to integers (floats via
+//!   `to_bits`) with an exhaustive destructure, so adding a field to
+//!   `HwConfig` fails to compile here instead of silently aliasing.
+//! * [`ShapeKey`] — already canonical and name-independent
+//!   (`model::layer`).
+//!
+//! The fingerprint is computed from the *unresolved* directives; that
+//! is complete because resolution is itself a pure function of
+//! (directives, layer shape, PE count) and the key already carries the
+//! shape and the PE count (inside [`HwKey`]).
+
+use crate::hw::config::{HwConfig, ReductionSupport};
+use crate::ir::dataflow::Dataflow;
+use crate::model::layer::ShapeKey;
+use crate::util::stablehash::Fnv128;
+
+/// Structural identity of a dataflow: a process-stable 128-bit hash of
+/// its directive list. See the module docs for what it does and does
+/// not capture. Construct via [`Dataflow::fingerprint`] or
+/// [`DataflowFingerprint::of`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DataflowFingerprint(u128);
+
+impl DataflowFingerprint {
+    /// Fingerprint a dataflow's structure (its name is ignored).
+    pub fn of(df: &Dataflow) -> DataflowFingerprint {
+        let mut h = Fnv128::new();
+        for d in &df.directives {
+            d.fingerprint_into(&mut h);
+        }
+        DataflowFingerprint(h.finish())
+    }
+
+    pub fn as_u128(&self) -> u128 {
+        self.0
+    }
+
+    /// Rebuild from a persisted value (cache file records).
+    pub fn from_u128(v: u128) -> DataflowFingerprint {
+        DataflowFingerprint(v)
+    }
+}
+
+impl std::fmt::Display for DataflowFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// Cache identity of a hardware config (f64 fields via `to_bits` so the
+/// key stays `Eq + Hash` and serializes exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HwKey {
+    /// num_pes, l1_size, l2_size, noc_bandwidth, noc_latency,
+    /// pe_throughput — in that order.
+    pub scalars: [u64; 6],
+    pub multicast: bool,
+    pub reduction: u8,
+    pub clock_bits: u64,
+}
+
+impl HwKey {
+    pub fn of(hw: &HwConfig) -> HwKey {
+        // Exhaustive destructuring (no `..` rest pattern): adding a
+        // field to HwConfig must fail to compile here, not silently
+        // alias cache keys and serve stale stats.
+        let &HwConfig {
+            num_pes,
+            l1_size,
+            l2_size,
+            noc_bandwidth,
+            noc_latency,
+            multicast,
+            reduction,
+            pe_throughput,
+            clock_ghz,
+        } = hw;
+        HwKey {
+            scalars: [num_pes, l1_size, l2_size, noc_bandwidth, noc_latency, pe_throughput],
+            multicast,
+            reduction: match reduction {
+                ReductionSupport::None => 0,
+                ReductionSupport::Tree => 1,
+                ReductionSupport::Forward => 2,
+            },
+            clock_bits: clock_ghz.to_bits(),
+        }
+    }
+}
+
+/// The full memoization key: canonical layer shape x structural
+/// dataflow identity x hardware. Everything an analysis reads, nothing
+/// it does not (names of layers and dataflows are diagnostics, not
+/// identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub shape: ShapeKey,
+    pub dataflow: DataflowFingerprint,
+    pub hw: HwKey,
+}
+
+impl CacheKey {
+    pub fn new(shape: ShapeKey, dataflow: DataflowFingerprint, hw: &HwConfig) -> CacheKey {
+        CacheKey { shape, dataflow, hw: HwKey::of(hw) }
+    }
+
+    /// Stable byte encoding: shard selection, record serialization, and
+    /// deterministic flush ordering all read this.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(160);
+        b.push(self.shape.op.tag());
+        for v in [
+            self.shape.n,
+            self.shape.k,
+            self.shape.c,
+            self.shape.y,
+            self.shape.x,
+            self.shape.r,
+            self.shape.s,
+            self.shape.stride,
+            self.shape.sparsity_bits(),
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&self.dataflow.as_u128().to_le_bytes());
+        for v in self.hw.scalars {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(self.hw.multicast as u8);
+        b.push(self.hw.reduction);
+        b.extend_from_slice(&self.hw.clock_bits.to_le_bytes());
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::styles;
+
+    #[test]
+    fn fingerprint_ignores_names() {
+        let a = styles::kc_p();
+        let mut b = a.clone();
+        b.name = "renamed".into();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_structures() {
+        // Every pair of built-in styles must fingerprint apart.
+        let all = styles::all_styles();
+        for (i, x) in all.iter().enumerate() {
+            for y in &all[i + 1..] {
+                assert_ne!(
+                    x.fingerprint(),
+                    y.fingerprint(),
+                    "{} vs {} must not collide",
+                    x.name,
+                    y.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive() {
+        use crate::ir::dims::Dim;
+        use crate::ir::directive::{Directive, Extent};
+        let fwd = Dataflow::new(
+            "fwd",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::temporal(Extent::lit(2), Extent::lit(2), Dim::C),
+            ],
+        );
+        let rev = Dataflow::new(
+            "rev",
+            vec![
+                Directive::temporal(Extent::lit(2), Extent::lit(2), Dim::C),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+            ],
+        );
+        assert_ne!(fwd.fingerprint(), rev.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_sees_extent_kind_and_cluster_structure() {
+        use crate::ir::dims::Dim;
+        use crate::ir::directive::{Directive, Extent};
+        // Lit(3) vs Sz(R) (which may also resolve to 3) are distinct
+        // structures: they adapt differently to other layers.
+        let lit = Dataflow::new(
+            "a",
+            vec![Directive::temporal(Extent::lit(3), Extent::lit(1), Dim::Y)],
+        );
+        let sym = Dataflow::new(
+            "a",
+            vec![Directive::temporal(Extent::sz(Dim::R), Extent::lit(1), Dim::Y)],
+        );
+        assert_ne!(lit.fingerprint(), sym.fingerprint());
+
+        let flat = Dataflow::new(
+            "f",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C),
+            ],
+        );
+        let clustered = Dataflow::new(
+            "f",
+            vec![
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::K),
+                Directive::cluster(Extent::lit(4)),
+                Directive::spatial(Extent::lit(1), Extent::lit(1), Dim::C),
+            ],
+        );
+        assert_ne!(flat.fingerprint(), clustered.fingerprint());
+    }
+
+    #[test]
+    fn hw_key_distinguishes_every_field() {
+        let base = HwConfig::fig10_default();
+        let k0 = HwKey::of(&base);
+        let mut pes = base.clone();
+        pes.num_pes += 1;
+        assert_ne!(HwKey::of(&pes), k0);
+        let mut mc = base.clone();
+        mc.multicast = !mc.multicast;
+        assert_ne!(HwKey::of(&mc), k0);
+        let mut clk = base;
+        clk.clock_ghz += 0.5;
+        assert_ne!(HwKey::of(&clk), k0);
+    }
+
+    #[test]
+    fn key_bytes_are_injective_over_components() {
+        use crate::model::zoo::vgg16;
+        let hw = HwConfig::fig10_default();
+        let a = CacheKey::new(vgg16::conv2().shape_key(), styles::kc_p().fingerprint(), &hw);
+        let b = CacheKey::new(vgg16::conv13().shape_key(), styles::kc_p().fingerprint(), &hw);
+        let c = CacheKey::new(vgg16::conv2().shape_key(), styles::x_p().fingerprint(), &hw);
+        assert_ne!(a.to_bytes(), b.to_bytes());
+        assert_ne!(a.to_bytes(), c.to_bytes());
+        assert_eq!(a.to_bytes(), a.to_bytes());
+    }
+}

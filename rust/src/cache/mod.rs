@@ -1,0 +1,41 @@
+//! The analysis cache subsystem: structural identity, concurrent
+//! sharing, and on-disk warm starts for `(shape, dataflow, hardware) ->
+//! LayerStats` memoization.
+//!
+//! MAESTRO's headline result is the throughput of the cost model itself
+//! (480M designs at 0.17M designs/s); the dominant lever behind that
+//! rate is never evaluating the same `(shape, dataflow, hardware)`
+//! triple twice. PR 2's `Analyzer` proved the lever within one thread
+//! and one process; this module promotes it to a subsystem with three
+//! layers:
+//!
+//! * **Identity** ([`key`]) — [`DataflowFingerprint`] replaces the
+//!   dataflow *name* in every cache key: a stable 128-bit structural
+//!   hash over the ordered directive list, so hand-built same-name
+//!   dataflows can no longer alias and identical structures under
+//!   different names share one entry. Names survive only as
+//!   diagnostics. [`HwKey`] and `ShapeKey` complete the triple.
+//! * **Sharing** ([`store`]) — [`SharedStore`], a sharded-`RwLock`
+//!   concurrent map that DSE sweep shards and coordinator prep workers
+//!   consult and populate together. Values are pure functions of their
+//!   keys, so racing writers are benign and the sweep's bit-identical
+//!   deterministic merge is untouched (pinned in
+//!   `rust/tests/dse_parallel.rs`).
+//! * **Persistence** ([`persist`]) — an append-only, checksummed,
+//!   corrupt-tail-tolerant record log behind [`SharedStore::load`] /
+//!   [`SharedStore::flush`], wired through the `network`/`dse` CLI
+//!   `--cache-file` flags so repeated runs on zoo networks start warm
+//!   (hits split into mem vs disk everywhere they surface).
+//!
+//! Consumers rarely touch this module directly: construct an
+//! [`crate::engine::analysis::Analyzer`] over a store with
+//! `Analyzer::with_store`, or hand a store to
+//! [`crate::dse::SweepConfig::cache`] / the coordinator's
+//! `run_jobs_with_store`.
+
+pub mod key;
+pub mod persist;
+pub mod store;
+
+pub use key::{CacheKey, DataflowFingerprint, HwKey};
+pub use store::{CacheHit, CacheValue, FlushReport, LoadReport, SharedStore};

@@ -1,0 +1,470 @@
+//! On-disk cache format: an append-only record log behind
+//! [`SharedStore::load`](super::SharedStore::load) /
+//! [`SharedStore::flush`](super::SharedStore::flush).
+//!
+//! ```text
+//! file   := header record*
+//! header := magic[8] format_version:u32le analysis_version:u32le
+//! record := payload_len:u32le checksum:u64le payload[payload_len]
+//! ```
+//!
+//! * `checksum` is FNV-1a 64 over the payload, so a torn append or a
+//!   flipped bit invalidates exactly the records it touches.
+//! * The payload is the [`CacheKey`] byte encoding followed by a
+//!   tagged [`CacheValue`] (strings as `u32le` length + UTF-8, floats
+//!   as `f64::to_bits` little-endian) — every field fixed-order and
+//!   explicitly sized, so records written by one build parse bit-
+//!   identically in another.
+//! * Readers keep the longest valid record prefix: a bad header means
+//!   a cold start, a bad tail is dropped (and truncated away by the
+//!   next flush). Nothing in this module panics on foreign bytes.
+//!
+//! # Invalidation
+//!
+//! Cached values are functions of the key *and of the analysis
+//! formulas*. [`ANALYSIS_VERSION`] is baked into the header; bump it in
+//! the same commit as any change to `engine::analysis` /
+//! `engine::reuse` / `engine::mapping` / `engine::noc` / `hw` outputs,
+//! and every stale file self-invalidates into a cold start.
+
+use std::fs::{self, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::engine::analysis::{EnergyBreakdown, LayerStats};
+use crate::model::layer::{Op, ShapeKey};
+use crate::util::stablehash::Fnv64;
+
+use super::key::{CacheKey, DataflowFingerprint, HwKey};
+use super::store::CacheValue;
+
+/// File magic: "maestro cache" + a format generation letter.
+pub const MAGIC: [u8; 8] = *b"MSTROCSA";
+/// Bump on any change to the record encoding itself.
+pub const FORMAT_VERSION: u32 = 1;
+/// Bump whenever analysis outputs change for an unchanged key, so old
+/// files are discarded instead of replaying stale numbers.
+pub const ANALYSIS_VERSION: u32 = 1;
+
+const HEADER_LEN: u64 = 16;
+const FRAME_LEN: usize = 12; // payload_len + checksum
+/// Sanity cap: no legitimate record (one LayerStats + short strings)
+/// approaches this; a larger length field means corruption.
+const MAX_PAYLOAD: u32 = 1 << 20;
+
+fn header_bytes() -> [u8; HEADER_LEN as usize] {
+    let mut h = [0u8; HEADER_LEN as usize];
+    h[..8].copy_from_slice(&MAGIC);
+    h[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&ANALYSIS_VERSION.to_le_bytes());
+    h
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize one (key, value) pair as a framed record (frame + payload).
+pub(crate) fn encode_record(key: &CacheKey, value: &CacheValue) -> Vec<u8> {
+    let mut payload = key.to_bytes();
+    match value {
+        CacheValue::Stats(s) => {
+            payload.push(0);
+            put_str(&mut payload, &s.layer);
+            put_str(&mut payload, &s.dataflow);
+            for v in [s.runtime, s.macs, s.util] {
+                put_f64(&mut payload, v);
+            }
+            for v in s.l2_reads {
+                put_f64(&mut payload, v);
+            }
+            for v in s.l2_writes {
+                put_f64(&mut payload, v);
+            }
+            for v in [s.l1_fills, s.l1_reads, s.l1_writes, s.noc_delivered, s.peak_bw_need] {
+                put_f64(&mut payload, v);
+            }
+            put_u64(&mut payload, s.l1_req);
+            put_u64(&mut payload, s.l2_req);
+            for v in [s.energy.mac, s.energy.l1, s.energy.l2, s.energy.noc] {
+                put_f64(&mut payload, v);
+            }
+        }
+        CacheValue::Failure { layer, dataflow, message } => {
+            payload.push(1);
+            put_str(&mut payload, layer);
+            put_str(&mut payload, dataflow);
+            put_str(&mut payload, message);
+        }
+    }
+    let mut rec = Vec::with_capacity(FRAME_LEN + payload.len());
+    rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    rec.extend_from_slice(&Fnv64::hash(&payload).to_le_bytes());
+    rec.extend_from_slice(&payload);
+    rec
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor; every read is `Option` so a
+/// short or garbled payload unwinds into "drop the tail", never a
+/// panic.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.data.len() {
+            return None;
+        }
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn u128(&mut self) -> Option<u128> {
+        Some(u128::from_le_bytes(self.take(16)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Option<String> {
+        let len = self.u32()? as usize;
+        if len > MAX_PAYLOAD as usize {
+            return None;
+        }
+        String::from_utf8(self.take(len)?.to_vec()).ok()
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.data.len()
+    }
+}
+
+fn decode_key(c: &mut Cursor) -> Option<CacheKey> {
+    let op = Op::from_tag(c.u8()?)?;
+    let n = c.u64()?;
+    let k = c.u64()?;
+    let ch = c.u64()?;
+    let y = c.u64()?;
+    let x = c.u64()?;
+    let r = c.u64()?;
+    let s = c.u64()?;
+    let stride = c.u64()?;
+    let sparsity_bits = c.u64()?;
+    let shape = ShapeKey::from_raw(op, [n, k, ch, y, x, r, s], stride, sparsity_bits);
+    let dataflow = DataflowFingerprint::from_u128(c.u128()?);
+    let mut scalars = [0u64; 6];
+    for slot in &mut scalars {
+        *slot = c.u64()?;
+    }
+    let multicast = match c.u8()? {
+        0 => false,
+        1 => true,
+        _ => return None,
+    };
+    let reduction = c.u8()?;
+    if reduction > 2 {
+        return None;
+    }
+    let clock_bits = c.u64()?;
+    Some(CacheKey { shape, dataflow, hw: HwKey { scalars, multicast, reduction, clock_bits } })
+}
+
+fn decode_value(c: &mut Cursor) -> Option<CacheValue> {
+    match c.u8()? {
+        0 => {
+            let layer = c.string()?;
+            let dataflow = c.string()?;
+            let runtime = c.f64()?;
+            let macs = c.f64()?;
+            let util = c.f64()?;
+            let l2_reads = [c.f64()?, c.f64()?, c.f64()?];
+            let l2_writes = [c.f64()?, c.f64()?, c.f64()?];
+            let l1_fills = c.f64()?;
+            let l1_reads = c.f64()?;
+            let l1_writes = c.f64()?;
+            let noc_delivered = c.f64()?;
+            let peak_bw_need = c.f64()?;
+            let l1_req = c.u64()?;
+            let l2_req = c.u64()?;
+            let energy = EnergyBreakdown { mac: c.f64()?, l1: c.f64()?, l2: c.f64()?, noc: c.f64()? };
+            Some(CacheValue::Stats(LayerStats {
+                layer,
+                dataflow,
+                runtime,
+                macs,
+                util,
+                l2_reads,
+                l2_writes,
+                l1_fills,
+                l1_reads,
+                l1_writes,
+                noc_delivered,
+                l1_req,
+                l2_req,
+                peak_bw_need,
+                energy,
+            }))
+        }
+        1 => {
+            let layer = c.string()?;
+            let dataflow = c.string()?;
+            let message = c.string()?;
+            Some(CacheValue::Failure { layer, dataflow, message })
+        }
+        _ => None,
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Option<(CacheKey, CacheValue)> {
+    let mut c = Cursor::new(payload);
+    let key = decode_key(&mut c)?;
+    let value = decode_value(&mut c)?;
+    if !c.done() {
+        // Trailing bytes mean a framing/version confusion — reject the
+        // record rather than trusting a partial parse.
+        return None;
+    }
+    Some((key, value))
+}
+
+// ---------------------------------------------------------------------
+// File I/O
+// ---------------------------------------------------------------------
+
+/// What a read of a cache file yields: the decodable entries, the byte
+/// length of the valid prefix (header + intact records), how much tail
+/// was dropped, and a human-readable warning when anything was wrong.
+pub(crate) struct ParsedFile {
+    pub entries: Vec<(CacheKey, CacheValue)>,
+    pub valid_len: u64,
+    pub dropped_bytes: u64,
+    pub warning: Option<String>,
+}
+
+impl ParsedFile {
+    fn cold(warning: Option<String>, dropped_bytes: u64) -> ParsedFile {
+        ParsedFile { entries: Vec::new(), valid_len: 0, dropped_bytes, warning }
+    }
+}
+
+/// Read and validate a cache file. Infallible by design: every failure
+/// mode degrades to "fewer entries + a warning".
+pub(crate) fn read_file(path: &Path) -> ParsedFile {
+    let data = match fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return ParsedFile::cold(None, 0),
+        Err(e) => {
+            return ParsedFile::cold(Some(format!("cache file {} unreadable ({e}); starting cold", path.display())), 0)
+        }
+    };
+    if data.is_empty() {
+        return ParsedFile::cold(None, 0);
+    }
+    if data.len() < HEADER_LEN as usize || data[..8] != MAGIC {
+        return ParsedFile::cold(
+            Some(format!("cache file {} has no valid header; starting cold", path.display())),
+            data.len() as u64,
+        );
+    }
+    let format = u32::from_le_bytes(data[8..12].try_into().unwrap());
+    let analysis = u32::from_le_bytes(data[12..16].try_into().unwrap());
+    if format != FORMAT_VERSION || analysis != ANALYSIS_VERSION {
+        return ParsedFile::cold(
+            Some(format!(
+                "cache file {} is version {format}/{analysis} (want {FORMAT_VERSION}/{ANALYSIS_VERSION}); starting cold",
+                path.display()
+            )),
+            data.len() as u64,
+        );
+    }
+
+    let mut entries = Vec::new();
+    let mut off = HEADER_LEN as usize;
+    let mut warning = None;
+    while off < data.len() {
+        let Some(rest) = data.get(off..) else { break };
+        if rest.len() < FRAME_LEN {
+            warning = Some(format!("cache file {}: truncated record frame; dropping tail", path.display()));
+            break;
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+        let checksum = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            warning = Some(format!("cache file {}: implausible record length; dropping tail", path.display()));
+            break;
+        }
+        let end = off + FRAME_LEN + len as usize;
+        if end > data.len() {
+            warning = Some(format!("cache file {}: truncated record payload; dropping tail", path.display()));
+            break;
+        }
+        let payload = &data[off + FRAME_LEN..end];
+        if Fnv64::hash(payload) != checksum {
+            warning = Some(format!("cache file {}: record checksum mismatch; dropping tail", path.display()));
+            break;
+        }
+        match decode_payload(payload) {
+            Some(kv) => entries.push(kv),
+            None => {
+                warning = Some(format!("cache file {}: undecodable record; dropping tail", path.display()));
+                break;
+            }
+        }
+        off = end;
+    }
+    ParsedFile {
+        entries,
+        valid_len: off as u64,
+        dropped_bytes: (data.len() - off) as u64,
+        warning,
+    }
+}
+
+/// Append records after the valid prefix of an existing file (the tail
+/// beyond `valid_len` — corrupt by definition — is truncated first). If
+/// the valid prefix does not even cover a header (e.g. the file was
+/// empty), the header is rewritten. Returns the new valid length.
+pub(crate) fn append_records<'a>(
+    path: &Path,
+    valid_len: u64,
+    records: impl Iterator<Item = &'a [u8]>,
+) -> Result<u64> {
+    let mut f = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("open cache file {}", path.display()))?;
+    let mut base = valid_len;
+    if base < HEADER_LEN {
+        f.set_len(0)?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&header_bytes())?;
+        base = HEADER_LEN;
+    } else {
+        f.set_len(base)?;
+        f.seek(SeekFrom::Start(base))?;
+    }
+    let mut written = 0u64;
+    for rec in records {
+        f.write_all(rec)?;
+        written += rec.len() as u64;
+    }
+    f.flush()?;
+    Ok(base + written)
+}
+
+/// Write a complete fresh file (header + records) via a temporary
+/// sibling and an atomic rename, so readers never observe a half-
+/// written file.
+pub(crate) fn write_fresh<'a>(path: &Path, records: impl Iterator<Item = &'a [u8]>) -> Result<()> {
+    let mut bytes = header_bytes().to_vec();
+    for rec in records {
+        bytes.extend_from_slice(rec);
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    fs::write(&tmp, &bytes).with_context(|| format!("write cache file {}", tmp.display()))?;
+    fs::rename(&tmp, path).with_context(|| format!("rename cache file into {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::analysis::analyze_layer;
+    use crate::hw::config::HwConfig;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn sample() -> (CacheKey, CacheValue) {
+        let layer = vgg16::conv2();
+        let df = styles::kc_p();
+        let hw = HwConfig::fig10_default();
+        let stats = analyze_layer(&layer, &df, &hw).unwrap();
+        (CacheKey::new(layer.shape_key(), df.fingerprint(), &hw), CacheValue::Stats(stats))
+    }
+
+    #[test]
+    fn record_roundtrip_is_bit_exact() {
+        let (key, value) = sample();
+        let rec = encode_record(&key, &value);
+        let (got_key, got_value) = decode_payload(&rec[FRAME_LEN..]).expect("decodes");
+        assert_eq!(got_key, key);
+        assert_eq!(got_value, value);
+
+        let failure = CacheValue::Failure {
+            layer: "bad".into(),
+            dataflow: "kc-p".into(),
+            message: "cluster sizes exceed total PEs".into(),
+        };
+        let rec = encode_record(&key, &failure);
+        let (_, got) = decode_payload(&rec[FRAME_LEN..]).expect("decodes");
+        assert_eq!(got, failure);
+    }
+
+    #[test]
+    fn flipped_payload_bit_fails_checksum() {
+        let (key, value) = sample();
+        let mut rec = encode_record(&key, &value);
+        let last = rec.len() - 1;
+        rec[last] ^= 0x40;
+        let len = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let checksum = u64::from_le_bytes(rec[4..12].try_into().unwrap());
+        assert_eq!(len as usize, rec.len() - FRAME_LEN);
+        assert_ne!(Fnv64::hash(&rec[FRAME_LEN..]), checksum);
+    }
+
+    #[test]
+    fn decoder_survives_arbitrary_truncation() {
+        // Every proper prefix of a valid payload must decode to None,
+        // never panic.
+        let (key, value) = sample();
+        let rec = encode_record(&key, &value);
+        let payload = &rec[FRAME_LEN..];
+        for cut in 0..payload.len() {
+            assert!(decode_payload(&payload[..cut]).is_none(), "prefix of {cut} bytes must not decode");
+        }
+        assert!(decode_payload(payload).is_some());
+    }
+}

@@ -1,0 +1,421 @@
+//! The shared concurrent analysis store: a sharded `RwLock` map from
+//! [`CacheKey`] to analysis outcomes, safe to consult and populate from
+//! any number of sweep shards / coordinator prep workers at once.
+//!
+//! # Why racing writers are benign
+//!
+//! Every value is a pure function of its key (pinned by the analysis
+//! determinism tests), so two workers that miss the same key compute
+//! bit-identical results; whichever insert lands first wins and the
+//! loser's copy is dropped. No entry is ever mutated in place, so
+//! readers can never observe a torn or stale value — the store needs no
+//! cross-shard coordination beyond the per-shard lock.
+//!
+//! # Memory
+//!
+//! The store never evicts: that is what makes warm-start persistence
+//! and cross-sweep reuse possible, and it means a shared-store DSE
+//! sweep grows O((variant, PEs) pairs x unique shapes) — every pair
+//! contributes its own keys, which is exactly the growth the private
+//! caches' per-pair `clear_cache` avoids. Entries are small (a
+//! [`LayerStats`] plus two short strings, ~300 bytes), so zoo networks
+//! over CLI-scale spaces stay modest, but paper-scale spaces
+//! (thousands of pairs) should keep the default (no shared store,
+//! memory bounded per shard) until the eviction/compaction follow-up
+//! lands (see ROADMAP). Whole-network analysis outside the DSE keys
+//! only on (shape, dataflow, hardware) actually analyzed and stays
+//! tiny.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::engine::analysis::LayerStats;
+
+use super::key::CacheKey;
+use super::persist;
+
+/// One cached analysis outcome. Failures are first-class values: a
+/// shape that cannot map under a dataflow is diagnosed once and the
+/// diagnostic replays (re-attributed to the caller's layer/dataflow by
+/// the `Analyzer`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CacheValue {
+    Stats(LayerStats),
+    Failure {
+        /// Layer the diagnosis was produced on (error chains embed
+        /// layer names; replays for same-shape siblings say so).
+        layer: String,
+        /// Dataflow *name* the diagnosis was produced under (the key
+        /// only knows the structural fingerprint).
+        dataflow: String,
+        message: String,
+    },
+}
+
+/// A successful lookup: the value plus whether the entry originated
+/// from a cache file (drives the mem-hit vs disk-hit split).
+#[derive(Debug, Clone)]
+pub struct CacheHit {
+    pub value: CacheValue,
+    pub from_disk: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    value: CacheValue,
+    /// Entry came in via [`SharedStore::load`] (vs computed here).
+    from_disk: bool,
+    /// Entry is already on disk (loaded, or flushed earlier) — flush
+    /// skips it.
+    persisted: bool,
+}
+
+#[derive(Debug, Default)]
+struct PersistMeta {
+    /// Path the store was loaded from, with the byte length of the
+    /// valid record prefix — flushing to the same path appends after
+    /// truncating any corrupt tail.
+    loaded: Option<(std::path::PathBuf, u64)>,
+}
+
+/// Result of [`SharedStore::load`]. Corruption never fails the load:
+/// the valid prefix is kept, the bad tail dropped, and `warning` says
+/// what happened.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Records inserted into the store.
+    pub loaded: usize,
+    /// Trailing bytes ignored as truncated/corrupt.
+    pub dropped_bytes: u64,
+    pub warning: Option<String>,
+}
+
+/// Result of [`SharedStore::flush`].
+#[derive(Debug)]
+pub struct FlushReport {
+    /// Records written by this flush.
+    pub written: usize,
+    /// Entries in the store after the flush.
+    pub total: usize,
+}
+
+/// The shared concurrent analysis cache. See the module docs for the
+/// concurrency and memory story; see [`super::persist`] for the on-disk
+/// format behind [`SharedStore::load`] / [`SharedStore::flush`].
+pub struct SharedStore {
+    shards: Vec<RwLock<HashMap<CacheKey, Slot>>>,
+    hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    meta: Mutex<PersistMeta>,
+}
+
+impl Default for SharedStore {
+    fn default() -> SharedStore {
+        SharedStore::new()
+    }
+}
+
+impl std::fmt::Debug for SharedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedStore")
+            .field("entries", &self.len())
+            .field("hits", &self.hits())
+            .field("disk_hits", &self.disk_hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+impl SharedStore {
+    /// A store with the default shard count (16 — enough that a worker
+    /// pool rarely contends on one lock, few enough that iteration
+    /// stays trivial).
+    pub fn new() -> SharedStore {
+        SharedStore::with_shards(16)
+    }
+
+    /// A store with `n` shards (rounded up to a power of two, min 1).
+    pub fn with_shards(n: usize) -> SharedStore {
+        let n = n.max(1).next_power_of_two();
+        SharedStore {
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            meta: Mutex::new(PersistMeta::default()),
+        }
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        // Shard selection is in-memory only (load() re-inserts through
+        // this same function), so it needs no cross-process stability —
+        // hash the Copy key directly instead of serializing it, keeping
+        // the hit path allocation-free.
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) & (self.shards.len() - 1)
+    }
+
+    /// Look up a key, counting the hit/miss (and its disk/mem origin).
+    pub fn get(&self, key: &CacheKey) -> Option<CacheHit> {
+        let shard = self.shards[self.shard_of(key)].read().unwrap();
+        match shard.get(key) {
+            Some(slot) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if slot.from_disk {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(CacheHit { value: slot.value.clone(), from_disk: slot.from_disk })
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed value. If the key is already present
+    /// (a racing writer got there first, or the entry was loaded from
+    /// disk) the existing slot is kept — values are pure functions of
+    /// the key, so both copies are bit-identical and keeping the first
+    /// preserves its origin/persistence flags.
+    pub fn insert(&self, key: CacheKey, value: CacheValue) {
+        let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
+        shard
+            .entry(key)
+            .or_insert(Slot { value, from_disk: false, persisted: false });
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate lookup counters (across every consumer of this store).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Hits served by entries that came from a cache file.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every entry (counters and persistence bookkeeping survive).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+    }
+
+    /// Load a cache file into the store. Never fails: a missing file is
+    /// a clean cold start, and a truncated or corrupt file contributes
+    /// its valid record prefix with the bad tail dropped (see
+    /// [`LoadReport::warning`]). Keys already in the store keep their
+    /// in-memory value (it is bit-identical by construction).
+    pub fn load(&self, path: &Path) -> LoadReport {
+        let parsed = persist::read_file(path);
+        {
+            // The `persisted` flags are relative to the file the store
+            // is bound to. Rebinding to a different path means entries
+            // already in memory — fresh, or loaded from some *other*
+            // file — are not known to exist in `path`, so they must
+            // flush as dirty (a later append-mode flush would otherwise
+            // silently omit them from the new file forever).
+            let mut meta = self.meta.lock().unwrap();
+            let rebinding = !matches!(&meta.loaded, Some((p, _)) if p.as_path() == path);
+            if rebinding {
+                for s in &self.shards {
+                    for slot in s.write().unwrap().values_mut() {
+                        slot.persisted = false;
+                    }
+                }
+            }
+            meta.loaded = Some((path.to_path_buf(), parsed.valid_len));
+        }
+        let mut loaded = 0;
+        for (key, value) in parsed.entries {
+            let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
+            match shard.entry(key) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(Slot { value, from_disk: true, persisted: true });
+                    loaded += 1;
+                }
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    // The key exists in memory AND in the file; values
+                    // are pure functions of keys, so the in-memory copy
+                    // is already what the file holds — keep it, but
+                    // record that this file has it.
+                    e.get_mut().persisted = true;
+                }
+            }
+        }
+        LoadReport { loaded, dropped_bytes: parsed.dropped_bytes, warning: parsed.warning }
+    }
+
+    /// Write the store to `path` as an append-only record log.
+    ///
+    /// * If this store previously [`load`](SharedStore::load)ed `path`,
+    ///   the file is truncated to its valid prefix (dropping any
+    ///   corrupt tail) and only not-yet-persisted records are appended.
+    /// * Otherwise a fresh file (header + every entry) is written to a
+    ///   temporary sibling and renamed into place.
+    ///
+    /// Records are written in sorted key order, so flushing the same
+    /// contents always produces the same bytes. Concurrent flushes of
+    /// one path from *different processes* are not coordinated; last
+    /// rename/append wins.
+    pub fn flush(&self, path: &Path) -> Result<FlushReport> {
+        let mut meta = self.meta.lock().unwrap();
+        let append_after = match &meta.loaded {
+            Some((p, len)) if p.as_path() == path && path.exists() => Some(*len),
+            _ => None,
+        };
+
+        // Snapshot the records to write: (key bytes for ordering, full
+        // record, key). Only the snapshotted keys are marked persisted
+        // afterwards — an entry a racing worker inserts mid-flush was
+        // never serialized, so it must stay dirty for the next flush
+        // rather than be silently dropped from the file forever.
+        let collect = |only_dirty: bool| -> Vec<(Vec<u8>, Vec<u8>, CacheKey)> {
+            let mut records = Vec::new();
+            for s in &self.shards {
+                let shard = s.read().unwrap();
+                for (key, slot) in shard.iter() {
+                    if only_dirty && slot.persisted {
+                        continue;
+                    }
+                    records.push((key.to_bytes(), persist::encode_record(key, &slot.value), *key));
+                }
+            }
+            records.sort_by(|a, b| a.0.cmp(&b.0));
+            records
+        };
+
+        let records = if let Some(valid_len) = append_after {
+            let records = collect(true);
+            let new_len =
+                persist::append_records(path, valid_len, records.iter().map(|(_, r, _)| r.as_slice()))?;
+            meta.loaded = Some((path.to_path_buf(), new_len));
+            records
+        } else {
+            let records = collect(false);
+            persist::write_fresh(path, records.iter().map(|(_, r, _)| r.as_slice()))?;
+            let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            meta.loaded = Some((path.to_path_buf(), len));
+            records
+        };
+
+        // Exactly the snapshot is now on disk.
+        for (_, _, key) in &records {
+            if let Some(slot) = self.shards[self.shard_of(key)].write().unwrap().get_mut(key) {
+                slot.persisted = true;
+            }
+        }
+        Ok(FlushReport { written: records.len(), total: self.len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::config::HwConfig;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn key_of(layer: &crate::model::layer::Layer, df: &crate::ir::dataflow::Dataflow) -> CacheKey {
+        CacheKey::new(layer.shape_key(), df.fingerprint(), &HwConfig::fig10_default())
+    }
+
+    fn failure(tag: &str) -> CacheValue {
+        CacheValue::Failure {
+            layer: format!("layer-{tag}"),
+            dataflow: "df".into(),
+            message: format!("message-{tag}"),
+        }
+    }
+
+    #[test]
+    fn get_insert_roundtrip_with_counters() {
+        let store = SharedStore::new();
+        let k = key_of(&vgg16::conv2(), &styles::kc_p());
+        assert!(store.get(&k).is_none());
+        store.insert(k, failure("a"));
+        let hit = store.get(&k).expect("inserted");
+        assert_eq!(hit.value, failure("a"));
+        assert!(!hit.from_disk);
+        assert_eq!((store.hits(), store.misses(), store.disk_hits()), (1, 1, 0));
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn first_insert_wins() {
+        let store = SharedStore::new();
+        let k = key_of(&vgg16::conv2(), &styles::kc_p());
+        store.insert(k, failure("first"));
+        store.insert(k, failure("second"));
+        assert_eq!(store.get(&k).unwrap().value, failure("first"));
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_converge() {
+        // Racing writers over one key set: every thread computes the
+        // same pure value per key, so the surviving store must hold
+        // exactly one value per key regardless of interleaving.
+        let store = std::sync::Arc::new(SharedStore::with_shards(4));
+        let layers = [vgg16::conv2(), vgg16::conv13()];
+        let dfs = styles::all_styles();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let store = std::sync::Arc::clone(&store);
+                let layers = &layers;
+                let dfs = &dfs;
+                scope.spawn(move || {
+                    for _ in 0..50 {
+                        for layer in layers {
+                            for df in dfs {
+                                let k = key_of(layer, df);
+                                if store.get(&k).is_none() {
+                                    store.insert(
+                                        k,
+                                        CacheValue::Failure {
+                                            layer: layer.name.clone(),
+                                            dataflow: df.name.clone(),
+                                            message: format!("{}+{}", layer.name, df.name),
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(store.len(), layers.len() * dfs.len());
+        for layer in &layers {
+            for df in &dfs {
+                match store.get(&key_of(layer, df)).unwrap().value {
+                    CacheValue::Failure { message, .. } => {
+                        assert_eq!(message, format!("{}+{}", layer.name, df.name));
+                    }
+                    other => panic!("unexpected value {other:?}"),
+                }
+            }
+        }
+    }
+}

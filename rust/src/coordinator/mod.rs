@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::cache::SharedStore;
 use crate::dse::engine::{build_case_table_cached, CaseTable, DesignPoint};
 use crate::engine::analysis::Analyzer;
 use crate::ir::dataflow::Dataflow;
@@ -129,6 +130,22 @@ pub fn run_jobs(
     backend: Backend,
     workers: usize,
 ) -> Result<(Vec<JobResult>, Arc<Metrics>)> {
+    run_jobs_with_store(jobs, backend, workers, None)
+}
+
+/// [`run_jobs`] with an optional shared analysis cache: every prep
+/// worker's [`Analyzer`] fronts the same [`SharedStore`], so duplicate
+/// (shape, variant, hardware) triples across jobs — and entries
+/// pre-warmed from a `--cache-file` — replay instead of re-analyzing.
+/// `None` keeps the PR 2 per-worker private caches (cleared per job to
+/// bound memory). Results are identical either way: cached values are
+/// pure functions of their keys.
+pub fn run_jobs_with_store(
+    jobs: Vec<DseJob>,
+    backend: Backend,
+    workers: usize,
+    cache: Option<Arc<SharedStore>>,
+) -> Result<(Vec<JobResult>, Arc<Metrics>)> {
     let metrics = Arc::new(Metrics::default());
     let workers = workers.max(1);
     let n_jobs = jobs.len();
@@ -145,14 +162,22 @@ pub fn run_jobs(
             let prep_tx = prep_tx.clone();
             let res_tx = res_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let cache = cache.clone();
             scope.spawn(move || {
                 // One Analyzer per prep worker: a job's repeated layer
-                // shapes are analyzed once. The cache is cleared per
-                // job — keys include (variant, pes), so cross-job hits
-                // only exist for duplicate jobs and holding entries
-                // would grow memory with the job count — while the
-                // scratch allocation amortizes across the worker's life.
-                let mut analyzer = Analyzer::new();
+                // shapes are analyzed once. With a private cache it is
+                // cleared per job — keys include (variant, pes), so
+                // cross-job hits only exist for duplicate jobs and
+                // holding entries would grow memory with the job count
+                // — while the scratch allocation amortizes across the
+                // worker's life. With a shared store the clear is a
+                // no-op: entries pool across workers and jobs (and
+                // feed `--cache-file` persistence), which is exactly
+                // where duplicate-job replays come from.
+                let mut analyzer = match cache {
+                    Some(store) => Analyzer::with_store(store),
+                    None => Analyzer::new(),
+                };
                 loop {
                     let Some(job) = queue.pop() else { break };
                     analyzer.clear_cache();
@@ -346,6 +371,26 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert!(results[0].outputs.is_empty());
         assert_eq!(metrics.jobs_skipped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shared_store_pools_across_duplicate_jobs() {
+        // The same job set twice through one store: the second copies'
+        // analyses must replay (store hits) and the outputs per job id
+        // must be identical to the first copies'.
+        let store = Arc::new(SharedStore::new());
+        let mut doubled = jobs();
+        doubled.extend(jobs());
+        let (results, _m) =
+            run_jobs_with_store(doubled, Backend::Scalar, 2, Some(Arc::clone(&store))).unwrap();
+        assert_eq!(results.len(), 6);
+        assert!(store.hits() > 0, "duplicate jobs must replay from the shared store");
+        assert!(!store.is_empty());
+        for id in 0..3u64 {
+            let outs: Vec<_> = results.iter().filter(|r| r.id == id).collect();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(outs[0].outputs, outs[1].outputs, "replayed job {id} must match");
+        }
     }
 
     #[test]

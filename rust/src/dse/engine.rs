@@ -15,9 +15,11 @@
 //! shard order — see [`crate::dse`] module docs for the architecture.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::cache::SharedStore;
 use crate::dse::pareto::ParetoAccumulator;
 use crate::engine::analysis::Analyzer;
 use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
@@ -344,11 +346,21 @@ pub struct SweepConfig {
     /// sweeps should keep the default `false` and use the streaming
     /// frontier, which bounds memory to O(frontier).
     pub keep_all_points: bool,
+    /// Shared analysis cache ([`crate::cache::SharedStore`]) consulted
+    /// and populated by every shard, replacing the per-shard private
+    /// Analyzer caches. Pre-warm it (another sweep, or
+    /// `SharedStore::load` from a `--cache-file`) and repeated (shape,
+    /// variant, hardware) triples replay instead of re-analyzing;
+    /// results are bit-identical either way (values are pure functions
+    /// of the key — pinned in `rust/tests/dse_parallel.rs`). `None`
+    /// keeps the default per-shard caches, whose per-pair clearing
+    /// bounds shard memory for paper-scale spaces.
+    pub cache: Option<Arc<SharedStore>>,
 }
 
 impl Default for SweepConfig {
     fn default() -> SweepConfig {
-        SweepConfig { threads: 0, shard_size: 0, keep_all_points: false }
+        SweepConfig { threads: 0, shard_size: 0, keep_all_points: false, cache: None }
     }
 }
 
@@ -387,9 +399,14 @@ pub struct SweepStats {
     /// Analyzer layer-cache hits while building case tables: repeated
     /// layer shapes replayed instead of re-analyzed. Diagnostic only —
     /// the split (unlike hits + misses per pair) depends on the shard
-    /// partition, so it is excluded from the determinism contract
-    /// (see `rust/tests/dse_parallel.rs`).
+    /// partition and on pre-warmed shared-cache state, so it is
+    /// excluded from the determinism contract (see
+    /// `rust/tests/dse_parallel.rs`).
     pub cache_hits: u64,
+    /// The subset of `cache_hits` served by entries a shared store
+    /// loaded from a cache file (warm starts; 0 without
+    /// [`SweepConfig::cache`]).
+    pub cache_disk_hits: u64,
     /// Analyzer layer-cache misses (= full layer analyses run).
     pub cache_misses: u64,
     /// Wall-clock seconds.
@@ -411,20 +428,22 @@ impl SweepStats {
         self.pruned += other.pruned;
         self.unmappable += other.unmappable;
         self.cache_hits += other.cache_hits;
+        self.cache_disk_hits += other.cache_disk_hits;
         self.cache_misses += other.cache_misses;
     }
 
     /// One-line human summary, including the skip breakdown and the
-    /// layer-cache hit/miss split.
+    /// layer-cache mem-hit/disk-hit/miss split.
     pub fn summary(&self) -> String {
         format!(
-            "designs={} evaluated={} valid={} pruned={} unmappable={} cache={}h/{}m wall={:.2}s rate={}/s",
+            "designs={} evaluated={} valid={} pruned={} unmappable={} cache={}h/{}d/{}m wall={:.2}s rate={}/s",
             self.total_designs,
             self.evaluated,
             self.valid,
             self.pruned,
             self.unmappable,
             self.cache_hits,
+            self.cache_disk_hits,
             self.cache_misses,
             self.seconds,
             crate::util::benchkit::fmt_rate(self.rate()),
@@ -459,9 +478,12 @@ struct ShardOutcome {
 /// output replays the single-threaded sweep exactly.
 ///
 /// One [`Analyzer`] serves the whole shard: its layer cache is keyed on
-/// (shape, variant, hardware), so the repeated shapes of a zoo network
-/// are analyzed once per (variant, PEs) pair instead of once per layer,
-/// and the scratch allocations amortize across the shard's pairs.
+/// (shape, variant structure, hardware), so the repeated shapes of a
+/// zoo network are analyzed once per (variant, PEs) pair instead of
+/// once per layer, and the scratch allocations amortize across the
+/// shard's pairs. With a [`SweepConfig::cache`] store, every shard's
+/// Analyzer fronts the same map — pre-warmed entries (earlier sweeps,
+/// disk) replay across the whole pool.
 ///
 /// Pruning mirrors §5.2: before entering the bandwidth loop for a
 /// (variant, PEs) pair, the minimum achievable area/power (smallest
@@ -473,17 +495,24 @@ fn sweep_shard(
     noc_hops: u64,
     pairs: std::ops::Range<usize>,
     keep_all_points: bool,
+    cache: Option<&Arc<SharedStore>>,
 ) -> ShardOutcome {
     let mut out = ShardOutcome::default();
-    let mut analyzer = Analyzer::new();
+    let mut analyzer = match cache {
+        Some(store) => Analyzer::with_store(Arc::clone(store)),
+        None => Analyzer::new(),
+    };
     let layers: Vec<&Layer> = net.layers.iter().collect();
     let n_pes = space.pes.len();
     let designs_per_pair = space.bandwidths.len() as u64;
     let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
     for pair in pairs {
-        // The cache key includes (variant, pes): a finished pair's
-        // entries can never hit again, so drop them before each pair
-        // (counters survive) to keep shard memory at O(unique shapes).
+        // Private cache: the key includes (variant, pes), so a
+        // finished pair's entries can never hit again within this
+        // sweep — drop them before each pair (counters survive) to
+        // keep shard memory at O(unique shapes). A no-op on a shared
+        // store, which retains entries for later sweeps and for
+        // persistence.
         analyzer.clear_cache();
         let variant = &space.variants[pair / n_pes];
         let pes = space.pes[pair % n_pes];
@@ -534,6 +563,7 @@ fn sweep_shard(
         }
     }
     out.stats.cache_hits = analyzer.cache_hits();
+    out.stats.cache_disk_hits = analyzer.disk_hits();
     out.stats.cache_misses = analyzer.cache_misses();
     out
 }
@@ -574,12 +604,13 @@ pub fn sweep(
     let n_shards = shards.len();
     let threads = config.effective_threads().min(n_shards).max(1);
     let keep_all_points = config.keep_all_points;
+    let cache = config.cache.as_ref();
 
     let mut shard_outcomes: Vec<Option<ShardOutcome>>;
     if threads <= 1 {
         shard_outcomes = Vec::with_capacity(n_shards);
         for (_, range) in shards {
-            shard_outcomes.push(Some(sweep_shard(net, space, noc_hops, range, keep_all_points)));
+            shard_outcomes.push(Some(sweep_shard(net, space, noc_hops, range, keep_all_points, cache)));
         }
     } else {
         let slots: std::sync::Mutex<Vec<Option<ShardOutcome>>> =
@@ -591,7 +622,7 @@ pub fn sweep(
                 let slots = &slots;
                 scope.spawn(move || {
                     while let Some((index, range)) = queue.pop() {
-                        let shard = sweep_shard(net, space, noc_hops, range, keep_all_points);
+                        let shard = sweep_shard(net, space, noc_hops, range, keep_all_points, cache);
                         slots.lock().unwrap()[index] = Some(shard);
                     }
                 });
@@ -767,7 +798,38 @@ mod tests {
         assert!(s.contains("cache="), "summary surfaces the hit/miss split: {s}");
     }
 
+    #[test]
+    fn shared_store_sweep_reruns_fully_warm() {
+        // Two sweeps over one SharedStore: the second must re-analyze
+        // nothing (every triple replays) and still produce identical
+        // results.
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        let store = Arc::new(SharedStore::new());
+        let cfg = SweepConfig {
+            keep_all_points: true,
+            cache: Some(Arc::clone(&store)),
+            ..SweepConfig::serial()
+        };
+        let cold = sweep(&net, &space, 2, &cfg).unwrap();
+        assert!(cold.stats.cache_misses > 0);
+        assert!(!store.is_empty(), "shared store must retain the sweep's entries");
+        let warm = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(warm.stats.cache_misses, 0, "fully warm rerun must not re-analyze");
+        assert_eq!(warm.stats.cache_disk_hits, 0, "no cache file involved");
+        assert_eq!(warm.frontier, cold.frontier);
+        assert_eq!(warm.points, cold.points);
+        assert_eq!(
+            (warm.stats.evaluated, warm.stats.valid, warm.stats.pruned, warm.stats.unmappable),
+            (cold.stats.evaluated, cold.stats.valid, cold.stats.pruned, cold.stats.unmappable),
+        );
+        let s = warm.stats.summary();
+        assert!(s.contains("d/"), "summary surfaces the disk-hit slot: {s}");
+    }
+
     // The pruned-vs-unmappable accounting scenario lives in
     // rust/tests/dse_parallel.rs (unmappable_and_pruned_pairs_are_
-    // distinguished), alongside the determinism contract.
+    // distinguished), alongside the determinism contract; the
+    // pre-warmed / any-thread-count determinism of shared-store sweeps
+    // is pinned there too.
 }

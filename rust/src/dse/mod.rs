@@ -23,7 +23,16 @@
 //!   `Network::single`). Each shard owns one
 //!   [`crate::engine::analysis::Analyzer`], so a zoo network's repeated
 //!   layer shapes are analyzed once per (variant, PEs) pair; the
-//!   hit/miss split surfaces in [`engine::SweepStats::summary`].
+//!   mem-hit/disk-hit/miss split surfaces in
+//!   [`engine::SweepStats::summary`].
+//! * **Shared cache** — hand [`engine::SweepConfig::cache`] a
+//!   [`crate::cache::SharedStore`] and every shard's Analyzer fronts
+//!   the same concurrent map (keyed on structural dataflow
+//!   fingerprints): pre-warmed entries — from an earlier sweep or a
+//!   `--cache-file` loaded from disk — replay across the pool, and the
+//!   sweep's results land in the store for `SharedStore::flush` to
+//!   persist. Results stay bit-identical for any thread count and any
+//!   pre-warmed state (values are pure functions of their keys).
 //! * **Sharding** — the (variant, PEs) outer product is split into
 //!   contiguous index ranges pulled from a bounded
 //!   [`crate::util::queue::JobQueue`] (the coordinator's proven
@@ -51,6 +60,9 @@
 //!   balancing only; never affects results.
 //! * `keep_all_points` — also return every design point (needed by the
 //!   Fig 13 scatter plots and small-space tests; costs O(space) memory).
+//! * `cache` — optional shared [`crate::cache::SharedStore`]; `None`
+//!   keeps the PR 2 per-shard private caches (cleared per pair, memory
+//!   bounded for paper-scale spaces).
 //!
 //! # Reproducing Fig 13
 //!

@@ -6,26 +6,33 @@
 //!
 //! # The Analyzer pipeline
 //!
-//! All analysis is a pure function of `(ShapeKey, dataflow, HwConfig)`
-//! — layer *names* never reach a formula. [`Analyzer`] exploits that:
-//! it owns the recursion's scratch memo (reused across calls instead of
-//! reallocated) and a `(ShapeKey, dataflow name, hardware)`-keyed
-//! [`LayerStats`] cache, so whole-network analysis evaluates each
-//! distinct layer shape once and replays the rest (ResNet-50's repeated
-//! bottlenecks, VGG's conv stacks). [`analyze_network`] /
+//! All analysis is a pure function of `(ShapeKey, dataflow structure,
+//! HwConfig)` — layer and dataflow *names* never reach a formula.
+//! [`Analyzer`] exploits that: it owns the recursion's scratch memo
+//! (reused across calls instead of reallocated) and fronts a
+//! [`SharedStore`] keyed on [`crate::cache::CacheKey`] (canonical
+//! shape x structural [`DataflowFingerprint`](crate::cache::DataflowFingerprint)
+//! x hardware), so whole-network analysis evaluates each distinct
+//! layer shape once and replays the rest (ResNet-50's repeated
+//! bottlenecks, VGG's conv stacks). The store is private per Analyzer
+//! by default; `Analyzer::with_store` shares one across sweep shards /
+//! coordinator workers and is what `--cache-file` warm starts flow
+//! through (see [`crate::cache`]). [`analyze_network`] /
 //! [`adaptive_network`] and the DSE case-table builder all route
 //! through it; cached and uncached results are bit-identical (pinned by
 //! tests here and in `rust/tests/dse_parallel.rs`).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::cache::{CacheKey, CacheValue, SharedStore};
 use crate::hw::config::{HwConfig, ReductionSupport};
 use crate::hw::energy::EnergyModel;
 use crate::ir::dataflow::{Dataflow, ResolvedDataflow, ResolvedLevel};
 use crate::ir::dims::DimMap;
-use crate::model::layer::{Layer, ShapeKey};
+use crate::model::layer::Layer;
 use crate::model::network::Network;
 use crate::model::tensor::{couplings, tensor_elements, TensorKind, ALL_TENSORS};
 
@@ -126,74 +133,78 @@ struct SubOut {
     peak_bw_need: f64,
 }
 
-/// Cache identity of a hardware config (f64 fields via `to_bits` so the
-/// tuple stays `Eq + Hash`).
-type HwKey = ([u64; 6], bool, u8, u64);
-
-fn hw_key(hw: &HwConfig) -> HwKey {
-    // Exhaustive destructuring (no `..` rest pattern): adding a field
-    // to HwConfig must fail to compile here, not silently alias cache
-    // keys and serve stale stats.
-    let &HwConfig {
-        num_pes,
-        l1_size,
-        l2_size,
-        noc_bandwidth,
-        noc_latency,
-        multicast,
-        reduction,
-        pe_throughput,
-        clock_ghz,
-    } = hw;
-    (
-        [num_pes, l1_size, l2_size, noc_bandwidth, noc_latency, pe_throughput],
-        multicast,
-        match reduction {
-            ReductionSupport::None => 0,
-            ReductionSupport::Tree => 1,
-            ReductionSupport::Forward => 2,
-        },
-        clock_ghz.to_bits(),
-    )
-}
-
-/// The memoization key: canonical layer shape x dataflow identity x
-/// hardware. The dataflow's *name* is its identity — every built-in
-/// style and DSE mapping variant encodes its parameters in the name
-/// (`KC-P(ct=16)`); hand-built dataflows sharing a name with different
-/// directives would alias and must be named apart.
-type AnalysisKey = (ShapeKey, String, HwKey);
-
-/// A cached analysis failure: the name of the layer the diagnosis was
-/// produced on (error chains embed layer names) plus the rendered
-/// chain, so replays for same-shape siblings can attribute it honestly.
-type CachedFailure = (String, String);
-
 /// A reusable analysis context: owns the recursive engine's scratch
-/// memo (allocated once, cleared per call) and a shape-keyed
-/// [`LayerStats`] cache, with hit/miss counters.
+/// memo (allocated once, cleared per call) and fronts a [`SharedStore`]
+/// keyed on `(ShapeKey, DataflowFingerprint, HwKey)`, with per-Analyzer
+/// hit/miss/disk-hit counters.
+///
+/// The memoization key carries the dataflow's *structural fingerprint*,
+/// never its name: hand-built dataflows that share a name but differ in
+/// directives get distinct entries, and structurally identical
+/// dataflows under different names share one (the replayed stats are
+/// re-labeled with the caller's names).
 ///
 /// Failed analyses are cached too (as the rendered error chain), so a
 /// shape that cannot map under a dataflow is diagnosed once per
-/// network, not once per layer; replayed failures name the layer they
-/// were diagnosed on.
-#[derive(Debug, Default)]
+/// network, not once per layer; replayed failures name the layer (and,
+/// when it differs, the dataflow) they were diagnosed on.
+#[derive(Debug)]
 pub struct Analyzer {
-    stats: HashMap<AnalysisKey, Result<LayerStats, CachedFailure>>,
-    scratch: HashMap<CacheKey, SubOut>,
+    store: Arc<SharedStore>,
+    /// Whether `store` is shared with other consumers — a shared store
+    /// must never be cleared from one shard under the others.
+    shared: bool,
+    scratch: HashMap<ScratchKey, SubOut>,
     hits: u64,
+    disk_hits: u64,
     misses: u64,
 }
 
+impl Default for Analyzer {
+    fn default() -> Analyzer {
+        Analyzer::new()
+    }
+}
+
 impl Analyzer {
+    /// An Analyzer over its own private store (the PR 2 behavior).
     pub fn new() -> Analyzer {
-        Analyzer::default()
+        Analyzer {
+            store: Arc::new(SharedStore::new()),
+            shared: false,
+            scratch: HashMap::new(),
+            hits: 0,
+            disk_hits: 0,
+            misses: 0,
+        }
     }
 
-    /// Analyze one (layer, dataflow, hardware) triple, memoized on the
-    /// layer's [`ShapeKey`]. Cache hits are bit-identical to a fresh
-    /// analysis; only the reported `layer` name is rewritten to the
-    /// caller's layer.
+    /// An Analyzer over a caller-provided [`SharedStore`] — the shape
+    /// sweep shards, coordinator prep workers, and `--cache-file` warm
+    /// starts use to pool results. [`Analyzer::clear_cache`] becomes a
+    /// no-op (the store outlives this Analyzer by design); counters
+    /// stay per-Analyzer.
+    pub fn with_store(store: Arc<SharedStore>) -> Analyzer {
+        Analyzer {
+            store,
+            shared: true,
+            scratch: HashMap::new(),
+            hits: 0,
+            disk_hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The store this Analyzer reads and populates.
+    pub fn store(&self) -> &Arc<SharedStore> {
+        &self.store
+    }
+
+    /// Analyze one (layer, dataflow, hardware) triple, memoized on
+    /// (canonical shape, structural dataflow fingerprint, hardware).
+    /// Cache hits are bit-identical to a fresh analysis; only the
+    /// reported `layer` and `dataflow` names are rewritten to the
+    /// caller's.
     pub fn analyze(&mut self, layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
         self.analyze_inner(layer, dataflow, hw, None)
     }
@@ -221,21 +232,35 @@ impl Analyzer {
         hw: &HwConfig,
         resolved: Option<&ResolvedDataflow>,
     ) -> Result<LayerStats> {
-        let key = (layer.shape_key(), dataflow.name.clone(), hw_key(hw));
-        if let Some(cached) = self.stats.get(&key) {
+        let key = CacheKey::new(layer.shape_key(), dataflow.fingerprint(), hw);
+        if let Some(hit) = self.store.get(&key) {
             self.hits += 1;
-            return match cached {
-                Ok(s) => {
-                    let mut s = s.clone();
+            if hit.from_disk {
+                self.disk_hits += 1;
+            }
+            return match hit.value {
+                CacheValue::Stats(mut s) => {
+                    // Names are diagnostics, not identity: re-label the
+                    // replay with the caller's layer and dataflow.
                     s.layer = layer.name.clone();
+                    s.dataflow = dataflow.name.clone();
                     Ok(s)
                 }
-                // Error chains embed the name of the layer they were
-                // produced on; when replaying for a different layer,
+                // Error chains embed the names they were produced
+                // under; when replaying for a different layer (or a
+                // structurally identical dataflow with another name),
                 // say so instead of misattributing the message.
-                Err((diagnosed_on, msg)) if *diagnosed_on == layer.name => Err(anyhow!("{msg}")),
-                Err((diagnosed_on, msg)) => {
-                    Err(anyhow!("{msg} (diagnosed on same-shape layer '{diagnosed_on}')"))
+                CacheValue::Failure { layer: diagnosed_on, dataflow: diagnosed_df, message } => {
+                    let mut msg = message;
+                    if diagnosed_on != layer.name {
+                        msg = format!("{msg} (diagnosed on same-shape layer '{diagnosed_on}')");
+                    }
+                    if diagnosed_df != dataflow.name {
+                        msg = format!(
+                            "{msg} (under structurally identical dataflow '{diagnosed_df}')"
+                        );
+                    }
+                    Err(anyhow!("{msg}"))
                 }
             };
         }
@@ -245,8 +270,15 @@ impl Analyzer {
             None => self.compute(layer, dataflow, hw),
         };
         match &out {
-            Ok(s) => self.stats.insert(key, Ok(s.clone())),
-            Err(e) => self.stats.insert(key, Err((layer.name.clone(), format!("{e:#}")))),
+            Ok(s) => self.store.insert(key, CacheValue::Stats(s.clone())),
+            Err(e) => self.store.insert(
+                key,
+                CacheValue::Failure {
+                    layer: layer.name.clone(),
+                    dataflow: dataflow.name.clone(),
+                    message: format!("{e:#}"),
+                },
+            ),
         };
         out
     }
@@ -255,9 +287,15 @@ impl Analyzer {
         hw.validate()?;
         layer.validate()?;
         let resolved = dataflow.resolve(layer, hw.num_pes)?;
-        self.compute_resolved(layer, &resolved, hw)
+        // Straight to the core — compute_resolved would validate a
+        // second time, and misses are the sweep's hot path.
+        self.scratch.clear();
+        analyze_resolved_with(layer, &resolved, hw, &mut self.scratch)
     }
 
+    /// Entry for callers that resolved the dataflow themselves (the
+    /// case-table builder): validation has not run yet on this path,
+    /// so it happens here.
     fn compute_resolved(
         &mut self,
         layer: &Layer,
@@ -270,7 +308,8 @@ impl Analyzer {
         analyze_resolved_with(layer, resolved, hw, &mut self.scratch)
     }
 
-    /// Layer-cache hits since construction (or [`Analyzer::reset`]).
+    /// Layer-cache hits by this Analyzer since construction (or
+    /// [`Analyzer::reset`]).
     pub fn cache_hits(&self) -> u64 {
         self.hits
     }
@@ -280,25 +319,39 @@ impl Analyzer {
         self.misses
     }
 
-    /// Distinct (shape, dataflow, hardware) entries currently cached.
+    /// The subset of [`Analyzer::cache_hits`] served by entries loaded
+    /// from a cache file (warm starts).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits
+    }
+
+    /// Distinct (shape, dataflow, hardware) entries in the store.
     pub fn cache_len(&self) -> usize {
-        self.stats.len()
+        self.store.len()
     }
 
     /// Drop cached per-layer results but keep the hit/miss counters and
-    /// the scratch allocation. DSE shards call this between (variant,
-    /// PEs) pairs: the cache key includes the dataflow and PE count, so
-    /// entries from a finished pair can never hit again — clearing
-    /// bounds memory to O(unique shapes) instead of O(pairs x shapes).
+    /// the scratch allocation. DSE shards with *private* caches call
+    /// this between (variant, PEs) pairs: the cache key includes the
+    /// dataflow and PE count, so entries from a finished pair can never
+    /// hit again — clearing bounds memory to O(unique shapes) instead
+    /// of O(pairs x shapes). A no-op on a shared store, whose entries
+    /// belong to every consumer (and to the persistence layer).
     pub fn clear_cache(&mut self) {
-        self.stats.clear();
+        if !self.shared {
+            self.store.clear();
+        }
     }
 
-    /// Drop all cached results and zero the counters.
+    /// Drop all cached results (private stores only) and zero the
+    /// counters.
     pub fn reset(&mut self) {
-        self.stats.clear();
+        if !self.shared {
+            self.store.clear();
+        }
         self.scratch.clear();
         self.hits = 0;
+        self.disk_hits = 0;
         self.misses = 0;
     }
 }
@@ -319,7 +372,7 @@ pub fn analyze_resolved(
     resolved: &ResolvedDataflow,
     hw: &HwConfig,
 ) -> Result<LayerStats> {
-    let mut cache: HashMap<CacheKey, SubOut> = HashMap::new();
+    let mut cache: HashMap<ScratchKey, SubOut> = HashMap::new();
     analyze_resolved_with(layer, resolved, hw, &mut cache)
 }
 
@@ -329,7 +382,7 @@ fn analyze_resolved_with(
     layer: &Layer,
     resolved: &ResolvedDataflow,
     hw: &HwConfig,
-    cache: &mut HashMap<CacheKey, SubOut>,
+    cache: &mut HashMap<ScratchKey, SubOut>,
 ) -> Result<LayerStats> {
     let top_tile = resolved.levels[0].parent_tile;
     let out = analyze_levels(&resolved.levels, &top_tile, [1.0, 1.0, 1.0], layer, hw, 0, 1, cache)?;
@@ -373,7 +426,10 @@ fn analyze_resolved_with(
     })
 }
 
-type CacheKey = (usize, [u64; 7], [u64; 3]);
+/// Key of the recursion's per-call scratch memo (distinct from the
+/// cross-call [`crate::cache::CacheKey`]): (remaining levels, parent
+/// tile, entry fresh fractions).
+type ScratchKey = (usize, [u64; 7], [u64; 3]);
 
 /// Recursive core: analyze `levels[0]` over `parent_tile`; deeper levels
 /// provide the per-step compute delay.
@@ -392,7 +448,7 @@ fn analyze_levels(
     hw: &HwConfig,
     depth: usize,
     outer_units: u64,
-    cache: &mut HashMap<CacheKey, SubOut>,
+    cache: &mut HashMap<ScratchKey, SubOut>,
 ) -> Result<SubOut> {
     let key = (
         levels.len(),
@@ -871,6 +927,46 @@ mod tests {
         assert_eq!(sb.layer, "second", "hit must carry the caller's layer name");
         let renamed = LayerStats { layer: sa.layer.clone(), ..sb.clone() };
         assert_eq!(renamed, sa, "numbers must match exactly");
+    }
+
+    #[test]
+    fn same_name_different_structure_dataflows_do_not_alias() {
+        // The regression the structural fingerprint exists for: two
+        // hand-built dataflows sharing one name but differing in
+        // directives must get distinct cache entries and distinct
+        // stats — under the old name-keyed cache the second analysis
+        // would replay the first's numbers.
+        let layer = vgg16::conv13();
+        let h = hw();
+        let mut kc = styles::kc_p();
+        let mut xp = styles::x_p();
+        kc.name = "dup".into();
+        xp.name = "dup".into();
+        let mut analyzer = Analyzer::new();
+        let sa = analyzer.analyze(&layer, &kc, &h).unwrap();
+        let sb = analyzer.analyze(&layer, &xp, &h).unwrap();
+        assert_eq!((analyzer.cache_misses(), analyzer.cache_hits()), (2, 0));
+        assert_eq!(analyzer.cache_len(), 2, "distinct structures must occupy distinct entries");
+        assert_eq!(sa, analyze_layer(&layer, &kc, &h).unwrap(), "first structure: fresh numbers");
+        assert_eq!(sb, analyze_layer(&layer, &xp, &h).unwrap(), "second structure: fresh numbers");
+        assert_ne!(sa, sb, "the two structures really do behave differently");
+    }
+
+    #[test]
+    fn different_name_same_structure_dataflows_share_one_entry() {
+        let layer = vgg16::conv13();
+        let h = hw();
+        let kc = styles::kc_p();
+        let mut alias = kc.clone();
+        alias.name = "kc-p-by-another-name".into();
+        let mut analyzer = Analyzer::new();
+        let sa = analyzer.analyze(&layer, &kc, &h).unwrap();
+        let sb = analyzer.analyze(&layer, &alias, &h).unwrap();
+        assert_eq!((analyzer.cache_misses(), analyzer.cache_hits()), (1, 1));
+        assert_eq!(analyzer.cache_len(), 1, "identical structures must share one entry");
+        assert_eq!(sb.dataflow, "kc-p-by-another-name", "hit must carry the caller's dataflow name");
+        let relabeled = LayerStats { dataflow: sa.dataflow.clone(), ..sb.clone() };
+        assert_eq!(relabeled, sa, "numbers must match exactly");
     }
 
     #[test]

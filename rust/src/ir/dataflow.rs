@@ -102,6 +102,15 @@ impl Dataflow {
         Dataflow { name: name.to_string(), directives }
     }
 
+    /// Structural identity of this dataflow: a stable hash over the
+    /// ordered directive list, ignoring the name. This — not the name —
+    /// is what every analysis cache keys on, so hand-built dataflows
+    /// that share a name but differ in structure cannot alias (see
+    /// `cache::key`).
+    pub fn fingerprint(&self) -> crate::cache::DataflowFingerprint {
+        crate::cache::DataflowFingerprint::of(self)
+    }
+
     /// Split the directive list into cluster levels.
     pub fn levels(&self) -> Result<Vec<LevelSpec>> {
         let mut levels = Vec::new();

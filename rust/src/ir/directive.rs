@@ -11,6 +11,7 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 use super::dims::Dim;
+use crate::util::stablehash::Fnv128;
 
 /// A map size/offset that is either a literal or a reference to a layer
 /// dimension's full size (`Sz(R)`), optionally with an additive adjustment
@@ -35,6 +36,24 @@ impl Extent {
 
     pub fn sz_plus(dim: Dim, adjust: i64) -> Extent {
         Extent::SzOf { dim, adjust }
+    }
+
+    /// Feed this extent's structure into a dataflow fingerprint hash
+    /// (see `cache::key`). Tag-prefixed and fixed-width per variant, so
+    /// `Lit(3)` and `Sz(R)` hash apart even when they would resolve to
+    /// the same count on some layer — they adapt differently elsewhere.
+    pub fn fingerprint_into(&self, h: &mut Fnv128) {
+        match *self {
+            Extent::Lit(v) => {
+                h.write_u8(0);
+                h.write_u64(v);
+            }
+            Extent::SzOf { dim, adjust } => {
+                h.write_u8(1);
+                h.write_u8(dim.index() as u8);
+                h.write_i64(adjust);
+            }
+        }
     }
 
     /// Resolve against a layer-dimension lookup.
@@ -88,6 +107,31 @@ impl Directive {
 
     pub fn cluster(size: Extent) -> Directive {
         Directive::Cluster { size }
+    }
+
+    /// Feed this directive's structure into a dataflow fingerprint
+    /// hash: kind tag, mapped dim, then the size/offset extents
+    /// (cluster directives contribute their size, so cluster structure
+    /// is part of the fingerprint).
+    pub fn fingerprint_into(&self, h: &mut Fnv128) {
+        match self {
+            Directive::SpatialMap { size, offset, dim } => {
+                h.write_u8(1);
+                h.write_u8(dim.index() as u8);
+                size.fingerprint_into(h);
+                offset.fingerprint_into(h);
+            }
+            Directive::TemporalMap { size, offset, dim } => {
+                h.write_u8(2);
+                h.write_u8(dim.index() as u8);
+                size.fingerprint_into(h);
+                offset.fingerprint_into(h);
+            }
+            Directive::Cluster { size } => {
+                h.write_u8(3);
+                size.fingerprint_into(h);
+            }
+        }
     }
 
     /// The mapped dimension, if this is a map directive.

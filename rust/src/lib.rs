@@ -18,6 +18,11 @@
 //!   area/power regression models used by the DSE.
 //! * [`sim`] — a cycle-level schedule simulator used as the RTL-substitute
 //!   ground truth for Fig 9 style validation.
+//! * [`cache`] — the analysis cache subsystem: structural
+//!   [`DataflowFingerprint`] identity (no name aliasing), the
+//!   [`SharedStore`] concurrent map sweeps and coordinator workers
+//!   share, and append-only on-disk persistence for `--cache-file`
+//!   warm starts.
 //! * [`dse`] — the hardware design-space exploration engine: a sharded
 //!   parallel sweep with §5.2 invalid-design skipping and streaming
 //!   Pareto accumulation (see the module docs for the architecture),
@@ -34,6 +39,7 @@
 //!   harness, and a deterministic PRNG (offline image substitutes for
 //!   clap/proptest/criterion).
 
+pub mod cache;
 pub mod coordinator;
 pub mod dse;
 pub mod engine;
@@ -45,6 +51,7 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
+pub use cache::{DataflowFingerprint, SharedStore};
 pub use engine::analysis::{analyze_layer, analyze_network, Analyzer, LayerStats, NetworkStats};
 pub use hw::config::HwConfig;
 pub use ir::dataflow::Dataflow;

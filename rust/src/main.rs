@@ -10,9 +10,12 @@
 //! maestro zoo
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Context, Result};
 
-use maestro::coordinator::{run_jobs, Backend, DseJob};
+use maestro::cache::SharedStore;
+use maestro::coordinator::{run_jobs_with_store, Backend, DseJob};
 use maestro::dse::engine::{sweep, DesignPoint, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
@@ -45,7 +48,41 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "workers", takes_value: true, help: "coordinator workers for --pjrt (default 4); without --pjrt, caps sweep threads when --threads is absent" },
         FlagSpec { name: "max-steps", takes_value: true, help: "simulator step budget (default 200M)" },
         FlagSpec { name: "csv", takes_value: false, help: "emit CSV instead of aligned tables" },
+        FlagSpec {
+            name: "cache-file",
+            takes_value: true,
+            help: "network/dse: warm-start analysis cache file (loaded if present, updated on exit)",
+        },
     ]
+}
+
+/// Load `--cache-file` (when given) into a fresh [`SharedStore`].
+/// Returns the store and the path to flush back to. Corrupt or stale
+/// files warn and start cold — never fail the run.
+fn open_cache(args: &Args) -> (Arc<SharedStore>, Option<String>) {
+    let store = Arc::new(SharedStore::new());
+    let path = args.opt("cache-file", "");
+    if path.is_empty() {
+        return (store, None);
+    }
+    let report = store.load(std::path::Path::new(&path));
+    if let Some(w) = &report.warning {
+        eprintln!("cache-file: {w}");
+    }
+    println!("cache-file: loaded {} cached analyses from {path}", report.loaded);
+    (store, Some(path))
+}
+
+/// Flush the store back to its `--cache-file` (if one was given).
+fn close_cache(store: &SharedStore, path: &Option<String>) -> Result<()> {
+    if let Some(path) = path {
+        let report = store.flush(std::path::Path::new(path))?;
+        println!(
+            "cache-file: wrote {} new record(s) ({} total) to {path}",
+            report.written, report.total
+        );
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -95,8 +132,11 @@ fn main() -> Result<()> {
             };
             let dfname = args.opt("dataflow", "adaptive");
             // One Analyzer for the whole command: each unique layer
-            // shape is analyzed once per (dataflow, hardware).
-            let mut analyzer = Analyzer::new();
+            // shape is analyzed once per (dataflow, hardware). With
+            // --cache-file it fronts a persistent store, so repeated
+            // invocations start warm (disk hits below).
+            let (store, cache_path) = open_cache(&args);
+            let mut analyzer = Analyzer::with_store(Arc::clone(&store));
             let stats = if dfname == "adaptive" {
                 adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?
             } else {
@@ -126,11 +166,13 @@ fn main() -> Result<()> {
                 }
             }
             println!(
-                "analyzer cache: {} hits / {} misses across {} layers",
+                "analyzer cache: {} hits ({} from disk) / {} misses across {} layers",
                 analyzer.cache_hits(),
+                analyzer.disk_hits(),
                 analyzer.cache_misses(),
                 net.layers.len()
             );
+            close_cache(&store, &cache_path)?;
         }
         "validate" => {
             let (layer, _) = pick_layer(&args)?;
@@ -174,6 +216,7 @@ fn main() -> Result<()> {
                 shapes,
                 macs / 1e9
             );
+            let (store, cache_path) = open_cache(&args);
             if args.has("pjrt") {
                 // The PJRT backend goes through the coordinator (the
                 // evaluator thread owns the executable). Jobs: one per
@@ -202,7 +245,8 @@ fn main() -> Result<()> {
                     }
                 }
                 let t0 = std::time::Instant::now();
-                let (results, metrics) = run_jobs(jobs, backend, workers)?;
+                let cache = cache_path.as_ref().map(|_| Arc::clone(&store));
+                let (results, metrics) = run_jobs_with_store(jobs, backend, workers, cache)?;
                 let wall = t0.elapsed().as_secs_f64();
                 let macs = results.iter().map(|r| r.macs).fold(0.0, f64::max);
                 let mut points = Vec::new();
@@ -217,9 +261,28 @@ fn main() -> Result<()> {
             } else {
                 // Default path: the sharded scalar sweep engine.
                 // --workers (the coordinator-era spelling) still caps
-                // parallelism when --threads is not given.
+                // parallelism when --threads is not given. With
+                // --cache-file the shards pool one persistent store
+                // (disk hits surface in the summary's cache= field).
                 let threads = args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize;
-                let cfg = SweepConfig { threads, keep_all_points: true, ..SweepConfig::default() };
+                let cache = cache_path.as_ref().map(|_| Arc::clone(&store));
+                // The shared store never evicts (that is what makes the
+                // warm start work), so a cached sweep holds one entry
+                // per (variant, PEs) pair per unique shape — warn when
+                // that departs meaningfully from the memory-bounded
+                // default (ROADMAP tracks eviction/compaction).
+                if cache.is_some() {
+                    let pairs = space.pairs();
+                    if pairs > 10_000 {
+                        eprintln!(
+                            "cache-file: warning — this space has {pairs} (variant, PEs) pairs; the shared \
+                             store retains ~{} entries (one per pair per unique shape) for the whole sweep. \
+                             Drop --cache-file for a memory-bounded sweep of large spaces.",
+                            pairs * shapes
+                        );
+                    }
+                }
+                let cfg = SweepConfig { threads, keep_all_points: true, cache, ..SweepConfig::default() };
                 let outcome = sweep(&workload, &space, space.noc_latency, &cfg)?;
                 println!("{}", outcome.stats.summary());
                 let title = format!("{family} design space ({})", workload.name);
@@ -230,6 +293,7 @@ fn main() -> Result<()> {
                 print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
                 print_optima(&outcome.points, macs);
             }
+            close_cache(&store, &cache_path)?;
         }
         "table1" => {
             use maestro::engine::reuse::{table1, Opportunity};

@@ -31,6 +31,36 @@ pub enum Op {
 }
 
 impl Op {
+    /// Stable numeric tag for cache-file serialization. Append-only:
+    /// never renumber existing variants, only add new ones.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Op::Conv2d => 0,
+            Op::PointwiseConv => 1,
+            Op::DepthwiseConv => 2,
+            Op::FullyConnected => 3,
+            Op::TransposedConv => 4,
+            Op::Pooling => 5,
+            Op::ResidualAdd => 6,
+            Op::LstmGate => 7,
+        }
+    }
+
+    /// Inverse of [`Op::tag`]; `None` for tags from a future build.
+    pub fn from_tag(tag: u8) -> Option<Op> {
+        Some(match tag {
+            0 => Op::Conv2d,
+            1 => Op::PointwiseConv,
+            2 => Op::DepthwiseConv,
+            3 => Op::FullyConnected,
+            4 => Op::TransposedConv,
+            5 => Op::Pooling,
+            6 => Op::ResidualAdd,
+            7 => Op::LstmGate,
+            _ => return None,
+        })
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Op::Conv2d => "conv2d",
@@ -112,6 +142,23 @@ pub struct ShapeKey {
     pub s: u64,
     pub stride: u64,
     sparsity_bits: u64,
+}
+
+impl ShapeKey {
+    /// The sparsity discount as raw bits (kept private as a field so
+    /// only [`Layer::shape_key`] computes it; exposed read-only for the
+    /// cache subsystem's stable serialization).
+    pub fn sparsity_bits(&self) -> u64 {
+        self.sparsity_bits
+    }
+
+    /// Rebuild a key from persisted raw parts (`dims` in canonical
+    /// N, K, C, Y, X, R, S order). Cache deserialization only — new
+    /// keys come from [`Layer::shape_key`].
+    pub fn from_raw(op: Op, dims: [u64; 7], stride: u64, sparsity_bits: u64) -> ShapeKey {
+        let [n, k, c, y, x, r, s] = dims;
+        ShapeKey { op, n, k, c, y, x, r, s, stride, sparsity_bits }
+    }
 }
 
 /// One DNN layer with concrete dimensions. `Y`/`X` are *input* activation

@@ -10,4 +10,5 @@ pub mod cli;
 pub mod propcheck;
 pub mod queue;
 pub mod rng;
+pub mod stablehash;
 pub mod table;

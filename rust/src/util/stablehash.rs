@@ -1,0 +1,122 @@
+//! Process-stable hashing (FNV-1a in 64- and 128-bit widths).
+//!
+//! The cache subsystem keys dataflows by a structural fingerprint and
+//! frames its on-disk records with a checksum; both must hash to the
+//! same value in every process that ever reads the file, which rules
+//! out `std::collections::hash_map::DefaultHasher` (SipHash with
+//! per-process random keys). FNV-1a is tiny, dependency-free, and its
+//! constants are fixed by specification — exactly what a persistent
+//! cache key needs. It is *not* collision-resistant against adversarial
+//! input; cache keys here are derived from trusted in-process
+//! structures, and the 128-bit width makes accidental collisions
+//! negligible.
+
+/// 64-bit FNV-1a (cache-file record checksums; in-memory shard
+/// selection deliberately uses std's hasher instead — see
+/// `SharedStore::shard_of`).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x00000100000001b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: Fnv64::OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(Fnv64::PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+
+    /// One-shot convenience.
+    pub fn hash(bytes: &[u8]) -> u64 {
+        let mut h = Fnv64::new();
+        h.write(bytes);
+        h.finish()
+    }
+}
+
+/// 128-bit FNV-1a (structural dataflow fingerprints).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+
+    pub fn new() -> Fnv128 {
+        Fnv128 { state: Fnv128::OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(Fnv128::PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(Fnv64::hash(b""), 0xcbf29ce484222325);
+        assert_eq!(Fnv64::hash(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(Fnv64::hash(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv128_distinguishes_order_and_content() {
+        let mut a = Fnv128::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv128::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish(), "order must matter");
+        let mut c = Fnv128::new();
+        c.write_u64(1);
+        c.write_u64(2);
+        assert_eq!(a.finish(), c.finish(), "same input, same hash");
+        assert_ne!(Fnv128::new().finish(), a.finish());
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let mut h = Fnv64::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), Fnv64::hash(b"foobar"));
+    }
+}

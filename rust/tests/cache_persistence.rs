@@ -1,0 +1,221 @@
+//! The cache subsystem's persistence contract: warm starts from disk
+//! replay cold analyses bit for bit, and no cache file — truncated,
+//! garbage, stale, or half-written — can panic, fail a run, or poison
+//! results (the worst case is always "fewer entries + a warning").
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use maestro::cache::SharedStore;
+use maestro::engine::analysis::{analyze_network_with, Analyzer};
+use maestro::hw::config::HwConfig;
+use maestro::ir::styles;
+use maestro::model::zoo;
+
+/// A per-test temp path (tests share one process; the test name keys
+/// uniqueness, the pid keeps parallel CI checkouts apart).
+fn temp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("maestro_cache_{tag}_{}.mcache", std::process::id()))
+}
+
+fn hw() -> HwConfig {
+    HwConfig::fig10_default()
+}
+
+#[test]
+fn warm_start_replays_cold_network_analysis_bit_for_bit() {
+    // The acceptance scenario behind the CLI's --cache-file: analyze a
+    // zoo network cold, flush, reload in a "new process" (a fresh
+    // store), and the warm run must report disk hits and identical
+    // stats.
+    let path = temp_cache("warm_roundtrip");
+    fs::remove_file(&path).ok();
+    let net = zoo::by_name("resnet50").unwrap();
+    let df = styles::kc_p();
+
+    let cold_store = Arc::new(SharedStore::new());
+    let load = cold_store.load(&path);
+    assert_eq!((load.loaded, load.dropped_bytes), (0, 0), "missing file is a clean cold start");
+    assert!(load.warning.is_none());
+    let mut cold = Analyzer::with_store(Arc::clone(&cold_store));
+    let cold_stats = analyze_network_with(&mut cold, &net, &df, &hw(), true).unwrap();
+    assert_eq!(cold.disk_hits(), 0);
+    let flushed = cold_store.flush(&path).unwrap();
+    assert_eq!(flushed.written, cold_store.len());
+    assert!(flushed.written > 0);
+
+    let warm_store = Arc::new(SharedStore::new());
+    let report = warm_store.load(&path);
+    assert!(report.warning.is_none(), "{:?}", report.warning);
+    assert_eq!(report.loaded, cold_store.len());
+    let mut warm = Analyzer::with_store(Arc::clone(&warm_store));
+    let warm_stats = analyze_network_with(&mut warm, &net, &df, &hw(), true).unwrap();
+    assert!(warm.disk_hits() >= 1, "a warm run must report disk hits");
+    assert_eq!(warm.cache_misses(), 0, "everything replays from disk");
+    assert_eq!(warm_stats.per_layer, cold_stats.per_layer, "warm stats must be bit-identical");
+    assert_eq!(warm_stats.skipped, cold_stats.skipped);
+    assert_eq!(warm_stats.runtime, cold_stats.runtime);
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn flush_appends_and_reload_unions() {
+    // Second session: load, analyze something new, flush to the same
+    // path — the file must grow by exactly the new records and a third
+    // load must see the union.
+    let path = temp_cache("append");
+    fs::remove_file(&path).ok();
+
+    let s1 = Arc::new(SharedStore::new());
+    let mut a1 = Analyzer::with_store(Arc::clone(&s1));
+    let vgg = zoo::by_name("vgg16-conv").unwrap();
+    analyze_network_with(&mut a1, &vgg, &styles::kc_p(), &hw(), true).unwrap();
+    s1.flush(&path).unwrap();
+    let first_len = fs::metadata(&path).unwrap().len();
+    let first_entries = s1.len();
+
+    let s2 = Arc::new(SharedStore::new());
+    assert_eq!(s2.load(&path).loaded, first_entries);
+    let mut a2 = Analyzer::with_store(Arc::clone(&s2));
+    analyze_network_with(&mut a2, &vgg, &styles::x_p(), &hw(), true).unwrap();
+    let added = s2.len() - first_entries;
+    assert!(added > 0, "a second dataflow must add entries");
+    let report = s2.flush(&path).unwrap();
+    assert_eq!(report.written, added, "append must write only the new records");
+    assert!(fs::metadata(&path).unwrap().len() > first_len);
+
+    let s3 = SharedStore::new();
+    assert_eq!(s3.load(&path).loaded, s2.len(), "reload sees the union");
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn loading_two_files_then_flushing_writes_the_union() {
+    // load(fileA); load(fileB); flush(fileB): fileA's entries must land
+    // in fileB. The `persisted` flags are relative to the file the
+    // store is bound to — "persisted somewhere" must not be conflated
+    // with "persisted here", or the append-mode flush silently omits
+    // the other file's records forever.
+    let pa = temp_cache("merge_a");
+    let pb = temp_cache("merge_b");
+    fs::remove_file(&pa).ok();
+    fs::remove_file(&pb).ok();
+    let net = zoo::by_name("vgg16-conv").unwrap();
+
+    let sa = Arc::new(SharedStore::new());
+    analyze_network_with(&mut Analyzer::with_store(Arc::clone(&sa)), &net, &styles::kc_p(), &hw(), true)
+        .unwrap();
+    sa.flush(&pa).unwrap();
+    let sb = Arc::new(SharedStore::new());
+    analyze_network_with(&mut Analyzer::with_store(Arc::clone(&sb)), &net, &styles::x_p(), &hw(), true)
+        .unwrap();
+    sb.flush(&pb).unwrap();
+
+    let merged = Arc::new(SharedStore::new());
+    let la = merged.load(&pa);
+    let lb = merged.load(&pb);
+    assert_eq!(la.loaded + lb.loaded, sa.len() + sb.len(), "distinct fingerprints, disjoint keys");
+    merged.flush(&pb).unwrap();
+    let reread = SharedStore::new();
+    assert_eq!(reread.load(&pb).loaded, merged.len(), "fileB must now hold the union");
+    fs::remove_file(&pa).ok();
+    fs::remove_file(&pb).ok();
+}
+
+/// Build a valid cache file for corruption scenarios; returns (path,
+/// bytes, entry count).
+fn valid_file(tag: &str) -> (PathBuf, Vec<u8>, usize) {
+    let path = temp_cache(tag);
+    fs::remove_file(&path).ok();
+    let store = Arc::new(SharedStore::new());
+    let mut a = Analyzer::with_store(Arc::clone(&store));
+    let net = zoo::by_name("vgg16-conv").unwrap();
+    analyze_network_with(&mut a, &net, &styles::kc_p(), &hw(), true).unwrap();
+    store.flush(&path).unwrap();
+    let bytes = fs::read(&path).unwrap();
+    (path, bytes, store.len())
+}
+
+#[test]
+fn truncated_file_keeps_valid_prefix() {
+    let (path, bytes, entries) = valid_file("truncated");
+    // Chop mid-way through the last record.
+    fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+    let store = SharedStore::new();
+    let report = store.load(&path);
+    assert!(report.warning.is_some(), "truncation must warn");
+    assert_eq!(report.loaded, entries - 1, "all but the severed record survive");
+    assert!(report.dropped_bytes > 0);
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn garbage_tail_is_dropped_not_fatal() {
+    let (path, mut bytes, entries) = valid_file("garbage_tail");
+    bytes.extend_from_slice(b"\xde\xad\xbe\xef not a record at all \x00\x01\x02");
+    fs::write(&path, &bytes).unwrap();
+    let store = SharedStore::new();
+    let report = store.load(&path);
+    assert_eq!(report.loaded, entries, "every intact record loads");
+    assert!(report.warning.is_some() && report.dropped_bytes > 0);
+    // Flushing after such a load truncates the bad tail away.
+    let clean_len = fs::metadata(&path).unwrap().len() - report.dropped_bytes;
+    store.flush(&path).unwrap();
+    assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+    assert!(SharedStore::new().load(&path).warning.is_none(), "flush healed the file");
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn flipped_bit_invalidates_only_the_tail() {
+    let (path, mut bytes, entries) = valid_file("bitflip");
+    // Flip one bit early in the record region: everything from that
+    // record on is dropped, nothing panics, nothing poisons.
+    let idx = 20; // inside the first record (header is 16 bytes)
+    bytes[idx] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+    let store = SharedStore::new();
+    let report = store.load(&path);
+    assert!(report.loaded < entries);
+    assert!(report.warning.is_some());
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pure_garbage_and_empty_files_start_cold() {
+    let path = temp_cache("garbage");
+    fs::write(&path, b"this is not a cache file, it is a text file").unwrap();
+    let store = Arc::new(SharedStore::new());
+    let report = store.load(&path);
+    assert_eq!(report.loaded, 0);
+    assert!(report.warning.is_some());
+    // And the store still works + flushes a valid file over the junk.
+    let mut a = Analyzer::with_store(Arc::clone(&store));
+    let net = zoo::by_name("dcgan").unwrap();
+    analyze_network_with(&mut a, &net, &styles::kc_p(), &hw(), true).unwrap();
+    store.flush(&path).unwrap();
+    let reread = SharedStore::new().load(&path);
+    assert!(reread.warning.is_none(), "flush healed the file: {:?}", reread.warning);
+    assert_eq!(reread.loaded, store.len());
+    fs::remove_file(&path).ok();
+
+    let empty = temp_cache("empty");
+    fs::write(&empty, b"").unwrap();
+    let report = SharedStore::new().load(&empty);
+    assert_eq!(report.loaded, 0);
+    assert!(report.warning.is_none(), "an empty file is a clean cold start");
+    fs::remove_file(&empty).ok();
+}
+
+#[test]
+fn stale_version_starts_cold() {
+    let (path, mut bytes, _) = valid_file("stale");
+    // Pretend the analysis version moved on.
+    bytes[12] ^= 0xff;
+    fs::write(&path, &bytes).unwrap();
+    let report = SharedStore::new().load(&path);
+    assert_eq!(report.loaded, 0, "stale analyses must never replay");
+    assert!(report.warning.as_deref().unwrap_or("").contains("version"), "{:?}", report.warning);
+    fs::remove_file(&path).ok();
+}

@@ -4,11 +4,20 @@
 //! workloads — and the counters must match a plain serial
 //! reimplementation of the §5.2 pruned sweep.
 //!
-//! The Analyzer cache hit/miss counters are the one exception: they
-//! follow the shard partition (each shard owns its own cache, so a
-//! shape straddling two shards is a miss in both), carry no result
-//! data, and are zeroed by [`comparable`] before comparison.
+//! The Analyzer cache hit/miss/disk-hit counters are the one
+//! exception: they follow the shard partition (each private-cache
+//! shard owns its own map, so a shape straddling two shards is a miss
+//! in both) and, for shared stores, the pre-warmed state; they carry
+//! no result data and are zeroed by [`comparable`] before comparison.
+//!
+//! The shared-store contract extends this: a sweep pooling one
+//! [`SharedStore`] — empty, pre-warmed by an earlier sweep, or loaded
+//! from a cache file — must replay the serial private-cache reference
+//! bit for bit at any thread count.
 
+use std::sync::Arc;
+
+use maestro::cache::SharedStore;
 use maestro::dse::engine::{
     build_case_table, build_case_table_cached, eval_energy, eval_runtime, sweep, SweepConfig, SweepStats,
 };
@@ -20,9 +29,9 @@ use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 
 /// Strip the fields excluded from the determinism contract: wall clock
-/// and the partition-dependent cache counters.
+/// and the partition/warmth-dependent cache counters.
 fn comparable(stats: &SweepStats) -> SweepStats {
-    SweepStats { seconds: 0.0, cache_hits: 0, cache_misses: 0, ..stats.clone() }
+    SweepStats { seconds: 0.0, cache_hits: 0, cache_disk_hits: 0, cache_misses: 0, ..stats.clone() }
 }
 
 #[test]
@@ -33,7 +42,7 @@ fn sweep_is_deterministic_across_thread_counts() {
     let reference = sweep(&net, &space, 2, &cfg).unwrap();
     assert!(!reference.frontier.is_empty());
     for (threads, shard_size) in [(2usize, 0usize), (4, 1), (4, 3), (8, 2), (0, 0)] {
-        let cfg = SweepConfig { threads, shard_size, keep_all_points: true };
+        let cfg = SweepConfig { threads, shard_size, keep_all_points: true, ..SweepConfig::default() };
         let out = sweep(&net, &space, 2, &cfg).unwrap();
         assert_eq!(
             out.frontier, reference.frontier,
@@ -61,7 +70,7 @@ fn network_sweep_is_deterministic_across_thread_counts() {
     let reference = sweep(&net, &space, 2, &cfg).unwrap();
     assert!(reference.stats.cache_hits > 0, "repeated shapes must hit the shard caches");
     for (threads, shard_size) in [(2usize, 0usize), (4, 1), (0, 2)] {
-        let cfg = SweepConfig { threads, shard_size, keep_all_points: true };
+        let cfg = SweepConfig { threads, shard_size, keep_all_points: true, ..SweepConfig::default() };
         let out = sweep(&net, &space, 2, &cfg).unwrap();
         assert_eq!(out.frontier, reference.frontier, "threads={threads}, shard_size={shard_size}");
         assert_eq!(out.points, reference.points, "threads={threads}, shard_size={shard_size}");
@@ -168,6 +177,59 @@ fn warmed_analyzer_tables_replay_cold_tables() {
         }
     }
     assert!(analyzer.cache_hits() > 0);
+}
+
+#[test]
+fn shared_store_sweep_is_bit_identical_for_any_thread_count_and_warmth() {
+    // The acceptance contract of the cache subsystem: a sweep pooling
+    // one SharedStore must replay the serial private-cache reference
+    // exactly — for any thread count, and for ANY pre-warmed cache
+    // state (cold, warmed by a previous sweep, or loaded from disk).
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let reference = sweep(&net, &space, 2, &SweepConfig { keep_all_points: true, ..SweepConfig::serial() }).unwrap();
+
+    let store = Arc::new(SharedStore::new());
+    for (round, threads) in [(0usize, 1usize), (1, 2), (2, 4), (3, 0)].into_iter() {
+        // Round 0 runs cold; every later round re-sweeps an
+        // increasingly warm store.
+        let cfg = SweepConfig {
+            threads,
+            keep_all_points: true,
+            cache: Some(Arc::clone(&store)),
+            ..SweepConfig::default()
+        };
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(out.frontier, reference.frontier, "round {round}, threads={threads}");
+        assert_eq!(out.points, reference.points, "round {round}, threads={threads}");
+        assert_eq!(comparable(&out.stats), comparable(&reference.stats), "round {round}");
+        if round > 0 {
+            assert_eq!(out.stats.cache_misses, 0, "warm rounds must not re-analyze anything");
+        }
+    }
+
+    // Disk warmth: flush the store, load into a fresh one, and sweep
+    // again — still bit-identical, now with disk hits reported.
+    let path = std::env::temp_dir().join(format!("maestro_dse_warm_{}.mcache", std::process::id()));
+    store.flush(&path).unwrap();
+    let from_disk = Arc::new(SharedStore::new());
+    let report = from_disk.load(&path);
+    assert!(report.warning.is_none(), "{:?}", report.warning);
+    assert_eq!(report.loaded, store.len());
+    let cfg = SweepConfig {
+        threads: 4,
+        keep_all_points: true,
+        cache: Some(Arc::clone(&from_disk)),
+        ..SweepConfig::default()
+    };
+    let warm = sweep(&net, &space, 2, &cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(warm.frontier, reference.frontier);
+    assert_eq!(warm.points, reference.points);
+    assert_eq!(comparable(&warm.stats), comparable(&reference.stats));
+    assert_eq!(warm.stats.cache_misses, 0, "disk-warm sweep must not re-analyze");
+    assert!(warm.stats.cache_disk_hits > 0, "hits must be attributed to disk");
+    assert_eq!(warm.stats.cache_hits, warm.stats.cache_disk_hits, "every hit came from disk");
 }
 
 #[test]

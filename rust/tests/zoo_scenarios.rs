@@ -17,7 +17,16 @@ fn every_zoo_network_analyzes_or_diagnoses_under_every_style() {
     // across styles' hardware-identical runs.
     let mut analyzer = Analyzer::new();
     for name in zoo::ALL {
-        let net = zoo::by_name(name).unwrap();
+        let mut net = zoo::by_name(name).unwrap();
+        // Name-uniquify this copy: the MAC audit below matches analyzed
+        // layers back to network layers by name, and zoo networks are
+        // free to reuse a name across different shapes (which would
+        // let a skipped twin's MACs leak into the expected total).
+        // Shape memoization is name-independent, so the rename is
+        // invisible to the analysis itself.
+        for (i, layer) in net.layers.iter_mut().enumerate() {
+            layer.name = format!("{}#{i}", layer.name);
+        }
         let n_shapes = net.unique_shapes().len();
         assert!(n_shapes <= net.layers.len());
         for df in styles::all_styles() {
