@@ -15,6 +15,7 @@ use maestro::cache::SharedStore;
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
+use maestro::dse::strategy::{SearchBudget, SearchStrategy};
 use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 use maestro::report::experiments::{compare_optima, design_space_scatter, frontier_table};
@@ -61,6 +62,36 @@ fn main() -> Result<()> {
         println!(
             "energy-opt vs throughput-opt: power x{:.2}, SRAM x{:.1}, EDP -{:.0}%, throughput {:.0}%",
             c.power_ratio, c.sram_ratio, c.edp_improvement * 100.0, c.throughput_fraction * 100.0
+        );
+    }
+
+    // The same space through the budgeted search strategies: a seeded
+    // uniform sample at a quarter of the space, and Pareto-guided
+    // refinement (converges on its own; no budget needed). Both pool
+    // the same shared store, so repeated (shape, variant, PEs) triples
+    // replay instead of re-analyzing.
+    println!("\nsearch strategies on the same space (exhaustive above for reference):");
+    for (label, strategy, budget) in [
+        (
+            "random (25% budget)",
+            SearchStrategy::RandomSample { seed: 7 },
+            SearchBudget { max_designs: space.size() / 4, ..SearchBudget::default() },
+        ),
+        ("guided", SearchStrategy::ParetoGuided, SearchBudget::default()),
+    ] {
+        let cfg = SweepConfig {
+            strategy,
+            budget,
+            cache: Some(Arc::clone(&store)),
+            ..SweepConfig::default()
+        };
+        let out = sweep(&net, &space, 2, &cfg)?;
+        println!("  {label}: {}", out.stats.summary());
+        println!(
+            "    frontier {} point(s) vs exhaustive {}, at ~{:.0}% of the exhaustive evaluations",
+            out.frontier.len(),
+            outcome.frontier.len(),
+            out.stats.evaluated as f64 / outcome.stats.evaluated.max(1) as f64 * 100.0
         );
     }
     Ok(())

@@ -18,6 +18,7 @@
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, SweepConfig, SweepStats};
 use maestro::dse::space::{geometric_range, kc_p_variants, DesignSpace};
+use maestro::dse::strategy::SearchStrategy;
 use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
 use maestro::runtime::{BatchEvaluator, DesignIn};
@@ -46,6 +47,7 @@ fn scaling_json(
     net: &Network,
     runs: &[(usize, SweepStats)],
     warm: (&SweepStats, &SweepStats),
+    guided: (&SweepStats, &SweepStats, bool),
 ) -> String {
     let mut s = String::from("{\n");
     s += "  \"bench\": \"dse_rate\",\n";
@@ -76,8 +78,20 @@ fn scaling_json(
     let (cold, rewarm) = warm;
     s += &format!(
         "  \"warm_start\": {{\"cold_seconds\": {:.6}, \"warm_seconds\": {:.6}, \"cache_disk_hits\": {}, \
-         \"cache_misses_warm\": {}}}\n",
+         \"cache_misses_warm\": {}}},\n",
         cold.seconds, rewarm.seconds, rewarm.cache_disk_hits, rewarm.cache_misses,
+    );
+    // ISSUE 4 acceptance record: guided must reach the exhaustive
+    // frontier at a fraction of the evaluations (ratio < 0.5).
+    let (exhaustive, guided_stats, frontier_reached) = guided;
+    s += &format!(
+        "  \"guided_vs_exhaustive\": {{\"exhaustive_evaluated\": {}, \"guided_evaluated\": {}, \
+         \"eval_ratio\": {:.4}, \"guided_waves\": {}, \"frontier_reached\": {}}}\n",
+        exhaustive.evaluated,
+        guided_stats.evaluated,
+        guided_stats.evaluated as f64 / exhaustive.evaluated.max(1) as f64,
+        guided_stats.waves,
+        frontier_reached,
     );
     s += "}\n";
     s
@@ -114,7 +128,34 @@ fn run_smoke(net: &Network) {
     println!("cache-file warm: {}", warm.stats.summary());
     assert!(warm.stats.cache_disk_hits > 0, "warm sweep must report disk hits");
 
-    let json = scaling_json("ci_smoke(kc-p)", net, &runs, (&cold.stats, &warm.stats));
+    // Guided-vs-exhaustive leg (ISSUE 4 acceptance, also a CI test):
+    // the guided strategy must reach the exhaustive frontier's
+    // objective values while evaluating < 50% of what the exhaustive
+    // sweep evaluates; the ratio lands in the JSON trajectory.
+    let exhaustive = sweep(net, &space, 2, &SweepConfig::serial()).unwrap();
+    let guided = sweep(
+        net,
+        &space,
+        2,
+        &SweepConfig { strategy: SearchStrategy::ParetoGuided, ..SweepConfig::serial() },
+    )
+    .unwrap();
+    let values = maestro::dse::pareto::objective_values;
+    let frontier_reached = values(&guided.frontier) == values(&exhaustive.frontier);
+    let ratio = guided.stats.evaluated as f64 / exhaustive.stats.evaluated.max(1) as f64;
+    println!("exhaustive: {}", exhaustive.stats.summary());
+    println!("guided:     {}", guided.stats.summary());
+    println!("guided-vs-exhaustive: eval ratio {ratio:.3}, frontier reached: {frontier_reached}");
+    assert!(frontier_reached, "guided must reach the exhaustive frontier on the smoke space");
+    assert!(ratio < 0.5, "guided must evaluate under half the designs (got {ratio:.3})");
+
+    let json = scaling_json(
+        "ci_smoke(kc-p)",
+        net,
+        &runs,
+        (&cold.stats, &warm.stats),
+        (&exhaustive.stats, &guided.stats, frontier_reached),
+    );
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
     std::fs::write(&path, json).expect("write bench smoke json");
     println!("wrote {path}");
@@ -162,6 +203,33 @@ fn main() {
             out.stats.summary(),
             net.layers.len(),
             net.unique_shapes().len(),
+        );
+    }
+
+    section("DSE rate (a4): search strategies vs exhaustive (resolution 16)");
+    let sp = DesignSpace::fig13("kc-p", 16);
+    let exhaustive = sweep(&single, &sp, 2, &SweepConfig::default()).unwrap();
+    println!("exhaustive: {}", exhaustive.stats.summary());
+    for (label, cfg) in [
+        (
+            "random 25%",
+            SweepConfig {
+                strategy: SearchStrategy::RandomSample { seed: 7 },
+                budget: maestro::dse::strategy::SearchBudget {
+                    max_designs: sp.size() / 4,
+                    ..Default::default()
+                },
+                ..SweepConfig::default()
+            },
+        ),
+        ("guided    ", SweepConfig { strategy: SearchStrategy::ParetoGuided, ..SweepConfig::default() }),
+    ] {
+        let out = sweep(&single, &sp, 2, &cfg).unwrap();
+        println!(
+            "{label}: {} (frontier {} vs exhaustive {} points)",
+            out.stats.summary(),
+            out.frontier.len(),
+            exhaustive.frontier.len(),
         );
     }
 

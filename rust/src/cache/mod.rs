@@ -25,7 +25,9 @@
 //!   corrupt-tail-tolerant record log behind [`SharedStore::load`] /
 //!   [`SharedStore::flush`], wired through the `network`/`dse` CLI
 //!   `--cache-file` flags so repeated runs on zoo networks start warm
-//!   (hits split into mem vs disk everywhere they surface).
+//!   (hits split into mem vs disk everywhere they surface). Duplicate
+//!   records accumulated across sessions are tolerated on load and
+//!   reclaimed by [`compact_file`] (`maestro cache compact`).
 //!
 //! Consumers rarely touch this module directly: construct an
 //! [`crate::engine::analysis::Analyzer`] over a store with
@@ -38,4 +40,5 @@ pub mod persist;
 pub mod store;
 
 pub use key::{CacheKey, DataflowFingerprint, HwKey};
+pub use persist::{compact_file, CompactReport};
 pub use store::{CacheHit, CacheValue, FlushReport, LoadReport, SharedStore};

@@ -393,6 +393,62 @@ pub(crate) fn append_records<'a>(
     Ok(base + written)
 }
 
+/// Result of [`compact_file`].
+#[derive(Debug)]
+pub struct CompactReport {
+    /// Decodable records in the file before compaction (duplicates
+    /// included).
+    pub records_before: usize,
+    /// Unique-key records written back.
+    pub records_after: usize,
+    /// Corrupt/truncated tail bytes dropped by the rewrite.
+    pub dropped_bytes: u64,
+    /// What, if anything, was wrong with the input file.
+    pub warning: Option<String>,
+}
+
+/// Rewrite a cache file with unique keys: the append-only log tolerates
+/// duplicate records across sessions (e.g. a store re-bound between
+/// `--cache-file` paths flushes its full contents again), which wastes
+/// bytes and load time. Compaction keeps the **first** record per key —
+/// the same first-wins rule [`SharedStore::load`](super::SharedStore::load)
+/// applies — sorts by key (the flush convention, so compacting the same
+/// contents always produces the same bytes), drops any corrupt tail,
+/// and rewrites atomically. Refuses to touch a nonempty file that is
+/// not a compatible cache file (wrong magic/version): rewriting one
+/// would destroy data this code cannot read.
+pub fn compact_file(path: &Path) -> Result<CompactReport> {
+    use anyhow::{bail, ensure};
+    ensure!(path.exists(), "cache file {} does not exist", path.display());
+    let parsed = read_file(path);
+    let file_len = fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    if parsed.valid_len < HEADER_LEN && file_len > 0 {
+        bail!(
+            "{}",
+            parsed.warning.clone().unwrap_or_else(|| format!(
+                "{} is not a compatible cache file; not rewritten",
+                path.display()
+            ))
+        );
+    }
+    let records_before = parsed.entries.len();
+    let mut seen = std::collections::HashSet::new();
+    let mut records: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for (key, value) in &parsed.entries {
+        if seen.insert(*key) {
+            records.push((key.to_bytes(), encode_record(key, value)));
+        }
+    }
+    records.sort_by(|a, b| a.0.cmp(&b.0));
+    write_fresh(path, records.iter().map(|(_, r)| r.as_slice()))?;
+    Ok(CompactReport {
+        records_before,
+        records_after: records.len(),
+        dropped_bytes: parsed.dropped_bytes,
+        warning: parsed.warning,
+    })
+}
+
 /// Write a complete fresh file (header + records) via a temporary
 /// sibling and an atomic rename, so readers never observe a half-
 /// written file.

@@ -17,6 +17,8 @@ use anyhow::{Context, Result};
 
 use crate::cache::SharedStore;
 use crate::dse::engine::{build_case_table_cached, CaseTable, DesignPoint};
+use crate::dse::space::DesignSpace;
+use crate::dse::strategy::PairBatch;
 use crate::engine::analysis::Analyzer;
 use crate::ir::dataflow::Dataflow;
 use crate::model::layer::Layer;
@@ -121,6 +123,41 @@ fn eval_with_pjrt(
         outs.extend(o);
     }
     Ok(outs)
+}
+
+/// Turn strategy batches ([`PairBatch`], e.g. from
+/// [`crate::dse::strategy::plan_single_wave`]) into coordinator jobs:
+/// one job per batch, one design per batch bandwidth, with the "place
+/// required buffers" sentinel (`l1`/`l2` = 0) so the prep worker sizes
+/// L1/L2 from the case table — the coordinator's shards come from the
+/// same candidate generation as the in-process sweep engine's.
+pub fn jobs_from_batches(net: &Network, space: &DesignSpace, batches: &[PairBatch]) -> Vec<DseJob> {
+    batches
+        .iter()
+        .enumerate()
+        .map(|(i, batch)| {
+            let (variant_idx, pes_idx) = space.pair_coords(batch.pair);
+            DseJob {
+                id: i as u64 + 1,
+                network: net.clone(),
+                variant: space.variants[variant_idx].clone(),
+                pes: space.pes[pes_idx],
+                designs: batch
+                    .bws
+                    .iter()
+                    .map(|&bwi| DesignIn {
+                        bandwidth: space.bandwidths[bwi] as f64,
+                        latency: space.noc_latency as f64,
+                        l1: 0.0,
+                        l2: 0.0,
+                    })
+                    .collect(),
+                noc_hops: space.noc_latency,
+                area_budget: space.area_budget_mm2,
+                power_budget: space.power_budget_mw,
+            }
+        })
+        .collect()
 }
 
 /// Run a set of DSE jobs on `workers` preparation threads with the given
@@ -391,6 +428,39 @@ mod tests {
             assert_eq!(outs.len(), 2);
             assert_eq!(outs[0].outputs, outs[1].outputs, "replayed job {id} must match");
         }
+    }
+
+    #[test]
+    fn jobs_from_batches_mirror_the_strategy_plan() {
+        use crate::dse::strategy::{plan_single_wave, SearchBudget, SearchStrategy};
+        let space = crate::dse::space::DesignSpace::ci_smoke("kc-p");
+        let net = Network::single(vgg16::conv13());
+        let (batches, skipped) =
+            plan_single_wave(&space, &SearchStrategy::Exhaustive, &SearchBudget::default()).unwrap();
+        assert_eq!(skipped, 0);
+        let jobs = jobs_from_batches(&net, &space, &batches);
+        assert_eq!(jobs.len(), space.pairs());
+        let total: usize = jobs.iter().map(|j| j.designs.len()).sum();
+        assert_eq!(total as u64, space.size());
+        for (job, batch) in jobs.iter().zip(&batches) {
+            let (vi, pi) = space.pair_coords(batch.pair);
+            assert_eq!(job.variant.name, space.variants[vi].name);
+            assert_eq!(job.pes, space.pes[pi]);
+            for (d, &bwi) in job.designs.iter().zip(&batch.bws) {
+                assert_eq!(d.bandwidth, space.bandwidths[bwi] as f64);
+                assert_eq!(d.l1, 0.0, "place-required-buffers sentinel");
+            }
+        }
+        // A budgeted random plan flows through the same constructor.
+        let (sampled, _) = plan_single_wave(
+            &space,
+            &SearchStrategy::RandomSample { seed: 3 },
+            &SearchBudget { max_designs: 17, ..SearchBudget::default() },
+        )
+        .unwrap();
+        let jobs = jobs_from_batches(&net, &space, &sampled);
+        let total: usize = jobs.iter().map(|j| j.designs.len()).sum();
+        assert_eq!(total, 17);
     }
 
     #[test]

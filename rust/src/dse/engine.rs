@@ -21,6 +21,9 @@ use anyhow::{ensure, Result};
 
 use crate::cache::SharedStore;
 use crate::dse::pareto::ParetoAccumulator;
+use crate::dse::strategy::{
+    self, CandidateEval, CandidateGen as _, PairBatch, SearchBudget, SearchStrategy, WaveFeedback,
+};
 use crate::engine::analysis::Analyzer;
 use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
 use crate::engine::noc::reduction_delay;
@@ -356,11 +359,27 @@ pub struct SweepConfig {
     /// keeps the default per-shard caches, whose per-pair clearing
     /// bounds shard memory for paper-scale spaces.
     pub cache: Option<Arc<SharedStore>>,
+    /// Candidate-generation strategy (default [`SearchStrategy::Exhaustive`],
+    /// which is pinned bit-identical to the pre-strategy sweep). See
+    /// [`crate::dse::strategy`] for the catalogue.
+    pub strategy: SearchStrategy,
+    /// Evaluation budget (default unlimited). `max_designs` caps the
+    /// candidates admitted to evaluation across all waves — the cut is
+    /// deterministic and lands in [`SweepStats::budget_skipped`];
+    /// `max_seconds` stops between waves (not bit-deterministic).
+    pub budget: SearchBudget,
 }
 
 impl Default for SweepConfig {
     fn default() -> SweepConfig {
-        SweepConfig { threads: 0, shard_size: 0, keep_all_points: false, cache: None }
+        SweepConfig {
+            threads: 0,
+            shard_size: 0,
+            keep_all_points: false,
+            cache: None,
+            strategy: SearchStrategy::Exhaustive,
+            budget: SearchBudget::default(),
+        }
     }
 }
 
@@ -379,10 +398,15 @@ impl SweepConfig {
     }
 }
 
-/// Sweep statistics (Fig 13 (c)). Every candidate in the space lands in
-/// exactly one of `evaluated`, `pruned`, or `unmappable`.
+/// Sweep statistics (Fig 13 (c)). Under the exhaustive strategy every
+/// candidate in the space lands in exactly one of `evaluated`,
+/// `pruned`, `unmappable`, or `budget_skipped`; sampling/guided
+/// strategies only account for the candidates they selected
+/// (`total_designs` stays the nominal space size).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SweepStats {
+    /// Search strategy that produced these stats.
+    pub strategy: String,
     /// Candidates in the nominal space.
     pub total_designs: u64,
     /// Candidates actually evaluated.
@@ -396,6 +420,13 @@ pub struct SweepStats {
     /// Candidates skipped because the (variant, PEs) pair has no legal
     /// mapping (e.g. cluster size exceeds the PE array).
     pub unmappable: u64,
+    /// Candidates a strategy yielded that [`SweepConfig::budget`]'s
+    /// `max_designs` refused (waves are truncated deterministically,
+    /// so this is part of the determinism contract).
+    pub budget_skipped: u64,
+    /// Strategy waves executed (1 for exhaustive/random; the guided
+    /// strategy runs one per refinement round).
+    pub waves: u64,
     /// Analyzer layer-cache hits while building case tables: repeated
     /// layer shapes replayed instead of re-analyzed. Diagnostic only —
     /// the split (unlike hits + misses per pair) depends on the shard
@@ -432,16 +463,21 @@ impl SweepStats {
         self.cache_misses += other.cache_misses;
     }
 
-    /// One-line human summary, including the skip breakdown and the
-    /// layer-cache mem-hit/disk-hit/miss split.
+    /// One-line human summary, including the skip breakdown (pruned /
+    /// unmappable / budget-cut) and the layer-cache
+    /// mem-hit/disk-hit/miss split.
     pub fn summary(&self) -> String {
         format!(
-            "designs={} evaluated={} valid={} pruned={} unmappable={} cache={}h/{}d/{}m wall={:.2}s rate={}/s",
+            "strategy={} designs={} evaluated={} valid={} pruned={} unmappable={} budget_skipped={} \
+             waves={} cache={}h/{}d/{}m wall={:.2}s rate={}/s",
+            if self.strategy.is_empty() { "exhaustive" } else { self.strategy.as_str() },
             self.total_designs,
             self.evaluated,
             self.valid,
             self.pruned,
             self.unmappable,
+            self.budget_skipped,
+            self.waves,
             self.cache_hits,
             self.cache_disk_hits,
             self.cache_misses,
@@ -464,37 +500,43 @@ pub struct SweepOutcome {
     pub stats: SweepStats,
 }
 
-/// Per-shard fold state: frontier + counters (+ points when kept).
+/// Per-shard fold state: frontier + counters (+ points when kept,
+/// + per-candidate feedback when the strategy asks).
 #[derive(Debug, Default)]
 struct ShardOutcome {
     frontier: ParetoAccumulator,
     points: Vec<DesignPoint>,
     stats: SweepStats,
+    feedback: WaveFeedback,
 }
 
-/// Evaluate a contiguous range of (variant, PEs) pair indices. Pair `i`
-/// maps to `variants[i / pes.len()]` and `pes[i % pes.len()]` — the
-/// serial iteration order, so concatenating any contiguous partition's
-/// output replays the single-threaded sweep exactly.
+/// Evaluate a contiguous run of strategy batches. Batches arrive in
+/// serial pair order (each batch's `bws` ascending), so concatenating
+/// any contiguous partition's output replays the single-threaded sweep
+/// of the same candidate list exactly — for the exhaustive strategy
+/// that is the full serial iteration order of the old engine, bit for
+/// bit.
 ///
 /// One [`Analyzer`] serves the whole shard: its layer cache is keyed on
 /// (shape, variant structure, hardware), so the repeated shapes of a
 /// zoo network are analyzed once per (variant, PEs) pair instead of
 /// once per layer, and the scratch allocations amortize across the
-/// shard's pairs. With a [`SweepConfig::cache`] store, every shard's
+/// shard's batches. With a [`SweepConfig::cache`] store, every shard's
 /// Analyzer fronts the same map — pre-warmed entries (earlier sweeps,
-/// disk) replay across the whole pool.
+/// disk) replay across the whole pool, for every strategy.
 ///
 /// Pruning mirrors §5.2: before entering the bandwidth loop for a
-/// (variant, PEs) pair, the minimum achievable area/power (smallest
+/// batch, the minimum achievable area/power (the *space's* smallest
 /// bandwidth, required buffers) is checked against the budget; if it
-/// already exceeds, the whole inner loop is skipped but still counted.
+/// already exceeds, the whole batch is skipped but still counted (and
+/// reported to feedback-driven strategies as a dead pair).
 fn sweep_shard(
     net: &Network,
     space: &super::space::DesignSpace,
     noc_hops: u64,
-    pairs: std::ops::Range<usize>,
+    batches: &[PairBatch],
     keep_all_points: bool,
+    collect_feedback: bool,
     cache: Option<&Arc<SharedStore>>,
 ) -> ShardOutcome {
     let mut out = ShardOutcome::default();
@@ -503,10 +545,8 @@ fn sweep_shard(
         None => Analyzer::new(),
     };
     let layers: Vec<&Layer> = net.layers.iter().collect();
-    let n_pes = space.pes.len();
-    let designs_per_pair = space.bandwidths.len() as u64;
     let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
-    for pair in pairs {
+    for batch in batches {
         // Private cache: the key includes (variant, pes), so a
         // finished pair's entries can never hit again within this
         // sweep — drop them before each pair (counters survive) to
@@ -514,20 +554,29 @@ fn sweep_shard(
         // store, which retains entries for later sweeps and for
         // persistence.
         analyzer.clear_cache();
-        let variant = &space.variants[pair / n_pes];
-        let pes = space.pes[pair % n_pes];
+        let (variant_idx, pes_idx) = space.pair_coords(batch.pair);
+        let variant = &space.variants[variant_idx];
+        let pes = space.pes[pes_idx];
+        let n_candidates = batch.candidates();
         let Ok(table) = build_case_table_cached(&mut analyzer, &layers, variant, pes) else {
-            out.stats.unmappable += designs_per_pair;
+            out.stats.unmappable += n_candidates;
+            if collect_feedback {
+                out.feedback.dead_pairs.push(batch.pair);
+            }
             continue;
         };
         // Minimum-cost pruning for the whole bandwidth loop.
         let min_ap = area::evaluate(pes, table.l1_req, table.l2_req, min_bw);
         if min_ap.area_mm2 > space.area_budget_mm2 || min_ap.power_mw > space.power_budget_mw {
-            out.stats.pruned += designs_per_pair;
+            out.stats.pruned += n_candidates;
+            if collect_feedback {
+                out.feedback.dead_pairs.push(batch.pair);
+            }
             continue;
         }
         let energy = eval_energy(&table.activity, table.l1_req, table.l2_req, noc_hops);
-        for &bw in &space.bandwidths {
+        for &bwi in &batch.bws {
+            let bw = space.bandwidths[bwi];
             out.stats.evaluated += 1;
             let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
             let runtime = eval_runtime(&table, bw, space.noc_latency);
@@ -537,6 +586,15 @@ fn sweep_shard(
             let valid = ap.area_mm2 <= space.area_budget_mm2 && power <= space.power_budget_mw;
             if valid {
                 out.stats.valid += 1;
+            }
+            if collect_feedback {
+                out.feedback.evals.push(CandidateEval {
+                    pair: batch.pair,
+                    bw: bwi,
+                    valid,
+                    runtime,
+                    energy_pj: energy,
+                });
             }
             // Streaming mode: only candidates that would actually join
             // the frontier pay the DesignPoint allocation (invalid or
@@ -568,50 +626,39 @@ fn sweep_shard(
     out
 }
 
-/// Run the budget-pruned sweep over a design space, sharded across a
-/// scoped worker pool.
-///
-/// The workload is a whole [`Network`] — the zoo-scale unit of work;
-/// wrap a single layer with [`Network::single`]. Each worker shard owns
-/// one [`Analyzer`], so repeated layer shapes are analyzed once per
-/// (variant, PEs) pair and the hit/miss split surfaces in
-/// [`SweepStats`].
-///
-/// The (variant, PEs) outer product is split into contiguous shards
-/// pulled from a [`JobQueue`] by `config.threads` workers; each shard
-/// prunes locally and folds its survivors into a streaming Pareto
-/// frontier + [`SweepStats`] counters, so memory stays O(frontier)
-/// unless `keep_all_points` asks for the full scatter. Shard results
-/// merge in shard-index order, which replays the serial iteration order
-/// exactly: the frontier, point list, and counts (cache counters aside
-/// — they follow the partition) are bit-identical for any thread count
-/// and shard size.
-pub fn sweep(
+/// Execute one strategy wave: shard the batch list contiguously, run
+/// the shards on a scoped worker pool, and merge in shard-index order
+/// (which replays the wave's serial batch order exactly — the same
+/// determinism contract as the pre-strategy engine).
+#[allow(clippy::too_many_arguments)]
+fn run_wave(
     net: &Network,
     space: &super::space::DesignSpace,
     noc_hops: u64,
+    wave: Vec<PairBatch>,
     config: &SweepConfig,
-) -> Result<SweepOutcome> {
-    ensure!(!net.layers.is_empty(), "sweep needs at least one layer");
-    let t0 = std::time::Instant::now();
-    let n_pairs = space.pairs();
-    let shard_size = if config.shard_size > 0 { config.shard_size } else { (n_pairs / 64).max(1) };
-    let shards: Vec<(usize, std::ops::Range<usize>)> = (0..n_pairs)
-        .step_by(shard_size)
-        .enumerate()
-        .map(|(index, lo)| (index, lo..(lo + shard_size).min(n_pairs)))
-        .collect();
+    collect_feedback: bool,
+    cache: Option<&Arc<SharedStore>>,
+    frontier: &mut ParetoAccumulator,
+    stats: &mut SweepStats,
+    points: &mut Vec<DesignPoint>,
+    feedback: &mut WaveFeedback,
+) {
+    let n_batches = wave.len();
+    let shard_size = if config.shard_size > 0 { config.shard_size } else { (n_batches / 64).max(1) };
+    let shards: Vec<(usize, &[PairBatch])> = wave.chunks(shard_size).enumerate().collect();
     let n_shards = shards.len();
     let threads = config.effective_threads().min(n_shards).max(1);
     let keep_all_points = config.keep_all_points;
-    let cache = config.cache.as_ref();
 
     let mut shard_outcomes: Vec<Option<ShardOutcome>>;
     if threads <= 1 {
-        shard_outcomes = Vec::with_capacity(n_shards);
-        for (_, range) in shards {
-            shard_outcomes.push(Some(sweep_shard(net, space, noc_hops, range, keep_all_points, cache)));
-        }
+        shard_outcomes = shards
+            .into_iter()
+            .map(|(_, batches)| {
+                Some(sweep_shard(net, space, noc_hops, batches, keep_all_points, collect_feedback, cache))
+            })
+            .collect();
     } else {
         let slots: std::sync::Mutex<Vec<Option<ShardOutcome>>> =
             std::sync::Mutex::new((0..n_shards).map(|_| None).collect());
@@ -621,8 +668,16 @@ pub fn sweep(
                 let queue = queue.clone();
                 let slots = &slots;
                 scope.spawn(move || {
-                    while let Some((index, range)) = queue.pop() {
-                        let shard = sweep_shard(net, space, noc_hops, range, keep_all_points, cache);
+                    while let Some((index, batches)) = queue.pop() {
+                        let shard = sweep_shard(
+                            net,
+                            space,
+                            noc_hops,
+                            batches,
+                            keep_all_points,
+                            collect_feedback,
+                            cache,
+                        );
                         slots.lock().unwrap()[index] = Some(shard);
                     }
                 });
@@ -631,15 +686,111 @@ pub fn sweep(
         shard_outcomes = slots.into_inner().unwrap();
     }
 
-    // Deterministic merge: shard order == serial pair order.
-    let mut frontier = ParetoAccumulator::new();
-    let mut stats = SweepStats { total_designs: space.size(), ..SweepStats::default() };
-    let mut points = Vec::new();
+    // Deterministic merge: shard order == the wave's serial batch order.
     for slot in shard_outcomes {
         let shard = slot.expect("every queued shard was processed");
         frontier.merge(&shard.frontier);
         stats.absorb(&shard.stats);
         points.extend(shard.points);
+        if collect_feedback {
+            feedback.evals.extend(shard.feedback.evals);
+            feedback.dead_pairs.extend(shard.feedback.dead_pairs);
+        }
+    }
+}
+
+/// Run the budget-pruned sweep over a design space, driven by
+/// [`SweepConfig::strategy`] and sharded across a scoped worker pool.
+///
+/// The workload is a whole [`Network`] — the zoo-scale unit of work;
+/// wrap a single layer with [`Network::single`]. Each worker shard owns
+/// one [`Analyzer`], so repeated layer shapes are analyzed once per
+/// (variant, PEs) pair and the hit/miss split surfaces in
+/// [`SweepStats`].
+///
+/// The strategy yields candidate **waves** ([`PairBatch`] lists); each
+/// wave is truncated to the remaining [`SearchBudget`], split into
+/// contiguous shards pulled from a [`JobQueue`] by `config.threads`
+/// workers, pruned per §5.2 inside each shard, and folded into a
+/// streaming Pareto frontier + [`SweepStats`] counters, so memory
+/// stays O(frontier) unless `keep_all_points` asks for the full
+/// scatter. Shards merge in shard-index order, which replays the
+/// wave's serial order exactly: the frontier, point list, and counts
+/// (cache counters aside — they follow the partition) are bit-identical
+/// for any thread count and shard size, for every strategy (the
+/// exhaustive strategy additionally replays the pre-strategy engine
+/// bit for bit — `rust/tests/dse_parallel.rs` pins both).
+pub fn sweep(
+    net: &Network,
+    space: &super::space::DesignSpace,
+    noc_hops: u64,
+    config: &SweepConfig,
+) -> Result<SweepOutcome> {
+    ensure!(!net.layers.is_empty(), "sweep needs at least one layer");
+    let t0 = std::time::Instant::now();
+    let mut gen = config.strategy.generator(space, &config.budget)?;
+    let collect_feedback = gen.needs_feedback();
+    // Feedback-driven strategies revisit a pair across waves (a binary
+    // search touches it once per wave), and the private per-shard
+    // caches are cleared per batch — every wave would re-run the
+    // pair's full layer analysis. Give such sweeps a sweep-local
+    // shared store when the caller did not provide one: cross-wave
+    // revisits replay instead of re-analyzing, and results are
+    // bit-identical either way (cached values are pure functions of
+    // their keys — pinned in `rust/tests/dse_parallel.rs`). Memory is
+    // O(touched pairs x unique shapes), bounded by the budget, and
+    // freed when the sweep returns.
+    let wave_store;
+    let cache: Option<&Arc<SharedStore>> = if let Some(store) = &config.cache {
+        Some(store)
+    } else if collect_feedback {
+        wave_store = Arc::new(SharedStore::new());
+        Some(&wave_store)
+    } else {
+        None
+    };
+    let mut frontier = ParetoAccumulator::new();
+    let mut stats = SweepStats {
+        total_designs: space.size(),
+        strategy: config.strategy.name().to_string(),
+        ..SweepStats::default()
+    };
+    let mut points = Vec::new();
+    let mut feedback = WaveFeedback::default();
+    let mut remaining =
+        if config.budget.max_designs > 0 { config.budget.max_designs } else { u64::MAX };
+    loop {
+        if remaining == 0 {
+            break;
+        }
+        if config.budget.max_seconds > 0.0 && t0.elapsed().as_secs_f64() >= config.budget.max_seconds {
+            break;
+        }
+        let last = std::mem::take(&mut feedback);
+        let mut wave = gen.next_wave(&frontier, &last);
+        if wave.is_empty() {
+            break;
+        }
+        stats.budget_skipped += strategy::truncate_wave(&mut wave, remaining);
+        let admitted: u64 = wave.iter().map(|b| b.candidates()).sum();
+        remaining -= admitted;
+        if wave.is_empty() {
+            break;
+        }
+        run_wave(
+            net,
+            space,
+            noc_hops,
+            wave,
+            config,
+            collect_feedback,
+            cache,
+            &mut frontier,
+            &mut stats,
+            &mut points,
+            &mut feedback,
+        );
+        stats.waves += 1;
     }
     stats.seconds = t0.elapsed().as_secs_f64();
     Ok(SweepOutcome { frontier: frontier.into_sorted(), points, stats })

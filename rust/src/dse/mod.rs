@@ -1,22 +1,38 @@
-//! Hardware design-space exploration (paper §5.2): sharded parameter
-//! sweeps with invalid-design skipping, optimization objectives, and
-//! Pareto fronts.
+//! Hardware design-space exploration (paper §5.2): strategy-driven,
+//! budgeted parameter sweeps with invalid-design skipping, optimization
+//! objectives, and Pareto fronts.
 //!
-//! # Sharded sweep architecture
+//! # Strategy-driven sweep architecture
 //!
 //! The paper's flagship result covers 480M designs at an effective
 //! 0.17M designs/s; that scale rules out both a single thread and a
-//! `Vec` of every design point. [`engine::sweep`] therefore runs as:
+//! `Vec` of every design point — and, for realistic spaces, exhaustive
+//! enumeration itself. [`engine::sweep`] therefore runs waves of
+//! candidate batches produced by a pluggable [`strategy::SearchStrategy`]:
 //!
 //! ```text
-//!   (variant, PEs) pairs ──(contiguous shards)──> JobQueue
-//!       JobQueue ──> [worker + Analyzer] ─┐  per shard: build case
-//!       JobQueue ──> [worker + Analyzer] ─┼─ tables (shape-memoized),
-//!       JobQueue ──> [worker + Analyzer] ─┘  §5.2 min-cost pruning,
-//!                                 eval the bandwidth axis, fold into a
-//!                                 streaming Pareto frontier + stats
-//!   shard results ──(merged in shard order)──> SweepOutcome
+//!   SearchStrategy ──(wave of PairBatches, budget-truncated)──┐
+//!       JobQueue ──> [worker + Analyzer] ─┐  per shard: build case     │
+//!       JobQueue ──> [worker + Analyzer] ─┼─ tables (shape-memoized),  │
+//!       JobQueue ──> [worker + Analyzer] ─┘  §5.2 min-cost pruning,    │
+//!                                 eval the batch's bandwidths, fold    │
+//!                                 into a streaming Pareto frontier     │
+//!   shard results ──(merged in shard order)──> frontier + feedback ────┘
+//!                                       (next wave refines; empty wave ends)
 //! ```
+//!
+//! * **Strategies** — [`strategy::SearchStrategy::Exhaustive`] emits
+//!   the full outer product in one wave (pinned bit-identical to the
+//!   pre-strategy engine); `RandomSample` draws a seeded duplicate-free
+//!   sample against the budget; `ParetoGuided` iteratively refines a
+//!   coarse grid around the evolving frontier and reaches the
+//!   exhaustive frontier's objective values at a fraction of the
+//!   evaluations (`rust/tests/dse_strategies.rs`). All strategies are
+//!   bit-deterministic for a fixed seed and any thread count.
+//! * **Budgets** — [`strategy::SearchBudget`] caps admitted candidates
+//!   (`max_designs`, deterministic truncation surfaced in
+//!   `SweepStats::budget_skipped`) and optionally wall-clock
+//!   (`max_seconds`, wave-granular, not bit-deterministic).
 //!
 //! * **Network workloads** — the unit of work is a whole
 //!   [`crate::model::network::Network`] (wrap single layers with
@@ -33,8 +49,9 @@
 //!   sweep's results land in the store for `SharedStore::flush` to
 //!   persist. Results stay bit-identical for any thread count and any
 //!   pre-warmed state (values are pure functions of their keys).
-//! * **Sharding** — the (variant, PEs) outer product is split into
-//!   contiguous index ranges pulled from a bounded
+//! * **Sharding** — each wave's batch list (for the exhaustive
+//!   strategy: the (variant, PEs) outer product) is split into
+//!   contiguous runs pulled from a bounded
 //!   [`crate::util::queue::JobQueue`] (the coordinator's proven
 //!   bounded-queue worker idiom, extracted) by a scoped worker pool, so
 //!   the effective DSE rate scales with cores.
@@ -56,13 +73,15 @@
 //! # Knobs ([`engine::SweepConfig`])
 //!
 //! * `threads` — worker threads; `0` = one per available core.
-//! * `shard_size` — (variant, PEs) pairs per shard; `0` = auto. Load
-//!   balancing only; never affects results.
+//! * `shard_size` — batches per shard; `0` = auto. Load balancing
+//!   only; never affects results.
 //! * `keep_all_points` — also return every design point (needed by the
 //!   Fig 13 scatter plots and small-space tests; costs O(space) memory).
 //! * `cache` — optional shared [`crate::cache::SharedStore`]; `None`
 //!   keeps the PR 2 per-shard private caches (cleared per pair, memory
-//!   bounded for paper-scale spaces).
+//!   bounded for paper-scale spaces). Works for every strategy.
+//! * `strategy` / `budget` — which candidates to visit, and how many
+//!   (see [`strategy`]).
 //!
 //! # Reproducing Fig 13
 //!
@@ -71,16 +90,26 @@
 //!     --resolution 14 --threads 0        # scatter + frontier + optima
 //! cargo run --release -- dse --family kc-p --layer-model resnet50 \
 //!     --network                          # whole-network (shape-deduped) sweep
+//! cargo run --release -- dse --family kc-p --strategy guided \
+//!     --resolution 20                    # frontier without the full sweep
+//! cargo run --release -- dse --family kc-p --strategy random \
+//!     --budget 50000 --seed 7            # seeded uniform sample
 //! cargo bench --bench fig13_dse          # the full figure (both families)
 //! cargo bench --bench dse_rate           # DSE rate + thread scaling
 //! DSE_SMOKE=1 cargo bench --bench dse_rate   # CI smoke: tiny space,
 //!                                            # writes BENCH_dse_rate.json
+//!                                            # (incl. guided-vs-exhaustive)
 //! ```
 
 pub mod engine;
 pub mod pareto;
 pub mod space;
+pub mod strategy;
 
 pub use engine::{sweep, SweepConfig, SweepOutcome, SweepStats};
 pub use pareto::ParetoAccumulator;
 pub use space::DesignSpace;
+pub use strategy::{
+    plan_single_wave, CandidateEval, CandidateGen, PairBatch, SearchBudget, SearchStrategy,
+    WaveFeedback,
+};

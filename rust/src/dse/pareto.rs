@@ -58,6 +58,25 @@ impl ParetoAccumulator {
         }
     }
 
+    /// The current frontier, in insertion order (the sorted view is
+    /// [`into_sorted`](ParetoAccumulator::into_sorted)) — the
+    /// mid-sweep read-only view for consumers that want the frontier
+    /// points themselves rather than the scalar queries below
+    /// ([`would_admit`](ParetoAccumulator::would_admit) /
+    /// [`contains_value`](ParetoAccumulator::contains_value), which is
+    /// all the built-in guided strategy needs).
+    pub fn points(&self) -> &[DesignPoint] {
+        &self.points
+    }
+
+    /// Exact-match query: does the frontier hold a point with these
+    /// objective values? The guided strategy uses this to decide which
+    /// settled pairs are worth expanding — values compare bit-for-bit
+    /// because they come out of the same deterministic evaluation.
+    pub fn contains_value(&self, runtime: f64, energy_pj: f64) -> bool {
+        self.points.iter().any(|q| q.runtime == runtime && q.energy_pj == energy_pj)
+    }
+
     pub fn len(&self) -> usize {
         self.points.len()
     }
@@ -79,6 +98,20 @@ impl ParetoAccumulator {
         });
         self.points
     }
+}
+
+/// The sorted, deduplicated (runtime, energy) objective values of a
+/// point set, as raw bits (`f64::to_bits`) so comparison is exact.
+/// This is the "same frontier values" predicate the guided-vs-
+/// exhaustive acceptance gate uses (two frontiers can differ in which
+/// design realizes a value — tie-breaking picks different bandwidths —
+/// while being the same frontier objectively).
+pub fn objective_values(points: &[DesignPoint]) -> Vec<(u64, u64)> {
+    let mut v: Vec<(u64, u64)> =
+        points.iter().map(|p| (p.runtime.to_bits(), p.energy_pj.to_bits())).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
 }
 
 /// Objective for picking a single optimum.
@@ -228,6 +261,23 @@ mod tests {
         assert!(acc.offer(&dp(8.0, 8.0, true)));
         assert_eq!(acc.len(), 1);
         assert_eq!(acc.into_sorted()[0].runtime, 8.0);
+    }
+
+    #[test]
+    fn frontier_queries_reflect_membership() {
+        let mut acc = ParetoAccumulator::new();
+        acc.offer(&dp(10.0, 10.0, true));
+        acc.offer(&dp(5.0, 20.0, true));
+        assert_eq!(acc.points().len(), 2);
+        assert!(acc.contains_value(10.0, 10.0));
+        assert!(acc.contains_value(5.0, 20.0));
+        assert!(!acc.contains_value(10.0, 20.0), "exact match only");
+        // A dominating point evicts: membership follows.
+        acc.offer(&dp(4.0, 4.0, true));
+        assert!(!acc.contains_value(10.0, 10.0));
+        assert!(acc.contains_value(4.0, 4.0));
+        assert!(acc.would_admit(3.0, 5.0));
+        assert!(!acc.would_admit(4.0, 4.0), "equal values are covered");
     }
 
     #[test]

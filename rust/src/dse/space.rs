@@ -40,6 +40,25 @@ impl DesignSpace {
         self.variants.len() * self.pes.len()
     }
 
+    /// Serial pair index of (variant index, PEs index) — the order the
+    /// exhaustive sweep walks and every strategy batch refers to.
+    pub fn pair_index(&self, variant_idx: usize, pes_idx: usize) -> usize {
+        variant_idx * self.pes.len() + pes_idx
+    }
+
+    /// Inverse of [`pair_index`](DesignSpace::pair_index):
+    /// `(variant index, PEs index)`.
+    pub fn pair_coords(&self, pair: usize) -> (usize, usize) {
+        (pair / self.pes.len(), pair % self.pes.len())
+    }
+
+    /// Axis-aligned grid neighbors of a pair (±1 variant, ±1 PEs) —
+    /// the neighborhood the guided strategy expands around frontier
+    /// pairs. Deterministic order.
+    pub fn pair_neighbors(&self, pair: usize) -> Vec<usize> {
+        grid_neighbors(self.variants.len(), self.pes.len(), pair)
+    }
+
     /// A seconds-scale Fig 13 space for CI smoke runs and tests.
     pub fn ci_smoke(family: &str) -> DesignSpace {
         DesignSpace::fig13(family, 5)
@@ -48,8 +67,17 @@ impl DesignSpace {
     /// The Fig 13 space for a dataflow family ("kc-p" or "yr-p"), at a
     /// given sweep resolution (designs grow ~ resolution^2).
     pub fn fig13(family: &str, resolution: usize) -> DesignSpace {
-        let pes = geometric_range(8, 2048, resolution);
-        let bandwidths = geometric_range(1, 256, resolution);
+        DesignSpace::fig13_axes(family, resolution, resolution)
+    }
+
+    /// [`fig13`](DesignSpace::fig13) with independent axis resolutions:
+    /// `pes_resolution` points on the PE axis, `bw_resolution` on the
+    /// bandwidth axis — sampling strategies care about the axes
+    /// separately (a deep bandwidth axis is cheap per pair, a deep PE
+    /// axis is not).
+    pub fn fig13_axes(family: &str, pes_resolution: usize, bw_resolution: usize) -> DesignSpace {
+        let pes = geometric_range(8, 2048, pes_resolution);
+        let bandwidths = geometric_range(1, 256, bw_resolution);
         let variants = match family {
             "kc-p" => kc_p_variants(),
             "yr-p" => yr_p_variants(),
@@ -65,6 +93,41 @@ impl DesignSpace {
             power_budget_mw: 450.0,
         }
     }
+}
+
+/// Axis-aligned grid neighbors (±1 variant index, ±1 PEs index) of a
+/// serial pair index, in deterministic order.
+pub fn grid_neighbors(n_variants: usize, n_pes: usize, pair: usize) -> Vec<usize> {
+    let v = pair / n_pes;
+    let p = pair % n_pes;
+    debug_assert!(v < n_variants);
+    let mut out = Vec::with_capacity(4);
+    if v > 0 {
+        out.push((v - 1) * n_pes + p);
+    }
+    if v + 1 < n_variants {
+        out.push((v + 1) * n_pes + p);
+    }
+    if p > 0 {
+        out.push(pair - 1);
+    }
+    if p + 1 < n_pes {
+        out.push(pair + 1);
+    }
+    out
+}
+
+/// A coarse subsample of an axis of `n` indices: every `ceil(n/4)`-th
+/// index plus the last, so any axis contributes at most ~5 points to
+/// the guided strategy's wave-0 grid while its extremes stay covered.
+pub fn coarse_axis(n: usize) -> Vec<usize> {
+    assert!(n > 0, "coarse_axis of an empty axis");
+    let step = n.div_ceil(4);
+    let mut out: Vec<usize> = (0..n).step_by(step).collect();
+    if *out.last().unwrap() != n - 1 {
+        out.push(n - 1);
+    }
+    out
 }
 
 /// `n` geometrically spaced integers in `[lo, hi]` (deduplicated).
@@ -196,6 +259,70 @@ mod tests {
         let s = DesignSpace::fig13("kc-p", 16);
         assert!(s.size() > 500);
         assert_eq!(s.size(), (s.pairs() * s.bandwidths.len()) as u64);
+    }
+
+    #[test]
+    fn pair_indexing_roundtrips_and_matches_serial_order() {
+        let s = DesignSpace::ci_smoke("kc-p");
+        let mut serial = 0usize;
+        for v in 0..s.variants.len() {
+            for p in 0..s.pes.len() {
+                assert_eq!(s.pair_index(v, p), serial);
+                assert_eq!(s.pair_coords(serial), (v, p));
+                serial += 1;
+            }
+        }
+        assert_eq!(serial, s.pairs());
+    }
+
+    #[test]
+    fn grid_neighbors_are_axis_aligned_and_in_bounds() {
+        let (nv, np) = (3usize, 4usize);
+        let space = DesignSpace {
+            variants: DesignSpace::ci_smoke("kc-p").variants[..nv].to_vec(),
+            pes: vec![8, 32, 128, 512],
+            bandwidths: vec![1, 16],
+            noc_latency: 2,
+            area_budget_mm2: 16.0,
+            power_budget_mw: 450.0,
+        };
+        for pair in 0..nv * np {
+            let (v, p) = (pair / np, pair % np);
+            let ns = grid_neighbors(nv, np, pair);
+            assert_eq!(space.pair_neighbors(pair), ns, "the method delegates to grid_neighbors");
+            let expected = usize::from(v > 0)
+                + usize::from(v + 1 < nv)
+                + usize::from(p > 0)
+                + usize::from(p + 1 < np);
+            assert_eq!(ns.len(), expected, "pair {pair}");
+            for n in ns {
+                assert!(n < nv * np);
+                let (nv2, np2) = (n / np, n % np);
+                let d = nv2.abs_diff(v) + np2.abs_diff(p);
+                assert_eq!(d, 1, "neighbor {n} of {pair} must differ by one grid step");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_axis_covers_extremes_and_stays_small() {
+        for n in 1..40usize {
+            let c = coarse_axis(n);
+            assert_eq!(c[0], 0);
+            assert_eq!(*c.last().unwrap(), n - 1);
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+            assert!(c.len() <= 5, "n={n}: {c:?}");
+            assert!(c.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn fig13_axes_decouples_resolutions() {
+        let s = DesignSpace::fig13_axes("kc-p", 4, 9);
+        assert_eq!(s.pes.len(), 4);
+        assert_eq!(s.bandwidths.len(), 9);
+        let square = DesignSpace::fig13("kc-p", 6);
+        assert_eq!(square.pes.len(), square.bandwidths.len());
     }
 
     #[test]

@@ -1,0 +1,654 @@
+//! Pluggable DSE search strategies (paper §5.2 at scale): candidate
+//! generation over the (variant, PEs, bandwidth) design space, budgeted
+//! and wave-based, so exhaustive enumeration is one traversal among
+//! several instead of the only one the sweep engine can run.
+//!
+//! # Model
+//!
+//! A strategy is a [`CandidateGen`]: the engine repeatedly asks it for
+//! the next **wave** of [`PairBatch`]es (candidates grouped by their
+//! (variant, PEs) pair — the case-table unit of work), evaluates the
+//! wave sharded across the worker pool, merges deterministically, and
+//! hands the strategy the updated Pareto frontier plus (for strategies
+//! that ask) per-candidate [`WaveFeedback`]. An empty wave ends the
+//! sweep. Budgets ([`SearchBudget`]) are enforced by the engine:
+//! `max_designs` truncates waves deterministically (the cut candidates
+//! are counted in `SweepStats::budget_skipped`), `max_seconds` stops
+//! between waves (wall-clock cutoffs are inherently not bit-
+//! deterministic; off by default).
+//!
+//! # Strategies
+//!
+//! * [`SearchStrategy::Exhaustive`] — one wave containing every pair
+//!   with the full bandwidth axis, in serial pair order. Sharded and
+//!   merged exactly like the pre-strategy sweep engine: bit-identical
+//!   results, pinned by the unchanged determinism tests in
+//!   `rust/tests/dse_parallel.rs`.
+//! * [`SearchStrategy::RandomSample`] — a uniform, seeded,
+//!   duplicate-free sample of `max_designs` candidates (requires a
+//!   budget), generated in one wave from `util::rng`'s deterministic
+//!   xorshift stream and emitted in serial candidate order — identical
+//!   outcome for any thread count.
+//! * [`SearchStrategy::ParetoGuided`] — iterative refinement. Wave 0
+//!   probes a coarse grid over the (variant, PEs) axes at the top of
+//!   the bandwidth axis; every probed pair then binary-searches its
+//!   highest *valid* bandwidth (runtime is monotone non-increasing in
+//!   bandwidth and energy is bandwidth-independent per pair — both
+//!   pinned by engine tests — so that point realizes the pair's best
+//!   objective values); pairs whose best-possible value (top-bandwidth
+//!   runtime is a lower bound) is already covered by the frontier are
+//!   eliminated; pairs whose settled value sits on the frontier expand
+//!   their grid neighborhood; and when refinement dries up, every
+//!   still-untouched pair is probed once so no frontier pair can hide.
+//!   The per-pair state machine makes duplicate evaluations impossible
+//!   (each (pair, bandwidth) is emitted at most once). On convergence
+//!   the guided frontier carries exactly the exhaustive frontier's
+//!   objective values at a fraction of the evaluations
+//!   (`rust/tests/dse_strategies.rs` pins both).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dse::pareto::ParetoAccumulator;
+use crate::dse::space::{coarse_axis, grid_neighbors, DesignSpace};
+use crate::util::rng::Rng;
+
+/// A batch of candidate designs sharing one (variant, PEs) pair — the
+/// unit the engine schedules (one case table per batch). `pair` indexes
+/// the serial outer product (`variants[pair / pes.len()]`,
+/// `pes[pair % pes.len()]` — see [`DesignSpace::pair_coords`]); `bws`
+/// are indices into `space.bandwidths`, strictly ascending.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PairBatch {
+    pub pair: usize,
+    pub bws: Vec<usize>,
+}
+
+impl PairBatch {
+    /// Candidates in this batch.
+    pub fn candidates(&self) -> u64 {
+        self.bws.len() as u64
+    }
+}
+
+/// One evaluated candidate, reported back to feedback-driven strategies.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateEval {
+    pub pair: usize,
+    /// Bandwidth *index* into `space.bandwidths`.
+    pub bw: usize,
+    pub valid: bool,
+    pub runtime: f64,
+    pub energy_pj: f64,
+}
+
+/// What the engine reports after each wave (only collected when the
+/// strategy's [`CandidateGen::needs_feedback`] says so). Merged in
+/// shard order, so the contents are deterministic for any thread count.
+#[derive(Debug, Clone, Default)]
+pub struct WaveFeedback {
+    /// Every evaluated candidate of the wave.
+    pub evals: Vec<CandidateEval>,
+    /// Pairs whose whole batch was skipped: no legal mapping, or
+    /// §5.2-pruned (over budget even at the cheapest bandwidth).
+    pub dead_pairs: Vec<usize>,
+}
+
+/// Evaluation budget. `0` means unlimited in both fields.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SearchBudget {
+    /// Maximum candidates admitted to evaluation (pruned/unmappable
+    /// batches count — they were admitted, the §5.2 check skipped
+    /// them). Waves are truncated deterministically; the cut lands in
+    /// `SweepStats::budget_skipped`.
+    pub max_designs: u64,
+    /// Wall-clock cutoff in seconds, checked between waves. The one
+    /// knob that trades bit-determinism for latency; leave at `0.0`
+    /// (off) when reproducibility matters.
+    pub max_seconds: f64,
+}
+
+/// Which candidate-generation strategy drives the sweep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// Every (variant, PEs, bandwidth) candidate, serial order.
+    Exhaustive,
+    /// A seeded uniform duplicate-free sample of `max_designs`
+    /// candidates (deterministic for a fixed seed, any thread count).
+    RandomSample { seed: u64 },
+    /// Frontier-guided iterative refinement (see module docs).
+    ParetoGuided,
+}
+
+impl Default for SearchStrategy {
+    fn default() -> SearchStrategy {
+        SearchStrategy::Exhaustive
+    }
+}
+
+impl SearchStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::Exhaustive => "exhaustive",
+            SearchStrategy::RandomSample { .. } => "random",
+            SearchStrategy::ParetoGuided => "guided",
+        }
+    }
+
+    /// Parse a CLI spelling (`exhaustive | random | guided`); `seed`
+    /// feeds the random strategy.
+    pub fn parse(name: &str, seed: u64) -> Result<SearchStrategy> {
+        Ok(match name {
+            "exhaustive" => SearchStrategy::Exhaustive,
+            "random" => SearchStrategy::RandomSample { seed },
+            "guided" => SearchStrategy::ParetoGuided,
+            other => bail!("unknown search strategy '{other}' (exhaustive | random | guided)"),
+        })
+    }
+
+    /// Build the candidate generator for a space. Fails fast on
+    /// nonsensical combinations (random sampling without a budget).
+    pub fn generator(&self, space: &DesignSpace, budget: &SearchBudget) -> Result<Box<dyn CandidateGen>> {
+        match self {
+            SearchStrategy::Exhaustive => Ok(Box::new(ExhaustiveGen {
+                n_pairs: space.pairs(),
+                n_bw: space.bandwidths.len(),
+                emitted: false,
+            })),
+            SearchStrategy::RandomSample { seed } => {
+                ensure!(
+                    budget.max_designs > 0,
+                    "the random strategy samples against a budget: set max_designs (--budget N)"
+                );
+                Ok(Box::new(RandomGen {
+                    plan: random_plan(space.pairs(), space.bandwidths.len(), budget.max_designs, *seed),
+                    emitted: false,
+                }))
+            }
+            SearchStrategy::ParetoGuided => Ok(Box::new(GuidedGen::new(space))),
+        }
+    }
+}
+
+/// Candidate generation: the engine calls [`next_wave`] with the merged
+/// Pareto frontier so far and (when [`needs_feedback`]) the previous
+/// wave's outcomes; an empty wave ends the sweep.
+///
+/// [`next_wave`]: CandidateGen::next_wave
+/// [`needs_feedback`]: CandidateGen::needs_feedback
+pub trait CandidateGen {
+    fn next_wave(&mut self, frontier: &ParetoAccumulator, feedback: &WaveFeedback) -> Vec<PairBatch>;
+
+    /// Whether the engine must collect per-candidate [`WaveFeedback`]
+    /// (costs one tuple per evaluated candidate per wave).
+    fn needs_feedback(&self) -> bool {
+        false
+    }
+}
+
+/// Plan the single wave of a non-feedback strategy (exhaustive or
+/// random), budget-truncated — the shape the PJRT/coordinator path
+/// turns into `DseJob`s. Feedback-driven strategies (guided) refine
+/// against the evolving frontier and only run on the in-process sweep
+/// engine; they are rejected here.
+pub fn plan_single_wave(
+    space: &DesignSpace,
+    strategy: &SearchStrategy,
+    budget: &SearchBudget,
+) -> Result<(Vec<PairBatch>, u64)> {
+    let mut gen = strategy.generator(space, budget)?;
+    ensure!(
+        !gen.needs_feedback(),
+        "the {} strategy refines waves against the evolving Pareto frontier and only runs on \
+         the in-process sweep engine (drop --pjrt)",
+        strategy.name()
+    );
+    let mut wave = gen.next_wave(&ParetoAccumulator::new(), &WaveFeedback::default());
+    let remaining = if budget.max_designs > 0 { budget.max_designs } else { u64::MAX };
+    let skipped = truncate_wave(&mut wave, remaining);
+    Ok((wave, skipped))
+}
+
+/// Deterministically truncate a wave to `remaining` candidates (whole
+/// leading batches kept, one possibly split, the rest dropped). Returns
+/// how many candidates were cut.
+pub(crate) fn truncate_wave(wave: &mut Vec<PairBatch>, remaining: u64) -> u64 {
+    let mut left = remaining;
+    let mut cut = 0u64;
+    let mut kept = Vec::with_capacity(wave.len());
+    for mut batch in wave.drain(..) {
+        let n = batch.candidates();
+        if left >= n {
+            left -= n;
+            kept.push(batch);
+        } else {
+            cut += n - left;
+            if left > 0 {
+                batch.bws.truncate(left as usize);
+                left = 0;
+                kept.push(batch);
+            }
+        }
+    }
+    *wave = kept;
+    cut
+}
+
+// ---------------------------------------------------------------------
+// Exhaustive
+// ---------------------------------------------------------------------
+
+struct ExhaustiveGen {
+    n_pairs: usize,
+    n_bw: usize,
+    emitted: bool,
+}
+
+impl CandidateGen for ExhaustiveGen {
+    fn next_wave(&mut self, _frontier: &ParetoAccumulator, _feedback: &WaveFeedback) -> Vec<PairBatch> {
+        if self.emitted {
+            return Vec::new();
+        }
+        self.emitted = true;
+        (0..self.n_pairs)
+            .map(|pair| PairBatch { pair, bws: (0..self.n_bw).collect() })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Random sampling
+// ---------------------------------------------------------------------
+
+struct RandomGen {
+    plan: Vec<PairBatch>,
+    emitted: bool,
+}
+
+impl CandidateGen for RandomGen {
+    fn next_wave(&mut self, _frontier: &ParetoAccumulator, _feedback: &WaveFeedback) -> Vec<PairBatch> {
+        if self.emitted {
+            return Vec::new();
+        }
+        self.emitted = true;
+        std::mem::take(&mut self.plan)
+    }
+}
+
+/// Sample `min(max_designs, |space|)` distinct candidate ids uniformly
+/// (rejection sampling over the deterministic xorshift stream — fine
+/// while the budget is well below the space size, which is the whole
+/// point of sampling), then group them into serial-order batches. The
+/// sorted output makes the plan independent of `HashSet` iteration
+/// order, hence bit-stable across runs and thread counts.
+fn random_plan(n_pairs: usize, n_bw: usize, max_designs: u64, seed: u64) -> Vec<PairBatch> {
+    let total = n_pairs as u64 * n_bw as u64;
+    let n = max_designs.min(total);
+    let mut ids: Vec<u64>;
+    if n == total {
+        ids = (0..total).collect();
+    } else {
+        let mut rng = Rng::new(seed);
+        let mut picked = std::collections::HashSet::with_capacity(n as usize);
+        while (picked.len() as u64) < n {
+            picked.insert(rng.below(total));
+        }
+        ids = picked.into_iter().collect();
+        ids.sort_unstable();
+    }
+    let mut batches: Vec<PairBatch> = Vec::new();
+    for id in ids {
+        let pair = (id / n_bw as u64) as usize;
+        let bw = (id % n_bw as u64) as usize;
+        match batches.last_mut() {
+            Some(b) if b.pair == pair => b.bws.push(bw),
+            _ => batches.push(PairBatch { pair, bws: vec![bw] }),
+        }
+    }
+    batches
+}
+
+// ---------------------------------------------------------------------
+// Pareto-guided refinement
+// ---------------------------------------------------------------------
+
+/// Per-pair search state. Transitions guarantee each (pair, bandwidth)
+/// candidate is emitted at most once.
+#[derive(Debug, Clone, Copy)]
+enum PairState {
+    /// Never scheduled.
+    Untouched,
+    /// Top-of-axis probe in flight.
+    Probing,
+    /// Binary search for the highest valid bandwidth index in
+    /// `[lo, hi]` (everything above `hi` is known invalid). Sound
+    /// because validity is a prefix of the bandwidth axis: area and
+    /// power are monotone non-decreasing in bandwidth (linear bus
+    /// terms in `hw::area`, and dynamic power = energy/runtime with
+    /// runtime monotone non-increasing), so invalid-at-m rules out
+    /// everything above and valid-at-m implies valid below.
+    /// `lower_runtime` is a lower bound on anything the pair can still
+    /// achieve (runtime is monotone non-increasing in bandwidth): the
+    /// top-bandwidth runtime initially, tightened by every invalid
+    /// probe (all remaining candidate bandwidths sit below it, so they
+    /// are at least that slow). Used for dominance elimination.
+    /// `last_valid_*` caches the best probed-valid (bw, runtime) so a
+    /// collapsed window settles without re-evaluating.
+    Searching { lo: usize, hi: usize, lower_runtime: f64, energy_pj: f64, last_valid_bw: usize, last_valid_runtime: f64 },
+    /// Highest valid bandwidth found: the pair's best objective values.
+    Settled { runtime: f64, energy_pj: f64, expanded: bool },
+    /// Unmappable, pruned, bandwidth-exhausted, or dominance-eliminated.
+    Dead,
+}
+
+/// Sentinel for "no valid bandwidth probed yet" in `last_valid_bw`.
+const NO_VALID: usize = usize::MAX;
+
+struct GuidedGen {
+    n_variants: usize,
+    n_pes: usize,
+    n_bw: usize,
+    state: Vec<PairState>,
+    started: bool,
+}
+
+/// The next binary-search probe for a `[lo, hi]` window.
+fn probe_of(lo: usize, hi: usize) -> usize {
+    if lo == hi {
+        lo
+    } else {
+        (lo + hi + 1) / 2
+    }
+}
+
+impl GuidedGen {
+    fn new(space: &DesignSpace) -> GuidedGen {
+        GuidedGen {
+            n_variants: space.variants.len(),
+            n_pes: space.pes.len(),
+            n_bw: space.bandwidths.len(),
+            state: vec![PairState::Untouched; space.pairs()],
+            started: false,
+        }
+    }
+
+    fn absorb(&mut self, feedback: &WaveFeedback) {
+        let top = self.n_bw - 1;
+        for &dead in &feedback.dead_pairs {
+            self.state[dead] = PairState::Dead;
+        }
+        for ev in &feedback.evals {
+            self.state[ev.pair] = match self.state[ev.pair] {
+                PairState::Probing => {
+                    if ev.valid {
+                        PairState::Settled { runtime: ev.runtime, energy_pj: ev.energy_pj, expanded: false }
+                    } else if top == 0 {
+                        PairState::Dead
+                    } else {
+                        PairState::Searching {
+                            lo: 0,
+                            hi: top - 1,
+                            lower_runtime: ev.runtime,
+                            energy_pj: ev.energy_pj,
+                            last_valid_bw: NO_VALID,
+                            last_valid_runtime: 0.0,
+                        }
+                    }
+                }
+                PairState::Searching { lo, hi, lower_runtime, energy_pj, last_valid_bw, last_valid_runtime } => {
+                    let m = probe_of(lo, hi);
+                    debug_assert_eq!(m, ev.bw, "guided feedback must match the scheduled probe");
+                    if ev.valid {
+                        if m == hi {
+                            // Everything above `hi` is invalid: this is
+                            // the highest valid bandwidth.
+                            PairState::Settled { runtime: ev.runtime, energy_pj, expanded: false }
+                        } else {
+                            PairState::Searching {
+                                lo: m,
+                                hi,
+                                lower_runtime,
+                                energy_pj,
+                                last_valid_bw: m,
+                                last_valid_runtime: ev.runtime,
+                            }
+                        }
+                    } else if m == lo {
+                        // lo == hi == m and even that is invalid: the
+                        // pair has no valid bandwidth at all.
+                        PairState::Dead
+                    } else if lo == m - 1 && last_valid_bw == lo {
+                        // Window collapsed onto an already-probed valid
+                        // index: settle without re-evaluating it.
+                        PairState::Settled { runtime: last_valid_runtime, energy_pj, expanded: false }
+                    } else {
+                        // Every remaining candidate bandwidth sits below
+                        // the invalid probe, so it is at least that slow:
+                        // the invalid runtime tightens the elimination
+                        // bound.
+                        PairState::Searching {
+                            lo,
+                            hi: m - 1,
+                            lower_runtime: lower_runtime.max(ev.runtime),
+                            energy_pj,
+                            last_valid_bw,
+                            last_valid_runtime,
+                        }
+                    }
+                }
+                // A pair can reach Dead (pruned batch) and still have a
+                // stale eval in flight conceptually; keep it dead.
+                other => other,
+            };
+        }
+    }
+}
+
+impl CandidateGen for GuidedGen {
+    fn needs_feedback(&self) -> bool {
+        true
+    }
+
+    fn next_wave(&mut self, frontier: &ParetoAccumulator, feedback: &WaveFeedback) -> Vec<PairBatch> {
+        if self.n_bw == 0 || self.state.is_empty() {
+            return Vec::new();
+        }
+        let top = self.n_bw - 1;
+        if !self.started {
+            // Wave 0: coarse grid over the pair axes, probed at the top
+            // of the bandwidth axis (lowest achievable runtime — the
+            // strongest dominance bound a single probe can buy).
+            self.started = true;
+            let mut wave = Vec::new();
+            for v in coarse_axis(self.n_variants) {
+                for p in coarse_axis(self.n_pes) {
+                    let pair = v * self.n_pes + p;
+                    self.state[pair] = PairState::Probing;
+                    wave.push(PairBatch { pair, bws: vec![top] });
+                }
+            }
+            wave.sort_by_key(|b| b.pair);
+            return wave;
+        }
+
+        self.absorb(feedback);
+
+        // Dominance elimination: a still-searching pair whose best
+        // possible point (top-bandwidth runtime, bandwidth-independent
+        // energy) is already covered by the frontier can never join it.
+        for s in self.state.iter_mut() {
+            if let PairState::Searching { lower_runtime, energy_pj, .. } = *s {
+                if !frontier.would_admit(lower_runtime, energy_pj) {
+                    *s = PairState::Dead;
+                }
+            }
+        }
+
+        let mut wave = Vec::new();
+        // Continue every live binary search.
+        for (pair, s) in self.state.iter().enumerate() {
+            if let PairState::Searching { lo, hi, .. } = *s {
+                wave.push(PairBatch { pair, bws: vec![probe_of(lo, hi)] });
+            }
+        }
+        // Expand the grid neighborhood of pairs whose settled value sits
+        // on the current frontier (each pair expands once).
+        let mut expand = Vec::new();
+        for (pair, s) in self.state.iter_mut().enumerate() {
+            if let PairState::Settled { runtime, energy_pj, expanded } = s {
+                if !*expanded && frontier.contains_value(*runtime, *energy_pj) {
+                    *expanded = true;
+                    expand.push(pair);
+                }
+            }
+        }
+        for pair in expand {
+            for n in grid_neighbors(self.n_variants, self.n_pes, pair) {
+                if matches!(self.state[n], PairState::Untouched) {
+                    self.state[n] = PairState::Probing;
+                    wave.push(PairBatch { pair: n, bws: vec![top] });
+                }
+            }
+        }
+        // Completeness: when refinement dries up, probe every pair the
+        // grid and expansions never reached — a frontier pair outside
+        // the explored neighborhood would otherwise stay invisible.
+        if wave.is_empty() {
+            for (pair, s) in self.state.iter_mut().enumerate() {
+                if matches!(s, PairState::Untouched) {
+                    *s = PairState::Probing;
+                    wave.push(PairBatch { pair, bws: vec![top] });
+                }
+            }
+        }
+        wave.sort_by_key(|b| b.pair);
+        wave
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wave_candidates(wave: &[PairBatch]) -> u64 {
+        wave.iter().map(|b| b.candidates()).sum()
+    }
+
+    #[test]
+    fn exhaustive_emits_every_candidate_once_in_serial_order() {
+        let space = DesignSpace::ci_smoke("kc-p");
+        let mut gen = SearchStrategy::Exhaustive
+            .generator(&space, &SearchBudget::default())
+            .unwrap();
+        let wave = gen.next_wave(&ParetoAccumulator::new(), &WaveFeedback::default());
+        assert_eq!(wave.len(), space.pairs());
+        assert_eq!(wave_candidates(&wave), space.size());
+        for (i, b) in wave.iter().enumerate() {
+            assert_eq!(b.pair, i);
+            assert_eq!(b.bws, (0..space.bandwidths.len()).collect::<Vec<_>>());
+        }
+        assert!(gen.next_wave(&ParetoAccumulator::new(), &WaveFeedback::default()).is_empty());
+    }
+
+    #[test]
+    fn random_plan_is_seeded_deduped_and_in_bounds() {
+        let a = random_plan(7, 5, 20, 99);
+        let b = random_plan(7, 5, 20, 99);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(wave_candidates(&a), 20);
+        let mut seen = std::collections::HashSet::new();
+        for batch in &a {
+            assert!(batch.pair < 7);
+            assert!(batch.bws.windows(2).all(|w| w[0] < w[1]), "ascending bws");
+            for &bw in &batch.bws {
+                assert!(bw < 5);
+                assert!(seen.insert((batch.pair, bw)), "no duplicate candidates");
+            }
+        }
+        assert!(a.windows(2).all(|w| w[0].pair < w[1].pair), "serial pair order");
+        let c = random_plan(7, 5, 20, 100);
+        assert_ne!(a, c, "different seed explores a different sample");
+    }
+
+    #[test]
+    fn random_plan_budget_above_space_degenerates_to_exhaustive() {
+        let plan = random_plan(3, 4, 1000, 1);
+        assert_eq!(wave_candidates(&plan), 12);
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn random_strategy_requires_budget() {
+        let space = DesignSpace::ci_smoke("kc-p");
+        assert!(SearchStrategy::RandomSample { seed: 1 }
+            .generator(&space, &SearchBudget::default())
+            .is_err());
+    }
+
+    #[test]
+    fn truncate_wave_cuts_deterministically() {
+        let mk = || {
+            vec![
+                PairBatch { pair: 0, bws: vec![0, 1, 2] },
+                PairBatch { pair: 1, bws: vec![0, 1] },
+                PairBatch { pair: 2, bws: vec![3] },
+            ]
+        };
+        let mut w = mk();
+        assert_eq!(truncate_wave(&mut w, 10), 0);
+        assert_eq!(w, mk());
+        let mut w = mk();
+        assert_eq!(truncate_wave(&mut w, 4), 2);
+        assert_eq!(
+            w,
+            vec![PairBatch { pair: 0, bws: vec![0, 1, 2] }, PairBatch { pair: 1, bws: vec![0] }]
+        );
+        let mut w = mk();
+        assert_eq!(truncate_wave(&mut w, 0), 6);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn plan_single_wave_rejects_guided() {
+        let space = DesignSpace::ci_smoke("kc-p");
+        let err = plan_single_wave(&space, &SearchStrategy::ParetoGuided, &SearchBudget::default());
+        assert!(err.is_err());
+        let (wave, skipped) =
+            plan_single_wave(&space, &SearchStrategy::Exhaustive, &SearchBudget { max_designs: 7, ..SearchBudget::default() })
+                .unwrap();
+        assert_eq!(wave_candidates(&wave), 7);
+        assert_eq!(skipped, space.size() - 7);
+    }
+
+    #[test]
+    fn probe_of_always_makes_progress() {
+        // Any window either collapses (lo == hi) or probes strictly
+        // inside it, so binary searches terminate and never repeat.
+        for lo in 0..6usize {
+            for hi in lo..6usize {
+                let m = probe_of(lo, hi);
+                assert!(m >= lo && m <= hi);
+                if lo < hi {
+                    assert!(m > lo, "upper-mid probe must move off lo");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn guided_wave0_is_a_coarse_grid_at_top_bandwidth() {
+        let space = DesignSpace::ci_smoke("kc-p");
+        let mut gen = SearchStrategy::ParetoGuided
+            .generator(&space, &SearchBudget::default())
+            .unwrap();
+        assert!(gen.needs_feedback());
+        let wave = gen.next_wave(&ParetoAccumulator::new(), &WaveFeedback::default());
+        assert!(!wave.is_empty());
+        assert!(wave.len() <= space.pairs());
+        let top = space.bandwidths.len() - 1;
+        for b in &wave {
+            assert_eq!(b.bws, vec![top], "wave 0 probes the top of the bandwidth axis");
+        }
+        let expected = coarse_axis(space.variants.len()).len() * coarse_axis(space.pes.len()).len();
+        assert_eq!(wave.len(), expected);
+    }
+}

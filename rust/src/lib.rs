@@ -23,10 +23,11 @@
 //!   [`SharedStore`] concurrent map sweeps and coordinator workers
 //!   share, and append-only on-disk persistence for `--cache-file`
 //!   warm starts.
-//! * [`dse`] — the hardware design-space exploration engine: a sharded
-//!   parallel sweep with §5.2 invalid-design skipping and streaming
-//!   Pareto accumulation (see the module docs for the architecture),
-//!   plus Pareto extraction and objectives.
+//! * [`dse`] — the hardware design-space exploration engine: pluggable
+//!   budgeted search strategies (exhaustive / random / Pareto-guided)
+//!   over a sharded parallel sweep with §5.2 invalid-design skipping
+//!   and streaming Pareto accumulation (see the module docs for the
+//!   architecture), plus Pareto extraction and objectives.
 //! * [`runtime`] — PJRT (xla crate, behind the `pjrt` cargo feature)
 //!   loader/executor for the AOT-compiled batched evaluator
 //!   (`artifacts/dse_eval.hlo.txt`); a stub that falls back to the

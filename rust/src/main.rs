@@ -6,6 +6,9 @@
 //! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
 //! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
 //! maestro dse      --family kc-p --layer-model resnet50 --network   # whole-network sweep
+//! maestro dse      --family kc-p --strategy guided                  # frontier without the full sweep
+//! maestro dse      --family kc-p --strategy random --budget 50000 --seed 7
+//! maestro cache    compact --cache-file warm.mcache   # rewrite with unique keys
 //! maestro table1
 //! maestro zoo
 //! ```
@@ -15,17 +18,18 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use maestro::cache::SharedStore;
-use maestro::coordinator::{run_jobs_with_store, Backend, DseJob};
+use maestro::coordinator::{jobs_from_batches, run_jobs_with_store, Backend};
 use maestro::dse::engine::{sweep, DesignPoint, SweepConfig};
 use maestro::dse::pareto::{best, Optimize};
 use maestro::dse::space::DesignSpace;
+use maestro::dse::strategy::{plan_single_wave, SearchBudget, SearchStrategy};
 use maestro::engine::analysis::{adaptive_network_with, analyze_layer, analyze_network_with, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
 use maestro::model::network::Network;
 use maestro::ir::styles;
 use maestro::model::zoo;
 use maestro::report::experiments;
-use maestro::runtime::{BatchEvaluator, DesignIn};
+use maestro::runtime::BatchEvaluator;
 use maestro::sim::cycle::simulate;
 use maestro::util::cli::{usage, Args, FlagSpec};
 use maestro::util::table::{num, Table};
@@ -41,6 +45,27 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "family", takes_value: true, help: "DSE dataflow family: kc-p | yr-p | yx-p" },
         FlagSpec { name: "layer-model", takes_value: true, help: "model providing the DSE layer" },
         FlagSpec { name: "resolution", takes_value: true, help: "DSE sweep resolution per axis (default 12)" },
+        FlagSpec {
+            name: "bw-resolution",
+            takes_value: true,
+            help: "dse: bandwidth-axis resolution (default: --resolution)",
+        },
+        FlagSpec {
+            name: "strategy",
+            takes_value: true,
+            help: "dse: search strategy: exhaustive | random | guided (default exhaustive)",
+        },
+        FlagSpec {
+            name: "budget",
+            takes_value: true,
+            help: "dse: max designs admitted to evaluation (0 = unlimited; required for random)",
+        },
+        FlagSpec {
+            name: "budget-seconds",
+            takes_value: true,
+            help: "dse: wall-clock cutoff in seconds, checked between strategy waves (0 = off)",
+        },
+        FlagSpec { name: "seed", takes_value: true, help: "dse: RNG seed for --strategy random (default 1)" },
         FlagSpec { name: "network", takes_value: false, help: "dse: sweep the whole model (shape-deduped)" },
         FlagSpec { name: "per-layer", takes_value: false, help: "network: print the per-layer breakdown" },
         FlagSpec { name: "pjrt", takes_value: false, help: "use the AOT PJRT evaluator for DSE" },
@@ -91,7 +116,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv, &spec, true)?;
     let Some(cmd) = args.subcommand.clone() else {
         println!("maestro — data-centric DNN dataflow cost model (MICRO-52 reproduction)");
-        println!("subcommands: analyze | network | validate | dse | table1 | zoo");
+        println!("subcommands: analyze | network | validate | dse | cache | table1 | zoo");
         println!("{}", usage(&spec));
         return Ok(());
     };
@@ -192,7 +217,20 @@ fn main() -> Result<()> {
         "dse" => {
             let family = args.opt("family", "kc-p");
             let resolution = args.opt_u64("resolution", 12)? as usize;
-            let space = DesignSpace::fig13(&family, resolution);
+            let bw_resolution = args.opt_u64("bw-resolution", resolution as u64)? as usize;
+            let space = DesignSpace::fig13_axes(&family, resolution, bw_resolution);
+            let strategy =
+                SearchStrategy::parse(&args.opt("strategy", "exhaustive"), args.opt_u64("seed", 1)?)?;
+            let budget = SearchBudget {
+                max_designs: args.opt_u64("budget", 0)?,
+                max_seconds: args.opt_f64("budget-seconds", 0.0)?,
+            };
+            println!(
+                "search: strategy={} budget={} wall={}",
+                strategy.name(),
+                if budget.max_designs > 0 { budget.max_designs.to_string() } else { "unlimited".into() },
+                if budget.max_seconds > 0.0 { format!("{}s", budget.max_seconds) } else { "off".into() },
+            );
             // Workload: one layer by default, the whole (shape-
             // deduplicated) network with --network. The combination
             // --network + --layer is contradictory: reject it rather
@@ -219,31 +257,19 @@ fn main() -> Result<()> {
             let (store, cache_path) = open_cache(&args);
             if args.has("pjrt") {
                 // The PJRT backend goes through the coordinator (the
-                // evaluator thread owns the executable). Jobs: one per
-                // (variant, pes); designs sweep bandwidth.
+                // evaluator thread owns the executable). Jobs come from
+                // the strategy's (single-wave) candidate plan: one job
+                // per batch, designs = the batch's bandwidths. Guided
+                // refinement needs per-wave frontier feedback and is
+                // rejected by plan_single_wave with a pointer back to
+                // the in-process engine.
                 let workers = args.opt_u64("workers", 4)? as usize;
                 let backend = Backend::Pjrt(BatchEvaluator::default_path());
-                let mut jobs = Vec::new();
-                let mut id = 0u64;
-                for variant in &space.variants {
-                    for &pes in &space.pes {
-                        id += 1;
-                        jobs.push(DseJob {
-                            id,
-                            network: workload.clone(),
-                            variant: variant.clone(),
-                            pes,
-                            designs: space
-                                .bandwidths
-                                .iter()
-                                .map(|&bw| DesignIn { bandwidth: bw as f64, latency: space.noc_latency as f64, l1: 0.0, l2: 0.0 })
-                                .collect(),
-                            noc_hops: space.noc_latency,
-                            area_budget: space.area_budget_mm2,
-                            power_budget: space.power_budget_mw,
-                        });
-                    }
+                let (batches, budget_cut) = plan_single_wave(&space, &strategy, &budget)?;
+                if budget_cut > 0 {
+                    println!("budget: {budget_cut} candidate design(s) cut by --budget");
                 }
+                let jobs = jobs_from_batches(&workload, &space, &batches);
                 let t0 = std::time::Instant::now();
                 let cache = cache_path.as_ref().map(|_| Arc::clone(&store));
                 let (results, metrics) = run_jobs_with_store(jobs, backend, workers, cache)?;
@@ -282,7 +308,14 @@ fn main() -> Result<()> {
                         );
                     }
                 }
-                let cfg = SweepConfig { threads, keep_all_points: true, cache, ..SweepConfig::default() };
+                let cfg = SweepConfig {
+                    threads,
+                    keep_all_points: true,
+                    cache,
+                    strategy: strategy.clone(),
+                    budget,
+                    ..SweepConfig::default()
+                };
                 let outcome = sweep(&workload, &space, space.noc_latency, &cfg)?;
                 println!("{}", outcome.stats.summary());
                 let title = format!("{family} design space ({})", workload.name);
@@ -294,6 +327,28 @@ fn main() -> Result<()> {
                 print_optima(&outcome.points, macs);
             }
             close_cache(&store, &cache_path)?;
+        }
+        "cache" => {
+            let action = args.positional.first().map(String::as_str).unwrap_or("");
+            match action {
+                "compact" => {
+                    let path = args.opt_required("cache-file")?;
+                    let report = maestro::cache::compact_file(std::path::Path::new(&path))?;
+                    if let Some(w) = &report.warning {
+                        eprintln!("cache compact: {w}");
+                    }
+                    println!(
+                        "cache compact: {} -> {} record(s) in {path} ({} duplicate(s) removed, {} corrupt byte(s) dropped)",
+                        report.records_before,
+                        report.records_after,
+                        report.records_before - report.records_after,
+                        report.dropped_bytes,
+                    );
+                }
+                other => bail!(
+                    "unknown cache action '{other}' (usage: maestro cache compact --cache-file <path>)"
+                ),
+            }
         }
         "table1" => {
             use maestro::engine::reuse::{table1, Opportunity};

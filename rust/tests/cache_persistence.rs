@@ -209,6 +209,67 @@ fn pure_garbage_and_empty_files_start_cold() {
 }
 
 #[test]
+fn compact_rewrites_duplicate_records_with_unique_keys() {
+    use maestro::cache::compact_file;
+    let (path, bytes, entries) = valid_file("compact");
+    // Simulate the append-only duplicate accumulation ROADMAP describes
+    // (e.g. a store re-bound across --cache-file paths flushing its
+    // contents again): append every record a second time. The frames
+    // are self-delimiting and checksummed, so the doubled file is fully
+    // valid — just wasteful.
+    let mut doubled = bytes.clone();
+    doubled.extend_from_slice(&bytes[16..]); // skip the 16-byte header
+    fs::write(&path, &doubled).unwrap();
+    // Loading tolerates the duplicates (first record per key wins)...
+    let probe = SharedStore::new();
+    let before = probe.load(&path);
+    assert!(before.warning.is_none(), "{:?}", before.warning);
+    assert_eq!(before.loaded, entries, "duplicates dedupe on load");
+    // ...and compaction reclaims them on disk.
+    let report = compact_file(&path).unwrap();
+    assert_eq!(report.records_before, 2 * entries);
+    assert_eq!(report.records_after, entries);
+    assert_eq!(report.dropped_bytes, 0);
+    assert!(report.warning.is_none());
+    assert!(fs::metadata(&path).unwrap().len() < doubled.len() as u64);
+    // The compacted file round-trips cleanly and completely.
+    let after = SharedStore::new();
+    let reread = after.load(&path);
+    assert!(reread.warning.is_none(), "{:?}", reread.warning);
+    assert_eq!(reread.loaded, entries);
+    // Compaction is idempotent.
+    let again = compact_file(&path).unwrap();
+    assert_eq!((again.records_before, again.records_after), (entries, entries));
+    fs::remove_file(&path).ok();
+}
+
+#[test]
+fn compact_drops_corrupt_tails_but_refuses_foreign_files() {
+    use maestro::cache::compact_file;
+    // A corrupt tail is dropped (that is the point of compaction)...
+    let (path, mut bytes, entries) = valid_file("compact_tail");
+    bytes.extend_from_slice(b"torn half-record \x00\xff");
+    fs::write(&path, &bytes).unwrap();
+    let report = compact_file(&path).unwrap();
+    assert_eq!(report.records_after, entries);
+    assert!(report.dropped_bytes > 0);
+    assert!(report.warning.is_some());
+    assert!(SharedStore::new().load(&path).warning.is_none(), "compaction healed the file");
+    fs::remove_file(&path).ok();
+
+    // ...but a file this code cannot read is never rewritten: that
+    // would destroy someone else's data.
+    let foreign = temp_cache("compact_foreign");
+    let junk = b"definitely not a maestro cache file".to_vec();
+    fs::write(&foreign, &junk).unwrap();
+    assert!(compact_file(&foreign).is_err());
+    assert_eq!(fs::read(&foreign).unwrap(), junk, "refused file must be untouched");
+    fs::remove_file(&foreign).ok();
+    // And a missing path is an error, not a silently created file.
+    assert!(compact_file(&temp_cache("compact_missing")).is_err());
+}
+
+#[test]
 fn stale_version_starts_cold() {
     let (path, mut bytes, _) = valid_file("stale");
     // Pretend the analysis version moved on.

@@ -22,6 +22,7 @@ use maestro::dse::engine::{
     build_case_table, build_case_table_cached, eval_energy, eval_runtime, sweep, SweepConfig, SweepStats,
 };
 use maestro::dse::space::{kc_p_ct, DesignSpace};
+use maestro::dse::strategy::{SearchBudget, SearchStrategy};
 use maestro::engine::analysis::Analyzer;
 use maestro::hw::area;
 use maestro::model::layer::Layer;
@@ -107,7 +108,14 @@ fn network_sweep_is_layer_name_independent() {
 /// pins "memoized network sweep == per-layer aggregation".
 fn serial_reference_counts(net: &Network, space: &DesignSpace, noc_hops: u64) -> SweepStats {
     let layers: Vec<&Layer> = net.layers.iter().collect();
-    let mut stats = SweepStats { total_designs: space.size(), ..SweepStats::default() };
+    // The reference models what the engine reports for an unbudgeted
+    // exhaustive sweep: one wave, nothing budget-skipped.
+    let mut stats = SweepStats {
+        total_designs: space.size(),
+        strategy: "exhaustive".into(),
+        waves: 1,
+        ..SweepStats::default()
+    };
     let min_bw = *space.bandwidths.iter().min().unwrap();
     for variant in &space.variants {
         for &pes in &space.pes {
@@ -230,6 +238,103 @@ fn shared_store_sweep_is_bit_identical_for_any_thread_count_and_warmth() {
     assert_eq!(warm.stats.cache_misses, 0, "disk-warm sweep must not re-analyze");
     assert!(warm.stats.cache_disk_hits > 0, "hits must be attributed to disk");
     assert_eq!(warm.stats.cache_hits, warm.stats.cache_disk_hits, "every hit came from disk");
+}
+
+#[test]
+fn random_sample_is_deterministic_for_seed_and_any_thread_count() {
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let base = SweepConfig {
+        keep_all_points: true,
+        strategy: SearchStrategy::RandomSample { seed: 42 },
+        budget: SearchBudget { max_designs: 60, ..SearchBudget::default() },
+        ..SweepConfig::serial()
+    };
+    let reference = sweep(&net, &space, 2, &base).unwrap();
+    // Every sampled candidate lands in exactly one accounting bucket.
+    assert_eq!(
+        reference.stats.evaluated + reference.stats.pruned + reference.stats.unmappable,
+        60,
+        "the sample is exactly the budget"
+    );
+    assert_eq!(reference.stats.budget_skipped, 0, "the plan never exceeds its own budget");
+    assert_eq!(reference.stats.waves, 1);
+    for (threads, shard_size) in [(2usize, 0usize), (4, 1), (0, 2)] {
+        let cfg = SweepConfig { threads, shard_size, ..base.clone() };
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(out.frontier, reference.frontier, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(out.points, reference.points, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(comparable(&out.stats), comparable(&reference.stats), "threads={threads}");
+    }
+}
+
+#[test]
+fn guided_sweep_is_deterministic_across_thread_counts() {
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let base = SweepConfig {
+        keep_all_points: true,
+        strategy: SearchStrategy::ParetoGuided,
+        ..SweepConfig::serial()
+    };
+    let reference = sweep(&net, &space, 2, &base).unwrap();
+    assert!(!reference.frontier.is_empty());
+    assert!(reference.stats.waves > 1, "guided refinement runs multiple waves");
+    for (threads, shard_size) in [(2usize, 0usize), (4, 1), (0, 2)] {
+        let cfg = SweepConfig { threads, shard_size, ..base.clone() };
+        let out = sweep(&net, &space, 2, &cfg).unwrap();
+        assert_eq!(out.frontier, reference.frontier, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(out.points, reference.points, "threads={threads}, shard_size={shard_size}");
+        assert_eq!(comparable(&out.stats), comparable(&reference.stats), "threads={threads}");
+    }
+}
+
+#[test]
+fn guided_never_evaluates_a_design_twice() {
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let cfg = SweepConfig {
+        keep_all_points: true,
+        strategy: SearchStrategy::ParetoGuided,
+        ..SweepConfig::serial()
+    };
+    let out = sweep(&net, &space, 2, &cfg).unwrap();
+    assert_eq!(out.points.len() as u64, out.stats.evaluated, "keep_all_points records every evaluation");
+    let mut seen = std::collections::HashSet::new();
+    for p in &out.points {
+        assert!(
+            seen.insert((p.dataflow.clone(), p.pes, p.bandwidth)),
+            "candidate ({}, {}, {}) evaluated twice",
+            p.dataflow,
+            p.pes,
+            p.bandwidth
+        );
+    }
+}
+
+#[test]
+fn guided_sweep_with_shared_store_replays_fully_warm() {
+    // Shared-store caching must keep working for every strategy: the
+    // guided strategy revisits the same candidates deterministically,
+    // so a second run over one store replays every analysis and moves
+    // no bits.
+    let net = vgg16::conv_only();
+    let space = DesignSpace::ci_smoke("kc-p");
+    let store = Arc::new(SharedStore::new());
+    let cfg = SweepConfig {
+        keep_all_points: true,
+        strategy: SearchStrategy::ParetoGuided,
+        cache: Some(Arc::clone(&store)),
+        ..SweepConfig::serial()
+    };
+    let cold = sweep(&net, &space, 2, &cfg).unwrap();
+    assert!(cold.stats.cache_misses > 0);
+    assert!(!store.is_empty());
+    let warm = sweep(&net, &space, 2, &cfg).unwrap();
+    assert_eq!(warm.stats.cache_misses, 0, "fully warm guided rerun must not re-analyze");
+    assert_eq!(warm.frontier, cold.frontier);
+    assert_eq!(warm.points, cold.points);
+    assert_eq!(comparable(&warm.stats), comparable(&cold.stats));
 }
 
 #[test]

@@ -1,0 +1,59 @@
+//! ANALYSIS_VERSION discipline guard (ROADMAP item): cached analysis
+//! values are functions of the key *and of the analysis formulas*, so
+//! `cache::persist::ANALYSIS_VERSION` must be bumped in the same commit
+//! as any change to the engine sources — otherwise stale cache files
+//! replay wrong numbers silently. This test fingerprints
+//! `rust/src/engine/*.rs` with the crate's own process-stable FNV-128
+//! and fails loudly against a pinned constant when they drift, turning
+//! "remember to bump the version" into a red test.
+//!
+//! On a legitimate engine change:
+//!  1. if analysis *outputs* changed for any key, bump
+//!     `cache::persist::ANALYSIS_VERSION` (same commit);
+//!  2. repin `ENGINE_SRC_FINGERPRINT` below to the value the failure
+//!     message prints.
+
+use maestro::util::stablehash::Fnv128;
+
+/// FNV-128 over the sorted engine sources (name, NUL, length, bytes
+/// with `\r` stripped so checkout line-ending policy cannot move it).
+const ENGINE_SRC_FINGERPRINT: u128 = 0x384aaf1c25860f88e402538e0bdfb8f5;
+
+fn engine_fingerprint() -> u128 {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/engine");
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .expect("rust/src/engine must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".rs"))
+        .collect();
+    names.sort();
+    assert!(!names.is_empty(), "no engine sources found in {}", dir.display());
+    let mut h = Fnv128::new();
+    for name in &names {
+        let mut data = std::fs::read(dir.join(name)).expect("read engine source");
+        data.retain(|&b| b != b'\r');
+        h.write(name.as_bytes());
+        h.write_u8(0);
+        h.write_u64(data.len() as u64);
+        h.write(&data);
+    }
+    h.finish()
+}
+
+#[test]
+fn engine_sources_match_pinned_fingerprint() {
+    let got = engine_fingerprint();
+    assert_eq!(
+        got, ENGINE_SRC_FINGERPRINT,
+        "\nrust/src/engine sources changed (fingerprint {got:#034x}).\n\
+         Cached analyses may now be stale: if analysis outputs changed for any key,\n\
+         bump `cache::persist::ANALYSIS_VERSION` in the SAME commit, then repin\n\
+         `ENGINE_SRC_FINGERPRINT` in rust/tests/engine_version_guard.rs to the value above.\n"
+    );
+}
+
+#[test]
+fn fingerprint_is_stable_across_calls() {
+    assert_eq!(engine_fingerprint(), engine_fingerprint());
+}
