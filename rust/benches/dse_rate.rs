@@ -48,6 +48,7 @@ fn scaling_json(
     runs: &[(usize, SweepStats)],
     warm: (&SweepStats, &SweepStats),
     guided: (&SweepStats, &SweepStats, bool),
+    mapspace: &str,
 ) -> String {
     let mut s = String::from("{\n");
     s += "  \"bench\": \"dse_rate\",\n";
@@ -86,13 +87,16 @@ fn scaling_json(
     let (exhaustive, guided_stats, frontier_reached) = guided;
     s += &format!(
         "  \"guided_vs_exhaustive\": {{\"exhaustive_evaluated\": {}, \"guided_evaluated\": {}, \
-         \"eval_ratio\": {:.4}, \"guided_waves\": {}, \"frontier_reached\": {}}}\n",
+         \"eval_ratio\": {:.4}, \"guided_waves\": {}, \"frontier_reached\": {}}},\n",
         exhaustive.evaluated,
         guided_stats.evaluated,
         guided_stats.evaluated as f64 / exhaustive.evaluated.max(1) as f64,
         guided_stats.waves,
         frontier_reached,
     );
+    // ISSUE 5 acceptance record: mapspace size + layer-wise mapper vs
+    // the best fixed Table 3 style on the smoke network.
+    s += &format!("  \"mapspace\": {mapspace}\n");
     s += "}\n";
     s
 }
@@ -149,12 +153,60 @@ fn run_smoke(net: &Network) {
     assert!(frontier_reached, "guided must reach the exhaustive frontier on the smoke space");
     assert!(ratio < 0.5, "guided must evaluate under half the designs (got {ratio:.3})");
 
+    // Mapspace leg (ISSUE 5 acceptance record): the layer-wise mapper
+    // over the generated tiling space vs the best single fixed Table 3
+    // style on the same network. The mapper's candidate set contains
+    // every fixed style that maps (defaults always enumerated), so it
+    // can never lose; the improvement lands in the JSON trajectory.
+    let hw = maestro::hw::config::HwConfig::fig10_default();
+    let mut mapper = maestro::mapspace::Mapper::new();
+    let mapped = mapper
+        .map_network(net, &hw, &maestro::mapspace::MapperConfig::default())
+        .expect("mapper must map the smoke network");
+    let mut best_fixed = f64::INFINITY;
+    let mut best_fixed_name = String::from("none");
+    for df in maestro::ir::styles::all_styles() {
+        if let Ok(s) = maestro::engine::analysis::analyze_network(net, &df, &hw, true) {
+            if s.per_layer.len() == net.layers.len() && s.runtime < best_fixed {
+                best_fixed = s.runtime;
+                best_fixed_name = df.name.clone();
+            }
+        }
+    }
+    assert!(
+        best_fixed.is_finite(),
+        "no fixed Table 3 style maps every smoke-network layer; the mapspace record would be \
+         invalid JSON (inf) — fix the smoke workload or the comparison"
+    );
+    let improvement = best_fixed / mapped.network.runtime.max(1e-12);
+    println!("mapper: {}", mapped.stats.summary());
+    println!(
+        "mapper-vs-fixed: runtime {} vs best fixed '{best_fixed_name}' {} -> x{improvement:.4}",
+        mapped.network.runtime, best_fixed
+    );
+    assert!(
+        mapped.network.runtime <= best_fixed * (1.0 + 1e-9),
+        "the mapper's space contains the fixed styles; it cannot lose"
+    );
+    let mapspace_json = format!(
+        "{{\"shapes\": {}, \"combos\": {}, \"candidates\": {}, \"evaluated\": {}, \
+         \"mapper_runtime\": {:.3}, \"best_fixed\": \"{best_fixed_name}\", \
+         \"best_fixed_runtime\": {:.3}, \"runtime_improvement\": {improvement:.4}}}",
+        mapped.stats.shapes,
+        mapped.stats.combos,
+        mapped.stats.candidates,
+        mapped.stats.evaluated,
+        mapped.network.runtime,
+        best_fixed,
+    );
+
     let json = scaling_json(
         "ci_smoke(kc-p)",
         net,
         &runs,
         (&cold.stats, &warm.stats),
         (&exhaustive.stats, &guided.stats, frontier_reached),
+        &mapspace_json,
     );
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
     std::fs::write(&path, json).expect("write bench smoke json");

@@ -13,18 +13,28 @@
 //!
 //! # Memory
 //!
-//! The store never evicts: that is what makes warm-start persistence
-//! and cross-sweep reuse possible, and it means a shared-store DSE
-//! sweep grows O((variant, PEs) pairs x unique shapes) — every pair
-//! contributes its own keys, which is exactly the growth the private
-//! caches' per-pair `clear_cache` avoids. Entries are small (a
-//! [`LayerStats`] plus two short strings, ~300 bytes), so zoo networks
-//! over CLI-scale spaces stay modest, but paper-scale spaces
-//! (thousands of pairs) should keep the default (no shared store,
-//! memory bounded per shard) until the eviction/compaction follow-up
-//! lands (see ROADMAP). Whole-network analysis outside the DSE keys
-//! only on (shape, dataflow, hardware) actually analyzed and stays
-//! tiny.
+//! By default the store never evicts: that is what makes warm-start
+//! persistence and cross-sweep reuse possible, and it means a
+//! shared-store DSE sweep grows O((variant, PEs) pairs x unique
+//! shapes) — every pair contributes its own keys, which is exactly the
+//! growth the private caches' per-pair `clear_cache` avoids. Entries
+//! are small (a [`LayerStats`] plus two short strings, ~300 bytes), so
+//! zoo networks over CLI-scale spaces stay modest.
+//!
+//! For mapspace-scale sweeps, [`SharedStore::with_max_entries`] bounds
+//! the store with **coarse per-shard FIFO eviction** (the CLI's
+//! `--cache-cap`): each shard keeps its own insertion-order queue and
+//! drops its oldest entries when it fills. Coarse on purpose — the
+//! bound is enforced per shard (so the global cap is approximate, up
+//! to the shard rounding), eviction order is insertion order (not
+//! recency), and an evicted entry that was never flushed is simply
+//! gone (a later `flush` will not write it — combine `--cache-cap`
+//! with `--cache-file` only when losing cold entries from the file is
+//! acceptable). Results are unaffected either way: cached values are
+//! pure functions of their keys, so an eviction only turns a future
+//! hit into a recompute (the determinism tests in
+//! `rust/tests/dse_parallel.rs` hold for any warmth, including
+//! post-eviction).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -103,14 +113,28 @@ pub struct FlushReport {
     pub total: usize,
 }
 
+/// One lock shard: the key map plus (for capped stores) the FIFO
+/// insertion order backing eviction.
+#[derive(Debug, Default)]
+struct Shard {
+    map: HashMap<CacheKey, Slot>,
+    /// Insertion order; maintained only when the store is capped. A key
+    /// appears at most once (inserts are first-wins and eviction
+    /// removes the map entry together with its queue slot).
+    order: std::collections::VecDeque<CacheKey>,
+}
+
 /// The shared concurrent analysis cache. See the module docs for the
 /// concurrency and memory story; see [`super::persist`] for the on-disk
 /// format behind [`SharedStore::load`] / [`SharedStore::flush`].
 pub struct SharedStore {
-    shards: Vec<RwLock<HashMap<CacheKey, Slot>>>,
+    shards: Vec<RwLock<Shard>>,
+    /// Per-shard entry cap; 0 = unbounded (the default).
+    shard_cap: usize,
     hits: AtomicU64,
     disk_hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
     meta: Mutex<PersistMeta>,
 }
 
@@ -141,14 +165,54 @@ impl SharedStore {
 
     /// A store with `n` shards (rounded up to a power of two, min 1).
     pub fn with_shards(n: usize) -> SharedStore {
-        let n = n.max(1).next_power_of_two();
+        SharedStore::build(n, 0)
+    }
+
+    /// A store bounded to roughly `max_entries` with coarse per-shard
+    /// FIFO eviction (see the module docs for exactly how coarse).
+    /// Small caps get fewer shards so the bound stays meaningful; the
+    /// effective global bound is `shard count x per-shard cap`, within
+    /// rounding of `max_entries`.
+    pub fn with_max_entries(max_entries: usize) -> SharedStore {
+        let max_entries = max_entries.max(1);
+        // Largest power of two <= min(16, max_entries).
+        let mut n_shards = 1usize;
+        while n_shards * 2 <= max_entries.min(16) {
+            n_shards *= 2;
+        }
+        SharedStore::build(n_shards, max_entries.div_ceil(n_shards))
+    }
+
+    fn build(n_shards: usize, shard_cap: usize) -> SharedStore {
+        let n = n_shards.max(1).next_power_of_two();
         SharedStore {
-            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            shards: (0..n).map(|_| RwLock::new(Shard::default())).collect(),
+            shard_cap,
             hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             meta: Mutex::new(PersistMeta::default()),
         }
+    }
+
+    /// The effective entry bound (0 = unbounded).
+    pub fn max_entries(&self) -> usize {
+        self.shard_cap * self.shards.len()
+    }
+
+    /// Insert a slot into a locked shard, evicting FIFO first when the
+    /// shard is at its cap. Callers guarantee the key is vacant.
+    fn insert_slot(&self, shard: &mut Shard, key: CacheKey, slot: Slot) {
+        if self.shard_cap > 0 {
+            while shard.map.len() >= self.shard_cap {
+                let Some(oldest) = shard.order.pop_front() else { break };
+                shard.map.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            shard.order.push_back(key);
+        }
+        shard.map.insert(key, slot);
     }
 
     fn shard_of(&self, key: &CacheKey) -> usize {
@@ -165,7 +229,7 @@ impl SharedStore {
     /// Look up a key, counting the hit/miss (and its disk/mem origin).
     pub fn get(&self, key: &CacheKey) -> Option<CacheHit> {
         let shard = self.shards[self.shard_of(key)].read().unwrap();
-        match shard.get(key) {
+        match shard.map.get(key) {
             Some(slot) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 if slot.from_disk {
@@ -187,14 +251,15 @@ impl SharedStore {
     /// preserves its origin/persistence flags.
     pub fn insert(&self, key: CacheKey, value: CacheValue) {
         let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
-        shard
-            .entry(key)
-            .or_insert(Slot { value, from_disk: false, persisted: false });
+        if shard.map.contains_key(&key) {
+            return;
+        }
+        self.insert_slot(&mut shard, key, Slot { value, from_disk: false, persisted: false });
     }
 
     /// Entries currently held.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -215,10 +280,17 @@ impl SharedStore {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries dropped by the FIFO cap (always 0 for unbounded stores).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
     /// Drop every entry (counters and persistence bookkeeping survive).
     pub fn clear(&self) {
         for s in &self.shards {
-            s.write().unwrap().clear();
+            let mut shard = s.write().unwrap();
+            shard.map.clear();
+            shard.order.clear();
         }
     }
 
@@ -240,7 +312,7 @@ impl SharedStore {
             let rebinding = !matches!(&meta.loaded, Some((p, _)) if p.as_path() == path);
             if rebinding {
                 for s in &self.shards {
-                    for slot in s.write().unwrap().values_mut() {
+                    for slot in s.write().unwrap().map.values_mut() {
                         slot.persisted = false;
                     }
                 }
@@ -250,18 +322,19 @@ impl SharedStore {
         let mut loaded = 0;
         for (key, value) in parsed.entries {
             let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
-            match shard.entry(key) {
-                std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(Slot { value, from_disk: true, persisted: true });
-                    loaded += 1;
+            if shard.map.contains_key(&key) {
+                // The key exists in memory AND in the file; values are
+                // pure functions of keys, so the in-memory copy is
+                // already what the file holds — keep it, but record
+                // that this file has it.
+                if let Some(slot) = shard.map.get_mut(&key) {
+                    slot.persisted = true;
                 }
-                std::collections::hash_map::Entry::Occupied(mut e) => {
-                    // The key exists in memory AND in the file; values
-                    // are pure functions of keys, so the in-memory copy
-                    // is already what the file holds — keep it, but
-                    // record that this file has it.
-                    e.get_mut().persisted = true;
-                }
+            } else {
+                // Loads respect the FIFO cap too: a capped store keeps
+                // the newest `max_entries` records of the file.
+                self.insert_slot(&mut shard, key, Slot { value, from_disk: true, persisted: true });
+                loaded += 1;
             }
         }
         LoadReport { loaded, dropped_bytes: parsed.dropped_bytes, warning: parsed.warning }
@@ -295,7 +368,7 @@ impl SharedStore {
             let mut records = Vec::new();
             for s in &self.shards {
                 let shard = s.read().unwrap();
-                for (key, slot) in shard.iter() {
+                for (key, slot) in shard.map.iter() {
                     if only_dirty && slot.persisted {
                         continue;
                     }
@@ -322,7 +395,7 @@ impl SharedStore {
 
         // Exactly the snapshot is now on disk.
         for (_, _, key) in &records {
-            if let Some(slot) = self.shards[self.shard_of(key)].write().unwrap().get_mut(key) {
+            if let Some(slot) = self.shards[self.shard_of(key)].write().unwrap().map.get_mut(key) {
                 slot.persisted = true;
             }
         }
@@ -370,6 +443,54 @@ mod tests {
         store.insert(k, failure("second"));
         assert_eq!(store.get(&k).unwrap().value, failure("first"));
         assert_eq!(store.len(), 1);
+    }
+
+    fn distinct_keys(n: u64) -> Vec<CacheKey> {
+        // Vary K: every key gets a distinct ShapeKey.
+        (1..=n)
+            .map(|k| {
+                let layer = crate::model::layer::Layer::conv2d("k", 1, k, 8, 16, 16, 3, 3, 1);
+                key_of(&layer, &styles::kc_p())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn capped_store_evicts_fifo_and_stays_bounded() {
+        let store = SharedStore::with_max_entries(8);
+        assert_eq!(store.max_entries(), 8);
+        let keys = distinct_keys(50);
+        for (i, k) in keys.iter().enumerate() {
+            store.insert(*k, failure(&i.to_string()));
+        }
+        assert!(store.len() <= store.max_entries(), "len {} over cap", store.len());
+        assert_eq!(store.evictions() as usize, 50 - store.len(), "every overflow was evicted");
+        // An evicted key is a clean miss and can be re-inserted.
+        let evicted = keys.iter().find(|k| store.get(k).is_none()).expect("something was evicted");
+        store.insert(*evicted, failure("again"));
+        assert_eq!(store.get(evicted).unwrap().value, failure("again"));
+        assert!(store.len() <= store.max_entries());
+    }
+
+    #[test]
+    fn unbounded_store_never_evicts() {
+        let store = SharedStore::new();
+        assert_eq!(store.max_entries(), 0);
+        for (i, k) in distinct_keys(50).iter().enumerate() {
+            store.insert(*k, failure(&i.to_string()));
+        }
+        assert_eq!(store.len(), 50);
+        assert_eq!(store.evictions(), 0);
+    }
+
+    #[test]
+    fn tiny_cap_uses_fewer_shards_for_a_meaningful_bound() {
+        let store = SharedStore::with_max_entries(2);
+        for (i, k) in distinct_keys(20).iter().enumerate() {
+            store.insert(*k, failure(&i.to_string()));
+        }
+        assert!(store.len() <= store.max_entries());
+        assert!(store.max_entries() <= 4, "a cap of 2 must not balloon to 16 shards");
     }
 
     #[test]

@@ -10,9 +10,12 @@
 //!
 //! [`sweep`] splits the (variant, PEs) outer product into contiguous
 //! shards executed by a scoped worker pool (the coordinator's
-//! bounded-queue idiom); each shard folds its survivors into a streaming
-//! Pareto frontier + counters, and shards merge deterministically in
-//! shard order — see [`crate::dse`] module docs for the architecture.
+//! bounded-queue idiom) that stays alive across strategy waves — a
+//! guided or mapper-driven run issues many small waves, and per-wave
+//! pool spawning made thread churn scale with the wave count. Each
+//! shard folds its survivors into a streaming Pareto frontier +
+//! counters, and shards merge deterministically in shard order — see
+//! [`crate::dse`] module docs for the architecture.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -22,7 +25,7 @@ use anyhow::{ensure, Result};
 use crate::cache::SharedStore;
 use crate::dse::pareto::ParetoAccumulator;
 use crate::dse::strategy::{
-    self, CandidateEval, CandidateGen as _, PairBatch, SearchBudget, SearchStrategy, WaveFeedback,
+    self, CandidateEval, CandidateGen, PairBatch, SearchBudget, SearchStrategy, WaveFeedback,
 };
 use crate::engine::analysis::Analyzer;
 use crate::engine::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
@@ -626,76 +629,67 @@ fn sweep_shard(
     out
 }
 
-/// Execute one strategy wave: shard the batch list contiguously, run
-/// the shards on a scoped worker pool, and merge in shard-index order
-/// (which replays the wave's serial batch order exactly — the same
-/// determinism contract as the pre-strategy engine).
-#[allow(clippy::too_many_arguments)]
-fn run_wave(
-    net: &Network,
-    space: &super::space::DesignSpace,
-    noc_hops: u64,
-    wave: Vec<PairBatch>,
+/// One shard of work for the persistent wave pool: the wave's batch
+/// list (shared), the shard's contiguous batch range, and the result
+/// slot index (= shard index within the wave).
+type ShardJob = (Arc<Vec<PairBatch>>, std::ops::Range<usize>, usize);
+
+/// Mutable sweep state threaded through the wave loop.
+struct SweepState {
+    frontier: ParetoAccumulator,
+    stats: SweepStats,
+    points: Vec<DesignPoint>,
+    feedback: WaveFeedback,
+    /// Candidates the budget still admits.
+    remaining: u64,
+}
+
+/// The strategy wave loop, independent of how waves execute: pull the
+/// next wave, truncate it to the remaining budget, hand it to
+/// `execute` (which returns the shard outcomes **in shard-index
+/// order**), and merge — shard-index order replays the wave's serial
+/// batch order exactly, the same determinism contract as the
+/// pre-strategy engine. `execute` receives the shard size so serial
+/// and pooled execution partition identically.
+fn sweep_waves(
+    gen: &mut dyn CandidateGen,
     config: &SweepConfig,
+    t0: &std::time::Instant,
     collect_feedback: bool,
-    cache: Option<&Arc<SharedStore>>,
-    frontier: &mut ParetoAccumulator,
-    stats: &mut SweepStats,
-    points: &mut Vec<DesignPoint>,
-    feedback: &mut WaveFeedback,
+    state: &mut SweepState,
+    execute: &mut dyn FnMut(Vec<PairBatch>, usize) -> Vec<ShardOutcome>,
 ) {
-    let n_batches = wave.len();
-    let shard_size = if config.shard_size > 0 { config.shard_size } else { (n_batches / 64).max(1) };
-    let shards: Vec<(usize, &[PairBatch])> = wave.chunks(shard_size).enumerate().collect();
-    let n_shards = shards.len();
-    let threads = config.effective_threads().min(n_shards).max(1);
-    let keep_all_points = config.keep_all_points;
-
-    let mut shard_outcomes: Vec<Option<ShardOutcome>>;
-    if threads <= 1 {
-        shard_outcomes = shards
-            .into_iter()
-            .map(|(_, batches)| {
-                Some(sweep_shard(net, space, noc_hops, batches, keep_all_points, collect_feedback, cache))
-            })
-            .collect();
-    } else {
-        let slots: std::sync::Mutex<Vec<Option<ShardOutcome>>> =
-            std::sync::Mutex::new((0..n_shards).map(|_| None).collect());
-        let queue = JobQueue::preloaded(shards);
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                let queue = queue.clone();
-                let slots = &slots;
-                scope.spawn(move || {
-                    while let Some((index, batches)) = queue.pop() {
-                        let shard = sweep_shard(
-                            net,
-                            space,
-                            noc_hops,
-                            batches,
-                            keep_all_points,
-                            collect_feedback,
-                            cache,
-                        );
-                        slots.lock().unwrap()[index] = Some(shard);
-                    }
-                });
-            }
-        });
-        shard_outcomes = slots.into_inner().unwrap();
-    }
-
-    // Deterministic merge: shard order == the wave's serial batch order.
-    for slot in shard_outcomes {
-        let shard = slot.expect("every queued shard was processed");
-        frontier.merge(&shard.frontier);
-        stats.absorb(&shard.stats);
-        points.extend(shard.points);
-        if collect_feedback {
-            feedback.evals.extend(shard.feedback.evals);
-            feedback.dead_pairs.extend(shard.feedback.dead_pairs);
+    loop {
+        if state.remaining == 0 {
+            break;
         }
+        if config.budget.max_seconds > 0.0 && t0.elapsed().as_secs_f64() >= config.budget.max_seconds {
+            break;
+        }
+        let last = std::mem::take(&mut state.feedback);
+        let mut wave = gen.next_wave(&state.frontier, &last);
+        if wave.is_empty() {
+            break;
+        }
+        state.stats.budget_skipped += strategy::truncate_wave(&mut wave, state.remaining);
+        let admitted: u64 = wave.iter().map(|b| b.candidates()).sum();
+        state.remaining -= admitted;
+        if wave.is_empty() {
+            break;
+        }
+        let n_batches = wave.len();
+        let shard_size =
+            if config.shard_size > 0 { config.shard_size } else { (n_batches / 64).max(1) };
+        for shard in execute(wave, shard_size) {
+            state.frontier.merge(&shard.frontier);
+            state.stats.absorb(&shard.stats);
+            state.points.extend(shard.points);
+            if collect_feedback {
+                state.feedback.evals.extend(shard.feedback.evals);
+                state.feedback.dead_pairs.extend(shard.feedback.dead_pairs);
+            }
+        }
+        state.stats.waves += 1;
     }
 }
 
@@ -749,51 +743,129 @@ pub fn sweep(
     } else {
         None
     };
-    let mut frontier = ParetoAccumulator::new();
-    let mut stats = SweepStats {
-        total_designs: space.size(),
-        strategy: config.strategy.name().to_string(),
-        ..SweepStats::default()
+    let mut state = SweepState {
+        frontier: ParetoAccumulator::new(),
+        stats: SweepStats {
+            total_designs: space.size(),
+            strategy: config.strategy.name().to_string(),
+            ..SweepStats::default()
+        },
+        points: Vec::new(),
+        feedback: WaveFeedback::default(),
+        remaining: if config.budget.max_designs > 0 { config.budget.max_designs } else { u64::MAX },
     };
-    let mut points = Vec::new();
-    let mut feedback = WaveFeedback::default();
-    let mut remaining =
-        if config.budget.max_designs > 0 { config.budget.max_designs } else { u64::MAX };
-    loop {
-        if remaining == 0 {
-            break;
-        }
-        if config.budget.max_seconds > 0.0 && t0.elapsed().as_secs_f64() >= config.budget.max_seconds {
-            break;
-        }
-        let last = std::mem::take(&mut feedback);
-        let mut wave = gen.next_wave(&frontier, &last);
-        if wave.is_empty() {
-            break;
-        }
-        stats.budget_skipped += strategy::truncate_wave(&mut wave, remaining);
-        let admitted: u64 = wave.iter().map(|b| b.candidates()).sum();
-        remaining -= admitted;
-        if wave.is_empty() {
-            break;
-        }
-        run_wave(
-            net,
-            space,
-            noc_hops,
-            wave,
-            config,
-            collect_feedback,
-            cache,
-            &mut frontier,
-            &mut stats,
-            &mut points,
-            &mut feedback,
-        );
-        stats.waves += 1;
+    let threads = config.effective_threads();
+    let keep_all_points = config.keep_all_points;
+    if threads <= 1 {
+        // Serial: execute each wave's shards inline, in order.
+        sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
+            wave.chunks(shard_size)
+                .map(|batches| {
+                    sweep_shard(net, space, noc_hops, batches, keep_all_points, collect_feedback, cache)
+                })
+                .collect()
+        });
+    } else {
+        // One scoped worker pool for the *whole* sweep: feedback-driven
+        // strategies run many small waves, and spawning a pool per wave
+        // made thread churn scale with the wave count. The pool's job
+        // queue stays open across waves; each wave enqueues its shards
+        // (the same contiguous partition as the serial path) and
+        // collects exactly its shard count of results, so per-wave
+        // barrier semantics — and with them the shard-index merge order
+        // and the bit-determinism contract — are unchanged.
+        std::thread::scope(|scope| {
+            let (job_tx, job_queue) = JobQueue::<ShardJob>::bounded(threads * 2);
+            let (res_tx, res_rx) = std::sync::mpsc::channel::<(usize, ShardOutcome)>();
+            for _ in 0..threads {
+                let queue = job_queue.clone();
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    while let Some((wave, range, slot)) = queue.pop() {
+                        // Catch panics so the wave loop (blocked on this
+                        // shard's result) can finish the wave and the
+                        // scope join re-raises, instead of hanging.
+                        let shard = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            sweep_shard(
+                                net,
+                                space,
+                                noc_hops,
+                                &wave[range],
+                                keep_all_points,
+                                collect_feedback,
+                                cache,
+                            )
+                        }));
+                        match shard {
+                            Ok(shard) => {
+                                if res_tx.send((slot, shard)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(panic) => {
+                                let _ = res_tx.send((slot, ShardOutcome::default()));
+                                std::panic::resume_unwind(panic);
+                            }
+                        }
+                    }
+                });
+            }
+            drop(res_tx);
+            sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
+                let wave = Arc::new(wave);
+                let n = wave.len();
+                let n_shards = n.div_ceil(shard_size);
+                let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
+                slots.resize_with(n_shards, || None);
+                // A dead pool (every worker panicked) must never hang
+                // the wave loop: the result channel reports it (all
+                // res_tx clones dropped -> recv errors), so results are
+                // drained with `recv` while jobs go out with `try_send`
+                // — a full queue yields to draining instead of blocking
+                // on workers that may no longer exist.
+                let mut recv_one = |slots: &mut Vec<Option<ShardOutcome>>| {
+                    let (slot, shard) = res_rx
+                        .recv()
+                        .expect("wave pool died (worker panic) before finishing the wave");
+                    slots[slot] = Some(shard);
+                };
+                let mut received = 0usize;
+                for slot in 0..n_shards {
+                    let start = slot * shard_size;
+                    let end = (start + shard_size).min(n);
+                    let mut job = (Arc::clone(&wave), start..end, slot);
+                    loop {
+                        use std::sync::mpsc::TrySendError;
+                        match job_tx.try_send(job) {
+                            Ok(()) => break,
+                            Err(TrySendError::Full(back)) => {
+                                job = back;
+                                recv_one(&mut slots);
+                                received += 1;
+                            }
+                            // The scope-local `job_queue` keeps the
+                            // receiver alive for the whole sweep.
+                            Err(TrySendError::Disconnected(_)) => {
+                                unreachable!("job queue receiver outlives the sweep loop")
+                            }
+                        }
+                    }
+                }
+                for _ in received..n_shards {
+                    recv_one(&mut slots);
+                }
+                slots.into_iter().map(|s| s.expect("every shard slot filled")).collect()
+            });
+            // Close the queue so the pool drains and the scope joins.
+            drop(job_tx);
+        });
     }
-    stats.seconds = t0.elapsed().as_secs_f64();
-    Ok(SweepOutcome { frontier: frontier.into_sorted(), points, stats })
+    state.stats.seconds = t0.elapsed().as_secs_f64();
+    Ok(SweepOutcome {
+        frontier: state.frontier.into_sorted(),
+        points: state.points,
+        stats: state.stats,
+    })
 }
 
 #[cfg(test)]

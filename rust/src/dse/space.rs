@@ -3,6 +3,13 @@
 //! *mapping variants* (tile-size knobs of the Table 3 styles), under an
 //! area/power budget.
 //!
+//! The variant axis is backed by the [`crate::mapspace`] subsystem: the
+//! pinned `fig13`/`ci_smoke` spaces instantiate the legacy hand-picked
+//! tile-value grids through the style templates (bit-identical to the
+//! pre-mapspace lists), while [`DesignSpace::mapspace`] *generates* the
+//! axis by enumerating a template's legal tilings against a layer shape
+//! and carries tile-coordinate adjacency for the guided strategy.
+//!
 //! Note on buffer sizing: following §5.2 ("the DSE tool places the exact
 //! amount buffers MAESTRO reported"), L1/L2 capacities are *derived* from
 //! each mapping variant's buffer requirement rather than swept blindly —
@@ -11,9 +18,14 @@
 //! "larger buffers do not always provide higher throughput" visible in
 //! Fig 13.
 
+use anyhow::{Context, Result};
+
 use crate::ir::dataflow::Dataflow;
-use crate::ir::dims::Dim::*;
-use crate::ir::directive::{Directive as D, Extent as E};
+// The parametric Table 3 constructors moved to `ir::styles` (they are
+// style definitions); re-exported here for the existing callers.
+pub use crate::ir::styles::{kc_p_ct, yr_p_ck, yx_p_xt};
+use crate::mapspace::{self, StyleTemplate};
+use crate::model::layer::Layer;
 
 /// A swept design space.
 #[derive(Debug, Clone)]
@@ -22,6 +34,13 @@ pub struct DesignSpace {
     pub bandwidths: Vec<u64>,
     pub noc_latency: u64,
     pub variants: Vec<Dataflow>,
+    /// Tile-coordinate adjacency of the variant axis (parallel to
+    /// `variants`; see [`mapspace::tile_adjacency`]). Empty means the
+    /// axis is an ordered 1-D list and neighbors are index ±1 — the
+    /// legacy fig13 spaces, whose hand-pinned value lists are already
+    /// tile-sorted. [`DesignSpace::mapspace`] fills it, and the guided
+    /// strategy expands frontier neighborhoods along it.
+    pub variant_adjacency: Vec<Vec<usize>>,
     /// Area budget, mm^2 (Fig 13 uses Eyeriss's 16 mm^2).
     pub area_budget_mm2: f64,
     /// Power budget, mW (450 mW).
@@ -52,11 +71,42 @@ impl DesignSpace {
         (pair / self.pes.len(), pair % self.pes.len())
     }
 
-    /// Axis-aligned grid neighbors of a pair (±1 variant, ±1 PEs) —
-    /// the neighborhood the guided strategy expands around frontier
-    /// pairs. Deterministic order.
+    /// Neighbors of a variant index along the variant axis: the tile
+    /// adjacency when this space carries one ([`DesignSpace::mapspace`]),
+    /// otherwise index ±1. Deterministic order (tile neighbors first,
+    /// ascending).
+    pub fn variant_neighbors(&self, v: usize) -> Vec<usize> {
+        if !self.variant_adjacency.is_empty() {
+            return self.variant_adjacency[v].clone();
+        }
+        let mut out = Vec::with_capacity(2);
+        if v > 0 {
+            out.push(v - 1);
+        }
+        if v + 1 < self.variants.len() {
+            out.push(v + 1);
+        }
+        out
+    }
+
+    /// Grid neighbors of a pair — one step along the variant axis
+    /// ([`DesignSpace::variant_neighbors`], tile-coordinate adjacency
+    /// when available) or ±1 PEs — the neighborhood the guided strategy
+    /// expands around frontier pairs. Deterministic order.
     pub fn pair_neighbors(&self, pair: usize) -> Vec<usize> {
-        grid_neighbors(self.variants.len(), self.pes.len(), pair)
+        let n_pes = self.pes.len();
+        let (v, p) = (pair / n_pes, pair % n_pes);
+        let mut out = Vec::with_capacity(4);
+        for v2 in self.variant_neighbors(v) {
+            out.push(v2 * n_pes + p);
+        }
+        if p > 0 {
+            out.push(pair - 1);
+        }
+        if p + 1 < n_pes {
+            out.push(pair + 1);
+        }
+        out
     }
 
     /// A seconds-scale Fig 13 space for CI smoke runs and tests.
@@ -89,9 +139,50 @@ impl DesignSpace {
             bandwidths,
             noc_latency: 2,
             variants,
+            variant_adjacency: Vec::new(),
             area_budget_mm2: 16.0,
             power_budget_mw: 450.0,
         }
+    }
+
+    /// A design space whose variant axis is *generated*: the family's
+    /// [`StyleTemplate`] enumerated against `layer`'s shape at the
+    /// deepest PE point of the axis (tilings that need more PEs than
+    /// the axis offers would be unmappable everywhere; shallower PE
+    /// points can still find individual pairs unmappable — the sweep's
+    /// `unmappable` accounting covers them). The enumeration is
+    /// resolve-validated, fingerprint-deduplicated, and deterministic,
+    /// and the space carries the tile-coordinate adjacency the guided
+    /// strategy uses for neighborhood expansion. `fig13`/`ci_smoke`
+    /// remain the hand-pinned compatibility spaces.
+    pub fn mapspace(
+        family: &str,
+        layer: &Layer,
+        tile_resolution: usize,
+        pes_resolution: usize,
+        bw_resolution: usize,
+    ) -> Result<DesignSpace> {
+        let template = StyleTemplate::by_name(family)
+            .with_context(|| format!("unknown mapspace family '{family}' (c-p | x-p | yx-p | yr-p | kc-p)"))?;
+        let pes = geometric_range(8, 2048, pes_resolution);
+        let bandwidths = geometric_range(1, 256, bw_resolution);
+        let max_pes = *pes.last().expect("non-empty PE axis");
+        let en = mapspace::enumerate(&template, layer, max_pes, tile_resolution);
+        anyhow::ensure!(
+            !en.dataflows.is_empty(),
+            "mapspace '{family}' has no tiling that resolves on layer '{}'",
+            layer.name
+        );
+        let variant_adjacency = mapspace::tile_adjacency(&en.coords, &en.template_of);
+        Ok(DesignSpace {
+            pes,
+            bandwidths,
+            noc_latency: 2,
+            variants: en.dataflows,
+            variant_adjacency,
+            area_budget_mm2: 16.0,
+            power_budget_mw: 450.0,
+        })
     }
 }
 
@@ -144,77 +235,31 @@ pub fn geometric_range(lo: u64, hi: u64, n: usize) -> Vec<u64> {
     out
 }
 
-/// KC-P (NVDLA-like) with a parametric C-tile / cluster size.
-pub fn kc_p_ct(ct: u64) -> Dataflow {
-    Dataflow::new(
-        &format!("KC-P(ct={ct})"),
-        vec![
-            D::spatial(E::lit(1), E::lit(1), K),
-            D::temporal(E::lit(ct), E::lit(ct), C),
-            D::temporal(E::sz(R), E::sz(R), R),
-            D::temporal(E::sz(S), E::sz(S), S),
-            D::temporal(E::sz(R), E::lit(1), Y),
-            D::temporal(E::sz(S), E::lit(1), X),
-            D::cluster(E::lit(ct)),
-            D::spatial(E::lit(1), E::lit(1), C),
-        ],
-    )
-}
+// ---------------------------------------------------------------------
+// The pinned fig13/ci_smoke variant lists (mapspace compatibility path)
+// ---------------------------------------------------------------------
+//
+// These are the hand-picked tile-value grids the fig13 pins were
+// recorded against, now instantiated through the mapspace style
+// templates instead of hand-coded loops. `instantiate_grid` applies no
+// filtering and no dedup, so the lists are bit-identical to the
+// pre-mapspace ones (same names, same directives, same fingerprints —
+// pinned in `rust/tests/mapspace.rs`). Spaces that want the *generated*
+// variant axis use [`DesignSpace::mapspace`].
 
-/// YR-P (Eyeriss-like) with parametric C/K tiles.
-pub fn yr_p_ck(c_tile: u64, k_tile: u64) -> Dataflow {
-    Dataflow::new(
-        &format!("YR-P(c={c_tile},k={k_tile})"),
-        vec![
-            D::temporal(E::lit(c_tile), E::lit(c_tile), C),
-            D::temporal(E::lit(k_tile), E::lit(k_tile), K),
-            D::spatial(E::sz(R), E::lit(1), Y),
-            D::temporal(E::sz(S), E::lit(1), X),
-            D::temporal(E::sz(R), E::sz(R), R),
-            D::temporal(E::sz(S), E::sz(S), S),
-            D::cluster(E::sz(R)),
-            D::spatial(E::lit(1), E::lit(1), Y),
-            D::spatial(E::lit(1), E::lit(1), R),
-        ],
-    )
-}
-
-/// YX-P (ShiDianNao-like) with a parametric X tile.
-pub fn yx_p_xt(xt: u64) -> Dataflow {
-    Dataflow::new(
-        &format!("YX-P(xt={xt})"),
-        vec![
-            D::temporal(E::lit(1), E::lit(1), K),
-            D::spatial(E::sz(R), E::lit(1), Y),
-            D::temporal(E::sz_plus(S, xt as i64 - 1), E::lit(xt), X),
-            D::temporal(E::lit(1), E::lit(1), C),
-            D::temporal(E::sz(R), E::sz(R), R),
-            D::temporal(E::sz(S), E::sz(S), S),
-            D::cluster(E::lit(xt)),
-            D::spatial(E::sz(S), E::lit(1), X),
-        ],
-    )
-}
-
-/// The default KC-P mapping-variant sweep.
+/// The default KC-P mapping-variant sweep (pinned value grid).
 pub fn kc_p_variants() -> Vec<Dataflow> {
-    [4, 8, 16, 32, 64, 128].iter().map(|&ct| kc_p_ct(ct)).collect()
+    StyleTemplate::kc_p().instantiate_grid(&[&[4, 8, 16, 32, 64, 128]])
 }
 
-/// The default YR-P variant sweep.
+/// The default YR-P variant sweep (pinned value grid).
 pub fn yr_p_variants() -> Vec<Dataflow> {
-    let mut v = Vec::new();
-    for c in [1, 2, 4, 8] {
-        for k in [1, 2, 4] {
-            v.push(yr_p_ck(c, k));
-        }
-    }
-    v
+    StyleTemplate::yr_p().instantiate_grid(&[&[1, 2, 4, 8], &[1, 2, 4]])
 }
 
-/// The default YX-P variant sweep.
+/// The default YX-P variant sweep (pinned value grid).
 pub fn yx_p_variants() -> Vec<Dataflow> {
-    [2, 4, 8, 16, 32].iter().map(|&xt| yx_p_xt(xt)).collect()
+    StyleTemplate::yx_p().instantiate_grid(&[&[2, 4, 8, 16, 32]])
 }
 
 #[cfg(test)]
@@ -283,13 +328,18 @@ mod tests {
             pes: vec![8, 32, 128, 512],
             bandwidths: vec![1, 16],
             noc_latency: 2,
+            variant_adjacency: Vec::new(),
             area_budget_mm2: 16.0,
             power_budget_mw: 450.0,
         };
         for pair in 0..nv * np {
             let (v, p) = (pair / np, pair % np);
             let ns = grid_neighbors(nv, np, pair);
-            assert_eq!(space.pair_neighbors(pair), ns, "the method delegates to grid_neighbors");
+            assert_eq!(
+                space.pair_neighbors(pair),
+                ns,
+                "without tile adjacency, pair_neighbors matches grid_neighbors exactly"
+            );
             let expected = usize::from(v > 0)
                 + usize::from(v + 1 < nv)
                 + usize::from(p > 0)
@@ -323,6 +373,36 @@ mod tests {
         assert_eq!(s.bandwidths.len(), 9);
         let square = DesignSpace::fig13("kc-p", 6);
         assert_eq!(square.pes.len(), square.bandwidths.len());
+    }
+
+    #[test]
+    fn mapspace_backed_space_generates_and_carries_adjacency() {
+        let layer = vgg16::conv13();
+        let s = DesignSpace::mapspace("kc-p", &layer, 5, 4, 3).unwrap();
+        assert!(s.variants.len() >= 2, "C=512 offers several legal C tiles");
+        assert_eq!(s.variant_adjacency.len(), s.variants.len());
+        assert_eq!(s.pes.len(), 4);
+        assert_eq!(s.bandwidths.len(), 3);
+        // Every generated variant resolves at the deepest PE point.
+        let max_pes = *s.pes.last().unwrap();
+        for v in &s.variants {
+            v.resolve(&layer, max_pes).unwrap_or_else(|e| panic!("{}: {e}", v.name));
+        }
+        // Adjacency: in-bounds, irreflexive, symmetric; pair_neighbors
+        // routes through it.
+        for (i, ns) in s.variant_adjacency.iter().enumerate() {
+            for &j in ns {
+                assert!(j < s.variants.len() && j != i);
+                assert!(s.variant_adjacency[j].contains(&i), "adjacency must be symmetric");
+            }
+            assert_eq!(s.variant_neighbors(i), *ns);
+        }
+        // A one-knob mapspace axis is a sorted line: interior variants
+        // have exactly two tile neighbors.
+        if s.variants.len() >= 3 {
+            assert_eq!(s.variant_adjacency[1].len(), 2);
+        }
+        assert!(DesignSpace::mapspace("zz-p", &layer, 5, 4, 3).is_err());
     }
 
     #[test]

@@ -38,7 +38,10 @@
 //!   objective values); pairs whose best-possible value (top-bandwidth
 //!   runtime is a lower bound) is already covered by the frontier are
 //!   eliminated; pairs whose settled value sits on the frontier expand
-//!   their grid neighborhood; and when refinement dries up, every
+//!   their grid neighborhood (±1 PEs, and one step along the variant
+//!   axis — *tile-coordinate* adjacency when the space is
+//!   mapspace-backed, index ±1 on the legacy pinned axes); and when
+//!   refinement dries up, every
 //!   still-untouched pair is probed once so no frontier pair can hide.
 //!   The per-pair state machine makes duplicate evaluations impossible
 //!   (each (pair, bandwidth) is emitted at most once). On convergence
@@ -49,7 +52,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::dse::pareto::ParetoAccumulator;
-use crate::dse::space::{coarse_axis, grid_neighbors, DesignSpace};
+use crate::dse::space::{coarse_axis, DesignSpace};
 use crate::util::rng::Rng;
 
 /// A batch of candidate designs sharing one (variant, PEs) pair — the
@@ -347,6 +350,13 @@ struct GuidedGen {
     n_variants: usize,
     n_pes: usize,
     n_bw: usize,
+    /// Per-pair grid neighbors, snapshotted from
+    /// [`DesignSpace::pair_neighbors`] (the single source of the
+    /// neighbor rule): ±1 PEs plus one step along the variant axis —
+    /// index ±1 on the legacy hand-pinned axes, *tile-coordinate*
+    /// adjacency on mapspace-backed axes, so neighborhood expansion
+    /// moves one tile step, not one arbitrary list position.
+    neighbors: Vec<Vec<usize>>,
     state: Vec<PairState>,
     started: bool,
 }
@@ -366,6 +376,7 @@ impl GuidedGen {
             n_variants: space.variants.len(),
             n_pes: space.pes.len(),
             n_bw: space.bandwidths.len(),
+            neighbors: (0..space.pairs()).map(|p| space.pair_neighbors(p)).collect(),
             state: vec![PairState::Untouched; space.pairs()],
             started: false,
         }
@@ -502,7 +513,7 @@ impl CandidateGen for GuidedGen {
             }
         }
         for pair in expand {
-            for n in grid_neighbors(self.n_variants, self.n_pes, pair) {
+            for &n in &self.neighbors[pair] {
                 if matches!(self.state[n], PairState::Untouched) {
                     self.state[n] = PairState::Probing;
                     wave.push(PairBatch { pair: n, bws: vec![top] });

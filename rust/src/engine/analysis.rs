@@ -659,23 +659,7 @@ pub fn analyze_network_with(
         }
     }
     ensure!(!per_layer.is_empty(), "no layer analyzable under {}", dataflow.name);
-    let runtime = per_layer.iter().map(|s| s.runtime).sum();
-    let macs = per_layer.iter().map(|s| s.macs).sum();
-    let energy = per_layer.iter().fold(EnergyBreakdown::default(), |a, s| EnergyBreakdown {
-        mac: a.mac + s.energy.mac,
-        l1: a.l1 + s.energy.l1,
-        l2: a.l2 + s.energy.l2,
-        noc: a.noc + s.energy.noc,
-    });
-    Ok(NetworkStats {
-        network: net.name.clone(),
-        dataflow: dataflow.name.clone(),
-        per_layer,
-        skipped,
-        runtime,
-        energy,
-        macs,
-    })
+    Ok(fold_network_stats(&net.name, &dataflow.name, per_layer, skipped))
 }
 
 /// Objective for dataflow selection.
@@ -684,6 +668,65 @@ pub enum Objective {
     Runtime,
     Energy,
     Edp,
+}
+
+impl Objective {
+    /// Parse a CLI spelling; unknown spellings fall back to `Runtime`
+    /// (the historical CLI default).
+    pub fn parse(s: &str) -> Objective {
+        match s {
+            "energy" => Objective::Energy,
+            "edp" => Objective::Edp,
+            _ => Objective::Runtime,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Runtime => "runtime",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+}
+
+/// The scalar a layer's stats score under an objective (lower is
+/// better) — the comparison rule shared by [`adaptive_network`] and the
+/// mapspace mapper ([`crate::mapspace::Mapper`]).
+pub fn objective_score(s: &LayerStats, o: Objective) -> f64 {
+    match o {
+        Objective::Runtime => s.runtime,
+        Objective::Energy => s.energy.total(),
+        Objective::Edp => s.edp(),
+    }
+}
+
+/// Fold per-layer results into a [`NetworkStats`] (runtime/MACs/energy
+/// are additive across layers) — shared by the network analyzers here
+/// and the mapspace mapper.
+pub(crate) fn fold_network_stats(
+    network: &str,
+    dataflow: &str,
+    per_layer: Vec<LayerStats>,
+    skipped: Vec<SkippedLayer>,
+) -> NetworkStats {
+    let runtime = per_layer.iter().map(|s| s.runtime).sum();
+    let macs = per_layer.iter().map(|s| s.macs).sum();
+    let energy = per_layer.iter().fold(EnergyBreakdown::default(), |a, s| EnergyBreakdown {
+        mac: a.mac + s.energy.mac,
+        l1: a.l1 + s.energy.l1,
+        l2: a.l2 + s.energy.l2,
+        noc: a.noc + s.energy.noc,
+    });
+    NetworkStats {
+        network: network.to_string(),
+        dataflow: dataflow.to_string(),
+        per_layer,
+        skipped,
+        runtime,
+        energy,
+        macs,
+    }
 }
 
 /// Adaptive dataflow (§5.1): per layer, choose the best of the candidate
@@ -720,7 +763,7 @@ pub fn adaptive_network_with(
                 Ok(s) => {
                     let better = match &best {
                         None => true,
-                        Some(b) => score(&s, objective) < score(b, objective),
+                        Some(b) => objective_score(&s, objective) < objective_score(b, objective),
                     };
                     if better {
                         best = Some(s);
@@ -738,31 +781,7 @@ pub fn adaptive_network_with(
         }
     }
     ensure!(!per_layer.is_empty(), "adaptive: nothing analyzable");
-    let runtime = per_layer.iter().map(|s| s.runtime).sum();
-    let macs = per_layer.iter().map(|s| s.macs).sum();
-    let energy = per_layer.iter().fold(EnergyBreakdown::default(), |a, s| EnergyBreakdown {
-        mac: a.mac + s.energy.mac,
-        l1: a.l1 + s.energy.l1,
-        l2: a.l2 + s.energy.l2,
-        noc: a.noc + s.energy.noc,
-    });
-    Ok(NetworkStats {
-        network: net.name.clone(),
-        dataflow: "adaptive".into(),
-        per_layer,
-        skipped,
-        runtime,
-        energy,
-        macs,
-    })
-}
-
-fn score(s: &LayerStats, o: Objective) -> f64 {
-    match o {
-        Objective::Runtime => s.runtime,
-        Objective::Energy => s.energy.total(),
-        Objective::Edp => s.edp(),
-    }
+    Ok(fold_network_stats(&net.name, "adaptive", per_layer, skipped))
 }
 
 /// The algorithmic maximum reuse factor of a tensor (Fig 11's "A" bars):

@@ -116,6 +116,73 @@ pub fn row_stationary_fig6() -> Dataflow {
     )
 }
 
+// ---------------------------------------------------------------------
+// Tileable forms of the Table 3 styles
+// ---------------------------------------------------------------------
+//
+// The fixed styles above pin one tile binding each (KC-P's 64-wide C
+// cluster, YR-P's 2x2 C/K tiles, YX-P's 8-wide X tile). The paper's
+// §2.4 point is that those bindings are *mappings*, not part of the
+// dataflow: the functions below expose the same styles with their
+// tileable dimensions as parameters. `mapspace::StyleTemplate` declares
+// which knobs each style has and enumerates legal bindings per layer
+// shape; the DSE's variant axis (`dse::space`) instantiates these too.
+
+/// KC-P (NVDLA-like) with a parametric C-tile / cluster size. `ct = 64`
+/// reproduces [`kc_p`] exactly (same structural fingerprint).
+pub fn kc_p_ct(ct: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("KC-P(ct={ct})"),
+        vec![
+            D::spatial(E::lit(1), E::lit(1), K),
+            D::temporal(E::lit(ct), E::lit(ct), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::temporal(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::cluster(E::lit(ct)),
+            D::spatial(E::lit(1), E::lit(1), C),
+        ],
+    )
+}
+
+/// YR-P (Eyeriss-like) with parametric C/K tiles. `(2, 2)` reproduces
+/// [`yr_p`] exactly.
+pub fn yr_p_ck(c_tile: u64, k_tile: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("YR-P(c={c_tile},k={k_tile})"),
+        vec![
+            D::temporal(E::lit(c_tile), E::lit(c_tile), C),
+            D::temporal(E::lit(k_tile), E::lit(k_tile), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz(S), E::lit(1), X),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::sz(R)),
+            D::spatial(E::lit(1), E::lit(1), Y),
+            D::spatial(E::lit(1), E::lit(1), R),
+        ],
+    )
+}
+
+/// YX-P (ShiDianNao-like) with a parametric X tile. `xt = 8` reproduces
+/// [`yx_p`] exactly.
+pub fn yx_p_xt(xt: u64) -> Dataflow {
+    Dataflow::new(
+        &format!("YX-P(xt={xt})"),
+        vec![
+            D::temporal(E::lit(1), E::lit(1), K),
+            D::spatial(E::sz(R), E::lit(1), Y),
+            D::temporal(E::sz_plus(S, xt as i64 - 1), E::lit(xt), X),
+            D::temporal(E::lit(1), E::lit(1), C),
+            D::temporal(E::sz(R), E::sz(R), R),
+            D::temporal(E::sz(S), E::sz(S), S),
+            D::cluster(E::lit(xt)),
+            D::spatial(E::sz(S), E::lit(1), X),
+        ],
+    )
+}
+
 /// The five Table 3 dataflows, in the paper's order.
 pub fn all_styles() -> Vec<Dataflow> {
     vec![c_p(), x_p(), yx_p(), yr_p(), kc_p()]
@@ -191,6 +258,20 @@ mod tests {
         assert_eq!(spatial[0].dim, crate::ir::dims::Dim::Y);
         assert_eq!(spatial[1].dim, crate::ir::dims::Dim::R);
         assert_eq!(inner.units, 3); // Cluster(Sz(R)), R = 3
+    }
+
+    #[test]
+    fn tileable_forms_at_table3_defaults_match_the_fixed_styles() {
+        // The parametric constructors instantiated at the Table 3
+        // bindings must be structurally identical to the fixed styles
+        // (same fingerprint — names differ, structure must not).
+        assert_eq!(kc_p_ct(64).fingerprint(), kc_p().fingerprint());
+        assert_eq!(yr_p_ck(2, 2).fingerprint(), yr_p().fingerprint());
+        assert_eq!(yx_p_xt(8).fingerprint(), yx_p().fingerprint());
+        // And at any other binding they must differ.
+        assert_ne!(kc_p_ct(32).fingerprint(), kc_p().fingerprint());
+        assert_ne!(yr_p_ck(2, 4).fingerprint(), yr_p().fingerprint());
+        assert_ne!(yx_p_xt(16).fingerprint(), yx_p().fingerprint());
     }
 
     #[test]

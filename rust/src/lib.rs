@@ -28,6 +28,11 @@
 //!   over a sharded parallel sweep with §5.2 invalid-design skipping
 //!   and streaming Pareto accumulation (see the module docs for the
 //!   architecture), plus Pareto extraction and objectives.
+//! * [`mapspace`] — the mapping-space subsystem: Table 3 style
+//!   templates with declared tileable knobs, programmatic per-layer
+//!   tiling enumeration (resolve-validated, fingerprint-deduped), and
+//!   the layer-wise [`mapspace::Mapper`] behind `maestro map`. Backs
+//!   the DSE's variant axis.
 //! * [`runtime`] — PJRT (xla crate, behind the `pjrt` cargo feature)
 //!   loader/executor for the AOT-compiled batched evaluator
 //!   (`artifacts/dse_eval.hlo.txt`); a stub that falls back to the
@@ -46,6 +51,7 @@ pub mod dse;
 pub mod engine;
 pub mod hw;
 pub mod ir;
+pub mod mapspace;
 pub mod model;
 pub mod report;
 pub mod runtime;
@@ -56,5 +62,6 @@ pub use cache::{DataflowFingerprint, SharedStore};
 pub use engine::analysis::{analyze_layer, analyze_network, Analyzer, LayerStats, NetworkStats};
 pub use hw::config::HwConfig;
 pub use ir::dataflow::Dataflow;
+pub use mapspace::{Mapper, MapperConfig, StyleTemplate};
 pub use model::layer::{Layer, ShapeKey};
 pub use model::network::Network;

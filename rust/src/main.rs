@@ -3,11 +3,13 @@
 //! ```text
 //! maestro analyze  --model vgg16 --layer conv2_2 --dataflow kc-p [--pes 256 --bw 16]
 //! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime --per-layer]
+//! maestro map      --model vgg16 [--objective edp --tile-resolution 6]  # layer-wise mapper
 //! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
 //! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
 //! maestro dse      --family kc-p --layer-model resnet50 --network   # whole-network sweep
 //! maestro dse      --family kc-p --strategy guided                  # frontier without the full sweep
 //! maestro dse      --family kc-p --strategy random --budget 50000 --seed 7
+//! maestro dse      --family kc-p --mapspace                         # generated variant axis
 //! maestro cache    compact --cache-file warm.mcache   # rewrite with unique keys
 //! maestro table1
 //! maestro zoo
@@ -25,6 +27,7 @@ use maestro::dse::space::DesignSpace;
 use maestro::dse::strategy::{plan_single_wave, SearchBudget, SearchStrategy};
 use maestro::engine::analysis::{adaptive_network_with, analyze_layer, analyze_network_with, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
+use maestro::mapspace::{Mapper, MapperConfig};
 use maestro::model::network::Network;
 use maestro::ir::styles;
 use maestro::model::zoo;
@@ -38,7 +41,7 @@ fn flags() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "model", takes_value: true, help: "zoo network name (see `maestro zoo`)" },
         FlagSpec { name: "layer", takes_value: true, help: "layer name within the model" },
-        FlagSpec { name: "dataflow", takes_value: true, help: "c-p | x-p | yx-p | yr-p | kc-p | adaptive" },
+        FlagSpec { name: "dataflow", takes_value: true, help: "c-p | x-p | yx-p | yr-p | kc-p | adaptive | mapped (network: mapspace-backed adaptive)" },
         FlagSpec { name: "pes", takes_value: true, help: "number of PEs (default 256)" },
         FlagSpec { name: "bw", takes_value: true, help: "NoC bandwidth, elements/cycle (default 16)" },
         FlagSpec { name: "objective", takes_value: true, help: "runtime | energy | edp (default runtime)" },
@@ -76,26 +79,54 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec {
             name: "cache-file",
             takes_value: true,
-            help: "network/dse: warm-start analysis cache file (loaded if present, updated on exit)",
+            help: "network/map/dse: warm-start analysis cache file (loaded if present, updated on exit)",
+        },
+        FlagSpec {
+            name: "cache-cap",
+            takes_value: true,
+            help: "bound the in-memory analysis cache to ~N entries (coarse FIFO eviction; 0 = unbounded)",
+        },
+        FlagSpec {
+            name: "tile-resolution",
+            takes_value: true,
+            help: "map/dse --mapspace: candidate tile sizes per knob (default 6; Table-3 default always kept)",
+        },
+        FlagSpec {
+            name: "mapspace",
+            takes_value: false,
+            help: "dse: generate the variant axis from the family's style template on the picked layer",
         },
     ]
 }
 
-/// Load `--cache-file` (when given) into a fresh [`SharedStore`].
-/// Returns the store and the path to flush back to. Corrupt or stale
-/// files warn and start cold — never fail the run.
-fn open_cache(args: &Args) -> (Arc<SharedStore>, Option<String>) {
-    let store = Arc::new(SharedStore::new());
+/// Load `--cache-file` (when given) into a fresh [`SharedStore`],
+/// bounded by `--cache-cap` (coarse FIFO eviction) when set. Returns
+/// the store and the path to flush back to. Corrupt or stale files
+/// warn and start cold — never fail the run.
+fn open_cache(args: &Args) -> Result<(Arc<SharedStore>, Option<String>)> {
+    let cap = args.opt_u64("cache-cap", 0)? as usize;
+    let store = if cap > 0 {
+        Arc::new(SharedStore::with_max_entries(cap))
+    } else {
+        Arc::new(SharedStore::new())
+    };
     let path = args.opt("cache-file", "");
     if path.is_empty() {
-        return (store, None);
+        return Ok((store, None));
     }
     let report = store.load(std::path::Path::new(&path));
     if let Some(w) = &report.warning {
         eprintln!("cache-file: {w}");
     }
     println!("cache-file: loaded {} cached analyses from {path}", report.loaded);
-    (store, Some(path))
+    if cap > 0 && store.evictions() > 0 {
+        println!(
+            "cache-cap: kept the newest {} of the file's records ({} evicted)",
+            store.len(),
+            store.evictions()
+        );
+    }
+    Ok((store, Some(path)))
 }
 
 /// Flush the store back to its `--cache-file` (if one was given).
@@ -116,7 +147,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv, &spec, true)?;
     let Some(cmd) = args.subcommand.clone() else {
         println!("maestro — data-centric DNN dataflow cost model (MICRO-52 reproduction)");
-        println!("subcommands: analyze | network | validate | dse | cache | table1 | zoo");
+        println!("subcommands: analyze | network | map | validate | dse | cache | table1 | zoo");
         println!("{}", usage(&spec));
         return Ok(());
     };
@@ -150,20 +181,49 @@ fn main() -> Result<()> {
             let model = args.opt_required("model")?;
             let net = zoo::by_name(&model)?;
             let hw = pick_hw(&args)?;
-            let objective = match args.opt("objective", "runtime").as_str() {
-                "energy" => Objective::Energy,
-                "edp" => Objective::Edp,
-                _ => Objective::Runtime,
-            };
+            let objective = Objective::parse(&args.opt("objective", "runtime"));
             let dfname = args.opt("dataflow", "adaptive");
             // One Analyzer for the whole command: each unique layer
             // shape is analyzed once per (dataflow, hardware). With
             // --cache-file it fronts a persistent store, so repeated
             // invocations start warm (disk hits below).
-            let (store, cache_path) = open_cache(&args);
+            let (store, cache_path) = open_cache(&args)?;
             let mut analyzer = Analyzer::with_store(Arc::clone(&store));
             let stats = if dfname == "adaptive" {
                 adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?
+            } else if dfname == "mapped" {
+                // Mapspace-backed adaptivity: the candidate set handed
+                // to adaptive_network_with is the fingerprint-deduped
+                // union of every style template's tiling enumeration
+                // over the network's unique shapes (the five fixed
+                // Table 3 styles are a subset — their defaults are
+                // always enumerated). Deliberate trade-off: every
+                // layer considers the whole cross-shape union — a
+                // strictly richer search than per-shape (a tiling
+                // found for one shape can win on another), at a cost
+                // that scales with shapes x union size. `maestro map`
+                // is the cheap per-shape variant of the same search.
+                let tile_resolution = args.opt_u64("tile-resolution", 6)? as usize;
+                let templates = maestro::mapspace::StyleTemplate::all();
+                let groups = net.unique_shapes();
+                let n_shapes = groups.len();
+                let mut candidates = Vec::new();
+                let mut seen = std::collections::HashSet::new();
+                for group in &groups {
+                    let en = maestro::mapspace::enumerate_all(
+                        &templates,
+                        group.layer,
+                        hw.num_pes,
+                        tile_resolution,
+                    );
+                    for df in en.dataflows {
+                        if seen.insert(df.fingerprint()) {
+                            candidates.push(df);
+                        }
+                    }
+                }
+                println!("mapspace: {} candidate mapping(s) across {n_shapes} unique shape(s)", candidates.len());
+                adaptive_network_with(&mut analyzer, &net, &candidates, &hw, objective)?
             } else {
                 let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
                 analyze_network_with(&mut analyzer, &net, &df, &hw, true)?
@@ -199,6 +259,77 @@ fn main() -> Result<()> {
             );
             close_cache(&store, &cache_path)?;
         }
+        "map" => {
+            // The layer-wise mapper (mapspace subsystem): per unique
+            // layer shape, search the enumerated tiling space of every
+            // Table 3 style template for the best mapping, then compare
+            // against the fixed-style adaptive baseline (§5.1) through
+            // the same shared analysis store.
+            let model = args.opt_required("model")?;
+            let net = zoo::by_name(&model)?;
+            let hw = pick_hw(&args)?;
+            let objective = Objective::parse(&args.opt("objective", "runtime"));
+            let (store, cache_path) = open_cache(&args)?;
+            let cfg = MapperConfig {
+                tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
+                objective,
+                budget: maestro::dse::strategy::SearchBudget {
+                    max_designs: args.opt_u64("budget", 0)?,
+                    max_seconds: args.opt_f64("budget-seconds", 0.0)?,
+                },
+                ..MapperConfig::default()
+            };
+            let mut mapper = Mapper::with_store(Arc::clone(&store));
+            let outcome = mapper.map_network(&net, &hw, &cfg)?;
+            let mut t = Table::new(&["shape (rep. layer)", "x", "mapping", "runtime(cyc)", "energy(uJ)", "util"]);
+            for s in &outcome.per_shape {
+                t.row(&[
+                    s.representative.clone(),
+                    s.members.to_string(),
+                    s.dataflow.name.clone(),
+                    num(s.stats.runtime),
+                    num(s.stats.energy.total() / 1e6),
+                    format!("{:.3}", s.stats.util),
+                ]);
+            }
+            print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+            if !outcome.network.skipped.is_empty() {
+                println!("skipped {} layer(s):", outcome.network.skipped.len());
+                for s in &outcome.network.skipped {
+                    println!("  {}: {}", s.layer, s.reason);
+                }
+            }
+            println!("{}", outcome.stats.summary());
+            // Baseline: adaptive over the five fixed Table 3 styles,
+            // same store (template defaults replay from it).
+            let mut analyzer = Analyzer::with_store(Arc::clone(&store));
+            let fixed = adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?;
+            println!(
+                "mapper:       {} layer(s), runtime={} cyc, energy={} uJ",
+                outcome.network.per_layer.len(),
+                num(outcome.network.runtime),
+                num(outcome.network.energy.total() / 1e6),
+            );
+            println!(
+                "fixed styles: {} layer(s), runtime={} cyc, energy={} uJ (adaptive over Table 3)",
+                fixed.per_layer.len(),
+                num(fixed.runtime),
+                num(fixed.energy.total() / 1e6),
+            );
+            if fixed.per_layer.len() == outcome.network.per_layer.len() {
+                println!(
+                    "mapper-vs-fixed ({}): runtime x{:.4}, energy x{:.4}, edp x{:.4}",
+                    objective.name(),
+                    fixed.runtime / outcome.network.runtime.max(1e-12),
+                    fixed.energy.total() / outcome.network.energy.total().max(1e-12),
+                    (fixed.runtime * fixed.energy.total())
+                        / (outcome.network.runtime * outcome.network.energy.total()).max(1e-12),
+                );
+            } else {
+                println!("mapper-vs-fixed: layer coverage differs; no ratio printed");
+            }
+            close_cache(&store, &cache_path)?;
+        }
         "validate" => {
             let (layer, _) = pick_layer(&args)?;
             let hw = pick_hw(&args)?;
@@ -218,7 +349,23 @@ fn main() -> Result<()> {
             let family = args.opt("family", "kc-p");
             let resolution = args.opt_u64("resolution", 12)? as usize;
             let bw_resolution = args.opt_u64("bw-resolution", resolution as u64)? as usize;
-            let space = DesignSpace::fig13_axes(&family, resolution, bw_resolution);
+            let space = if args.has("mapspace") {
+                // Generated variant axis: enumerate the family template's
+                // legal tilings against the picked layer (the first
+                // layer of the model unless --layer names one).
+                let (layer, _) = pick_layer(&args)?;
+                let tile_resolution = args.opt_u64("tile-resolution", 6)? as usize;
+                let space = DesignSpace::mapspace(&family, &layer, tile_resolution, resolution, bw_resolution)?;
+                println!(
+                    "mapspace: generated {} variant(s) for family {family} against layer '{}' \
+                     (tile resolution {tile_resolution})",
+                    space.variants.len(),
+                    layer.name
+                );
+                space
+            } else {
+                DesignSpace::fig13_axes(&family, resolution, bw_resolution)
+            };
             let strategy =
                 SearchStrategy::parse(&args.opt("strategy", "exhaustive"), args.opt_u64("seed", 1)?)?;
             let budget = SearchBudget {
@@ -254,7 +401,7 @@ fn main() -> Result<()> {
                 shapes,
                 macs / 1e9
             );
-            let (store, cache_path) = open_cache(&args);
+            let (store, cache_path) = open_cache(&args)?;
             if args.has("pjrt") {
                 // The PJRT backend goes through the coordinator (the
                 // evaluator thread owns the executable). Jobs come from
@@ -297,13 +444,13 @@ fn main() -> Result<()> {
                 // per (variant, PEs) pair per unique shape — warn when
                 // that departs meaningfully from the memory-bounded
                 // default (ROADMAP tracks eviction/compaction).
-                if cache.is_some() {
+                if cache.is_some() && store.max_entries() == 0 {
                     let pairs = space.pairs();
                     if pairs > 10_000 {
                         eprintln!(
                             "cache-file: warning — this space has {pairs} (variant, PEs) pairs; the shared \
                              store retains ~{} entries (one per pair per unique shape) for the whole sweep. \
-                             Drop --cache-file for a memory-bounded sweep of large spaces.",
+                             Bound it with --cache-cap N, or drop --cache-file for the memory-bounded default.",
                             pairs * shapes
                         );
                     }

@@ -1,0 +1,369 @@
+//! The layer-wise mapper: per unique layer shape, a budgeted search of
+//! the enumerated tiling space for the best mapping under an objective
+//! (paper §5.1 taken seriously — the adaptive candidate set is the
+//! *space the style templates define*, not five hand-picked points).
+//!
+//! The search reuses the DSE's machinery end to end: candidates come
+//! from [`super::tiling::enumerate_all`] (deterministic order,
+//! fingerprint-deduplicated, every candidate resolves), budgets are the
+//! strategy layer's [`SearchBudget`] (`max_designs` truncates each
+//! shape's candidate list deterministically, after a stable
+//! defaults-first reorder so the Table 3 bindings are never the ones
+//! cut — the cut is the `budget_skipped` counter, exactly like the
+//! sweep engine's;
+//! `max_seconds` drops later shapes to the Table 3 default bindings so
+//! every layer still receives a mapping), and evaluation flows through
+//! the shape-memoized [`Analyzer`] — hand the mapper a
+//! [`SharedStore`](crate::cache::SharedStore) and same-structure
+//! candidates across shapes, PE points, and earlier sweeps replay
+//! instead of re-analyzing.
+//!
+//! Determinism: the mapper is a pure serial fold over
+//! `Network::unique_shapes` x the deterministic enumeration, so its
+//! outcome is bit-identical across runs, threads, and pre-warmed cache
+//! states (values are pure functions of keys) as long as no wall-clock
+//! budget is set. Pinned in `rust/tests/mapspace.rs`.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::cache::SharedStore;
+use crate::dse::strategy::SearchBudget;
+use crate::engine::analysis::{
+    fold_network_stats, objective_score, Analyzer, LayerStats, NetworkStats, Objective, SkippedLayer,
+};
+use crate::hw::config::HwConfig;
+use crate::ir::dataflow::Dataflow;
+use crate::model::layer::ShapeKey;
+use crate::model::network::Network;
+
+use super::template::StyleTemplate;
+use super::tiling::{enumerate_all, enumerate_defaults};
+
+/// Mapper knobs.
+#[derive(Debug, Clone)]
+pub struct MapperConfig {
+    /// Style templates whose tiling spaces are searched (default: all
+    /// five Table 3 templates).
+    pub templates: Vec<StyleTemplate>,
+    /// Per-knob tile resolution (see [`super::tiling::tile_values`]).
+    pub tile_resolution: usize,
+    /// What "best" means per layer.
+    pub objective: Objective,
+    /// `max_designs` caps the candidates evaluated *per shape*
+    /// (deterministic prefix truncation); `max_seconds` is a whole-run
+    /// wall cutoff — shapes reached after it search only the Table 3
+    /// default bindings (not bit-deterministic; leave 0.0 when
+    /// reproducibility matters).
+    pub budget: SearchBudget,
+}
+
+impl Default for MapperConfig {
+    fn default() -> MapperConfig {
+        MapperConfig {
+            templates: StyleTemplate::all(),
+            tile_resolution: 6,
+            objective: Objective::Runtime,
+            budget: SearchBudget::default(),
+        }
+    }
+}
+
+/// The chosen mapping for one unique layer shape.
+#[derive(Debug, Clone)]
+pub struct ShapeMapping {
+    /// First layer in network order with this shape.
+    pub representative: String,
+    /// How many layers share the shape.
+    pub members: u64,
+    /// The winning mapping.
+    pub dataflow: Dataflow,
+    /// The winner's stats on the representative layer.
+    pub stats: LayerStats,
+    /// Candidates admitted to evaluation for this shape.
+    pub evaluated: u64,
+}
+
+/// Aggregate mapper counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MapperStats {
+    /// Unique shapes visited.
+    pub shapes: u64,
+    /// Knob-value combinations tried across all shapes (pre-validation).
+    pub combos: u64,
+    /// Distinct mappable candidates after validation + dedup.
+    pub candidates: u64,
+    /// Candidates actually evaluated (= `candidates` minus budget cuts).
+    pub evaluated: u64,
+    /// Candidates cut by `budget.max_designs` (per-shape prefix cuts).
+    pub budget_skipped: u64,
+    /// Shapes that fell back to the Table 3 defaults after the
+    /// wall-clock budget expired.
+    pub shapes_defaulted: u64,
+    /// Analyzer cache hits/misses attributable to this mapper run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+impl MapperStats {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "mapspace: shapes={} combos={} candidates={} evaluated={} budget_skipped={} \
+             defaulted={} cache={}h/{}m wall={:.2}s",
+            self.shapes,
+            self.combos,
+            self.candidates,
+            self.evaluated,
+            self.budget_skipped,
+            self.shapes_defaulted,
+            self.cache_hits,
+            self.cache_misses,
+            self.seconds,
+        )
+    }
+}
+
+/// Result of [`Mapper::map_network`].
+#[derive(Debug, Clone)]
+pub struct MappingOutcome {
+    /// Whole-network stats under the per-shape winners (`dataflow` is
+    /// `"mapper"`; layers no candidate maps land in `skipped`).
+    pub network: NetworkStats,
+    /// The winner per unique shape, in first-occurrence order.
+    pub per_shape: Vec<ShapeMapping>,
+    pub stats: MapperStats,
+}
+
+/// The layer-wise mapper. Owns an [`Analyzer`] so repeated shapes —
+/// within one call and across calls — replay instead of re-analyzing;
+/// construct with [`Mapper::with_store`] to pool analyses with sweeps
+/// and other mappers (and with `--cache-file` persistence).
+#[derive(Debug, Default)]
+pub struct Mapper {
+    analyzer: Analyzer,
+}
+
+impl Mapper {
+    pub fn new() -> Mapper {
+        Mapper { analyzer: Analyzer::new() }
+    }
+
+    pub fn with_store(store: std::sync::Arc<SharedStore>) -> Mapper {
+        Mapper { analyzer: Analyzer::with_store(store) }
+    }
+
+    /// The underlying analyzer (cache counters, store access).
+    pub fn analyzer(&self) -> &Analyzer {
+        &self.analyzer
+    }
+
+    /// Choose the best mapping per unique layer shape and aggregate the
+    /// network under those winners. See the module docs for the search
+    /// and determinism contract.
+    pub fn map_network(
+        &mut self,
+        net: &Network,
+        hw: &HwConfig,
+        cfg: &MapperConfig,
+    ) -> Result<MappingOutcome> {
+        ensure!(!cfg.templates.is_empty(), "mapper: no style templates to search");
+        ensure!(!net.layers.is_empty(), "mapper: empty network");
+        let t0 = std::time::Instant::now();
+        let (hits0, misses0) = (self.analyzer.cache_hits(), self.analyzer.cache_misses());
+        let mut stats = MapperStats::default();
+        let mut per_shape: Vec<ShapeMapping> = Vec::new();
+        let mut winners: HashMap<ShapeKey, Dataflow> = HashMap::new();
+        let mut failures: HashMap<ShapeKey, String> = HashMap::new();
+        // Fingerprints of the Table 3 default bindings, for the
+        // defaults-first ordering below.
+        let default_fps: std::collections::HashSet<_> = cfg
+            .templates
+            .iter()
+            .map(|t| t.instantiate_defaults().fingerprint())
+            .collect();
+
+        for group in net.unique_shapes() {
+            stats.shapes += 1;
+            let exhausted = cfg.budget.max_seconds > 0.0
+                && t0.elapsed().as_secs_f64() >= cfg.budget.max_seconds;
+            let en = if exhausted {
+                stats.shapes_defaulted += 1;
+                enumerate_defaults(&cfg.templates, group.layer, hw.num_pes)
+            } else {
+                enumerate_all(&cfg.templates, group.layer, hw.num_pes, cfg.tile_resolution)
+            };
+            stats.combos += en.combos;
+            stats.candidates += en.dataflows.len() as u64;
+            let mut candidates = en.dataflows;
+            // Evaluate the Table 3 default bindings *first* (stable
+            // partition: defaults in enumeration order, then the rest),
+            // so a `max_designs` prefix cut can never drop the fixed
+            // styles — the "mapper cannot lose to a fixed style"
+            // guarantee holds for any budget >= the template count
+            // (and exactly, unbudgeted).
+            candidates.sort_by_key(|df| !default_fps.contains(&df.fingerprint()));
+            if cfg.budget.max_designs > 0 && candidates.len() as u64 > cfg.budget.max_designs {
+                stats.budget_skipped += candidates.len() as u64 - cfg.budget.max_designs;
+                candidates.truncate(cfg.budget.max_designs as usize);
+            }
+            let mut best: Option<(LayerStats, Dataflow)> = None;
+            let mut last_err: Option<String> = None;
+            let mut evaluated = 0u64;
+            for df in &candidates {
+                evaluated += 1;
+                match self.analyzer.analyze(group.layer, df, hw) {
+                    Ok(s) => {
+                        // Strict improvement only: ties keep the earlier
+                        // candidate, so the winner is order-stable.
+                        let better = match &best {
+                            None => true,
+                            Some((b, _)) => {
+                                objective_score(&s, cfg.objective) < objective_score(b, cfg.objective)
+                            }
+                        };
+                        if better {
+                            best = Some((s, df.clone()));
+                        }
+                    }
+                    // Candidates resolve by construction, but the full
+                    // analysis can still reject (layer validation, no
+                    // MACs); record the diagnostic.
+                    Err(e) => last_err = Some(format!("{e:#}")),
+                }
+            }
+            stats.evaluated += evaluated;
+            match best {
+                Some((s, df)) => {
+                    winners.insert(group.key, df.clone());
+                    per_shape.push(ShapeMapping {
+                        representative: group.layer.name.clone(),
+                        members: group.count(),
+                        dataflow: df,
+                        stats: s,
+                        evaluated,
+                    });
+                }
+                None => {
+                    failures.insert(
+                        group.key,
+                        last_err.unwrap_or_else(|| "no template mapping resolves".into()),
+                    );
+                }
+            }
+        }
+
+        // Assemble the network view: every layer replays its shape's
+        // winner through the analyzer (cache hits re-labeled with the
+        // layer's own name).
+        let mut per_layer = Vec::new();
+        let mut skipped = Vec::new();
+        for layer in &net.layers {
+            match winners.get(&layer.shape_key()) {
+                Some(df) => per_layer.push(self.analyzer.analyze(layer, df, hw)?),
+                None => skipped.push(SkippedLayer {
+                    layer: layer.name.clone(),
+                    reason: failures
+                        .get(&layer.shape_key())
+                        .cloned()
+                        .unwrap_or_else(|| "no template mapping resolves".into()),
+                }),
+            }
+        }
+        ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
+        stats.cache_hits = self.analyzer.cache_hits() - hits0;
+        stats.cache_misses = self.analyzer.cache_misses() - misses0;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        let network = fold_network_stats(&net.name, "mapper", per_layer, skipped);
+        Ok(MappingOutcome { network, per_shape, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn mapper_maps_the_vgg_conv_stack() {
+        let net = vgg16::conv_only();
+        let hw = HwConfig::fig10_default();
+        let mut mapper = Mapper::new();
+        let out = mapper.map_network(&net, &hw, &MapperConfig::default()).unwrap();
+        assert_eq!(out.network.per_layer.len(), net.layers.len());
+        assert!(out.network.skipped.is_empty());
+        assert_eq!(out.per_shape.len(), net.unique_shapes().len());
+        assert_eq!(out.stats.shapes, out.per_shape.len() as u64);
+        let members: u64 = out.per_shape.iter().map(|s| s.members).sum();
+        assert_eq!(members, net.layers.len() as u64);
+        assert!(out.stats.evaluated > 0 && out.stats.candidates >= out.stats.evaluated);
+        assert!(out.stats.cache_hits > 0, "repeated shapes + assembly must replay");
+        let s = out.stats.summary();
+        assert!(s.contains("shapes=") && s.contains("candidates="), "{s}");
+    }
+
+    #[test]
+    fn per_shape_budget_truncates_deterministically() {
+        let net = vgg16::conv_only();
+        let hw = HwConfig::fig10_default();
+        let cfg = MapperConfig {
+            budget: SearchBudget { max_designs: 3, ..SearchBudget::default() },
+            ..MapperConfig::default()
+        };
+        let mut a = Mapper::new();
+        let out_a = a.map_network(&net, &hw, &cfg).unwrap();
+        assert!(out_a.stats.budget_skipped > 0, "the smoke shapes enumerate more than 3 candidates");
+        assert!(out_a.stats.evaluated <= 3 * out_a.stats.shapes);
+        let mut b = Mapper::new();
+        let out_b = b.map_network(&net, &hw, &cfg).unwrap();
+        assert_eq!(out_a.network.runtime.to_bits(), out_b.network.runtime.to_bits());
+        assert_eq!(out_a.stats, MapperStats { seconds: out_a.stats.seconds, ..out_b.stats.clone() });
+        for (x, y) in out_a.per_shape.iter().zip(&out_b.per_shape) {
+            assert_eq!(x.dataflow, y.dataflow);
+        }
+    }
+
+    #[test]
+    fn budget_never_cuts_the_table3_defaults() {
+        // With a budget of exactly the template count, the evaluated
+        // prefix is the defaults themselves — so the budgeted mapper
+        // still cannot lose to a fixed style (per-layer best over the
+        // defaults == adaptive over the fixed Table 3 styles).
+        use crate::engine::analysis::adaptive_network;
+        use crate::ir::styles;
+        let net = vgg16::conv_only();
+        let hw = HwConfig::fig10_default();
+        let n_templates = StyleTemplate::all().len() as u64;
+        let cfg = MapperConfig {
+            budget: SearchBudget { max_designs: n_templates, ..SearchBudget::default() },
+            ..MapperConfig::default()
+        };
+        let out = Mapper::new().map_network(&net, &hw, &cfg).unwrap();
+        let fixed =
+            adaptive_network(&net, &styles::all_styles(), &hw, crate::engine::analysis::Objective::Runtime)
+                .unwrap();
+        assert_eq!(out.network.per_layer.len(), fixed.per_layer.len());
+        assert!(
+            out.network.runtime <= fixed.runtime * (1.0 + 1e-9),
+            "a defaults-covering budget must not lose to the fixed styles: {} vs {}",
+            out.network.runtime,
+            fixed.runtime
+        );
+    }
+
+    #[test]
+    fn wall_budget_falls_back_to_defaults_not_failure() {
+        let net = vgg16::conv_only();
+        let hw = HwConfig::fig10_default();
+        let cfg = MapperConfig {
+            budget: SearchBudget { max_seconds: 1e-12, ..SearchBudget::default() },
+            ..MapperConfig::default()
+        };
+        let out = Mapper::new().map_network(&net, &hw, &cfg).unwrap();
+        assert_eq!(out.network.per_layer.len(), net.layers.len(), "defaults still map every layer");
+        assert!(out.stats.shapes_defaulted > 0);
+    }
+}

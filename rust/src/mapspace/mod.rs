@@ -1,0 +1,46 @@
+//! The mapping-space subsystem: programmatic per-layer tiling
+//! generation over the Table 3 dataflow styles, and a layer-wise mapper
+//! that searches it.
+//!
+//! The paper's central observation (§2, §5) is that data-centric
+//! directives describe a *space* of mappings and that the right mapping
+//! depends on the layer shape. Before this subsystem, the DSE drew its
+//! dataflow axis from hand-coded lists of ~5 tile bindings per style;
+//! now the space is generated:
+//!
+//! * [`template`] — [`StyleTemplate`]: each Table 3 style with its
+//!   tileable dimensions *declared* ([`TileKnob`]: dim, value rule,
+//!   Table 3 default). Binding knobs yields concrete [`Dataflow`]s; the
+//!   defaults reproduce the fixed evaluation styles structurally.
+//! * [`tiling`] — deterministic enumeration of legal bindings per layer
+//!   shape: per-knob candidate tile sizes (divisors + power-of-two
+//!   covers, capped at a per-dim `resolution`, default always kept),
+//!   the odometer product over knobs, `Dataflow::resolve` validation
+//!   (every emitted candidate maps), and fingerprint dedup. Also
+//!   [`tile_adjacency`], the one-tile-step neighbor relation the guided
+//!   DSE strategy uses on mapspace-backed variant axes.
+//! * [`mapper`] — [`Mapper`]: per unique layer shape, a
+//!   [`SearchBudget`](crate::dse::strategy::SearchBudget)-governed
+//!   search of the enumeration for the best mapping under an
+//!   [`Objective`](crate::engine::analysis::Objective), evaluated
+//!   through the shape-memoized `Analyzer` (sharable via
+//!   [`SharedStore`](crate::cache::SharedStore) / `--cache-file`).
+//!   Surfaced as the `maestro map` CLI subcommand.
+//!
+//! The DSE variant axis is mapspace-backed: `dse::space`'s
+//! `kc_p_variants`/`yr_p_variants`/`yx_p_variants` instantiate the
+//! templates at the legacy value grids (bit-identical to the hand-coded
+//! lists — the fig13/ci_smoke pins hold), and
+//! `DesignSpace::mapspace` builds a variant axis by enumeration, with
+//! tile-coordinate adjacency driving the guided strategy's
+//! neighborhoods.
+//!
+//! [`Dataflow`]: crate::ir::dataflow::Dataflow
+
+pub mod mapper;
+pub mod template;
+pub mod tiling;
+
+pub use mapper::{Mapper, MapperConfig, MapperStats, MappingOutcome, ShapeMapping};
+pub use template::{StyleTemplate, TileKnob, TileRule};
+pub use tiling::{enumerate, enumerate_all, enumerate_defaults, tile_adjacency, tile_values, Enumeration};

@@ -1,0 +1,237 @@
+//! Style templates: the Table 3 dataflow styles with their tileable
+//! dimensions *declared* instead of baked in.
+//!
+//! A [`StyleTemplate`] is the paper's §2.4 dataflow-vs-mapping split
+//! made programmatic: the directive skeleton (the dataflow) is fixed by
+//! the template's builder, while each declared [`TileKnob`] names a
+//! free tile-size parameter and the layer dimension that bounds it.
+//! Binding every knob to a concrete value yields one [`Dataflow`] — one
+//! *mapping* of the style — via [`StyleTemplate::instantiate`]; the
+//! enumeration of all legal bindings for a layer shape lives in
+//! [`super::tiling`].
+//!
+//! Knob defaults are the Table 3 bindings (KC-P's 64-wide C cluster,
+//! YR-P's 2x2 C/K tiles, YX-P's 8-wide X tile), so
+//! [`StyleTemplate::instantiate_defaults`] reproduces the fixed
+//! evaluation styles structurally (pinned by tests here and in
+//! `ir::styles`). C-P and X-P declare no knobs — Table 3 gives them no
+//! tile parameters — and instantiate to exactly one mapping each.
+
+use std::fmt;
+
+use crate::ir::dataflow::Dataflow;
+use crate::ir::dims::Dim;
+use crate::ir::styles;
+
+/// How candidate tile sizes for a knob are generated from the extent of
+/// its layer dimension (see [`super::tiling::tile_values`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileRule {
+    /// Divisors of the extent: edge-free tilings (every tile full).
+    Divisors,
+    /// Geometric cover: powers of two up to the extent, plus the extent
+    /// itself (tilings with a partial edge tile).
+    Cover,
+    /// The union of both (the default for every Table 3 knob).
+    DivisorsAndCover,
+}
+
+/// One declared tileable knob of a style template.
+#[derive(Debug, Clone, Copy)]
+pub struct TileKnob {
+    /// Knob name as it appears in instantiated dataflow names
+    /// (`KC-P(ct=64)`).
+    pub name: &'static str,
+    /// The layer dimension whose extent bounds this knob's values.
+    pub dim: Dim,
+    /// Candidate-value generation rule.
+    pub rule: TileRule,
+    /// The Table 3 binding. Always included in enumerations (even when
+    /// it exceeds the layer's extent — the fixed style uses it
+    /// regardless, and resolution clamps), so the enumerated space is a
+    /// superset of the fixed evaluation style whenever that style maps.
+    pub default: u64,
+}
+
+/// A dataflow style with declared tileable knobs and a builder from
+/// concrete knob values.
+#[derive(Clone)]
+pub struct StyleTemplate {
+    /// Family name (matches the DSE family spellings: `kc-p`, ...).
+    pub name: &'static str,
+    /// Declared knobs, in builder-argument order.
+    pub knobs: Vec<TileKnob>,
+    build: fn(&[u64]) -> Dataflow,
+}
+
+impl fmt::Debug for StyleTemplate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StyleTemplate")
+            .field("name", &self.name)
+            .field("knobs", &self.knobs)
+            .finish()
+    }
+}
+
+impl StyleTemplate {
+    /// Bind every knob to a value, producing one concrete mapping of
+    /// this style. `values` must match the declared knob count.
+    pub fn instantiate(&self, values: &[u64]) -> Dataflow {
+        assert_eq!(
+            values.len(),
+            self.knobs.len(),
+            "template '{}' declares {} knob(s), got {} value(s)",
+            self.name,
+            self.knobs.len(),
+            values.len()
+        );
+        (self.build)(values)
+    }
+
+    /// Instantiate at the Table 3 default bindings (the fixed
+    /// evaluation style of this family, structurally).
+    pub fn instantiate_defaults(&self) -> Dataflow {
+        let defaults: Vec<u64> = self.knobs.iter().map(|k| k.default).collect();
+        self.instantiate(&defaults)
+    }
+
+    /// Instantiate the full grid of explicit per-knob value lists, in
+    /// odometer order (last knob fastest). This is the compatibility
+    /// path behind the hand-coded DSE variant lists: no filtering, no
+    /// dedup — exactly the listed combinations, in exactly their nested
+    /// loop order.
+    pub fn instantiate_grid(&self, values_per_knob: &[&[u64]]) -> Vec<Dataflow> {
+        assert_eq!(values_per_knob.len(), self.knobs.len(), "template '{}'", self.name);
+        if values_per_knob.is_empty() {
+            return vec![self.instantiate(&[])];
+        }
+        let mut out = Vec::new();
+        let mut combo: Vec<u64> = values_per_knob.iter().map(|axis| axis[0]).collect();
+        let mut idx = vec![0usize; values_per_knob.len()];
+        loop {
+            out.push(self.instantiate(&combo));
+            // Odometer step, last knob fastest.
+            let mut k = values_per_knob.len();
+            loop {
+                if k == 0 {
+                    return out;
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < values_per_knob[k].len() {
+                    combo[k] = values_per_knob[k][idx[k]];
+                    break;
+                }
+                idx[k] = 0;
+                combo[k] = values_per_knob[k][0];
+            }
+        }
+    }
+
+    /// C-Partitioned (Table 3 row 1): no tile knobs.
+    pub fn c_p() -> StyleTemplate {
+        StyleTemplate { name: "c-p", knobs: vec![], build: |_| styles::c_p() }
+    }
+
+    /// X-Partitioned (Table 3 row 2): no tile knobs.
+    pub fn x_p() -> StyleTemplate {
+        StyleTemplate { name: "x-p", knobs: vec![], build: |_| styles::x_p() }
+    }
+
+    /// YX-Partitioned (Table 3 row 3): X tile / cluster width knob.
+    pub fn yx_p() -> StyleTemplate {
+        StyleTemplate {
+            name: "yx-p",
+            knobs: vec![TileKnob { name: "xt", dim: Dim::X, rule: TileRule::DivisorsAndCover, default: 8 }],
+            build: |v| styles::yx_p_xt(v[0]),
+        }
+    }
+
+    /// YR-Partitioned (Table 3 row 4): C and K tile knobs.
+    pub fn yr_p() -> StyleTemplate {
+        StyleTemplate {
+            name: "yr-p",
+            knobs: vec![
+                TileKnob { name: "c", dim: Dim::C, rule: TileRule::DivisorsAndCover, default: 2 },
+                TileKnob { name: "k", dim: Dim::K, rule: TileRule::DivisorsAndCover, default: 2 },
+            ],
+            build: |v| styles::yr_p_ck(v[0], v[1]),
+        }
+    }
+
+    /// KC-Partitioned (Table 3 row 5): C tile / cluster size knob.
+    pub fn kc_p() -> StyleTemplate {
+        StyleTemplate {
+            name: "kc-p",
+            knobs: vec![TileKnob { name: "ct", dim: Dim::C, rule: TileRule::DivisorsAndCover, default: 64 }],
+            build: |v| styles::kc_p_ct(v[0]),
+        }
+    }
+
+    /// The five Table 3 style templates, in the paper's order.
+    pub fn all() -> Vec<StyleTemplate> {
+        vec![
+            StyleTemplate::c_p(),
+            StyleTemplate::x_p(),
+            StyleTemplate::yx_p(),
+            StyleTemplate::yr_p(),
+            StyleTemplate::kc_p(),
+        ]
+    }
+
+    /// Look a template up by (case-insensitive) family name.
+    pub fn by_name(name: &str) -> Option<StyleTemplate> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "c-p" | "cp" => Some(StyleTemplate::c_p()),
+            "x-p" | "xp" => Some(StyleTemplate::x_p()),
+            "yx-p" | "yxp" => Some(StyleTemplate::yx_p()),
+            "yr-p" | "yrp" => Some(StyleTemplate::yr_p()),
+            "kc-p" | "kcp" => Some(StyleTemplate::kc_p()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_the_fixed_table3_styles() {
+        for t in StyleTemplate::all() {
+            let fixed = styles::by_name(t.name).expect("every template names a style");
+            assert_eq!(
+                t.instantiate_defaults().fingerprint(),
+                fixed.fingerprint(),
+                "{}: the default binding must be the Table 3 style",
+                t.name
+            );
+        }
+    }
+
+    #[test]
+    fn grid_instantiation_is_odometer_order_last_knob_fastest() {
+        let yr = StyleTemplate::yr_p();
+        let grid = yr.instantiate_grid(&[&[1, 2], &[4, 8]]);
+        let names: Vec<&str> = grid.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["YR-P(c=1,k=4)", "YR-P(c=1,k=8)", "YR-P(c=2,k=4)", "YR-P(c=2,k=8)"]);
+        // Knobless templates instantiate to exactly one mapping.
+        let cp = StyleTemplate::c_p().instantiate_grid(&[]);
+        assert_eq!(cp.len(), 1);
+        assert_eq!(cp[0].fingerprint(), styles::c_p().fingerprint());
+    }
+
+    #[test]
+    fn by_name_matches_family_spellings() {
+        for t in StyleTemplate::all() {
+            assert_eq!(StyleTemplate::by_name(t.name).unwrap().name, t.name);
+        }
+        assert!(StyleTemplate::by_name("zz-p").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "declares 1 knob")]
+    fn instantiate_checks_arity() {
+        StyleTemplate::kc_p().instantiate(&[]);
+    }
+}

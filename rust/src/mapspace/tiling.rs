@@ -1,0 +1,356 @@
+//! Programmatic tiling enumeration: from a [`StyleTemplate`] and a
+//! concrete layer, the legal tile-size bindings of every declared knob.
+//!
+//! # Enumeration bounds (the honest version)
+//!
+//! This is *not* the full tiling space of the layer. Per knob,
+//! [`tile_values`] emits at most `resolution` candidate sizes — a
+//! deterministic subsample of the divisors of the dimension extent
+//! (edge-free tilings) unioned with the powers of two up to it
+//! (edge-tile tilings) — plus the knob's Table 3 default, which is
+//! always included so the enumerated space is a superset of the fixed
+//! evaluation style whenever that style maps. The full grid is the
+//! product over knobs (so at most `(resolution + 1)^knobs` bindings per
+//! template), each instantiated and validated with
+//! [`Dataflow::resolve`] against the source layer at the stated PE
+//! count — every emitted candidate maps — and deduplicated by
+//! structural [`fingerprint`](Dataflow::fingerprint) (distinct knob
+//! values can collapse to one structure, e.g. clamped tiles).
+//! Everything here is a pure function of its arguments: enumeration
+//! order is bit-deterministic for any caller, thread, or process
+//! (pinned by `rust/tests/mapspace.rs`).
+
+use std::collections::HashSet;
+
+use crate::ir::dataflow::Dataflow;
+use crate::model::layer::Layer;
+
+use super::template::{StyleTemplate, TileKnob, TileRule};
+
+/// Candidate tile sizes for one knob over a dimension of `extent`:
+/// divisors and/or powers-of-two covers per the knob's [`TileRule`],
+/// subsampled to at most `resolution` values (evenly spaced over the
+/// sorted candidate list, extremes kept), with the Table 3 `default`
+/// always merged in. Ascending, deduplicated, deterministic.
+/// Resolutions below 2 are clamped to 2 (the extremes are always kept,
+/// so 2 is the smallest meaningful subsample).
+pub fn tile_values(extent: u64, rule: TileRule, resolution: usize, default: u64) -> Vec<u64> {
+    let resolution = resolution.max(2);
+    let extent = extent.max(1);
+    let mut vals: Vec<u64> = Vec::new();
+    if matches!(rule, TileRule::Divisors | TileRule::DivisorsAndCover) {
+        vals.extend((1..=extent).filter(|d| extent % d == 0));
+    }
+    if matches!(rule, TileRule::Cover | TileRule::DivisorsAndCover) {
+        let mut p = 1u64;
+        while p <= extent {
+            vals.push(p);
+            match p.checked_mul(2) {
+                Some(next) => p = next,
+                None => break,
+            }
+        }
+        vals.push(extent);
+    }
+    vals.sort_unstable();
+    vals.dedup();
+    if vals.len() > resolution {
+        let last = vals.len() - 1;
+        let picked: Vec<u64> = (0..resolution).map(|i| vals[i * last / (resolution - 1)]).collect();
+        vals = picked;
+        vals.dedup();
+    }
+    if let Err(at) = vals.binary_search(&default) {
+        vals.insert(at, default);
+    }
+    vals
+}
+
+/// Result of enumerating one template (or a template set) on a layer.
+#[derive(Debug, Clone, Default)]
+pub struct Enumeration {
+    /// The fingerprint-deduplicated, resolve-validated mappings, in
+    /// deterministic odometer order (last knob fastest; templates in
+    /// input order for [`enumerate_all`]).
+    pub dataflows: Vec<Dataflow>,
+    /// Knob values behind each dataflow (parallel to `dataflows`;
+    /// empty inner vec for knobless templates). These are the *tile
+    /// coordinates* guided search uses for adjacency.
+    pub coords: Vec<Vec<u64>>,
+    /// Index of the source template per dataflow (parallel to
+    /// `dataflows`; position in the template list handed to
+    /// [`enumerate_all`]/[`enumerate_defaults`], always 0 for
+    /// [`enumerate`]). Tile coordinates only compare within one
+    /// template — [`tile_adjacency`] requires it.
+    pub template_of: Vec<usize>,
+    /// Knob-value combinations tried (pre-validation).
+    pub combos: u64,
+    /// Combinations whose instantiation failed to resolve on the layer.
+    pub unmappable: u64,
+    /// Combinations dropped as structural duplicates of an earlier one.
+    pub duplicates: u64,
+}
+
+impl Enumeration {
+    fn absorb(&mut self, other: Enumeration) {
+        self.combos += other.combos;
+        self.unmappable += other.unmappable;
+        self.duplicates += other.duplicates;
+        self.dataflows.extend(other.dataflows);
+        self.coords.extend(other.coords);
+        self.template_of.extend(other.template_of);
+    }
+}
+
+/// Enumerate the legal tile bindings of `template` on `layer`,
+/// validated at `pes` processing elements. See the module docs for the
+/// exact bounds.
+pub fn enumerate(template: &StyleTemplate, layer: &Layer, pes: u64, resolution: usize) -> Enumeration {
+    let axes: Vec<Vec<u64>> = template
+        .knobs
+        .iter()
+        .map(|k: &TileKnob| tile_values(layer.dim(k.dim), k.rule, resolution, k.default))
+        .collect();
+    enumerate_axes(template, 0, layer, pes, &axes, &mut HashSet::new())
+}
+
+/// Enumerate every template of a set on one layer, deduplicating
+/// structures *across* templates (first template wins a shared
+/// fingerprint). This is the mapper's per-shape candidate list.
+pub fn enumerate_all(
+    templates: &[StyleTemplate],
+    layer: &Layer,
+    pes: u64,
+    resolution: usize,
+) -> Enumeration {
+    let mut seen = HashSet::new();
+    let mut out = Enumeration::default();
+    for (ti, t) in templates.iter().enumerate() {
+        let axes: Vec<Vec<u64>> = t
+            .knobs
+            .iter()
+            .map(|k| tile_values(layer.dim(k.dim), k.rule, resolution, k.default))
+            .collect();
+        out.absorb(enumerate_axes(t, ti, layer, pes, &axes, &mut seen));
+    }
+    out
+}
+
+/// Just the Table 3 default binding of each template (the fixed
+/// evaluation styles), resolve-validated and deduplicated — the
+/// mapper's fallback candidate list once a wall-clock budget is spent.
+pub fn enumerate_defaults(templates: &[StyleTemplate], layer: &Layer, pes: u64) -> Enumeration {
+    let mut seen = HashSet::new();
+    let mut out = Enumeration::default();
+    for (ti, t) in templates.iter().enumerate() {
+        let axes: Vec<Vec<u64>> = t.knobs.iter().map(|k| vec![k.default]).collect();
+        out.absorb(enumerate_axes(t, ti, layer, pes, &axes, &mut seen));
+    }
+    out
+}
+
+fn enumerate_axes(
+    template: &StyleTemplate,
+    template_idx: usize,
+    layer: &Layer,
+    pes: u64,
+    axes: &[Vec<u64>],
+    seen: &mut HashSet<crate::cache::DataflowFingerprint>,
+) -> Enumeration {
+    let mut out = Enumeration::default();
+    let mut consider = |combo: &[u64], out: &mut Enumeration| {
+        out.combos += 1;
+        let df = template.instantiate(combo);
+        if df.resolve(layer, pes).is_err() {
+            out.unmappable += 1;
+            return;
+        }
+        if !seen.insert(df.fingerprint()) {
+            out.duplicates += 1;
+            return;
+        }
+        out.dataflows.push(df);
+        out.coords.push(combo.to_vec());
+        out.template_of.push(template_idx);
+    };
+    if axes.is_empty() {
+        consider(&[], &mut out);
+        return out;
+    }
+    if axes.iter().any(|a| a.is_empty()) {
+        return out;
+    }
+    // Odometer over the knob axes, last knob fastest (matches
+    // `StyleTemplate::instantiate_grid` and the legacy variant lists).
+    let mut idx = vec![0usize; axes.len()];
+    let mut combo: Vec<u64> = axes.iter().map(|a| a[0]).collect();
+    loop {
+        consider(&combo, &mut out);
+        let mut k = axes.len();
+        loop {
+            if k == 0 {
+                return out;
+            }
+            k -= 1;
+            idx[k] += 1;
+            if idx[k] < axes[k].len() {
+                combo[k] = axes[k][idx[k]];
+                break;
+            }
+            idx[k] = 0;
+            combo[k] = axes[k][0];
+        }
+    }
+}
+
+/// Tile-coordinate adjacency over an enumeration's surviving
+/// candidates: `j` neighbors `i` when they come from the *same
+/// template* (`template_of`, parallel to `coords` — knob values from
+/// different templates are incomparable even at equal arity), their
+/// coordinates differ in exactly one knob, and no surviving candidate
+/// sits strictly between them on that knob (with every other knob
+/// equal) — one step in tile space, robust to the holes validation and
+/// dedup punch into the grid. Deterministic: neighbors ascend by
+/// index.
+pub fn tile_adjacency(coords: &[Vec<u64>], template_of: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(coords.len(), template_of.len(), "parallel slices from one Enumeration");
+    let n = coords.len();
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j
+                || template_of[i] != template_of[j]
+                || coords[i].len() != coords[j].len()
+                || coords[i].is_empty()
+            {
+                continue;
+            }
+            let (a, b) = (&coords[i], &coords[j]);
+            let mut diff = None;
+            let mut multi = false;
+            for d in 0..a.len() {
+                if a[d] != b[d] {
+                    if diff.is_some() {
+                        multi = true;
+                        break;
+                    }
+                    diff = Some(d);
+                }
+            }
+            let Some(d) = diff else { continue };
+            if multi {
+                continue;
+            }
+            let (lo, hi) = (a[d].min(b[d]), a[d].max(b[d]));
+            let between = coords.iter().enumerate().any(|(k, c)| {
+                k != i
+                    && k != j
+                    && template_of[k] == template_of[i]
+                    && c.len() == a.len()
+                    && c[d] > lo
+                    && c[d] < hi
+                    && (0..a.len()).all(|e| e == d || c[e] == a[e])
+            });
+            if !between {
+                adj[i].push(j);
+            }
+        }
+    }
+    adj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::vgg16;
+
+    #[test]
+    fn tile_values_cover_extremes_and_respect_resolution() {
+        let v = tile_values(64, TileRule::DivisorsAndCover, 4, 64);
+        assert_eq!(v.first(), Some(&1));
+        assert_eq!(v.last(), Some(&64));
+        assert!(v.windows(2).all(|w| w[0] < w[1]), "{v:?}");
+        assert!(v.len() <= 5, "resolution + default bound: {v:?}");
+        // The default is always present, even above the extent.
+        let v = tile_values(3, TileRule::DivisorsAndCover, 4, 64);
+        assert!(v.contains(&64), "{v:?}");
+        assert!(v.contains(&3));
+    }
+
+    #[test]
+    fn tile_values_divisors_only_divide() {
+        let v = tile_values(12, TileRule::Divisors, 16, 4);
+        assert!(v.iter().all(|&d| 12 % d == 0), "{v:?}");
+        assert_eq!(v, vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn tile_values_clamps_degenerate_resolutions() {
+        // User-supplied resolutions of 0/1 must not panic: they clamp
+        // to 2 (extremes), plus the always-kept default.
+        for resolution in [0usize, 1] {
+            let v = tile_values(64, TileRule::DivisorsAndCover, resolution, 8);
+            assert_eq!(v, vec![1, 8, 64], "resolution {resolution}");
+        }
+    }
+
+    #[test]
+    fn enumeration_validates_dedupes_and_accounts() {
+        let layer = vgg16::conv13();
+        let t = StyleTemplate::kc_p();
+        let en = enumerate(&t, &layer, 256, 6);
+        assert!(!en.dataflows.is_empty());
+        assert_eq!(en.dataflows.len(), en.coords.len());
+        assert_eq!(
+            en.combos,
+            en.dataflows.len() as u64 + en.unmappable + en.duplicates,
+            "every combination lands in exactly one bucket"
+        );
+        for df in &en.dataflows {
+            df.resolve(&layer, 256).expect("every emitted candidate maps");
+        }
+        // conv13 has C=512: ct=512 needs a 512-wide cluster, which 256
+        // PEs cannot host — enumeration must have filtered it.
+        assert!(en.unmappable > 0, "oversized cluster tiles must be filtered");
+    }
+
+    #[test]
+    fn enumerate_all_includes_every_fixed_style_that_maps() {
+        use crate::ir::styles;
+        let layer = vgg16::conv2();
+        let en = enumerate_all(&StyleTemplate::all(), &layer, 256, 2);
+        for fixed in styles::all_styles() {
+            if fixed.resolve(&layer, 256).is_ok() {
+                assert!(
+                    en.dataflows.iter().any(|d| d.fingerprint() == fixed.fingerprint()),
+                    "{} missing from the enumeration even at minimum resolution",
+                    fixed.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_is_one_tile_step() {
+        // A 1-knob axis with a hole: 1 - 2 - 8 (4 was filtered out).
+        let coords = vec![vec![1], vec![2], vec![8]];
+        let adj = tile_adjacency(&coords, &[0, 0, 0]);
+        assert_eq!(adj, vec![vec![1], vec![0, 2], vec![1]]);
+        // A 2-knob grid: (1,1) (1,2) (2,1) (2,2) — diagonals excluded.
+        let grid = vec![vec![1, 1], vec![1, 2], vec![2, 1], vec![2, 2]];
+        let adj = tile_adjacency(&grid, &[0; 4]);
+        assert_eq!(adj[0], vec![1, 2]);
+        assert_eq!(adj[3], vec![1, 2]);
+        // Knobless candidates have no tile neighbors.
+        assert_eq!(tile_adjacency(&[vec![], vec![]], &[0, 1]), vec![Vec::<usize>::new(); 2]);
+    }
+
+    #[test]
+    fn adjacency_never_crosses_templates() {
+        // Same knob arity, different source templates (kc-p ct vs
+        // yx-p xt): values are incomparable, so no adjacency.
+        let coords = vec![vec![4], vec![8], vec![4], vec![8]];
+        let adj = tile_adjacency(&coords, &[0, 0, 1, 1]);
+        assert_eq!(adj, vec![vec![1], vec![0], vec![3], vec![2]]);
+    }
+}

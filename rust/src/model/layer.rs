@@ -159,6 +159,28 @@ impl ShapeKey {
         let [n, k, c, y, x, r, s] = dims;
         ShapeKey { op, n, k, c, y, x, r, s, stride, sparsity_bits }
     }
+
+    /// Materialize a layer with this shape. Round-trips exactly:
+    /// `layer.shape_key().to_layer(name).shape_key() == layer.shape_key()`
+    /// (the sparsity discount is a pure function of `op`). For
+    /// consumers that hold only a shape — e.g. replaying a persisted
+    /// cache key, or enumerating mapspace tilings against a `ShapeKey`
+    /// (`rust/tests/mapspace.rs` pins that the enumeration over a
+    /// rebuilt layer is bit-identical to the original's).
+    pub fn to_layer(&self, name: &str) -> Layer {
+        Layer {
+            name: name.into(),
+            op: self.op,
+            n: self.n,
+            k: self.k,
+            c: self.c,
+            y: self.y,
+            x: self.x,
+            r: self.r,
+            s: self.s,
+            stride: self.stride,
+        }
+    }
 }
 
 /// One DNN layer with concrete dimensions. `Y`/`X` are *input* activation
@@ -446,6 +468,19 @@ mod tests {
         let sparse = Layer::transposed_conv("u", 1, 64, 128, 28, 28, 2, 2, 2);
         assert_eq!(dense.macs(), sparse.macs());
         assert_ne!(dense.shape_key(), sparse.shape_key());
+    }
+
+    #[test]
+    fn shape_key_to_layer_roundtrips() {
+        for layer in [
+            Layer::conv2d("a", 2, 64, 3, 224, 224, 7, 7, 2),
+            Layer::depthwise("b", 1, 32, 28, 28, 3, 3, 1),
+            Layer::fully_connected("c", 1, 1000, 4096),
+            Layer::transposed_conv("d", 1, 64, 128, 28, 28, 2, 2, 2),
+        ] {
+            let key = layer.shape_key();
+            assert_eq!(key.to_layer("rebuilt").shape_key(), key, "{}", layer.name);
+        }
     }
 
     #[test]

@@ -347,6 +347,7 @@ fn unmappable_and_pruned_pairs_are_distinguished() {
         bandwidths: vec![4, 64],
         noc_latency: 2,
         variants: vec![kc_p_ct(64)],
+        variant_adjacency: Vec::new(),
         area_budget_mm2: 16.0,
         power_budget_mw: 450.0,
     };
