@@ -1,0 +1,205 @@
+//! Serve rate — requests/s against a resident `maestro serve` daemon,
+//! cold (first-touch, every analysis runs) vs warm (answered from the
+//! resident `SharedStore`). The point of DSE-as-a-service is exactly
+//! this delta: the daemon pays the analytical model once per distinct
+//! (layer, dataflow, hw) and every later request is a store replay.
+//!
+//! CI smoke mode: `SERVE_SMOKE=1 cargo bench --bench serve_rate` spins
+//! an in-process daemon on an ephemeral port with a temp cache file,
+//! times one cold analyze + one cold budgeted dse on the ci_smoke-sized
+//! workload, then times warm repeats of both. It **asserts** the warm
+//! analyze reports zero analyses and strictly beats the cold one, and
+//! that the shutdown flush leaves a non-empty, loadable cache file —
+//! then writes the cold/warm requests-per-second record to
+//! `BENCH_serve.json` (override with `SERVE_SMOKE_OUT`), uploaded as a
+//! CI build artifact. The default (non-smoke) mode runs the same
+//! protocol with more warm iterations for a steadier rate estimate.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use maestro::cache::SharedStore;
+use maestro::engine::analysis::Objective;
+use maestro::service::api::{AnalyzeRequest, DseRequest, Request, Response};
+use maestro::service::daemon::{Daemon, ServeConfig};
+use maestro::util::json::Json;
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    fn request(&mut self, request: &Request) -> Response {
+        let mut line = request.encode().dump();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).expect("write frame");
+        self.stream.flush().expect("flush frame");
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).expect("read reply");
+        assert!(n > 0, "daemon closed the connection");
+        let v = Json::parse(reply.trim()).expect("reply must be JSON");
+        Response::decode(&v).unwrap_or_else(|e| panic!("undecodable reply {e:?}: {}", v.dump()))
+    }
+}
+
+fn analyze_request(id: u64) -> Request {
+    Request::Analyze(AnalyzeRequest {
+        id: Some(id),
+        model: "vgg16".into(),
+        dataflow: "adaptive".into(),
+        pes: 256,
+        bw: 16,
+        objective: Objective::Runtime,
+        tile_resolution: 6,
+        per_layer: false,
+    })
+}
+
+fn dse_request(id: u64) -> Request {
+    // ci_smoke-sized: first VGG16 layer, tiny resolution, exhaustive so
+    // the warm repeat touches the identical design set.
+    Request::Dse(DseRequest {
+        id: Some(id),
+        family: "kc-p".into(),
+        model: "vgg16".into(),
+        layer: String::new(),
+        network: false,
+        resolution: 4,
+        bw_resolution: 4,
+        mapspace: false,
+        tile_resolution: 6,
+        strategy: "exhaustive".into(),
+        seed: 1,
+        budget: 0,
+        budget_seconds: 0.0,
+        threads: 1,
+        keep_points: false,
+    })
+}
+
+fn expect_analyze(r: Response) -> maestro::service::api::AnalyzeReply {
+    match r {
+        Response::Analyze(a) => a,
+        other => panic!("expected analyze reply, got {other:?}"),
+    }
+}
+
+fn expect_dse(r: Response) -> maestro::service::api::DseReply {
+    match r {
+        Response::Dse(d) => d,
+        other => panic!("expected dse reply, got {other:?}"),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SERVE_SMOKE")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
+        .unwrap_or(false);
+    let warm_iters: u64 = if smoke { 10 } else { 100 };
+
+    let cache =
+        std::env::temp_dir().join(format!("maestro_serve_bench_{}.mcache", std::process::id()));
+    let _ = std::fs::remove_file(&cache);
+    let daemon = Daemon::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_file: Some(cache.display().to_string()),
+        flush_every: 0.0,
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let mut client = Client::connect(daemon.addr());
+    let mut next_id = 0u64;
+    let mut id = || {
+        next_id += 1;
+        next_id
+    };
+
+    // Cold leg: first touch pays the analytical model.
+    let t0 = Instant::now();
+    let cold_analyze = expect_analyze(client.request(&analyze_request(id())));
+    let cold_analyze_s = t0.elapsed().as_secs_f64();
+    assert!(cold_analyze.stats.analyses > 0, "cold analyze must run analyses");
+    let t0 = Instant::now();
+    let cold_dse = expect_dse(client.request(&dse_request(id())));
+    let cold_dse_s = t0.elapsed().as_secs_f64();
+    assert!(cold_dse.search.evaluated > 0, "cold dse must evaluate designs");
+    println!(
+        "cold: analyze {:.4}s ({} analyses), dse {:.4}s ({} designs)",
+        cold_analyze_s, cold_analyze.stats.analyses, cold_dse_s, cold_dse.search.evaluated
+    );
+
+    // Warm leg: identical requests answered from the resident store.
+    let t0 = Instant::now();
+    let mut warm_hits_total = 0u64;
+    for _ in 0..warm_iters {
+        let warm = expect_analyze(client.request(&analyze_request(id())));
+        assert_eq!(warm.stats.analyses, 0, "warm analyze must not re-analyze: {:?}", warm.stats);
+        assert!(warm.stats.warm_hits > 0, "warm analyze must hit the store: {:?}", warm.stats);
+        assert_eq!(warm.runtime_cycles, cold_analyze.runtime_cycles, "replay must be bit-identical");
+        warm_hits_total += warm.stats.warm_hits;
+    }
+    let warm_analyze_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let warm_dse = expect_dse(client.request(&dse_request(id())));
+    let warm_dse_s = t0.elapsed().as_secs_f64();
+    assert_eq!(warm_dse.stats.analyses, 0, "warm dse must replay: {:?}", warm_dse.stats);
+    assert_eq!(warm_dse.frontier, cold_dse.frontier, "warm frontier must be bit-identical");
+
+    let cold_rps = 1.0 / cold_analyze_s.max(1e-9);
+    let warm_rps = warm_iters as f64 / warm_analyze_s.max(1e-9);
+    let per_warm = warm_analyze_s / warm_iters as f64;
+    println!(
+        "warm: analyze {warm_iters} x {:.5}s avg ({} store hits), dse {:.4}s",
+        per_warm, warm_hits_total, warm_dse_s
+    );
+    println!(
+        "requests/s: cold {:.1} -> warm {:.1} (x{:.1} speedup)",
+        cold_rps,
+        warm_rps,
+        warm_rps / cold_rps.max(1e-9)
+    );
+    assert!(
+        per_warm < cold_analyze_s,
+        "warm ({per_warm:.5}s) must be strictly faster than cold ({cold_analyze_s:.5}s)"
+    );
+
+    // Shutdown flushes the store; the file must replay standalone.
+    match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+    let store = SharedStore::new();
+    let report = store.load(&cache);
+    assert!(report.warning.is_none(), "{:?}", report.warning);
+    assert!(report.loaded > 0, "shutdown flush must persist records");
+    println!("shutdown flush: {} record(s) on disk", report.loaded);
+
+    if smoke {
+        let json = format!(
+            "{{\n  \"bench\": \"serve_rate\",\n  \"workload\": \"vgg16 adaptive analyze + kc-p dse \
+             (resolution 4, exhaustive)\",\n  \"cold\": {{\"analyze_seconds\": {cold_analyze_s:.6}, \
+             \"dse_seconds\": {cold_dse_s:.6}, \"analyses\": {}, \"requests_per_s\": {cold_rps:.2}}},\n  \
+             \"warm\": {{\"iterations\": {warm_iters}, \"analyze_seconds_total\": {warm_analyze_s:.6}, \
+             \"analyze_seconds_avg\": {per_warm:.6}, \"dse_seconds\": {warm_dse_s:.6}, \
+             \"store_hits\": {warm_hits_total}, \"requests_per_s\": {warm_rps:.2}}},\n  \
+             \"speedup\": {:.2},\n  \"flushed_records\": {}\n}}\n",
+            cold_analyze.stats.analyses,
+            warm_rps / cold_rps.max(1e-9),
+            report.loaded,
+        );
+        let path = std::env::var("SERVE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+        std::fs::write(&path, json).expect("write bench smoke json");
+        println!("wrote {path}");
+    }
+    let _ = std::fs::remove_file(&cache);
+}

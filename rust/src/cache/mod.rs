@@ -41,4 +41,4 @@ pub mod store;
 
 pub use key::{CacheKey, DataflowFingerprint, HwKey};
 pub use persist::{compact_file, CompactReport};
-pub use store::{CacheHit, CacheValue, FlushReport, LoadReport, SharedStore};
+pub use store::{CacheHit, CacheValue, FlushReport, LoadReport, SharedStore, StoreMetrics};

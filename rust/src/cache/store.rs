@@ -113,6 +113,19 @@ pub struct FlushReport {
     pub total: usize,
 }
 
+/// Snapshot of a store's size and lifetime counters
+/// ([`SharedStore::metrics`]) — the `serve` daemon's status payload.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreMetrics {
+    pub entries: u64,
+    /// FIFO cap (0 = unbounded).
+    pub max_entries: u64,
+    pub hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
 /// One lock shard: the key map plus (for capped stores) the FIFO
 /// insertion order backing eviction.
 #[derive(Debug, Default)]
@@ -283,6 +296,21 @@ impl SharedStore {
     /// Entries dropped by the FIFO cap (always 0 for unbounded stores).
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// One coherent-enough snapshot of size + lifetime counters — what
+    /// the `serve` daemon reports per status request and logs around
+    /// flushes. Counters are independent relaxed atomics, so the fields
+    /// are each exact but not mutually atomic under concurrent traffic.
+    pub fn metrics(&self) -> StoreMetrics {
+        StoreMetrics {
+            entries: self.len() as u64,
+            max_entries: self.max_entries() as u64,
+            hits: self.hits(),
+            disk_hits: self.disk_hits(),
+            misses: self.misses(),
+            evictions: self.evictions(),
+        }
     }
 
     /// Drop every entry (counters and persistence bookkeeping survive).

@@ -371,6 +371,12 @@ pub struct SweepConfig {
     /// deterministic and lands in [`SweepStats::budget_skipped`];
     /// `max_seconds` stops between waves (not bit-deterministic).
     pub budget: SearchBudget,
+    /// Cooperative cancellation: when set and flipped true, the sweep
+    /// stops at the next wave boundary (same granularity as
+    /// `budget.max_seconds`) and returns the partial outcome. The
+    /// `serve` daemon scopes one flag per request so a client can
+    /// abandon a long sweep without killing the process.
+    pub cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for SweepConfig {
@@ -382,6 +388,7 @@ impl Default for SweepConfig {
             cache: None,
             strategy: SearchStrategy::Exhaustive,
             budget: SearchBudget::default(),
+            cancel: None,
         }
     }
 }
@@ -443,6 +450,11 @@ pub struct SweepStats {
     pub cache_disk_hits: u64,
     /// Analyzer layer-cache misses (= full layer analyses run).
     pub cache_misses: u64,
+    /// Entries the shared store's FIFO cap dropped during this sweep
+    /// (0 without [`SweepConfig::cache`] or for unbounded stores).
+    /// Like the hit/miss split, diagnostic only — excluded from the
+    /// determinism contract.
+    pub evictions: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
@@ -468,11 +480,13 @@ impl SweepStats {
 
     /// One-line human summary, including the skip breakdown (pruned /
     /// unmappable / budget-cut) and the layer-cache
-    /// mem-hit/disk-hit/miss split.
+    /// mem-hit/disk-hit/miss/eviction split (the segment is rendered by
+    /// [`crate::engine::analysis::fmt_cache_counters`], shared with
+    /// `MapperStats::summary` so the two reports cannot drift).
     pub fn summary(&self) -> String {
         format!(
             "strategy={} designs={} evaluated={} valid={} pruned={} unmappable={} budget_skipped={} \
-             waves={} cache={}h/{}d/{}m wall={:.2}s rate={}/s",
+             waves={} {} wall={:.2}s rate={}/s",
             if self.strategy.is_empty() { "exhaustive" } else { self.strategy.as_str() },
             self.total_designs,
             self.evaluated,
@@ -481,9 +495,12 @@ impl SweepStats {
             self.unmappable,
             self.budget_skipped,
             self.waves,
-            self.cache_hits,
-            self.cache_disk_hits,
-            self.cache_misses,
+            crate::engine::analysis::fmt_cache_counters(
+                self.cache_hits,
+                self.cache_disk_hits,
+                self.cache_misses,
+                self.evictions,
+            ),
             self.seconds,
             crate::util::benchkit::fmt_rate(self.rate()),
         )
@@ -666,6 +683,11 @@ fn sweep_waves(
         if config.budget.max_seconds > 0.0 && t0.elapsed().as_secs_f64() >= config.budget.max_seconds {
             break;
         }
+        if let Some(cancel) = &config.cancel {
+            if cancel.load(std::sync::atomic::Ordering::Relaxed) {
+                break;
+            }
+        }
         let last = std::mem::take(&mut state.feedback);
         let mut wave = gen.next_wave(&state.frontier, &last);
         if wave.is_empty() {
@@ -743,6 +765,9 @@ pub fn sweep(
     } else {
         None
     };
+    // Eviction accounting: the store's counter is cumulative across
+    // consumers, so record the delta this sweep is responsible for.
+    let evictions0 = cache.map(|s| s.evictions()).unwrap_or(0);
     let mut state = SweepState {
         frontier: ParetoAccumulator::new(),
         stats: SweepStats {
@@ -860,6 +885,7 @@ pub fn sweep(
             drop(job_tx);
         });
     }
+    state.stats.evictions = cache.map(|s| s.evictions().saturating_sub(evictions0)).unwrap_or(0);
     state.stats.seconds = t0.elapsed().as_secs_f64();
     Ok(SweepOutcome {
         frontier: state.frontier.into_sorted(),

@@ -690,6 +690,16 @@ impl Objective {
     }
 }
 
+/// The uniform cache-counter segment of every stats summary line —
+/// mem-hits / disk-hits / misses / evictions, spelled
+/// `cache=Xh/Yd/Zm/Ee`. Shared by [`SweepStats::summary`]
+/// (`crate::dse::engine`), [`MapperStats::summary`]
+/// (`crate::mapspace::mapper`), and the service layer, so the split
+/// can never drift between the sweep and mapper reports again.
+pub fn fmt_cache_counters(hits: u64, disk_hits: u64, misses: u64, evictions: u64) -> String {
+    format!("cache={hits}h/{disk_hits}d/{misses}m/{evictions}e")
+}
+
 /// The scalar a layer's stats score under an objective (lower is
 /// better) — the comparison rule shared by [`adaptive_network`] and the
 /// mapspace mapper ([`crate::mapspace::Mapper`]).
@@ -799,6 +809,12 @@ mod tests {
 
     fn hw() -> HwConfig {
         HwConfig::fig10_default()
+    }
+
+    #[test]
+    fn cache_counter_segment_is_uniform() {
+        assert_eq!(fmt_cache_counters(3, 1, 2, 0), "cache=3h/1d/2m/0e");
+        assert_eq!(fmt_cache_counters(0, 0, 0, 7), "cache=0h/0d/0m/7e");
     }
 
     #[test]

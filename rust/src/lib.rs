@@ -39,6 +39,10 @@
 //!   scalar backend otherwise.
 //! * [`coordinator`] — the L3 orchestration: worker threads, design-point
 //!   batching, backpressure, metrics.
+//! * [`service`] — DSE-as-a-service: the typed, versioned
+//!   request/response API shared by the CLI (`--json`) and the
+//!   resident `maestro serve` daemon (warm [`SharedStore`], bounded
+//!   backpressure, cooperative cancellation).
 //! * [`report`] — table/CSV/ASCII-scatter emitters for the experiment
 //!   drivers.
 //! * [`util`] — CLI parsing, a mini property-test harness, a bench
@@ -55,6 +59,7 @@ pub mod mapspace;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 

@@ -5,48 +5,55 @@
 //! maestro network  --model mobilenetv2 --dataflow adaptive [--objective runtime --per-layer]
 //! maestro map      --model vgg16 [--objective edp --tile-resolution 6]  # layer-wise mapper
 //! maestro validate --model vgg16 --dataflow yr-p --pes 64      # model vs cycle sim
-//! maestro dse      --family kc-p --layer-model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
-//! maestro dse      --family kc-p --layer-model resnet50 --network   # whole-network sweep
+//! maestro dse      --family kc-p --model vgg16 --layer conv2_2 [--resolution 12 --threads 0]
+//! maestro dse      --family kc-p --model resnet50 --network   # whole-network sweep
 //! maestro dse      --family kc-p --strategy guided                  # frontier without the full sweep
 //! maestro dse      --family kc-p --strategy random --budget 50000 --seed 7
 //! maestro dse      --family kc-p --mapspace                         # generated variant axis
+//! maestro serve    --cache-file warm.mcache [--addr 127.0.0.1:7733] # resident DSE daemon
 //! maestro cache    compact --cache-file warm.mcache   # rewrite with unique keys
 //! maestro table1
 //! maestro zoo
 //! ```
+//!
+//! `network`, `map`, and `dse` are thin clients of the same entry
+//! points the `serve` daemon executes (`maestro::service::exec`); give
+//! any of them `--json` to emit the daemon's versioned response frame
+//! instead of tables.
 
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use maestro::cache::SharedStore;
 use maestro::coordinator::{jobs_from_batches, run_jobs_with_store, Backend};
-use maestro::dse::engine::{sweep, DesignPoint, SweepConfig};
+use maestro::dse::engine::DesignPoint;
 use maestro::dse::pareto::{best, Optimize};
-use maestro::dse::space::DesignSpace;
-use maestro::dse::strategy::{plan_single_wave, SearchBudget, SearchStrategy};
-use maestro::engine::analysis::{adaptive_network_with, analyze_layer, analyze_network_with, Analyzer, Objective};
+use maestro::dse::strategy::plan_single_wave;
+use maestro::engine::analysis::analyze_layer;
 use maestro::hw::config::HwConfig;
-use maestro::mapspace::{Mapper, MapperConfig};
-use maestro::model::network::Network;
 use maestro::ir::styles;
 use maestro::model::zoo;
 use maestro::report::experiments;
 use maestro::runtime::BatchEvaluator;
+use maestro::service::api::{AnalyzeRequest, DseRequest, MapRequest};
+use maestro::service::exec::{
+    analyze_reply, dse_reply, map_reply, pick_layer_named, prepare_dse, run_analyze, run_map,
+    run_prepared_dse,
+};
+use maestro::service::{Response, ServeConfig};
 use maestro::sim::cycle::simulate;
-use maestro::util::cli::{usage, Args, FlagSpec};
+use maestro::util::cli::{common_flags, usage, Args, FlagSpec};
 use maestro::util::table::{num, Table};
 
 fn flags() -> Vec<FlagSpec> {
-    vec![
+    let mut spec = vec![
         FlagSpec { name: "model", takes_value: true, help: "zoo network name (see `maestro zoo`)" },
         FlagSpec { name: "layer", takes_value: true, help: "layer name within the model" },
         FlagSpec { name: "dataflow", takes_value: true, help: "c-p | x-p | yx-p | yr-p | kc-p | adaptive | mapped (network: mapspace-backed adaptive)" },
         FlagSpec { name: "pes", takes_value: true, help: "number of PEs (default 256)" },
         FlagSpec { name: "bw", takes_value: true, help: "NoC bandwidth, elements/cycle (default 16)" },
-        FlagSpec { name: "objective", takes_value: true, help: "runtime | energy | edp (default runtime)" },
         FlagSpec { name: "family", takes_value: true, help: "DSE dataflow family: kc-p | yr-p | yx-p" },
-        FlagSpec { name: "layer-model", takes_value: true, help: "model providing the DSE layer" },
         FlagSpec { name: "resolution", takes_value: true, help: "DSE sweep resolution per axis (default 12)" },
         FlagSpec {
             name: "bw-resolution",
@@ -58,34 +65,12 @@ fn flags() -> Vec<FlagSpec> {
             takes_value: true,
             help: "dse: search strategy: exhaustive | random | guided (default exhaustive)",
         },
-        FlagSpec {
-            name: "budget",
-            takes_value: true,
-            help: "dse: max designs admitted to evaluation (0 = unlimited; required for random)",
-        },
-        FlagSpec {
-            name: "budget-seconds",
-            takes_value: true,
-            help: "dse: wall-clock cutoff in seconds, checked between strategy waves (0 = off)",
-        },
-        FlagSpec { name: "seed", takes_value: true, help: "dse: RNG seed for --strategy random (default 1)" },
         FlagSpec { name: "network", takes_value: false, help: "dse: sweep the whole model (shape-deduped)" },
         FlagSpec { name: "per-layer", takes_value: false, help: "network: print the per-layer breakdown" },
         FlagSpec { name: "pjrt", takes_value: false, help: "use the AOT PJRT evaluator for DSE" },
-        FlagSpec { name: "threads", takes_value: true, help: "sweep worker threads (default 0 = all cores)" },
-        FlagSpec { name: "workers", takes_value: true, help: "coordinator workers for --pjrt (default 4); without --pjrt, caps sweep threads when --threads is absent" },
+        FlagSpec { name: "workers", takes_value: true, help: "coordinator workers for --pjrt (default 4); serve: executor threads (default 2); without --pjrt, caps sweep threads when --threads is absent" },
         FlagSpec { name: "max-steps", takes_value: true, help: "simulator step budget (default 200M)" },
         FlagSpec { name: "csv", takes_value: false, help: "emit CSV instead of aligned tables" },
-        FlagSpec {
-            name: "cache-file",
-            takes_value: true,
-            help: "network/map/dse: warm-start analysis cache file (loaded if present, updated on exit)",
-        },
-        FlagSpec {
-            name: "cache-cap",
-            takes_value: true,
-            help: "bound the in-memory analysis cache to ~N entries (coarse FIFO eviction; 0 = unbounded)",
-        },
         FlagSpec {
             name: "tile-resolution",
             takes_value: true,
@@ -96,14 +81,34 @@ fn flags() -> Vec<FlagSpec> {
             takes_value: false,
             help: "dse: generate the variant axis from the family's style template on the picked layer",
         },
-    ]
+        FlagSpec {
+            name: "json",
+            takes_value: false,
+            help: "network/map/dse: emit the service API's versioned JSON frame instead of tables",
+        },
+        FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7733)" },
+        FlagSpec {
+            name: "queue-cap",
+            takes_value: true,
+            help: "serve: job-queue depth before overloaded rejections (default 16)",
+        },
+        FlagSpec {
+            name: "flush-every",
+            takes_value: true,
+            help: "serve: seconds between background store flushes (default 30; 0 = shutdown only)",
+        },
+        FlagSpec { name: "verbose", takes_value: false, help: "serve: log each request to stderr" },
+    ];
+    spec.extend(common_flags());
+    spec
 }
 
 /// Load `--cache-file` (when given) into a fresh [`SharedStore`],
 /// bounded by `--cache-cap` (coarse FIFO eviction) when set. Returns
 /// the store and the path to flush back to. Corrupt or stale files
-/// warn and start cold — never fail the run.
-fn open_cache(args: &Args) -> Result<(Arc<SharedStore>, Option<String>)> {
+/// warn and start cold — never fail the run. `quiet` (--json) keeps
+/// stdout to the single response frame.
+fn open_cache(args: &Args, quiet: bool) -> Result<(Arc<SharedStore>, Option<String>)> {
     let cap = args.opt_u64("cache-cap", 0)? as usize;
     let store = if cap > 0 {
         Arc::new(SharedStore::with_max_entries(cap))
@@ -118,25 +123,29 @@ fn open_cache(args: &Args) -> Result<(Arc<SharedStore>, Option<String>)> {
     if let Some(w) = &report.warning {
         eprintln!("cache-file: {w}");
     }
-    println!("cache-file: loaded {} cached analyses from {path}", report.loaded);
-    if cap > 0 && store.evictions() > 0 {
-        println!(
-            "cache-cap: kept the newest {} of the file's records ({} evicted)",
-            store.len(),
-            store.evictions()
-        );
+    if !quiet {
+        println!("cache-file: loaded {} cached analyses from {path}", report.loaded);
+        if cap > 0 && store.evictions() > 0 {
+            println!(
+                "cache-cap: kept the newest {} of the file's records ({} evicted)",
+                store.len(),
+                store.evictions()
+            );
+        }
     }
     Ok((store, Some(path)))
 }
 
 /// Flush the store back to its `--cache-file` (if one was given).
-fn close_cache(store: &SharedStore, path: &Option<String>) -> Result<()> {
+fn close_cache(store: &SharedStore, path: &Option<String>, quiet: bool) -> Result<()> {
     if let Some(path) = path {
         let report = store.flush(std::path::Path::new(path))?;
-        println!(
-            "cache-file: wrote {} new record(s) ({} total) to {path}",
-            report.written, report.total
-        );
+        if !quiet {
+            println!(
+                "cache-file: wrote {} new record(s) ({} total) to {path}",
+                report.written, report.total
+            );
+        }
     }
     Ok(())
 }
@@ -145,9 +154,12 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = flags();
     let args = Args::parse(&argv, &spec, true)?;
+    for w in &args.warnings {
+        eprintln!("warning: {w}");
+    }
     let Some(cmd) = args.subcommand.clone() else {
         println!("maestro — data-centric DNN dataflow cost model (MICRO-52 reproduction)");
-        println!("subcommands: analyze | network | map | validate | dse | cache | table1 | zoo");
+        println!("subcommands: analyze | network | map | validate | dse | serve | cache | table1 | zoo");
         println!("{}", usage(&spec));
         return Ok(());
     };
@@ -178,86 +190,48 @@ fn main() -> Result<()> {
             }
         }
         "network" => {
-            let model = args.opt_required("model")?;
-            let net = zoo::by_name(&model)?;
-            let hw = pick_hw(&args)?;
-            let objective = Objective::parse(&args.opt("objective", "runtime"));
-            let dfname = args.opt("dataflow", "adaptive");
-            // One Analyzer for the whole command: each unique layer
-            // shape is analyzed once per (dataflow, hardware). With
-            // --cache-file it fronts a persistent store, so repeated
-            // invocations start warm (disk hits below).
-            let (store, cache_path) = open_cache(&args)?;
-            let mut analyzer = Analyzer::with_store(Arc::clone(&store));
-            let stats = if dfname == "adaptive" {
-                adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?
-            } else if dfname == "mapped" {
-                // Mapspace-backed adaptivity: the candidate set handed
-                // to adaptive_network_with is the fingerprint-deduped
-                // union of every style template's tiling enumeration
-                // over the network's unique shapes (the five fixed
-                // Table 3 styles are a subset — their defaults are
-                // always enumerated). Deliberate trade-off: every
-                // layer considers the whole cross-shape union — a
-                // strictly richer search than per-shape (a tiling
-                // found for one shape can win on another), at a cost
-                // that scales with shapes x union size. `maestro map`
-                // is the cheap per-shape variant of the same search.
-                let tile_resolution = args.opt_u64("tile-resolution", 6)? as usize;
-                let templates = maestro::mapspace::StyleTemplate::all();
-                let groups = net.unique_shapes();
-                let n_shapes = groups.len();
-                let mut candidates = Vec::new();
-                let mut seen = std::collections::HashSet::new();
-                for group in &groups {
-                    let en = maestro::mapspace::enumerate_all(
-                        &templates,
-                        group.layer,
-                        hw.num_pes,
-                        tile_resolution,
-                    );
-                    for df in en.dataflows {
-                        if seen.insert(df.fingerprint()) {
-                            candidates.push(df);
-                        }
+            let req = AnalyzeRequest::from_args(&args)?;
+            let json = args.has("json");
+            let (store, cache_path) = open_cache(&args, json)?;
+            let out = run_analyze(&store, &req)?;
+            if json {
+                println!("{}", Response::Analyze(analyze_reply(&req, &out)).encode_line());
+            } else {
+                if let Some(note) = &out.mapspace_note {
+                    println!("{note}");
+                }
+                let stats = &out.network;
+                let cols = ["network", "dataflow", "layers", "shapes", "runtime(cyc)", "energy(uJ)", "GMACs"];
+                let mut t = Table::new(&cols);
+                t.row(&[
+                    stats.network.clone(),
+                    stats.dataflow.clone(),
+                    stats.per_layer.len().to_string(),
+                    out.shapes.to_string(),
+                    num(stats.runtime),
+                    num(stats.energy.total() / 1e6),
+                    format!("{:.2}", stats.macs / 1e9),
+                ]);
+                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+                if args.has("per-layer") {
+                    let pl = experiments::network_layers_table(stats);
+                    print!("{}", if args.has("csv") { pl.to_csv() } else { pl.render() });
+                }
+                if !stats.skipped.is_empty() {
+                    println!("skipped {} layer(s):", stats.skipped.len());
+                    for s in &stats.skipped {
+                        println!("  {}: {}", s.layer, s.reason);
                     }
                 }
-                println!("mapspace: {} candidate mapping(s) across {n_shapes} unique shape(s)", candidates.len());
-                adaptive_network_with(&mut analyzer, &net, &candidates, &hw, objective)?
-            } else {
-                let df = styles::by_name(&dfname).with_context(|| format!("unknown dataflow {dfname}"))?;
-                analyze_network_with(&mut analyzer, &net, &df, &hw, true)?
-            };
-            let cols = ["network", "dataflow", "layers", "shapes", "runtime(cyc)", "energy(uJ)", "GMACs"];
-            let mut t = Table::new(&cols);
-            t.row(&[
-                stats.network.clone(),
-                stats.dataflow.clone(),
-                stats.per_layer.len().to_string(),
-                net.unique_shapes().len().to_string(),
-                num(stats.runtime),
-                num(stats.energy.total() / 1e6),
-                format!("{:.2}", stats.macs / 1e9),
-            ]);
-            print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
-            if args.has("per-layer") {
-                let pl = experiments::network_layers_table(&stats);
-                print!("{}", if args.has("csv") { pl.to_csv() } else { pl.render() });
+                println!(
+                    "analyzer cache: {} hits ({} from disk) / {} misses across {} layers",
+                    out.stats.warm_hits + out.stats.disk_hits,
+                    out.stats.disk_hits,
+                    out.stats.analyses,
+                    out.layers_total
+                );
             }
-            if !stats.skipped.is_empty() {
-                println!("skipped {} layer(s):", stats.skipped.len());
-                for s in &stats.skipped {
-                    println!("  {}: {}", s.layer, s.reason);
-                }
-            }
-            println!(
-                "analyzer cache: {} hits ({} from disk) / {} misses across {} layers",
-                analyzer.cache_hits(),
-                analyzer.disk_hits(),
-                analyzer.cache_misses(),
-                net.layers.len()
-            );
-            close_cache(&store, &cache_path)?;
+            close_cache(&store, &cache_path, json)?;
         }
         "map" => {
             // The layer-wise mapper (mapspace subsystem): per unique
@@ -265,70 +239,60 @@ fn main() -> Result<()> {
             // Table 3 style template for the best mapping, then compare
             // against the fixed-style adaptive baseline (§5.1) through
             // the same shared analysis store.
-            let model = args.opt_required("model")?;
-            let net = zoo::by_name(&model)?;
-            let hw = pick_hw(&args)?;
-            let objective = Objective::parse(&args.opt("objective", "runtime"));
-            let (store, cache_path) = open_cache(&args)?;
-            let cfg = MapperConfig {
-                tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
-                objective,
-                budget: maestro::dse::strategy::SearchBudget {
-                    max_designs: args.opt_u64("budget", 0)?,
-                    max_seconds: args.opt_f64("budget-seconds", 0.0)?,
-                },
-                ..MapperConfig::default()
-            };
-            let mut mapper = Mapper::with_store(Arc::clone(&store));
-            let outcome = mapper.map_network(&net, &hw, &cfg)?;
-            let mut t = Table::new(&["shape (rep. layer)", "x", "mapping", "runtime(cyc)", "energy(uJ)", "util"]);
-            for s in &outcome.per_shape {
-                t.row(&[
-                    s.representative.clone(),
-                    s.members.to_string(),
-                    s.dataflow.name.clone(),
-                    num(s.stats.runtime),
-                    num(s.stats.energy.total() / 1e6),
-                    format!("{:.3}", s.stats.util),
-                ]);
-            }
-            print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
-            if !outcome.network.skipped.is_empty() {
-                println!("skipped {} layer(s):", outcome.network.skipped.len());
-                for s in &outcome.network.skipped {
-                    println!("  {}: {}", s.layer, s.reason);
+            let req = MapRequest::from_args(&args)?;
+            let json = args.has("json");
+            let (store, cache_path) = open_cache(&args, json)?;
+            let out = run_map(&store, &req, None)?;
+            if json {
+                println!("{}", Response::Map(map_reply(&req, &out)).encode_line());
+            } else {
+                let outcome = &out.mapping;
+                let mut t = Table::new(&["shape (rep. layer)", "x", "mapping", "runtime(cyc)", "energy(uJ)", "util"]);
+                for s in &outcome.per_shape {
+                    t.row(&[
+                        s.representative.clone(),
+                        s.members.to_string(),
+                        s.dataflow.name.clone(),
+                        num(s.stats.runtime),
+                        num(s.stats.energy.total() / 1e6),
+                        format!("{:.3}", s.stats.util),
+                    ]);
+                }
+                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+                if !outcome.network.skipped.is_empty() {
+                    println!("skipped {} layer(s):", outcome.network.skipped.len());
+                    for s in &outcome.network.skipped {
+                        println!("  {}: {}", s.layer, s.reason);
+                    }
+                }
+                println!("{}", outcome.stats.summary());
+                let fixed = &out.fixed;
+                println!(
+                    "mapper:       {} layer(s), runtime={} cyc, energy={} uJ",
+                    outcome.network.per_layer.len(),
+                    num(outcome.network.runtime),
+                    num(outcome.network.energy.total() / 1e6),
+                );
+                println!(
+                    "fixed styles: {} layer(s), runtime={} cyc, energy={} uJ (adaptive over Table 3)",
+                    fixed.per_layer.len(),
+                    num(fixed.runtime),
+                    num(fixed.energy.total() / 1e6),
+                );
+                if fixed.per_layer.len() == outcome.network.per_layer.len() {
+                    println!(
+                        "mapper-vs-fixed ({}): runtime x{:.4}, energy x{:.4}, edp x{:.4}",
+                        req.objective.name(),
+                        fixed.runtime / outcome.network.runtime.max(1e-12),
+                        fixed.energy.total() / outcome.network.energy.total().max(1e-12),
+                        (fixed.runtime * fixed.energy.total())
+                            / (outcome.network.runtime * outcome.network.energy.total()).max(1e-12),
+                    );
+                } else {
+                    println!("mapper-vs-fixed: layer coverage differs; no ratio printed");
                 }
             }
-            println!("{}", outcome.stats.summary());
-            // Baseline: adaptive over the five fixed Table 3 styles,
-            // same store (template defaults replay from it).
-            let mut analyzer = Analyzer::with_store(Arc::clone(&store));
-            let fixed = adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, objective)?;
-            println!(
-                "mapper:       {} layer(s), runtime={} cyc, energy={} uJ",
-                outcome.network.per_layer.len(),
-                num(outcome.network.runtime),
-                num(outcome.network.energy.total() / 1e6),
-            );
-            println!(
-                "fixed styles: {} layer(s), runtime={} cyc, energy={} uJ (adaptive over Table 3)",
-                fixed.per_layer.len(),
-                num(fixed.runtime),
-                num(fixed.energy.total() / 1e6),
-            );
-            if fixed.per_layer.len() == outcome.network.per_layer.len() {
-                println!(
-                    "mapper-vs-fixed ({}): runtime x{:.4}, energy x{:.4}, edp x{:.4}",
-                    objective.name(),
-                    fixed.runtime / outcome.network.runtime.max(1e-12),
-                    fixed.energy.total() / outcome.network.energy.total().max(1e-12),
-                    (fixed.runtime * fixed.energy.total())
-                        / (outcome.network.runtime * outcome.network.energy.total()).max(1e-12),
-                );
-            } else {
-                println!("mapper-vs-fixed: layer coverage differs; no ratio printed");
-            }
-            close_cache(&store, &cache_path)?;
+            close_cache(&store, &cache_path, json)?;
         }
         "validate" => {
             let (layer, _) = pick_layer(&args)?;
@@ -346,62 +310,17 @@ fn main() -> Result<()> {
             println!("runtime error: {err:.2}%  (sim walked {} steps)", sim.steps);
         }
         "dse" => {
-            let family = args.opt("family", "kc-p");
-            let resolution = args.opt_u64("resolution", 12)? as usize;
-            let bw_resolution = args.opt_u64("bw-resolution", resolution as u64)? as usize;
-            let space = if args.has("mapspace") {
-                // Generated variant axis: enumerate the family template's
-                // legal tilings against the picked layer (the first
-                // layer of the model unless --layer names one).
-                let (layer, _) = pick_layer(&args)?;
-                let tile_resolution = args.opt_u64("tile-resolution", 6)? as usize;
-                let space = DesignSpace::mapspace(&family, &layer, tile_resolution, resolution, bw_resolution)?;
-                println!(
-                    "mapspace: generated {} variant(s) for family {family} against layer '{}' \
-                     (tile resolution {tile_resolution})",
-                    space.variants.len(),
-                    layer.name
-                );
-                space
-            } else {
-                DesignSpace::fig13_axes(&family, resolution, bw_resolution)
-            };
-            let strategy =
-                SearchStrategy::parse(&args.opt("strategy", "exhaustive"), args.opt_u64("seed", 1)?)?;
-            let budget = SearchBudget {
-                max_designs: args.opt_u64("budget", 0)?,
-                max_seconds: args.opt_f64("budget-seconds", 0.0)?,
-            };
-            println!(
-                "search: strategy={} budget={} wall={}",
-                strategy.name(),
-                if budget.max_designs > 0 { budget.max_designs.to_string() } else { "unlimited".into() },
-                if budget.max_seconds > 0.0 { format!("{}s", budget.max_seconds) } else { "off".into() },
-            );
-            // Workload: one layer by default, the whole (shape-
-            // deduplicated) network with --network. The combination
-            // --network + --layer is contradictory: reject it rather
-            // than silently discarding the layer.
-            let workload = if args.has("network") {
-                ensure!(
-                    args.opt("layer", "").is_empty(),
-                    "--network sweeps every layer of the model; drop --layer"
-                );
-                let model = args.opt("model", args.opt("layer-model", "vgg16").as_str());
-                zoo::by_name(&model)?
-            } else {
-                Network::single(pick_layer(&args)?.0)
-            };
-            let macs = workload.macs() as f64;
-            let shapes = workload.unique_shapes().len();
-            println!(
-                "workload: {} ({} layer(s), {} unique shape(s), {:.2} GMACs)",
-                workload.name,
-                workload.layers.len(),
-                shapes,
-                macs / 1e9
-            );
-            let (store, cache_path) = open_cache(&args)?;
+            let req = DseRequest::from_args(&args)?;
+            let json = args.has("json");
+            let prep = prepare_dse(&req)?;
+            if !json {
+                if let Some(note) = &prep.mapspace_note {
+                    println!("{note}");
+                }
+                println!("{}", prep.search_line());
+                println!("{}", prep.workload_line());
+            }
+            let (store, cache_path) = open_cache(&args, json)?;
             if args.has("pjrt") {
                 // The PJRT backend goes through the coordinator (the
                 // evaluator thread owns the executable). Jobs come from
@@ -412,11 +331,11 @@ fn main() -> Result<()> {
                 // the in-process engine.
                 let workers = args.opt_u64("workers", 4)? as usize;
                 let backend = Backend::Pjrt(BatchEvaluator::default_path());
-                let (batches, budget_cut) = plan_single_wave(&space, &strategy, &budget)?;
+                let (batches, budget_cut) = plan_single_wave(&prep.space, &prep.strategy, &prep.budget)?;
                 if budget_cut > 0 {
                     println!("budget: {budget_cut} candidate design(s) cut by --budget");
                 }
-                let jobs = jobs_from_batches(&workload, &space, &batches);
+                let jobs = jobs_from_batches(&prep.workload, &prep.space, &batches);
                 let t0 = std::time::Instant::now();
                 let cache = cache_path.as_ref().map(|_| Arc::clone(&store));
                 let (results, metrics) = run_jobs_with_store(jobs, backend, workers, cache)?;
@@ -428,52 +347,66 @@ fn main() -> Result<()> {
                 }
                 println!("{}", metrics.summary(wall));
                 println!("designs: {} total, {} valid", points.len(), points.iter().filter(|p| p.valid).count());
-                let title = format!("{family} design space ({})", workload.name);
+                let title = format!("{} design space ({})", req.family, prep.workload.name);
                 print!("{}", experiments::design_space_scatter(&points, macs, &title));
                 print_optima(&points, macs);
             } else {
-                // Default path: the sharded scalar sweep engine.
-                // --workers (the coordinator-era spelling) still caps
-                // parallelism when --threads is not given. With
+                // Default path: the sharded scalar sweep engine. With
                 // --cache-file the shards pool one persistent store
                 // (disk hits surface in the summary's cache= field).
-                let threads = args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize;
-                let cache = cache_path.as_ref().map(|_| Arc::clone(&store));
-                // The shared store never evicts (that is what makes the
-                // warm start work), so a cached sweep holds one entry
-                // per (variant, PEs) pair per unique shape — warn when
-                // that departs meaningfully from the memory-bounded
-                // default (ROADMAP tracks eviction/compaction).
-                if cache.is_some() && store.max_entries() == 0 {
-                    let pairs = space.pairs();
+                // The shared store never evicts unless --cache-cap is
+                // set, so a cached sweep holds one entry per (variant,
+                // PEs) pair per unique shape — warn when that departs
+                // meaningfully from the memory-bounded default.
+                if cache_path.is_some() && store.max_entries() == 0 {
+                    let pairs = prep.space.pairs();
                     if pairs > 10_000 {
                         eprintln!(
                             "cache-file: warning — this space has {pairs} (variant, PEs) pairs; the shared \
                              store retains ~{} entries (one per pair per unique shape) for the whole sweep. \
                              Bound it with --cache-cap N, or drop --cache-file for the memory-bounded default.",
-                            pairs * shapes
+                            pairs * prep.shapes
                         );
                     }
                 }
-                let cfg = SweepConfig {
-                    threads,
-                    keep_all_points: true,
-                    cache,
-                    strategy: strategy.clone(),
-                    budget,
-                    ..SweepConfig::default()
-                };
-                let outcome = sweep(&workload, &space, space.noc_latency, &cfg)?;
-                println!("{}", outcome.stats.summary());
-                let title = format!("{family} design space ({})", workload.name);
-                print!("{}", experiments::design_space_scatter(&outcome.points, macs, &title));
-                println!("runtime-energy Pareto frontier: {} points", outcome.frontier.len());
-                let head = &outcome.frontier[..outcome.frontier.len().min(12)];
-                let t = experiments::frontier_table(head, macs);
-                print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
-                print_optima(&outcome.points, macs);
+                let mut req = req.clone();
+                req.keep_points = true;
+                let out = run_prepared_dse(&store, &prep, &req, cache_path.is_some(), None)?;
+                if json {
+                    println!("{}", Response::Dse(dse_reply(&req, &prep, &out)).encode_line());
+                } else {
+                    println!("{}", out.sweep.stats.summary());
+                    let title = format!("{} design space ({})", req.family, prep.workload.name);
+                    print!("{}", experiments::design_space_scatter(&out.sweep.points, prep.macs, &title));
+                    println!("runtime-energy Pareto frontier: {} points", out.sweep.frontier.len());
+                    let head = &out.sweep.frontier[..out.sweep.frontier.len().min(12)];
+                    let t = experiments::frontier_table(head, prep.macs);
+                    print!("{}", if args.has("csv") { t.to_csv() } else { t.render() });
+                    print_optima(&out.sweep.points, prep.macs);
+                }
             }
-            close_cache(&store, &cache_path)?;
+            close_cache(&store, &cache_path, json)?;
+        }
+        "serve" => {
+            let cache_file = {
+                let p = args.opt("cache-file", "");
+                if p.is_empty() {
+                    None
+                } else {
+                    Some(p)
+                }
+            };
+            let cfg = ServeConfig {
+                addr: args.opt("addr", "127.0.0.1:7733"),
+                cache_file,
+                cache_cap: args.opt_u64("cache-cap", 0)? as usize,
+                workers: args.opt_u64("workers", 2)? as usize,
+                queue_cap: args.opt_u64("queue-cap", 16)? as usize,
+                flush_every: args.opt_f64("flush-every", 30.0)?,
+                threads: args.opt_u64("threads", 0)? as usize,
+                verbose: args.has("verbose"),
+            };
+            maestro::service::serve(&cfg)?;
         }
         "cache" => {
             let action = args.positional.first().map(String::as_str).unwrap_or("");
@@ -536,27 +469,14 @@ fn print_optima(points: &[DesignPoint], macs: f64) {
     }
 }
 
-/// Resolve --model/--layer into a concrete layer (default: VGG16 conv2_2,
-/// the paper's early-layer exemplar).
+/// Resolve --model/--layer into a concrete layer (default: VGG16's
+/// first layer). `--layer-model` is accepted as a deprecated alias of
+/// `--model` by the parser. Resolution itself lives in the service
+/// layer ([`pick_layer_named`]) so the daemon reports identical errors.
 fn pick_layer(args: &Args) -> Result<(maestro::model::layer::Layer, String)> {
-    let model = args.opt("model", args.opt("layer-model", "vgg16").as_str());
-    let net = zoo::by_name(&model)?;
+    let model = args.opt("model", "vgg16");
     let lname = args.opt("layer", "");
-    let layer = if lname.is_empty() {
-        net.layers[0].clone()
-    } else {
-        net.layers
-            .iter()
-            .find(|l| l.name == lname)
-            .with_context(|| {
-                format!(
-                    "layer '{lname}' not in {model}; first few: {}",
-                    net.layers.iter().take(8).map(|l| l.name.as_str()).collect::<Vec<_>>().join(", ")
-                )
-            })?
-            .clone()
-    };
-    Ok((layer, model))
+    pick_layer_named(&model, &lname)
 }
 
 fn pick_hw(args: &Args) -> Result<HwConfig> {

@@ -57,6 +57,11 @@ pub struct MapperConfig {
     /// default bindings (not bit-deterministic; leave 0.0 when
     /// reproducibility matters).
     pub budget: SearchBudget,
+    /// Cooperative cancellation: when set and flipped true, shapes not
+    /// yet searched degrade to the Table 3 default bindings — the same
+    /// graceful fallback as `budget.max_seconds`, so every layer still
+    /// receives a mapping. Scoped per request by the `serve` daemon.
+    pub cancel: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for MapperConfig {
@@ -66,6 +71,7 @@ impl Default for MapperConfig {
             tile_resolution: 6,
             objective: Objective::Runtime,
             budget: SearchBudget::default(),
+            cancel: None,
         }
     }
 }
@@ -104,24 +110,37 @@ pub struct MapperStats {
     /// Analyzer cache hits/misses attributable to this mapper run.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// The subset of `cache_hits` served by entries a shared store
+    /// loaded from a cache file (warm starts; 0 for private stores).
+    pub cache_disk_hits: u64,
+    /// Entries the backing store's FIFO cap dropped during this run
+    /// (0 for unbounded stores).
+    pub evictions: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
 
 impl MapperStats {
-    /// One-line human summary.
+    /// One-line human summary. The cache segment is rendered by
+    /// [`crate::engine::analysis::fmt_cache_counters`] — the same
+    /// formatter `SweepStats::summary` uses, so the mapper reports the
+    /// identical mem-hit/disk-hit/miss/eviction split as the sweep.
     pub fn summary(&self) -> String {
         format!(
             "mapspace: shapes={} combos={} candidates={} evaluated={} budget_skipped={} \
-             defaulted={} cache={}h/{}m wall={:.2}s",
+             defaulted={} {} wall={:.2}s",
             self.shapes,
             self.combos,
             self.candidates,
             self.evaluated,
             self.budget_skipped,
             self.shapes_defaulted,
-            self.cache_hits,
-            self.cache_misses,
+            crate::engine::analysis::fmt_cache_counters(
+                self.cache_hits,
+                self.cache_disk_hits,
+                self.cache_misses,
+                self.evictions,
+            ),
             self.seconds,
         )
     }
@@ -174,6 +193,8 @@ impl Mapper {
         ensure!(!net.layers.is_empty(), "mapper: empty network");
         let t0 = std::time::Instant::now();
         let (hits0, misses0) = (self.analyzer.cache_hits(), self.analyzer.cache_misses());
+        let disk0 = self.analyzer.disk_hits();
+        let evictions0 = self.analyzer.store().evictions();
         let mut stats = MapperStats::default();
         let mut per_shape: Vec<ShapeMapping> = Vec::new();
         let mut winners: HashMap<ShapeKey, Dataflow> = HashMap::new();
@@ -188,8 +209,13 @@ impl Mapper {
 
         for group in net.unique_shapes() {
             stats.shapes += 1;
-            let exhausted = cfg.budget.max_seconds > 0.0
-                && t0.elapsed().as_secs_f64() >= cfg.budget.max_seconds;
+            let cancelled = cfg
+                .cancel
+                .as_ref()
+                .is_some_and(|c| c.load(std::sync::atomic::Ordering::Relaxed));
+            let exhausted = cancelled
+                || (cfg.budget.max_seconds > 0.0
+                    && t0.elapsed().as_secs_f64() >= cfg.budget.max_seconds);
             let en = if exhausted {
                 stats.shapes_defaulted += 1;
                 enumerate_defaults(&cfg.templates, group.layer, hw.num_pes)
@@ -276,6 +302,8 @@ impl Mapper {
         ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
         stats.cache_hits = self.analyzer.cache_hits() - hits0;
         stats.cache_misses = self.analyzer.cache_misses() - misses0;
+        stats.cache_disk_hits = self.analyzer.disk_hits() - disk0;
+        stats.evictions = self.analyzer.store().evictions().saturating_sub(evictions0);
         stats.seconds = t0.elapsed().as_secs_f64();
         let network = fold_network_stats(&net.name, "mapper", per_layer, skipped);
         Ok(MappingOutcome { network, per_shape, stats })
@@ -303,6 +331,10 @@ mod tests {
         assert!(out.stats.cache_hits > 0, "repeated shapes + assembly must replay");
         let s = out.stats.summary();
         assert!(s.contains("shapes=") && s.contains("candidates="), "{s}");
+        // The cache segment must match the sweep's uniform formatter:
+        // mem-hits / disk-hits / misses / evictions.
+        assert!(s.contains("h/") && s.contains("d/") && s.contains("m/"), "{s}");
+        assert!(s.contains("e wall="), "{s}");
     }
 
     #[test]

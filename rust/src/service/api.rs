@@ -1,0 +1,994 @@
+//! The typed, versioned request/response schema — the **single** wire
+//! surface of the DSE service.
+//!
+//! Every entry point speaks these types: the `maestro serve` daemon
+//! decodes one [`Request`] per newline-delimited frame and encodes one
+//! [`Response`] per reply line, and the CLI's `network`/`map`/`dse`
+//! subcommands build the *same* request structs from their flags
+//! ([`AnalyzeRequest::from_args`] & co.) and — under `--json` — emit
+//! the *same* response encoding, so scripts scrape one schema whether
+//! they shell out or connect to a daemon.
+//!
+//! Versioning: every frame carries `"v": 1` ([`WIRE_VERSION`]).
+//! Decoders reject other versions with a structured [`ApiError`]
+//! instead of guessing. Optional fields are omitted (never `null`) and
+//! unknown request fields are ignored, so the schema can grow
+//! compatibly; the golden tests in `rust/tests/service_api.rs` pin the
+//! exact encodings.
+//!
+//! Errors: [`ApiError`] is the one failure shape — a stable `code`
+//! (`bad_request` | `overloaded` | `cancelled` | `internal`), a human
+//! message, `retry_after_ms` for backpressure rejections, and a
+//! `diagnostics` list for multi-line context.
+
+use anyhow::Result;
+
+use crate::cache::StoreMetrics;
+use crate::engine::analysis::Objective;
+use crate::hw::config::HwConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Wire protocol version stamped on (and required in) every frame.
+pub const WIRE_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+/// One decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Whole-network analysis (the `network` subcommand's work).
+    Analyze(AnalyzeRequest),
+    /// Layer-wise mapper search + fixed-style baseline (`map`).
+    Map(MapRequest),
+    /// Design-space sweep (`dse`).
+    Dse(DseRequest),
+    /// Resident-store counters (daemon only; cheap, never queued).
+    Status,
+    /// Cooperatively cancel the in-flight request with this client id.
+    Cancel { id: u64 },
+    /// Flush the store and stop the daemon.
+    Shutdown,
+}
+
+/// `network`: analyze every layer of a zoo model under a dataflow
+/// policy. `dataflow` is a Table 3 style name, `"adaptive"` (best fixed
+/// style per layer), or `"mapped"` (adaptive over the mapspace union —
+/// see the `network` CLI docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalyzeRequest {
+    /// Client-chosen id echoed in the reply; also the handle
+    /// [`Request::Cancel`] targets.
+    pub id: Option<u64>,
+    pub model: String,
+    pub dataflow: String,
+    pub pes: u64,
+    pub bw: u64,
+    pub objective: Objective,
+    /// Tile resolution for `dataflow == "mapped"`.
+    pub tile_resolution: usize,
+    /// Include the per-layer breakdown in the reply.
+    pub per_layer: bool,
+}
+
+/// `map`: per-shape mapper search plus the fixed-style baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapRequest {
+    pub id: Option<u64>,
+    pub model: String,
+    pub pes: u64,
+    pub bw: u64,
+    pub objective: Objective,
+    pub tile_resolution: usize,
+    /// Max candidates evaluated per shape (0 = unlimited).
+    pub budget: u64,
+    /// Whole-run wall cutoff in seconds (0 = off).
+    pub budget_seconds: f64,
+}
+
+/// `dse`: a budgeted, strategy-driven sweep over a design space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseRequest {
+    pub id: Option<u64>,
+    pub family: String,
+    pub model: String,
+    /// Layer name within the model; empty = the model's first layer.
+    pub layer: String,
+    /// Sweep the whole (shape-deduplicated) model instead of one layer.
+    pub network: bool,
+    pub resolution: usize,
+    pub bw_resolution: usize,
+    /// Generate the variant axis from the family's style template.
+    pub mapspace: bool,
+    pub tile_resolution: usize,
+    /// `exhaustive` | `random` | `guided`.
+    pub strategy: String,
+    pub seed: u64,
+    /// Max designs admitted to evaluation (0 = unlimited).
+    pub budget: u64,
+    pub budget_seconds: f64,
+    /// Sweep worker threads (0 = all cores).
+    pub threads: usize,
+    /// Return every evaluated point, not just the frontier (the CLI's
+    /// scatter needs them; daemon clients should leave this off).
+    pub keep_points: bool,
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+/// One encoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Analyze(AnalyzeReply),
+    Map(MapReply),
+    Dse(DseReply),
+    Status(StatusReply),
+    /// Acknowledgement for `cancel` / `shutdown`.
+    Done(DoneReply),
+    Error(ErrorReply),
+}
+
+/// Per-request cost accounting, shipped in **every** successful reply:
+/// the cold / disk / warm split of analysis work plus designs evaluated
+/// and wall time — how a client observes the resident store paying off.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestStats {
+    /// Full layer analyses this request actually ran (cold misses).
+    pub analyses: u64,
+    /// Analyses replayed from entries a cache file loaded (disk-warm).
+    pub disk_hits: u64,
+    /// Analyses replayed from entries already resident in memory.
+    pub warm_hits: u64,
+    /// Design/candidate evaluations the request performed.
+    pub designs_evaluated: u64,
+    pub wall_seconds: f64,
+}
+
+/// One per-layer row of an [`AnalyzeReply`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerRow {
+    pub layer: String,
+    pub dataflow: String,
+    pub runtime: f64,
+    pub energy_uj: f64,
+    pub util: f64,
+}
+
+/// A layer dropped from analysis, with its diagnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkippedRow {
+    pub layer: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalyzeReply {
+    pub id: Option<u64>,
+    pub network: String,
+    pub dataflow: String,
+    /// Layers analyzed / unique shapes in the model.
+    pub layers: u64,
+    pub shapes: u64,
+    pub runtime_cycles: f64,
+    pub energy_uj: f64,
+    pub gmacs: f64,
+    /// Size of the mapspace candidate union (`dataflow == "mapped"`).
+    pub mapspace_candidates: Option<u64>,
+    /// Per-layer breakdown; empty unless the request set `per_layer`.
+    pub per_layer: Vec<LayerRow>,
+    pub skipped: Vec<SkippedRow>,
+    pub stats: RequestStats,
+}
+
+/// One per-shape row of a [`MapReply`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeRow {
+    pub representative: String,
+    pub members: u64,
+    pub mapping: String,
+    pub runtime: f64,
+    pub energy_uj: f64,
+    pub util: f64,
+}
+
+/// Network totals for one side of the mapper-vs-fixed comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SideTotals {
+    pub layers: u64,
+    pub runtime: f64,
+    pub energy_uj: f64,
+}
+
+/// Fixed-over-mapper improvement ratios (>1 = mapper wins); present
+/// only when both sides cover the same layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ratios {
+    pub runtime: f64,
+    pub energy: f64,
+    pub edp: f64,
+}
+
+/// Mapper search counters (the structured form of
+/// `MapperStats::summary`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MapSearch {
+    pub shapes: u64,
+    pub combos: u64,
+    pub candidates: u64,
+    pub evaluated: u64,
+    pub budget_skipped: u64,
+    pub defaulted: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapReply {
+    pub id: Option<u64>,
+    pub network: String,
+    pub objective: String,
+    pub per_shape: Vec<ShapeRow>,
+    pub skipped: Vec<SkippedRow>,
+    pub mapper: SideTotals,
+    pub fixed: SideTotals,
+    pub ratios: Option<Ratios>,
+    pub search: MapSearch,
+    pub stats: RequestStats,
+}
+
+/// One design point (frontier row / optimum) of a [`DseReply`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointRow {
+    pub dataflow: String,
+    pub pes: u64,
+    pub bandwidth: u64,
+    pub l1: u64,
+    pub l2: u64,
+    pub runtime: f64,
+    pub energy_pj: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+}
+
+/// Sweep counters (the structured form of `SweepStats::summary`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DseSearch {
+    pub strategy: String,
+    pub total_designs: u64,
+    pub evaluated: u64,
+    pub valid: u64,
+    pub pruned: u64,
+    pub unmappable: u64,
+    pub budget_skipped: u64,
+    pub waves: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseReply {
+    pub id: Option<u64>,
+    pub family: String,
+    pub workload: String,
+    pub layers: u64,
+    pub shapes: u64,
+    pub gmacs: f64,
+    pub search: DseSearch,
+    pub frontier: Vec<PointRow>,
+    pub throughput_opt: Option<PointRow>,
+    pub energy_opt: Option<PointRow>,
+    pub stats: RequestStats,
+}
+
+/// Resident-store counters (`status`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatusReply {
+    pub entries: u64,
+    pub max_entries: u64,
+    pub hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl From<StoreMetrics> for StatusReply {
+    fn from(m: StoreMetrics) -> StatusReply {
+        StatusReply {
+            entries: m.entries,
+            max_entries: m.max_entries,
+            hits: m.hits,
+            disk_hits: m.disk_hits,
+            misses: m.misses,
+            evictions: m.evictions,
+        }
+    }
+}
+
+/// Acknowledgement frame for control requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DoneReply {
+    pub id: Option<u64>,
+    /// What was acknowledged: `"cancel"` or `"shutdown"`.
+    pub what: String,
+}
+
+/// The one failure shape, shared by every entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    /// Stable machine-readable code: `bad_request` | `overloaded` |
+    /// `cancelled` | `internal`.
+    pub code: String,
+    pub message: String,
+    /// Backpressure hint (`overloaded` only): retry after this delay.
+    pub retry_after_ms: Option<u64>,
+    /// Extra context lines (never required to act on the error).
+    pub diagnostics: Vec<String>,
+}
+
+impl ApiError {
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError { code: "bad_request".into(), message: message.into(), retry_after_ms: None, diagnostics: Vec::new() }
+    }
+
+    pub fn overloaded(retry_after_ms: u64, backlog: usize) -> ApiError {
+        ApiError {
+            code: "overloaded".into(),
+            message: format!("job queue full ({backlog} request(s) queued); retry later"),
+            retry_after_ms: Some(retry_after_ms),
+            diagnostics: Vec::new(),
+        }
+    }
+
+    pub fn cancelled() -> ApiError {
+        ApiError {
+            code: "cancelled".into(),
+            message: "request cancelled".into(),
+            retry_after_ms: None,
+            diagnostics: Vec::new(),
+        }
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError { code: "internal".into(), message: message.into(), retry_after_ms: None, diagnostics: Vec::new() }
+    }
+
+    pub fn with_diagnostics(mut self, diagnostics: Vec<String>) -> ApiError {
+        self.diagnostics = diagnostics;
+        self
+    }
+}
+
+/// Error frame: the failed request's id (when known) plus the error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    pub id: Option<u64>,
+    pub error: ApiError,
+}
+
+// ---------------------------------------------------------------------
+// CLI bridges (flags -> requests; one source for defaults)
+// ---------------------------------------------------------------------
+
+impl AnalyzeRequest {
+    /// Build from parsed CLI flags — the `network` subcommand's half of
+    /// the "CLI and daemon are one API" contract. Defaults here *are*
+    /// the CLI defaults.
+    pub fn from_args(args: &Args) -> Result<AnalyzeRequest> {
+        let hw = HwConfig::fig10_default();
+        Ok(AnalyzeRequest {
+            id: None,
+            model: args.opt_required("model")?,
+            dataflow: args.opt("dataflow", "adaptive"),
+            pes: args.opt_u64("pes", hw.num_pes)?,
+            bw: args.opt_u64("bw", hw.noc_bandwidth)?,
+            objective: Objective::parse(&args.opt("objective", "runtime")),
+            tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
+            per_layer: args.has("per-layer"),
+        })
+    }
+}
+
+impl MapRequest {
+    pub fn from_args(args: &Args) -> Result<MapRequest> {
+        let hw = HwConfig::fig10_default();
+        Ok(MapRequest {
+            id: None,
+            model: args.opt_required("model")?,
+            pes: args.opt_u64("pes", hw.num_pes)?,
+            bw: args.opt_u64("bw", hw.noc_bandwidth)?,
+            objective: Objective::parse(&args.opt("objective", "runtime")),
+            tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
+            budget: args.opt_u64("budget", 0)?,
+            budget_seconds: args.opt_f64("budget-seconds", 0.0)?,
+        })
+    }
+}
+
+impl DseRequest {
+    pub fn from_args(args: &Args) -> Result<DseRequest> {
+        let resolution = args.opt_u64("resolution", 12)? as usize;
+        Ok(DseRequest {
+            id: None,
+            family: args.opt("family", "kc-p"),
+            // --layer-model is a deprecated alias the parser rewrites
+            // to --model, so one lookup covers both spellings.
+            model: args.opt("model", "vgg16"),
+            layer: args.opt("layer", ""),
+            network: args.has("network"),
+            resolution,
+            bw_resolution: args.opt_u64("bw-resolution", resolution as u64)? as usize,
+            mapspace: args.has("mapspace"),
+            tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
+            strategy: args.opt("strategy", "exhaustive"),
+            seed: args.opt_u64("seed", 1)?,
+            budget: args.opt_u64("budget", 0)?,
+            budget_seconds: args.opt_f64("budget-seconds", 0.0)?,
+            // --workers (the coordinator-era spelling) still caps sweep
+            // parallelism when --threads is absent.
+            threads: args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize,
+            keep_points: false,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn envelope(kind: &str, id: Option<u64>) -> Json {
+    Json::obj()
+        .set("v", Json::int(WIRE_VERSION))
+        .set("kind", Json::str(kind))
+        .set_opt("id", id.map(Json::int))
+}
+
+fn stats_json(s: &RequestStats) -> Json {
+    Json::obj()
+        .set("analyses", Json::int(s.analyses))
+        .set("disk_hits", Json::int(s.disk_hits))
+        .set("warm_hits", Json::int(s.warm_hits))
+        .set("designs_evaluated", Json::int(s.designs_evaluated))
+        .set("wall_seconds", Json::num(s.wall_seconds))
+}
+
+fn skipped_json(rows: &[SkippedRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .set("layer", Json::str(&r.layer))
+                    .set("reason", Json::str(&r.reason))
+            })
+            .collect(),
+    )
+}
+
+fn point_json(p: &PointRow) -> Json {
+    Json::obj()
+        .set("dataflow", Json::str(&p.dataflow))
+        .set("pes", Json::int(p.pes))
+        .set("bandwidth", Json::int(p.bandwidth))
+        .set("l1", Json::int(p.l1))
+        .set("l2", Json::int(p.l2))
+        .set("runtime", Json::num(p.runtime))
+        .set("energy_pj", Json::num(p.energy_pj))
+        .set("area_mm2", Json::num(p.area_mm2))
+        .set("power_mw", Json::num(p.power_mw))
+}
+
+impl Request {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Request::Analyze(_) => "analyze",
+            Request::Map(_) => "map",
+            Request::Dse(_) => "dse",
+            Request::Status => "status",
+            Request::Cancel { .. } => "cancel",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// The client-chosen correlation id, when the variant carries one.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Request::Analyze(r) => r.id,
+            Request::Map(r) => r.id,
+            Request::Dse(r) => r.id,
+            _ => None,
+        }
+    }
+
+    pub fn encode(&self) -> Json {
+        match self {
+            Request::Analyze(r) => envelope("analyze", r.id)
+                .set("model", Json::str(&r.model))
+                .set("dataflow", Json::str(&r.dataflow))
+                .set("pes", Json::int(r.pes))
+                .set("bw", Json::int(r.bw))
+                .set("objective", Json::str(r.objective.name()))
+                .set("tile_resolution", Json::int(r.tile_resolution as u64))
+                .set("per_layer", Json::Bool(r.per_layer)),
+            Request::Map(r) => envelope("map", r.id)
+                .set("model", Json::str(&r.model))
+                .set("pes", Json::int(r.pes))
+                .set("bw", Json::int(r.bw))
+                .set("objective", Json::str(r.objective.name()))
+                .set("tile_resolution", Json::int(r.tile_resolution as u64))
+                .set("budget", Json::int(r.budget))
+                .set("budget_seconds", Json::num(r.budget_seconds)),
+            Request::Dse(r) => envelope("dse", r.id)
+                .set("family", Json::str(&r.family))
+                .set("model", Json::str(&r.model))
+                .set_opt("layer", (!r.layer.is_empty()).then(|| Json::str(&r.layer)))
+                .set("network", Json::Bool(r.network))
+                .set("resolution", Json::int(r.resolution as u64))
+                .set("bw_resolution", Json::int(r.bw_resolution as u64))
+                .set("mapspace", Json::Bool(r.mapspace))
+                .set("tile_resolution", Json::int(r.tile_resolution as u64))
+                .set("strategy", Json::str(&r.strategy))
+                .set("seed", Json::int(r.seed))
+                .set("budget", Json::int(r.budget))
+                .set("budget_seconds", Json::num(r.budget_seconds))
+                .set("threads", Json::int(r.threads as u64))
+                .set("keep_points", Json::Bool(r.keep_points)),
+            Request::Status => envelope("status", None),
+            Request::Cancel { id } => envelope("cancel", None).set("id", Json::int(*id)),
+            Request::Shutdown => envelope("shutdown", None),
+        }
+    }
+
+    /// Decode a request frame. Failures are [`ApiError`]s so the daemon
+    /// replies structurally instead of dropping the connection.
+    pub fn decode(v: &Json) -> std::result::Result<Request, ApiError> {
+        check_version(v)?;
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("missing 'kind'"))?;
+        let id = opt_u64(v, "id")?;
+        match kind {
+            "analyze" => {
+                let hw = HwConfig::fig10_default();
+                Ok(Request::Analyze(AnalyzeRequest {
+                    id,
+                    model: need_str(v, "model")?,
+                    dataflow: get_str(v, "dataflow", "adaptive")?,
+                    pes: get_u64(v, "pes", hw.num_pes)?,
+                    bw: get_u64(v, "bw", hw.noc_bandwidth)?,
+                    objective: Objective::parse(&get_str(v, "objective", "runtime")?),
+                    tile_resolution: get_u64(v, "tile_resolution", 6)? as usize,
+                    per_layer: get_bool(v, "per_layer", false)?,
+                }))
+            }
+            "map" => {
+                let hw = HwConfig::fig10_default();
+                Ok(Request::Map(MapRequest {
+                    id,
+                    model: need_str(v, "model")?,
+                    pes: get_u64(v, "pes", hw.num_pes)?,
+                    bw: get_u64(v, "bw", hw.noc_bandwidth)?,
+                    objective: Objective::parse(&get_str(v, "objective", "runtime")?),
+                    tile_resolution: get_u64(v, "tile_resolution", 6)? as usize,
+                    budget: get_u64(v, "budget", 0)?,
+                    budget_seconds: get_f64(v, "budget_seconds", 0.0)?,
+                }))
+            }
+            "dse" => {
+                let resolution = get_u64(v, "resolution", 12)? as usize;
+                Ok(Request::Dse(DseRequest {
+                    id,
+                    family: get_str(v, "family", "kc-p")?,
+                    model: get_str(v, "model", "vgg16")?,
+                    layer: get_str(v, "layer", "")?,
+                    network: get_bool(v, "network", false)?,
+                    resolution,
+                    bw_resolution: get_u64(v, "bw_resolution", resolution as u64)? as usize,
+                    mapspace: get_bool(v, "mapspace", false)?,
+                    tile_resolution: get_u64(v, "tile_resolution", 6)? as usize,
+                    strategy: get_str(v, "strategy", "exhaustive")?,
+                    seed: get_u64(v, "seed", 1)?,
+                    budget: get_u64(v, "budget", 0)?,
+                    budget_seconds: get_f64(v, "budget_seconds", 0.0)?,
+                    threads: get_u64(v, "threads", 0)? as usize,
+                    keep_points: get_bool(v, "keep_points", false)?,
+                }))
+            }
+            "status" => Ok(Request::Status),
+            "cancel" => {
+                let id = opt_u64(v, "id")?
+                    .ok_or_else(|| ApiError::bad_request("cancel: missing 'id'"))?;
+                Ok(Request::Cancel { id })
+            }
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ApiError::bad_request(format!(
+                "unknown request kind '{other}' (analyze | map | dse | status | cancel | shutdown)"
+            ))),
+        }
+    }
+}
+
+impl Response {
+    /// The failure constructor every layer funnels through.
+    pub fn error(id: Option<u64>, error: ApiError) -> Response {
+        Response::Error(ErrorReply { id, error })
+    }
+
+    pub fn encode(&self) -> Json {
+        match self {
+            Response::Analyze(r) => envelope("analyze", r.id)
+                .set("ok", Json::Bool(true))
+                .set("network", Json::str(&r.network))
+                .set("dataflow", Json::str(&r.dataflow))
+                .set("layers", Json::int(r.layers))
+                .set("shapes", Json::int(r.shapes))
+                .set("runtime_cycles", Json::num(r.runtime_cycles))
+                .set("energy_uj", Json::num(r.energy_uj))
+                .set("gmacs", Json::num(r.gmacs))
+                .set_opt("mapspace_candidates", r.mapspace_candidates.map(Json::int))
+                .set(
+                    "per_layer",
+                    Json::Arr(
+                        r.per_layer
+                            .iter()
+                            .map(|l| {
+                                Json::obj()
+                                    .set("layer", Json::str(&l.layer))
+                                    .set("dataflow", Json::str(&l.dataflow))
+                                    .set("runtime", Json::num(l.runtime))
+                                    .set("energy_uj", Json::num(l.energy_uj))
+                                    .set("util", Json::num(l.util))
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("skipped", skipped_json(&r.skipped))
+                .set("stats", stats_json(&r.stats)),
+            Response::Map(r) => envelope("map", r.id)
+                .set("ok", Json::Bool(true))
+                .set("network", Json::str(&r.network))
+                .set("objective", Json::str(&r.objective))
+                .set(
+                    "per_shape",
+                    Json::Arr(
+                        r.per_shape
+                            .iter()
+                            .map(|s| {
+                                Json::obj()
+                                    .set("representative", Json::str(&s.representative))
+                                    .set("members", Json::int(s.members))
+                                    .set("mapping", Json::str(&s.mapping))
+                                    .set("runtime", Json::num(s.runtime))
+                                    .set("energy_uj", Json::num(s.energy_uj))
+                                    .set("util", Json::num(s.util))
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("skipped", skipped_json(&r.skipped))
+                .set("mapper", side_json(&r.mapper))
+                .set("fixed", side_json(&r.fixed))
+                .set_opt(
+                    "ratios",
+                    r.ratios.as_ref().map(|x| {
+                        Json::obj()
+                            .set("runtime", Json::num(x.runtime))
+                            .set("energy", Json::num(x.energy))
+                            .set("edp", Json::num(x.edp))
+                    }),
+                )
+                .set(
+                    "search",
+                    Json::obj()
+                        .set("shapes", Json::int(r.search.shapes))
+                        .set("combos", Json::int(r.search.combos))
+                        .set("candidates", Json::int(r.search.candidates))
+                        .set("evaluated", Json::int(r.search.evaluated))
+                        .set("budget_skipped", Json::int(r.search.budget_skipped))
+                        .set("defaulted", Json::int(r.search.defaulted)),
+                )
+                .set("stats", stats_json(&r.stats)),
+            Response::Dse(r) => envelope("dse", r.id)
+                .set("ok", Json::Bool(true))
+                .set("family", Json::str(&r.family))
+                .set("workload", Json::str(&r.workload))
+                .set("layers", Json::int(r.layers))
+                .set("shapes", Json::int(r.shapes))
+                .set("gmacs", Json::num(r.gmacs))
+                .set(
+                    "search",
+                    Json::obj()
+                        .set("strategy", Json::str(&r.search.strategy))
+                        .set("total_designs", Json::int(r.search.total_designs))
+                        .set("evaluated", Json::int(r.search.evaluated))
+                        .set("valid", Json::int(r.search.valid))
+                        .set("pruned", Json::int(r.search.pruned))
+                        .set("unmappable", Json::int(r.search.unmappable))
+                        .set("budget_skipped", Json::int(r.search.budget_skipped))
+                        .set("waves", Json::int(r.search.waves)),
+                )
+                .set("frontier", Json::Arr(r.frontier.iter().map(point_json).collect()))
+                .set_opt("throughput_opt", r.throughput_opt.as_ref().map(point_json))
+                .set_opt("energy_opt", r.energy_opt.as_ref().map(point_json))
+                .set("stats", stats_json(&r.stats)),
+            Response::Status(r) => envelope("status", None)
+                .set("ok", Json::Bool(true))
+                .set("entries", Json::int(r.entries))
+                .set("max_entries", Json::int(r.max_entries))
+                .set("hits", Json::int(r.hits))
+                .set("disk_hits", Json::int(r.disk_hits))
+                .set("misses", Json::int(r.misses))
+                .set("evictions", Json::int(r.evictions)),
+            Response::Done(r) => envelope("done", r.id)
+                .set("ok", Json::Bool(true))
+                .set("what", Json::str(&r.what)),
+            Response::Error(r) => envelope("error", r.id).set("ok", Json::Bool(false)).set(
+                "error",
+                Json::obj()
+                    .set("code", Json::str(&r.error.code))
+                    .set("message", Json::str(&r.error.message))
+                    .set_opt("retry_after_ms", r.error.retry_after_ms.map(Json::int))
+                    .set(
+                        "diagnostics",
+                        Json::Arr(r.error.diagnostics.iter().map(|d| Json::str(d)).collect()),
+                    ),
+            ),
+        }
+    }
+
+    /// One frame on the wire: the compact encoding (always a single
+    /// line — the codec escapes every raw newline).
+    pub fn encode_line(&self) -> String {
+        self.encode().dump()
+    }
+
+    /// Decode a response frame (clients, round-trip tests).
+    pub fn decode(v: &Json) -> std::result::Result<Response, ApiError> {
+        check_version(v)?;
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("missing 'kind'"))?;
+        let id = opt_u64(v, "id")?;
+        match kind {
+            "analyze" => Ok(Response::Analyze(AnalyzeReply {
+                id,
+                network: need_str(v, "network")?,
+                dataflow: need_str(v, "dataflow")?,
+                layers: get_u64(v, "layers", 0)?,
+                shapes: get_u64(v, "shapes", 0)?,
+                runtime_cycles: get_f64(v, "runtime_cycles", 0.0)?,
+                energy_uj: get_f64(v, "energy_uj", 0.0)?,
+                gmacs: get_f64(v, "gmacs", 0.0)?,
+                mapspace_candidates: opt_u64(v, "mapspace_candidates")?,
+                per_layer: arr(v, "per_layer")?
+                    .iter()
+                    .map(|l| {
+                        Ok(LayerRow {
+                            layer: need_str(l, "layer")?,
+                            dataflow: need_str(l, "dataflow")?,
+                            runtime: get_f64(l, "runtime", 0.0)?,
+                            energy_uj: get_f64(l, "energy_uj", 0.0)?,
+                            util: get_f64(l, "util", 0.0)?,
+                        })
+                    })
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                skipped: decode_skipped(v)?,
+                stats: decode_stats(v)?,
+            })),
+            "map" => Ok(Response::Map(MapReply {
+                id,
+                network: need_str(v, "network")?,
+                objective: get_str(v, "objective", "runtime")?,
+                per_shape: arr(v, "per_shape")?
+                    .iter()
+                    .map(|s| {
+                        Ok(ShapeRow {
+                            representative: need_str(s, "representative")?,
+                            members: get_u64(s, "members", 0)?,
+                            mapping: need_str(s, "mapping")?,
+                            runtime: get_f64(s, "runtime", 0.0)?,
+                            energy_uj: get_f64(s, "energy_uj", 0.0)?,
+                            util: get_f64(s, "util", 0.0)?,
+                        })
+                    })
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                skipped: decode_skipped(v)?,
+                mapper: decode_side(v, "mapper")?,
+                fixed: decode_side(v, "fixed")?,
+                ratios: match v.get("ratios") {
+                    None => None,
+                    Some(x) => Some(Ratios {
+                        runtime: get_f64(x, "runtime", 0.0)?,
+                        energy: get_f64(x, "energy", 0.0)?,
+                        edp: get_f64(x, "edp", 0.0)?,
+                    }),
+                },
+                search: {
+                    let s = v
+                        .get("search")
+                        .ok_or_else(|| ApiError::bad_request("map: missing 'search'"))?;
+                    MapSearch {
+                        shapes: get_u64(s, "shapes", 0)?,
+                        combos: get_u64(s, "combos", 0)?,
+                        candidates: get_u64(s, "candidates", 0)?,
+                        evaluated: get_u64(s, "evaluated", 0)?,
+                        budget_skipped: get_u64(s, "budget_skipped", 0)?,
+                        defaulted: get_u64(s, "defaulted", 0)?,
+                    }
+                },
+                stats: decode_stats(v)?,
+            })),
+            "dse" => Ok(Response::Dse(DseReply {
+                id,
+                family: need_str(v, "family")?,
+                workload: need_str(v, "workload")?,
+                layers: get_u64(v, "layers", 0)?,
+                shapes: get_u64(v, "shapes", 0)?,
+                gmacs: get_f64(v, "gmacs", 0.0)?,
+                search: {
+                    let s = v
+                        .get("search")
+                        .ok_or_else(|| ApiError::bad_request("dse: missing 'search'"))?;
+                    DseSearch {
+                        strategy: get_str(s, "strategy", "exhaustive")?,
+                        total_designs: get_u64(s, "total_designs", 0)?,
+                        evaluated: get_u64(s, "evaluated", 0)?,
+                        valid: get_u64(s, "valid", 0)?,
+                        pruned: get_u64(s, "pruned", 0)?,
+                        unmappable: get_u64(s, "unmappable", 0)?,
+                        budget_skipped: get_u64(s, "budget_skipped", 0)?,
+                        waves: get_u64(s, "waves", 0)?,
+                    }
+                },
+                frontier: arr(v, "frontier")?
+                    .iter()
+                    .map(decode_point)
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                throughput_opt: v.get("throughput_opt").map(decode_point).transpose()?,
+                energy_opt: v.get("energy_opt").map(decode_point).transpose()?,
+                stats: decode_stats(v)?,
+            })),
+            "status" => Ok(Response::Status(StatusReply {
+                entries: get_u64(v, "entries", 0)?,
+                max_entries: get_u64(v, "max_entries", 0)?,
+                hits: get_u64(v, "hits", 0)?,
+                disk_hits: get_u64(v, "disk_hits", 0)?,
+                misses: get_u64(v, "misses", 0)?,
+                evictions: get_u64(v, "evictions", 0)?,
+            })),
+            "done" => Ok(Response::Done(DoneReply { id, what: get_str(v, "what", "")? })),
+            "error" => {
+                let e = v.get("error").ok_or_else(|| ApiError::bad_request("missing 'error'"))?;
+                Ok(Response::Error(ErrorReply {
+                    id,
+                    error: ApiError {
+                        code: get_str(e, "code", "internal")?,
+                        message: get_str(e, "message", "")?,
+                        retry_after_ms: opt_u64(e, "retry_after_ms")?,
+                        diagnostics: arr(e, "diagnostics")?
+                            .iter()
+                            .map(|d| {
+                                d.as_str().map(str::to_string).ok_or_else(|| {
+                                    ApiError::bad_request("diagnostics must be strings")
+                                })
+                            })
+                            .collect::<std::result::Result<_, ApiError>>()?,
+                    },
+                }))
+            }
+            other => Err(ApiError::bad_request(format!("unknown response kind '{other}'"))),
+        }
+    }
+}
+
+fn side_json(s: &SideTotals) -> Json {
+    Json::obj()
+        .set("layers", Json::int(s.layers))
+        .set("runtime", Json::num(s.runtime))
+        .set("energy_uj", Json::num(s.energy_uj))
+}
+
+fn decode_side(v: &Json, key: &str) -> std::result::Result<SideTotals, ApiError> {
+    let s = v.get(key).ok_or_else(|| ApiError::bad_request(format!("map: missing '{key}'")))?;
+    Ok(SideTotals {
+        layers: get_u64(s, "layers", 0)?,
+        runtime: get_f64(s, "runtime", 0.0)?,
+        energy_uj: get_f64(s, "energy_uj", 0.0)?,
+    })
+}
+
+fn decode_point(p: &Json) -> std::result::Result<PointRow, ApiError> {
+    Ok(PointRow {
+        dataflow: need_str(p, "dataflow")?,
+        pes: get_u64(p, "pes", 0)?,
+        bandwidth: get_u64(p, "bandwidth", 0)?,
+        l1: get_u64(p, "l1", 0)?,
+        l2: get_u64(p, "l2", 0)?,
+        runtime: get_f64(p, "runtime", 0.0)?,
+        energy_pj: get_f64(p, "energy_pj", 0.0)?,
+        area_mm2: get_f64(p, "area_mm2", 0.0)?,
+        power_mw: get_f64(p, "power_mw", 0.0)?,
+    })
+}
+
+fn decode_skipped(v: &Json) -> std::result::Result<Vec<SkippedRow>, ApiError> {
+    arr(v, "skipped")?
+        .iter()
+        .map(|r| Ok(SkippedRow { layer: need_str(r, "layer")?, reason: need_str(r, "reason")? }))
+        .collect()
+}
+
+fn decode_stats(v: &Json) -> std::result::Result<RequestStats, ApiError> {
+    let s = v.get("stats").ok_or_else(|| ApiError::bad_request("missing 'stats'"))?;
+    Ok(RequestStats {
+        analyses: get_u64(s, "analyses", 0)?,
+        disk_hits: get_u64(s, "disk_hits", 0)?,
+        warm_hits: get_u64(s, "warm_hits", 0)?,
+        designs_evaluated: get_u64(s, "designs_evaluated", 0)?,
+        wall_seconds: get_f64(s, "wall_seconds", 0.0)?,
+    })
+}
+
+fn check_version(v: &Json) -> std::result::Result<(), ApiError> {
+    match v.get("v").and_then(Json::as_u64) {
+        Some(WIRE_VERSION) => Ok(()),
+        Some(other) => Err(ApiError::bad_request(format!(
+            "unsupported wire version {other} (this build speaks v{WIRE_VERSION})"
+        ))),
+        None => Err(ApiError::bad_request("missing wire version field 'v'")),
+    }
+}
+
+fn need_str(v: &Json, key: &str) -> std::result::Result<String, ApiError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ApiError::bad_request(format!("missing or non-string '{key}'")))
+}
+
+fn get_str(v: &Json, key: &str, default: &str) -> std::result::Result<String, ApiError> {
+    match v.get(key) {
+        None => Ok(default.to_string()),
+        Some(x) => x
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be a string"))),
+    }
+}
+
+fn get_u64(v: &Json, key: &str, default: u64) -> std::result::Result<u64, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_u64()
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn opt_u64(v: &Json, key: &str) -> std::result::Result<Option<u64>, ApiError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_f64(v: &Json, key: &str, default: f64) -> std::result::Result<f64, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_bool(v: &Json, key: &str, default: bool) -> std::result::Result<bool, ApiError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be a boolean"))),
+    }
+}

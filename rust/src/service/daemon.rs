@@ -1,0 +1,430 @@
+//! The resident `maestro serve` daemon: one warm [`SharedStore`],
+//! newline-delimited JSON frames over TCP, bounded-queue backpressure.
+//!
+//! ## Lifecycle
+//!
+//! [`serve`] (the CLI) or [`Daemon::spawn`] (in-process tests and
+//! benches) binds a listener, loads `cache_file` into the store once,
+//! and runs until a `shutdown` frame arrives. Every analyze/map/dse
+//! request after the first reuses the same store, so repeated workloads
+//! answer from memory (`warm_hits` in each reply's `stats`) instead of
+//! re-running the analytical model. A flusher thread appends dirty
+//! records back to `cache_file` every `flush_every` seconds and a final
+//! flush runs on shutdown, so a crash loses at most one flush window.
+//!
+//! ## Concurrency and backpressure
+//!
+//! Each connection gets a reader thread; work requests are `try_send`'d
+//! into a bounded [`JobQueue`] drained by `workers` executor threads.
+//! A full queue rejects immediately with an `overloaded` [`ApiError`]
+//! carrying `retry_after_ms` — the daemon never buffers unboundedly and
+//! never blocks one client on another's backlog. Control requests
+//! (`status`, `cancel`, `shutdown`) bypass the queue entirely.
+//!
+//! ## Cancellation
+//!
+//! A work request carrying an `id` can be cancelled from **another**
+//! connection (the submitting connection is blocked awaiting its
+//! reply): `cancel` flips the request's scoped flag, which the sweep
+//! engine checks between waves and the mapper between shapes. Queued
+//! jobs that were cancelled before starting are dropped without
+//! executing.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::SharedStore;
+use crate::util::json::Json;
+use crate::util::queue::JobQueue;
+
+use super::api::{ApiError, DoneReply, Request, Response};
+use super::exec;
+
+/// Daemon knobs; [`ServeConfig::default`] matches the CLI defaults.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (see [`Daemon::addr`]).
+    pub addr: String,
+    /// Warm-store persistence: loaded at startup, flushed periodically
+    /// and on shutdown. `None` = memory only.
+    pub cache_file: Option<String>,
+    /// FIFO cap on the resident store (0 = unbounded).
+    pub cache_cap: usize,
+    /// Executor threads draining the job queue (concurrent requests).
+    pub workers: usize,
+    /// Job-queue depth before `overloaded` rejections kick in.
+    pub queue_cap: usize,
+    /// Seconds between background store flushes (0 = shutdown only).
+    pub flush_every: f64,
+    /// Default sweep threads for dse requests that leave `threads` 0
+    /// (0 = let the sweep use all cores).
+    pub threads: usize,
+    /// Log one line per executed request to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7733".into(),
+            cache_file: None,
+            cache_cap: 0,
+            workers: 2,
+            queue_cap: 16,
+            flush_every: 30.0,
+            threads: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// One queued unit of work: the decoded request, the channel its reply
+/// goes back on, and its cancellation flag.
+struct Job {
+    request: Request,
+    reply: mpsc::Sender<Response>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// State every daemon thread shares.
+struct Shared {
+    cfg: ServeConfig,
+    store: Arc<SharedStore>,
+    shutdown: AtomicBool,
+    /// Client-id -> cancel flag for queued/running work requests.
+    inflight: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+}
+
+/// Run the daemon on `cfg.addr`, blocking until shutdown — the
+/// `maestro serve` entry point.
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("serve: cannot bind {}", cfg.addr))?;
+    serve_on(listener, cfg.clone())
+}
+
+/// A daemon running on a background thread — in-process clients (tests,
+/// the serve bench) connect to [`Daemon::addr`].
+pub struct Daemon {
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<Result<()>>,
+}
+
+impl Daemon {
+    /// Bind (resolving port 0 to a concrete port) and serve on a
+    /// background thread.
+    pub fn spawn(cfg: ServeConfig) -> Result<Daemon> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("serve: cannot bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let handle = std::thread::spawn(move || serve_on(listener, cfg));
+        Ok(Daemon { addr, handle })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait for the daemon to exit (send a `shutdown` frame first).
+    pub fn join(self) -> Result<()> {
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("serve: daemon thread panicked"),
+        }
+    }
+}
+
+fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    let store = if cfg.cache_cap > 0 {
+        Arc::new(SharedStore::with_max_entries(cfg.cache_cap))
+    } else {
+        Arc::new(SharedStore::new())
+    };
+    if let Some(path) = &cfg.cache_file {
+        let report = store.load(Path::new(path));
+        if let Some(w) = &report.warning {
+            eprintln!("serve: {w}");
+        }
+        println!("serve: loaded {} cached analyses from {path}", report.loaded);
+    }
+    let addr = listener.local_addr()?;
+    println!(
+        "serve: listening on {addr} ({} worker(s), queue cap {})",
+        cfg.workers.max(1),
+        cfg.queue_cap.max(1)
+    );
+    listener.set_nonblocking(true)?;
+
+    let shared = Shared {
+        store: Arc::clone(&store),
+        shutdown: AtomicBool::new(false),
+        inflight: Mutex::new(HashMap::new()),
+        cfg,
+    };
+    let shared = &shared;
+
+    std::thread::scope(|scope| {
+        let (job_tx, queue) = JobQueue::<Job>::bounded(shared.cfg.queue_cap.max(1));
+        for _ in 0..shared.cfg.workers.max(1) {
+            let queue = queue.clone();
+            scope.spawn(move || worker_loop(shared, queue));
+        }
+        if shared.cfg.flush_every > 0.0 && shared.cfg.cache_file.is_some() {
+            scope.spawn(move || flusher_loop(shared));
+        }
+        let mut conns = Vec::new();
+        while !shared.shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let job_tx = job_tx.clone();
+                    conns.push(scope.spawn(move || handle_conn(shared, job_tx, stream)));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        shared.shutdown.store(true, Ordering::Relaxed);
+        // Dropping the last sender closes the queue; connection threads
+        // (each holding a clone) exit at their next read-poll tick, so
+        // the workers drain whatever is queued and then stop.
+        drop(job_tx);
+        for c in conns {
+            let _ = c.join();
+        }
+    });
+
+    if let Some(path) = &shared.cfg.cache_file {
+        let report = store.flush(Path::new(path))?;
+        println!("serve: flushed {} new record(s) ({} total) to {path}", report.written, report.total);
+    }
+    println!("serve: shutdown complete");
+    Ok(())
+}
+
+/// Background store persistence: append dirty records every
+/// `flush_every` seconds until shutdown (the final flush is the serve
+/// loop's job, so nothing is lost if this thread never fires).
+fn flusher_loop(shared: &Shared) {
+    let period = Duration::from_secs_f64(shared.cfg.flush_every.max(0.1));
+    let path = shared.cfg.cache_file.clone().expect("flusher requires a cache file");
+    let mut last = Instant::now();
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(100));
+        if last.elapsed() < period {
+            continue;
+        }
+        last = Instant::now();
+        match shared.store.flush(Path::new(&path)) {
+            Ok(r) if r.written > 0 => {
+                println!("serve: flushed {} new record(s) ({} total) to {path}", r.written, r.total);
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("serve: background flush failed: {e}"),
+        }
+    }
+}
+
+/// Executor: drain the job queue until it closes.
+fn worker_loop(shared: &Shared, queue: JobQueue<Job>) {
+    while let Some(job) = queue.pop() {
+        let t0 = Instant::now();
+        let response = execute(shared, &job);
+        if let Some(id) = job.request.id() {
+            shared.inflight.lock().unwrap().remove(&id);
+        }
+        if shared.cfg.verbose {
+            eprintln!(
+                "serve: {} request handled in {:.3}s",
+                job.request.kind(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        // A send error means the submitting connection died; the result
+        // is simply dropped.
+        let _ = job.reply.send(response);
+    }
+}
+
+/// Run one work request against the resident store.
+fn execute(shared: &Shared, job: &Job) -> Response {
+    let id = job.request.id();
+    if job.cancel.load(Ordering::Relaxed) {
+        return Response::error(id, ApiError::cancelled());
+    }
+    let store = &shared.store;
+    let cancel = Some(Arc::clone(&job.cancel));
+    let result = match &job.request {
+        Request::Analyze(r) => exec::run_analyze(store, r).map(|out| Response::Analyze(exec::analyze_reply(r, &out))),
+        Request::Map(r) => exec::run_map(store, r, cancel).map(|out| Response::Map(exec::map_reply(r, &out))),
+        Request::Dse(r) => {
+            let mut r = r.clone();
+            if r.threads == 0 {
+                r.threads = shared.cfg.threads;
+            }
+            exec::prepare_dse(&r).and_then(|prep| {
+                let out = exec::run_prepared_dse(store, &prep, &r, true, cancel)?;
+                Ok(Response::Dse(exec::dse_reply(&r, &prep, &out)))
+            })
+        }
+        // Control requests never reach the queue (handle_conn answers
+        // them inline).
+        _ => return Response::error(id, ApiError::internal("control request routed to executor")),
+    };
+    match result {
+        Ok(_) if job.cancel.load(Ordering::Relaxed) => Response::error(id, ApiError::cancelled()),
+        Ok(resp) => resp,
+        Err(e) => Response::error(id, to_api_error(&e)),
+    }
+}
+
+/// Map an execution failure onto the wire error shape: the top-level
+/// message plus the cause chain as diagnostics. Everything exec raises
+/// is a request problem (unknown model/dataflow/layer, contradictory
+/// flags), so the code is `bad_request`.
+fn to_api_error(e: &anyhow::Error) -> ApiError {
+    let diagnostics: Vec<String> = e.chain().skip(1).map(|c| c.to_string()).collect();
+    ApiError::bad_request(e.to_string()).with_diagnostics(diagnostics)
+}
+
+enum ReadEvent {
+    Line(String),
+    Idle,
+    Closed,
+}
+
+/// Pull the next newline-terminated frame out of `stream`, keeping
+/// partial reads in `acc` across timeout ticks (a 500 ms read timeout
+/// lets the connection notice daemon shutdown while idle).
+fn read_event(stream: &mut TcpStream, acc: &mut Vec<u8>) -> ReadEvent {
+    loop {
+        if let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = acc.drain(..=pos).collect();
+            return ReadEvent::Line(String::from_utf8_lossy(&line).trim().to_string());
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadEvent::Closed,
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return ReadEvent::Idle
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ReadEvent::Closed,
+        }
+    }
+}
+
+fn write_response(stream: &mut TcpStream, response: &Response) -> bool {
+    let mut line = response.encode_line();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).and_then(|_| stream.flush()).is_ok()
+}
+
+fn handle_conn(shared: &Shared, job_tx: SyncSender<Job>, mut stream: TcpStream) {
+    if stream.set_read_timeout(Some(Duration::from_millis(500))).is_err() {
+        return;
+    }
+    let mut acc = Vec::new();
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        match read_event(&mut stream, &mut acc) {
+            ReadEvent::Closed => break,
+            ReadEvent::Idle => continue,
+            ReadEvent::Line(text) => {
+                if text.is_empty() {
+                    continue;
+                }
+                if !handle_line(shared, &job_tx, &mut stream, &text) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Process one frame; returns false when the connection should close.
+/// Malformed frames get a structured `bad_request` reply and the
+/// connection (and daemon) stay up.
+fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream, text: &str) -> bool {
+    let request = match Json::parse(text)
+        .map_err(|e| ApiError::bad_request(format!("malformed frame: {e}")))
+        .and_then(|v| Request::decode(&v))
+    {
+        Ok(r) => r,
+        Err(err) => return write_response(stream, &Response::error(None, err)),
+    };
+    match request {
+        Request::Status => {
+            write_response(stream, &Response::Status(shared.store.metrics().into()))
+        }
+        Request::Cancel { id } => {
+            let flagged = {
+                let inflight = shared.inflight.lock().unwrap();
+                inflight.get(&id).map(|f| f.store(true, Ordering::Relaxed)).is_some()
+            };
+            let response = if flagged {
+                Response::Done(DoneReply { id: Some(id), what: "cancel".into() })
+            } else {
+                Response::error(
+                    Some(id),
+                    ApiError::bad_request(format!("no in-flight request with id {id}")),
+                )
+            };
+            write_response(stream, &response)
+        }
+        Request::Shutdown => {
+            write_response(stream, &Response::Done(DoneReply { id: None, what: "shutdown".into() }));
+            shared.shutdown.store(true, Ordering::Relaxed);
+            false
+        }
+        work @ (Request::Analyze(_) | Request::Map(_) | Request::Dse(_)) => {
+            let id = work.id();
+            let cancel = Arc::new(AtomicBool::new(false));
+            if let Some(id) = id {
+                shared.inflight.lock().unwrap().insert(id, Arc::clone(&cancel));
+            }
+            let (reply_tx, reply_rx) = mpsc::channel();
+            match job_tx.try_send(Job { request: work, reply: reply_tx, cancel }) {
+                Ok(()) => match reply_rx.recv() {
+                    Ok(response) => write_response(stream, &response),
+                    Err(_) => write_response(
+                        stream,
+                        &Response::error(id, ApiError::internal("executor dropped the request")),
+                    ),
+                },
+                Err(TrySendError::Full(_)) => {
+                    if let Some(id) = id {
+                        shared.inflight.lock().unwrap().remove(&id);
+                    }
+                    write_response(
+                        stream,
+                        &Response::error(
+                            id,
+                            ApiError::overloaded(500, shared.cfg.queue_cap.max(1)),
+                        ),
+                    )
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    write_response(
+                        stream,
+                        &Response::error(id, ApiError::internal("daemon is shutting down")),
+                    );
+                    false
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,481 @@
+//! Request execution: the one implementation of analyze / map / dse
+//! that every surface shares.
+//!
+//! The CLI's `network`, `map`, and `dse` subcommands and the `serve`
+//! daemon all funnel through these functions, so a request computes the
+//! same numbers whichever door it came in. The split per request kind:
+//!
+//! * **analyze / map** — [`run_analyze`] / [`run_map`] do the whole
+//!   job and return a rich outcome (the engine's native structs plus
+//!   [`RequestStats`]); callers render it (human tables, `--json`, or a
+//!   daemon reply frame via [`analyze_reply`] / [`map_reply`]).
+//! * **dse** — two steps, because the CLI narrates between them:
+//!   [`prepare_dse`] builds the space/strategy/workload (and the
+//!   `search:` / `workload:` description lines), then
+//!   [`run_prepared_dse`] runs the sweep. The daemon calls both
+//!   back-to-back and encodes with [`dse_reply`].
+//!
+//! Every function takes the caller's [`SharedStore`] — a per-run store
+//! for the CLI, the resident warm store for the daemon — and the
+//! returned [`RequestStats`] are strictly request-scoped (computed from
+//! the request's own analyzer/sweep counters, never from global store
+//! deltas, so concurrent daemon requests don't pollute each other).
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cache::SharedStore;
+use crate::dse::engine::{sweep, DesignPoint, SweepConfig, SweepOutcome};
+use crate::dse::pareto::{best, Optimize};
+use crate::dse::space::DesignSpace;
+use crate::dse::strategy::{SearchBudget, SearchStrategy};
+use crate::engine::analysis::{
+    adaptive_network_with, analyze_network_with, Analyzer, NetworkStats,
+};
+use crate::hw::config::HwConfig;
+use crate::ir::styles;
+use crate::mapspace::{enumerate_all, Mapper, MapperConfig, MappingOutcome, StyleTemplate};
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+use crate::model::zoo;
+
+use super::api::{
+    AnalyzeReply, AnalyzeRequest, DseReply, DseRequest, DseSearch, LayerRow, MapReply, MapRequest,
+    MapSearch, PointRow, Ratios, RequestStats, ShapeRow, SideTotals, SkippedRow,
+};
+
+/// Build the analysis hardware config the way the CLI's `--pes`/`--bw`
+/// flags always have: Fig 10 defaults with the two knobs overridden.
+pub fn hw_from(pes: u64, bw: u64) -> Result<HwConfig> {
+    let mut hw = HwConfig::fig10_default();
+    hw.num_pes = pes;
+    hw.noc_bandwidth = bw;
+    hw.validate()?;
+    Ok(hw)
+}
+
+/// Resolve a `(model, layer-name)` pair into a concrete layer (empty
+/// name = the model's first layer — VGG16 conv1_1 under the defaults).
+/// The CLI's `pick_layer` and the daemon both resolve through here, so
+/// the not-found diagnostic is identical everywhere.
+pub fn pick_layer_named(model: &str, lname: &str) -> Result<(Layer, String)> {
+    let net = zoo::by_name(model)?;
+    let layer = if lname.is_empty() {
+        net.layers[0].clone()
+    } else {
+        net.layers
+            .iter()
+            .find(|l| l.name == lname)
+            .with_context(|| {
+                format!(
+                    "layer '{lname}' not in {model}; first few: {}",
+                    net.layers.iter().take(8).map(|l| l.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })?
+            .clone()
+    };
+    Ok((layer, model.to_string()))
+}
+
+fn stats_from_analyzer(a: &Analyzer, designs_evaluated: u64, wall_seconds: f64) -> RequestStats {
+    RequestStats {
+        analyses: a.cache_misses(),
+        disk_hits: a.disk_hits(),
+        warm_hits: a.cache_hits().saturating_sub(a.disk_hits()),
+        designs_evaluated,
+        wall_seconds,
+    }
+}
+
+// ---------------------------------------------------------------------
+// analyze
+// ---------------------------------------------------------------------
+
+/// What [`run_analyze`] hands back: the engine's [`NetworkStats`] plus
+/// the context a renderer needs (shape count, mapspace note, request
+/// accounting).
+#[derive(Debug, Clone)]
+pub struct AnalyzeOutcome {
+    pub network: NetworkStats,
+    /// Unique shapes in the model (the CLI table's `shapes` column).
+    pub shapes: usize,
+    /// Total layers in the model (analyzed + skipped).
+    pub layers_total: usize,
+    /// The `mapspace: N candidate mapping(s) ...` narration line
+    /// (`dataflow == "mapped"` only); the CLI prints it verbatim.
+    pub mapspace_note: Option<String>,
+    pub mapspace_candidates: Option<u64>,
+    pub stats: RequestStats,
+}
+
+/// Whole-network analysis over the caller's store — the engine behind
+/// `maestro network` and the daemon's `analyze` requests.
+pub fn run_analyze(store: &Arc<SharedStore>, req: &AnalyzeRequest) -> Result<AnalyzeOutcome> {
+    let t0 = std::time::Instant::now();
+    let net = zoo::by_name(&req.model)?;
+    let hw = hw_from(req.pes, req.bw)?;
+    let mut analyzer = Analyzer::with_store(Arc::clone(store));
+    let mut mapspace_note = None;
+    let mut mapspace_candidates = None;
+    let network = if req.dataflow == "adaptive" {
+        adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, req.objective)?
+    } else if req.dataflow == "mapped" {
+        // Mapspace-backed adaptivity: the candidate set is the
+        // fingerprint-deduped union of every style template's tiling
+        // enumeration over the network's unique shapes (see the
+        // `network` CLI docs for the cross-shape trade-off).
+        let templates = StyleTemplate::all();
+        let groups = net.unique_shapes();
+        let n_shapes = groups.len();
+        let mut candidates = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for group in &groups {
+            let en = enumerate_all(&templates, group.layer, hw.num_pes, req.tile_resolution);
+            for df in en.dataflows {
+                if seen.insert(df.fingerprint()) {
+                    candidates.push(df);
+                }
+            }
+        }
+        mapspace_note = Some(format!(
+            "mapspace: {} candidate mapping(s) across {n_shapes} unique shape(s)",
+            candidates.len()
+        ));
+        mapspace_candidates = Some(candidates.len() as u64);
+        adaptive_network_with(&mut analyzer, &net, &candidates, &hw, req.objective)?
+    } else {
+        let df = styles::by_name(&req.dataflow)
+            .with_context(|| format!("unknown dataflow {}", req.dataflow))?;
+        analyze_network_with(&mut analyzer, &net, &df, &hw, true)?
+    };
+    let stats = stats_from_analyzer(&analyzer, 0, t0.elapsed().as_secs_f64());
+    Ok(AnalyzeOutcome {
+        network,
+        shapes: net.unique_shapes().len(),
+        layers_total: net.layers.len(),
+        mapspace_note,
+        mapspace_candidates,
+        stats,
+    })
+}
+
+/// Encode an [`AnalyzeOutcome`] as the wire reply.
+pub fn analyze_reply(req: &AnalyzeRequest, out: &AnalyzeOutcome) -> AnalyzeReply {
+    AnalyzeReply {
+        id: req.id,
+        network: out.network.network.clone(),
+        dataflow: out.network.dataflow.clone(),
+        layers: out.network.per_layer.len() as u64,
+        shapes: out.shapes as u64,
+        runtime_cycles: out.network.runtime,
+        energy_uj: out.network.energy.total() / 1e6,
+        gmacs: out.network.macs / 1e9,
+        mapspace_candidates: out.mapspace_candidates,
+        per_layer: if req.per_layer {
+            out.network
+                .per_layer
+                .iter()
+                .map(|s| LayerRow {
+                    layer: s.layer.clone(),
+                    dataflow: s.dataflow.clone(),
+                    runtime: s.runtime,
+                    energy_uj: s.energy.total() / 1e6,
+                    util: s.util,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        },
+        skipped: skipped_rows(&out.network),
+        stats: out.stats.clone(),
+    }
+}
+
+fn skipped_rows(n: &NetworkStats) -> Vec<SkippedRow> {
+    n.skipped
+        .iter()
+        .map(|s| SkippedRow { layer: s.layer.clone(), reason: s.reason.clone() })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// map
+// ---------------------------------------------------------------------
+
+/// What [`run_map`] hands back: the mapper's native outcome, the
+/// fixed-style baseline it is compared against, and request accounting.
+#[derive(Debug, Clone)]
+pub struct MapOutcome {
+    pub mapping: MappingOutcome,
+    /// Adaptive-over-Table-3 baseline through the same store.
+    pub fixed: NetworkStats,
+    pub stats: RequestStats,
+}
+
+/// Layer-wise mapper search + fixed-style baseline — the engine behind
+/// `maestro map` and the daemon's `map` requests. `cancel` (daemon:
+/// one flag per request) degrades unsearched shapes to Table 3
+/// defaults, exactly like an expired `budget_seconds`.
+pub fn run_map(
+    store: &Arc<SharedStore>,
+    req: &MapRequest,
+    cancel: Option<Arc<AtomicBool>>,
+) -> Result<MapOutcome> {
+    let t0 = std::time::Instant::now();
+    let net = zoo::by_name(&req.model)?;
+    let hw = hw_from(req.pes, req.bw)?;
+    let cfg = MapperConfig {
+        tile_resolution: req.tile_resolution,
+        objective: req.objective,
+        budget: SearchBudget { max_designs: req.budget, max_seconds: req.budget_seconds },
+        cancel,
+        ..MapperConfig::default()
+    };
+    let mut mapper = Mapper::with_store(Arc::clone(store));
+    let mapping = mapper.map_network(&net, &hw, &cfg)?;
+    // Baseline: adaptive over the five fixed Table 3 styles, same
+    // store (template defaults replay from it).
+    let mut analyzer = Analyzer::with_store(Arc::clone(store));
+    let fixed = adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, req.objective)?;
+    let ms = &mapping.stats;
+    let stats = RequestStats {
+        analyses: ms.cache_misses + analyzer.cache_misses(),
+        disk_hits: ms.cache_disk_hits + analyzer.disk_hits(),
+        warm_hits: ms.cache_hits.saturating_sub(ms.cache_disk_hits)
+            + analyzer.cache_hits().saturating_sub(analyzer.disk_hits()),
+        designs_evaluated: ms.evaluated,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok(MapOutcome { mapping, fixed, stats })
+}
+
+/// Encode a [`MapOutcome`] as the wire reply.
+pub fn map_reply(req: &MapRequest, out: &MapOutcome) -> MapReply {
+    let m = &out.mapping;
+    let ratios = if out.fixed.per_layer.len() == m.network.per_layer.len() {
+        Some(Ratios {
+            runtime: out.fixed.runtime / m.network.runtime.max(1e-12),
+            energy: out.fixed.energy.total() / m.network.energy.total().max(1e-12),
+            edp: (out.fixed.runtime * out.fixed.energy.total())
+                / (m.network.runtime * m.network.energy.total()).max(1e-12),
+        })
+    } else {
+        None
+    };
+    MapReply {
+        id: req.id,
+        network: m.network.network.clone(),
+        objective: req.objective.name().to_string(),
+        per_shape: m
+            .per_shape
+            .iter()
+            .map(|s| ShapeRow {
+                representative: s.representative.clone(),
+                members: s.members,
+                mapping: s.dataflow.name.clone(),
+                runtime: s.stats.runtime,
+                energy_uj: s.stats.energy.total() / 1e6,
+                util: s.stats.util,
+            })
+            .collect(),
+        skipped: skipped_rows(&m.network),
+        mapper: SideTotals {
+            layers: m.network.per_layer.len() as u64,
+            runtime: m.network.runtime,
+            energy_uj: m.network.energy.total() / 1e6,
+        },
+        fixed: SideTotals {
+            layers: out.fixed.per_layer.len() as u64,
+            runtime: out.fixed.runtime,
+            energy_uj: out.fixed.energy.total() / 1e6,
+        },
+        ratios,
+        search: MapSearch {
+            shapes: m.stats.shapes,
+            combos: m.stats.combos,
+            candidates: m.stats.candidates,
+            evaluated: m.stats.evaluated,
+            budget_skipped: m.stats.budget_skipped,
+            defaulted: m.stats.shapes_defaulted,
+        },
+        stats: out.stats.clone(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// dse
+// ---------------------------------------------------------------------
+
+/// Everything a dse request resolves to before the sweep runs: the
+/// design space, strategy, budget, and workload. Split from
+/// [`run_prepared_dse`] because the CLI narrates (`search:` /
+/// `workload:` lines, cache opening) between preparation and sweep.
+#[derive(Debug, Clone)]
+pub struct DsePrep {
+    pub space: DesignSpace,
+    pub strategy: SearchStrategy,
+    pub budget: SearchBudget,
+    pub workload: Network,
+    /// The `mapspace: generated ...` narration line (`--mapspace` only).
+    pub mapspace_note: Option<String>,
+    pub macs: f64,
+    pub shapes: usize,
+}
+
+impl DsePrep {
+    /// The CLI's `search: strategy=... budget=... wall=...` line.
+    pub fn search_line(&self) -> String {
+        format!(
+            "search: strategy={} budget={} wall={}",
+            self.strategy.name(),
+            if self.budget.max_designs > 0 {
+                self.budget.max_designs.to_string()
+            } else {
+                "unlimited".into()
+            },
+            if self.budget.max_seconds > 0.0 {
+                format!("{}s", self.budget.max_seconds)
+            } else {
+                "off".into()
+            },
+        )
+    }
+
+    /// The CLI's `workload: ...` line.
+    pub fn workload_line(&self) -> String {
+        format!(
+            "workload: {} ({} layer(s), {} unique shape(s), {:.2} GMACs)",
+            self.workload.name,
+            self.workload.layers.len(),
+            self.shapes,
+            self.macs / 1e9
+        )
+    }
+}
+
+/// Resolve a [`DseRequest`] into a [`DsePrep`]: build the design space
+/// (generated variant axis under `mapspace`), parse the strategy,
+/// assemble the workload. Rejects the contradictory `network` + named
+/// `layer` combination, exactly like the CLI always has.
+pub fn prepare_dse(req: &DseRequest) -> Result<DsePrep> {
+    let mut mapspace_note = None;
+    let space = if req.mapspace {
+        let (layer, _) = pick_layer_named(&req.model, &req.layer)?;
+        let space = DesignSpace::mapspace(
+            &req.family,
+            &layer,
+            req.tile_resolution,
+            req.resolution,
+            req.bw_resolution,
+        )?;
+        mapspace_note = Some(format!(
+            "mapspace: generated {} variant(s) for family {} against layer '{}' (tile resolution {})",
+            space.variants.len(),
+            req.family,
+            layer.name,
+            req.tile_resolution
+        ));
+        space
+    } else {
+        DesignSpace::fig13_axes(&req.family, req.resolution, req.bw_resolution)
+    };
+    let strategy = SearchStrategy::parse(&req.strategy, req.seed)?;
+    let budget = SearchBudget { max_designs: req.budget, max_seconds: req.budget_seconds };
+    let workload = if req.network {
+        ensure!(req.layer.is_empty(), "--network sweeps every layer of the model; drop --layer");
+        zoo::by_name(&req.model)?
+    } else {
+        Network::single(pick_layer_named(&req.model, &req.layer)?.0)
+    };
+    let macs = workload.macs() as f64;
+    let shapes = workload.unique_shapes().len();
+    Ok(DsePrep { space, strategy, budget, workload, mapspace_note, macs, shapes })
+}
+
+/// What [`run_prepared_dse`] hands back: the sweep's native outcome
+/// plus request accounting.
+#[derive(Debug, Clone)]
+pub struct DseOutcome {
+    pub sweep: SweepOutcome,
+    pub stats: RequestStats,
+}
+
+/// Run the sharded sweep over a prepared design space. `use_store`
+/// hands the caller's store to the sweep shards (the daemon always
+/// does; the CLI only under `--cache-file`, preserving its historical
+/// cache counters). `cancel` stops at the next wave boundary.
+pub fn run_prepared_dse(
+    store: &Arc<SharedStore>,
+    prep: &DsePrep,
+    req: &DseRequest,
+    use_store: bool,
+    cancel: Option<Arc<AtomicBool>>,
+) -> Result<DseOutcome> {
+    let t0 = std::time::Instant::now();
+    let cfg = SweepConfig {
+        threads: req.threads,
+        keep_all_points: req.keep_points,
+        cache: if use_store { Some(Arc::clone(store)) } else { None },
+        strategy: prep.strategy.clone(),
+        budget: prep.budget,
+        cancel,
+        ..SweepConfig::default()
+    };
+    let sweep_out = sweep(&prep.workload, &prep.space, prep.space.noc_latency, &cfg)?;
+    let s = &sweep_out.stats;
+    let stats = RequestStats {
+        analyses: s.cache_misses,
+        disk_hits: s.cache_disk_hits,
+        warm_hits: s.cache_hits.saturating_sub(s.cache_disk_hits),
+        designs_evaluated: s.evaluated,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok(DseOutcome { sweep: sweep_out, stats })
+}
+
+fn point_row(p: &DesignPoint) -> PointRow {
+    PointRow {
+        dataflow: p.dataflow.clone(),
+        pes: p.pes,
+        bandwidth: p.bandwidth,
+        l1: p.l1,
+        l2: p.l2,
+        runtime: p.runtime,
+        energy_pj: p.energy_pj,
+        area_mm2: p.area_mm2,
+        power_mw: p.power_mw,
+    }
+}
+
+/// Encode a [`DseOutcome`] as the wire reply. Optima are extracted from
+/// the full point set when the sweep kept it, else from the frontier
+/// (optima are always frontier members, so the answer is the same).
+pub fn dse_reply(req: &DseRequest, prep: &DsePrep, out: &DseOutcome) -> DseReply {
+    let s = &out.sweep.stats;
+    let pts: &[DesignPoint] =
+        if out.sweep.points.is_empty() { &out.sweep.frontier } else { &out.sweep.points };
+    DseReply {
+        id: req.id,
+        family: req.family.clone(),
+        workload: prep.workload.name.clone(),
+        layers: prep.workload.layers.len() as u64,
+        shapes: prep.shapes as u64,
+        gmacs: prep.macs / 1e9,
+        search: DseSearch {
+            strategy: if s.strategy.is_empty() { "exhaustive".into() } else { s.strategy.clone() },
+            total_designs: s.total_designs,
+            evaluated: s.evaluated,
+            valid: s.valid,
+            pruned: s.pruned,
+            unmappable: s.unmappable,
+            budget_skipped: s.budget_skipped,
+            waves: s.waves,
+        },
+        frontier: out.sweep.frontier.iter().map(point_row).collect(),
+        throughput_opt: best(pts, Optimize::Throughput, prep.macs).map(point_row),
+        energy_opt: best(pts, Optimize::Energy, prep.macs).map(point_row),
+        stats: out.stats.clone(),
+    }
+}

@@ -1,0 +1,29 @@
+//! DSE-as-a-service: the unified request/response API and the resident
+//! `maestro serve` daemon behind it.
+//!
+//! PR 5's cache subsystem made warm starts a file-level concern — every
+//! CLI invocation still paid process startup plus a disk load before
+//! its first analysis. This subsystem keeps the warm state *resident*:
+//!
+//! * [`api`] — the typed, versioned wire schema ([`api::Request`] /
+//!   [`api::Response`] with a shared [`api::ApiError`]). One schema for
+//!   every surface: the daemon's TCP frames, the CLI's `--json` output,
+//!   and the `from_args` builders that turn CLI flags into requests.
+//! * [`exec`] — the single implementation of analyze / map / dse that
+//!   both the CLI subcommands and the daemon executor call, returning
+//!   engine-native outcomes plus per-request [`api::RequestStats`]
+//!   (cold-vs-disk-vs-warm cache split, designs evaluated, wall time).
+//! * [`daemon`] — the resident server: one warm [`SharedStore`] for
+//!   the process lifetime, newline-delimited JSON over TCP, bounded
+//!   job-queue backpressure (`overloaded` + `retry_after_ms`),
+//!   per-request cooperative cancellation, periodic + shutdown store
+//!   flushes.
+//!
+//! [`SharedStore`]: crate::cache::SharedStore
+
+pub mod api;
+pub mod daemon;
+pub mod exec;
+
+pub use api::{ApiError, Request, RequestStats, Response, WIRE_VERSION};
+pub use daemon::{serve, Daemon, ServeConfig};

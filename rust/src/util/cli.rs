@@ -3,19 +3,27 @@
 //! Supports `program <subcommand> [--flag value] [--switch] [positional..]`
 //! with typed accessors and an auto-generated usage string. Unknown flags
 //! are errors so typos fail loudly.
+//!
+//! The flags every analysis-running entry point shares (`network` /
+//! `map` / `dse` / `serve`) are specified **once**, in
+//! [`common_flags`], so spellings and help text cannot drift between
+//! subcommands; retired spellings live in [`aliases`] and are accepted
+//! with a deprecation warning instead of an error.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
 /// Parsed command line: subcommand, `--key value` options, `--switch`
-/// booleans, and positional arguments.
+/// booleans, and positional arguments. `warnings` collects deprecation
+/// notes (old flag spellings) for the caller to surface.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub subcommand: Option<String>,
     pub options: BTreeMap<String, String>,
     pub switches: Vec<String>,
     pub positional: Vec<String>,
+    pub warnings: Vec<String>,
 }
 
 /// Specification of one accepted flag, used for validation + usage text.
@@ -26,19 +34,100 @@ pub struct FlagSpec {
     pub help: &'static str,
 }
 
+/// A retired flag spelling: accepted, rewritten to `canonical`, and
+/// warned about. When both spellings appear, the canonical one wins
+/// regardless of argument order.
+#[derive(Debug, Clone, Copy)]
+pub struct AliasSpec {
+    pub alias: &'static str,
+    pub canonical: &'static str,
+}
+
+/// The flag surface shared by every subcommand that runs analyses
+/// (`network`, `map`, `dse`, `serve`) — one table, identical spellings
+/// and help text everywhere. Subcommand-specific flags are appended by
+/// the caller.
+pub fn common_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec {
+            name: "cache-file",
+            takes_value: true,
+            help: "warm-start analysis cache file (loaded if present, updated on exit)",
+        },
+        FlagSpec {
+            name: "cache-cap",
+            takes_value: true,
+            help: "bound the in-memory analysis cache to ~N entries (coarse FIFO eviction; 0 = unbounded)",
+        },
+        FlagSpec {
+            name: "budget",
+            takes_value: true,
+            help: "max designs admitted to evaluation (0 = unlimited; required for --strategy random)",
+        },
+        FlagSpec {
+            name: "budget-seconds",
+            takes_value: true,
+            help: "wall-clock cutoff in seconds, checked between search waves/shapes (0 = off)",
+        },
+        FlagSpec {
+            name: "threads",
+            takes_value: true,
+            help: "sweep worker threads (default 0 = all cores)",
+        },
+        FlagSpec {
+            name: "seed",
+            takes_value: true,
+            help: "RNG seed for --strategy random (default 1)",
+        },
+        FlagSpec {
+            name: "objective",
+            takes_value: true,
+            help: "runtime | energy | edp (default runtime)",
+        },
+    ]
+}
+
+/// Retired spellings accepted (with a warning) by [`Args::parse`].
+pub fn aliases() -> Vec<AliasSpec> {
+    vec![AliasSpec { alias: "layer-model", canonical: "model" }]
+}
+
 impl Args {
     /// Parse `argv[1..]`, validating flags against `spec`. The first
     /// non-flag token is the subcommand when `expect_subcommand` is set.
+    /// Retired spellings from [`aliases`] are rewritten to their
+    /// canonical flag and recorded in [`Args::warnings`].
     pub fn parse(
         argv: &[String],
         spec: &[FlagSpec],
         expect_subcommand: bool,
     ) -> Result<Args> {
+        Args::parse_with(argv, spec, &aliases(), expect_subcommand)
+    }
+
+    /// [`Args::parse`] with an explicit alias table (tests use this to
+    /// pin the rewrite rules).
+    pub fn parse_with(
+        argv: &[String],
+        spec: &[FlagSpec],
+        aliases: &[AliasSpec],
+        expect_subcommand: bool,
+    ) -> Result<Args> {
         let mut args = Args::default();
+        let mut aliased: Vec<&'static str> = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let tok = &argv[i];
-            if let Some(name) = tok.strip_prefix("--") {
+            if let Some(mut name) = tok.strip_prefix("--") {
+                let mut is_alias = false;
+                if let Some(a) = aliases.iter().find(|a| a.alias == name) {
+                    args.warnings.push(format!(
+                        "--{} is deprecated; use --{}",
+                        a.alias, a.canonical
+                    ));
+                    name = a.canonical;
+                    is_alias = true;
+                }
                 let flag = spec
                     .iter()
                     .find(|f| f.name == name)
@@ -48,7 +137,19 @@ impl Args {
                     let val = argv
                         .get(i)
                         .with_context(|| format!("flag --{name} expects a value"))?;
-                    args.options.insert(name.to_string(), val.clone());
+                    if is_alias {
+                        // The canonical spelling always wins: only fill
+                        // the slot if no canonical value is present yet,
+                        // and remember the fill so a later canonical
+                        // occurrence can overwrite it.
+                        if !args.options.contains_key(name) || aliased.contains(&flag.name) {
+                            args.options.insert(name.to_string(), val.clone());
+                            aliased.push(flag.name);
+                        }
+                    } else {
+                        args.options.insert(name.to_string(), val.clone());
+                        aliased.retain(|n| *n != flag.name);
+                    }
                 } else {
                     args.switches.push(name.to_string());
                 }
@@ -182,5 +283,44 @@ mod tests {
     fn one_of() {
         assert!(expect_one_of("obj", "edp", &["runtime", "energy", "edp"]).is_ok());
         assert!(expect_one_of("obj", "zap", &["runtime", "energy", "edp"]).is_err());
+    }
+
+    #[test]
+    fn common_flags_cover_the_shared_surface() {
+        let names: Vec<&str> = common_flags().iter().map(|f| f.name).collect();
+        for expect in
+            ["cache-file", "cache-cap", "budget", "budget-seconds", "threads", "seed", "objective"]
+        {
+            assert!(names.contains(&expect), "missing common flag --{expect}");
+        }
+    }
+
+    #[test]
+    fn alias_rewrites_and_warns() {
+        let al = [AliasSpec { alias: "layer-model", canonical: "model" }];
+        let a = Args::parse_with(&sv(&["--layer-model", "resnet50"]), &spec(), &al, false).unwrap();
+        assert_eq!(a.opt("model", ""), "resnet50");
+        assert_eq!(a.warnings.len(), 1);
+        assert!(a.warnings[0].contains("deprecated"), "{:?}", a.warnings);
+    }
+
+    #[test]
+    fn canonical_spelling_beats_alias_in_any_order() {
+        let al = [AliasSpec { alias: "layer-model", canonical: "model" }];
+        for argv in [
+            ["--model", "vgg16", "--layer-model", "resnet50"],
+            ["--layer-model", "resnet50", "--model", "vgg16"],
+        ] {
+            let a = Args::parse_with(&sv(&argv), &spec(), &al, false).unwrap();
+            assert_eq!(a.opt("model", ""), "vgg16", "{argv:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_alias_target_still_errors() {
+        // An alias whose canonical flag is not in the spec is a typo,
+        // not a silently-accepted flag.
+        let al = [AliasSpec { alias: "old-nope", canonical: "nope" }];
+        assert!(Args::parse_with(&sv(&["--old-nope", "x"]), &spec(), &al, false).is_err());
     }
 }

@@ -1,0 +1,440 @@
+//! Minimal hand-rolled JSON (serde substitute), for the `service` wire
+//! format and the `--json` CLI emitters.
+//!
+//! The offline image ships only `anyhow`, so the daemon's
+//! newline-delimited frames are encoded and parsed here: one [`Json`]
+//! value type, a compact stable-order writer ([`Json::dump`]), and a
+//! depth-limited recursive-descent parser ([`Json::parse`]). Scope is
+//! deliberately the wire format's needs, not the full spec surface:
+//!
+//! * Objects preserve **insertion order** (a `Vec` of pairs, not a
+//!   map), so encoders are byte-stable — the golden tests in
+//!   `rust/tests/service_api.rs` pin exact strings.
+//! * Numbers are `f64` (JSON's own model). The writer prints integral
+//!   values in the exact-`i64` window without a decimal point and
+//!   everything else via Rust's shortest-roundtrip `Display`, so
+//!   `parse(dump(x)) == x` bit for bit. Non-finite values encode as
+//!   `null` (JSON has no NaN/Inf).
+//! * Parsing rejects trailing garbage, unterminated input, and nesting
+//!   beyond [`MAX_DEPTH`] — a malformed or adversarial frame must fail
+//!   loudly (the daemon turns the error into a structured `ApiError`),
+//!   never recurse unboundedly.
+
+use anyhow::{bail, ensure, Result};
+
+/// Nesting bound for the parser: wire frames are a couple of levels
+/// deep; anything deeper is garbage, not a request.
+pub const MAX_DEPTH: usize = 64;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Key-value pairs in insertion order (duplicate keys: first wins
+    /// on [`Json::get`], all survive a dump — encoders never emit
+    /// duplicates).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Empty object, for builder-style chaining with [`Json::set`].
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a key (builder style). Non-objects are left unchanged.
+    pub fn set(mut self, key: &str, value: Json) -> Json {
+        if let Json::Obj(pairs) = &mut self {
+            pairs.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Append a key only when `value` is `Some` (optional wire fields
+    /// are *omitted*, not `null`, so golden strings stay short).
+    pub fn set_opt(self, key: &str, value: Option<Json>) -> Json {
+        match value {
+            Some(v) => self.set(key, v),
+            None => self,
+        }
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn int(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Field lookup on objects (`None` elsewhere).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as `u64` (rejects negatives and non-integers).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Compact single-line encoding (no whitespace — one frame, one
+    /// line is the daemon's protocol, and string escaping guarantees no
+    /// raw newline can appear inside a frame).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => write_num(*v, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON value; trailing non-whitespace is an error (a
+    /// frame is exactly one value).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        ensure!(pos == bytes.len(), "json: trailing garbage at byte {pos}");
+        Ok(value)
+    }
+}
+
+/// Integral doubles inside the exact-`i64` window print without a
+/// decimal point (the wire format's counters and ids); everything else
+/// uses Rust's shortest-roundtrip float formatting.
+fn write_num(v: f64, out: &mut String) {
+    if !v.is_finite() {
+        out.push_str("null");
+    } else if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        out.push_str(&format!("{}", v as i64));
+    } else {
+        out.push_str(&format!("{v}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    ensure!(depth < MAX_DEPTH, "json: nesting deeper than {MAX_DEPTH}");
+    skip_ws(bytes, pos);
+    let Some(&b) = bytes.get(*pos) else { bail!("json: unexpected end of input") };
+    match b {
+        b'n' => parse_lit(bytes, pos, "null", Json::Null),
+        b't' => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        b'"' => Ok(Json::Str(parse_string(bytes, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos, depth + 1)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("json: expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                ensure!(bytes.get(*pos) == Some(&b'"'), "json: expected object key at byte {pos}");
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                ensure!(bytes.get(*pos) == Some(&b':'), "json: expected ':' at byte {pos}");
+                *pos += 1;
+                let value = parse_value(bytes, pos, depth + 1)?;
+                pairs.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    _ => bail!("json: expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        b'-' | b'0'..=b'9' => parse_number(bytes, pos),
+        other => bail!("json: unexpected byte {:?} at {pos}", other as char),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("json: bad literal at byte {pos} (expected {lit})")
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).expect("numeric bytes are ASCII");
+    let v: f64 = text.parse().map_err(|_| anyhow::anyhow!("json: bad number '{text}'"))?;
+    ensure!(v.is_finite(), "json: non-finite number '{text}'");
+    Ok(Json::Num(v))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    // Caller verified the opening quote.
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&b) = bytes.get(*pos) else { bail!("json: unterminated string") };
+        match b {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                let Some(&esc) = bytes.get(*pos) else { bail!("json: unterminated escape") };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = parse_hex4(bytes, pos)?;
+                        // Surrogate pairs: a high surrogate must be
+                        // followed by an escaped low surrogate; lone
+                        // surrogates become U+FFFD rather than failing
+                        // the whole frame.
+                        let c = if (0xD800..0xDC00).contains(&hi) {
+                            if bytes.get(*pos) == Some(&b'\\') && bytes.get(*pos + 1) == Some(&b'u')
+                            {
+                                *pos += 2;
+                                let lo = parse_hex4(bytes, pos)?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    let code =
+                                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(code).unwrap_or('\u{FFFD}')
+                                } else {
+                                    '\u{FFFD}'
+                                }
+                            } else {
+                                '\u{FFFD}'
+                            }
+                        } else {
+                            char::from_u32(hi).unwrap_or('\u{FFFD}')
+                        };
+                        out.push(c);
+                    }
+                    other => bail!("json: bad escape '\\{}'", other as char),
+                }
+            }
+            _ => {
+                // Consume one UTF-8 scalar (input is a &str, so the
+                // bytes are valid UTF-8 by construction).
+                let rest = std::str::from_utf8(&bytes[*pos..]).expect("input was a &str");
+                let c = rest.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    ensure!(*pos + 4 <= bytes.len(), "json: truncated \\u escape");
+    let text = std::str::from_utf8(&bytes[*pos..*pos + 4])
+        .map_err(|_| anyhow::anyhow!("json: bad \\u escape"))?;
+    let v = u32::from_str_radix(text, 16).map_err(|_| anyhow::anyhow!("json: bad \\u escape"))?;
+    *pos += 4;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_is_compact_and_ordered() {
+        let v = Json::obj()
+            .set("b", Json::int(2))
+            .set("a", Json::str("x"))
+            .set("list", Json::Arr(vec![Json::Null, Json::Bool(true)]));
+        assert_eq!(v.dump(), r#"{"b":2,"a":"x","list":[null,true]}"#);
+    }
+
+    #[test]
+    fn numbers_round_trip() {
+        for v in [0.0, 1.0, -7.0, 0.17, 1e-9, 123456789.25, 9.0e18, f64::MIN_POSITIVE] {
+            let dumped = Json::Num(v).dump();
+            let parsed = Json::parse(&dumped).unwrap();
+            assert_eq!(parsed.as_f64().unwrap().to_bits(), v.to_bits(), "{v} via {dumped}");
+        }
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    }
+
+    #[test]
+    fn strings_escape_and_round_trip() {
+        let s = "line\nquote\" back\\slash \t unicode: µ 日本 \u{0001}";
+        let dumped = Json::str(s).dump();
+        assert!(!dumped.contains('\n'), "frames must stay single-line: {dumped}");
+        assert_eq!(Json::parse(&dumped).unwrap().as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn parses_nested_with_whitespace() {
+        let v = Json::parse(" { \"a\" : [ 1 , { \"b\" : \"c\" } ] , \"d\" : false } ").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0].as_u64(), Some(1));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].get("b").unwrap().as_str(), Some("c"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str().unwrap(), "😀");
+        assert_eq!(Json::parse(r#""\ud800x""#).unwrap().as_str().unwrap(), "\u{FFFD}x");
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"unterminated", "{\"a\":1} trailing",
+            "nan", "01x",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Depth bomb: 80 nested arrays exceed MAX_DEPTH.
+        let bomb = "[".repeat(80) + &"]".repeat(80);
+        assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn as_u64_rejects_non_integers() {
+        assert_eq!(Json::Num(3.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Json::str("3").as_u64(), None);
+    }
+}

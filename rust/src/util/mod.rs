@@ -1,12 +1,15 @@
 //! Shared utilities: deterministic PRNG, mini property-test harness,
-//! bench harness, CLI argument parsing, and table formatting.
+//! bench harness, CLI argument parsing, JSON codec, and table
+//! formatting.
 //!
 //! The offline build image ships only the `xla` crate's dependency
-//! closure, so these modules stand in for `rand`, `proptest`, `criterion`
-//! and `clap` respectively (see DESIGN.md §4 — substitutions).
+//! closure, so these modules stand in for `rand`, `proptest`,
+//! `criterion`, `clap` and `serde_json` respectively (see DESIGN.md §4
+//! — substitutions).
 
 pub mod benchkit;
 pub mod cli;
+pub mod json;
 pub mod propcheck;
 pub mod queue;
 pub mod rng;

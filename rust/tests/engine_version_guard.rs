@@ -17,7 +17,10 @@ use maestro::util::stablehash::Fnv128;
 
 /// FNV-128 over the sorted engine sources (name, NUL, length, bytes
 /// with `\r` stripped so checkout line-ending policy cannot move it).
-const ENGINE_SRC_FINGERPRINT: u128 = 0x384aaf1c25860f88e402538e0bdfb8f5;
+// PR 6 repin: engine/analysis.rs gained the shared cache-counter
+// formatter and the `Objective` surface used by the service API —
+// presentation/plumbing only, so ANALYSIS_VERSION stays.
+const ENGINE_SRC_FINGERPRINT: u128 = 0xac43fab84b97fdde9f77900889e95e81;
 
 fn engine_fingerprint() -> u128 {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/engine");

@@ -1,0 +1,239 @@
+//! In-process integration tests for the `maestro serve` daemon: a real
+//! TCP client against [`Daemon::spawn`] on an ephemeral port.
+//!
+//! Covers the tentpole's acceptance behaviors end to end:
+//!
+//! * **Warm store** — the second identical analyze request reports zero
+//!   analyses (all warm hits), and `status` sees the resident entries.
+//! * **Persistence** — shutdown flushes the store to `--cache-file`; a
+//!   fresh daemon started on that file answers from disk
+//!   (`disk_hits > 0`, `analyses == 0`).
+//! * **Robustness** — malformed frames, wrong wire versions, unknown
+//!   models, and bogus cancels all get structured [`ApiError`] replies
+//!   on a connection that stays usable; the daemon never dies.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use maestro::cache::SharedStore;
+use maestro::engine::analysis::Objective;
+use maestro::service::api::{AnalyzeRequest, Request, Response};
+use maestro::service::daemon::{Daemon, ServeConfig};
+use maestro::util::json::Json;
+
+/// A blocking line-framed client: one request out, one reply line back.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    /// Send one raw line (not necessarily valid JSON) and read one
+    /// reply line.
+    fn send_raw(&mut self, line: &str) -> Json {
+        writeln!(self.stream, "{line}").expect("write frame");
+        self.stream.flush().expect("flush frame");
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).expect("read reply");
+        assert!(n > 0, "daemon closed the connection instead of replying");
+        Json::parse(reply.trim()).unwrap_or_else(|e| panic!("reply not JSON ({e}): {reply}"))
+    }
+
+    fn request(&mut self, request: &Request) -> Response {
+        let v = self.send_raw(&request.encode().dump());
+        Response::decode(&v).unwrap_or_else(|e| panic!("undecodable reply {e:?}: {}", v.dump()))
+    }
+}
+
+fn analyze_request(id: u64) -> Request {
+    Request::Analyze(AnalyzeRequest {
+        id: Some(id),
+        model: "vgg16".into(),
+        dataflow: "adaptive".into(),
+        pes: 256,
+        bw: 16,
+        objective: Objective::Runtime,
+        tile_resolution: 6,
+        per_layer: false,
+    })
+}
+
+fn temp_cache(tag: &str) -> PathBuf {
+    let path =
+        std::env::temp_dir().join(format!("maestro_serve_{tag}_{}.mcache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn warm_store_serves_repeats_and_shutdown_flushes() {
+    let cache = temp_cache("warm");
+    let daemon = Daemon::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_file: Some(cache.display().to_string()),
+        flush_every: 0.0, // shutdown-flush only: the test asserts that path
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let mut client = Client::connect(daemon.addr());
+
+    // Cold: the first analyze actually runs the analytical model.
+    let cold = match client.request(&analyze_request(1)) {
+        Response::Analyze(r) => r,
+        other => panic!("expected analyze reply, got {other:?}"),
+    };
+    assert_eq!(cold.id, Some(1), "reply must echo the client id");
+    assert!(cold.layers > 0 && cold.runtime_cycles > 0.0);
+    assert!(cold.stats.analyses > 0, "cold request must run analyses: {:?}", cold.stats);
+
+    // Warm: the identical request answers from the resident store.
+    let warm = match client.request(&analyze_request(2)) {
+        Response::Analyze(r) => r,
+        other => panic!("expected analyze reply, got {other:?}"),
+    };
+    assert_eq!(warm.stats.analyses, 0, "warm request must not re-analyze: {:?}", warm.stats);
+    assert!(warm.stats.warm_hits > 0, "warm request must hit the store: {:?}", warm.stats);
+    assert_eq!(warm.runtime_cycles, cold.runtime_cycles, "warm replay must be bit-identical");
+    assert_eq!(warm.energy_uj, cold.energy_uj);
+
+    // The resident store is visible through `status`.
+    let status = match client.request(&Request::Status) {
+        Response::Status(s) => s,
+        other => panic!("expected status reply, got {other:?}"),
+    };
+    assert!(status.entries > 0, "store must hold the analyses: {status:?}");
+    assert!(status.hits > 0, "the warm request's hits must show: {status:?}");
+
+    // Shutdown acknowledges, then flushes everything to the cache file.
+    match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+    let bytes = std::fs::metadata(&cache).expect("cache file must exist").len();
+    assert!(bytes > 0, "shutdown flush must write records");
+
+    // Second daemon generation: loads the flushed file and answers the
+    // same request from disk without a single fresh analysis.
+    let daemon = Daemon::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_file: Some(cache.display().to_string()),
+        flush_every: 0.0,
+        ..ServeConfig::default()
+    })
+    .expect("spawn second daemon");
+    let mut client = Client::connect(daemon.addr());
+    let disk = match client.request(&analyze_request(3)) {
+        Response::Analyze(r) => r,
+        other => panic!("expected analyze reply, got {other:?}"),
+    };
+    assert_eq!(disk.stats.analyses, 0, "disk-warm request must not re-analyze: {:?}", disk.stats);
+    assert!(disk.stats.disk_hits > 0, "hits must be attributed to disk: {:?}", disk.stats);
+    assert_eq!(disk.runtime_cycles, cold.runtime_cycles, "disk replay must be bit-identical");
+    match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean second daemon exit");
+
+    // Sanity: the flushed file is loadable standalone.
+    let store = SharedStore::new();
+    let report = store.load(&cache);
+    assert!(report.warning.is_none(), "{:?}", report.warning);
+    assert!(report.loaded > 0, "flushed file must replay");
+    let _ = std::fs::remove_file(&cache);
+}
+
+#[test]
+fn malformed_frames_get_structured_errors_and_the_daemon_stays_up() {
+    let daemon =
+        Daemon::spawn(ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() })
+            .expect("spawn daemon");
+    let mut client = Client::connect(daemon.addr());
+
+    let expect_error = |v: &Json, code: &str, needle: &str| {
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{}", v.dump());
+        let err = v.get("error").unwrap_or_else(|| panic!("no error object: {}", v.dump()));
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(code), "{}", v.dump());
+        let message = err.get("message").and_then(Json::as_str).unwrap_or_default();
+        assert!(message.contains(needle), "wanted {needle:?} in {message:?}");
+    };
+
+    // Not JSON at all -> structured bad_request, connection survives.
+    let v = client.send_raw("this is not json");
+    expect_error(&v, "bad_request", "malformed frame");
+
+    // Valid JSON, invalid request shapes.
+    let v = client.send_raw(r#"{"v":1,"kind":"analyze"}"#);
+    expect_error(&v, "bad_request", "'model'");
+    let v = client.send_raw(r#"{"v":2,"kind":"status"}"#);
+    expect_error(&v, "bad_request", "unsupported wire version 2");
+    let v = client.send_raw(r#"{"v":1,"kind":"frobnicate"}"#);
+    expect_error(&v, "bad_request", "unknown request kind");
+
+    // A well-formed request for a nonexistent model fails in the
+    // executor; the cause still comes back as a structured error.
+    let v = client.send_raw(r#"{"v":1,"kind":"analyze","id":5,"model":"no-such-model"}"#);
+    expect_error(&v, "bad_request", "no-such-model");
+    assert_eq!(v.get("id").and_then(Json::as_u64), Some(5), "error must echo the id");
+
+    // Cancelling an id that is not in flight is an error, not a hang.
+    let v = client.send_raw(r#"{"v":1,"kind":"cancel","id":999}"#);
+    expect_error(&v, "bad_request", "no in-flight request with id 999");
+
+    // After all of that abuse the same connection still does real work.
+    match client.request(&Request::Status) {
+        Response::Status(_) => {}
+        other => panic!("daemon wedged after malformed frames: {other:?}"),
+    }
+    match client.request(&analyze_request(7)) {
+        Response::Analyze(r) => assert_eq!(r.id, Some(7)),
+        other => panic!("expected analyze reply, got {other:?}"),
+    }
+
+    match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+}
+
+#[test]
+fn empty_lines_are_ignored_and_multiple_clients_share_the_store() {
+    let daemon =
+        Daemon::spawn(ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() })
+            .expect("spawn daemon");
+
+    // Client A pays the cold cost.
+    let mut a = Client::connect(daemon.addr());
+    // Blank lines between frames must be skipped, not answered.
+    writeln!(a.stream).unwrap();
+    writeln!(a.stream).unwrap();
+    let cold = match a.request(&analyze_request(1)) {
+        Response::Analyze(r) => r,
+        other => panic!("expected analyze reply, got {other:?}"),
+    };
+    assert!(cold.stats.analyses > 0);
+
+    // Client B, a separate connection, rides A's warm store.
+    let mut b = Client::connect(daemon.addr());
+    let warm = match b.request(&analyze_request(2)) {
+        Response::Analyze(r) => r,
+        other => panic!("expected analyze reply, got {other:?}"),
+    };
+    assert_eq!(warm.stats.analyses, 0, "store is shared across connections: {:?}", warm.stats);
+    assert!(warm.stats.warm_hits > 0);
+
+    match b.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+}

@@ -1,0 +1,433 @@
+//! Golden + round-trip tests for the service wire schema
+//! (`maestro::service::api`).
+//!
+//! The goldens pin the **exact** encoded bytes of representative frames
+//! — the daemon's protocol and the CLI's `--json` output are the same
+//! encoder, so a golden change here is a wire-format break and must be
+//! deliberate (bump `WIRE_VERSION` or keep the field optional). The
+//! round-trips assert `decode(parse(dump(encode(x)))) == x` for every
+//! `Request` and `Response` variant, including `ApiError`, in both the
+//! fully-populated and the minimal (optional-fields-omitted) shapes.
+//! Malformed frames must produce structured `ApiError`s, never panics.
+
+use maestro::engine::analysis::Objective;
+use maestro::service::api::{
+    AnalyzeReply, AnalyzeRequest, ApiError, DoneReply, DseReply, DseRequest, DseSearch, LayerRow,
+    MapReply, MapRequest, MapSearch, PointRow, Ratios, Request, RequestStats, Response, ShapeRow,
+    SideTotals, SkippedRow, StatusReply,
+};
+use maestro::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+fn roundtrip_request(r: &Request) {
+    let line = r.encode().dump();
+    let parsed = Json::parse(&line).unwrap_or_else(|e| panic!("parse {line}: {e}"));
+    let decoded = Request::decode(&parsed).unwrap_or_else(|e| panic!("decode {line}: {e:?}"));
+    assert_eq!(decoded, *r, "request round trip via {line}");
+}
+
+fn roundtrip_response(r: &Response) {
+    let line = r.encode_line();
+    assert!(!line.contains('\n'), "one frame, one line: {line}");
+    let parsed = Json::parse(&line).unwrap_or_else(|e| panic!("parse {line}: {e}"));
+    let decoded = Response::decode(&parsed).unwrap_or_else(|e| panic!("decode {line}: {e:?}"));
+    assert_eq!(decoded, *r, "response round trip via {line}");
+}
+
+fn decode_request_err(line: &str) -> ApiError {
+    let parsed = Json::parse(line).unwrap_or_else(|e| panic!("parse {line}: {e}"));
+    Request::decode(&parsed).expect_err("must not decode")
+}
+
+fn sample_stats() -> RequestStats {
+    RequestStats { analyses: 3, disk_hits: 2, warm_hits: 8, designs_evaluated: 96, wall_seconds: 0.25 }
+}
+
+fn sample_point() -> PointRow {
+    PointRow {
+        dataflow: "kc-p@256".into(),
+        pes: 256,
+        bandwidth: 64,
+        l1: 512,
+        l2: 262144,
+        runtime: 123456.0,
+        energy_pj: 7.5e9,
+        area_mm2: 12.25,
+        power_mw: 420.5,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Goldens: exact wire bytes
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_analyze_request() {
+    let r = Request::Analyze(AnalyzeRequest {
+        id: Some(7),
+        model: "vgg16".into(),
+        dataflow: "adaptive".into(),
+        pes: 256,
+        bw: 16,
+        objective: Objective::Runtime,
+        tile_resolution: 6,
+        per_layer: false,
+    });
+    assert_eq!(
+        r.encode().dump(),
+        r#"{"v":1,"kind":"analyze","id":7,"model":"vgg16","dataflow":"adaptive","pes":256,"bw":16,"objective":"runtime","tile_resolution":6,"per_layer":false}"#
+    );
+}
+
+#[test]
+fn golden_map_request() {
+    let r = Request::Map(MapRequest {
+        id: Some(2),
+        model: "alexnet".into(),
+        pes: 64,
+        bw: 32,
+        objective: Objective::Edp,
+        tile_resolution: 4,
+        budget: 100,
+        budget_seconds: 1.5,
+    });
+    assert_eq!(
+        r.encode().dump(),
+        r#"{"v":1,"kind":"map","id":2,"model":"alexnet","pes":64,"bw":32,"objective":"edp","tile_resolution":4,"budget":100,"budget_seconds":1.5}"#
+    );
+}
+
+#[test]
+fn golden_dse_request_omits_empty_layer() {
+    let r = Request::Dse(DseRequest {
+        id: None,
+        family: "kc-p".into(),
+        model: "vgg16".into(),
+        layer: String::new(),
+        network: true,
+        resolution: 12,
+        bw_resolution: 12,
+        mapspace: false,
+        tile_resolution: 6,
+        strategy: "guided".into(),
+        seed: 9,
+        budget: 5000,
+        budget_seconds: 0.0,
+        threads: 2,
+        keep_points: false,
+    });
+    let line = r.encode().dump();
+    assert_eq!(
+        line,
+        r#"{"v":1,"kind":"dse","family":"kc-p","model":"vgg16","network":true,"resolution":12,"bw_resolution":12,"mapspace":false,"tile_resolution":6,"strategy":"guided","seed":9,"budget":5000,"budget_seconds":0,"threads":2,"keep_points":false}"#
+    );
+    assert!(!line.contains("\"layer\""), "empty layer must be omitted, not null: {line}");
+    assert!(!line.contains("\"id\""), "absent id must be omitted: {line}");
+}
+
+#[test]
+fn golden_control_requests() {
+    assert_eq!(Request::Status.encode().dump(), r#"{"v":1,"kind":"status"}"#);
+    assert_eq!(Request::Cancel { id: 42 }.encode().dump(), r#"{"v":1,"kind":"cancel","id":42}"#);
+    assert_eq!(Request::Shutdown.encode().dump(), r#"{"v":1,"kind":"shutdown"}"#);
+}
+
+#[test]
+fn golden_status_and_done_replies() {
+    let status = Response::Status(StatusReply {
+        entries: 12,
+        max_entries: 0,
+        hits: 34,
+        disk_hits: 5,
+        misses: 13,
+        evictions: 0,
+    });
+    assert_eq!(
+        status.encode_line(),
+        r#"{"v":1,"kind":"status","ok":true,"entries":12,"max_entries":0,"hits":34,"disk_hits":5,"misses":13,"evictions":0}"#
+    );
+    let done = Response::Done(DoneReply { id: None, what: "shutdown".into() });
+    assert_eq!(done.encode_line(), r#"{"v":1,"kind":"done","ok":true,"what":"shutdown"}"#);
+}
+
+#[test]
+fn golden_overloaded_error_reply() {
+    let r = Response::error(Some(3), ApiError::overloaded(500, 16));
+    assert_eq!(
+        r.encode_line(),
+        r#"{"v":1,"kind":"error","id":3,"ok":false,"error":{"code":"overloaded","message":"job queue full (16 request(s) queued); retry later","retry_after_ms":500,"diagnostics":[]}}"#
+    );
+}
+
+#[test]
+fn golden_bad_request_with_diagnostics() {
+    let err = ApiError::bad_request("unknown model 'vgg17'")
+        .with_diagnostics(vec!["known: vgg16, alexnet".into()]);
+    let r = Response::error(None, err);
+    assert_eq!(
+        r.encode_line(),
+        r#"{"v":1,"kind":"error","ok":false,"error":{"code":"bad_request","message":"unknown model 'vgg17'","diagnostics":["known: vgg16, alexnet"]}}"#
+    );
+}
+
+// ---------------------------------------------------------------------
+// Round trips: every variant, populated and minimal
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_request_variant_round_trips() {
+    roundtrip_request(&Request::Analyze(AnalyzeRequest {
+        id: Some(1),
+        model: "resnet50".into(),
+        dataflow: "mapped".into(),
+        pes: 1024,
+        bw: 128,
+        objective: Objective::Energy,
+        tile_resolution: 8,
+        per_layer: true,
+    }));
+    roundtrip_request(&Request::Map(MapRequest {
+        id: None,
+        model: "mobilenetv2".into(),
+        pes: 168,
+        bw: 24,
+        objective: Objective::Runtime,
+        tile_resolution: 6,
+        budget: 0,
+        budget_seconds: 2.5,
+    }));
+    roundtrip_request(&Request::Dse(DseRequest {
+        id: Some(11),
+        family: "yr-p".into(),
+        model: "unet".into(),
+        layer: "conv1".into(),
+        network: false,
+        resolution: 16,
+        bw_resolution: 8,
+        mapspace: true,
+        tile_resolution: 5,
+        strategy: "random".into(),
+        seed: 77,
+        budget: 123456,
+        budget_seconds: 0.5,
+        threads: 4,
+        keep_points: true,
+    }));
+    roundtrip_request(&Request::Status);
+    roundtrip_request(&Request::Cancel { id: 9 });
+    roundtrip_request(&Request::Shutdown);
+}
+
+#[test]
+fn analyze_reply_round_trips_full_and_minimal() {
+    roundtrip_response(&Response::Analyze(AnalyzeReply {
+        id: Some(4),
+        network: "vgg16".into(),
+        dataflow: "mapped".into(),
+        layers: 13,
+        shapes: 9,
+        runtime_cycles: 1.5e8,
+        energy_uj: 421.75,
+        gmacs: 15.35,
+        mapspace_candidates: Some(188),
+        per_layer: vec![LayerRow {
+            layer: "conv1_1".into(),
+            dataflow: "kc-p".into(),
+            runtime: 80000.0,
+            energy_uj: 3.5,
+            util: 0.875,
+        }],
+        skipped: vec![SkippedRow { layer: "fc6".into(), reason: "unmappable: K > PEs".into() }],
+        stats: sample_stats(),
+    }));
+    // Minimal: no id, no mapspace union, empty rows.
+    roundtrip_response(&Response::Analyze(AnalyzeReply {
+        id: None,
+        network: "alexnet".into(),
+        dataflow: "adaptive".into(),
+        layers: 5,
+        shapes: 5,
+        runtime_cycles: 0.0,
+        energy_uj: 0.0,
+        gmacs: 0.0,
+        mapspace_candidates: None,
+        per_layer: Vec::new(),
+        skipped: Vec::new(),
+        stats: RequestStats::default(),
+    }));
+}
+
+#[test]
+fn map_reply_round_trips_full_and_minimal() {
+    roundtrip_response(&Response::Map(MapReply {
+        id: Some(5),
+        network: "vgg16".into(),
+        objective: "runtime".into(),
+        per_shape: vec![ShapeRow {
+            representative: "conv3_1".into(),
+            members: 2,
+            mapping: "kc-p ct=4 kt=32".into(),
+            runtime: 65536.0,
+            energy_uj: 12.5,
+            util: 0.96875,
+        }],
+        skipped: vec![SkippedRow { layer: "fc8".into(), reason: "no candidate maps".into() }],
+        mapper: SideTotals { layers: 13, runtime: 1.0e7, energy_uj: 400.25 },
+        fixed: SideTotals { layers: 13, runtime: 1.5e7, energy_uj: 410.5 },
+        ratios: Some(Ratios { runtime: 1.5, energy: 1.0256, edp: 1.5384 }),
+        search: MapSearch {
+            shapes: 9,
+            combos: 1260,
+            candidates: 188,
+            evaluated: 1692,
+            budget_skipped: 0,
+            defaulted: 1,
+        },
+        stats: sample_stats(),
+    }));
+    // Minimal: no ratios (layer sets differ), nothing mapped.
+    roundtrip_response(&Response::Map(MapReply {
+        id: None,
+        network: "dcgan".into(),
+        objective: "edp".into(),
+        per_shape: Vec::new(),
+        skipped: Vec::new(),
+        mapper: SideTotals { layers: 0, runtime: 0.0, energy_uj: 0.0 },
+        fixed: SideTotals { layers: 4, runtime: 2.0e6, energy_uj: 55.0 },
+        ratios: None,
+        search: MapSearch::default(),
+        stats: RequestStats::default(),
+    }));
+}
+
+#[test]
+fn dse_reply_round_trips_full_and_minimal() {
+    roundtrip_response(&Response::Dse(DseReply {
+        id: Some(6),
+        family: "kc-p".into(),
+        workload: "vgg16/conv2".into(),
+        layers: 1,
+        shapes: 1,
+        gmacs: 1.85,
+        search: DseSearch {
+            strategy: "guided".into(),
+            total_designs: 2304,
+            evaluated: 640,
+            valid: 512,
+            pruned: 96,
+            unmappable: 32,
+            budget_skipped: 0,
+            waves: 5,
+        },
+        frontier: vec![sample_point(), PointRow { pes: 512, ..sample_point() }],
+        throughput_opt: Some(sample_point()),
+        energy_opt: Some(PointRow { energy_pj: 1.25e9, ..sample_point() }),
+        stats: sample_stats(),
+    }));
+    // Minimal: empty frontier, no optima.
+    roundtrip_response(&Response::Dse(DseReply {
+        id: None,
+        family: "yx-p".into(),
+        workload: "vgg16 (network)".into(),
+        layers: 13,
+        shapes: 9,
+        gmacs: 15.35,
+        search: DseSearch::default(),
+        frontier: Vec::new(),
+        throughput_opt: None,
+        energy_opt: None,
+        stats: RequestStats::default(),
+    }));
+}
+
+#[test]
+fn control_replies_round_trip() {
+    roundtrip_response(&Response::Status(StatusReply {
+        entries: 1,
+        max_entries: 4096,
+        hits: 2,
+        disk_hits: 1,
+        misses: 3,
+        evictions: 4,
+    }));
+    roundtrip_response(&Response::Done(DoneReply { id: Some(42), what: "cancel".into() }));
+}
+
+#[test]
+fn every_error_code_round_trips() {
+    for err in [
+        ApiError::bad_request("nope"),
+        ApiError::overloaded(250, 4),
+        ApiError::cancelled(),
+        ApiError::internal("executor dropped the request")
+            .with_diagnostics(vec!["cause 1".into(), "cause 2".into()]),
+    ] {
+        roundtrip_response(&Response::error(Some(13), err.clone()));
+        roundtrip_response(&Response::error(None, err));
+    }
+}
+
+#[test]
+fn strings_with_escapes_survive_the_wire() {
+    // Layer names and diagnostics can carry quotes/newlines (anyhow
+    // context chains do); the frame must stay one line and round-trip.
+    let err = ApiError::bad_request("bad \"flag\"\nsecond line\ttabbed")
+        .with_diagnostics(vec!["path\\with\\backslashes".into()]);
+    roundtrip_response(&Response::error(None, err));
+}
+
+// ---------------------------------------------------------------------
+// Malformed frames: structured errors, never panics
+// ---------------------------------------------------------------------
+
+#[test]
+fn version_mismatch_is_rejected() {
+    let e = decode_request_err(r#"{"v":2,"kind":"status"}"#);
+    assert_eq!(e.code, "bad_request");
+    assert!(e.message.contains("unsupported wire version 2"), "{}", e.message);
+
+    let e = decode_request_err(r#"{"kind":"status"}"#);
+    assert!(e.message.contains("missing wire version"), "{}", e.message);
+}
+
+#[test]
+fn missing_and_unknown_kinds_are_rejected() {
+    let e = decode_request_err(r#"{"v":1}"#);
+    assert!(e.message.contains("missing 'kind'"), "{}", e.message);
+
+    let e = decode_request_err(r#"{"v":1,"kind":"frobnicate"}"#);
+    assert!(e.message.contains("unknown request kind 'frobnicate'"), "{}", e.message);
+    assert!(e.message.contains("analyze | map | dse | status | cancel | shutdown"), "{}", e.message);
+}
+
+#[test]
+fn field_type_errors_are_structured() {
+    // analyze requires a model.
+    let e = decode_request_err(r#"{"v":1,"kind":"analyze"}"#);
+    assert!(e.message.contains("'model'"), "{}", e.message);
+    // ids must be non-negative integers.
+    let e = decode_request_err(r#"{"v":1,"kind":"analyze","id":"seven","model":"vgg16"}"#);
+    assert!(e.message.contains("'id'"), "{}", e.message);
+    let e = decode_request_err(r#"{"v":1,"kind":"dse","seed":-3}"#);
+    assert!(e.message.contains("'seed'"), "{}", e.message);
+    // cancel without a target.
+    let e = decode_request_err(r#"{"v":1,"kind":"cancel"}"#);
+    assert!(e.message.contains("cancel: missing 'id'"), "{}", e.message);
+}
+
+#[test]
+fn unknown_fields_are_ignored_for_forward_compat() {
+    let line = r#"{"v":1,"kind":"status","future_field":{"deep":[1,2,3]}}"#;
+    let parsed = Json::parse(line).unwrap();
+    assert_eq!(Request::decode(&parsed).unwrap(), Request::Status);
+}
+
+#[test]
+fn truncated_frames_fail_parse_not_decode() {
+    for bad in [r#"{"v":1,"kind":"analyze""#, "", "not json at all", "{]"] {
+        assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+    }
+}
