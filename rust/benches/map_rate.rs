@@ -1,0 +1,122 @@
+//! Mapper rate — the layer-wise mapper's candidates/s, serial vs
+//! pooled, on a zoo model (PR 7's tentpole measurement, the mapspace
+//! counterpart of `dse_rate`'s sweep scaling).
+//!
+//! CI smoke mode: `MAP_SMOKE=1 cargo bench --bench map_rate` maps the
+//! VGG16 conv stack once with `threads = 1` (the serial reference) and
+//! once with `threads = 4`, asserts the two outcomes are bit-identical
+//! and the pooled run no slower than the serial one, and writes both
+//! rates to `BENCH_map.json` (override with `MAP_SMOKE_OUT`) — uploaded
+//! as a CI build artifact next to `BENCH_dse_rate.json`.
+
+use maestro::hw::config::HwConfig;
+use maestro::mapspace::{Mapper, MapperConfig, MappingOutcome};
+use maestro::model::network::Network;
+use maestro::model::zoo::vgg16;
+use maestro::util::benchkit::section;
+
+/// One cold mapper run at the given thread count.
+fn run(net: &Network, hw: &HwConfig, tile_resolution: usize, threads: usize) -> MappingOutcome {
+    let cfg = MapperConfig { tile_resolution, threads, ..MapperConfig::default() };
+    Mapper::new().map_network(net, hw, &cfg).expect("mapper must map the bench network")
+}
+
+fn rate(out: &MappingOutcome) -> f64 {
+    out.stats.evaluated as f64 / out.stats.seconds.max(1e-9)
+}
+
+/// The determinism contract, checked where it is measured: winners and
+/// network bits must not move with the thread count.
+fn assert_bit_identical(got: &MappingOutcome, want: &MappingOutcome, ctx: &str) -> bool {
+    assert_eq!(got.network.runtime.to_bits(), want.network.runtime.to_bits(), "{ctx}: runtime");
+    assert_eq!(
+        got.network.energy.total().to_bits(),
+        want.network.energy.total().to_bits(),
+        "{ctx}: energy"
+    );
+    assert_eq!(got.per_shape.len(), want.per_shape.len(), "{ctx}: shape count");
+    for (g, w) in got.per_shape.iter().zip(&want.per_shape) {
+        assert_eq!(g.dataflow, w.dataflow, "{ctx}: winner for {}", w.representative);
+    }
+    assert_eq!(got.stats.evaluated, want.stats.evaluated, "{ctx}: evaluated");
+    assert_eq!(got.stats.budget_skipped, want.stats.budget_skipped, "{ctx}: budget_skipped");
+    true
+}
+
+fn run_json(threads: usize, out: &MappingOutcome) -> String {
+    format!(
+        "{{\"threads\": {threads}, \"candidates\": {}, \"evaluated\": {}, \
+         \"seconds\": {:.6}, \"candidates_per_s\": {:.1}}}",
+        out.stats.candidates,
+        out.stats.evaluated,
+        out.stats.seconds,
+        rate(out),
+    )
+}
+
+/// CI smoke: serial vs 4-thread cold maps, bit-identity + no-slower
+/// assertions, JSON record.
+fn run_smoke(net: &Network, hw: &HwConfig) {
+    // Heavier than the mapper's default resolution so per-shape searches
+    // dominate setup and the pool has real work to amortize its cost.
+    let tile_resolution = 8;
+    section("map bench smoke (CI): serial vs pooled mapper on the VGG16 conv stack");
+    let serial = run(net, hw, tile_resolution, 1);
+    let threaded = run(net, hw, tile_resolution, 4);
+    println!("threads 1: {}", serial.stats.summary());
+    println!("threads 4: {}", threaded.stats.summary());
+    let bit_identical = assert_bit_identical(&threaded, &serial, "threads=4 vs serial");
+    let speedup = rate(&threaded) / rate(&serial).max(1e-9);
+    println!("speedup x{speedup:.2} (candidates/s)");
+    assert!(
+        rate(&threaded) >= rate(&serial),
+        "the pooled mapper must be no slower than serial (serial {:.1}/s, threaded {:.1}/s)",
+        rate(&serial),
+        rate(&threaded),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"map_rate\",\n  \"workload\": \"{}\",\n  \
+         \"workload_layers\": {},\n  \"workload_unique_shapes\": {},\n  \
+         \"tile_resolution\": {tile_resolution},\n  \"runs\": [\n    {},\n    {}\n  ],\n  \
+         \"speedup\": {speedup:.4},\n  \"bit_identical\": {bit_identical}\n}}\n",
+        net.name,
+        net.layers.len(),
+        net.unique_shapes().len(),
+        run_json(1, &serial),
+        run_json(4, &threaded),
+    );
+    let path = std::env::var("MAP_SMOKE_OUT").unwrap_or_else(|_| "BENCH_map.json".into());
+    std::fs::write(&path, json).expect("write map bench json");
+    println!("wrote {path}");
+}
+
+fn main() {
+    let net = vgg16::conv_only();
+    let hw = HwConfig::fig10_default();
+    let smoke = std::env::var("MAP_SMOKE")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "TRUE"))
+        .unwrap_or(false);
+    if smoke {
+        run_smoke(&net, &hw);
+        return;
+    }
+
+    section("mapper rate: thread scaling (VGG16 conv stack, cold store)");
+    let tile_resolution = 8;
+    let mut reference: Option<MappingOutcome> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let out = run(&net, &hw, tile_resolution, threads);
+        println!(
+            "threads {threads}: {} -> {:.1} candidates/s",
+            out.stats.summary(),
+            rate(&out)
+        );
+        if let Some(r) = &reference {
+            assert_bit_identical(&out, r, "thread scaling");
+            println!("  speedup x{:.2}", rate(&out) / rate(r).max(1e-9));
+        } else {
+            reference = Some(out);
+        }
+    }
+}

@@ -22,14 +22,19 @@
 //! zoo networks over CLI-scale spaces stay modest.
 //!
 //! For mapspace-scale sweeps, [`SharedStore::with_max_entries`] bounds
-//! the store with **coarse per-shard FIFO eviction** (the CLI's
-//! `--cache-cap`): each shard keeps its own insertion-order queue and
-//! drops its oldest entries when it fills. Coarse on purpose — the
-//! bound is enforced per shard (so the global cap is approximate, up
-//! to the shard rounding), eviction order is insertion order (not
-//! recency), and an evicted entry that was never flushed is simply
-//! gone (a later `flush` will not write it — combine `--cache-cap`
-//! with `--cache-file` only when losing cold entries from the file is
+//! the store with **coarse per-shard second-chance (clock) eviction**
+//! (the CLI's `--cache-cap`): each shard keeps its own insertion-order
+//! queue, every hit sets the entry's referenced bit, and when the
+//! shard fills the rotation pops queue-front entries — a referenced
+//! entry has its bit cleared and goes to the back (its second chance),
+//! an unreferenced one is evicted. Hot entries therefore survive cap
+//! pressure that drops cold ones, at one atomic bit per hit — no
+//! recency list to maintain under the read lock. Coarse on purpose —
+//! the bound is enforced per shard (so the global cap is approximate,
+//! up to the shard rounding), recency is one bit (not an exact LRU),
+//! and an evicted entry that was never flushed is simply gone (a later
+//! `flush` will not write it — combine `--cache-cap` with
+//! `--cache-file` only when losing cold entries from the file is
 //! acceptable). Results are unaffected either way: cached values are
 //! pure functions of their keys, so an eviction only turns a future
 //! hit into a recompute (the determinism tests in
@@ -74,7 +79,7 @@ pub struct CacheHit {
     pub from_disk: bool,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 struct Slot {
     value: CacheValue,
     /// Entry came in via [`SharedStore::load`] (vs computed here).
@@ -82,6 +87,16 @@ struct Slot {
     /// Entry is already on disk (loaded, or flushed earlier) — flush
     /// skips it.
     persisted: bool,
+    /// Second-chance bit: set on every hit (atomically, so the read
+    /// lock suffices), consumed by the eviction rotation in
+    /// [`SharedStore::insert_slot`]. Only meaningful on capped stores.
+    referenced: std::sync::atomic::AtomicBool,
+}
+
+impl Slot {
+    fn new(value: CacheValue, from_disk: bool, persisted: bool) -> Slot {
+        Slot { value, from_disk, persisted, referenced: std::sync::atomic::AtomicBool::new(false) }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -118,7 +133,7 @@ pub struct FlushReport {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StoreMetrics {
     pub entries: u64,
-    /// FIFO cap (0 = unbounded).
+    /// Second-chance capacity cap (0 = unbounded).
     pub max_entries: u64,
     pub hits: u64,
     pub disk_hits: u64,
@@ -126,13 +141,14 @@ pub struct StoreMetrics {
     pub evictions: u64,
 }
 
-/// One lock shard: the key map plus (for capped stores) the FIFO
-/// insertion order backing eviction.
+/// One lock shard: the key map plus (for capped stores) the clock
+/// queue backing second-chance eviction.
 #[derive(Debug, Default)]
 struct Shard {
     map: HashMap<CacheKey, Slot>,
-    /// Insertion order; maintained only when the store is capped. A key
-    /// appears at most once (inserts are first-wins and eviction
+    /// The clock rotation order (insertion order until hits rotate
+    /// entries to the back); maintained only when the store is capped.
+    /// A key appears at most once (inserts are first-wins and eviction
     /// removes the map entry together with its queue slot).
     order: std::collections::VecDeque<CacheKey>,
 }
@@ -182,10 +198,10 @@ impl SharedStore {
     }
 
     /// A store bounded to roughly `max_entries` with coarse per-shard
-    /// FIFO eviction (see the module docs for exactly how coarse).
-    /// Small caps get fewer shards so the bound stays meaningful; the
-    /// effective global bound is `shard count x per-shard cap`, within
-    /// rounding of `max_entries`.
+    /// second-chance (clock) eviction (see the module docs for exactly
+    /// how coarse). Small caps get fewer shards so the bound stays
+    /// meaningful; the effective global bound is `shard count x
+    /// per-shard cap`, within rounding of `max_entries`.
     pub fn with_max_entries(max_entries: usize) -> SharedStore {
         let max_entries = max_entries.max(1);
         // Largest power of two <= min(16, max_entries).
@@ -214,14 +230,31 @@ impl SharedStore {
         self.shard_cap * self.shards.len()
     }
 
-    /// Insert a slot into a locked shard, evicting FIFO first when the
-    /// shard is at its cap. Callers guarantee the key is vacant.
+    /// Insert a slot into a locked shard, running the second-chance
+    /// rotation first when the shard is at its cap: a queue-front entry
+    /// whose referenced bit is set gets the bit cleared and moves to
+    /// the back; an unreferenced one is evicted. The rotation
+    /// terminates — each bit is cleared at most once per pass, so after
+    /// at most one full lap an unreferenced entry surfaces. Callers
+    /// guarantee the key is vacant.
     fn insert_slot(&self, shard: &mut Shard, key: CacheKey, slot: Slot) {
         if self.shard_cap > 0 {
             while shard.map.len() >= self.shard_cap {
-                let Some(oldest) = shard.order.pop_front() else { break };
-                shard.map.remove(&oldest);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                let Some(front) = shard.order.pop_front() else { break };
+                match shard.map.get(&front) {
+                    Some(s) if s.referenced.swap(false, Ordering::Relaxed) => {
+                        // Hit since it last reached the front: spared,
+                        // rotated to the back.
+                        shard.order.push_back(front);
+                    }
+                    Some(_) => {
+                        shard.map.remove(&front);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Queue entry with no map entry cannot happen (they
+                    // are maintained together), but tolerate it.
+                    None => {}
+                }
             }
             shard.order.push_back(key);
         }
@@ -248,6 +281,11 @@ impl SharedStore {
                 if slot.from_disk {
                     self.disk_hits.fetch_add(1, Ordering::Relaxed);
                 }
+                if self.shard_cap > 0 {
+                    // Second chance: mark the entry hot so the next
+                    // eviction rotation spares it once.
+                    slot.referenced.store(true, Ordering::Relaxed);
+                }
                 Some(CacheHit { value: slot.value.clone(), from_disk: slot.from_disk })
             }
             None => {
@@ -267,7 +305,7 @@ impl SharedStore {
         if shard.map.contains_key(&key) {
             return;
         }
-        self.insert_slot(&mut shard, key, Slot { value, from_disk: false, persisted: false });
+        self.insert_slot(&mut shard, key, Slot::new(value, false, false));
     }
 
     /// Entries currently held.
@@ -293,7 +331,8 @@ impl SharedStore {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Entries dropped by the FIFO cap (always 0 for unbounded stores).
+    /// Entries dropped by the second-chance cap (always 0 for
+    /// unbounded stores).
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
     }
@@ -359,9 +398,11 @@ impl SharedStore {
                     slot.persisted = true;
                 }
             } else {
-                // Loads respect the FIFO cap too: a capped store keeps
-                // the newest `max_entries` records of the file.
-                self.insert_slot(&mut shard, key, Slot { value, from_disk: true, persisted: true });
+                // Loads respect the capacity cap too: a capped store
+                // keeps roughly the newest `max_entries` records of the
+                // file (entries hit since loading get their second
+                // chance like any other).
+                self.insert_slot(&mut shard, key, Slot::new(value, true, true));
                 loaded += 1;
             }
         }
@@ -484,10 +525,12 @@ mod tests {
     }
 
     #[test]
-    fn capped_store_evicts_fifo_and_stays_bounded() {
+    fn capped_store_evicts_cold_entries_and_stays_bounded() {
         let store = SharedStore::with_max_entries(8);
         assert_eq!(store.max_entries(), 8);
         let keys = distinct_keys(50);
+        // A pure insert workload: nothing is ever hit, so no entry
+        // earns a second chance and every overflow evicts exactly one.
         for (i, k) in keys.iter().enumerate() {
             store.insert(*k, failure(&i.to_string()));
         }
@@ -498,6 +541,28 @@ mod tests {
         store.insert(*evicted, failure("again"));
         assert_eq!(store.get(evicted).unwrap().value, failure("again"));
         assert!(store.len() <= store.max_entries());
+    }
+
+    #[test]
+    fn second_chance_keeps_a_rehit_entry_and_evicts_a_cold_one() {
+        // One shard, cap 4, so the rotation order is fully observable.
+        let store = SharedStore::build(1, 4);
+        let keys = distinct_keys(5);
+        for (i, k) in keys[..4].iter().enumerate() {
+            store.insert(*k, failure(&i.to_string()));
+        }
+        // Re-hit the oldest entry: its referenced bit spares it from
+        // the next rotation.
+        assert!(store.get(&keys[0]).is_some());
+        // Cap-pressure insert: the rotation pops keys[0] (referenced —
+        // bit cleared, rotated to the back), then keys[1] (cold —
+        // evicted).
+        store.insert(keys[4], failure("4"));
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.evictions(), 1);
+        assert!(store.get(&keys[0]).is_some(), "the re-hit entry survived cap pressure");
+        assert!(store.get(&keys[1]).is_none(), "the oldest cold entry was the one evicted");
+        assert!(store.get(&keys[4]).is_some(), "the new entry landed");
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //! integration test cross-checks them.
 //!
 //! [`sweep`] splits the (variant, PEs) outer product into contiguous
-//! shards executed by a scoped worker pool (the coordinator's
-//! bounded-queue idiom) that stays alive across strategy waves — a
-//! guided or mapper-driven run issues many small waves, and per-wave
-//! pool spawning made thread churn scale with the wave count. Each
+//! shards executed by a scoped worker pool
+//! ([`crate::util::pool::WavePool`], extracted from this engine) that
+//! stays alive across strategy waves — a guided or mapper-driven run
+//! issues many small waves, and per-wave pool spawning made thread
+//! churn scale with the wave count. Each
 //! shard folds its survivors into a streaming Pareto frontier +
 //! counters, and shards merge deterministically in shard order — see
 //! [`crate::dse`] module docs for the architecture.
@@ -38,7 +39,7 @@ use crate::ir::dataflow::{Dataflow, ResolvedDataflow};
 use crate::model::layer::{Layer, ShapeKey};
 use crate::model::network::Network;
 use crate::model::tensor::{couplings, TensorKind, ALL_TENSORS};
-use crate::util::queue::JobQueue;
+use crate::util::pool::WavePool;
 
 /// Number of features per case row (the AOT artifact's row width).
 pub const CASE_FEATURES: usize = 8;
@@ -450,8 +451,8 @@ pub struct SweepStats {
     pub cache_disk_hits: u64,
     /// Analyzer layer-cache misses (= full layer analyses run).
     pub cache_misses: u64,
-    /// Entries the shared store's FIFO cap dropped during this sweep
-    /// (0 without [`SweepConfig::cache`] or for unbounded stores).
+    /// Entries the shared store's second-chance cap dropped during this
+    /// sweep (0 without [`SweepConfig::cache`] or for unbounded stores).
     /// Like the hit/miss split, diagnostic only — excluded from the
     /// determinism contract.
     pub evictions: u64,
@@ -647,9 +648,9 @@ fn sweep_shard(
 }
 
 /// One shard of work for the persistent wave pool: the wave's batch
-/// list (shared), the shard's contiguous batch range, and the result
-/// slot index (= shard index within the wave).
-type ShardJob = (Arc<Vec<PairBatch>>, std::ops::Range<usize>, usize);
+/// list (shared) and the shard's contiguous batch range. The result
+/// slot (= shard index within the wave) is managed by [`WavePool`].
+type ShardJob = (Arc<Vec<PairBatch>>, std::ops::Range<usize>);
 
 /// Mutable sweep state threaded through the wave loop.
 struct SweepState {
@@ -726,8 +727,9 @@ fn sweep_waves(
 ///
 /// The strategy yields candidate **waves** ([`PairBatch`] lists); each
 /// wave is truncated to the remaining [`SearchBudget`], split into
-/// contiguous shards pulled from a [`JobQueue`] by `config.threads`
-/// workers, pruned per §5.2 inside each shard, and folded into a
+/// contiguous shards executed by a persistent
+/// [`crate::util::pool::WavePool`] of `config.threads` workers, pruned
+/// per §5.2 inside each shard, and folded into a
 /// streaming Pareto frontier + [`SweepStats`] counters, so memory
 /// stays O(frontier) unless `keep_all_points` asks for the full
 /// scatter. Shards merge in shard-index order, which replays the
@@ -791,98 +793,31 @@ pub fn sweep(
                 .collect()
         });
     } else {
-        // One scoped worker pool for the *whole* sweep: feedback-driven
-        // strategies run many small waves, and spawning a pool per wave
-        // made thread churn scale with the wave count. The pool's job
-        // queue stays open across waves; each wave enqueues its shards
-        // (the same contiguous partition as the serial path) and
-        // collects exactly its shard count of results, so per-wave
-        // barrier semantics — and with them the shard-index merge order
-        // and the bit-determinism contract — are unchanged.
+        // One persistent [`WavePool`] for the *whole* sweep (the pool
+        // was born here and extracted to `util::pool` once the mapper
+        // needed it too): feedback-driven strategies run many small
+        // waves, and spawning a pool per wave made thread churn scale
+        // with the wave count. Each wave enqueues its shards — the same
+        // contiguous partition as the serial path — and the pool
+        // returns them in shard-index order, so the merge order, and
+        // with it the bit-determinism contract, is unchanged.
         std::thread::scope(|scope| {
-            let (job_tx, job_queue) = JobQueue::<ShardJob>::bounded(threads * 2);
-            let (res_tx, res_rx) = std::sync::mpsc::channel::<(usize, ShardOutcome)>();
-            for _ in 0..threads {
-                let queue = job_queue.clone();
-                let res_tx = res_tx.clone();
-                scope.spawn(move || {
-                    while let Some((wave, range, slot)) = queue.pop() {
-                        // Catch panics so the wave loop (blocked on this
-                        // shard's result) can finish the wave and the
-                        // scope join re-raises, instead of hanging.
-                        let shard = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            sweep_shard(
-                                net,
-                                space,
-                                noc_hops,
-                                &wave[range],
-                                keep_all_points,
-                                collect_feedback,
-                                cache,
-                            )
-                        }));
-                        match shard {
-                            Ok(shard) => {
-                                if res_tx.send((slot, shard)).is_err() {
-                                    break;
-                                }
-                            }
-                            Err(panic) => {
-                                let _ = res_tx.send((slot, ShardOutcome::default()));
-                                std::panic::resume_unwind(panic);
-                            }
-                        }
-                    }
-                });
-            }
-            drop(res_tx);
+            let pool = WavePool::spawn(scope, threads, |(wave, range): ShardJob| {
+                sweep_shard(net, space, noc_hops, &wave[range], keep_all_points, collect_feedback, cache)
+            });
             sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
                 let wave = Arc::new(wave);
                 let n = wave.len();
-                let n_shards = n.div_ceil(shard_size);
-                let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
-                slots.resize_with(n_shards, || None);
-                // A dead pool (every worker panicked) must never hang
-                // the wave loop: the result channel reports it (all
-                // res_tx clones dropped -> recv errors), so results are
-                // drained with `recv` while jobs go out with `try_send`
-                // — a full queue yields to draining instead of blocking
-                // on workers that may no longer exist.
-                let mut recv_one = |slots: &mut Vec<Option<ShardOutcome>>| {
-                    let (slot, shard) = res_rx
-                        .recv()
-                        .expect("wave pool died (worker panic) before finishing the wave");
-                    slots[slot] = Some(shard);
-                };
-                let mut received = 0usize;
-                for slot in 0..n_shards {
-                    let start = slot * shard_size;
-                    let end = (start + shard_size).min(n);
-                    let mut job = (Arc::clone(&wave), start..end, slot);
-                    loop {
-                        use std::sync::mpsc::TrySendError;
-                        match job_tx.try_send(job) {
-                            Ok(()) => break,
-                            Err(TrySendError::Full(back)) => {
-                                job = back;
-                                recv_one(&mut slots);
-                                received += 1;
-                            }
-                            // The scope-local `job_queue` keeps the
-                            // receiver alive for the whole sweep.
-                            Err(TrySendError::Disconnected(_)) => {
-                                unreachable!("job queue receiver outlives the sweep loop")
-                            }
-                        }
-                    }
-                }
-                for _ in received..n_shards {
-                    recv_one(&mut slots);
-                }
-                slots.into_iter().map(|s| s.expect("every shard slot filled")).collect()
+                let jobs: Vec<ShardJob> = (0..n.div_ceil(shard_size))
+                    .map(|shard| {
+                        let start = shard * shard_size;
+                        (Arc::clone(&wave), start..(start + shard_size).min(n))
+                    })
+                    .collect();
+                pool.run_wave(jobs)
             });
-            // Close the queue so the pool drains and the scope joins.
-            drop(job_tx);
+            // Dropping the pool closes its queue, so the workers drain
+            // and the scope joins.
         });
     }
     state.stats.evictions = cache.map(|s| s.evictions().saturating_sub(evictions0)).unwrap_or(0);

@@ -104,7 +104,7 @@ fn flags() -> Vec<FlagSpec> {
 }
 
 /// Load `--cache-file` (when given) into a fresh [`SharedStore`],
-/// bounded by `--cache-cap` (coarse FIFO eviction) when set. Returns
+/// bounded by `--cache-cap` (second-chance eviction) when set. Returns
 /// the store and the path to flush back to. Corrupt or stale files
 /// warn and start cold — never fail the run. `quiet` (--json) keeps
 /// stdout to the single response frame.

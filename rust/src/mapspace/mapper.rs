@@ -18,13 +18,27 @@
 //! candidates across shapes, PE points, and earlier sweeps replay
 //! instead of re-analyzing.
 //!
-//! Determinism: the mapper is a pure serial fold over
-//! `Network::unique_shapes` x the deterministic enumeration, so its
-//! outcome is bit-identical across runs, threads, and pre-warmed cache
-//! states (values are pure functions of keys) as long as no wall-clock
-//! budget is set. Pinned in `rust/tests/mapspace.rs`.
+//! Determinism: admission — enumeration, the defaults-first reorder,
+//! `max_designs` prefix cuts, and the wall/cancel fallback decision —
+//! always runs serially on the coordinating thread, in
+//! `Network::unique_shapes` order. Evaluation either folds serially
+//! (`threads` = 1, the reference path) or fans each shape's candidate
+//! list out in contiguous chunks over a persistent
+//! [`crate::util::pool::WavePool`] — the sweep engine's pool — whose
+//! results merge in chunk order under the same strict-improvement
+//! rule, reproducing the serial fold's earliest-minimum winner
+//! exactly. Every pool worker fronts the mapper's own
+//! [`SharedStore`], so cross-chunk and cross-shape replays keep
+//! working. The outcome — winners, per-shape stats, the assembled
+//! network, and every budget counter — is therefore bit-identical
+//! across runs, thread counts, and pre-warmed cache states (values are
+//! pure functions of keys) as long as no wall-clock budget is set;
+//! only the cache hit/miss split and the wall clock may move with the
+//! partition, exactly like the sweep's (both are excluded from the
+//! contract, see [`MapperStats`]). Pinned in `rust/tests/mapspace.rs`.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
@@ -35,8 +49,9 @@ use crate::engine::analysis::{
 };
 use crate::hw::config::HwConfig;
 use crate::ir::dataflow::Dataflow;
-use crate::model::layer::ShapeKey;
-use crate::model::network::Network;
+use crate::model::layer::{Layer, ShapeKey};
+use crate::model::network::{Network, ShapeGroup};
+use crate::util::pool::WavePool;
 
 use super::template::StyleTemplate;
 use super::tiling::{enumerate_all, enumerate_defaults};
@@ -62,6 +77,13 @@ pub struct MapperConfig {
     /// graceful fallback as `budget.max_seconds`, so every layer still
     /// receives a mapping. Scoped per request by the `serve` daemon.
     pub cancel: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
+    /// Worker threads for candidate evaluation. `1` (the default) is
+    /// the serial reference path; `0` means one per available core;
+    /// anything else sizes the pool explicitly. Winners, network
+    /// stats, and every budget counter are bit-identical for any value
+    /// (pinned in `rust/tests/mapspace.rs`) — only the cache hit/miss
+    /// split and the wall clock may move.
+    pub threads: usize,
 }
 
 impl Default for MapperConfig {
@@ -72,6 +94,19 @@ impl Default for MapperConfig {
             objective: Objective::Runtime,
             budget: SearchBudget::default(),
             cancel: None,
+            threads: 1,
+        }
+    }
+}
+
+impl MapperConfig {
+    /// Resolve `threads` = 0 to the machine's parallelism (same rule as
+    /// `SweepConfig::effective_threads`).
+    fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         }
     }
 }
@@ -108,13 +143,18 @@ pub struct MapperStats {
     /// wall-clock budget expired.
     pub shapes_defaulted: u64,
     /// Analyzer cache hits/misses attributable to this mapper run.
+    /// Diagnostic only: under a pooled run the hit/miss split follows
+    /// the chunk partition and store warmth (racing chunks can both
+    /// miss one key before either publishes it), exactly like
+    /// `SweepStats` — the counters are excluded from the determinism
+    /// contract.
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// The subset of `cache_hits` served by entries a shared store
     /// loaded from a cache file (warm starts; 0 for private stores).
     pub cache_disk_hits: u64,
-    /// Entries the backing store's FIFO cap dropped during this run
-    /// (0 for unbounded stores).
+    /// Entries the backing store's capacity cap dropped during this
+    /// run (0 for unbounded stores).
     pub evictions: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
@@ -155,6 +195,95 @@ pub struct MappingOutcome {
     /// The winner per unique shape, in first-occurrence order.
     pub per_shape: Vec<ShapeMapping>,
     pub stats: MapperStats,
+}
+
+/// One chunk of a shape's candidate list for the wave pool: the
+/// shape's layer, the admitted candidate list (shared), and this
+/// chunk's contiguous range within it.
+type ChunkJob<'a> = (&'a Layer, Arc<Vec<Dataflow>>, std::ops::Range<usize>);
+
+/// One candidate-chunk search result — the pooled path's job output;
+/// the serial path produces exactly one per shape (the whole list as
+/// one chunk).
+#[derive(Debug, Default)]
+struct ChunkSearch {
+    /// The chunk-local strict-improvement winner.
+    best: Option<(LayerStats, Dataflow)>,
+    /// The last failure diagnostic in candidate order.
+    last_err: Option<String>,
+    /// Candidates evaluated (= chunk length).
+    evaluated: u64,
+    /// The evaluating analyzer's cache counters (pooled path only; the
+    /// serial path reads the mapper's own analyzer deltas instead).
+    cache_hits: u64,
+    cache_disk_hits: u64,
+    cache_misses: u64,
+}
+
+/// Evaluate a candidate slice in order through `analyzer`, tracking the
+/// strict-improvement winner (ties keep the earlier candidate, so the
+/// winner is order-stable) and the last failure diagnostic. This is the
+/// serial reference loop, shared verbatim by both execution paths: the
+/// serial fold runs it over the whole list with the mapper's own
+/// analyzer, each pool worker runs it over one contiguous chunk with a
+/// per-chunk analyzer fronting the shared store. Chunks merged in chunk
+/// order under the same rule ([`merge_chunks`]) reproduce the serial
+/// winner bit for bit.
+fn search_candidates(
+    analyzer: &mut Analyzer,
+    layer: &Layer,
+    candidates: &[Dataflow],
+    hw: &HwConfig,
+    objective: Objective,
+) -> ChunkSearch {
+    let mut out = ChunkSearch::default();
+    for df in candidates {
+        out.evaluated += 1;
+        match analyzer.analyze(layer, df, hw) {
+            Ok(s) => {
+                let better = match &out.best {
+                    None => true,
+                    Some((b, _)) => objective_score(&s, objective) < objective_score(b, objective),
+                };
+                if better {
+                    out.best = Some((s, df.clone()));
+                }
+            }
+            // Candidates resolve by construction, but the full analysis
+            // can still reject (layer validation, no MACs); record the
+            // diagnostic.
+            Err(e) => out.last_err = Some(format!("{e:#}")),
+        }
+    }
+    out
+}
+
+/// Fold chunk results — **in chunk order** — back into one
+/// [`ChunkSearch`], applying the same strict-improvement rule as the
+/// inner loop so the earliest candidate achieving the minimum objective
+/// wins, exactly as in the serial fold. `last_err` keeps the last
+/// diagnostic in candidate order for the same reason.
+fn merge_chunks(chunks: Vec<ChunkSearch>, objective: Objective) -> ChunkSearch {
+    let mut merged = ChunkSearch::default();
+    for chunk in chunks {
+        merged.evaluated += chunk.evaluated;
+        merged.cache_hits += chunk.cache_hits;
+        merged.cache_disk_hits += chunk.cache_disk_hits;
+        merged.cache_misses += chunk.cache_misses;
+        if let Some((s, df)) = chunk.best {
+            let better = match &merged.best {
+                None => true,
+                Some((b, _)) => objective_score(&s, objective) < objective_score(b, objective),
+            };
+            if better {
+                merged.best = Some((s, df));
+            }
+        }
+        if chunk.last_err.is_some() {
+            merged.last_err = chunk.last_err;
+        }
+    }
+    merged
 }
 
 /// The layer-wise mapper. Owns an [`Analyzer`] so repeated shapes —
@@ -207,7 +336,14 @@ impl Mapper {
             .map(|t| t.instantiate_defaults().fingerprint())
             .collect();
 
-        for group in net.unique_shapes() {
+        // Per-shape candidate admission — everything *before*
+        // evaluation, always on the coordinating thread in both paths:
+        // the wall/cancel fallback decision, enumeration, the
+        // defaults-first reorder, and the `max_designs` prefix cut.
+        // Keeping admission serial keeps `shapes_defaulted`, `combos`,
+        // `candidates`, and `budget_skipped` bit-identical for any
+        // thread count.
+        let mut admit = |group: &ShapeGroup<'_>, stats: &mut MapperStats| -> Vec<Dataflow> {
             stats.shapes += 1;
             let cancelled = cfg
                 .cancel
@@ -236,33 +372,14 @@ impl Mapper {
                 stats.budget_skipped += candidates.len() as u64 - cfg.budget.max_designs;
                 candidates.truncate(cfg.budget.max_designs as usize);
             }
-            let mut best: Option<(LayerStats, Dataflow)> = None;
-            let mut last_err: Option<String> = None;
-            let mut evaluated = 0u64;
-            for df in &candidates {
-                evaluated += 1;
-                match self.analyzer.analyze(group.layer, df, hw) {
-                    Ok(s) => {
-                        // Strict improvement only: ties keep the earlier
-                        // candidate, so the winner is order-stable.
-                        let better = match &best {
-                            None => true,
-                            Some((b, _)) => {
-                                objective_score(&s, cfg.objective) < objective_score(b, cfg.objective)
-                            }
-                        };
-                        if better {
-                            best = Some((s, df.clone()));
-                        }
-                    }
-                    // Candidates resolve by construction, but the full
-                    // analysis can still reject (layer validation, no
-                    // MACs); record the diagnostic.
-                    Err(e) => last_err = Some(format!("{e:#}")),
-                }
-            }
-            stats.evaluated += evaluated;
-            match best {
+            candidates
+        };
+
+        // Record one searched shape's outcome (shared by both paths,
+        // in shape order).
+        let mut record = |group: &ShapeGroup<'_>, search: ChunkSearch, stats: &mut MapperStats| {
+            stats.evaluated += search.evaluated;
+            match search.best {
                 Some((s, df)) => {
                     winners.insert(group.key, df.clone());
                     per_shape.push(ShapeMapping {
@@ -270,16 +387,73 @@ impl Mapper {
                         members: group.count(),
                         dataflow: df,
                         stats: s,
-                        evaluated,
+                        evaluated: search.evaluated,
                     });
                 }
                 None => {
                     failures.insert(
                         group.key,
-                        last_err.unwrap_or_else(|| "no template mapping resolves".into()),
+                        search.last_err.unwrap_or_else(|| "no template mapping resolves".into()),
                     );
                 }
             }
+        };
+
+        let threads = cfg.effective_threads();
+        // Cache counters accumulated from the pooled path's per-chunk
+        // analyzers (stay 0 on the serial path, which reads the
+        // mapper's own analyzer deltas below).
+        let mut pool_counters = (0u64, 0u64, 0u64);
+        if threads <= 1 {
+            // The serial reference: one pass, the mapper's own
+            // analyzer, the whole candidate list as a single chunk.
+            for group in net.unique_shapes() {
+                let candidates = admit(&group, &mut stats);
+                let search =
+                    search_candidates(&mut self.analyzer, group.layer, &candidates, hw, cfg.objective);
+                record(&group, search, &mut stats);
+            }
+        } else {
+            // The pooled path: per-shape candidate chunks as jobs on a
+            // persistent [`WavePool`] (the sweep engine's pool,
+            // extracted). Each worker evaluates its chunk through a
+            // fresh Analyzer fronting the mapper's own store, so
+            // cross-chunk and cross-shape replays keep working. Shapes
+            // stay sequential — one wave per shape, merged in chunk
+            // order — which is what keeps winners and budget accounting
+            // bit-identical to the serial fold (module docs).
+            let store = Arc::clone(self.analyzer.store());
+            let objective = cfg.objective;
+            std::thread::scope(|scope| {
+                let pool = WavePool::spawn(scope, threads, |(layer, list, range): ChunkJob<'_>| {
+                    let mut analyzer = Analyzer::with_store(Arc::clone(&store));
+                    let mut out = search_candidates(&mut analyzer, layer, &list[range], hw, objective);
+                    out.cache_hits = analyzer.cache_hits();
+                    out.cache_disk_hits = analyzer.disk_hits();
+                    out.cache_misses = analyzer.cache_misses();
+                    out
+                });
+                for group in net.unique_shapes() {
+                    let candidates = admit(&group, &mut stats);
+                    let n = candidates.len();
+                    let list = Arc::new(candidates);
+                    // Contiguous chunks, a few per worker for load
+                    // balance; the partition only affects which worker
+                    // evaluates what, never the merged outcome.
+                    let chunk = (n / (threads * 4)).max(1);
+                    let jobs: Vec<ChunkJob<'_>> = (0..n.div_ceil(chunk))
+                        .map(|i| {
+                            let start = i * chunk;
+                            (group.layer, Arc::clone(&list), start..(start + chunk).min(n))
+                        })
+                        .collect();
+                    let merged = merge_chunks(pool.run_wave(jobs), objective);
+                    pool_counters.0 += merged.cache_hits;
+                    pool_counters.1 += merged.cache_disk_hits;
+                    pool_counters.2 += merged.cache_misses;
+                    record(&group, merged, &mut stats);
+                }
+            });
         }
 
         // Assemble the network view: every layer replays its shape's
@@ -300,9 +474,12 @@ impl Mapper {
             }
         }
         ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
-        stats.cache_hits = self.analyzer.cache_hits() - hits0;
-        stats.cache_misses = self.analyzer.cache_misses() - misses0;
-        stats.cache_disk_hits = self.analyzer.disk_hits() - disk0;
+        // Pool-worker counters (pooled path; 0 serially) plus the
+        // mapper's own analyzer deltas (serial search + assembly).
+        let (pool_hits, pool_disk, pool_misses) = pool_counters;
+        stats.cache_hits = pool_hits + (self.analyzer.cache_hits() - hits0);
+        stats.cache_misses = pool_misses + (self.analyzer.cache_misses() - misses0);
+        stats.cache_disk_hits = pool_disk + (self.analyzer.disk_hits() - disk0);
         stats.evictions = self.analyzer.store().evictions().saturating_sub(evictions0);
         stats.seconds = t0.elapsed().as_secs_f64();
         let network = fold_network_stats(&net.name, "mapper", per_layer, skipped);

@@ -86,6 +86,9 @@ pub struct MapRequest {
     pub budget: u64,
     /// Whole-run wall cutoff in seconds (0 = off).
     pub budget_seconds: f64,
+    /// Mapper worker threads (0 = all cores; results are bit-identical
+    /// for any value).
+    pub threads: usize,
 }
 
 /// `dse`: a budgeted, strategy-driven sweep over a design space.
@@ -400,6 +403,9 @@ impl MapRequest {
             tile_resolution: args.opt_u64("tile-resolution", 6)? as usize,
             budget: args.opt_u64("budget", 0)?,
             budget_seconds: args.opt_f64("budget-seconds", 0.0)?,
+            // --workers (the coordinator-era spelling) still caps map
+            // parallelism when --threads is absent, as for dse.
+            threads: args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize,
         })
     }
 }
@@ -515,7 +521,8 @@ impl Request {
                 .set("objective", Json::str(r.objective.name()))
                 .set("tile_resolution", Json::int(r.tile_resolution as u64))
                 .set("budget", Json::int(r.budget))
-                .set("budget_seconds", Json::num(r.budget_seconds)),
+                .set("budget_seconds", Json::num(r.budget_seconds))
+                .set("threads", Json::int(r.threads as u64)),
             Request::Dse(r) => envelope("dse", r.id)
                 .set("family", Json::str(&r.family))
                 .set("model", Json::str(&r.model))
@@ -571,6 +578,7 @@ impl Request {
                     tile_resolution: get_u64(v, "tile_resolution", 6)? as usize,
                     budget: get_u64(v, "budget", 0)?,
                     budget_seconds: get_f64(v, "budget_seconds", 0.0)?,
+                    threads: get_u64(v, "threads", 0)? as usize,
                 }))
             }
             "dse" => {

@@ -26,9 +26,14 @@
 //! A work request carrying an `id` can be cancelled from **another**
 //! connection (the submitting connection is blocked awaiting its
 //! reply): `cancel` flips the request's scoped flag, which the sweep
-//! engine checks between waves and the mapper between shapes. Queued
-//! jobs that were cancelled before starting are dropped without
-//! executing.
+//! engine checks between waves and the mapper between shapes. What the
+//! client gets back depends on the request kind. `analyze`/`dse`
+//! answer with a `cancelled` error (their partial output is
+//! meaningless), and queued ones cancelled before starting never
+//! execute. A cancelled `map` instead **degrades gracefully**: shapes
+//! not yet searched fall back to the Table 3 default bindings — the
+//! mapper's `max_seconds` semantics — so the reply is a complete,
+//! well-formed mapping with `defaulted > 0`, never an error.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -56,7 +61,8 @@ pub struct ServeConfig {
     /// Warm-store persistence: loaded at startup, flushed periodically
     /// and on shutdown. `None` = memory only.
     pub cache_file: Option<String>,
-    /// FIFO cap on the resident store (0 = unbounded).
+    /// Second-chance capacity cap on the resident store
+    /// (0 = unbounded).
     pub cache_cap: usize,
     /// Executor threads draining the job queue (concurrent requests).
     pub workers: usize,
@@ -64,8 +70,8 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Seconds between background store flushes (0 = shutdown only).
     pub flush_every: f64,
-    /// Default sweep threads for dse requests that leave `threads` 0
-    /// (0 = let the sweep use all cores).
+    /// Default worker threads for `dse` and `map` requests that leave
+    /// `threads` 0 (0 = let the search use all cores).
     pub threads: usize,
     /// Log one line per executed request to stderr.
     pub verbose: bool,
@@ -262,14 +268,28 @@ fn worker_loop(shared: &Shared, queue: JobQueue<Job>) {
 /// Run one work request against the resident store.
 fn execute(shared: &Shared, job: &Job) -> Response {
     let id = job.request.id();
-    if job.cancel.load(Ordering::Relaxed) {
+    // `map` is exempt from the early-out: a cancelled map still runs
+    // and degrades gracefully — every not-yet-searched shape drops to
+    // the Table 3 defaults immediately, so the "run" is cheap and the
+    // reply is a complete mapping, not an error (module docs,
+    // "Cancellation").
+    let graceful_cancel = matches!(job.request, Request::Map(_));
+    if job.cancel.load(Ordering::Relaxed) && !graceful_cancel {
         return Response::error(id, ApiError::cancelled());
     }
     let store = &shared.store;
     let cancel = Some(Arc::clone(&job.cancel));
     let result = match &job.request {
         Request::Analyze(r) => exec::run_analyze(store, r).map(|out| Response::Analyze(exec::analyze_reply(r, &out))),
-        Request::Map(r) => exec::run_map(store, r, cancel).map(|out| Response::Map(exec::map_reply(r, &out))),
+        Request::Map(r) => {
+            // Honor the request-scoped thread count exactly like dse
+            // below, with the daemon's default as the fallback.
+            let mut r = r.clone();
+            if r.threads == 0 {
+                r.threads = shared.cfg.threads;
+            }
+            exec::run_map(store, &r, cancel).map(|out| Response::Map(exec::map_reply(&r, &out)))
+        }
         Request::Dse(r) => {
             let mut r = r.clone();
             if r.threads == 0 {
@@ -285,7 +305,13 @@ fn execute(shared: &Shared, job: &Job) -> Response {
         _ => return Response::error(id, ApiError::internal("control request routed to executor")),
     };
     match result {
-        Ok(_) if job.cancel.load(Ordering::Relaxed) => Response::error(id, ApiError::cancelled()),
+        // A cancel that raced a finishing analyze/dse still reports
+        // cancelled — the client asked for abandonment. A cancelled map
+        // is NOT converted: its outcome is a complete graceful
+        // degradation (`defaulted > 0`), not a partial result.
+        Ok(_) if job.cancel.load(Ordering::Relaxed) && !graceful_cancel => {
+            Response::error(id, ApiError::cancelled())
+        }
         Ok(resp) => resp,
         Err(e) => Response::error(id, to_api_error(&e)),
     }

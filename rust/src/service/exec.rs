@@ -217,7 +217,9 @@ pub struct MapOutcome {
 /// Layer-wise mapper search + fixed-style baseline — the engine behind
 /// `maestro map` and the daemon's `map` requests. `cancel` (daemon:
 /// one flag per request) degrades unsearched shapes to Table 3
-/// defaults, exactly like an expired `budget_seconds`.
+/// defaults, exactly like an expired `budget_seconds`. `req.threads`
+/// sizes the mapper's worker pool (0 = all cores) — winners and
+/// counters are bit-identical for any value.
 pub fn run_map(
     store: &Arc<SharedStore>,
     req: &MapRequest,
@@ -231,6 +233,7 @@ pub fn run_map(
         objective: req.objective,
         budget: SearchBudget { max_designs: req.budget, max_seconds: req.budget_seconds },
         cancel,
+        threads: req.threads,
         ..MapperConfig::default()
     };
     let mut mapper = Mapper::with_store(Arc::clone(store));

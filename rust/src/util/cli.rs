@@ -57,7 +57,7 @@ pub fn common_flags() -> Vec<FlagSpec> {
         FlagSpec {
             name: "cache-cap",
             takes_value: true,
-            help: "bound the in-memory analysis cache to ~N entries (coarse FIFO eviction; 0 = unbounded)",
+            help: "bound the in-memory analysis cache to ~N entries (second-chance eviction; 0 = unbounded)",
         },
         FlagSpec {
             name: "budget",
@@ -72,7 +72,7 @@ pub fn common_flags() -> Vec<FlagSpec> {
         FlagSpec {
             name: "threads",
             takes_value: true,
-            help: "sweep worker threads (default 0 = all cores)",
+            help: "search worker threads for dse sweeps and map (default 0 = all cores)",
         },
         FlagSpec {
             name: "seed",

@@ -10,6 +10,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod propcheck;
 pub mod queue;
 pub mod rng;

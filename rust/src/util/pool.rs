@@ -1,0 +1,181 @@
+//! A persistent scoped worker pool executing *waves* of indexed jobs
+//! with deterministic slot-order collection — the sweep engine's pool
+//! idiom (one pool alive across strategy waves, bounded job queue,
+//! panic-safe per-wave barrier), extracted so any sharded search can
+//! reuse it. Consumers: [`crate::dse::engine::sweep`] (contiguous
+//! shards of (variant, PEs) batches) and the layer-wise mapper
+//! (`crate::mapspace`, per-shape candidate chunks).
+//!
+//! ## Contract
+//!
+//! * **Determinism** — [`WavePool::run_wave`] returns one result per
+//!   job, in job order: results land in their submission slots, never
+//!   in completion order. Any merge the caller folds in that order
+//!   replays its serial reference exactly — the bit-determinism
+//!   contract the sweep has pinned since PR 1 (`rust/tests/
+//!   dse_parallel.rs`) and the mapper pins in `rust/tests/mapspace.rs`.
+//! * **Persistence** — workers spawn once per pool and stay alive
+//!   across waves. Feedback-driven searches issue many small waves
+//!   (guided refinement, one wave per mapper shape), and per-wave pool
+//!   spawning made thread churn scale with the wave count.
+//! * **Panic safety** — a panicking job is caught, its slot filled with
+//!   `R::default()` so the wave barrier completes, and the panic
+//!   re-raised on the worker; the scope join then propagates it to the
+//!   caller instead of deadlocking the wave loop.
+
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+
+use crate::util::queue::JobQueue;
+
+/// A pool of scoped workers mapping jobs `J` to results `R`. Create
+/// with [`WavePool::spawn`] inside a [`std::thread::scope`]; dropping
+/// it (or letting the scope closure end) closes the job queue, drains
+/// the workers, and lets the scope join them.
+pub struct WavePool<J, R> {
+    job_tx: SyncSender<(J, usize)>,
+    /// Keeps the job receiver alive even if every worker died, so
+    /// `try_send` can never observe a disconnected queue — a dead pool
+    /// is reported through the result channel instead (see
+    /// [`WavePool::run_wave`]).
+    _job_queue: JobQueue<(J, usize)>,
+    res_rx: Receiver<(usize, R)>,
+}
+
+impl<J, R> WavePool<J, R>
+where
+    J: Send,
+    R: Send + Default,
+{
+    /// Spawn `threads.max(1)` workers on `scope`, each looping over
+    /// queued jobs with `run`. `run` must be `Copy` (capture only
+    /// shared references and `Copy` data — every worker gets its own
+    /// copy) and may borrow freely from the scope's environment.
+    pub fn spawn<'scope, 'env, F>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        threads: usize,
+        run: F,
+    ) -> WavePool<J, R>
+    where
+        J: 'scope,
+        R: 'scope,
+        F: Fn(J) -> R + Send + Copy + 'scope,
+    {
+        let threads = threads.max(1);
+        let (job_tx, job_queue) = JobQueue::<(J, usize)>::bounded(threads * 2);
+        let (res_tx, res_rx) = std::sync::mpsc::channel::<(usize, R)>();
+        for _ in 0..threads {
+            let queue = job_queue.clone();
+            let res_tx = res_tx.clone();
+            scope.spawn(move || {
+                while let Some((job, slot)) = queue.pop() {
+                    // Catch panics so the wave barrier (blocked on this
+                    // slot's result) can finish the wave and the scope
+                    // join re-raises, instead of hanging.
+                    let out =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || run(job)));
+                    match out {
+                        Ok(out) => {
+                            if res_tx.send((slot, out)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(panic) => {
+                            let _ = res_tx.send((slot, R::default()));
+                            std::panic::resume_unwind(panic);
+                        }
+                    }
+                }
+            });
+        }
+        // The workers now hold the only result senders: if they all
+        // die, `res_rx.recv()` errors instead of blocking forever.
+        WavePool { job_tx, _job_queue: job_queue, res_rx }
+    }
+
+    /// Execute one wave: submit every job, wait for every result, and
+    /// return them in job order. A barrier — the pool is idle again
+    /// when this returns, so waves never overlap.
+    pub fn run_wave(&self, jobs: Vec<J>) -> Vec<R> {
+        let n = jobs.len();
+        let mut slots: Vec<Option<R>> = Vec::new();
+        slots.resize_with(n, || None);
+        // A dead pool (every worker panicked) must never hang the wave:
+        // results are drained with `recv` (which errors once every
+        // worker dropped its sender) while jobs go out with `try_send`
+        // — a full queue yields to draining instead of blocking on
+        // workers that may no longer exist.
+        let recv_one = |slots: &mut Vec<Option<R>>| {
+            let (slot, out) = self
+                .res_rx
+                .recv()
+                .expect("wave pool died (worker panic) before finishing the wave");
+            slots[slot] = Some(out);
+        };
+        let mut received = 0usize;
+        for (slot, job) in jobs.into_iter().enumerate() {
+            let mut job = (job, slot);
+            loop {
+                match self.job_tx.try_send(job) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(back)) => {
+                        job = back;
+                        recv_one(&mut slots);
+                        received += 1;
+                    }
+                    // `_job_queue` keeps the receiver alive for the
+                    // pool's whole lifetime.
+                    Err(TrySendError::Disconnected(_)) => {
+                        unreachable!("job queue receiver outlives the pool")
+                    }
+                }
+            }
+        }
+        for _ in received..n {
+            recv_one(&mut slots);
+        }
+        slots.into_iter().map(|s| s.expect("every wave slot filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waves_return_results_in_job_order() {
+        std::thread::scope(|scope| {
+            let pool = WavePool::spawn(scope, 4, |j: usize| j * 10);
+            // More jobs than queue capacity, several waves on one pool.
+            for wave in 0..3usize {
+                let jobs: Vec<usize> = (0..37).map(|i| i + wave).collect();
+                let want: Vec<usize> = jobs.iter().map(|j| j * 10).collect();
+                assert_eq!(pool.run_wave(jobs), want, "wave {wave}");
+            }
+        });
+    }
+
+    #[test]
+    fn an_empty_wave_is_a_no_op() {
+        std::thread::scope(|scope| {
+            let pool = WavePool::spawn(scope, 2, |j: usize| j);
+            assert!(pool.run_wave(Vec::new()).is_empty());
+            assert_eq!(pool.run_wave(vec![7]), vec![7], "pool still live after an empty wave");
+        });
+    }
+
+    #[test]
+    fn a_panicking_job_propagates_through_the_scope_join() {
+        let caught = std::panic::catch_unwind(|| {
+            std::thread::scope(|scope| {
+                let pool = WavePool::spawn(scope, 2, |j: usize| {
+                    assert!(j != 5, "boom");
+                    j
+                });
+                // The wave itself completes (the panicked slot holds the
+                // default); the panic re-raises when the scope joins.
+                let _ = pool.run_wave((0..8).collect());
+            });
+        });
+        assert!(caught.is_err(), "worker panic must re-raise at the scope join");
+    }
+}

@@ -22,11 +22,13 @@ use maestro::cache::SharedStore;
 use maestro::dse::engine::{sweep, SweepConfig};
 use maestro::dse::pareto::objective_values;
 use maestro::dse::space::DesignSpace;
-use maestro::dse::strategy::SearchStrategy;
+use maestro::dse::strategy::{SearchBudget, SearchStrategy};
 use maestro::engine::analysis::{objective_score, Analyzer, Objective};
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
-use maestro::mapspace::{enumerate, enumerate_all, Mapper, MapperConfig, StyleTemplate};
+use maestro::mapspace::{
+    enumerate, enumerate_all, Mapper, MapperConfig, MapperStats, MappingOutcome, StyleTemplate,
+};
 use maestro::model::layer::Layer;
 use maestro::model::network::Network;
 use maestro::model::zoo::vgg16;
@@ -202,8 +204,9 @@ fn mapper_is_deterministic_for_any_thread_count_and_warmth() {
         assert_eq!(a.dataflow, b.dataflow);
         assert_eq!(a.stats, b.stats);
     }
-    // Concurrent mappers (the "any thread count" clause: the mapper is
-    // a serial fold, so N parallel mappers must all agree with it).
+    // Concurrent mappers (the default config is the serial reference
+    // path, so N parallel mappers must all agree with it; the pooled
+    // path is pinned against it below).
     std::thread::scope(|scope| {
         for _ in 0..3 {
             let reference = &reference;
@@ -230,6 +233,69 @@ fn mapper_is_deterministic_for_any_thread_count_and_warmth() {
     assert_eq!(warm_out.network.runtime.to_bits(), reference.network.runtime.to_bits());
     for (a, b) in warm_out.per_shape.iter().zip(&reference.per_shape) {
         assert_eq!(a.dataflow, b.dataflow);
+    }
+}
+
+/// Everything the determinism contract covers, minus what it excludes:
+/// wall clock and the cache hit/miss/eviction split (partition- and
+/// warmth-dependent, like the sweep's — `dse_parallel.rs` comparable()).
+fn comparable(stats: &MapperStats) -> MapperStats {
+    MapperStats {
+        seconds: 0.0,
+        cache_hits: 0,
+        cache_disk_hits: 0,
+        cache_misses: 0,
+        evictions: 0,
+        ..stats.clone()
+    }
+}
+
+fn assert_mapping_eq(got: &MappingOutcome, want: &MappingOutcome, ctx: &str) {
+    assert_eq!(got.network.runtime.to_bits(), want.network.runtime.to_bits(), "{ctx}: runtime");
+    assert_eq!(
+        got.network.energy.total().to_bits(),
+        want.network.energy.total().to_bits(),
+        "{ctx}: energy"
+    );
+    assert_eq!(got.per_shape.len(), want.per_shape.len(), "{ctx}: shape count");
+    for (g, w) in got.per_shape.iter().zip(&want.per_shape) {
+        assert_eq!(g.dataflow, w.dataflow, "{ctx}: winner for {}", w.representative);
+        assert_eq!(g.stats.runtime.to_bits(), w.stats.runtime.to_bits(), "{ctx}: {}", w.representative);
+        assert_eq!(g.evaluated, w.evaluated, "{ctx}: evaluated for {}", w.representative);
+    }
+    assert_eq!(comparable(&got.stats), comparable(&want.stats), "{ctx}: stats");
+}
+
+/// The ISSUE 7 acceptance pin: the pooled mapper is bit-identical to
+/// the serial reference for threads in {1, 2, 8} (and 0 = all cores),
+/// on a cold store and on a pre-warmed one — winners, network bits,
+/// per-shape stats, and every budget counter, including a
+/// `budget_skipped`-producing prefix cut.
+#[test]
+fn threaded_mapper_is_bit_identical_to_the_serial_reference_for_any_warmth() {
+    let net = vgg16::conv_only();
+    let hw = HwConfig::fig10_default();
+    // A budget that actually cuts, so budget accounting is exercised
+    // across the thread axis too.
+    let base = MapperConfig {
+        budget: SearchBudget { max_designs: 12, ..SearchBudget::default() },
+        ..MapperConfig::default()
+    };
+    let reference = Mapper::new().map_network(&net, &hw, &base).unwrap();
+    assert!(reference.stats.budget_skipped > 0, "the pin must exercise budget cuts");
+    for threads in [1usize, 2, 8, 0] {
+        let cfg = MapperConfig { threads, ..base.clone() };
+        // Cold store.
+        let cold = Mapper::new().map_network(&net, &hw, &cfg).unwrap();
+        assert_mapping_eq(&cold, &reference, &format!("cold, threads={threads}"));
+        // Warm store: pre-warmed by a serial run through the same
+        // SharedStore; the pooled run must replay it without a single
+        // re-analysis and still move no bits.
+        let store = Arc::new(SharedStore::new());
+        Mapper::with_store(Arc::clone(&store)).map_network(&net, &hw, &base).unwrap();
+        let warm = Mapper::with_store(store).map_network(&net, &hw, &cfg).unwrap();
+        assert_mapping_eq(&warm, &reference, &format!("warm, threads={threads}"));
+        assert_eq!(warm.stats.cache_misses, 0, "warm run must replay (threads={threads})");
     }
 }
 

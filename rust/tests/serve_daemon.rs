@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 use maestro::cache::SharedStore;
 use maestro::engine::analysis::Objective;
-use maestro::service::api::{AnalyzeRequest, Request, Response};
+use maestro::service::api::{AnalyzeRequest, MapRequest, Request, Response};
 use maestro::service::daemon::{Daemon, ServeConfig};
 use maestro::util::json::Json;
 
@@ -199,6 +199,85 @@ fn malformed_frames_get_structured_errors_and_the_daemon_stays_up() {
     }
 
     match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+}
+
+/// Cancelling an in-flight `map` from a second connection must degrade
+/// gracefully, not error: the mapper drops every not-yet-searched shape
+/// to its Table 3 default binding and the submitter still receives a
+/// complete, well-formed mapping with `search.defaulted > 0`.
+#[test]
+fn cancelling_an_inflight_map_degrades_gracefully_to_defaults() {
+    let daemon =
+        Daemon::spawn(ServeConfig { addr: "127.0.0.1:0".into(), ..ServeConfig::default() })
+            .expect("spawn daemon");
+    let addr = daemon.addr();
+
+    // Submitter: a map big enough (resnet50, fine tiles, no budget)
+    // that it cannot finish before the cancel lands.
+    let submit = std::thread::spawn(move || {
+        let mut client = Client::connect(addr);
+        client.request(&Request::Map(MapRequest {
+            id: Some(42),
+            model: "resnet50".into(),
+            pes: 256,
+            bw: 16,
+            objective: Objective::Runtime,
+            tile_resolution: 10,
+            budget: 0,
+            budget_seconds: 0.0,
+            threads: 1,
+        }))
+    });
+
+    // Canceller: a separate connection retries until the map's id shows
+    // up in the in-flight table (the submit thread races us to it).
+    let mut canceller = Client::connect(addr);
+    let mut acknowledged = false;
+    for _ in 0..500 {
+        match canceller.request(&Request::Cancel { id: 42 }) {
+            Response::Done(d) => {
+                assert_eq!(d.what, "cancel");
+                acknowledged = true;
+                break;
+            }
+            Response::Error(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            other => panic!("expected done or error reply, got {other:?}"),
+        }
+    }
+    assert!(acknowledged, "cancel never found the in-flight map");
+
+    // The submitter gets a complete mapping back — graceful
+    // degradation, never a `cancelled` error.
+    let reply = submit.join().expect("submit thread");
+    let map = match reply {
+        Response::Map(m) => m,
+        other => panic!("cancelled map must still produce a mapping, got {other:?}"),
+    };
+    assert_eq!(map.id, Some(42), "reply must echo the client id");
+    assert!(
+        map.search.defaulted > 0,
+        "cancel must leave defaulted shapes behind: {:?}",
+        map.search
+    );
+    assert!(
+        map.per_shape.len() as u64 == map.search.shapes || !map.skipped.is_empty(),
+        "every shape must still resolve to a mapping or a diagnostic: {:?}",
+        map.search
+    );
+    assert!(map.mapper.layers > 0, "the degraded mapping still covers the network");
+
+    // The daemon is healthy afterwards.
+    match canceller.request(&Request::Status) {
+        Response::Status(_) => {}
+        other => panic!("daemon wedged after map cancel: {other:?}"),
+    }
+    match canceller.request(&Request::Shutdown) {
         Response::Done(d) => assert_eq!(d.what, "shutdown"),
         other => panic!("expected done reply, got {other:?}"),
     }

@@ -93,10 +93,11 @@ fn golden_map_request() {
         tile_resolution: 4,
         budget: 100,
         budget_seconds: 1.5,
+        threads: 2,
     });
     assert_eq!(
         r.encode().dump(),
-        r#"{"v":1,"kind":"map","id":2,"model":"alexnet","pes":64,"bw":32,"objective":"edp","tile_resolution":4,"budget":100,"budget_seconds":1.5}"#
+        r#"{"v":1,"kind":"map","id":2,"model":"alexnet","pes":64,"bw":32,"objective":"edp","tile_resolution":4,"budget":100,"budget_seconds":1.5,"threads":2}"#
     );
 }
 
@@ -198,6 +199,7 @@ fn every_request_variant_round_trips() {
         tile_resolution: 6,
         budget: 0,
         budget_seconds: 2.5,
+        threads: 8,
     }));
     roundtrip_request(&Request::Dse(DseRequest {
         id: Some(11),
