@@ -7,16 +7,21 @@
 //! and the analytic-vs-simulator speedup on a bounded layer.
 //!
 //! CI smoke mode: `ANALYSIS_SMOKE=1 cargo bench --bench analysis_speed`
-//! runs the cached-vs-uncached comparison plus a cache-file warm-start
+//! runs the cached-vs-uncached comparison, a cache-file warm-start
 //! round trip (cold analyze -> flush -> fresh store load -> warm
-//! analyze) and writes the layers/s + hit/miss + warm-vs-cold record to
-//! `BENCH_analysis_rate.json` (override with `ANALYSIS_SMOKE_OUT`) —
-//! uploaded as a CI build artifact next to `BENCH_dse_rate.json`.
+//! analyze), and the two-phase-vs-monolithic bandwidth-axis comparison
+//! (one `ReuseProfile` build + 9 `finalize` replays vs 9 fresh
+//! analyses; the profiled path must not be slower), and writes the
+//! layers/s + hit/miss + warm-vs-cold + `profile_vs_monolithic` record
+//! to `BENCH_analysis_rate.json` (override with `ANALYSIS_SMOKE_OUT`)
+//! — uploaded as a CI build artifact next to `BENCH_dse_rate.json`.
 
 use std::sync::Arc;
 
 use maestro::cache::SharedStore;
+use maestro::dse::space::bandwidth_axis;
 use maestro::engine::analysis::{analyze_layer, Analyzer};
+use maestro::engine::profile::ReuseProfile;
 use maestro::hw::config::HwConfig;
 use maestro::ir::styles;
 use maestro::model::layer::Layer;
@@ -84,25 +89,74 @@ fn warm_vs_cold(net: &Network, hw: &HwConfig) -> (f64, f64, u64, usize) {
     (cold_s, warm_s, warm.disk_hits(), loaded.loaded)
 }
 
+/// Two-phase vs monolithic analysis across the canonical 9-point
+/// bandwidth axis. The monolithic path runs a fresh [`analyze_layer`]
+/// per (layer, bandwidth) design; the profiled path resolves and builds
+/// one [`ReuseProfile`] per layer, then replays `finalize` per
+/// bandwidth point. Both evaluate the same designs in the same order;
+/// failures (if any) fail identically on both paths, so the design
+/// count stays comparable. Returns (monolithic designs/s, profiled
+/// designs/s, designs per pass, axis length).
+fn profile_vs_monolithic(net: &Network, hw: &HwConfig, repeats: u32) -> (f64, f64, u64, usize) {
+    let df = styles::kc_p();
+    let axis = bandwidth_axis(9);
+    let designs = net.layers.len() as u64 * axis.len() as u64;
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..repeats {
+        for layer in &net.layers {
+            for &bw in &axis {
+                let h = HwConfig { noc_bandwidth: bw, ..hw.clone() };
+                std::hint::black_box(analyze_layer(layer, &df, &h).ok());
+            }
+        }
+    }
+    let mono_s = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    for _ in 0..repeats {
+        for layer in &net.layers {
+            let profile = df
+                .resolve(layer, hw.num_pes)
+                .and_then(|r| ReuseProfile::build(layer, &r, hw));
+            let Ok(profile) = profile else { continue };
+            for &bw in &axis {
+                let h = HwConfig { noc_bandwidth: bw, ..hw.clone() };
+                std::hint::black_box(profile.finalize(&h));
+            }
+        }
+    }
+    let prof_s = t1.elapsed().as_secs_f64();
+
+    let total = (designs * repeats as u64) as f64;
+    (total / mono_s.max(1e-9), total / prof_s.max(1e-9), designs, axis.len())
+}
+
 fn analysis_rate_json(
     net: &Network,
     rates: (f64, f64, u64, u64),
     warm: (f64, f64, u64, usize),
+    pvm: (f64, f64, u64, usize),
 ) -> String {
     let (uncached, cached, hits, misses) = rates;
     let (cold_s, warm_s, disk_hits, records) = warm;
+    let (mono_rate, prof_rate, designs, axis_len) = pvm;
     format!(
         "{{\n  \"bench\": \"analysis_rate\",\n  \"network\": \"{}\",\n  \"dataflow\": \"KC-P\",\n  \
          \"layers\": {},\n  \"unique_shapes\": {},\n  \"uncached_layers_per_s\": {uncached:.1},\n  \
          \"cached_layers_per_s\": {cached:.1},\n  \"speedup\": {:.2},\n  \"cache_hits\": {hits},\n  \
          \"cache_misses\": {misses},\n  \"warm_start\": {{\n    \"cold_seconds\": {cold_s:.6},\n    \
          \"warm_seconds\": {warm_s:.6},\n    \"speedup\": {:.2},\n    \"disk_hits\": {disk_hits},\n    \
-         \"records_loaded\": {records}\n  }}\n}}\n",
+         \"records_loaded\": {records}\n  }},\n  \"profile_vs_monolithic\": {{\n    \
+         \"bandwidth_points\": {axis_len},\n    \"designs_per_pass\": {designs},\n    \
+         \"monolithic_designs_per_s\": {mono_rate:.1},\n    \
+         \"profiled_designs_per_s\": {prof_rate:.1},\n    \"speedup\": {:.2}\n  }}\n}}\n",
         net.name,
         net.layers.len(),
         net.unique_shapes().len(),
         cached / uncached.max(1e-9),
         cold_s / warm_s.max(1e-9),
+        prof_rate / mono_rate.max(1e-9),
     )
 }
 
@@ -117,7 +171,15 @@ fn main() {
         let net = zoo::by_name("resnet50").unwrap();
         let rates = cached_vs_uncached(&net, &hw, 3);
         let warm = warm_vs_cold(&net, &hw);
-        let json = analysis_rate_json(&net, rates, warm);
+        let pvm = profile_vs_monolithic(&net, &hw, 2);
+        assert!(
+            pvm.1 >= pvm.0,
+            "two-phase bandwidth axis must be at least as fast as monolithic: \
+             profiled {:.1} designs/s < monolithic {:.1} designs/s",
+            pvm.1,
+            pvm.0
+        );
+        let json = analysis_rate_json(&net, rates, warm, pvm);
         print!("{json}");
         let path = std::env::var("ANALYSIS_SMOKE_OUT").unwrap_or_else(|_| "BENCH_analysis_rate.json".into());
         std::fs::write(&path, json).expect("write analysis smoke json");
@@ -156,6 +218,17 @@ fn main() {
             net.layers.len(),
             net.unique_shapes().len(),
             cached / uncached.max(1e-9),
+        );
+    }
+
+    section("two-phase profiles vs monolithic re-analysis across the bandwidth axis");
+    for name in ["resnet50", "vgg16-conv"] {
+        let net = zoo::by_name(name).unwrap();
+        let (mono, prof, designs, points) = profile_vs_monolithic(&net, &hw, 3);
+        println!(
+            "{name}: {designs} designs/pass ({points}-point bw axis) | monolithic {mono:.0} designs/s | \
+             profiled {prof:.0} designs/s | speedup x{:.2}",
+            prof / mono.max(1e-9),
         );
     }
 

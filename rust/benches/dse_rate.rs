@@ -11,9 +11,12 @@
 //! sharded sweep on the tiny `DesignSpace::ci_smoke` space in seconds,
 //! plus a cache-file warm-start round trip (which *does* assert: the
 //! cache file must load warning-free and the warm sweep must report
-//! disk hits), and writes the designs/s + thread-scaling + warm-start
-//! numbers to `BENCH_dse_rate.json` (override with `DSE_SMOKE_OUT`) —
-//! uploaded as a CI build artifact.
+//! disk hits) and a two-phase table-reuse leg on a 9-point bandwidth
+//! axis (which asserts the profiled guided sweep is at least as fast
+//! as the rebuild-every-visit reference with a bit-identical
+//! frontier), and writes the designs/s + thread-scaling + warm-start +
+//! `profile_vs_monolithic` numbers to `BENCH_dse_rate.json` (override
+//! with `DSE_SMOKE_OUT`) — uploaded as a CI build artifact.
 
 use maestro::coordinator::{run_jobs, Backend, DseJob};
 use maestro::dse::engine::{sweep, SweepConfig, SweepStats};
@@ -48,6 +51,7 @@ fn scaling_json(
     runs: &[(usize, SweepStats)],
     warm: (&SweepStats, &SweepStats),
     guided: (&SweepStats, &SweepStats, bool),
+    table_reuse: (&SweepStats, &SweepStats),
     mapspace: &str,
 ) -> String {
     let mut s = String::from("{\n");
@@ -93,6 +97,21 @@ fn scaling_json(
         guided_stats.evaluated as f64 / exhaustive.evaluated.max(1) as f64,
         guided_stats.waves,
         frontier_reached,
+    );
+    // ISSUE 8 acceptance record: the guided sweep with sweep-lifetime
+    // per-pair case tables vs the rebuild-every-visit reference on a
+    // 9-point bandwidth axis (CI asserts profiled >= monolithic rate
+    // and a bit-identical frontier before this record is written).
+    let (mono, prof) = table_reuse;
+    s += &format!(
+        "  \"profile_vs_monolithic\": {{\"monolithic_designs_per_s\": {:.1}, \
+         \"profiled_designs_per_s\": {:.1}, \"speedup\": {:.4}, \"profile_hits\": {}, \
+         \"guided_waves\": {}}},\n",
+        mono.rate(),
+        prof.rate(),
+        prof.rate() / mono.rate().max(1e-9),
+        prof.profile_hits,
+        prof.waves,
     );
     // ISSUE 5 acceptance record: mapspace size + layer-wise mapper vs
     // the best fixed Table 3 style on the smoke network.
@@ -153,6 +172,40 @@ fn run_smoke(net: &Network) {
     assert!(frontier_reached, "guided must reach the exhaustive frontier on the smoke space");
     assert!(ratio < 0.5, "guided must evaluate under half the designs (got {ratio:.3})");
 
+    // Two-phase leg (ISSUE 8 acceptance, also a CI gate): the guided
+    // sweep with sweep-lifetime per-pair case tables (the default) vs
+    // the rebuild-every-visit reference (`reuse_tables: false`), on the
+    // smoke space deepened to the canonical 9-point bandwidth axis —
+    // the axis the reuse makes near-free. Frontiers and counts must be
+    // bit-identical, and the profiled sweep must not be slower. Each
+    // variant runs twice and keeps its faster run to damp CI timer
+    // noise; the gate compares real work, not scheduler luck.
+    let deep = DesignSpace::fig13_axes("kc-p", 5, 9);
+    let reuse_cfg = SweepConfig { strategy: SearchStrategy::ParetoGuided, ..SweepConfig::serial() };
+    let rebuild_cfg = SweepConfig { reuse_tables: false, ..reuse_cfg.clone() };
+    let faster_of = |cfg: &SweepConfig| {
+        let a = sweep(net, &deep, 2, cfg).unwrap();
+        let b = sweep(net, &deep, 2, cfg).unwrap();
+        if a.stats.seconds <= b.stats.seconds { a } else { b }
+    };
+    let profiled = faster_of(&reuse_cfg);
+    let monolithic = faster_of(&rebuild_cfg);
+    println!("table-reuse on : {}", profiled.stats.summary());
+    println!("table-reuse off: {}", monolithic.stats.summary());
+    assert_eq!(
+        profiled.frontier, monolithic.frontier,
+        "table reuse must leave the frontier bit-identical"
+    );
+    assert_eq!(profiled.stats.evaluated, monolithic.stats.evaluated);
+    assert_eq!(profiled.stats.valid, monolithic.stats.valid);
+    assert!(
+        profiled.stats.rate() >= monolithic.stats.rate(),
+        "profiled sweep must be at least as fast as the rebuild-every-visit reference: \
+         {:.1} designs/s < {:.1} designs/s",
+        profiled.stats.rate(),
+        monolithic.stats.rate(),
+    );
+
     // Mapspace leg (ISSUE 5 acceptance record): the layer-wise mapper
     // over the generated tiling space vs the best single fixed Table 3
     // style on the same network. The mapper's candidate set contains
@@ -206,6 +259,7 @@ fn run_smoke(net: &Network) {
         &runs,
         (&cold.stats, &warm.stats),
         (&exhaustive.stats, &guided.stats, frontier_reached),
+        (&monolithic.stats, &profiled.stats),
         &mapspace_json,
     );
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());

@@ -104,6 +104,70 @@ impl HwKey {
     }
 }
 
+/// [`HwKey`] minus `noc_bandwidth`: the hardware identity of a
+/// *bandwidth-invariant* analysis profile
+/// ([`crate::engine::profile::ReuseProfile`]). Two configs that differ
+/// only in NoC bandwidth share one profile — the bandwidth enters the
+/// analysis only through `pipe_delay` replays at finalize time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HwProfileKey {
+    /// num_pes, l1_size, l2_size, noc_latency, pe_throughput — in that
+    /// order (the [`HwKey`] scalars minus noc_bandwidth).
+    pub scalars: [u64; 5],
+    pub multicast: bool,
+    pub reduction: u8,
+    pub clock_bits: u64,
+}
+
+impl HwProfileKey {
+    pub fn of(hw: &HwConfig) -> HwProfileKey {
+        // Exhaustive destructuring, like `HwKey::of`: a new HwConfig
+        // field must fail to compile here, not silently alias profiles.
+        // `noc_bandwidth` is named (not dropped through `..`) and then
+        // deliberately discarded — its exclusion is the whole point.
+        let &HwConfig {
+            num_pes,
+            l1_size,
+            l2_size,
+            noc_bandwidth,
+            noc_latency,
+            multicast,
+            reduction,
+            pe_throughput,
+            clock_ghz,
+        } = hw;
+        let _ = noc_bandwidth; // bandwidth-invariant by construction
+        HwProfileKey {
+            scalars: [num_pes, l1_size, l2_size, noc_latency, pe_throughput],
+            multicast,
+            reduction: match reduction {
+                ReductionSupport::None => 0,
+                ReductionSupport::Tree => 1,
+                ReductionSupport::Forward => 2,
+            },
+            clock_bits: clock_ghz.to_bits(),
+        }
+    }
+}
+
+/// Memoization key of a bandwidth-invariant [`ReuseProfile`]
+/// (`crate::engine::profile`): the [`CacheKey`] triple with the
+/// hardware reduced to [`HwProfileKey`]. Layered *under* the full-key
+/// [`CacheKey`] store — profiles are in-memory per-Analyzer state and
+/// never persist to disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    pub shape: ShapeKey,
+    pub dataflow: DataflowFingerprint,
+    pub hw: HwProfileKey,
+}
+
+impl ProfileKey {
+    pub fn new(shape: ShapeKey, dataflow: DataflowFingerprint, hw: &HwConfig) -> ProfileKey {
+        ProfileKey { shape, dataflow, hw: HwProfileKey::of(hw) }
+    }
+}
+
 /// The full memoization key: canonical layer shape x structural
 /// dataflow identity x hardware. Everything an analysis reads, nothing
 /// it does not (names of layers and dataflows are diagnostics, not
@@ -247,6 +311,33 @@ mod tests {
         let mut clk = base;
         clk.clock_ghz += 0.5;
         assert_ne!(HwKey::of(&clk), k0);
+    }
+
+    #[test]
+    fn profile_key_ignores_bandwidth_only() {
+        let base = HwConfig::fig10_default();
+        let k0 = HwProfileKey::of(&base);
+        // Bandwidth-only changes share one profile key...
+        let mut bw = base.clone();
+        bw.noc_bandwidth = 1;
+        assert_eq!(HwProfileKey::of(&bw), k0);
+        assert_ne!(HwKey::of(&bw), HwKey::of(&base));
+        // ...while every other field still distinguishes.
+        let mut pes = base.clone();
+        pes.num_pes += 1;
+        assert_ne!(HwProfileKey::of(&pes), k0);
+        let mut lat = base.clone();
+        lat.noc_latency += 1;
+        assert_ne!(HwProfileKey::of(&lat), k0);
+        let mut mc = base.clone();
+        mc.multicast = !mc.multicast;
+        assert_ne!(HwProfileKey::of(&mc), k0);
+        let mut red = base.clone();
+        red.reduction = ReductionSupport::None;
+        assert_ne!(HwProfileKey::of(&red), k0);
+        let mut clk = base;
+        clk.clock_ghz += 0.5;
+        assert_ne!(HwProfileKey::of(&clk), k0);
     }
 
     #[test]

@@ -39,6 +39,6 @@ pub mod key;
 pub mod persist;
 pub mod store;
 
-pub use key::{CacheKey, DataflowFingerprint, HwKey};
+pub use key::{CacheKey, DataflowFingerprint, HwKey, HwProfileKey, ProfileKey};
 pub use persist::{compact_file, CompactReport};
 pub use store::{CacheHit, CacheValue, FlushReport, LoadReport, SharedStore, StoreMetrics};

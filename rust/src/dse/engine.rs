@@ -17,6 +17,16 @@
 //! shard folds its survivors into a streaming Pareto frontier +
 //! counters, and shards merge deterministically in shard order — see
 //! [`crate::dse`] module docs for the architecture.
+//!
+//! Case tables are bandwidth-invariant (the whole bandwidth axis of a
+//! (variant, PEs) pair evaluates one table), so the sweep keeps a
+//! sweep-lifetime per-pair table cache shared across shards and waves
+//! ([`SweepConfig::reuse_tables`]): a feedback-driven strategy that
+//! probes the same pair once per wave (the guided per-pair bandwidth
+//! binary search) flattens and analyzes it exactly once. Tables are
+//! pure functions of (workload, variant, PEs), so replaying a cached
+//! table is bit-identical to rebuilding it and the determinism
+//! contract is untouched.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -378,6 +388,18 @@ pub struct SweepConfig {
     /// `serve` daemon scopes one flag per request so a client can
     /// abandon a long sweep without killing the process.
     pub cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
+    /// Reuse each (variant, PEs) pair's case table across shards and
+    /// waves for the lifetime of the sweep (default `true`). Case
+    /// tables are bandwidth-invariant, so a strategy that revisits a
+    /// pair — the guided per-pair bandwidth binary search touches it
+    /// once per wave — replays the cached table instead of
+    /// re-flattening and re-analyzing. Tables are pure functions of
+    /// (workload, variant, PEs): results are bit-identical either way,
+    /// and the skip accounting (`pruned` / `unmappable`) is repeated
+    /// per visit exactly as the rebuild path would. `false` restores
+    /// the rebuild-every-visit path — the reference the DSE bench
+    /// races the reuse path against. Memory is O(visited pairs).
+    pub reuse_tables: bool,
 }
 
 impl Default for SweepConfig {
@@ -390,6 +412,7 @@ impl Default for SweepConfig {
             strategy: SearchStrategy::Exhaustive,
             budget: SearchBudget::default(),
             cancel: None,
+            reuse_tables: true,
         }
     }
 }
@@ -456,6 +479,13 @@ pub struct SweepStats {
     /// Like the hit/miss split, diagnostic only — excluded from the
     /// determinism contract.
     pub evictions: u64,
+    /// The subset of `cache_misses` that skipped the bandwidth-variant
+    /// analysis by replaying a memoized
+    /// [`crate::engine::profile::ReuseProfile`] (same shape, variant,
+    /// and hardware up to bandwidth). Diagnostic only — like the
+    /// hit/miss split, it follows the shard partition and warmth and is
+    /// excluded from the determinism contract.
+    pub profile_hits: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
@@ -477,6 +507,7 @@ impl SweepStats {
         self.cache_hits += other.cache_hits;
         self.cache_disk_hits += other.cache_disk_hits;
         self.cache_misses += other.cache_misses;
+        self.profile_hits += other.profile_hits;
     }
 
     /// One-line human summary, including the skip breakdown (pruned /
@@ -501,6 +532,7 @@ impl SweepStats {
                 self.cache_disk_hits,
                 self.cache_misses,
                 self.evictions,
+                self.profile_hits,
             ),
             self.seconds,
             crate::util::benchkit::fmt_rate(self.rate()),
@@ -531,6 +563,23 @@ struct ShardOutcome {
     feedback: WaveFeedback,
 }
 
+/// Cached outcome of building one (variant, PEs) pair's case table.
+/// The unmappable marker is cached too, so a strategy revisiting a
+/// dead pair repeats the skip without re-attempting the resolve.
+#[derive(Debug)]
+enum PairTable {
+    Ready(Arc<CaseTable>),
+    Unmappable,
+}
+
+/// Sweep-lifetime per-pair table cache, shared by every shard across
+/// every wave (keyed on the pair's serial index; the workload and space
+/// are fixed for the sweep). Values are pure functions of the key, so
+/// a lost race between two shards building the same pair is benign —
+/// both compute identical tables. The lock is held only for the
+/// lookup/insert, never across a build.
+type PairTables = std::sync::Mutex<HashMap<usize, Arc<PairTable>>>;
+
 /// Evaluate a contiguous run of strategy batches. Batches arrive in
 /// serial pair order (each batch's `bws` ascending), so concatenating
 /// any contiguous partition's output replays the single-threaded sweep
@@ -559,6 +608,7 @@ fn sweep_shard(
     keep_all_points: bool,
     collect_feedback: bool,
     cache: Option<&Arc<SharedStore>>,
+    tables: Option<&PairTables>,
 ) -> ShardOutcome {
     let mut out = ShardOutcome::default();
     let mut analyzer = match cache {
@@ -568,18 +618,35 @@ fn sweep_shard(
     let layers: Vec<&Layer> = net.layers.iter().collect();
     let min_bw = *space.bandwidths.iter().min().unwrap_or(&1);
     for batch in batches {
-        // Private cache: the key includes (variant, pes), so a
-        // finished pair's entries can never hit again within this
-        // sweep — drop them before each pair (counters survive) to
-        // keep shard memory at O(unique shapes). A no-op on a shared
-        // store, which retains entries for later sweeps and for
-        // persistence.
-        analyzer.clear_cache();
         let (variant_idx, pes_idx) = space.pair_coords(batch.pair);
         let variant = &space.variants[variant_idx];
         let pes = space.pes[pes_idx];
         let n_candidates = batch.candidates();
-        let Ok(table) = build_case_table_cached(&mut analyzer, &layers, variant, pes) else {
+        // Sweep-lifetime table reuse: a pair revisited by a later wave
+        // (or already built by another shard) replays its cached table
+        // — or its cached unmappable verdict — instead of rebuilding.
+        let entry = match tables.and_then(|t| t.lock().unwrap().get(&batch.pair).cloned()) {
+            Some(entry) => entry,
+            None => {
+                // Private cache: the key includes (variant, pes), so a
+                // finished pair's entries can never hit again within
+                // this sweep — drop them before each pair (counters
+                // survive) to keep shard memory at O(unique shapes). A
+                // no-op on a shared store, which retains entries for
+                // later sweeps and for persistence.
+                analyzer.clear_cache();
+                let entry =
+                    match build_case_table_cached(&mut analyzer, &layers, variant, pes) {
+                        Ok(table) => Arc::new(PairTable::Ready(Arc::new(table))),
+                        Err(_) => Arc::new(PairTable::Unmappable),
+                    };
+                if let Some(t) = tables {
+                    t.lock().unwrap().insert(batch.pair, Arc::clone(&entry));
+                }
+                entry
+            }
+        };
+        let PairTable::Ready(table) = &*entry else {
             out.stats.unmappable += n_candidates;
             if collect_feedback {
                 out.feedback.dead_pairs.push(batch.pair);
@@ -600,7 +667,7 @@ fn sweep_shard(
             let bw = space.bandwidths[bwi];
             out.stats.evaluated += 1;
             let ap = area::evaluate(pes, table.l1_req, table.l2_req, bw);
-            let runtime = eval_runtime(&table, bw, space.noc_latency);
+            let runtime = eval_runtime(table, bw, space.noc_latency);
             // Total power = static (regression) + dynamic (workload
             // energy over runtime; 1 pJ/cycle = 1 mW at 1 GHz).
             let power = ap.power_mw + energy / runtime.max(1.0);
@@ -644,6 +711,7 @@ fn sweep_shard(
     out.stats.cache_hits = analyzer.cache_hits();
     out.stats.cache_disk_hits = analyzer.disk_hits();
     out.stats.cache_misses = analyzer.cache_misses();
+    out.stats.profile_hits = analyzer.profile_hits();
     out
 }
 
@@ -770,6 +838,10 @@ pub fn sweep(
     // Eviction accounting: the store's counter is cumulative across
     // consumers, so record the delta this sweep is responsible for.
     let evictions0 = cache.map(|s| s.evictions()).unwrap_or(0);
+    // Sweep-lifetime per-pair case-table cache (see
+    // [`SweepConfig::reuse_tables`]): freed when the sweep returns.
+    let pair_tables: Option<PairTables> = config.reuse_tables.then(PairTables::default);
+    let tables = pair_tables.as_ref();
     let mut state = SweepState {
         frontier: ParetoAccumulator::new(),
         stats: SweepStats {
@@ -788,7 +860,16 @@ pub fn sweep(
         sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
             wave.chunks(shard_size)
                 .map(|batches| {
-                    sweep_shard(net, space, noc_hops, batches, keep_all_points, collect_feedback, cache)
+                    sweep_shard(
+                        net,
+                        space,
+                        noc_hops,
+                        batches,
+                        keep_all_points,
+                        collect_feedback,
+                        cache,
+                        tables,
+                    )
                 })
                 .collect()
         });
@@ -803,7 +884,16 @@ pub fn sweep(
         // with it the bit-determinism contract, is unchanged.
         std::thread::scope(|scope| {
             let pool = WavePool::spawn(scope, threads, |(wave, range): ShardJob| {
-                sweep_shard(net, space, noc_hops, &wave[range], keep_all_points, collect_feedback, cache)
+                sweep_shard(
+                    net,
+                    space,
+                    noc_hops,
+                    &wave[range],
+                    keep_all_points,
+                    collect_feedback,
+                    cache,
+                    tables,
+                )
             });
             sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
                 let wave = Arc::new(wave);
@@ -1009,6 +1099,61 @@ mod tests {
         );
         let s = warm.stats.summary();
         assert!(s.contains("d/"), "summary surfaces the disk-hit slot: {s}");
+    }
+
+    #[test]
+    fn table_reuse_is_bit_identical_to_rebuilding() {
+        // The per-pair table cache must be invisible in every
+        // non-diagnostic output: frontier, point list, and skip
+        // accounting match the rebuild-every-visit reference for both
+        // a single-wave and a many-wave (guided) strategy.
+        use crate::dse::strategy::SearchStrategy;
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        for strategy in [SearchStrategy::Exhaustive, SearchStrategy::ParetoGuided] {
+            let on = SweepConfig {
+                strategy: strategy.clone(),
+                keep_all_points: true,
+                ..SweepConfig::serial()
+            };
+            let off = SweepConfig { reuse_tables: false, ..on.clone() };
+            let a = sweep(&net, &space, 2, &on).unwrap();
+            let b = sweep(&net, &space, 2, &off).unwrap();
+            assert_eq!(a.frontier, b.frontier, "{strategy:?}: frontier");
+            assert_eq!(a.points, b.points, "{strategy:?}: point list");
+            assert_eq!(
+                (a.stats.evaluated, a.stats.valid, a.stats.pruned, a.stats.unmappable),
+                (b.stats.evaluated, b.stats.valid, b.stats.pruned, b.stats.unmappable),
+                "{strategy:?}: skip accounting"
+            );
+            assert_eq!(
+                (a.stats.budget_skipped, a.stats.waves),
+                (b.stats.budget_skipped, b.stats.waves),
+                "{strategy:?}: wave accounting"
+            );
+        }
+    }
+
+    #[test]
+    fn guided_sweep_builds_each_pair_once() {
+        // The guided binary search touches a pair once per wave; with
+        // table reuse the pair's layer analyses run only on the first
+        // touch, so the sweep requests strictly fewer analyses than the
+        // rebuild-every-visit reference.
+        use crate::dse::strategy::SearchStrategy;
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        let on = SweepConfig { strategy: SearchStrategy::ParetoGuided, ..SweepConfig::serial() };
+        let off = SweepConfig { reuse_tables: false, ..on.clone() };
+        let a = sweep(&net, &space, 2, &on).unwrap();
+        let b = sweep(&net, &space, 2, &off).unwrap();
+        assert!(a.stats.waves > 1, "guided refinement must run multiple waves");
+        let touched = a.stats.cache_hits + a.stats.cache_misses;
+        let rebuilt = b.stats.cache_hits + b.stats.cache_misses;
+        assert!(
+            touched < rebuilt,
+            "table reuse must cut analyzer traffic: {touched} vs {rebuilt}"
+        );
     }
 
     // The pruned-vs-unmappable accounting scenario lives in

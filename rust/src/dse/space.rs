@@ -127,7 +127,7 @@ impl DesignSpace {
     /// axis is not).
     pub fn fig13_axes(family: &str, pes_resolution: usize, bw_resolution: usize) -> DesignSpace {
         let pes = geometric_range(8, 2048, pes_resolution);
-        let bandwidths = geometric_range(1, 256, bw_resolution);
+        let bandwidths = bandwidth_axis(bw_resolution);
         let variants = match family {
             "kc-p" => kc_p_variants(),
             "yr-p" => yr_p_variants(),
@@ -165,7 +165,7 @@ impl DesignSpace {
         let template = StyleTemplate::by_name(family)
             .with_context(|| format!("unknown mapspace family '{family}' (c-p | x-p | yx-p | yr-p | kc-p)"))?;
         let pes = geometric_range(8, 2048, pes_resolution);
-        let bandwidths = geometric_range(1, 256, bw_resolution);
+        let bandwidths = bandwidth_axis(bw_resolution);
         let max_pes = *pes.last().expect("non-empty PE axis");
         let en = mapspace::enumerate(&template, layer, max_pes, tile_resolution);
         anyhow::ensure!(
@@ -206,6 +206,16 @@ pub fn grid_neighbors(n_variants: usize, n_pes: usize, pair: usize) -> Vec<usize
         out.push(pair + 1);
     }
     out
+}
+
+/// The canonical bandwidth axis of every built space: `resolution`
+/// geometrically spaced points in `[1, 256]` elements/cycle (the Fig 13
+/// range). One definition shared by [`DesignSpace::fig13_axes`] and
+/// [`DesignSpace::mapspace`] — and by the profile-vs-monolithic bench —
+/// so the axis can never drift between the hand-pinned and generated
+/// spaces.
+pub fn bandwidth_axis(resolution: usize) -> Vec<u64> {
+    geometric_range(1, 256, resolution)
 }
 
 /// A coarse subsample of an axis of `n` indices: every `ceil(n/4)`-th
@@ -273,6 +283,21 @@ mod tests {
         assert_eq!(r.first(), Some(&8));
         assert_eq!(r.last(), Some(&2048));
         assert!(r.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn bandwidth_axis_is_the_shared_fig13_axis() {
+        for n in [2usize, 5, 8, 9, 16] {
+            let axis = bandwidth_axis(n);
+            assert_eq!(axis.first(), Some(&1));
+            assert_eq!(axis.last(), Some(&256));
+            assert!(axis.len() <= n);
+            assert_eq!(axis, geometric_range(1, 256, n));
+        }
+        // Both constructed spaces ride the same axis.
+        assert_eq!(DesignSpace::fig13_axes("kc-p", 4, 9).bandwidths, bandwidth_axis(9));
+        let ms = DesignSpace::mapspace("kc-p", &vgg16::conv2(), 3, 4, 7).expect("mapspace");
+        assert_eq!(ms.bandwidths, bandwidth_axis(7));
     }
 
     #[test]

@@ -48,6 +48,15 @@
 //!   the guided frontier carries exactly the exhaustive frontier's
 //!   objective values at a fraction of the evaluations
 //!   (`rust/tests/dse_strategies.rs` pins both).
+//!
+//!   The binary search visits one pair across many waves — historically
+//!   each probe re-flattened and re-analyzed the pair's case table, so
+//!   a guided probe cost far more than an exhaustive candidate. The
+//!   engine's sweep-lifetime per-pair table cache
+//!   ([`crate::dse::engine::SweepConfig::reuse_tables`]) now amortizes
+//!   that: the pair's table is built on first touch and every later
+//!   probe replays it, making a probe's marginal cost one scalar
+//!   `eval_runtime` pass.
 
 use anyhow::{bail, ensure, Result};
 

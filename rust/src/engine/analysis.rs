@@ -9,7 +9,11 @@
 //! All analysis is a pure function of `(ShapeKey, dataflow structure,
 //! HwConfig)` — layer and dataflow *names* never reach a formula.
 //! [`Analyzer`] exploits that: it owns the recursion's scratch memo
-//! (reused across calls instead of reallocated) and fronts a
+//! (reused across calls instead of reallocated), computes through the
+//! two-phase split of [`super::profile`] (a bandwidth-invariant
+//! [`ReuseProfile`] memo keyed on [`crate::cache::ProfileKey`] sits
+//! under the full-key store, making bandwidth-axis sweeps near-free),
+//! and fronts a
 //! [`SharedStore`] keyed on [`crate::cache::CacheKey`] (canonical
 //! shape x structural [`DataflowFingerprint`](crate::cache::DataflowFingerprint)
 //! x hardware), so whole-network analysis evaluates each distinct
@@ -27,7 +31,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::cache::{CacheKey, CacheValue, SharedStore};
+use crate::cache::{CacheKey, CacheValue, HwProfileKey, ProfileKey, SharedStore};
 use crate::hw::config::{HwConfig, ReductionSupport};
 use crate::hw::energy::EnergyModel;
 use crate::ir::dataflow::{Dataflow, ResolvedDataflow, ResolvedLevel};
@@ -38,6 +42,7 @@ use crate::model::tensor::{couplings, tensor_elements, TensorKind, ALL_TENSORS};
 
 use super::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
 use super::noc::{level_bandwidth, pipe_delay, reduction_delay};
+use super::profile::ReuseProfile;
 use super::reuse::{psum_revisits, tensor_usage};
 
 /// Energy split in picojoules (Fig 12's stack).
@@ -110,7 +115,7 @@ impl LayerStats {
     }
 }
 
-fn t_idx(t: TensorKind) -> usize {
+pub(crate) fn t_idx(t: TensorKind) -> usize {
     match t {
         TensorKind::Filter => 0,
         TensorKind::Input => 1,
@@ -148,16 +153,43 @@ struct SubOut {
 /// shape that cannot map under a dataflow is diagnosed once per
 /// network, not once per layer; replayed failures name the layer (and,
 /// when it differs, the dataflow) they were diagnosed on.
+///
+/// Underneath the full-key store sits a second, per-Analyzer memo of
+/// bandwidth-invariant [`ReuseProfile`]s keyed by
+/// [`crate::cache::ProfileKey`] (the cache key minus `noc_bandwidth`):
+/// a full-key miss that differs from earlier work only in NoC
+/// bandwidth skips the whole reuse walk and replays the profile's
+/// bandwidth-dependent math (`ReuseProfile::finalize`), bit-identical
+/// to a fresh analysis. Profile replays are counted in
+/// [`Analyzer::profile_hits`] — a diagnostic counter, excluded from
+/// the determinism contract like the hit/miss split. Profiles never
+/// persist and never cross Analyzers; the full-key store (and with it
+/// disk warm starts and the serve daemon's warm-hit accounting) is
+/// untouched.
 #[derive(Debug)]
 pub struct Analyzer {
     store: Arc<SharedStore>,
     /// Whether `store` is shared with other consumers — a shared store
     /// must never be cleared from one shard under the others.
     shared: bool,
-    scratch: HashMap<ScratchKey, SubOut>,
+    /// The profile builder's memo (cleared per build; the allocation is
+    /// reused across calls).
+    scratch: HashMap<ScratchKey, usize>,
+    /// Bandwidth-invariant profiles, layered under the full-key store.
+    profiles: HashMap<ProfileKey, ProfileEntry>,
     hits: u64,
     disk_hits: u64,
     misses: u64,
+    profile_hits: u64,
+}
+
+/// A memoized profile build: the profile itself, or the build failure
+/// (bandwidth-invariant — resolution and schedule construction never
+/// read `noc_bandwidth`) with the names it was diagnosed under.
+#[derive(Debug)]
+enum ProfileEntry {
+    Ready(Arc<ReuseProfile>),
+    Failed { layer: String, dataflow: String, message: String },
 }
 
 impl Default for Analyzer {
@@ -173,9 +205,11 @@ impl Analyzer {
             store: Arc::new(SharedStore::new()),
             shared: false,
             scratch: HashMap::new(),
+            profiles: HashMap::new(),
             hits: 0,
             disk_hits: 0,
             misses: 0,
+            profile_hits: 0,
         }
     }
 
@@ -189,9 +223,11 @@ impl Analyzer {
             store,
             shared: true,
             scratch: HashMap::new(),
+            profiles: HashMap::new(),
             hits: 0,
             disk_hits: 0,
             misses: 0,
+            profile_hits: 0,
         }
     }
 
@@ -265,9 +301,13 @@ impl Analyzer {
             };
         }
         self.misses += 1;
+        // The profile memo sits under the full-key store: reuse the
+        // key's already-computed shape + fingerprint, dropping only the
+        // bandwidth from the hardware component.
+        let pkey = ProfileKey { shape: key.shape, dataflow: key.dataflow, hw: HwProfileKey::of(hw) };
         let out = match resolved {
-            Some(r) => self.compute_resolved(layer, r, hw),
-            None => self.compute(layer, dataflow, hw),
+            Some(r) => self.compute_resolved(layer, r, hw, pkey),
+            None => self.compute(layer, dataflow, hw, pkey),
         };
         match &out {
             Ok(s) => self.store.insert(key, CacheValue::Stats(s.clone())),
@@ -283,14 +323,31 @@ impl Analyzer {
         out
     }
 
-    fn compute(&mut self, layer: &Layer, dataflow: &Dataflow, hw: &HwConfig) -> Result<LayerStats> {
+    /// Two-phase compute: validation first (it reads `noc_bandwidth`,
+    /// so it must run even on a profile hit), then either replay a
+    /// memoized bandwidth-invariant [`ReuseProfile`] or build one. The
+    /// result is bit-identical to the former monolithic body (pinned
+    /// by `rust/tests/properties.rs` against [`analyze_layer`], which
+    /// stays monolithic as the reference implementation).
+    fn compute(
+        &mut self,
+        layer: &Layer,
+        dataflow: &Dataflow,
+        hw: &HwConfig,
+        pkey: ProfileKey,
+    ) -> Result<LayerStats> {
         hw.validate()?;
         layer.validate()?;
-        let resolved = dataflow.resolve(layer, hw.num_pes)?;
-        // Straight to the core — compute_resolved would validate a
-        // second time, and misses are the sweep's hot path.
-        self.scratch.clear();
-        analyze_resolved_with(layer, &resolved, hw, &mut self.scratch)
+        if let Some(out) = self.finalize_memoized(&pkey, &layer.name, &dataflow.name, hw) {
+            return out;
+        }
+        // Profile miss: resolve, then run the bandwidth-invariant walk
+        // once. Resolution failures are bandwidth-invariant too, so
+        // they memoize under the same key.
+        let built = dataflow
+            .resolve(layer, hw.num_pes)
+            .and_then(|r| ReuseProfile::build_with(layer, &r, hw, &mut self.scratch));
+        self.memoize_and_finalize(pkey, built, &layer.name, &dataflow.name, hw)
     }
 
     /// Entry for callers that resolved the dataflow themselves (the
@@ -301,11 +358,80 @@ impl Analyzer {
         layer: &Layer,
         resolved: &ResolvedDataflow,
         hw: &HwConfig,
+        pkey: ProfileKey,
     ) -> Result<LayerStats> {
         hw.validate()?;
         layer.validate()?;
-        self.scratch.clear();
-        analyze_resolved_with(layer, resolved, hw, &mut self.scratch)
+        if let Some(out) = self.finalize_memoized(&pkey, &layer.name, &resolved.name, hw) {
+            return out;
+        }
+        let built = ReuseProfile::build_with(layer, resolved, hw, &mut self.scratch);
+        self.memoize_and_finalize(pkey, built, &layer.name, &resolved.name, hw)
+    }
+
+    /// Replay a memoized profile (or memoized build failure) at `hw`,
+    /// relabeled with the caller's names — the same convention as
+    /// full-key store hits. `None` means profile miss.
+    fn finalize_memoized(
+        &mut self,
+        pkey: &ProfileKey,
+        layer_name: &str,
+        dataflow_name: &str,
+        hw: &HwConfig,
+    ) -> Option<Result<LayerStats>> {
+        let entry = self.profiles.get(pkey)?;
+        self.profile_hits += 1;
+        Some(match entry {
+            ProfileEntry::Ready(p) => {
+                let mut s = p.finalize(hw);
+                s.layer = layer_name.to_string();
+                s.dataflow = dataflow_name.to_string();
+                Ok(s)
+            }
+            ProfileEntry::Failed { layer: diagnosed_on, dataflow: diagnosed_df, message } => {
+                let mut msg = message.clone();
+                if diagnosed_on != layer_name {
+                    msg = format!("{msg} (diagnosed on same-shape layer '{diagnosed_on}')");
+                }
+                if diagnosed_df != dataflow_name {
+                    msg = format!("{msg} (under structurally identical dataflow '{diagnosed_df}')");
+                }
+                Err(anyhow!("{msg}"))
+            }
+        })
+    }
+
+    /// Record a fresh profile build under `pkey` and finalize it at
+    /// `hw` (successes), or record the failure and propagate the
+    /// original error chain unchanged.
+    fn memoize_and_finalize(
+        &mut self,
+        pkey: ProfileKey,
+        built: Result<ReuseProfile>,
+        layer_name: &str,
+        dataflow_name: &str,
+        hw: &HwConfig,
+    ) -> Result<LayerStats> {
+        match built {
+            Ok(p) => {
+                let mut s = p.finalize(hw);
+                s.layer = layer_name.to_string();
+                s.dataflow = dataflow_name.to_string();
+                self.profiles.insert(pkey, ProfileEntry::Ready(Arc::new(p)));
+                Ok(s)
+            }
+            Err(e) => {
+                self.profiles.insert(
+                    pkey,
+                    ProfileEntry::Failed {
+                        layer: layer_name.to_string(),
+                        dataflow: dataflow_name.to_string(),
+                        message: format!("{e:#}"),
+                    },
+                );
+                Err(e)
+            }
+        }
     }
 
     /// Layer-cache hits by this Analyzer since construction (or
@@ -325,6 +451,14 @@ impl Analyzer {
         self.disk_hits
     }
 
+    /// Full-key misses that replayed a memoized bandwidth-invariant
+    /// profile instead of re-running the reuse walk (diagnostic only,
+    /// like the hit/miss split — excluded from the determinism
+    /// contract). A subset of [`Analyzer::cache_misses`].
+    pub fn profile_hits(&self) -> u64 {
+        self.profile_hits
+    }
+
     /// Distinct (shape, dataflow, hardware) entries in the store.
     pub fn cache_len(&self) -> usize {
         self.store.len()
@@ -337,10 +471,16 @@ impl Analyzer {
     /// hit again — clearing bounds memory to O(unique shapes) instead
     /// of O(pairs x shapes). A no-op on a shared store, whose entries
     /// belong to every consumer (and to the persistence layer).
+    ///
+    /// The profile memo is dropped unconditionally: it is per-Analyzer
+    /// (never shared, never persisted), and its keys carry the dataflow
+    /// fingerprint and PE count, so entries from a finished pair can
+    /// never hit again — clearing bounds it the same way.
     pub fn clear_cache(&mut self) {
         if !self.shared {
             self.store.clear();
         }
+        self.profiles.clear();
     }
 
     /// Drop all cached results (private stores only) and zero the
@@ -350,9 +490,11 @@ impl Analyzer {
             self.store.clear();
         }
         self.scratch.clear();
+        self.profiles.clear();
         self.hits = 0;
         self.disk_hits = 0;
         self.misses = 0;
+        self.profile_hits = 0;
     }
 }
 
@@ -428,8 +570,10 @@ fn analyze_resolved_with(
 
 /// Key of the recursion's per-call scratch memo (distinct from the
 /// cross-call [`crate::cache::CacheKey`]): (remaining levels, parent
-/// tile, entry fresh fractions).
-type ScratchKey = (usize, [u64; 7], [u64; 3]);
+/// tile, entry fresh fractions). Shared with the two-phase profile
+/// builder ([`super::profile`]), whose arena mirrors this memo's
+/// structure one node per unique key.
+pub(crate) type ScratchKey = (usize, [u64; 7], [u64; 3]);
 
 /// Recursive core: analyze `levels[0]` over `parent_tile`; deeper levels
 /// provide the per-step compute delay.
@@ -592,7 +736,7 @@ fn analyze_levels(
     Ok(out)
 }
 
-fn tile_key(t: &DimMap<u64>) -> [u64; 7] {
+pub(crate) fn tile_key(t: &DimMap<u64>) -> [u64; 7] {
     let mut k = [0u64; 7];
     for (i, (_, v)) in t.iter().enumerate() {
         k[i] = v;
@@ -691,13 +835,17 @@ impl Objective {
 }
 
 /// The uniform cache-counter segment of every stats summary line —
-/// mem-hits / disk-hits / misses / evictions, spelled
-/// `cache=Xh/Yd/Zm/Ee`. Shared by [`SweepStats::summary`]
+/// mem-hits / disk-hits / misses / evictions / profile-replays, spelled
+/// `cache=Xh/Yd/Zm/Ee/Pp`. Shared by [`SweepStats::summary`]
 /// (`crate::dse::engine`), [`MapperStats::summary`]
 /// (`crate::mapspace::mapper`), and the service layer, so the split
-/// can never drift between the sweep and mapper reports again.
-pub fn fmt_cache_counters(hits: u64, disk_hits: u64, misses: u64, evictions: u64) -> String {
-    format!("cache={hits}h/{disk_hits}d/{misses}m/{evictions}e")
+/// can never drift between the sweep and mapper reports again. The
+/// whole segment is diagnostic (excluded from the determinism
+/// contract); keeping every counter inside the one space-free
+/// `cache=` token is load-bearing — CI's thread-determinism smoke
+/// strips exactly that token.
+pub fn fmt_cache_counters(hits: u64, disk_hits: u64, misses: u64, evictions: u64, profile_hits: u64) -> String {
+    format!("cache={hits}h/{disk_hits}d/{misses}m/{evictions}e/{profile_hits}p")
 }
 
 /// The scalar a layer's stats score under an objective (lower is
@@ -813,8 +961,8 @@ mod tests {
 
     #[test]
     fn cache_counter_segment_is_uniform() {
-        assert_eq!(fmt_cache_counters(3, 1, 2, 0), "cache=3h/1d/2m/0e");
-        assert_eq!(fmt_cache_counters(0, 0, 0, 7), "cache=0h/0d/0m/7e");
+        assert_eq!(fmt_cache_counters(3, 1, 2, 0, 4), "cache=3h/1d/2m/0e/4p");
+        assert_eq!(fmt_cache_counters(0, 0, 0, 7, 0), "cache=0h/0d/0m/7e/0p");
     }
 
     #[test]
@@ -1015,6 +1163,63 @@ mod tests {
         let e2 = analyzer.analyze(&layer, &styles::kc_p(), &h).unwrap_err().to_string();
         assert_eq!((analyzer.cache_misses(), analyzer.cache_hits()), (1, 1));
         assert!(!e1.is_empty() && e2.contains("exceed"), "diagnostic survives the cache: {e2}");
+    }
+
+    #[test]
+    fn bandwidth_axis_replays_one_profile() {
+        // Sweeping only noc_bandwidth: every point is a full-key miss
+        // (distinct HwKey), but all points after the first replay one
+        // bandwidth-invariant profile — and stay bit-identical to a
+        // fresh monolithic analysis.
+        let layer = vgg16::conv2();
+        let df = styles::kc_p();
+        let mut analyzer = Analyzer::new();
+        let bws = [1u64, 4, 16, 64, 256];
+        for (i, bw) in bws.iter().enumerate() {
+            let h = HwConfig { noc_bandwidth: *bw, ..hw() };
+            let got = analyzer.analyze(&layer, &df, &h).unwrap();
+            assert_eq!(got, analyze_layer(&layer, &df, &h).unwrap(), "bw={bw}");
+            assert_eq!(analyzer.cache_misses(), (i + 1) as u64);
+            assert_eq!(analyzer.profile_hits(), i as u64, "bw={bw}");
+        }
+        // Replaying a seen bandwidth hits the full-key store first and
+        // never reaches the profile memo.
+        let h = HwConfig { noc_bandwidth: 16, ..hw() };
+        analyzer.analyze(&layer, &df, &h).unwrap();
+        assert_eq!(analyzer.cache_hits(), 1);
+        assert_eq!(analyzer.profile_hits(), (bws.len() - 1) as u64);
+    }
+
+    #[test]
+    fn profile_failure_replays_keep_their_diagnostics() {
+        // kc-p cannot host its 64-wide C cluster on 8 PEs; the failure
+        // is bandwidth-invariant, so a second bandwidth point replays
+        // the memoized diagnosis instead of re-resolving.
+        let layer = vgg16::conv13();
+        let mut h = hw();
+        h.num_pes = 8;
+        let mut analyzer = Analyzer::new();
+        let e1 = format!("{:#}", analyzer.analyze(&layer, &styles::kc_p(), &h).unwrap_err());
+        h.noc_bandwidth = 4;
+        let e2 = format!("{:#}", analyzer.analyze(&layer, &styles::kc_p(), &h).unwrap_err());
+        assert_eq!(analyzer.profile_hits(), 1);
+        assert_eq!(analyzer.cache_misses(), 2, "distinct bandwidths are distinct full keys");
+        assert_eq!(e1, e2, "same layer + dataflow: replayed diagnosis renders identically");
+        assert!(e2.contains("exceed"), "{e2}");
+    }
+
+    #[test]
+    fn profile_hits_still_validate_hardware() {
+        // hw.validate() reads noc_bandwidth, so it must run even when
+        // the bandwidth-invariant profile is already memoized.
+        let layer = vgg16::conv2();
+        let df = styles::kc_p();
+        let mut analyzer = Analyzer::new();
+        analyzer.analyze(&layer, &df, &hw()).unwrap();
+        let mut bad = hw();
+        bad.noc_bandwidth = 0;
+        let err = analyzer.analyze(&layer, &df, &bad).unwrap_err().to_string();
+        assert!(err.contains("noc_bandwidth"), "{err}");
     }
 
     #[test]

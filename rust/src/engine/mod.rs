@@ -11,9 +11,14 @@
 //! * [`noc`] — the pipe NoC model (§4.2);
 //! * [`analysis`] — recursive performance + cost analysis (runtime,
 //!   buffer accesses and sizing, energy, bandwidth requirements), layer
-//!   and network entry points, and the adaptive-dataflow selector.
+//!   and network entry points, and the adaptive-dataflow selector;
+//! * [`profile`] — the two-phase split of that analysis: a
+//!   bandwidth-invariant [`profile::ReuseProfile`] built once per
+//!   (shape, dataflow, hardware-minus-bandwidth), finalized per
+//!   bandwidth point (bit-identical to the monolithic path).
 
 pub mod analysis;
 pub mod mapping;
 pub mod noc;
+pub mod profile;
 pub mod reuse;

@@ -1,0 +1,522 @@
+//! Two-phase analysis: bandwidth-invariant [`ReuseProfile`]s.
+//!
+//! Of everything [`super::analysis`] computes, only the pipe-model NoC
+//! delays depend on `HwConfig::noc_bandwidth`: `pipe_delay(elements,
+//! level_bandwidth(hw, outer_units), noc_latency)` and the values
+//! derived from it (per-class delays, runtime, utilization,
+//! `peak_bw_need`). Every reuse quantity — the resolved schedule, the
+//! transition classes, per-class ingress/egress volumes, reduction
+//! fan-in delays, MAC counts and leaf compute delays, buffer access
+//! counts, and the double-buffered buffer requirements — is a pure
+//! function of `(shape, dataflow structure, hardware minus
+//! noc_bandwidth)`.
+//!
+//! This module splits the analysis on exactly that line. Phase one,
+//! [`ReuseProfile::build`], runs the same recursive cluster walk as the
+//! monolithic engine and records its bandwidth-invariant product: an
+//! arena of per-(sub-level, tile, entry-freshness) nodes (one per
+//! unique scratch-memo key, children before parents), each holding its
+//! `outer_units` and a per-transition-class replay record (occurrences,
+//! ingress/egress totals, reduction delay, init-vs-steady delay rule,
+//! and the compute term — a precomputed leaf delay or a reference to
+//! the inner node). Phase two, [`ReuseProfile::finalize`], replays only
+//! the bandwidth-dependent math: per-node `level_bandwidth`, per-class
+//! `pipe_delay` in/out, the init/steady delay combination, runtime
+//! accumulation bottom-up through the arena, `peak_bw_need`,
+//! utilization, and the `EnergyBreakdown` assembly.
+//!
+//! # Bit-identity contract
+//!
+//! `ReuseProfile::build(layer, resolved, hw)?.finalize(hw)` is
+//! **bit-identical** to the monolithic
+//! [`super::analysis::analyze_layer`] for every input: the build phase
+//! performs the identical floating-point operations in the identical
+//! order for every bandwidth-invariant quantity, and finalize replays
+//! the remaining operations verbatim (same accumulation order over the
+//! same class sequence). Because outputs are unchanged bit for bit,
+//! `cache::persist::ANALYSIS_VERSION` is deliberately **not** bumped by
+//! this split — persisted `LayerStats` from the monolithic engine
+//! remain valid. The contract is pinned by
+//! `rust/tests/properties.rs` (random (shape, style, hw, bw) tuples,
+//! finalize vs monolithic field-for-field by bit pattern) and by every
+//! pre-existing determinism test, which all route through
+//! [`super::analysis::Analyzer`] and therefore through this module.
+//!
+//! # Why this matters
+//!
+//! The DSE design space is `(variant, PEs) pairs x bandwidths`: an
+//! R-point bandwidth axis used to cost R full analyses per pair, and
+//! now costs one profile build plus R O(classes) finalizes. The
+//! `Analyzer` memoizes profiles under
+//! [`crate::cache::ProfileKey`] ([`crate::cache::HwProfileKey`] drops
+//! `noc_bandwidth`), layered *under* the full-key `LayerStats` store —
+//! so disk persistence and warm-hit accounting are untouched, and a
+//! full-key miss that differs from a previous analysis only in
+//! bandwidth becomes a near-free finalize (surfaced as
+//! `profile_hits`, a diagnostic counter).
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::hw::config::{HwConfig, ReductionSupport};
+use crate::hw::energy::EnergyModel;
+use crate::ir::dataflow::{ResolvedDataflow, ResolvedLevel};
+use crate::ir::dims::DimMap;
+use crate::model::layer::Layer;
+use crate::model::tensor::{couplings, TensorKind, ALL_TENSORS};
+
+use super::analysis::{t_idx, tile_key, EnergyBreakdown, LayerStats, ScratchKey};
+use super::mapping::{build_schedule, macs_per_unit, transition_classes, Advanced};
+use super::noc::{level_bandwidth, pipe_delay, reduction_delay};
+use super::reuse::{psum_revisits, tensor_usage};
+
+/// The compute term of one transition class: either a leaf (PE-level)
+/// delay — bandwidth-invariant, precomputed at build time — or the
+/// runtime of an inner cluster level, which depends on bandwidth and is
+/// resolved at finalize time through the arena.
+#[derive(Debug, Clone, Copy)]
+enum ComputeRef {
+    /// Leaf compute delay in cycles (already ceil'd and clamped).
+    Leaf(f64),
+    /// Index of the inner node whose finalized runtime is this class's
+    /// compute delay. Always less than the referencing node's own index
+    /// (children are pushed before parents).
+    Inner(usize),
+}
+
+/// Bandwidth-invariant replay record for one transition class.
+#[derive(Debug, Clone, Copy)]
+struct ClassRecord {
+    /// Occurrences of this class (as f64, the form the accumulation
+    /// uses).
+    occ: f64,
+    /// Parent-buffer read volume per step (ingress_total).
+    ingress: f64,
+    /// Parent-buffer write volume per step (egress_total).
+    egress: f64,
+    /// Spatial-reduction delay (fan-in dependent, bandwidth-invariant).
+    red_delay: f64,
+    /// Whether this is the GlobalInit class (serialized in+compute+out
+    /// instead of the steady-state max).
+    global_init: bool,
+    compute: ComputeRef,
+}
+
+/// Bandwidth-invariant totals of one node's subtree — the `SubOut`
+/// fields that do not depend on `noc_bandwidth`.
+#[derive(Debug, Clone, Copy, Default)]
+struct Invariant {
+    macs: f64,
+    l2_reads: [f64; 3],
+    l2_writes: [f64; 3],
+    l1_cluster_reads: f64,
+    l1_fills: f64,
+    noc_delivered: f64,
+    l1_req: u64,
+    l2_req: u64,
+}
+
+/// One arena node: a unique (remaining levels, parent tile, entry
+/// freshness) subtree of the recursive walk.
+#[derive(Debug, Clone)]
+struct ProfileNode {
+    /// Product of units above this level — `level_bandwidth`'s divisor.
+    outer_units: u64,
+    classes: Vec<ClassRecord>,
+    inv: Invariant,
+}
+
+/// The bandwidth-invariant product of analyzing one (layer, resolved
+/// dataflow, hardware-minus-bandwidth) triple. Build once, then
+/// [`finalize`](ReuseProfile::finalize) per bandwidth point.
+#[derive(Debug, Clone)]
+pub struct ReuseProfile {
+    /// Layer name at build time (callers relabel, as with cache hits).
+    layer: String,
+    /// Resolved dataflow name at build time.
+    dataflow: String,
+    /// `layer.sparsity_macs_scale()` captured at build time.
+    mac_scale: f64,
+    /// Nodes in finalize order: every `ComputeRef::Inner(j)` satisfies
+    /// `j < i` for its owner `i`; the root is last.
+    nodes: Vec<ProfileNode>,
+}
+
+impl ReuseProfile {
+    /// Phase one: run the bandwidth-invariant walk over an
+    /// already-resolved dataflow. Fails exactly where the monolithic
+    /// engine fails (schedule construction, class enumeration, "no MACs
+    /// analyzed") — bandwidth-invariant failures, so callers may cache
+    /// them under the same profile key.
+    pub fn build(layer: &Layer, resolved: &ResolvedDataflow, hw: &HwConfig) -> Result<ReuseProfile> {
+        let mut memo = HashMap::new();
+        ReuseProfile::build_with(layer, resolved, hw, &mut memo)
+    }
+
+    /// As [`ReuseProfile::build`], against a caller-owned (cleared
+    /// here) memo so a long-lived `Analyzer` reuses one allocation.
+    pub(crate) fn build_with(
+        layer: &Layer,
+        resolved: &ResolvedDataflow,
+        hw: &HwConfig,
+        memo: &mut HashMap<ScratchKey, usize>,
+    ) -> Result<ReuseProfile> {
+        memo.clear();
+        let mut nodes = Vec::new();
+        let top_tile = resolved.levels[0].parent_tile;
+        let root = profile_levels(
+            &resolved.levels,
+            &top_tile,
+            [1.0, 1.0, 1.0],
+            layer,
+            hw,
+            0,
+            1,
+            memo,
+            &mut nodes,
+        )?;
+        debug_assert_eq!(root, nodes.len() - 1, "root must be the last node pushed");
+        ensure!(nodes[root].inv.macs > 0.0, "no MACs analyzed");
+        Ok(ReuseProfile {
+            layer: layer.name.clone(),
+            dataflow: resolved.name.clone(),
+            mac_scale: layer.sparsity_macs_scale(),
+            nodes,
+        })
+    }
+
+    /// Phase two: replay the bandwidth-dependent math for one hardware
+    /// point. `hw` must agree with the build hardware on every field
+    /// except `noc_bandwidth` (the `Analyzer` enforces this via
+    /// [`crate::cache::ProfileKey`]); the result is bit-identical to
+    /// the monolithic analysis at `hw`.
+    pub fn finalize(&self, hw: &HwConfig) -> LayerStats {
+        // Per-node runtimes, bottom-up: children precede parents in the
+        // arena, so a single forward pass resolves every ComputeRef.
+        let mut runtimes = vec![0.0f64; self.nodes.len()];
+        let mut peaks = vec![0.0f64; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let bw = level_bandwidth(hw, node.outer_units);
+            let mut runtime = 0.0f64;
+            let mut peak = 0.0f64;
+            for class in &node.classes {
+                let compute_delay = match class.compute {
+                    ComputeRef::Leaf(d) => d,
+                    ComputeRef::Inner(j) => runtimes[j],
+                };
+                let in_delay = pipe_delay(class.ingress, bw, hw.noc_latency);
+                let out_delay = pipe_delay(class.egress, bw, hw.noc_latency);
+                let cmp_delay = compute_delay + class.red_delay;
+                let delay = if class.global_init {
+                    in_delay + cmp_delay + out_delay
+                } else {
+                    in_delay.max(cmp_delay).max(out_delay)
+                };
+                runtime += class.occ * delay;
+                peak = peak.max((class.ingress + class.egress) / cmp_delay.max(1.0));
+            }
+            runtimes[i] = runtime;
+            peaks[i] = peak;
+        }
+        let root = self.nodes.len() - 1;
+        let inv = &self.nodes[root].inv;
+
+        let macs = inv.macs * self.mac_scale;
+        let runtime = runtimes[root].max(1.0);
+
+        // Identical assembly to the monolithic path (same expressions,
+        // same order — see analysis::analyze_resolved_with).
+        let em = EnergyModel::for_sizes(hw.l1_size, hw.l2_size);
+        let l1_reads = 3.0 * macs + inv.l1_cluster_reads;
+        let l1_writes = macs + inv.l1_fills;
+        let l2r: f64 = inv.l2_reads.iter().sum();
+        let l2w: f64 = inv.l2_writes.iter().sum();
+        let energy = EnergyBreakdown {
+            mac: macs * em.mac_pj,
+            l1: l1_reads * em.l1_read_pj + l1_writes * em.l1_write_pj,
+            l2: l2r * em.l2_read_pj + l2w * em.l2_write_pj,
+            noc: inv.noc_delivered * hw.noc_latency.max(1) as f64 * em.noc_hop_pj,
+        };
+
+        LayerStats {
+            layer: self.layer.clone(),
+            dataflow: self.dataflow.clone(),
+            runtime,
+            macs,
+            util: macs / (runtime * (hw.num_pes * hw.pe_throughput) as f64),
+            l2_reads: inv.l2_reads,
+            l2_writes: inv.l2_writes,
+            l1_fills: inv.l1_fills,
+            l1_reads,
+            l1_writes,
+            noc_delivered: inv.noc_delivered,
+            l1_req: inv.l1_req,
+            l2_req: inv.l2_req,
+            peak_bw_need: peaks[root],
+            energy,
+        }
+    }
+
+    /// Arena size (unique subtrees) — diagnostics and tests.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// The bandwidth-invariant mirror of `analysis::analyze_levels`: same
+/// schedule build, class enumeration, tensor-usage accounting, and
+/// recursion (including the scratch-memo structure — one node per
+/// unique key), but it records replay terms instead of combining them
+/// with pipe delays. Returns the arena index of this subtree's node.
+#[allow(clippy::too_many_arguments)]
+fn profile_levels(
+    levels: &[ResolvedLevel],
+    parent_tile: &DimMap<u64>,
+    entry_fresh: [f64; 3],
+    layer: &Layer,
+    hw: &HwConfig,
+    depth: usize,
+    outer_units: u64,
+    memo: &mut HashMap<ScratchKey, usize>,
+    nodes: &mut Vec<ProfileNode>,
+) -> Result<usize> {
+    let key = (
+        levels.len(),
+        tile_key(parent_tile),
+        [entry_fresh[0].to_bits(), entry_fresh[1].to_bits(), entry_fresh[2].to_bits()],
+    );
+    if let Some(&idx) = memo.get(&key) {
+        return Ok(idx);
+    }
+
+    let level = &levels[0];
+    let sched = build_schedule(level, parent_tile, layer)?;
+    let classes = transition_classes(&sched)?;
+    let revisits = psum_revisits(&sched, layer) as f64;
+    let coup = couplings(layer);
+    let inner_units = outer_units * sched.units;
+
+    let mut inv = Invariant::default();
+    let mut records = Vec::with_capacity(classes.len());
+    let mut l1_working_max: u64 = 0;
+    let mut l2_working_max: f64 = 0.0;
+
+    for class in &classes {
+        let occ = class.occurrences as f64;
+        let active = class.active.max(1);
+
+        let mut ingress_total = 0.0;
+        let mut egress_total = 0.0;
+        let mut delivered_total = 0.0;
+        let mut red_delay = 0.0f64;
+        let mut footprint_sum: u64 = 0;
+        let mut class_fresh = [1.0f64, 1.0, 1.0];
+
+        for (ci, kind) in ALL_TENSORS.iter().enumerate() {
+            let mut u = tensor_usage(&sched, class, &coup[ci], *kind);
+            if *kind != TensorKind::Output {
+                u.fresh *= entry_fresh[ci];
+            }
+            class_fresh[ci] = u.fresh;
+            if u.footprint_unit == 0 {
+                continue;
+            }
+            footprint_sum += u.footprint_unit;
+            match *kind {
+                TensorKind::Output => {
+                    let reduced = u.spatially_reduced;
+                    let egress_unique = if reduced && hw.reduction == ReductionSupport::None {
+                        u.fresh * (u.footprint_unit * active) as f64
+                    } else {
+                        u.unique_fresh()
+                    };
+                    let psum_ingress = egress_unique * (revisits - 1.0) / revisits;
+                    egress_total += egress_unique;
+                    ingress_total += psum_ingress;
+                    inv.l2_writes[t_idx(*kind)] += occ * egress_unique;
+                    inv.l2_reads[t_idx(*kind)] += occ * psum_ingress;
+                    delivered_total += psum_ingress;
+                    if reduced && hw.reduction != ReductionSupport::None {
+                        red_delay = red_delay.max(reduction_delay(hw.reduction, active));
+                    } else if reduced {
+                        red_delay = red_delay.max(reduction_delay(ReductionSupport::None, active));
+                    }
+                }
+                _ => {
+                    let unique = if hw.multicast {
+                        u.unique_fresh()
+                    } else {
+                        u.delivered_fresh(active)
+                    };
+                    ingress_total += unique;
+                    delivered_total += u.delivered_fresh(active);
+                    inv.l2_reads[t_idx(*kind)] += occ * unique;
+                }
+            }
+        }
+
+        let (compute, macs_unit, inner_idx) = if levels.len() > 1 {
+            let inner_entry = [class_fresh[0], class_fresh[1], 1.0];
+            let j = profile_levels(
+                &levels[1..],
+                &class.tile,
+                inner_entry,
+                layer,
+                hw,
+                depth + 1,
+                inner_units,
+                memo,
+                nodes,
+            )?;
+            (ComputeRef::Inner(j), nodes[j].inv.macs, Some(j))
+        } else {
+            let m = macs_per_unit(&sched, class, layer) as f64;
+            let d = (m * layer.sparsity_macs_scale() / hw.pe_throughput as f64).ceil().max(1.0);
+            (ComputeRef::Leaf(d), m, None)
+        };
+
+        inv.macs += occ * macs_unit * active as f64;
+        inv.l1_fills += occ * delivered_total;
+        inv.noc_delivered += occ * (delivered_total + egress_total);
+
+        if let Some(j) = inner_idx {
+            let sub = nodes[j].inv;
+            let scale = occ * active as f64;
+            inv.l1_cluster_reads +=
+                scale * (sub.l2_reads.iter().sum::<f64>() + sub.l2_writes.iter().sum::<f64>());
+            inv.l1_fills += scale * sub.l1_fills;
+            inv.l1_cluster_reads += scale * sub.l1_cluster_reads;
+            inv.noc_delivered += scale * sub.noc_delivered;
+            inv.l1_req = inv.l1_req.max(sub.l1_req);
+        }
+
+        l1_working_max = l1_working_max.max(footprint_sum);
+        l2_working_max = l2_working_max.max(ingress_total + egress_total);
+
+        records.push(ClassRecord {
+            occ,
+            ingress: ingress_total,
+            egress: egress_total,
+            red_delay,
+            global_init: matches!(class.advanced, Advanced::GlobalInit),
+            compute,
+        });
+    }
+
+    if levels.len() == 1 {
+        inv.l1_req = inv.l1_req.max(2 * l1_working_max);
+    }
+    if depth == 0 {
+        inv.l2_req = (2.0 * l2_working_max).ceil() as u64;
+    }
+
+    let idx = nodes.len();
+    nodes.push(ProfileNode { outer_units, classes: records, inv });
+    memo.insert(key, idx);
+    Ok(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::analysis::analyze_layer;
+    use crate::ir::styles;
+    use crate::model::zoo::vgg16;
+
+    fn bits_equal(a: &LayerStats, b: &LayerStats) -> bool {
+        fn fb(x: f64, y: f64) -> bool {
+            x.to_bits() == y.to_bits()
+        }
+        a.layer == b.layer
+            && a.dataflow == b.dataflow
+            && fb(a.runtime, b.runtime)
+            && fb(a.macs, b.macs)
+            && fb(a.util, b.util)
+            && a.l2_reads.iter().zip(&b.l2_reads).all(|(x, y)| fb(*x, *y))
+            && a.l2_writes.iter().zip(&b.l2_writes).all(|(x, y)| fb(*x, *y))
+            && fb(a.l1_fills, b.l1_fills)
+            && fb(a.l1_reads, b.l1_reads)
+            && fb(a.l1_writes, b.l1_writes)
+            && fb(a.noc_delivered, b.noc_delivered)
+            && a.l1_req == b.l1_req
+            && a.l2_req == b.l2_req
+            && fb(a.peak_bw_need, b.peak_bw_need)
+            && fb(a.energy.mac, b.energy.mac)
+            && fb(a.energy.l1, b.energy.l1)
+            && fb(a.energy.l2, b.energy.l2)
+            && fb(a.energy.noc, b.energy.noc)
+    }
+
+    #[test]
+    fn finalize_matches_monolithic_at_build_bandwidth() {
+        let layer = vgg16::conv2();
+        let hw = HwConfig::fig10_default();
+        for df in styles::all_styles() {
+            let Ok(resolved) = df.resolve(&layer, hw.num_pes) else { continue };
+            let profile = ReuseProfile::build(&layer, &resolved, &hw).unwrap();
+            let fresh = analyze_layer(&layer, &df, &hw).unwrap();
+            assert!(
+                bits_equal(&profile.finalize(&hw), &fresh),
+                "{}: finalize diverged from monolithic",
+                df.name
+            );
+        }
+    }
+
+    #[test]
+    fn one_profile_serves_the_whole_bandwidth_axis() {
+        let layer = vgg16::conv2();
+        let base = HwConfig::fig10_default();
+        let df = styles::kc_p();
+        let resolved = df.resolve(&layer, base.num_pes).unwrap();
+        let profile = ReuseProfile::build(&layer, &resolved, &base).unwrap();
+        for bw in [1u64, 2, 4, 7, 16, 33, 64, 128, 256] {
+            let hw = HwConfig { noc_bandwidth: bw, ..base.clone() };
+            let fresh = analyze_layer(&layer, &df, &hw).unwrap();
+            assert!(
+                bits_equal(&profile.finalize(&hw), &fresh),
+                "bw={bw}: finalize diverged from monolithic"
+            );
+        }
+    }
+
+    #[test]
+    fn build_fails_where_the_monolithic_engine_fails() {
+        // A spatial extent larger than the PE array cannot resolve; the
+        // failure happens at resolve time for both paths. Profiles must
+        // also reproduce the "no MACs analyzed" class of failure —
+        // exercised indirectly: any layer/dataflow pair that analyzes
+        // monolithically must profile, and vice versa.
+        let layer = vgg16::conv2();
+        let hw = HwConfig::fig10_default();
+        for df in styles::all_styles() {
+            let mono = analyze_layer(&layer, &df, &hw);
+            match df.resolve(&layer, hw.num_pes) {
+                Ok(resolved) => {
+                    let built = ReuseProfile::build(&layer, &resolved, &hw);
+                    assert_eq!(mono.is_ok(), built.is_ok(), "{}", df.name);
+                }
+                Err(_) => assert!(mono.is_err(), "{}", df.name),
+            }
+        }
+    }
+
+    #[test]
+    fn arena_orders_children_before_parents() {
+        let layer = vgg16::conv2();
+        let hw = HwConfig::fig10_default();
+        // yr-p carries an inner cluster level, so the arena has depth.
+        let df = styles::yr_p();
+        let resolved = df.resolve(&layer, hw.num_pes).unwrap();
+        let profile = ReuseProfile::build(&layer, &resolved, &hw).unwrap();
+        assert!(profile.node_count() >= 2, "expected a multi-node arena");
+        for (i, node) in profile.nodes.iter().enumerate() {
+            for class in &node.classes {
+                if let ComputeRef::Inner(j) = class.compute {
+                    assert!(j < i, "node {i} references not-yet-finalized node {j}");
+                }
+            }
+        }
+    }
+}

@@ -156,6 +156,11 @@ pub struct MapperStats {
     /// Entries the backing store's capacity cap dropped during this
     /// run (0 for unbounded stores).
     pub evictions: u64,
+    /// The subset of `cache_misses` that skipped the bandwidth-variant
+    /// analysis by replaying a memoized
+    /// [`crate::engine::profile::ReuseProfile`]. Diagnostic only, like
+    /// the hit/miss split.
+    pub profile_hits: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
 }
@@ -180,6 +185,7 @@ impl MapperStats {
                 self.cache_disk_hits,
                 self.cache_misses,
                 self.evictions,
+                self.profile_hits,
             ),
             self.seconds,
         )
@@ -218,6 +224,7 @@ struct ChunkSearch {
     cache_hits: u64,
     cache_disk_hits: u64,
     cache_misses: u64,
+    profile_hits: u64,
 }
 
 /// Evaluate a candidate slice in order through `analyzer`, tracking the
@@ -270,6 +277,7 @@ fn merge_chunks(chunks: Vec<ChunkSearch>, objective: Objective) -> ChunkSearch {
         merged.cache_hits += chunk.cache_hits;
         merged.cache_disk_hits += chunk.cache_disk_hits;
         merged.cache_misses += chunk.cache_misses;
+        merged.profile_hits += chunk.profile_hits;
         if let Some((s, df)) = chunk.best {
             let better = match &merged.best {
                 None => true,
@@ -323,6 +331,7 @@ impl Mapper {
         let t0 = std::time::Instant::now();
         let (hits0, misses0) = (self.analyzer.cache_hits(), self.analyzer.cache_misses());
         let disk0 = self.analyzer.disk_hits();
+        let profile0 = self.analyzer.profile_hits();
         let evictions0 = self.analyzer.store().evictions();
         let mut stats = MapperStats::default();
         let mut per_shape: Vec<ShapeMapping> = Vec::new();
@@ -403,7 +412,7 @@ impl Mapper {
         // Cache counters accumulated from the pooled path's per-chunk
         // analyzers (stay 0 on the serial path, which reads the
         // mapper's own analyzer deltas below).
-        let mut pool_counters = (0u64, 0u64, 0u64);
+        let mut pool_counters = (0u64, 0u64, 0u64, 0u64);
         if threads <= 1 {
             // The serial reference: one pass, the mapper's own
             // analyzer, the whole candidate list as a single chunk.
@@ -431,6 +440,7 @@ impl Mapper {
                     out.cache_hits = analyzer.cache_hits();
                     out.cache_disk_hits = analyzer.disk_hits();
                     out.cache_misses = analyzer.cache_misses();
+                    out.profile_hits = analyzer.profile_hits();
                     out
                 });
                 for group in net.unique_shapes() {
@@ -451,6 +461,7 @@ impl Mapper {
                     pool_counters.0 += merged.cache_hits;
                     pool_counters.1 += merged.cache_disk_hits;
                     pool_counters.2 += merged.cache_misses;
+                    pool_counters.3 += merged.profile_hits;
                     record(&group, merged, &mut stats);
                 }
             });
@@ -476,10 +487,11 @@ impl Mapper {
         ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
         // Pool-worker counters (pooled path; 0 serially) plus the
         // mapper's own analyzer deltas (serial search + assembly).
-        let (pool_hits, pool_disk, pool_misses) = pool_counters;
+        let (pool_hits, pool_disk, pool_misses, pool_profile) = pool_counters;
         stats.cache_hits = pool_hits + (self.analyzer.cache_hits() - hits0);
         stats.cache_misses = pool_misses + (self.analyzer.cache_misses() - misses0);
         stats.cache_disk_hits = pool_disk + (self.analyzer.disk_hits() - disk0);
+        stats.profile_hits = pool_profile + (self.analyzer.profile_hits() - profile0);
         stats.evictions = self.analyzer.store().evictions().saturating_sub(evictions0);
         stats.seconds = t0.elapsed().as_secs_f64();
         let network = fold_network_stats(&net.name, "mapper", per_layer, skipped);

@@ -146,6 +146,10 @@ pub struct RequestStats {
     pub disk_hits: u64,
     /// Analyses replayed from entries already resident in memory.
     pub warm_hits: u64,
+    /// The subset of `analyses` that skipped the bandwidth-invariant
+    /// phase by replaying a memoized reuse profile (two-phase split;
+    /// diagnostic only).
+    pub profile_hits: u64,
     /// Design/candidate evaluations the request performed.
     pub designs_evaluated: u64,
     pub wall_seconds: f64,
@@ -453,6 +457,7 @@ fn stats_json(s: &RequestStats) -> Json {
         .set("analyses", Json::int(s.analyses))
         .set("disk_hits", Json::int(s.disk_hits))
         .set("warm_hits", Json::int(s.warm_hits))
+        .set("profile_hits", Json::int(s.profile_hits))
         .set("designs_evaluated", Json::int(s.designs_evaluated))
         .set("wall_seconds", Json::num(s.wall_seconds))
 }
@@ -932,6 +937,7 @@ fn decode_stats(v: &Json) -> std::result::Result<RequestStats, ApiError> {
         analyses: get_u64(s, "analyses", 0)?,
         disk_hits: get_u64(s, "disk_hits", 0)?,
         warm_hits: get_u64(s, "warm_hits", 0)?,
+        profile_hits: get_u64(s, "profile_hits", 0)?,
         designs_evaluated: get_u64(s, "designs_evaluated", 0)?,
         wall_seconds: get_f64(s, "wall_seconds", 0.0)?,
     })

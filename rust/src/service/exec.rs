@@ -84,6 +84,7 @@ fn stats_from_analyzer(a: &Analyzer, designs_evaluated: u64, wall_seconds: f64) 
         analyses: a.cache_misses(),
         disk_hits: a.disk_hits(),
         warm_hits: a.cache_hits().saturating_sub(a.disk_hits()),
+        profile_hits: a.profile_hits(),
         designs_evaluated,
         wall_seconds,
     }
@@ -248,6 +249,7 @@ pub fn run_map(
         disk_hits: ms.cache_disk_hits + analyzer.disk_hits(),
         warm_hits: ms.cache_hits.saturating_sub(ms.cache_disk_hits)
             + analyzer.cache_hits().saturating_sub(analyzer.disk_hits()),
+        profile_hits: ms.profile_hits + analyzer.profile_hits(),
         designs_evaluated: ms.evaluated,
         wall_seconds: t0.elapsed().as_secs_f64(),
     };
@@ -432,6 +434,7 @@ pub fn run_prepared_dse(
         analyses: s.cache_misses,
         disk_hits: s.cache_disk_hits,
         warm_hits: s.cache_hits.saturating_sub(s.cache_disk_hits),
+        profile_hits: s.profile_hits,
         designs_evaluated: s.evaluated,
         wall_seconds: t0.elapsed().as_secs_f64(),
     };

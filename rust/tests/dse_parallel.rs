@@ -32,7 +32,14 @@ use maestro::model::zoo::vgg16;
 /// Strip the fields excluded from the determinism contract: wall clock
 /// and the partition/warmth-dependent cache counters.
 fn comparable(stats: &SweepStats) -> SweepStats {
-    SweepStats { seconds: 0.0, cache_hits: 0, cache_disk_hits: 0, cache_misses: 0, ..stats.clone() }
+    SweepStats {
+        seconds: 0.0,
+        cache_hits: 0,
+        cache_disk_hits: 0,
+        cache_misses: 0,
+        profile_hits: 0,
+        ..stats.clone()
+    }
 }
 
 #[test]

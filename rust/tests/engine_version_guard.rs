@@ -17,10 +17,12 @@ use maestro::util::stablehash::Fnv128;
 
 /// FNV-128 over the sorted engine sources (name, NUL, length, bytes
 /// with `\r` stripped so checkout line-ending policy cannot move it).
-// PR 6 repin: engine/analysis.rs gained the shared cache-counter
-// formatter and the `Objective` surface used by the service API —
-// presentation/plumbing only, so ANALYSIS_VERSION stays.
-const ENGINE_SRC_FINGERPRINT: u128 = 0xac43fab84b97fdde9f77900889e95e81;
+// PR 8 repin: the two-phase split — engine/profile.rs (bandwidth-
+// invariant ReuseProfile + finalize) joined the tree and
+// engine/analysis.rs gained the profile memo. Outputs are bit-identical
+// to the monolithic path for every key (property-pinned in
+// rust/tests/properties.rs), so ANALYSIS_VERSION stays.
+const ENGINE_SRC_FINGERPRINT: u128 = 0xffb80196e0cad4019beff27641eeb239;
 
 fn engine_fingerprint() -> u128 {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/engine");

@@ -246,6 +246,7 @@ fn comparable(stats: &MapperStats) -> MapperStats {
         cache_disk_hits: 0,
         cache_misses: 0,
         evictions: 0,
+        profile_hits: 0,
         ..stats.clone()
     }
 }

@@ -212,6 +212,106 @@ fn prop_case_table_matches_full_engine_single_level() {
     });
 }
 
+/// Field-for-field bit equality between two [`LayerStats`] — the
+/// two-phase contract is *bit* identity, not tolerance.
+fn stats_bits_equal(
+    a: &maestro::engine::analysis::LayerStats,
+    b: &maestro::engine::analysis::LayerStats,
+) -> Result<(), String> {
+    if a.layer != b.layer || a.dataflow != b.dataflow {
+        return Err(format!("labels: ({}, {}) vs ({}, {})", a.layer, a.dataflow, b.layer, b.dataflow));
+    }
+    let scalars = [
+        ("runtime", a.runtime, b.runtime),
+        ("macs", a.macs, b.macs),
+        ("util", a.util, b.util),
+        ("l1_fills", a.l1_fills, b.l1_fills),
+        ("l1_reads", a.l1_reads, b.l1_reads),
+        ("l1_writes", a.l1_writes, b.l1_writes),
+        ("noc_delivered", a.noc_delivered, b.noc_delivered),
+        ("peak_bw_need", a.peak_bw_need, b.peak_bw_need),
+        ("energy.mac", a.energy.mac, b.energy.mac),
+        ("energy.l1", a.energy.l1, b.energy.l1),
+        ("energy.l2", a.energy.l2, b.energy.l2),
+        ("energy.noc", a.energy.noc, b.energy.noc),
+    ];
+    for (name, x, y) in scalars {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name}: {x} vs {y}"));
+        }
+    }
+    for i in 0..3 {
+        if a.l2_reads[i].to_bits() != b.l2_reads[i].to_bits() {
+            return Err(format!("l2_reads[{i}]: {} vs {}", a.l2_reads[i], b.l2_reads[i]));
+        }
+        if a.l2_writes[i].to_bits() != b.l2_writes[i].to_bits() {
+            return Err(format!("l2_writes[{i}]: {} vs {}", a.l2_writes[i], b.l2_writes[i]));
+        }
+    }
+    if (a.l1_req, a.l2_req) != (b.l1_req, b.l2_req) {
+        return Err(format!(
+            "buffer reqs: ({}, {}) vs ({}, {})",
+            a.l1_req, a.l2_req, b.l1_req, b.l2_req
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_profile_finalize_bit_identical_to_monolithic() {
+    // The two-phase acceptance property: for random (shape, dataflow,
+    // hardware, bandwidth) tuples, building a bandwidth-invariant
+    // profile and finalizing it at the tuple's bandwidth is
+    // bit-identical — every field — to the monolithic reference, and
+    // the two paths accept/reject exactly the same inputs.
+    use maestro::engine::profile::ReuseProfile;
+    check("profile-bit-identity", Config { cases: 150, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let h = hw(rng);
+        let mono = analyze_layer(&layer, &df, &h);
+        let built = df.resolve(&layer, h.num_pes).and_then(|r| ReuseProfile::build(&layer, &r, &h));
+        match (mono, built) {
+            (Err(_), Err(_)) => Check::Pass, // failure parity
+            (Ok(m), Ok(p)) => match stats_bits_equal(&p.finalize(&h), &m) {
+                Ok(()) => Check::Pass,
+                Err(msg) => Check::Fail(format!("{msg} for {layer} under\n{df}")),
+            },
+            (Ok(_), Err(e)) => Check::Fail(format!("profile rejects what monolithic accepts: {e:#}")),
+            (Err(e), Ok(_)) => Check::Fail(format!("profile accepts what monolithic rejects: {e:#}")),
+        }
+    });
+}
+
+#[test]
+fn prop_one_profile_serves_every_bandwidth() {
+    // One profile built at a random bandwidth, finalized across the
+    // whole shared Fig 13 bandwidth axis, must match a fresh monolithic
+    // analysis at every point — the bandwidth-invariance claim.
+    use maestro::dse::space::bandwidth_axis;
+    use maestro::engine::profile::ReuseProfile;
+    check("profile-bw-axis", Config { cases: 40, ..Default::default() }, |rng| {
+        let layer = gen_layer(rng);
+        let df = gen_dataflow(rng, &layer);
+        let base = hw(rng);
+        let Ok(resolved) = df.resolve(&layer, base.num_pes) else { return Check::Discard };
+        let Ok(profile) = ReuseProfile::build(&layer, &resolved, &base) else {
+            return Check::Discard;
+        };
+        for bw in bandwidth_axis(9) {
+            let h = HwConfig { noc_bandwidth: bw, ..base.clone() };
+            let fresh = match analyze_layer(&layer, &df, &h) {
+                Ok(s) => s,
+                Err(e) => return Check::Fail(format!("monolithic failed at bw={bw}: {e:#}")),
+            };
+            if let Err(msg) = stats_bits_equal(&profile.finalize(&h), &fresh) {
+                return Check::Fail(format!("bw={bw}: {msg} for {layer} under\n{df}"));
+            }
+        }
+        Check::Pass
+    });
+}
+
 #[test]
 fn prop_pareto_front_is_nondominated() {
     use maestro::dse::engine::DesignPoint;

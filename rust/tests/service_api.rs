@@ -43,7 +43,14 @@ fn decode_request_err(line: &str) -> ApiError {
 }
 
 fn sample_stats() -> RequestStats {
-    RequestStats { analyses: 3, disk_hits: 2, warm_hits: 8, designs_evaluated: 96, wall_seconds: 0.25 }
+    RequestStats {
+        analyses: 3,
+        disk_hits: 2,
+        warm_hits: 8,
+        profile_hits: 1,
+        designs_evaluated: 96,
+        wall_seconds: 0.25,
+    }
 }
 
 fn sample_point() -> PointRow {
