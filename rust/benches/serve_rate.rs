@@ -14,6 +14,10 @@
 //! `BENCH_serve.json` (override with `SERVE_SMOKE_OUT`), uploaded as a
 //! CI build artifact. The default (non-smoke) mode runs the same
 //! protocol with more warm iterations for a steadier rate estimate.
+//!
+//! Both modes also run a `concurrent` leg: 4 overlapping dse requests
+//! against the shared-pool daemon vs the old request-per-worker
+//! execution model, gated on aggregate designs/s being no worse.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -23,6 +27,7 @@ use maestro::cache::SharedStore;
 use maestro::engine::analysis::Objective;
 use maestro::service::api::{AnalyzeRequest, DseRequest, Request, Response};
 use maestro::service::daemon::{Daemon, ServeConfig};
+use maestro::service::exec;
 use maestro::util::json::Json;
 
 struct Client {
@@ -82,7 +87,31 @@ fn dse_request(id: u64) -> Request {
         budget_seconds: 0.0,
         threads: 1,
         keep_points: false,
+        stream: false,
     })
+}
+
+/// The concurrent leg's request: bigger than the smoke dse so the
+/// aggregate rate measures sweep work rather than per-request framing.
+fn concurrent_dse_request(id: u64) -> DseRequest {
+    DseRequest {
+        id: Some(id),
+        family: "kc-p".into(),
+        model: "vgg16".into(),
+        layer: String::new(),
+        network: false,
+        resolution: 8,
+        bw_resolution: 8,
+        mapspace: false,
+        tile_resolution: 6,
+        strategy: "exhaustive".into(),
+        seed: 1,
+        budget: 0,
+        budget_seconds: 0.0,
+        threads: 1,
+        keep_points: false,
+        stream: false,
+    }
 }
 
 fn expect_analyze(r: Response) -> maestro::service::api::AnalyzeReply {
@@ -184,6 +213,95 @@ fn main() {
     assert!(report.loaded > 0, "shutdown flush must persist records");
     println!("shutdown flush: {} record(s) on disk", report.loaded);
 
+    // ----------------------------------------------------------------
+    // Concurrent leg: 4 overlapping dse requests, shared-pool vs the
+    // old request-per-worker execution model. Both sides start from a
+    // fresh store and run the identical request mix, so the aggregate
+    // designs/s compares scheduling, not warmth.
+    // ----------------------------------------------------------------
+    use std::sync::Arc;
+
+    let conc_reqs: Vec<maestro::service::api::DseRequest> =
+        (0..4).map(|i| concurrent_dse_request(200 + i)).collect();
+
+    // Baseline first (page-cache order favors neither side strongly,
+    // and what tilt exists goes to the leg measured second): 2 worker
+    // threads, each running whole requests serially with threads=1 —
+    // the pre-shared-pool daemon's execution model, per-request case
+    // tables included.
+    let base_store = Arc::new(SharedStore::new());
+    let t0 = Instant::now();
+    let base_designs: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let reqs = &conc_reqs;
+                let store = &base_store;
+                scope.spawn(move || {
+                    let mut designs = 0u64;
+                    for req in reqs.iter().skip(w).step_by(2) {
+                        let prep = exec::prepare_dse(req).expect("prepare baseline dse");
+                        let out = exec::run_prepared_dse(store, &prep, req, true, None)
+                            .expect("run baseline dse");
+                        designs += out.stats.designs_evaluated;
+                    }
+                    designs
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("baseline worker")).sum()
+    });
+    let base_s = t0.elapsed().as_secs_f64();
+
+    // Shared pool: a fresh daemon with 2 pool workers, 4 clients
+    // submitting at once; the scheduler interleaves all four sweeps
+    // into shared waves over one store and one table cache.
+    let conc_daemon =
+        Daemon::spawn(ServeConfig { addr: "127.0.0.1:0".into(), workers: 2, ..ServeConfig::default() })
+            .expect("spawn concurrent-leg daemon");
+    let conc_addr = conc_daemon.addr();
+    let t0 = Instant::now();
+    let replies: Vec<maestro::service::api::DseReply> = std::thread::scope(|scope| {
+        let handles: Vec<_> = conc_reqs
+            .iter()
+            .map(|req| {
+                let req = Request::Dse(req.clone());
+                scope.spawn(move || {
+                    let mut c = Client::connect(conc_addr);
+                    expect_dse(c.request(&req))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("concurrent client")).collect()
+    });
+    let shared_s = t0.elapsed().as_secs_f64();
+    let shared_designs: u64 = replies.iter().map(|r| r.stats.designs_evaluated).sum();
+    for r in &replies {
+        assert_eq!(r.frontier, replies[0].frontier, "identical requests must agree bit-for-bit");
+        assert!(r.search.evaluated > 0, "every concurrent dse must evaluate designs");
+    }
+    let mut closer = Client::connect(conc_addr);
+    match closer.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    conc_daemon.join().expect("clean concurrent-leg daemon exit");
+
+    let base_dps = base_designs as f64 / base_s.max(1e-9);
+    let shared_dps = shared_designs as f64 / shared_s.max(1e-9);
+    println!(
+        "concurrent: shared-pool {shared_designs} designs in {shared_s:.4}s ({shared_dps:.0}/s) \
+         vs request-per-worker {base_designs} in {base_s:.4}s ({base_dps:.0}/s)"
+    );
+    // Gate: shared-pool aggregate throughput must be no worse. The 0.9
+    // factor absorbs transport + scheduler overhead measurement noise
+    // on the smoke-sized workload; a real scheduling regression shows
+    // up far below it.
+    assert!(
+        shared_dps >= 0.9 * base_dps,
+        "shared-pool aggregate throughput regressed: {shared_dps:.0} designs/s vs \
+         request-per-worker {base_dps:.0} designs/s"
+    );
+
     if smoke {
         let json = format!(
             "{{\n  \"bench\": \"serve_rate\",\n  \"workload\": \"vgg16 adaptive analyze + kc-p dse \
@@ -192,7 +310,12 @@ fn main() {
              \"warm\": {{\"iterations\": {warm_iters}, \"analyze_seconds_total\": {warm_analyze_s:.6}, \
              \"analyze_seconds_avg\": {per_warm:.6}, \"dse_seconds\": {warm_dse_s:.6}, \
              \"store_hits\": {warm_hits_total}, \"requests_per_s\": {warm_rps:.2}}},\n  \
-             \"speedup\": {:.2},\n  \"flushed_records\": {}\n}}\n",
+             \"speedup\": {:.2},\n  \"flushed_records\": {},\n  \
+             \"concurrent\": {{\"requests\": 4, \
+             \"shared_pool\": {{\"designs\": {shared_designs}, \"seconds\": {shared_s:.6}, \
+             \"designs_per_s\": {shared_dps:.2}}}, \
+             \"request_per_worker\": {{\"designs\": {base_designs}, \"seconds\": {base_s:.6}, \
+             \"designs_per_s\": {base_dps:.2}}}}}\n}}\n",
             cold_analyze.stats.analyses,
             warm_rps / cold_rps.max(1e-9),
             report.loaded,

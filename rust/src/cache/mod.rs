@@ -28,6 +28,13 @@
 //!   (hits split into mem vs disk everywhere they surface). Duplicate
 //!   records accumulated across sessions are tolerated on load and
 //!   reclaimed by [`compact_file`] (`maestro cache compact`).
+//!   Concurrent writers sharing one path — two daemons, or a daemon
+//!   plus a CLI run — are union-safe: every flush re-reads the file
+//!   and appends only records it lacks (so nobody truncates away
+//!   another process's appends), and fresh writes stage through
+//!   per-process temp names before their atomic rename. See
+//!   [`SharedStore::flush`] for the exact guarantee and its one
+//!   narrow (self-healing) race window.
 //!
 //! Consumers rarely touch this module directly: construct an
 //! [`crate::engine::analysis::Analyzer`] over a store with

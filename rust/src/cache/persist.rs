@@ -451,14 +451,16 @@ pub fn compact_file(path: &Path) -> Result<CompactReport> {
 
 /// Write a complete fresh file (header + records) via a temporary
 /// sibling and an atomic rename, so readers never observe a half-
-/// written file.
+/// written file. The temp name carries the process id: two processes
+/// fresh-writing the same path race only on the final rename (where
+/// either complete file is a valid outcome), never on the temp bytes.
 pub(crate) fn write_fresh<'a>(path: &Path, records: impl Iterator<Item = &'a [u8]>) -> Result<()> {
     let mut bytes = header_bytes().to_vec();
     for rec in records {
         bytes.extend_from_slice(rec);
     }
     let mut tmp = path.as_os_str().to_os_string();
-    tmp.push(".tmp");
+    tmp.push(format!(".tmp.{}", std::process::id()));
     let tmp = std::path::PathBuf::from(tmp);
     fs::write(&tmp, &bytes).with_context(|| format!("write cache file {}", tmp.display()))?;
     fs::rename(&tmp, path).with_context(|| format!("rename cache file into {}", path.display()))?;

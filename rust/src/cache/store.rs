@@ -41,7 +41,7 @@
 //! `rust/tests/dse_parallel.rs` hold for any warmth, including
 //! post-eviction).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
@@ -84,9 +84,6 @@ struct Slot {
     value: CacheValue,
     /// Entry came in via [`SharedStore::load`] (vs computed here).
     from_disk: bool,
-    /// Entry is already on disk (loaded, or flushed earlier) — flush
-    /// skips it.
-    persisted: bool,
     /// Second-chance bit: set on every hit (atomically, so the read
     /// lock suffices), consumed by the eviction rotation in
     /// [`SharedStore::insert_slot`]. Only meaningful on capped stores.
@@ -94,17 +91,9 @@ struct Slot {
 }
 
 impl Slot {
-    fn new(value: CacheValue, from_disk: bool, persisted: bool) -> Slot {
-        Slot { value, from_disk, persisted, referenced: std::sync::atomic::AtomicBool::new(false) }
+    fn new(value: CacheValue, from_disk: bool) -> Slot {
+        Slot { value, from_disk, referenced: std::sync::atomic::AtomicBool::new(false) }
     }
-}
-
-#[derive(Debug, Default)]
-struct PersistMeta {
-    /// Path the store was loaded from, with the byte length of the
-    /// valid record prefix — flushing to the same path appends after
-    /// truncating any corrupt tail.
-    loaded: Option<(std::path::PathBuf, u64)>,
 }
 
 /// Result of [`SharedStore::load`]. Corruption never fails the load:
@@ -164,7 +153,10 @@ pub struct SharedStore {
     disk_hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
-    meta: Mutex<PersistMeta>,
+    /// Serializes flushes from *this* store (the daemon's periodic
+    /// flusher vs its shutdown flush); cross-process coordination is
+    /// the read-diff-append protocol in [`SharedStore::flush`].
+    flush_lock: Mutex<()>,
 }
 
 impl Default for SharedStore {
@@ -221,7 +213,7 @@ impl SharedStore {
             disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
-            meta: Mutex::new(PersistMeta::default()),
+            flush_lock: Mutex::new(()),
         }
     }
 
@@ -305,7 +297,7 @@ impl SharedStore {
         if shard.map.contains_key(&key) {
             return;
         }
-        self.insert_slot(&mut shard, key, Slot::new(value, false, false));
+        self.insert_slot(&mut shard, key, Slot::new(value, false));
     }
 
     /// Entries currently held.
@@ -368,105 +360,74 @@ impl SharedStore {
     /// in-memory value (it is bit-identical by construction).
     pub fn load(&self, path: &Path) -> LoadReport {
         let parsed = persist::read_file(path);
-        {
-            // The `persisted` flags are relative to the file the store
-            // is bound to. Rebinding to a different path means entries
-            // already in memory — fresh, or loaded from some *other*
-            // file — are not known to exist in `path`, so they must
-            // flush as dirty (a later append-mode flush would otherwise
-            // silently omit them from the new file forever).
-            let mut meta = self.meta.lock().unwrap();
-            let rebinding = !matches!(&meta.loaded, Some((p, _)) if p.as_path() == path);
-            if rebinding {
-                for s in &self.shards {
-                    for slot in s.write().unwrap().map.values_mut() {
-                        slot.persisted = false;
-                    }
-                }
-            }
-            meta.loaded = Some((path.to_path_buf(), parsed.valid_len));
-        }
         let mut loaded = 0;
         for (key, value) in parsed.entries {
             let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
             if shard.map.contains_key(&key) {
                 // The key exists in memory AND in the file; values are
                 // pure functions of keys, so the in-memory copy is
-                // already what the file holds — keep it, but record
-                // that this file has it.
-                if let Some(slot) = shard.map.get_mut(&key) {
-                    slot.persisted = true;
-                }
-            } else {
-                // Loads respect the capacity cap too: a capped store
-                // keeps roughly the newest `max_entries` records of the
-                // file (entries hit since loading get their second
-                // chance like any other).
-                self.insert_slot(&mut shard, key, Slot::new(value, true, true));
-                loaded += 1;
+                // already what the file holds — keep it.
+                continue;
             }
+            // Loads respect the capacity cap too: a capped store
+            // keeps roughly the newest `max_entries` records of the
+            // file (entries hit since loading get their second
+            // chance like any other).
+            self.insert_slot(&mut shard, key, Slot::new(value, true));
+            loaded += 1;
         }
         LoadReport { loaded, dropped_bytes: parsed.dropped_bytes, warning: parsed.warning }
     }
 
     /// Write the store to `path` as an append-only record log.
     ///
-    /// * If this store previously [`load`](SharedStore::load)ed `path`,
-    ///   the file is truncated to its valid prefix (dropping any
-    ///   corrupt tail) and only not-yet-persisted records are appended.
-    /// * Otherwise a fresh file (header + every entry) is written to a
-    ///   temporary sibling and renamed into place.
+    /// The file is **re-read first** and only records it currently
+    /// lacks are appended (after truncating any corrupt tail); a
+    /// missing file gets a fresh write (header + every entry) via a
+    /// per-process temporary sibling and an atomic rename.
+    ///
+    /// Computing dirtiness against the file's *current* contents —
+    /// rather than against state remembered from an earlier load —
+    /// makes concurrent writers union-safe: records another process
+    /// (a second daemon, or a CLI run sharing the `--cache-file`)
+    /// appended since this store last looked are left in place, and
+    /// both sides converge on the union of their entries instead of
+    /// last-writer-wins. There is no cross-process file lock, so an
+    /// append that lands in the narrow window between this flush's
+    /// re-read and its write can still be clipped — but the loser's
+    /// next flush re-reads, finds its records missing, and re-appends
+    /// them, so nothing is lost while either process keeps flushing.
     ///
     /// Records are written in sorted key order, so flushing the same
-    /// contents always produces the same bytes. Concurrent flushes of
-    /// one path from *different processes* are not coordinated; last
-    /// rename/append wins.
+    /// contents always produces the same bytes.
     pub fn flush(&self, path: &Path) -> Result<FlushReport> {
-        let mut meta = self.meta.lock().unwrap();
-        let append_after = match &meta.loaded {
-            Some((p, len)) if p.as_path() == path && path.exists() => Some(*len),
-            _ => None,
-        };
+        // One flush of this store at a time — the daemon's periodic
+        // flusher and its shutdown flush must not interleave their
+        // read-diff-append sequences on the same file.
+        let _guard = self.flush_lock.lock().unwrap();
 
-        // Snapshot the records to write: (key bytes for ordering, full
-        // record, key). Only the snapshotted keys are marked persisted
-        // afterwards — an entry a racing worker inserts mid-flush was
-        // never serialized, so it must stay dirty for the next flush
-        // rather than be silently dropped from the file forever.
-        let collect = |only_dirty: bool| -> Vec<(Vec<u8>, Vec<u8>, CacheKey)> {
-            let mut records = Vec::new();
-            for s in &self.shards {
-                let shard = s.read().unwrap();
-                for (key, slot) in shard.map.iter() {
-                    if only_dirty && slot.persisted {
-                        continue;
-                    }
-                    records.push((key.to_bytes(), persist::encode_record(key, &slot.value), *key));
+        let parsed = persist::read_file(path);
+        let on_disk: HashSet<CacheKey> = parsed.entries.iter().map(|(key, _)| *key).collect();
+
+        // Snapshot the records the file lacks. An entry a racing
+        // worker inserts mid-flush may miss this snapshot; the next
+        // flush's re-read will not find it on disk and appends it then.
+        let mut records: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        for s in &self.shards {
+            let shard = s.read().unwrap();
+            for (key, slot) in shard.map.iter() {
+                if on_disk.contains(key) {
+                    continue;
                 }
+                records.push((key.to_bytes(), persist::encode_record(key, &slot.value)));
             }
-            records.sort_by(|a, b| a.0.cmp(&b.0));
-            records
-        };
+        }
+        records.sort_by(|a, b| a.0.cmp(&b.0));
 
-        let records = if let Some(valid_len) = append_after {
-            let records = collect(true);
-            let new_len =
-                persist::append_records(path, valid_len, records.iter().map(|(_, r, _)| r.as_slice()))?;
-            meta.loaded = Some((path.to_path_buf(), new_len));
-            records
+        if path.exists() {
+            persist::append_records(path, parsed.valid_len, records.iter().map(|(_, r)| r.as_slice()))?;
         } else {
-            let records = collect(false);
-            persist::write_fresh(path, records.iter().map(|(_, r, _)| r.as_slice()))?;
-            let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
-            meta.loaded = Some((path.to_path_buf(), len));
-            records
-        };
-
-        // Exactly the snapshot is now on disk.
-        for (_, _, key) in &records {
-            if let Some(slot) = self.shards[self.shard_of(key)].write().unwrap().map.get_mut(key) {
-                slot.persisted = true;
-            }
+            persist::write_fresh(path, records.iter().map(|(_, r)| r.as_slice()))?;
         }
         Ok(FlushReport { written: records.len(), total: self.len() })
     }

@@ -400,6 +400,14 @@ pub struct SweepConfig {
     /// the rebuild-every-visit path — the reference the DSE bench
     /// races the reuse path against. Memory is O(visited pairs).
     pub reuse_tables: bool,
+    /// Caller-owned per-pair table cache shared *across* sweeps
+    /// (overrides `reuse_tables` when set). Pair indices are only
+    /// meaningful for one (workload, variant list, PEs list) identity —
+    /// see [`table_identity`] — so callers must key shared caches by
+    /// that identity. The `serve` daemon promotes the PR 8
+    /// sweep-lifetime cache to daemon lifetime this way: two clients
+    /// sweeping the same space build each case table once between them.
+    pub shared_tables: Option<Arc<PairTables>>,
 }
 
 impl Default for SweepConfig {
@@ -413,6 +421,7 @@ impl Default for SweepConfig {
             budget: SearchBudget::default(),
             cancel: None,
             reuse_tables: true,
+            shared_tables: None,
         }
     }
 }
@@ -572,13 +581,69 @@ enum PairTable {
     Unmappable,
 }
 
-/// Sweep-lifetime per-pair table cache, shared by every shard across
-/// every wave (keyed on the pair's serial index; the workload and space
-/// are fixed for the sweep). Values are pure functions of the key, so
-/// a lost race between two shards building the same pair is benign —
+/// Per-pair case-table cache, shared by every shard across every wave
+/// (keyed on the pair's serial index, which is only meaningful for one
+/// (workload, variant list, PEs list) identity — see
+/// [`table_identity`]). Values are pure functions of the key, so a
+/// lost race between two shards building the same pair is benign —
 /// both compute identical tables. The lock is held only for the
 /// lookup/insert, never across a build.
-type PairTables = std::sync::Mutex<HashMap<usize, Arc<PairTable>>>;
+///
+/// Lifetime is the owner's choice: [`sweep`] allocates one per sweep
+/// (`SweepConfig::reuse_tables`), while the `serve` daemon keeps one
+/// per design-space identity for its whole life
+/// (`SweepConfig::shared_tables`) so concurrent and repeated requests
+/// over the same space share the flattening work.
+#[derive(Debug, Default)]
+pub struct PairTables {
+    map: std::sync::Mutex<HashMap<usize, Arc<PairTable>>>,
+}
+
+impl PairTables {
+    pub fn new() -> PairTables {
+        PairTables::default()
+    }
+
+    /// Cached pairs (diagnostic; racy under concurrent fills).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, pair: usize) -> Option<Arc<PairTable>> {
+        self.map.lock().unwrap().get(&pair).cloned()
+    }
+
+    fn put(&self, pair: usize, entry: Arc<PairTable>) {
+        self.map.lock().unwrap().insert(pair, entry);
+    }
+}
+
+/// Identity of the per-pair table keyspace: two (workload, space)
+/// combinations with equal identities index bit-identical case tables
+/// at every pair serial index, so they may share one [`PairTables`].
+/// Hashes the layers' canonical [`ShapeKey`]s in order, the variants'
+/// structural fingerprints in order, and the PEs axis — everything a
+/// table depends on. Bandwidths, NoC latency, and area/power budgets
+/// are deliberately excluded: tables are bandwidth-invariant and
+/// budgets only gate evaluation, never table contents.
+pub fn table_identity(net: &Network, space: &super::space::DesignSpace) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    net.layers.len().hash(&mut h);
+    for layer in &net.layers {
+        layer.shape_key().hash(&mut h);
+    }
+    space.variants.len().hash(&mut h);
+    for variant in &space.variants {
+        variant.fingerprint().hash(&mut h);
+    }
+    space.pes.hash(&mut h);
+    h.finish()
+}
 
 /// Evaluate a contiguous run of strategy batches. Batches arrive in
 /// serial pair order (each batch's `bws` ascending), so concatenating
@@ -625,7 +690,7 @@ fn sweep_shard(
         // Sweep-lifetime table reuse: a pair revisited by a later wave
         // (or already built by another shard) replays its cached table
         // — or its cached unmappable verdict — instead of rebuilding.
-        let entry = match tables.and_then(|t| t.lock().unwrap().get(&batch.pair).cloned()) {
+        let entry = match tables.and_then(|t| t.get(batch.pair)) {
             Some(entry) => entry,
             None => {
                 // Private cache: the key includes (variant, pes), so a
@@ -641,7 +706,7 @@ fn sweep_shard(
                         Err(_) => Arc::new(PairTable::Unmappable),
                     };
                 if let Some(t) = tables {
-                    t.lock().unwrap().insert(batch.pair, Arc::clone(&entry));
+                    t.put(batch.pair, Arc::clone(&entry));
                 }
                 entry
             }
@@ -715,11 +780,6 @@ fn sweep_shard(
     out
 }
 
-/// One shard of work for the persistent wave pool: the wave's batch
-/// list (shared) and the shard's contiguous batch range. The result
-/// slot (= shard index within the wave) is managed by [`WavePool`].
-type ShardJob = (Arc<Vec<PairBatch>>, std::ops::Range<usize>);
-
 /// Mutable sweep state threaded through the wave loop.
 struct SweepState {
     frontier: ParetoAccumulator,
@@ -730,57 +790,264 @@ struct SweepState {
     remaining: u64,
 }
 
-/// The strategy wave loop, independent of how waves execute: pull the
-/// next wave, truncate it to the remaining budget, hand it to
-/// `execute` (which returns the shard outcomes **in shard-index
-/// order**), and merge — shard-index order replays the wave's serial
-/// batch order exactly, the same determinism contract as the
-/// pre-strategy engine. `execute` receives the shard size so serial
-/// and pooled execution partition identically.
-fn sweep_waves(
-    gen: &mut dyn CandidateGen,
-    config: &SweepConfig,
-    t0: &std::time::Instant,
+/// One strategy wave, already truncated to the remaining budget and
+/// partitioned into contiguous shards. Cheap to clone (two `Arc`s), so
+/// an external scheduler can hand `(wave, shard_index)` jobs to a
+/// shared pool without copying the batch list.
+#[derive(Debug, Clone)]
+pub struct SweepWave {
+    batches: Arc<Vec<PairBatch>>,
+    shards: Arc<Vec<std::ops::Range<usize>>>,
+}
+
+impl SweepWave {
+    /// Number of shards this wave splits into (= the pool jobs to run).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Candidates admitted to evaluation in this wave.
+    pub fn candidates(&self) -> u64 {
+        self.batches.iter().map(|b| b.candidates()).sum()
+    }
+}
+
+/// The outcome of evaluating one shard of a [`SweepWave`] — opaque to
+/// schedulers; hand it back to [`SweepDriver::absorb_wave`] in
+/// shard-index order. `Default` is the [`WavePool`] panic-fill value
+/// (an empty outcome keeps the merge well-formed if a worker dies).
+#[derive(Debug, Default)]
+pub struct SweepShard(ShardOutcome);
+
+/// The immutable, shareable half of a sweep: everything a worker needs
+/// to evaluate a shard. The `serve` daemon's scheduler holds one
+/// `Arc<SweepCtx>` per in-flight dse request and interleaves
+/// `run_shard` calls from many requests onto one process-wide pool;
+/// [`sweep`] uses the same context for its private pool.
+pub struct SweepCtx {
+    net: Network,
+    space: super::space::DesignSpace,
+    noc_hops: u64,
+    keep_all_points: bool,
     collect_feedback: bool,
-    state: &mut SweepState,
-    execute: &mut dyn FnMut(Vec<PairBatch>, usize) -> Vec<ShardOutcome>,
-) {
-    loop {
-        if state.remaining == 0 {
-            break;
+    cache: Option<Arc<SharedStore>>,
+    tables: Option<Arc<PairTables>>,
+}
+
+impl SweepCtx {
+    /// Evaluate one shard of a wave. Pure with respect to the driver's
+    /// mutable state: any thread may run any shard in any order, and
+    /// results absorb deterministically as long as they are handed back
+    /// in shard-index order.
+    pub fn run_shard(&self, wave: &SweepWave, shard: usize) -> SweepShard {
+        let range = wave.shards[shard].clone();
+        SweepShard(sweep_shard(
+            &self.net,
+            &self.space,
+            self.noc_hops,
+            &wave.batches[range],
+            self.keep_all_points,
+            self.collect_feedback,
+            self.cache.as_ref(),
+            self.tables.as_deref(),
+        ))
+    }
+}
+
+/// The strategy wave loop, externalized: [`SweepDriver::next_wave`]
+/// pulls, budget-truncates, and shard-partitions the next wave;
+/// the caller evaluates its shards however it likes (inline, private
+/// pool, or the daemon's shared pool) via [`SweepCtx::run_shard`]; and
+/// [`SweepDriver::absorb_wave`] merges the shard outcomes **in
+/// shard-index order**, which replays the wave's serial batch order
+/// exactly — the same determinism contract as the pre-driver engine,
+/// now independent of who executes the waves.
+pub struct SweepDriver {
+    ctx: Arc<SweepCtx>,
+    gen: Box<dyn CandidateGen>,
+    state: SweepState,
+    budget: SearchBudget,
+    cancel: Option<Arc<std::sync::atomic::AtomicBool>>,
+    shard_size: usize,
+    t0: std::time::Instant,
+    evictions0: u64,
+    done: bool,
+}
+
+impl SweepDriver {
+    /// Set up a sweep without running it: validates the workload,
+    /// instantiates the strategy generator, resolves the analysis
+    /// cache (feedback-driven strategies get a sweep-local shared
+    /// store when the caller provides none — cross-wave pair revisits
+    /// replay instead of re-analyzing, bit-identical either way), and
+    /// resolves the per-pair table cache (`shared_tables` wins over a
+    /// fresh `reuse_tables` allocation). `config.threads` is ignored —
+    /// execution belongs to the caller.
+    pub fn new(
+        net: &Network,
+        space: &super::space::DesignSpace,
+        noc_hops: u64,
+        config: &SweepConfig,
+    ) -> Result<SweepDriver> {
+        ensure!(!net.layers.is_empty(), "sweep needs at least one layer");
+        let t0 = std::time::Instant::now();
+        let gen = config.strategy.generator(space, &config.budget)?;
+        let collect_feedback = gen.needs_feedback();
+        let cache = match &config.cache {
+            Some(store) => Some(Arc::clone(store)),
+            None if collect_feedback => Some(Arc::new(SharedStore::new())),
+            None => None,
+        };
+        // Eviction accounting: the store's counter is cumulative across
+        // consumers, so record the delta this sweep is responsible for.
+        let evictions0 = cache.as_ref().map(|s| s.evictions()).unwrap_or(0);
+        let tables = match &config.shared_tables {
+            Some(shared) => Some(Arc::clone(shared)),
+            None => config.reuse_tables.then(|| Arc::new(PairTables::new())),
+        };
+        let ctx = Arc::new(SweepCtx {
+            net: net.clone(),
+            space: space.clone(),
+            noc_hops,
+            keep_all_points: config.keep_all_points,
+            collect_feedback,
+            cache,
+            tables,
+        });
+        let state = SweepState {
+            frontier: ParetoAccumulator::new(),
+            stats: SweepStats {
+                total_designs: space.size(),
+                strategy: config.strategy.name().to_string(),
+                ..SweepStats::default()
+            },
+            points: Vec::new(),
+            feedback: WaveFeedback::default(),
+            remaining: if config.budget.max_designs > 0 {
+                config.budget.max_designs
+            } else {
+                u64::MAX
+            },
+        };
+        Ok(SweepDriver {
+            ctx,
+            gen,
+            state,
+            budget: config.budget.clone(),
+            cancel: config.cancel.clone(),
+            shard_size: config.shard_size,
+            t0,
+            evictions0,
+            done: false,
+        })
+    }
+
+    /// The shared evaluation context for this sweep's shards.
+    pub fn ctx(&self) -> Arc<SweepCtx> {
+        Arc::clone(&self.ctx)
+    }
+
+    /// Pull the next wave: checks the stop conditions (budget
+    /// exhausted, wall-clock budget, cancellation, strategy done),
+    /// truncates the strategy's wave to the remaining design budget,
+    /// and partitions it into contiguous shards (`shard_size` 0 = auto:
+    /// `batches / 64`, at least 1). Returns `None` when the sweep is
+    /// finished; after that, every call returns `None`.
+    ///
+    /// Callers must evaluate **all** shards of the returned wave and
+    /// hand them to [`SweepDriver::absorb_wave`] before pulling again —
+    /// feedback-driven strategies read the previous wave's evals.
+    pub fn next_wave(&mut self) -> Option<SweepWave> {
+        if self.done {
+            return None;
         }
-        if config.budget.max_seconds > 0.0 && t0.elapsed().as_secs_f64() >= config.budget.max_seconds {
-            break;
+        if self.state.remaining == 0 {
+            self.done = true;
+            return None;
         }
-        if let Some(cancel) = &config.cancel {
+        if self.budget.max_seconds > 0.0
+            && self.t0.elapsed().as_secs_f64() >= self.budget.max_seconds
+        {
+            self.done = true;
+            return None;
+        }
+        if let Some(cancel) = &self.cancel {
             if cancel.load(std::sync::atomic::Ordering::Relaxed) {
-                break;
+                self.done = true;
+                return None;
             }
         }
-        let last = std::mem::take(&mut state.feedback);
-        let mut wave = gen.next_wave(&state.frontier, &last);
+        let last = std::mem::take(&mut self.state.feedback);
+        let mut wave = self.gen.next_wave(&self.state.frontier, &last);
         if wave.is_empty() {
-            break;
+            self.done = true;
+            return None;
         }
-        state.stats.budget_skipped += strategy::truncate_wave(&mut wave, state.remaining);
+        self.state.stats.budget_skipped += strategy::truncate_wave(&mut wave, self.state.remaining);
         let admitted: u64 = wave.iter().map(|b| b.candidates()).sum();
-        state.remaining -= admitted;
+        self.state.remaining -= admitted;
         if wave.is_empty() {
-            break;
+            self.done = true;
+            return None;
         }
-        let n_batches = wave.len();
-        let shard_size =
-            if config.shard_size > 0 { config.shard_size } else { (n_batches / 64).max(1) };
-        for shard in execute(wave, shard_size) {
-            state.frontier.merge(&shard.frontier);
-            state.stats.absorb(&shard.stats);
-            state.points.extend(shard.points);
-            if collect_feedback {
-                state.feedback.evals.extend(shard.feedback.evals);
-                state.feedback.dead_pairs.extend(shard.feedback.dead_pairs);
+        let n = wave.len();
+        let shard_size = if self.shard_size > 0 { self.shard_size } else { (n / 64).max(1) };
+        let shards: Vec<std::ops::Range<usize>> = (0..n.div_ceil(shard_size))
+            .map(|shard| {
+                let start = shard * shard_size;
+                start..(start + shard_size).min(n)
+            })
+            .collect();
+        Some(SweepWave { batches: Arc::new(wave), shards: Arc::new(shards) })
+    }
+
+    /// Merge one wave's shard outcomes, **in shard-index order** (the
+    /// order [`SweepWave`] defined, which [`WavePool::run_wave`]
+    /// preserves by construction).
+    pub fn absorb_wave(&mut self, shards: Vec<SweepShard>) {
+        for SweepShard(shard) in shards {
+            self.state.frontier.merge(&shard.frontier);
+            self.state.stats.absorb(&shard.stats);
+            self.state.points.extend(shard.points);
+            if self.ctx.collect_feedback {
+                self.state.feedback.evals.extend(shard.feedback.evals);
+                self.state.feedback.dead_pairs.extend(shard.feedback.dead_pairs);
             }
         }
-        state.stats.waves += 1;
+        self.state.stats.waves += 1;
+    }
+
+    /// Waves absorbed so far.
+    pub fn waves(&self) -> u64 {
+        self.state.stats.waves
+    }
+
+    /// Candidates evaluated so far.
+    pub fn evaluated(&self) -> u64 {
+        self.state.stats.evaluated
+    }
+
+    /// The current frontier, in insertion order (the deterministic
+    /// mid-sweep view — after wave `k` it is bit-identical for any
+    /// executor, which is what makes streamed frontier deltas safe).
+    pub fn frontier_points(&self) -> &[DesignPoint] {
+        self.state.frontier.points()
+    }
+
+    /// Finalize: eviction delta, wall clock, sorted frontier.
+    pub fn finish(mut self) -> SweepOutcome {
+        self.state.stats.evictions = self
+            .ctx
+            .cache
+            .as_ref()
+            .map(|s| s.evictions().saturating_sub(self.evictions0))
+            .unwrap_or(0);
+        self.state.stats.seconds = self.t0.elapsed().as_secs_f64();
+        SweepOutcome {
+            frontier: self.state.frontier.into_sorted(),
+            points: self.state.points,
+            stats: self.state.stats,
+        }
     }
 }
 
@@ -793,7 +1060,8 @@ fn sweep_waves(
 /// (variant, PEs) pair and the hit/miss split surfaces in
 /// [`SweepStats`].
 ///
-/// The strategy yields candidate **waves** ([`PairBatch`] lists); each
+/// This is the in-process convenience loop over [`SweepDriver`]: the
+/// strategy yields candidate **waves** ([`PairBatch`] lists); each
 /// wave is truncated to the remaining [`SearchBudget`], split into
 /// contiguous shards executed by a persistent
 /// [`crate::util::pool::WavePool`] of `config.threads` workers, pruned
@@ -805,74 +1073,25 @@ fn sweep_waves(
 /// (cache counters aside — they follow the partition) are bit-identical
 /// for any thread count and shard size, for every strategy (the
 /// exhaustive strategy additionally replays the pre-strategy engine
-/// bit for bit — `rust/tests/dse_parallel.rs` pins both).
+/// bit for bit — `rust/tests/dse_parallel.rs` pins both). The `serve`
+/// daemon drives the same [`SweepDriver`] from its shared scheduler
+/// instead, so daemon replies inherit this contract.
 pub fn sweep(
     net: &Network,
     space: &super::space::DesignSpace,
     noc_hops: u64,
     config: &SweepConfig,
 ) -> Result<SweepOutcome> {
-    ensure!(!net.layers.is_empty(), "sweep needs at least one layer");
-    let t0 = std::time::Instant::now();
-    let mut gen = config.strategy.generator(space, &config.budget)?;
-    let collect_feedback = gen.needs_feedback();
-    // Feedback-driven strategies revisit a pair across waves (a binary
-    // search touches it once per wave), and the private per-shard
-    // caches are cleared per batch — every wave would re-run the
-    // pair's full layer analysis. Give such sweeps a sweep-local
-    // shared store when the caller did not provide one: cross-wave
-    // revisits replay instead of re-analyzing, and results are
-    // bit-identical either way (cached values are pure functions of
-    // their keys — pinned in `rust/tests/dse_parallel.rs`). Memory is
-    // O(touched pairs x unique shapes), bounded by the budget, and
-    // freed when the sweep returns.
-    let wave_store;
-    let cache: Option<&Arc<SharedStore>> = if let Some(store) = &config.cache {
-        Some(store)
-    } else if collect_feedback {
-        wave_store = Arc::new(SharedStore::new());
-        Some(&wave_store)
-    } else {
-        None
-    };
-    // Eviction accounting: the store's counter is cumulative across
-    // consumers, so record the delta this sweep is responsible for.
-    let evictions0 = cache.map(|s| s.evictions()).unwrap_or(0);
-    // Sweep-lifetime per-pair case-table cache (see
-    // [`SweepConfig::reuse_tables`]): freed when the sweep returns.
-    let pair_tables: Option<PairTables> = config.reuse_tables.then(PairTables::default);
-    let tables = pair_tables.as_ref();
-    let mut state = SweepState {
-        frontier: ParetoAccumulator::new(),
-        stats: SweepStats {
-            total_designs: space.size(),
-            strategy: config.strategy.name().to_string(),
-            ..SweepStats::default()
-        },
-        points: Vec::new(),
-        feedback: WaveFeedback::default(),
-        remaining: if config.budget.max_designs > 0 { config.budget.max_designs } else { u64::MAX },
-    };
+    let mut driver = SweepDriver::new(net, space, noc_hops, config)?;
     let threads = config.effective_threads();
-    let keep_all_points = config.keep_all_points;
     if threads <= 1 {
         // Serial: execute each wave's shards inline, in order.
-        sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
-            wave.chunks(shard_size)
-                .map(|batches| {
-                    sweep_shard(
-                        net,
-                        space,
-                        noc_hops,
-                        batches,
-                        keep_all_points,
-                        collect_feedback,
-                        cache,
-                        tables,
-                    )
-                })
-                .collect()
-        });
+        let ctx = driver.ctx();
+        while let Some(wave) = driver.next_wave() {
+            let shards =
+                (0..wave.shard_count()).map(|shard| ctx.run_shard(&wave, shard)).collect();
+            driver.absorb_wave(shards);
+        }
     } else {
         // One persistent [`WavePool`] for the *whole* sweep (the pool
         // was born here and extracted to `util::pool` once the mapper
@@ -882,41 +1101,22 @@ pub fn sweep(
         // contiguous partition as the serial path — and the pool
         // returns them in shard-index order, so the merge order, and
         // with it the bit-determinism contract, is unchanged.
+        let ctx = driver.ctx();
+        let ctx: &SweepCtx = &ctx;
         std::thread::scope(|scope| {
-            let pool = WavePool::spawn(scope, threads, |(wave, range): ShardJob| {
-                sweep_shard(
-                    net,
-                    space,
-                    noc_hops,
-                    &wave[range],
-                    keep_all_points,
-                    collect_feedback,
-                    cache,
-                    tables,
-                )
+            let pool = WavePool::spawn(scope, threads, move |(wave, shard): (SweepWave, usize)| {
+                ctx.run_shard(&wave, shard)
             });
-            sweep_waves(gen.as_mut(), config, &t0, collect_feedback, &mut state, &mut |wave, shard_size| {
-                let wave = Arc::new(wave);
-                let n = wave.len();
-                let jobs: Vec<ShardJob> = (0..n.div_ceil(shard_size))
-                    .map(|shard| {
-                        let start = shard * shard_size;
-                        (Arc::clone(&wave), start..(start + shard_size).min(n))
-                    })
-                    .collect();
-                pool.run_wave(jobs)
-            });
+            while let Some(wave) = driver.next_wave() {
+                let jobs: Vec<(SweepWave, usize)> =
+                    (0..wave.shard_count()).map(|shard| (wave.clone(), shard)).collect();
+                driver.absorb_wave(pool.run_wave(jobs));
+            }
             // Dropping the pool closes its queue, so the workers drain
             // and the scope joins.
         });
     }
-    state.stats.evictions = cache.map(|s| s.evictions().saturating_sub(evictions0)).unwrap_or(0);
-    state.stats.seconds = t0.elapsed().as_secs_f64();
-    Ok(SweepOutcome {
-        frontier: state.frontier.into_sorted(),
-        points: state.points,
-        stats: state.stats,
-    })
+    Ok(driver.finish())
 }
 
 #[cfg(test)]
@@ -1154,6 +1354,68 @@ mod tests {
             touched < rebuilt,
             "table reuse must cut analyzer traffic: {touched} vs {rebuilt}"
         );
+    }
+
+    #[test]
+    fn daemon_lifetime_shared_tables_are_bit_identical_across_sweeps() {
+        // A caller-owned PairTables shared across two whole sweeps (the
+        // daemon's promotion of the sweep-lifetime cache) must leave
+        // every non-diagnostic output bit-identical to a private-table
+        // reference, and the fully-warm second sweep must run zero
+        // layer analyses — every pair replays its cached table.
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        let shared = Arc::new(PairTables::new());
+        let cfg = SweepConfig {
+            keep_all_points: true,
+            shared_tables: Some(Arc::clone(&shared)),
+            ..SweepConfig::serial()
+        };
+        let first = sweep(&net, &space, 2, &cfg).unwrap();
+        assert!(!shared.is_empty(), "first sweep must populate the shared table cache");
+        let second = sweep(&net, &space, 2, &cfg).unwrap();
+        let reference = sweep(
+            &net,
+            &space,
+            2,
+            &SweepConfig { keep_all_points: true, ..SweepConfig::serial() },
+        )
+        .unwrap();
+        for (label, out) in [("first", &first), ("second", &second)] {
+            assert_eq!(out.frontier, reference.frontier, "{label}: frontier");
+            assert_eq!(out.points, reference.points, "{label}: point list");
+            assert_eq!(
+                (out.stats.evaluated, out.stats.valid, out.stats.pruned, out.stats.unmappable),
+                (
+                    reference.stats.evaluated,
+                    reference.stats.valid,
+                    reference.stats.pruned,
+                    reference.stats.unmappable
+                ),
+                "{label}: skip accounting"
+            );
+        }
+        assert_eq!(
+            second.stats.cache_hits + second.stats.cache_misses,
+            0,
+            "fully shared tables must eliminate analyzer traffic entirely"
+        );
+    }
+
+    #[test]
+    fn table_identity_tracks_workload_and_pair_axes_only() {
+        let net = vgg16::conv_only();
+        let space = DesignSpace::ci_smoke("kc-p");
+        let id = table_identity(&net, &space);
+        assert_eq!(id, table_identity(&net, &space), "identity is deterministic in-process");
+        let mut bw = space.clone();
+        bw.bandwidths = vec![1, 2];
+        assert_eq!(id, table_identity(&net, &bw), "bandwidth axis must be excluded");
+        let mut pes = space.clone();
+        pes.pes.push(8192);
+        assert_ne!(id, table_identity(&net, &pes), "PEs axis must be included");
+        let single = Network::single(vgg16::conv13());
+        assert_ne!(id, table_identity(&single, &space), "workload must be included");
     }
 
     // The pruned-vs-unmappable accounting scenario lives in

@@ -106,7 +106,10 @@ pub mod pareto;
 pub mod space;
 pub mod strategy;
 
-pub use engine::{sweep, SweepConfig, SweepOutcome, SweepStats};
+pub use engine::{
+    sweep, table_identity, PairTables, SweepConfig, SweepCtx, SweepDriver, SweepOutcome,
+    SweepShard, SweepStats, SweepWave,
+};
 pub use pareto::ParetoAccumulator;
 pub use space::DesignSpace;
 pub use strategy::{

@@ -11,6 +11,8 @@
 //! maestro dse      --family kc-p --strategy random --budget 50000 --seed 7
 //! maestro dse      --family kc-p --mapspace                         # generated variant axis
 //! maestro serve    --cache-file warm.mcache [--addr 127.0.0.1:7733] # resident DSE daemon
+//! maestro client   --addr 127.0.0.1:7733    # persistent connection: stdin frames -> daemon
+//! maestro dse      --family kc-p --remote 127.0.0.1:7733 [--stream] # run on a daemon instead
 //! maestro cache    compact --cache-file warm.mcache   # rewrite with unique keys
 //! maestro table1
 //! maestro zoo
@@ -41,7 +43,7 @@ use maestro::service::exec::{
     analyze_reply, dse_reply, map_reply, pick_layer_named, prepare_dse, run_analyze, run_map,
     run_prepared_dse,
 };
-use maestro::service::{Response, ServeConfig};
+use maestro::service::{Request, Response, ServeConfig};
 use maestro::sim::cycle::simulate;
 use maestro::util::cli::{common_flags, usage, Args, FlagSpec};
 use maestro::util::table::{num, Table};
@@ -86,7 +88,17 @@ fn flags() -> Vec<FlagSpec> {
             takes_value: false,
             help: "network/map/dse: emit the service API's versioned JSON frame instead of tables",
         },
-        FlagSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:7733)" },
+        FlagSpec { name: "addr", takes_value: true, help: "serve/client: daemon address (default 127.0.0.1:7733)" },
+        FlagSpec {
+            name: "remote",
+            takes_value: true,
+            help: "network/map/dse: send the request to a serve daemon at ADDR and print its frames",
+        },
+        FlagSpec {
+            name: "stream",
+            takes_value: false,
+            help: "map/dse with --remote: stream progress frames before the final reply",
+        },
         FlagSpec {
             name: "queue-cap",
             takes_value: true,
@@ -159,7 +171,7 @@ fn main() -> Result<()> {
     }
     let Some(cmd) = args.subcommand.clone() else {
         println!("maestro — data-centric DNN dataflow cost model (MICRO-52 reproduction)");
-        println!("subcommands: analyze | network | map | validate | dse | serve | cache | table1 | zoo");
+        println!("subcommands: analyze | network | map | validate | dse | serve | client | cache | table1 | zoo");
         println!("{}", usage(&spec));
         return Ok(());
     };
@@ -191,6 +203,9 @@ fn main() -> Result<()> {
         }
         "network" => {
             let req = AnalyzeRequest::from_args(&args)?;
+            if run_remote(&args, Request::Analyze(req.clone()))? {
+                return Ok(());
+            }
             let json = args.has("json");
             let (store, cache_path) = open_cache(&args, json)?;
             let out = run_analyze(&store, &req)?;
@@ -240,6 +255,9 @@ fn main() -> Result<()> {
             // against the fixed-style adaptive baseline (§5.1) through
             // the same shared analysis store.
             let req = MapRequest::from_args(&args)?;
+            if run_remote(&args, Request::Map(req.clone()))? {
+                return Ok(());
+            }
             let json = args.has("json");
             let (store, cache_path) = open_cache(&args, json)?;
             let out = run_map(&store, &req, None)?;
@@ -311,6 +329,9 @@ fn main() -> Result<()> {
         }
         "dse" => {
             let req = DseRequest::from_args(&args)?;
+            if run_remote(&args, Request::Dse(req.clone()))? {
+                return Ok(());
+            }
             let json = args.has("json");
             let prep = prepare_dse(&req)?;
             if !json {
@@ -408,6 +429,10 @@ fn main() -> Result<()> {
             };
             maestro::service::serve(&cfg)?;
         }
+        "client" => {
+            let addr = args.opt("addr", "127.0.0.1:7733");
+            maestro::service::client::repl(&addr)?;
+        }
         "cache" => {
             let action = args.positional.first().map(String::as_str).unwrap_or("");
             match action {
@@ -457,6 +482,20 @@ fn main() -> Result<()> {
         other => bail!("unknown subcommand '{other}'\n{}", usage(&spec)),
     }
     Ok(())
+}
+
+/// When `--remote ADDR` is set, ship the request to that daemon and
+/// print every reply frame (streamed progress included) verbatim —
+/// the remote twin of `--json`. Returns whether it ran.
+fn run_remote(args: &Args, request: Request) -> Result<bool> {
+    let addr = args.opt("remote", "");
+    if addr.is_empty() {
+        return Ok(false);
+    }
+    for frame in maestro::service::client::call(&addr, &request)? {
+        println!("{frame}");
+    }
+    Ok(true)
 }
 
 /// Print the throughput- and energy-optimal designs of a point set.

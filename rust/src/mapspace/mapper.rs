@@ -21,21 +21,29 @@
 //! Determinism: admission — enumeration, the defaults-first reorder,
 //! `max_designs` prefix cuts, and the wall/cancel fallback decision —
 //! always runs serially on the coordinating thread, in
-//! `Network::unique_shapes` order. Evaluation either folds serially
-//! (`threads` = 1, the reference path) or fans each shape's candidate
-//! list out in contiguous chunks over a persistent
+//! `Network::unique_shapes` order ([`MapDriver::next_wave`]).
+//! Evaluation either folds serially (`threads` = 1, the reference
+//! path: one chunk per shape) or fans each shape's candidate list out
+//! in contiguous chunks over a persistent
 //! [`crate::util::pool::WavePool`] — the sweep engine's pool — whose
 //! results merge in chunk order under the same strict-improvement
 //! rule, reproducing the serial fold's earliest-minimum winner
-//! exactly. Every pool worker fronts the mapper's own
-//! [`SharedStore`], so cross-chunk and cross-shape replays keep
-//! working. The outcome — winners, per-shape stats, the assembled
-//! network, and every budget counter — is therefore bit-identical
-//! across runs, thread counts, and pre-warmed cache states (values are
-//! pure functions of keys) as long as no wall-clock budget is set;
-//! only the cache hit/miss split and the wall clock may move with the
-//! partition, exactly like the sweep's (both are excluded from the
-//! contract, see [`MapperStats`]). Pinned in `rust/tests/mapspace.rs`.
+//! exactly. Every chunk evaluates through an analyzer fronting the
+//! mapper's own [`SharedStore`], so cross-chunk and cross-shape
+//! replays keep working. The outcome — winners, per-shape stats, the
+//! assembled network, and every budget counter — is therefore
+//! bit-identical across runs, thread counts, and pre-warmed cache
+//! states (values are pure functions of keys) as long as no
+//! wall-clock budget is set; only the cache hit/miss split and the
+//! wall clock may move with the partition, exactly like the sweep's
+//! (both are excluded from the contract, see [`MapperStats`]). Pinned
+//! in `rust/tests/mapspace.rs`.
+//!
+//! The wave loop itself is externalized as [`MapDriver`] (the mirror
+//! of [`crate::dse::SweepDriver`]): the `serve` daemon pulls waves
+//! from many drivers at once and interleaves their chunks onto one
+//! process-wide pool, and [`Mapper::map_network`] is the in-process
+//! loop over the same driver.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -50,7 +58,7 @@ use crate::engine::analysis::{
 use crate::hw::config::HwConfig;
 use crate::ir::dataflow::Dataflow;
 use crate::model::layer::{Layer, ShapeKey};
-use crate::model::network::{Network, ShapeGroup};
+use crate::model::network::Network;
 use crate::util::pool::WavePool;
 
 use super::template::StyleTemplate;
@@ -203,11 +211,6 @@ pub struct MappingOutcome {
     pub stats: MapperStats,
 }
 
-/// One chunk of a shape's candidate list for the wave pool: the
-/// shape's layer, the admitted candidate list (shared), and this
-/// chunk's contiguous range within it.
-type ChunkJob<'a> = (&'a Layer, Arc<Vec<Dataflow>>, std::ops::Range<usize>);
-
 /// One candidate-chunk search result — the pooled path's job output;
 /// the serial path produces exactly one per shape (the whole list as
 /// one chunk).
@@ -294,6 +297,298 @@ fn merge_chunks(chunks: Vec<ChunkSearch>, objective: Objective) -> ChunkSearch {
     merged
 }
 
+/// One admitted shape's candidate list, partitioned into contiguous
+/// chunks. Cheap to clone (three `Arc`s), so an external scheduler can
+/// hand `(wave, chunk_index)` jobs to a shared pool without copying
+/// the candidate list.
+#[derive(Debug, Clone)]
+pub struct MapWave {
+    layer: Arc<Layer>,
+    list: Arc<Vec<Dataflow>>,
+    chunks: Arc<Vec<std::ops::Range<usize>>>,
+}
+
+impl MapWave {
+    /// Number of chunks this wave splits into (may be 0 when the shape
+    /// admitted no candidates — absorb an empty result vector then).
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+/// The outcome of evaluating one chunk of a [`MapWave`] — opaque to
+/// schedulers; hand it back to [`MapDriver::absorb_wave`] in
+/// chunk-index order. `Default` is the pool's panic-fill value.
+#[derive(Debug, Default)]
+pub struct MapChunk(ChunkSearch);
+
+/// The immutable, shareable half of a mapper run: everything a worker
+/// needs to evaluate a candidate chunk. Each evaluation runs through a
+/// fresh [`Analyzer`] fronting the shared store, so cross-chunk and
+/// cross-request replays work no matter which thread runs the chunk.
+pub struct MapCtx {
+    hw: HwConfig,
+    objective: Objective,
+    store: Arc<SharedStore>,
+}
+
+impl MapCtx {
+    /// Evaluate one chunk of a wave. Pure with respect to the driver's
+    /// mutable state: any thread may run any chunk in any order, and
+    /// results absorb deterministically as long as they are handed
+    /// back in chunk-index order.
+    pub fn run_chunk(&self, wave: &MapWave, chunk: usize) -> MapChunk {
+        let mut analyzer = Analyzer::with_store(Arc::clone(&self.store));
+        let range = wave.chunks[chunk].clone();
+        let mut out =
+            search_candidates(&mut analyzer, &wave.layer, &wave.list[range], &self.hw, self.objective);
+        out.cache_hits = analyzer.cache_hits();
+        out.cache_disk_hits = analyzer.disk_hits();
+        out.cache_misses = analyzer.cache_misses();
+        out.profile_hits = analyzer.profile_hits();
+        MapChunk(out)
+    }
+}
+
+/// The mapper's per-shape wave loop, externalized (the mapper-side
+/// mirror of [`crate::dse::SweepDriver`]): [`MapDriver::next_wave`]
+/// runs the serial admission for the next unique shape — the
+/// wall/cancel fallback decision, enumeration, the defaults-first
+/// reorder, and the `max_designs` prefix cut, exactly as the module
+/// docs specify — and partitions the admitted list into chunks; the
+/// caller evaluates the chunks however it likes (inline, a private
+/// pool, or the `serve` daemon's shared pool) via
+/// [`MapCtx::run_chunk`]; [`MapDriver::absorb_wave`] merges them in
+/// chunk order and records the shape's winner. [`MapDriver::finish`]
+/// assembles the network view through a caller-supplied analyzer
+/// (which must front the same store for the replay hits to land).
+pub struct MapDriver {
+    ctx: Arc<MapCtx>,
+    net: Network,
+    cfg: MapperConfig,
+    /// Thread count the chunk partition is sized for (`<= 1` = one
+    /// chunk per shape, the serial reference partition). Affects load
+    /// balancing only, never the merged outcome.
+    threads: usize,
+    default_fps: std::collections::HashSet<crate::cache::DataflowFingerprint>,
+    /// Unique shapes in first-occurrence order: (key, representative
+    /// layer index, member count) — the owned mirror of
+    /// [`Network::unique_shapes`].
+    shape_order: Vec<(ShapeKey, usize, u64)>,
+    next_shape: usize,
+    /// The shape admitted by the last `next_wave`, awaiting absorb.
+    current: Option<(ShapeKey, usize, u64)>,
+    stats: MapperStats,
+    winners: HashMap<ShapeKey, Dataflow>,
+    failures: HashMap<ShapeKey, String>,
+    per_shape: Vec<ShapeMapping>,
+    pool_counters: (u64, u64, u64, u64),
+    t0: std::time::Instant,
+    evictions0: u64,
+}
+
+impl MapDriver {
+    /// Set up a mapper run without executing it: validates the config,
+    /// snapshots the unique-shape order, and captures the evaluation
+    /// context. `cfg.threads` sizes the chunk partition only —
+    /// execution belongs to the caller.
+    pub fn new(
+        net: &Network,
+        hw: &HwConfig,
+        cfg: &MapperConfig,
+        store: Arc<SharedStore>,
+    ) -> Result<MapDriver> {
+        ensure!(!cfg.templates.is_empty(), "mapper: no style templates to search");
+        ensure!(!net.layers.is_empty(), "mapper: empty network");
+        let t0 = std::time::Instant::now();
+        let evictions0 = store.evictions();
+        // Fingerprints of the Table 3 default bindings, for the
+        // defaults-first ordering in admission.
+        let default_fps: std::collections::HashSet<_> = cfg
+            .templates
+            .iter()
+            .map(|t| t.instantiate_defaults().fingerprint())
+            .collect();
+        let mut shape_order: Vec<(ShapeKey, usize, u64)> = Vec::new();
+        let mut index: HashMap<ShapeKey, usize> = HashMap::new();
+        for (i, layer) in net.layers.iter().enumerate() {
+            let key = layer.shape_key();
+            match index.get(&key).copied() {
+                Some(j) => shape_order[j].2 += 1,
+                None => {
+                    index.insert(key, shape_order.len());
+                    shape_order.push((key, i, 1));
+                }
+            }
+        }
+        let ctx = Arc::new(MapCtx { hw: hw.clone(), objective: cfg.objective, store });
+        Ok(MapDriver {
+            ctx,
+            net: net.clone(),
+            cfg: cfg.clone(),
+            threads: cfg.effective_threads(),
+            default_fps,
+            shape_order,
+            next_shape: 0,
+            current: None,
+            stats: MapperStats::default(),
+            winners: HashMap::new(),
+            failures: HashMap::new(),
+            per_shape: Vec::new(),
+            pool_counters: (0, 0, 0, 0),
+            t0,
+            evictions0,
+        })
+    }
+
+    /// The shared evaluation context for this run's chunks.
+    pub fn ctx(&self) -> Arc<MapCtx> {
+        Arc::clone(&self.ctx)
+    }
+
+    /// Admit the next unique shape and return its candidate wave, or
+    /// `None` when every shape has been visited. Admission —
+    /// everything *before* evaluation — always runs here, on the
+    /// coordinating thread: the wall/cancel fallback decision,
+    /// enumeration, the defaults-first reorder, and the `max_designs`
+    /// prefix cut, which keeps `shapes_defaulted`, `combos`,
+    /// `candidates`, and `budget_skipped` bit-identical for any
+    /// executor. The previous wave must be absorbed first.
+    pub fn next_wave(&mut self) -> Option<MapWave> {
+        assert!(self.current.is_none(), "absorb the in-flight wave before pulling the next");
+        let &(key, rep, members) = self.shape_order.get(self.next_shape)?;
+        self.next_shape += 1;
+        self.current = Some((key, rep, members));
+        let layer = self.net.layers[rep].clone();
+        self.stats.shapes += 1;
+        let cancelled = self
+            .cfg
+            .cancel
+            .as_ref()
+            .is_some_and(|c| c.load(std::sync::atomic::Ordering::Relaxed));
+        let exhausted = cancelled
+            || (self.cfg.budget.max_seconds > 0.0
+                && self.t0.elapsed().as_secs_f64() >= self.cfg.budget.max_seconds);
+        let en = if exhausted {
+            self.stats.shapes_defaulted += 1;
+            enumerate_defaults(&self.cfg.templates, &layer, self.ctx.hw.num_pes)
+        } else {
+            enumerate_all(&self.cfg.templates, &layer, self.ctx.hw.num_pes, self.cfg.tile_resolution)
+        };
+        self.stats.combos += en.combos;
+        self.stats.candidates += en.dataflows.len() as u64;
+        let mut candidates = en.dataflows;
+        // Evaluate the Table 3 default bindings *first* (stable
+        // partition: defaults in enumeration order, then the rest),
+        // so a `max_designs` prefix cut can never drop the fixed
+        // styles — the "mapper cannot lose to a fixed style"
+        // guarantee holds for any budget >= the template count
+        // (and exactly, unbudgeted).
+        candidates.sort_by_key(|df| !self.default_fps.contains(&df.fingerprint()));
+        if self.cfg.budget.max_designs > 0 && candidates.len() as u64 > self.cfg.budget.max_designs
+        {
+            self.stats.budget_skipped += candidates.len() as u64 - self.cfg.budget.max_designs;
+            candidates.truncate(self.cfg.budget.max_designs as usize);
+        }
+        let n = candidates.len();
+        // Contiguous chunks, a few per worker for load balance (one
+        // chunk — the serial reference partition — when `threads` <=
+        // 1); the partition only affects which worker evaluates what,
+        // never the merged outcome.
+        let chunk = if self.threads <= 1 { n.max(1) } else { (n / (self.threads * 4)).max(1) };
+        let chunks: Vec<std::ops::Range<usize>> = (0..n.div_ceil(chunk))
+            .map(|i| {
+                let start = i * chunk;
+                start..(start + chunk).min(n)
+            })
+            .collect();
+        Some(MapWave { layer: Arc::new(layer), list: Arc::new(candidates), chunks: Arc::new(chunks) })
+    }
+
+    /// Merge one wave's chunk results — **in chunk-index order** — and
+    /// record the shape's winner (or failure diagnostic).
+    pub fn absorb_wave(&mut self, chunks: Vec<MapChunk>) {
+        let (key, rep, members) =
+            self.current.take().expect("absorb_wave without a wave in flight");
+        let merged =
+            merge_chunks(chunks.into_iter().map(|c| c.0).collect(), self.ctx.objective);
+        self.pool_counters.0 += merged.cache_hits;
+        self.pool_counters.1 += merged.cache_disk_hits;
+        self.pool_counters.2 += merged.cache_misses;
+        self.pool_counters.3 += merged.profile_hits;
+        self.stats.evaluated += merged.evaluated;
+        match merged.best {
+            Some((s, df)) => {
+                self.winners.insert(key, df.clone());
+                self.per_shape.push(ShapeMapping {
+                    representative: self.net.layers[rep].name.clone(),
+                    members,
+                    dataflow: df,
+                    stats: s,
+                    evaluated: merged.evaluated,
+                });
+            }
+            None => {
+                self.failures.insert(
+                    key,
+                    merged.last_err.unwrap_or_else(|| "no template mapping resolves".into()),
+                );
+            }
+        }
+    }
+
+    /// Unique shapes in the workload (the total wave count).
+    pub fn shapes_total(&self) -> usize {
+        self.shape_order.len()
+    }
+
+    /// Shapes admitted so far (in-flight wave included).
+    pub fn shapes_admitted(&self) -> usize {
+        self.next_shape
+    }
+
+    /// Candidates evaluated so far.
+    pub fn evaluated(&self) -> u64 {
+        self.stats.evaluated
+    }
+
+    /// Assemble the network view: every layer replays its shape's
+    /// winner through `analyzer` (cache hits re-labeled with the
+    /// layer's own name), then the counters finalize. `analyzer` must
+    /// front the same store as the driver for the replays to hit.
+    pub fn finish(mut self, analyzer: &mut Analyzer) -> Result<MappingOutcome> {
+        let (hits0, misses0) = (analyzer.cache_hits(), analyzer.cache_misses());
+        let disk0 = analyzer.disk_hits();
+        let profile0 = analyzer.profile_hits();
+        let mut per_layer = Vec::new();
+        let mut skipped = Vec::new();
+        for layer in &self.net.layers {
+            match self.winners.get(&layer.shape_key()) {
+                Some(df) => per_layer.push(analyzer.analyze(layer, df, &self.ctx.hw)?),
+                None => skipped.push(SkippedLayer {
+                    layer: layer.name.clone(),
+                    reason: self
+                        .failures
+                        .get(&layer.shape_key())
+                        .cloned()
+                        .unwrap_or_else(|| "no template mapping resolves".into()),
+                }),
+            }
+        }
+        ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
+        // Chunk-worker counters plus the assembly analyzer's deltas.
+        let (pool_hits, pool_disk, pool_misses, pool_profile) = self.pool_counters;
+        self.stats.cache_hits = pool_hits + (analyzer.cache_hits() - hits0);
+        self.stats.cache_misses = pool_misses + (analyzer.cache_misses() - misses0);
+        self.stats.cache_disk_hits = pool_disk + (analyzer.disk_hits() - disk0);
+        self.stats.profile_hits = pool_profile + (analyzer.profile_hits() - profile0);
+        self.stats.evictions = self.ctx.store.evictions().saturating_sub(self.evictions0);
+        self.stats.seconds = self.t0.elapsed().as_secs_f64();
+        let network = fold_network_stats(&self.net.name, "mapper", per_layer, skipped);
+        Ok(MappingOutcome { network, per_shape: self.per_shape, stats: self.stats })
+    }
+}
+
 /// The layer-wise mapper. Owns an [`Analyzer`] so repeated shapes —
 /// within one call and across calls — replay instead of re-analyzing;
 /// construct with [`Mapper::with_store`] to pool analyses with sweeps
@@ -320,182 +615,51 @@ impl Mapper {
     /// Choose the best mapping per unique layer shape and aggregate the
     /// network under those winners. See the module docs for the search
     /// and determinism contract.
+    ///
+    /// This is the in-process convenience loop over [`MapDriver`]:
+    /// serial admission per shape, chunk evaluation inline (`threads`
+    /// <= 1, the reference partition: one chunk per shape) or on a
+    /// private persistent [`WavePool`], chunk-order merge, and assembly
+    /// through the mapper's own analyzer. The `serve` daemon drives the
+    /// same [`MapDriver`] from its shared scheduler instead, so daemon
+    /// replies inherit the determinism contract.
     pub fn map_network(
         &mut self,
         net: &Network,
         hw: &HwConfig,
         cfg: &MapperConfig,
     ) -> Result<MappingOutcome> {
-        ensure!(!cfg.templates.is_empty(), "mapper: no style templates to search");
-        ensure!(!net.layers.is_empty(), "mapper: empty network");
-        let t0 = std::time::Instant::now();
-        let (hits0, misses0) = (self.analyzer.cache_hits(), self.analyzer.cache_misses());
-        let disk0 = self.analyzer.disk_hits();
-        let profile0 = self.analyzer.profile_hits();
-        let evictions0 = self.analyzer.store().evictions();
-        let mut stats = MapperStats::default();
-        let mut per_shape: Vec<ShapeMapping> = Vec::new();
-        let mut winners: HashMap<ShapeKey, Dataflow> = HashMap::new();
-        let mut failures: HashMap<ShapeKey, String> = HashMap::new();
-        // Fingerprints of the Table 3 default bindings, for the
-        // defaults-first ordering below.
-        let default_fps: std::collections::HashSet<_> = cfg
-            .templates
-            .iter()
-            .map(|t| t.instantiate_defaults().fingerprint())
-            .collect();
-
-        // Per-shape candidate admission — everything *before*
-        // evaluation, always on the coordinating thread in both paths:
-        // the wall/cancel fallback decision, enumeration, the
-        // defaults-first reorder, and the `max_designs` prefix cut.
-        // Keeping admission serial keeps `shapes_defaulted`, `combos`,
-        // `candidates`, and `budget_skipped` bit-identical for any
-        // thread count.
-        let mut admit = |group: &ShapeGroup<'_>, stats: &mut MapperStats| -> Vec<Dataflow> {
-            stats.shapes += 1;
-            let cancelled = cfg
-                .cancel
-                .as_ref()
-                .is_some_and(|c| c.load(std::sync::atomic::Ordering::Relaxed));
-            let exhausted = cancelled
-                || (cfg.budget.max_seconds > 0.0
-                    && t0.elapsed().as_secs_f64() >= cfg.budget.max_seconds);
-            let en = if exhausted {
-                stats.shapes_defaulted += 1;
-                enumerate_defaults(&cfg.templates, group.layer, hw.num_pes)
-            } else {
-                enumerate_all(&cfg.templates, group.layer, hw.num_pes, cfg.tile_resolution)
-            };
-            stats.combos += en.combos;
-            stats.candidates += en.dataflows.len() as u64;
-            let mut candidates = en.dataflows;
-            // Evaluate the Table 3 default bindings *first* (stable
-            // partition: defaults in enumeration order, then the rest),
-            // so a `max_designs` prefix cut can never drop the fixed
-            // styles — the "mapper cannot lose to a fixed style"
-            // guarantee holds for any budget >= the template count
-            // (and exactly, unbudgeted).
-            candidates.sort_by_key(|df| !default_fps.contains(&df.fingerprint()));
-            if cfg.budget.max_designs > 0 && candidates.len() as u64 > cfg.budget.max_designs {
-                stats.budget_skipped += candidates.len() as u64 - cfg.budget.max_designs;
-                candidates.truncate(cfg.budget.max_designs as usize);
-            }
-            candidates
-        };
-
-        // Record one searched shape's outcome (shared by both paths,
-        // in shape order).
-        let mut record = |group: &ShapeGroup<'_>, search: ChunkSearch, stats: &mut MapperStats| {
-            stats.evaluated += search.evaluated;
-            match search.best {
-                Some((s, df)) => {
-                    winners.insert(group.key, df.clone());
-                    per_shape.push(ShapeMapping {
-                        representative: group.layer.name.clone(),
-                        members: group.count(),
-                        dataflow: df,
-                        stats: s,
-                        evaluated: search.evaluated,
-                    });
-                }
-                None => {
-                    failures.insert(
-                        group.key,
-                        search.last_err.unwrap_or_else(|| "no template mapping resolves".into()),
-                    );
-                }
-            }
-        };
-
+        let mut driver = MapDriver::new(net, hw, cfg, Arc::clone(self.analyzer.store()))?;
         let threads = cfg.effective_threads();
-        // Cache counters accumulated from the pooled path's per-chunk
-        // analyzers (stay 0 on the serial path, which reads the
-        // mapper's own analyzer deltas below).
-        let mut pool_counters = (0u64, 0u64, 0u64, 0u64);
         if threads <= 1 {
-            // The serial reference: one pass, the mapper's own
-            // analyzer, the whole candidate list as a single chunk.
-            for group in net.unique_shapes() {
-                let candidates = admit(&group, &mut stats);
-                let search =
-                    search_candidates(&mut self.analyzer, group.layer, &candidates, hw, cfg.objective);
-                record(&group, search, &mut stats);
+            // Serial: evaluate each shape's single chunk inline.
+            let ctx = driver.ctx();
+            while let Some(wave) = driver.next_wave() {
+                let chunks =
+                    (0..wave.chunk_count()).map(|chunk| ctx.run_chunk(&wave, chunk)).collect();
+                driver.absorb_wave(chunks);
             }
         } else {
-            // The pooled path: per-shape candidate chunks as jobs on a
+            // Pooled: per-shape candidate chunks as jobs on a
             // persistent [`WavePool`] (the sweep engine's pool,
-            // extracted). Each worker evaluates its chunk through a
-            // fresh Analyzer fronting the mapper's own store, so
-            // cross-chunk and cross-shape replays keep working. Shapes
-            // stay sequential — one wave per shape, merged in chunk
-            // order — which is what keeps winners and budget accounting
-            // bit-identical to the serial fold (module docs).
-            let store = Arc::clone(self.analyzer.store());
-            let objective = cfg.objective;
+            // extracted). Shapes stay sequential — one wave per shape,
+            // merged in chunk order — which is what keeps winners and
+            // budget accounting bit-identical to the serial fold
+            // (module docs).
+            let ctx = driver.ctx();
+            let ctx: &MapCtx = &ctx;
             std::thread::scope(|scope| {
-                let pool = WavePool::spawn(scope, threads, |(layer, list, range): ChunkJob<'_>| {
-                    let mut analyzer = Analyzer::with_store(Arc::clone(&store));
-                    let mut out = search_candidates(&mut analyzer, layer, &list[range], hw, objective);
-                    out.cache_hits = analyzer.cache_hits();
-                    out.cache_disk_hits = analyzer.disk_hits();
-                    out.cache_misses = analyzer.cache_misses();
-                    out.profile_hits = analyzer.profile_hits();
-                    out
+                let pool = WavePool::spawn(scope, threads, move |(wave, chunk): (MapWave, usize)| {
+                    ctx.run_chunk(&wave, chunk)
                 });
-                for group in net.unique_shapes() {
-                    let candidates = admit(&group, &mut stats);
-                    let n = candidates.len();
-                    let list = Arc::new(candidates);
-                    // Contiguous chunks, a few per worker for load
-                    // balance; the partition only affects which worker
-                    // evaluates what, never the merged outcome.
-                    let chunk = (n / (threads * 4)).max(1);
-                    let jobs: Vec<ChunkJob<'_>> = (0..n.div_ceil(chunk))
-                        .map(|i| {
-                            let start = i * chunk;
-                            (group.layer, Arc::clone(&list), start..(start + chunk).min(n))
-                        })
-                        .collect();
-                    let merged = merge_chunks(pool.run_wave(jobs), objective);
-                    pool_counters.0 += merged.cache_hits;
-                    pool_counters.1 += merged.cache_disk_hits;
-                    pool_counters.2 += merged.cache_misses;
-                    pool_counters.3 += merged.profile_hits;
-                    record(&group, merged, &mut stats);
+                while let Some(wave) = driver.next_wave() {
+                    let jobs: Vec<(MapWave, usize)> =
+                        (0..wave.chunk_count()).map(|chunk| (wave.clone(), chunk)).collect();
+                    driver.absorb_wave(pool.run_wave(jobs));
                 }
             });
         }
-
-        // Assemble the network view: every layer replays its shape's
-        // winner through the analyzer (cache hits re-labeled with the
-        // layer's own name).
-        let mut per_layer = Vec::new();
-        let mut skipped = Vec::new();
-        for layer in &net.layers {
-            match winners.get(&layer.shape_key()) {
-                Some(df) => per_layer.push(self.analyzer.analyze(layer, df, hw)?),
-                None => skipped.push(SkippedLayer {
-                    layer: layer.name.clone(),
-                    reason: failures
-                        .get(&layer.shape_key())
-                        .cloned()
-                        .unwrap_or_else(|| "no template mapping resolves".into()),
-                }),
-            }
-        }
-        ensure!(!per_layer.is_empty(), "mapper: no layer mappable under any template");
-        // Pool-worker counters (pooled path; 0 serially) plus the
-        // mapper's own analyzer deltas (serial search + assembly).
-        let (pool_hits, pool_disk, pool_misses, pool_profile) = pool_counters;
-        stats.cache_hits = pool_hits + (self.analyzer.cache_hits() - hits0);
-        stats.cache_misses = pool_misses + (self.analyzer.cache_misses() - misses0);
-        stats.cache_disk_hits = pool_disk + (self.analyzer.disk_hits() - disk0);
-        stats.profile_hits = pool_profile + (self.analyzer.profile_hits() - profile0);
-        stats.evictions = self.analyzer.store().evictions().saturating_sub(evictions0);
-        stats.seconds = t0.elapsed().as_secs_f64();
-        let network = fold_network_stats(&net.name, "mapper", per_layer, skipped);
-        Ok(MappingOutcome { network, per_shape, stats })
+        driver.finish(&mut self.analyzer)
     }
 }
 

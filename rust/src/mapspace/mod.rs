@@ -41,6 +41,9 @@ pub mod mapper;
 pub mod template;
 pub mod tiling;
 
-pub use mapper::{Mapper, MapperConfig, MapperStats, MappingOutcome, ShapeMapping};
+pub use mapper::{
+    MapChunk, MapCtx, MapDriver, MapWave, Mapper, MapperConfig, MapperStats, MappingOutcome,
+    ShapeMapping,
+};
 pub use template::{StyleTemplate, TileKnob, TileRule};
 pub use tiling::{enumerate, enumerate_all, enumerate_defaults, tile_adjacency, tile_values, Enumeration};

@@ -16,6 +16,16 @@
 //! compatibly; the golden tests in `rust/tests/service_api.rs` pin the
 //! exact encodings.
 //!
+//! Streaming: `map` / `dse` requests may set `"stream": true` (omitted
+//! when false, so non-streaming frames are unchanged). The daemon then
+//! interleaves [`ProgressReply`] frames (`"kind": "progress"` — wave
+//! index, designs evaluated, frontier delta as add/remove point lists)
+//! before the final reply on the same connection; the final frame is
+//! any non-progress kind. Progress frames are wave-granular and
+//! deterministic: replaying the deltas reconstructs the sweep's
+//! frontier after every wave, and the last state's point set equals
+//! the final reply's (sorted) frontier.
+//!
 //! Errors: [`ApiError`] is the one failure shape — a stable `code`
 //! (`bad_request` | `overloaded` | `cancelled` | `internal`), a human
 //! message, `retry_after_ms` for backpressure rejections, and a
@@ -89,6 +99,9 @@ pub struct MapRequest {
     /// Mapper worker threads (0 = all cores; results are bit-identical
     /// for any value).
     pub threads: usize,
+    /// Stream per-shape progress frames before the final reply
+    /// (daemon connections only; ignored in-process).
+    pub stream: bool,
 }
 
 /// `dse`: a budgeted, strategy-driven sweep over a design space.
@@ -117,6 +130,9 @@ pub struct DseRequest {
     /// Return every evaluated point, not just the frontier (the CLI's
     /// scatter needs them; daemon clients should leave this off).
     pub keep_points: bool,
+    /// Stream per-wave progress frames (frontier deltas) before the
+    /// final reply (daemon connections only; ignored in-process).
+    pub stream: bool,
 }
 
 // ---------------------------------------------------------------------
@@ -130,6 +146,9 @@ pub enum Response {
     Map(MapReply),
     Dse(DseReply),
     Status(StatusReply),
+    /// Incremental progress on a streaming `map`/`dse` request; more
+    /// frames follow on the same connection until a non-progress kind.
+    Progress(ProgressReply),
     /// Acknowledgement for `cancel` / `shutdown`.
     Done(DoneReply),
     Error(ErrorReply),
@@ -287,7 +306,26 @@ pub struct DseReply {
     pub stats: RequestStats,
 }
 
-/// Resident-store counters (`status`).
+/// One streamed progress frame on a `"stream": true` request. `dse`
+/// emits one per absorbed sweep wave with the frontier's change as
+/// add/remove point lists (apply removes, then adds, to mirror the
+/// deterministic mid-sweep frontier); `map` emits one per searched
+/// shape with empty delta lists (the mapper has no frontier).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProgressReply {
+    pub id: Option<u64>,
+    /// Waves (dse) or shapes (map) absorbed so far, 1-based.
+    pub wave: u64,
+    /// Designs/candidates evaluated so far.
+    pub evaluated: u64,
+    /// Points that entered the frontier this wave.
+    pub frontier_add: Vec<PointRow>,
+    /// Points this wave's additions dominated out of the frontier.
+    pub frontier_remove: Vec<PointRow>,
+}
+
+/// Resident-store counters plus scheduler load (`status`) — the probe
+/// surface a load balancer watches.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StatusReply {
     pub entries: u64,
@@ -296,6 +334,15 @@ pub struct StatusReply {
     pub disk_hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Requests accepted but not yet picked up by the scheduler.
+    pub queue_depth: u64,
+    /// Requests the scheduler is actively interleaving onto the pool.
+    pub inflight: u64,
+    /// Shared-pool worker threads.
+    pub workers: u64,
+    /// Fraction of pool workers occupied by the most recent wave
+    /// (`min(jobs, workers) / workers`; 0.0 when idle).
+    pub pool_utilization: f64,
 }
 
 impl From<StoreMetrics> for StatusReply {
@@ -307,6 +354,10 @@ impl From<StoreMetrics> for StatusReply {
             disk_hits: m.disk_hits,
             misses: m.misses,
             evictions: m.evictions,
+            queue_depth: 0,
+            inflight: 0,
+            workers: 0,
+            pool_utilization: 0.0,
         }
     }
 }
@@ -410,6 +461,7 @@ impl MapRequest {
             // --workers (the coordinator-era spelling) still caps map
             // parallelism when --threads is absent, as for dse.
             threads: args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize,
+            stream: args.has("stream"),
         })
     }
 }
@@ -437,6 +489,7 @@ impl DseRequest {
             // parallelism when --threads is absent.
             threads: args.opt_u64("threads", args.opt_u64("workers", 0)?)? as usize,
             keep_points: false,
+            stream: args.has("stream"),
         })
     }
 }
@@ -527,7 +580,10 @@ impl Request {
                 .set("tile_resolution", Json::int(r.tile_resolution as u64))
                 .set("budget", Json::int(r.budget))
                 .set("budget_seconds", Json::num(r.budget_seconds))
-                .set("threads", Json::int(r.threads as u64)),
+                .set("threads", Json::int(r.threads as u64))
+                // Omitted when false, so pre-streaming frames are
+                // byte-stable (the goldens pin them).
+                .set_opt("stream", r.stream.then(|| Json::Bool(true))),
             Request::Dse(r) => envelope("dse", r.id)
                 .set("family", Json::str(&r.family))
                 .set("model", Json::str(&r.model))
@@ -542,7 +598,8 @@ impl Request {
                 .set("budget", Json::int(r.budget))
                 .set("budget_seconds", Json::num(r.budget_seconds))
                 .set("threads", Json::int(r.threads as u64))
-                .set("keep_points", Json::Bool(r.keep_points)),
+                .set("keep_points", Json::Bool(r.keep_points))
+                .set_opt("stream", r.stream.then(|| Json::Bool(true))),
             Request::Status => envelope("status", None),
             Request::Cancel { id } => envelope("cancel", None).set("id", Json::int(*id)),
             Request::Shutdown => envelope("shutdown", None),
@@ -584,6 +641,7 @@ impl Request {
                     budget: get_u64(v, "budget", 0)?,
                     budget_seconds: get_f64(v, "budget_seconds", 0.0)?,
                     threads: get_u64(v, "threads", 0)? as usize,
+                    stream: get_bool(v, "stream", false)?,
                 }))
             }
             "dse" => {
@@ -604,6 +662,7 @@ impl Request {
                     budget_seconds: get_f64(v, "budget_seconds", 0.0)?,
                     threads: get_u64(v, "threads", 0)? as usize,
                     keep_points: get_bool(v, "keep_points", false)?,
+                    stream: get_bool(v, "stream", false)?,
                 }))
             }
             "status" => Ok(Request::Status),
@@ -624,6 +683,12 @@ impl Response {
     /// The failure constructor every layer funnels through.
     pub fn error(id: Option<u64>, error: ApiError) -> Response {
         Response::Error(ErrorReply { id, error })
+    }
+
+    /// Whether more frames follow this one on the same connection
+    /// (clients read until the first non-progress frame).
+    pub fn is_progress(&self) -> bool {
+        matches!(self, Response::Progress(_))
     }
 
     pub fn encode(&self) -> Json {
@@ -730,7 +795,20 @@ impl Response {
                 .set("hits", Json::int(r.hits))
                 .set("disk_hits", Json::int(r.disk_hits))
                 .set("misses", Json::int(r.misses))
-                .set("evictions", Json::int(r.evictions)),
+                .set("evictions", Json::int(r.evictions))
+                .set("queue_depth", Json::int(r.queue_depth))
+                .set("inflight", Json::int(r.inflight))
+                .set("workers", Json::int(r.workers))
+                .set("pool_utilization", Json::num(r.pool_utilization)),
+            Response::Progress(r) => envelope("progress", r.id)
+                .set("ok", Json::Bool(true))
+                .set("wave", Json::int(r.wave))
+                .set("evaluated", Json::int(r.evaluated))
+                .set("frontier_add", Json::Arr(r.frontier_add.iter().map(point_json).collect()))
+                .set(
+                    "frontier_remove",
+                    Json::Arr(r.frontier_remove.iter().map(point_json).collect()),
+                ),
             Response::Done(r) => envelope("done", r.id)
                 .set("ok", Json::Bool(true))
                 .set("what", Json::str(&r.what)),
@@ -868,6 +946,23 @@ impl Response {
                 disk_hits: get_u64(v, "disk_hits", 0)?,
                 misses: get_u64(v, "misses", 0)?,
                 evictions: get_u64(v, "evictions", 0)?,
+                queue_depth: get_u64(v, "queue_depth", 0)?,
+                inflight: get_u64(v, "inflight", 0)?,
+                workers: get_u64(v, "workers", 0)?,
+                pool_utilization: get_f64(v, "pool_utilization", 0.0)?,
+            })),
+            "progress" => Ok(Response::Progress(ProgressReply {
+                id,
+                wave: get_u64(v, "wave", 0)?,
+                evaluated: get_u64(v, "evaluated", 0)?,
+                frontier_add: arr(v, "frontier_add")?
+                    .iter()
+                    .map(decode_point)
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                frontier_remove: arr(v, "frontier_remove")?
+                    .iter()
+                    .map(decode_point)
+                    .collect::<std::result::Result<_, ApiError>>()?,
             })),
             "done" => Ok(Response::Done(DoneReply { id, what: get_str(v, "what", "")? })),
             "error" => {
@@ -941,6 +1036,15 @@ fn decode_stats(v: &Json) -> std::result::Result<RequestStats, ApiError> {
         designs_evaluated: get_u64(s, "designs_evaluated", 0)?,
         wall_seconds: get_f64(s, "wall_seconds", 0.0)?,
     })
+}
+
+fn arr<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a [Json], ApiError> {
+    match v.get(key) {
+        None => Ok(&[]),
+        Some(x) => x
+            .as_arr()
+            .ok_or_else(|| ApiError::bad_request(format!("'{key}' must be an array"))),
+    }
 }
 
 fn check_version(v: &Json) -> std::result::Result<(), ApiError> {

@@ -1,0 +1,109 @@
+//! Persistent-connection TCP client for the serve daemon.
+//!
+//! Two modes:
+//!
+//! * [`call`] — one request over a fresh connection: send the frame,
+//!   collect every reply line (streamed `progress` frames included)
+//!   until the final non-progress frame. Lines come back as the
+//!   daemon's exact bytes, so `--remote` output is byte-identical to
+//!   what a raw socket client would see.
+//! * [`repl`] — `maestro client --addr HOST:PORT`: a long-lived
+//!   connection piping JSON request lines from stdin to the daemon and
+//!   every reply frame back to stdout. One connection across many
+//!   requests, so the daemon's resident store warmth accrues to the
+//!   whole session and per-request connect cost disappears.
+//!
+//! Frame framing matches the daemon (`service::daemon`): one JSON
+//! object per newline-terminated line; a streaming request's reply is
+//! zero or more `"kind":"progress"` frames followed by exactly one
+//! final frame of any other kind.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::api::Request;
+
+/// A reply line ends its request unless it is a `progress` frame.
+/// Unparseable lines count as final so a broken peer can't hang us.
+fn is_final_frame(line: &str) -> bool {
+    match Json::parse(line) {
+        Ok(v) => v.get("kind").and_then(|k| k.as_str()) != Some("progress"),
+        Err(_) => true,
+    }
+}
+
+fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("client: cannot connect to {addr}"))?;
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok((stream, reader))
+}
+
+fn send_line(writer: &mut TcpStream, text: &str) -> Result<()> {
+    let mut line = text.to_string();
+    line.push('\n');
+    writer.write_all(line.as_bytes())?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Send one request and collect its reply frames (in arrival order,
+/// final frame last). The CLI's `--remote` path prints these verbatim.
+pub fn call(addr: &str, request: &Request) -> Result<Vec<String>> {
+    let (mut writer, mut reader) = connect(addr)?;
+    send_line(&mut writer, &request.encode().dump())?;
+    let mut frames = Vec::new();
+    loop {
+        let mut reply = String::new();
+        if reader.read_line(&mut reply)? == 0 {
+            bail!("client: connection closed before the final reply");
+        }
+        let reply = reply.trim_end();
+        if reply.is_empty() {
+            continue;
+        }
+        let done = is_final_frame(reply);
+        frames.push(reply.to_string());
+        if done {
+            return Ok(frames);
+        }
+    }
+}
+
+/// The `maestro client` loop: forward each non-empty stdin line as a
+/// request frame and print every reply frame to stdout as it arrives.
+/// Returns on stdin EOF or when the daemon closes the connection
+/// (e.g. after acknowledging a `shutdown` frame). Lines are passed
+/// through unvalidated — a malformed one earns a structured
+/// `bad_request` frame from the daemon, exactly like a raw socket.
+pub fn repl(addr: &str) -> Result<()> {
+    let (mut writer, mut reader) = connect(addr)?;
+    let stdin = std::io::stdin();
+    for input in stdin.lock().lines() {
+        let input = input?;
+        let text = input.trim();
+        if text.is_empty() {
+            continue;
+        }
+        send_line(&mut writer, text)?;
+        loop {
+            let mut reply = String::new();
+            if reader.read_line(&mut reply)? == 0 {
+                return Ok(());
+            }
+            let reply = reply.trim_end();
+            if reply.is_empty() {
+                continue;
+            }
+            println!("{reply}");
+            if is_final_frame(reply) {
+                break;
+            }
+        }
+    }
+    Ok(())
+}

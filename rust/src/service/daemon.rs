@@ -1,5 +1,6 @@
 //! The resident `maestro serve` daemon: one warm [`SharedStore`],
-//! newline-delimited JSON frames over TCP, bounded-queue backpressure.
+//! newline-delimited JSON frames over TCP, bounded-queue backpressure,
+//! and a shared-pool wave scheduler.
 //!
 //! ## Lifecycle
 //!
@@ -12,46 +13,98 @@
 //! records back to `cache_file` every `flush_every` seconds and a final
 //! flush runs on shutdown, so a crash loses at most one flush window.
 //!
-//! ## Concurrency and backpressure
+//! ## Request scheduling
 //!
-//! Each connection gets a reader thread; work requests are `try_send`'d
-//! into a bounded [`JobQueue`] drained by `workers` executor threads.
-//! A full queue rejects immediately with an `overloaded` [`ApiError`]
-//! carrying `retry_after_ms` — the daemon never buffers unboundedly and
-//! never blocks one client on another's backlog. Control requests
-//! (`status`, `cancel`, `shutdown`) bypass the queue entirely.
+//! Work requests are `try_send`'d into a bounded [`JobQueue`] drained
+//! by **one scheduler thread** that owns every in-flight request's wave
+//! driver ([`SweepDriver`] / [`MapDriver`] / a prepared analyze). The
+//! scheduler does no evaluation itself; it feeds one process-wide
+//! [`WavePool`] of `workers` threads. Each round it pulls the next wave
+//! from every in-flight request, interleaves their shard/chunk jobs
+//! round-robin (so a long sweep cannot starve a short analyze — every
+//! live request lands jobs in every wave), runs them as one pool wave,
+//! and hands each request its results back in shard order. Absorption
+//! and wave admission stay on the scheduler thread, so each request's
+//! merge order — and therefore its reply — is bit-identical to the
+//! in-process path for any worker count or concurrency level (the
+//! cache/wall-clock counters in `stats` are diagnostic, as ever).
+//! Under one request the pool sees that request's shards; under many,
+//! it sees the union — a 2-worker daemon saturates both cores on
+//! aggregate traffic instead of serializing requests behind each other.
+//!
+//! Overlapping requests also **coalesce work**, not just interleave it:
+//! all evaluation flows through the shared store (identical
+//! `(shape, dataflow, hw)` analyses replay as warm hits across
+//! requests), and dse requests over the same design space share one
+//! daemon-lifetime [`PairTables`] keyed by
+//! [`table_identity`](crate::dse::table_identity), so the
+//! bandwidth-invariant flattening work is done once per space, not once
+//! per request.
+//!
+//! A full queue rejects immediately with an `overloaded` [`ApiError`];
+//! its `retry_after_ms` scales with the observed drain rate (an EWMA of
+//! per-request completion time times the backlog per worker) instead of
+//! a constant. Control requests (`status`, `cancel`, `shutdown`) bypass
+//! the queue entirely; `status` also reports queue depth, in-flight
+//! count, and pool utilization.
+//!
+//! ## Streaming
+//!
+//! A `map`/`dse` request with `"stream": true` receives `progress`
+//! frames on its connection before the final reply: one per absorbed
+//! wave (dse) or shape (map), carrying the wave index, designs
+//! evaluated, and — for dse — the frontier delta (points added /
+//! dominated out) since the previous frame. Because waves absorb in the
+//! same deterministic order as the in-process sweep, replaying the
+//! deltas reconstructs the exact mid-sweep frontier after every wave,
+//! and the final frame's accumulated set equals the final reply's
+//! (sorted) frontier — a true prefix sequence of the deterministic
+//! result, for any worker count and any concurrent traffic.
 //!
 //! ## Cancellation
 //!
 //! A work request carrying an `id` can be cancelled from **another**
 //! connection (the submitting connection is blocked awaiting its
 //! reply): `cancel` flips the request's scoped flag, which the sweep
-//! engine checks between waves and the mapper between shapes. What the
+//! driver checks between waves and the mapper between shapes. What the
 //! client gets back depends on the request kind. `analyze`/`dse`
 //! answer with a `cancelled` error (their partial output is
-//! meaningless), and queued ones cancelled before starting never
-//! execute. A cancelled `map` instead **degrades gracefully**: shapes
-//! not yet searched fall back to the Table 3 default bindings — the
-//! mapper's `max_seconds` semantics — so the reply is a complete,
+//! meaningless) — a streaming dse's frame sequence ends with that
+//! well-formed error frame — and queued ones cancelled before starting
+//! never execute. A cancelled `map` instead **degrades gracefully**:
+//! shapes not yet searched fall back to the Table 3 default bindings —
+//! the mapper's `max_seconds` semantics — so the reply is a complete,
 //! well-formed mapping with `defaulted > 0`, never an error.
+//!
+//! [`SweepDriver`]: crate::dse::SweepDriver
+//! [`MapDriver`]: crate::mapspace::MapDriver
+//! [`WavePool`]: crate::util::pool::WavePool
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::cache::SharedStore;
+use crate::dse::engine::DesignPoint;
+use crate::dse::{table_identity, PairTables, SweepDriver, SweepShard};
+use crate::engine::analysis::NetworkStats;
+use crate::mapspace::{MapChunk, MapDriver};
 use crate::util::json::Json;
+use crate::util::pool::WavePool;
 use crate::util::queue::JobQueue;
 
-use super::api::{ApiError, DoneReply, Request, Response};
-use super::exec;
+use super::api::{
+    AnalyzeRequest, ApiError, DoneReply, DseRequest, MapRequest, PointRow, ProgressReply, Request,
+    RequestStats, Response, StatusReply,
+};
+use super::exec::{self, AnalyzeOutcome, AnalyzePrep, DsePrep, MapPrep};
 
 /// Daemon knobs; [`ServeConfig::default`] matches the CLI defaults.
 #[derive(Debug, Clone)]
@@ -64,14 +117,16 @@ pub struct ServeConfig {
     /// Second-chance capacity cap on the resident store
     /// (0 = unbounded).
     pub cache_cap: usize,
-    /// Executor threads draining the job queue (concurrent requests).
+    /// Shared-pool worker threads (the evaluation parallelism across
+    /// **all** concurrent requests).
     pub workers: usize,
     /// Job-queue depth before `overloaded` rejections kick in.
     pub queue_cap: usize,
     /// Seconds between background store flushes (0 = shutdown only).
     pub flush_every: f64,
     /// Default worker threads for `dse` and `map` requests that leave
-    /// `threads` 0 (0 = let the search use all cores).
+    /// `threads` 0 — affects only how finely their waves shard (0 =
+    /// size for all cores); results are bit-identical for any value.
     pub threads: usize,
     /// Log one line per executed request to stderr.
     pub verbose: bool,
@@ -92,12 +147,27 @@ impl Default for ServeConfig {
     }
 }
 
-/// One queued unit of work: the decoded request, the channel its reply
-/// goes back on, and its cancellation flag.
+/// One queued unit of work: the decoded request, the channel its
+/// frames go back on, and its cancellation flag.
 struct Job {
     request: Request,
     reply: mpsc::Sender<Response>,
     cancel: Arc<AtomicBool>,
+}
+
+/// How many design-space identities keep their `PairTables` resident.
+/// FIFO — a serving pattern cycling through more spaces than this
+/// rebuilds tables on wrap, which costs work but never correctness.
+const TABLE_CACHE_CAP: usize = 8;
+
+/// Daemon-lifetime case-table cache: design-space identity
+/// ([`table_identity`]) -> shared [`PairTables`]. Promoted from
+/// sweep-lifetime so repeated and concurrent dse requests over the
+/// same space flatten each (variant, PEs) pair once.
+#[derive(Default)]
+struct TableCache {
+    map: HashMap<u64, Arc<PairTables>>,
+    order: VecDeque<u64>,
 }
 
 /// State every daemon thread shares.
@@ -107,6 +177,56 @@ struct Shared {
     shutdown: AtomicBool,
     /// Client-id -> cancel flag for queued/running work requests.
     inflight: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    tables: Mutex<TableCache>,
+    /// Requests accepted but not yet picked up by the scheduler.
+    queue_depth: AtomicU64,
+    /// Requests the scheduler is actively interleaving onto the pool.
+    inflight_execs: AtomicU64,
+    /// Job count of the most recent pool wave (utilization probe).
+    last_wave_jobs: AtomicU64,
+    /// EWMA of per-request dequeue-to-completion time in ms — the
+    /// drain-rate estimate behind `overloaded.retry_after_ms`.
+    drain_ms: AtomicU64,
+}
+
+impl Shared {
+    /// The shared tables for one design-space identity (create on
+    /// first use, FIFO-evict beyond [`TABLE_CACHE_CAP`]).
+    fn tables_for(&self, key: u64) -> Arc<PairTables> {
+        let mut cache = self.tables.lock().unwrap();
+        if let Some(t) = cache.map.get(&key) {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(PairTables::new());
+        cache.map.insert(key, Arc::clone(&t));
+        cache.order.push_back(key);
+        while cache.order.len() > TABLE_CACHE_CAP {
+            if let Some(old) = cache.order.pop_front() {
+                cache.map.remove(&old);
+            }
+        }
+        t
+    }
+
+    /// Fold one finished request into the drain-rate EWMA
+    /// (new = (3·old + sample) / 4; scheduler thread only).
+    fn note_completion(&self, elapsed: Duration) {
+        let sample = (elapsed.as_millis().min(u128::from(u64::MAX)) as u64).max(1);
+        let old = self.drain_ms.load(Ordering::Relaxed);
+        self.drain_ms.store((old * 3 + sample) / 4, Ordering::Relaxed);
+    }
+
+    /// Backpressure hint for a rejected request: the EWMA per-request
+    /// drain time times the backlog rounds ahead of it, clamped to
+    /// [100 ms, 10 s].
+    fn retry_after_ms(&self) -> u64 {
+        let per = self.drain_ms.load(Ordering::Relaxed).max(1);
+        let waiting = self.queue_depth.load(Ordering::Relaxed)
+            + self.inflight_execs.load(Ordering::Relaxed)
+            + 1;
+        let workers = self.cfg.workers.max(1) as u64;
+        per.saturating_mul(waiting.div_ceil(workers)).clamp(100, 10_000)
+    }
 }
 
 /// Run the daemon on `cfg.addr`, blocking until shutdown — the
@@ -173,16 +293,18 @@ fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         store: Arc::clone(&store),
         shutdown: AtomicBool::new(false),
         inflight: Mutex::new(HashMap::new()),
+        tables: Mutex::new(TableCache::default()),
+        queue_depth: AtomicU64::new(0),
+        inflight_execs: AtomicU64::new(0),
+        last_wave_jobs: AtomicU64::new(0),
+        drain_ms: AtomicU64::new(500),
         cfg,
     };
     let shared = &shared;
 
     std::thread::scope(|scope| {
         let (job_tx, queue) = JobQueue::<Job>::bounded(shared.cfg.queue_cap.max(1));
-        for _ in 0..shared.cfg.workers.max(1) {
-            let queue = queue.clone();
-            scope.spawn(move || worker_loop(shared, queue));
-        }
+        scope.spawn(move || scheduler_loop(shared, queue));
         if shared.cfg.flush_every > 0.0 && shared.cfg.cache_file.is_some() {
             scope.spawn(move || flusher_loop(shared));
         }
@@ -206,7 +328,8 @@ fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         shared.shutdown.store(true, Ordering::Relaxed);
         // Dropping the last sender closes the queue; connection threads
         // (each holding a clone) exit at their next read-poll tick, so
-        // the workers drain whatever is queued and then stop.
+        // the scheduler drains whatever is queued, finishes its
+        // in-flight requests, and then stops.
         drop(job_tx);
         for c in conns {
             let _ = c.join();
@@ -244,77 +367,498 @@ fn flusher_loop(shared: &Shared) {
     }
 }
 
-/// Executor: drain the job queue until it closes.
-fn worker_loop(shared: &Shared, queue: JobQueue<Job>) {
-    while let Some(job) = queue.pop() {
-        let t0 = Instant::now();
-        let response = execute(shared, &job);
-        if let Some(id) = job.request.id() {
-            shared.inflight.lock().unwrap().remove(&id);
-        }
-        if shared.cfg.verbose {
-            eprintln!(
-                "serve: {} request handled in {:.3}s",
-                job.request.kind(),
-                t0.elapsed().as_secs_f64()
-            );
-        }
-        // A send error means the submitting connection died; the result
-        // is simply dropped.
-        let _ = job.reply.send(response);
+// ---------------------------------------------------------------------
+// The shared-pool scheduler
+// ---------------------------------------------------------------------
+
+/// One evaluation job shipped to the shared pool. Boxed so jobs from
+/// different request kinds ride in the same wave; each captures its
+/// own `Arc`s (context + wave), so nothing borrows the scheduler.
+type PoolJob = Box<dyn FnOnce() -> PoolResult + Send>;
+
+/// What a pool job hands back; the scheduler routes each to its
+/// request by the wave's slot tag. `Idle` is the panic-fill default —
+/// seeing one routes an `internal` error to the request (and the
+/// worker's re-raised panic takes the daemon down at scope join).
+enum PoolResult {
+    Idle,
+    Sweep(SweepShard),
+    Chunk(MapChunk),
+    Fixed(Box<Result<(NetworkStats, RequestStats)>>),
+    Analyzed(Box<Result<AnalyzeOutcome>>),
+}
+
+impl Default for PoolResult {
+    fn default() -> PoolResult {
+        PoolResult::Idle
     }
 }
 
-/// Run one work request against the resident store.
-fn execute(shared: &Shared, job: &Job) -> Response {
-    let id = job.request.id();
-    // `map` is exempt from the early-out: a cancelled map still runs
-    // and degrades gracefully — every not-yet-searched shape drops to
-    // the Table 3 defaults immediately, so the "run" is cheap and the
-    // reply is a complete mapping, not an error (module docs,
-    // "Cancellation").
-    let graceful_cancel = matches!(job.request, Request::Map(_));
-    if job.cancel.load(Ordering::Relaxed) && !graceful_cancel {
-        return Response::error(id, ApiError::cancelled());
+/// The map request's fixed-style baseline: one pool job, scheduled in
+/// the request's first round, concurrent with its mapper waves.
+enum FixedSlot {
+    Unscheduled,
+    Pending,
+    Ready(NetworkStats, RequestStats),
+}
+
+/// Per-kind scheduler state for one in-flight request.
+enum ActiveState {
+    Analyze {
+        req: AnalyzeRequest,
+        prep: AnalyzePrep,
+        running: bool,
+    },
+    Map {
+        req: MapRequest,
+        prep: MapPrep,
+        driver: Option<MapDriver>,
+        fixed: FixedSlot,
+        waves_done: bool,
+    },
+    Dse {
+        req: DseRequest,
+        prep: DsePrep,
+        driver: Option<SweepDriver>,
+        /// Insertion-order frontier snapshot after the previous wave —
+        /// the base the next streamed delta diffs against.
+        prev_frontier: Vec<DesignPoint>,
+    },
+}
+
+/// One in-flight request the scheduler is driving.
+struct Active {
+    id: Option<u64>,
+    kind: &'static str,
+    reply: mpsc::Sender<Response>,
+    cancel: Arc<AtomicBool>,
+    stream: bool,
+    /// Dequeue time: the drain-rate EWMA sample and the map request's
+    /// request-scoped wall clock.
+    started: Instant,
+    state: ActiveState,
+}
+
+/// Send the final frame and retire the request: inflight handle gone,
+/// drain EWMA updated, verbose log emitted. (A send error means the
+/// submitting connection died; the result is simply dropped.)
+fn conclude(shared: &Shared, active: &Active, response: Response) {
+    if let Some(id) = active.id {
+        shared.inflight.lock().unwrap().remove(&id);
     }
-    let store = &shared.store;
-    let cancel = Some(Arc::clone(&job.cancel));
-    let result = match &job.request {
-        Request::Analyze(r) => exec::run_analyze(store, r).map(|out| Response::Analyze(exec::analyze_reply(r, &out))),
-        Request::Map(r) => {
-            // Honor the request-scoped thread count exactly like dse
-            // below, with the daemon's default as the fallback.
-            let mut r = r.clone();
-            if r.threads == 0 {
-                r.threads = shared.cfg.threads;
+    shared.note_completion(active.started.elapsed());
+    if shared.cfg.verbose {
+        eprintln!(
+            "serve: {} request handled in {:.3}s",
+            active.kind,
+            active.started.elapsed().as_secs_f64()
+        );
+    }
+    let _ = active.reply.send(response);
+}
+
+/// The daemon's one scheduler: owns every in-flight request's driver,
+/// feeds the process-wide pool, and keeps each request's absorb order
+/// serial (module docs, "Request scheduling").
+fn scheduler_loop(shared: &Shared, queue: JobQueue<Job>) {
+    std::thread::scope(|scope| {
+        let pool: WavePool<PoolJob, PoolResult> =
+            WavePool::spawn(scope, shared.cfg.workers.max(1), |job: PoolJob| job());
+        let mut actives: Vec<Active> = Vec::new();
+        let mut open = true;
+        loop {
+            // Admit new work: block briefly when idle, then drain
+            // whatever queued (admission prepares on this thread, so
+            // `bad_request` errors reply without touching the pool).
+            if actives.is_empty() && open {
+                match queue.pop_timeout(Duration::from_millis(200)) {
+                    Ok(job) => admit(shared, &mut actives, job),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => open = false,
+                }
             }
-            exec::run_map(store, &r, cancel).map(|out| Response::Map(exec::map_reply(&r, &out)))
+            while open {
+                match queue.try_pop() {
+                    Ok(job) => admit(shared, &mut actives, job),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => open = false,
+                }
+            }
+            shared.inflight_execs.store(actives.len() as u64, Ordering::Relaxed);
+            if actives.is_empty() {
+                if open {
+                    continue;
+                }
+                break;
+            }
+
+            // One wave per request, interleaved round-robin into one
+            // pool wave; `tags[i]` routes slot i back to its request.
+            let mut done: Vec<usize> = Vec::new();
+            let mut lanes: Vec<(usize, Vec<PoolJob>)> = Vec::new();
+            for (i, active) in actives.iter_mut().enumerate() {
+                let (jobs, response) = enqueue(shared, active);
+                if let Some(response) = response {
+                    conclude(shared, active, response);
+                    done.push(i);
+                } else if !jobs.is_empty() {
+                    lanes.push((i, jobs));
+                }
+            }
+            let mut wave_jobs: Vec<PoolJob> = Vec::new();
+            let mut tags: Vec<usize> = Vec::new();
+            let mut lanes: Vec<(usize, std::vec::IntoIter<PoolJob>)> =
+                lanes.into_iter().map(|(i, v)| (i, v.into_iter())).collect();
+            loop {
+                let mut any = false;
+                for (i, lane) in lanes.iter_mut() {
+                    if let Some(job) = lane.next() {
+                        tags.push(*i);
+                        wave_jobs.push(job);
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+            shared.last_wave_jobs.store(wave_jobs.len() as u64, Ordering::Relaxed);
+
+            if wave_jobs.is_empty() {
+                if done.is_empty() {
+                    // Nothing runnable and nothing finished this round
+                    // (e.g. a map waiting on its baseline): yield
+                    // instead of spinning hot.
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            } else {
+                let results = pool.run_wave(wave_jobs);
+                let mut per: Vec<Vec<PoolResult>> = Vec::new();
+                per.resize_with(actives.len(), Vec::new);
+                for (tag, result) in tags.into_iter().zip(results) {
+                    per[tag].push(result);
+                }
+                for (i, batch) in per.into_iter().enumerate() {
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    if let Some(response) = absorb(&mut actives[i], batch) {
+                        conclude(shared, &actives[i], response);
+                        done.push(i);
+                    }
+                }
+            }
+            done.sort_unstable();
+            done.dedup();
+            for i in done.into_iter().rev() {
+                actives.remove(i);
+            }
         }
-        Request::Dse(r) => {
-            let mut r = r.clone();
+        shared.last_wave_jobs.store(0, Ordering::Relaxed);
+        shared.inflight_execs.store(0, Ordering::Relaxed);
+    });
+}
+
+/// Turn a dequeued job into an in-flight request: prepare (replying
+/// `bad_request` straight away on failure), build the wave driver, and
+/// honor a cancel that landed while queued (analyze/dse never start;
+/// map degrades gracefully, so it still runs).
+fn admit(shared: &Shared, actives: &mut Vec<Active>, job: Job) {
+    shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    let Job { request, reply, cancel } = job;
+    let id = request.id();
+    let kind = request.kind();
+    let started = Instant::now();
+    let finish_now = |response: Response| {
+        if let Some(id) = id {
+            shared.inflight.lock().unwrap().remove(&id);
+        }
+        let _ = reply.send(response);
+    };
+    if cancel.load(Ordering::Relaxed) && !matches!(request, Request::Map(_)) {
+        finish_now(Response::error(id, ApiError::cancelled()));
+        return;
+    }
+    let state = match request {
+        Request::Analyze(r) => match exec::prepare_analyze(&r) {
+            Ok(prep) => ActiveState::Analyze { req: r, prep, running: false },
+            Err(e) => return finish_now(Response::error(id, to_api_error(&e))),
+        },
+        Request::Map(mut r) => {
+            // Honor the request-scoped thread count with the daemon's
+            // default as the fallback; it only sizes wave chunks.
             if r.threads == 0 {
                 r.threads = shared.cfg.threads;
             }
-            exec::prepare_dse(&r).and_then(|prep| {
-                let out = exec::run_prepared_dse(store, &prep, &r, true, cancel)?;
-                Ok(Response::Dse(exec::dse_reply(&r, &prep, &out)))
-            })
+            let built = exec::prepare_map(&r).and_then(|prep| {
+                let driver =
+                    exec::map_driver(&shared.store, &prep, &r, Some(Arc::clone(&cancel)))?;
+                Ok((prep, driver))
+            });
+            match built {
+                Ok((prep, driver)) => ActiveState::Map {
+                    req: r,
+                    prep,
+                    driver: Some(driver),
+                    fixed: FixedSlot::Unscheduled,
+                    waves_done: false,
+                },
+                Err(e) => return finish_now(Response::error(id, to_api_error(&e))),
+            }
+        }
+        Request::Dse(mut r) => {
+            if r.threads == 0 {
+                r.threads = shared.cfg.threads;
+            }
+            let built = exec::prepare_dse(&r).and_then(|prep| {
+                let tables =
+                    shared.tables_for(table_identity(&prep.workload, &prep.space));
+                let driver = exec::dse_driver(
+                    &shared.store,
+                    &prep,
+                    &r,
+                    true,
+                    Some(Arc::clone(&cancel)),
+                    Some(tables),
+                )?;
+                Ok((prep, driver))
+            });
+            match built {
+                Ok((prep, driver)) => ActiveState::Dse {
+                    req: r,
+                    prep,
+                    driver: Some(driver),
+                    prev_frontier: Vec::new(),
+                },
+                Err(e) => return finish_now(Response::error(id, to_api_error(&e))),
+            }
         }
         // Control requests never reach the queue (handle_conn answers
         // them inline).
-        _ => return Response::error(id, ApiError::internal("control request routed to executor")),
-    };
-    match result {
-        // A cancel that raced a finishing analyze/dse still reports
-        // cancelled — the client asked for abandonment. A cancelled map
-        // is NOT converted: its outcome is a complete graceful
-        // degradation (`defaulted > 0`), not a partial result.
-        Ok(_) if job.cancel.load(Ordering::Relaxed) && !graceful_cancel => {
-            Response::error(id, ApiError::cancelled())
+        _ => {
+            return finish_now(Response::error(
+                id,
+                ApiError::internal("control request routed to scheduler"),
+            ))
         }
-        Ok(resp) => resp,
-        Err(e) => Response::error(id, to_api_error(&e)),
+    };
+    let stream = match &state {
+        ActiveState::Map { req, .. } => req.stream,
+        ActiveState::Dse { req, .. } => req.stream,
+        ActiveState::Analyze { .. } => false,
+    };
+    actives.push(Active { id, kind, reply, cancel, stream, started, state });
+}
+
+/// Pull one request's next wave of pool jobs, or its final response if
+/// it has none left (`Some(response)` retires the request).
+fn enqueue(shared: &Shared, active: &mut Active) -> (Vec<PoolJob>, Option<Response>) {
+    let mut jobs: Vec<PoolJob> = Vec::new();
+    let response = match &mut active.state {
+        ActiveState::Analyze { req, prep, running } => {
+            if !*running {
+                *running = true;
+                let store = Arc::clone(&shared.store);
+                let prep = prep.clone();
+                let req = req.clone();
+                jobs.push(Box::new(move || {
+                    PoolResult::Analyzed(Box::new(exec::run_prepared_analyze(&store, &prep, &req)))
+                }));
+            }
+            None
+        }
+        ActiveState::Map { req, prep, driver, fixed, waves_done } => {
+            if matches!(fixed, FixedSlot::Unscheduled) {
+                *fixed = FixedSlot::Pending;
+                let store = Arc::clone(&shared.store);
+                let prep = prep.clone();
+                let objective = req.objective;
+                jobs.push(Box::new(move || {
+                    PoolResult::Fixed(Box::new(exec::map_fixed_baseline(&store, &prep, objective)))
+                }));
+            }
+            if !*waves_done {
+                let drv = driver.as_mut().expect("map driver present until finish");
+                loop {
+                    match drv.next_wave() {
+                        Some(wave) if wave.chunk_count() == 0 => {
+                            // A shape admitting zero candidates absorbs
+                            // immediately, exactly like the in-process
+                            // loop; it still counts as a streamed shape.
+                            drv.absorb_wave(Vec::new());
+                            if active.stream {
+                                let _ = active.reply.send(map_progress(active.id, drv));
+                            }
+                        }
+                        Some(wave) => {
+                            let ctx = drv.ctx();
+                            for chunk in 0..wave.chunk_count() {
+                                let ctx = Arc::clone(&ctx);
+                                let wave = wave.clone();
+                                jobs.push(Box::new(move || {
+                                    PoolResult::Chunk(ctx.run_chunk(&wave, chunk))
+                                }));
+                            }
+                            break;
+                        }
+                        None => {
+                            *waves_done = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if *waves_done && jobs.is_empty() {
+                if let FixedSlot::Ready(..) = fixed {
+                    let FixedSlot::Ready(fx, fs) = std::mem::replace(fixed, FixedSlot::Pending)
+                    else {
+                        unreachable!()
+                    };
+                    let wall = active.started.elapsed().as_secs_f64();
+                    let drv = driver.take().expect("map driver present until finish");
+                    Some(match exec::finish_map(&shared.store, drv, (fx, fs), wall) {
+                        Ok(out) => Response::Map(exec::map_reply(req, &out)),
+                        Err(e) => Response::error(active.id, to_api_error(&e)),
+                    })
+                } else {
+                    // Baseline still in flight; finalize next round.
+                    None
+                }
+            } else {
+                None
+            }
+        }
+        ActiveState::Dse { req, prep, driver, .. } => {
+            let drv = driver.as_mut().expect("dse driver present until finish");
+            match drv.next_wave() {
+                Some(wave) => {
+                    let ctx = drv.ctx();
+                    for shard in 0..wave.shard_count() {
+                        let ctx = Arc::clone(&ctx);
+                        let wave = wave.clone();
+                        jobs.push(Box::new(move || {
+                            PoolResult::Sweep(ctx.run_shard(&wave, shard))
+                        }));
+                    }
+                    None
+                }
+                None => {
+                    let out = exec::finish_dse(driver.take().expect("dse driver"));
+                    // A cancel that raced a finishing dse still reports
+                    // cancelled — the client asked for abandonment.
+                    Some(if active.cancel.load(Ordering::Relaxed) {
+                        Response::error(active.id, ApiError::cancelled())
+                    } else {
+                        Response::Dse(exec::dse_reply(req, prep, &out))
+                    })
+                }
+            }
+        }
+    };
+    (jobs, response)
+}
+
+/// Hand one request its slice of the finished pool wave (already in
+/// shard order) and emit its streamed progress frame. `Some(response)`
+/// retires the request.
+fn absorb(active: &mut Active, results: Vec<PoolResult>) -> Option<Response> {
+    match &mut active.state {
+        ActiveState::Analyze { req, .. } => {
+            let mut response = None;
+            for result in results {
+                response = Some(match result {
+                    PoolResult::Analyzed(r) => match *r {
+                        Ok(_) if active.cancel.load(Ordering::Relaxed) => {
+                            Response::error(active.id, ApiError::cancelled())
+                        }
+                        Ok(out) => Response::Analyze(exec::analyze_reply(req, &out)),
+                        Err(e) => Response::error(active.id, to_api_error(&e)),
+                    },
+                    _ => Response::error(active.id, ApiError::internal("analyze worker died")),
+                });
+            }
+            response
+        }
+        ActiveState::Map { driver, fixed, .. } => {
+            let mut chunks = Vec::new();
+            let mut failure = None;
+            for result in results {
+                match result {
+                    PoolResult::Chunk(c) => chunks.push(c),
+                    PoolResult::Fixed(r) => match *r {
+                        Ok((fx, fs)) => *fixed = FixedSlot::Ready(fx, fs),
+                        Err(e) => failure = Some(Response::error(active.id, to_api_error(&e))),
+                    },
+                    _ => {
+                        failure =
+                            Some(Response::error(active.id, ApiError::internal("map worker died")))
+                    }
+                }
+            }
+            if failure.is_some() {
+                return failure;
+            }
+            if !chunks.is_empty() {
+                let drv = driver.as_mut().expect("map driver present until finish");
+                drv.absorb_wave(chunks);
+                if active.stream {
+                    let _ = active.reply.send(map_progress(active.id, drv));
+                }
+            }
+            None
+        }
+        ActiveState::Dse { driver, prev_frontier, .. } => {
+            let mut shards = Vec::with_capacity(results.len());
+            for result in results {
+                match result {
+                    PoolResult::Sweep(s) => shards.push(s),
+                    _ => {
+                        return Some(Response::error(
+                            active.id,
+                            ApiError::internal("sweep worker died"),
+                        ))
+                    }
+                }
+            }
+            let drv = driver.as_mut().expect("dse driver present until finish");
+            drv.absorb_wave(shards);
+            if active.stream {
+                let now = drv.frontier_points();
+                let frontier_add: Vec<PointRow> = now
+                    .iter()
+                    .filter(|p| !prev_frontier.iter().any(|q| q == *p))
+                    .map(exec::point_row)
+                    .collect();
+                let frontier_remove: Vec<PointRow> = prev_frontier
+                    .iter()
+                    .filter(|p| !now.iter().any(|q| q == *p))
+                    .map(exec::point_row)
+                    .collect();
+                let frame = Response::Progress(ProgressReply {
+                    id: active.id,
+                    wave: drv.waves(),
+                    evaluated: drv.evaluated(),
+                    frontier_add,
+                    frontier_remove,
+                });
+                *prev_frontier = now.to_vec();
+                let _ = active.reply.send(frame);
+            }
+            None
+        }
     }
+}
+
+/// The mapper's streamed frame: shapes searched so far + candidates
+/// evaluated (frontier deltas are a dse concept; the lists stay empty).
+fn map_progress(id: Option<u64>, drv: &MapDriver) -> Response {
+    Response::Progress(ProgressReply {
+        id,
+        wave: drv.shapes_admitted() as u64,
+        evaluated: drv.evaluated(),
+        frontier_add: Vec::new(),
+        frontier_remove: Vec::new(),
+    })
 }
 
 /// Map an execution failure onto the wire error shape: the top-level
@@ -325,6 +869,10 @@ fn to_api_error(e: &anyhow::Error) -> ApiError {
     let diagnostics: Vec<String> = e.chain().skip(1).map(|c| c.to_string()).collect();
     ApiError::bad_request(e.to_string()).with_diagnostics(diagnostics)
 }
+
+// ---------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------
 
 enum ReadEvent {
     Line(String),
@@ -394,7 +942,14 @@ fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream
     };
     match request {
         Request::Status => {
-            write_response(stream, &Response::Status(shared.store.metrics().into()))
+            let mut reply: StatusReply = shared.store.metrics().into();
+            let workers = shared.cfg.workers.max(1) as u64;
+            reply.queue_depth = shared.queue_depth.load(Ordering::Relaxed);
+            reply.inflight = shared.inflight_execs.load(Ordering::Relaxed);
+            reply.workers = workers;
+            let jobs = shared.last_wave_jobs.load(Ordering::Relaxed);
+            reply.pool_utilization = jobs.min(workers) as f64 / workers as f64;
+            write_response(stream, &Response::Status(reply))
         }
         Request::Cancel { id } => {
             let flagged = {
@@ -423,15 +978,38 @@ fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream
                 shared.inflight.lock().unwrap().insert(id, Arc::clone(&cancel));
             }
             let (reply_tx, reply_rx) = mpsc::channel();
+            // Count the slot before offering it, so the scheduler's
+            // matching decrement can never race this below zero.
+            shared.queue_depth.fetch_add(1, Ordering::Relaxed);
             match job_tx.try_send(Job { request: work, reply: reply_tx, cancel }) {
-                Ok(()) => match reply_rx.recv() {
-                    Ok(response) => write_response(stream, &response),
-                    Err(_) => write_response(
-                        stream,
-                        &Response::error(id, ApiError::internal("executor dropped the request")),
-                    ),
-                },
+                Ok(()) => {
+                    // Forward frames until the final (non-progress) one;
+                    // a non-streaming request gets exactly one.
+                    loop {
+                        match reply_rx.recv() {
+                            Ok(response) => {
+                                let done = !response.is_progress();
+                                if !write_response(stream, &response) {
+                                    return false;
+                                }
+                                if done {
+                                    return true;
+                                }
+                            }
+                            Err(_) => {
+                                return write_response(
+                                    stream,
+                                    &Response::error(
+                                        id,
+                                        ApiError::internal("executor dropped the request"),
+                                    ),
+                                )
+                            }
+                        }
+                    }
+                }
                 Err(TrySendError::Full(_)) => {
+                    shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     if let Some(id) = id {
                         shared.inflight.lock().unwrap().remove(&id);
                     }
@@ -439,11 +1017,15 @@ fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream
                         stream,
                         &Response::error(
                             id,
-                            ApiError::overloaded(500, shared.cfg.queue_cap.max(1)),
+                            ApiError::overloaded(
+                                shared.retry_after_ms(),
+                                shared.cfg.queue_cap.max(1),
+                            ),
                         ),
                     )
                 }
                 Err(TrySendError::Disconnected(_)) => {
+                    shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     write_response(
                         stream,
                         &Response::error(id, ApiError::internal("daemon is shutting down")),

@@ -15,6 +15,19 @@
 //!   [`run_prepared_dse`] runs the sweep. The daemon calls both
 //!   back-to-back and encodes with [`dse_reply`].
 //!
+//! Every kind also has a **wave-granular** surface for the daemon's
+//! shared-pool scheduler: the same prepare/run split extends to
+//! analyze ([`prepare_analyze`] / [`run_prepared_analyze`]) and map
+//! ([`prepare_map`] / [`map_driver`] / [`map_fixed_baseline`] /
+//! [`finish_map`]), and dse gains [`dse_driver`] / [`finish_dse`]
+//! returning the engine's externalized
+//! [`SweepDriver`](crate::dse::SweepDriver) /
+//! [`MapDriver`](crate::mapspace::MapDriver) so the scheduler can pull
+//! waves from many requests and interleave their shards onto one
+//! process-wide pool. Preparation validates everything that can fail
+//! from bad input, so `bad_request` errors surface before a request is
+//! ever scheduled.
+//!
 //! Every function takes the caller's [`SharedStore`] — a per-run store
 //! for the CLI, the resident warm store for the daemon — and the
 //! returned [`RequestStats`] are strictly request-scoped (computed from
@@ -27,16 +40,17 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 use crate::cache::SharedStore;
-use crate::dse::engine::{sweep, DesignPoint, SweepConfig, SweepOutcome};
+use crate::dse::engine::{sweep, DesignPoint, PairTables, SweepConfig, SweepDriver, SweepOutcome};
 use crate::dse::pareto::{best, Optimize};
 use crate::dse::space::DesignSpace;
 use crate::dse::strategy::{SearchBudget, SearchStrategy};
 use crate::engine::analysis::{
-    adaptive_network_with, analyze_network_with, Analyzer, NetworkStats,
+    adaptive_network_with, analyze_network_with, Analyzer, NetworkStats, Objective,
 };
 use crate::hw::config::HwConfig;
+use crate::ir::dataflow::Dataflow;
 use crate::ir::styles;
-use crate::mapspace::{enumerate_all, Mapper, MapperConfig, MappingOutcome, StyleTemplate};
+use crate::mapspace::{enumerate_all, MapDriver, Mapper, MapperConfig, MappingOutcome, StyleTemplate};
 use crate::model::layer::Layer;
 use crate::model::network::Network;
 use crate::model::zoo;
@@ -111,17 +125,40 @@ pub struct AnalyzeOutcome {
     pub stats: RequestStats,
 }
 
-/// Whole-network analysis over the caller's store — the engine behind
-/// `maestro network` and the daemon's `analyze` requests.
-pub fn run_analyze(store: &Arc<SharedStore>, req: &AnalyzeRequest) -> Result<AnalyzeOutcome> {
-    let t0 = std::time::Instant::now();
+/// How a prepared analyze request evaluates — resolved up front so a
+/// bad `dataflow` string is rejected before the request is scheduled.
+#[derive(Debug, Clone)]
+enum AnalyzeMode {
+    /// Adaptive over the five fixed Table 3 styles.
+    Adaptive,
+    /// Adaptive over a mapspace-enumerated candidate set.
+    Mapped { candidates: Vec<Dataflow> },
+    /// One named fixed style.
+    Fixed(Dataflow),
+}
+
+/// Everything an analyze request resolves to before evaluation: the
+/// network, hardware config, and candidate set. The analyze half of
+/// the prepare/run split ([`prepare_dse`]'s pattern, extended).
+#[derive(Debug, Clone)]
+pub struct AnalyzePrep {
+    pub net: Network,
+    pub hw: HwConfig,
+    mode: AnalyzeMode,
+    pub mapspace_note: Option<String>,
+    pub mapspace_candidates: Option<u64>,
+}
+
+/// Resolve an [`AnalyzeRequest`]: model lookup, hardware validation,
+/// dataflow-mode resolution (including the `mapped` candidate
+/// enumeration). Everything that can fail from bad input fails here.
+pub fn prepare_analyze(req: &AnalyzeRequest) -> Result<AnalyzePrep> {
     let net = zoo::by_name(&req.model)?;
     let hw = hw_from(req.pes, req.bw)?;
-    let mut analyzer = Analyzer::with_store(Arc::clone(store));
     let mut mapspace_note = None;
     let mut mapspace_candidates = None;
-    let network = if req.dataflow == "adaptive" {
-        adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, req.objective)?
+    let mode = if req.dataflow == "adaptive" {
+        AnalyzeMode::Adaptive
     } else if req.dataflow == "mapped" {
         // Mapspace-backed adaptivity: the candidate set is the
         // fingerprint-deduped union of every style template's tiling
@@ -145,21 +182,53 @@ pub fn run_analyze(store: &Arc<SharedStore>, req: &AnalyzeRequest) -> Result<Ana
             candidates.len()
         ));
         mapspace_candidates = Some(candidates.len() as u64);
-        adaptive_network_with(&mut analyzer, &net, &candidates, &hw, req.objective)?
+        AnalyzeMode::Mapped { candidates }
     } else {
         let df = styles::by_name(&req.dataflow)
             .with_context(|| format!("unknown dataflow {}", req.dataflow))?;
-        analyze_network_with(&mut analyzer, &net, &df, &hw, true)?
+        AnalyzeMode::Fixed(df)
+    };
+    Ok(AnalyzePrep { net, hw, mode, mapspace_note, mapspace_candidates })
+}
+
+/// Evaluate a prepared analyze request over the caller's store. Pure
+/// with respect to shared state: any thread may run it (the daemon
+/// runs it as a single shared-pool job), and the resulting
+/// [`NetworkStats`] are bit-identical to the in-process path for any
+/// store warmth (values are pure functions of keys).
+pub fn run_prepared_analyze(
+    store: &Arc<SharedStore>,
+    prep: &AnalyzePrep,
+    req: &AnalyzeRequest,
+) -> Result<AnalyzeOutcome> {
+    let t0 = std::time::Instant::now();
+    let mut analyzer = Analyzer::with_store(Arc::clone(store));
+    let network = match &prep.mode {
+        AnalyzeMode::Adaptive => {
+            adaptive_network_with(&mut analyzer, &prep.net, &styles::all_styles(), &prep.hw, req.objective)?
+        }
+        AnalyzeMode::Mapped { candidates } => {
+            adaptive_network_with(&mut analyzer, &prep.net, candidates, &prep.hw, req.objective)?
+        }
+        AnalyzeMode::Fixed(df) => analyze_network_with(&mut analyzer, &prep.net, df, &prep.hw, true)?,
     };
     let stats = stats_from_analyzer(&analyzer, 0, t0.elapsed().as_secs_f64());
     Ok(AnalyzeOutcome {
         network,
-        shapes: net.unique_shapes().len(),
-        layers_total: net.layers.len(),
-        mapspace_note,
-        mapspace_candidates,
+        shapes: prep.net.unique_shapes().len(),
+        layers_total: prep.net.layers.len(),
+        mapspace_note: prep.mapspace_note.clone(),
+        mapspace_candidates: prep.mapspace_candidates,
         stats,
     })
+}
+
+/// Whole-network analysis over the caller's store — the engine behind
+/// `maestro network` and the daemon's `analyze` requests
+/// ([`prepare_analyze`] + [`run_prepared_analyze`] back-to-back).
+pub fn run_analyze(store: &Arc<SharedStore>, req: &AnalyzeRequest) -> Result<AnalyzeOutcome> {
+    let prep = prepare_analyze(req)?;
+    run_prepared_analyze(store, &prep, req)
 }
 
 /// Encode an [`AnalyzeOutcome`] as the wire reply.
@@ -215,6 +284,92 @@ pub struct MapOutcome {
     pub stats: RequestStats,
 }
 
+/// Everything a map request resolves to before the search runs: the
+/// network and hardware config. The map half of the prepare/run split.
+#[derive(Debug, Clone)]
+pub struct MapPrep {
+    pub net: Network,
+    pub hw: HwConfig,
+}
+
+/// Resolve a [`MapRequest`]: model lookup + hardware validation.
+pub fn prepare_map(req: &MapRequest) -> Result<MapPrep> {
+    Ok(MapPrep { net: zoo::by_name(&req.model)?, hw: hw_from(req.pes, req.bw)? })
+}
+
+/// The [`MapperConfig`] a map request implies (the one mapping both
+/// the in-process path and the daemon's driver use, so knob defaults
+/// can never drift between the two).
+fn map_config(req: &MapRequest, cancel: Option<Arc<AtomicBool>>) -> MapperConfig {
+    MapperConfig {
+        tile_resolution: req.tile_resolution,
+        objective: req.objective,
+        budget: SearchBudget { max_designs: req.budget, max_seconds: req.budget_seconds },
+        cancel,
+        threads: req.threads,
+        ..MapperConfig::default()
+    }
+}
+
+/// Build the externalized per-shape wave driver for a prepared map
+/// request — the daemon's scheduler pulls [`MapWave`]s from it and
+/// runs their chunks on the shared pool.
+///
+/// [`MapWave`]: crate::mapspace::MapWave
+pub fn map_driver(
+    store: &Arc<SharedStore>,
+    prep: &MapPrep,
+    req: &MapRequest,
+    cancel: Option<Arc<AtomicBool>>,
+) -> Result<MapDriver> {
+    MapDriver::new(&prep.net, &prep.hw, &map_config(req, cancel), Arc::clone(store))
+}
+
+/// The fixed-style comparison every map reply carries: adaptive over
+/// the five Table 3 styles through the same store (template defaults
+/// replay from it). Independent of the mapper waves — the daemon runs
+/// it as one shared-pool job concurrent with them; results are
+/// bit-identical either way (pure functions of keys). The returned
+/// [`RequestStats`] carry this baseline's analyzer counters
+/// (`designs_evaluated` / `wall_seconds` zero — the caller folds them).
+pub fn map_fixed_baseline(
+    store: &Arc<SharedStore>,
+    prep: &MapPrep,
+    objective: Objective,
+) -> Result<(NetworkStats, RequestStats)> {
+    let mut analyzer = Analyzer::with_store(Arc::clone(store));
+    let fixed =
+        adaptive_network_with(&mut analyzer, &prep.net, &styles::all_styles(), &prep.hw, objective)?;
+    let counters = stats_from_analyzer(&analyzer, 0, 0.0);
+    Ok((fixed, counters))
+}
+
+/// Fold a finished mapper search and its fixed baseline into a
+/// [`MapOutcome`]: assembles the network view through a fresh analyzer
+/// on the same store and merges the two counter sets exactly the way
+/// the in-process path always has. `wall_seconds` is the caller's
+/// request-scoped measurement.
+pub fn finish_map(
+    store: &Arc<SharedStore>,
+    driver: MapDriver,
+    fixed: (NetworkStats, RequestStats),
+    wall_seconds: f64,
+) -> Result<MapOutcome> {
+    let mut analyzer = Analyzer::with_store(Arc::clone(store));
+    let mapping = driver.finish(&mut analyzer)?;
+    let (fixed, fs) = fixed;
+    let ms = &mapping.stats;
+    let stats = RequestStats {
+        analyses: ms.cache_misses + fs.analyses,
+        disk_hits: ms.cache_disk_hits + fs.disk_hits,
+        warm_hits: ms.cache_hits.saturating_sub(ms.cache_disk_hits) + fs.warm_hits,
+        profile_hits: ms.profile_hits + fs.profile_hits,
+        designs_evaluated: ms.evaluated,
+        wall_seconds,
+    };
+    Ok(MapOutcome { mapping, fixed, stats })
+}
+
 /// Layer-wise mapper search + fixed-style baseline — the engine behind
 /// `maestro map` and the daemon's `map` requests. `cancel` (daemon:
 /// one flag per request) degrades unsearched shapes to Table 3
@@ -227,29 +382,16 @@ pub fn run_map(
     cancel: Option<Arc<AtomicBool>>,
 ) -> Result<MapOutcome> {
     let t0 = std::time::Instant::now();
-    let net = zoo::by_name(&req.model)?;
-    let hw = hw_from(req.pes, req.bw)?;
-    let cfg = MapperConfig {
-        tile_resolution: req.tile_resolution,
-        objective: req.objective,
-        budget: SearchBudget { max_designs: req.budget, max_seconds: req.budget_seconds },
-        cancel,
-        threads: req.threads,
-        ..MapperConfig::default()
-    };
+    let prep = prepare_map(req)?;
     let mut mapper = Mapper::with_store(Arc::clone(store));
-    let mapping = mapper.map_network(&net, &hw, &cfg)?;
-    // Baseline: adaptive over the five fixed Table 3 styles, same
-    // store (template defaults replay from it).
-    let mut analyzer = Analyzer::with_store(Arc::clone(store));
-    let fixed = adaptive_network_with(&mut analyzer, &net, &styles::all_styles(), &hw, req.objective)?;
+    let mapping = mapper.map_network(&prep.net, &prep.hw, &map_config(req, cancel))?;
+    let (fixed, fs) = map_fixed_baseline(store, &prep, req.objective)?;
     let ms = &mapping.stats;
     let stats = RequestStats {
-        analyses: ms.cache_misses + analyzer.cache_misses(),
-        disk_hits: ms.cache_disk_hits + analyzer.disk_hits(),
-        warm_hits: ms.cache_hits.saturating_sub(ms.cache_disk_hits)
-            + analyzer.cache_hits().saturating_sub(analyzer.disk_hits()),
-        profile_hits: ms.profile_hits + analyzer.profile_hits(),
+        analyses: ms.cache_misses + fs.analyses,
+        disk_hits: ms.cache_disk_hits + fs.disk_hits,
+        warm_hits: ms.cache_hits.saturating_sub(ms.cache_disk_hits) + fs.warm_hits,
+        profile_hits: ms.profile_hits + fs.profile_hits,
         designs_evaluated: ms.evaluated,
         wall_seconds: t0.elapsed().as_secs_f64(),
     };
@@ -441,7 +583,59 @@ pub fn run_prepared_dse(
     Ok(DseOutcome { sweep: sweep_out, stats })
 }
 
-fn point_row(p: &DesignPoint) -> PointRow {
+/// Build the externalized wave driver for a prepared dse request — the
+/// daemon's scheduler pulls [`SweepWave`]s from it and runs their
+/// shards on the shared pool. `shared_tables` is the daemon-lifetime
+/// per-pair case-table cache (keyed by
+/// [`table_identity`](crate::dse::table_identity) upstream), so two
+/// clients sweeping the same space share tables; tables never affect
+/// results, only the work to produce them.
+///
+/// [`SweepWave`]: crate::dse::SweepWave
+pub fn dse_driver(
+    store: &Arc<SharedStore>,
+    prep: &DsePrep,
+    req: &DseRequest,
+    use_store: bool,
+    cancel: Option<Arc<AtomicBool>>,
+    shared_tables: Option<Arc<PairTables>>,
+) -> Result<SweepDriver> {
+    let cfg = SweepConfig {
+        threads: req.threads,
+        keep_all_points: req.keep_points,
+        cache: if use_store { Some(Arc::clone(store)) } else { None },
+        strategy: prep.strategy.clone(),
+        budget: prep.budget,
+        cancel,
+        shared_tables,
+        ..SweepConfig::default()
+    };
+    SweepDriver::new(&prep.workload, &prep.space, prep.space.noc_latency, &cfg)
+}
+
+/// Finalize a driven sweep into a [`DseOutcome`] — the counters fold
+/// exactly as [`run_prepared_dse`]'s do (`wall_seconds` is the sweep's
+/// own prep-to-finish clock).
+pub fn finish_dse(driver: SweepDriver) -> DseOutcome {
+    let sweep_out = driver.finish();
+    let stats = {
+        let s = &sweep_out.stats;
+        RequestStats {
+            analyses: s.cache_misses,
+            disk_hits: s.cache_disk_hits,
+            warm_hits: s.cache_hits.saturating_sub(s.cache_disk_hits),
+            profile_hits: s.profile_hits,
+            designs_evaluated: s.evaluated,
+            wall_seconds: s.seconds,
+        }
+    };
+    DseOutcome { sweep: sweep_out, stats }
+}
+
+/// Encode one design point as its wire row (shared by the final
+/// reply's frontier/optima and the streamed frontier deltas, so the
+/// two can never disagree on a point's encoding).
+pub fn point_row(p: &DesignPoint) -> PointRow {
     PointRow {
         dataflow: p.dataflow.clone(),
         pes: p.pes,

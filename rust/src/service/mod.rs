@@ -15,13 +15,20 @@
 //!   (cold-vs-disk-vs-warm cache split, designs evaluated, wall time).
 //! * [`daemon`] — the resident server: one warm [`SharedStore`] for
 //!   the process lifetime, newline-delimited JSON over TCP, bounded
-//!   job-queue backpressure (`overloaded` + `retry_after_ms`),
-//!   per-request cooperative cancellation, periodic + shutdown store
-//!   flushes.
+//!   job-queue backpressure (`overloaded` with drain-rate-scaled
+//!   `retry_after_ms`), per-request cooperative cancellation, periodic
+//!   + shutdown store flushes. Concurrent requests share **one**
+//!   process-wide wave pool: a scheduler interleaves every in-flight
+//!   request's shards into coalesced waves (see the daemon docs), and
+//!   `map`/`dse` requests may stream per-wave `progress` frames.
+//! * [`client`] — the persistent-connection client: `maestro client`
+//!   (stdin request lines, stdout reply frames) and the `--remote`
+//!   path of `network`/`map`/`dse`.
 //!
 //! [`SharedStore`]: crate::cache::SharedStore
 
 pub mod api;
+pub mod client;
 pub mod daemon;
 pub mod exec;
 

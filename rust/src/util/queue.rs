@@ -3,8 +3,9 @@
 //! the sharded DSE sweep (and any future layer) can share it without a
 //! module cycle.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Clone the queue once per worker; [`JobQueue::pop`] blocks until an
 /// item arrives or every sender is gone.
@@ -39,6 +40,20 @@ impl<T: Send> JobQueue<T> {
     /// Next item, or `None` once the queue is closed and drained.
     pub fn pop(&self) -> Option<T> {
         self.rx.lock().unwrap().recv().ok()
+    }
+
+    /// Non-blocking pop. `Err(Empty)` means no item *right now*;
+    /// `Err(Disconnected)` means the queue is closed and drained — the
+    /// distinction a scheduler needs to drain-then-continue vs stop
+    /// (plain [`JobQueue::pop`] folds both into `None`).
+    pub fn try_pop(&self) -> Result<T, TryRecvError> {
+        self.rx.lock().unwrap().try_recv()
+    }
+
+    /// Blocking pop with a timeout — the idle tick of a loop that also
+    /// watches other state (e.g. the serve scheduler between waves).
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        self.rx.lock().unwrap().recv_timeout(timeout)
     }
 }
 

@@ -93,10 +93,11 @@ fn flush_appends_and_reload_unions() {
 #[test]
 fn loading_two_files_then_flushing_writes_the_union() {
     // load(fileA); load(fileB); flush(fileB): fileA's entries must land
-    // in fileB. The `persisted` flags are relative to the file the
-    // store is bound to — "persisted somewhere" must not be conflated
-    // with "persisted here", or the append-mode flush silently omits
-    // the other file's records forever.
+    // in fileB. "Persisted somewhere" must not be conflated with
+    // "persisted here" — flush diffs the store against the *target*
+    // file's current contents, so records that only exist in some other
+    // file (or only in memory) are appended rather than silently
+    // omitted forever.
     let pa = temp_cache("merge_a");
     let pb = temp_cache("merge_b");
     fs::remove_file(&pa).ok();
@@ -121,6 +122,37 @@ fn loading_two_files_then_flushing_writes_the_union() {
     assert_eq!(reread.load(&pb).loaded, merged.len(), "fileB must now hold the union");
     fs::remove_file(&pa).ok();
     fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn interleaved_flushes_from_two_stores_union_instead_of_clobbering() {
+    // Two "daemons" sharing one --cache-file: both open the (missing)
+    // file, each computes different entries, and they flush in turn.
+    // The later flush must not truncate away the earlier one's records
+    // — flush diffs against the file's current contents, so the file
+    // converges on the union.
+    let path = temp_cache("two_writers");
+    fs::remove_file(&path).ok();
+    let net = zoo::by_name("vgg16-conv").unwrap();
+
+    let sa = Arc::new(SharedStore::new());
+    let sb = Arc::new(SharedStore::new());
+    assert_eq!(sa.load(&path).loaded, 0);
+    assert_eq!(sb.load(&path).loaded, 0);
+
+    analyze_network_with(&mut Analyzer::with_store(Arc::clone(&sa)), &net, &styles::kc_p(), &hw(), true)
+        .unwrap();
+    sa.flush(&path).unwrap();
+    analyze_network_with(&mut Analyzer::with_store(Arc::clone(&sb)), &net, &styles::x_p(), &hw(), true)
+        .unwrap();
+    let rb = sb.flush(&path).unwrap();
+    assert_eq!(rb.written, sb.len(), "B appends only its own records, keeping A's");
+    // A flush with nothing new to say writes nothing.
+    assert_eq!(sa.flush(&path).unwrap().written, 0, "re-flush of persisted records is a no-op");
+
+    let reread = SharedStore::new();
+    assert_eq!(reread.load(&path).loaded, sa.len() + sb.len(), "the union survives both flushes");
+    fs::remove_file(&path).ok();
 }
 
 /// Build a valid cache file for corruption scenarios; returns (path,

@@ -1,0 +1,450 @@
+//! Concurrency tests for the shared-pool daemon scheduler: many
+//! simultaneous clients with overlapping analyze / map / dse traffic
+//! against a multi-worker daemon.
+//!
+//! The acceptance bar these tests pin:
+//!
+//! * **Bit-identical replies** — every reply under concurrent shared-
+//!   pool execution matches a serial in-process reference run
+//!   byte-for-byte, modulo the documented diagnostic carve-out (the
+//!   `stats` cache counters and wall clock, which depend on who warmed
+//!   the store first).
+//! * **Deterministic streams** — a streaming dse emits the same
+//!   progress-frame sequence for any worker count and any concurrent
+//!   traffic, and replaying its frontier deltas reconstructs exactly
+//!   the final reply's frontier.
+//! * **Cancellation** — cancelling a streaming dse mid-flight ends its
+//!   frame sequence with a well-formed `cancelled` error while other
+//!   requests on the same pool complete normally.
+//!
+//! Note the strategy choice: `exhaustive` emits its whole space as one
+//! wave (a single progress frame), so the streaming tests use `guided`,
+//! whose refinement loop produces a genuine multi-wave frame sequence
+//! with nonempty frontier deltas.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use maestro::cache::SharedStore;
+use maestro::engine::analysis::Objective;
+use maestro::service::api::{
+    AnalyzeRequest, DseRequest, MapRequest, PointRow, ProgressReply, Request, Response,
+};
+use maestro::service::daemon::{Daemon, ServeConfig};
+use maestro::service::exec;
+use maestro::util::json::Json;
+
+/// A blocking line-framed client that understands streaming replies.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, request: &Request) {
+        writeln!(self.stream, "{}", request.encode().dump()).expect("write frame");
+        self.stream.flush().expect("flush frame");
+    }
+
+    fn read_frame(&mut self) -> Response {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "daemon closed the connection instead of replying");
+        let v = Json::parse(line.trim())
+            .unwrap_or_else(|e| panic!("reply not JSON ({e}): {line}"));
+        Response::decode(&v).unwrap_or_else(|e| panic!("undecodable reply {e:?}: {}", v.dump()))
+    }
+
+    /// One request, one (non-streaming) reply.
+    fn request(&mut self, request: &Request) -> Response {
+        self.send(request);
+        self.read_frame()
+    }
+
+    /// One streaming request: collect every progress frame, return them
+    /// with the final (non-progress) frame.
+    fn request_streaming(&mut self, request: &Request) -> (Vec<ProgressReply>, Response) {
+        self.send(request);
+        let mut frames = Vec::new();
+        loop {
+            match self.read_frame() {
+                Response::Progress(p) => frames.push(p),
+                other => return (frames, other),
+            }
+        }
+    }
+}
+
+fn analyze_request(id: u64, model: &str) -> Request {
+    Request::Analyze(AnalyzeRequest {
+        id: Some(id),
+        model: model.into(),
+        dataflow: "adaptive".into(),
+        pes: 256,
+        bw: 16,
+        objective: Objective::Runtime,
+        tile_resolution: 6,
+        per_layer: false,
+    })
+}
+
+fn map_request(id: u64) -> Request {
+    Request::Map(MapRequest {
+        id: Some(id),
+        model: "vgg16".into(),
+        pes: 256,
+        bw: 16,
+        objective: Objective::Runtime,
+        tile_resolution: 4,
+        budget: 32,
+        budget_seconds: 0.0,
+        threads: 1,
+        stream: false,
+    })
+}
+
+fn exhaustive_dse(id: u64, resolution: usize) -> Request {
+    Request::Dse(DseRequest {
+        id: Some(id),
+        family: "kc-p".into(),
+        model: "vgg16".into(),
+        layer: String::new(),
+        network: false,
+        resolution,
+        bw_resolution: resolution,
+        mapspace: false,
+        tile_resolution: 6,
+        strategy: "exhaustive".into(),
+        seed: 1,
+        budget: 0,
+        budget_seconds: 0.0,
+        threads: 1,
+        keep_points: false,
+        stream: false,
+    })
+}
+
+fn guided_dse(id: u64, model: &str, network: bool, resolution: usize, bw: usize) -> Request {
+    Request::Dse(DseRequest {
+        id: Some(id),
+        family: "kc-p".into(),
+        model: model.into(),
+        layer: String::new(),
+        network,
+        resolution,
+        bw_resolution: bw,
+        mapspace: false,
+        tile_resolution: 6,
+        strategy: "guided".into(),
+        seed: 1,
+        budget: 0,
+        budget_seconds: 0.0,
+        threads: 1,
+        keep_points: false,
+        stream: true,
+    })
+}
+
+/// Run one request serially, in process, on `store` — the reference
+/// the daemon's concurrent replies must match bit-for-bit.
+fn reference_reply(store: &Arc<SharedStore>, request: &Request) -> Response {
+    match request {
+        Request::Analyze(r) => {
+            let out = exec::run_analyze(store, r).expect("reference analyze");
+            Response::Analyze(exec::analyze_reply(r, &out))
+        }
+        Request::Map(r) => {
+            let out = exec::run_map(store, r, None).expect("reference map");
+            Response::Map(exec::map_reply(r, &out))
+        }
+        Request::Dse(r) => {
+            let prep = exec::prepare_dse(r).expect("reference dse prep");
+            let out = exec::run_prepared_dse(store, &prep, r, true, None).expect("reference dse");
+            Response::Dse(exec::dse_reply(r, &prep, &out))
+        }
+        other => panic!("not a work request: {other:?}"),
+    }
+}
+
+/// Encode a work reply with the diagnostic `stats` fields (cache
+/// split + wall clock) zeroed. Everything else — including the
+/// deterministic `search` counters and `stats.designs_evaluated` —
+/// must match byte-for-byte.
+fn scrubbed_line(reply: &Response) -> String {
+    let mut reply = reply.clone();
+    let stats = match &mut reply {
+        Response::Analyze(r) => &mut r.stats,
+        Response::Map(r) => &mut r.stats,
+        Response::Dse(r) => &mut r.stats,
+        other => panic!("work reply expected, got {other:?}"),
+    };
+    stats.analyses = 0;
+    stats.disk_hits = 0;
+    stats.warm_hits = 0;
+    stats.profile_hits = 0;
+    stats.wall_seconds = 0.0;
+    reply.encode_line()
+}
+
+/// Replay a progress-frame sequence's frontier deltas (removes, then
+/// adds, per frame — the wire contract) into the accumulated frontier,
+/// checking well-formedness along the way.
+fn replay_frontier(frames: &[ProgressReply]) -> Vec<PointRow> {
+    let mut acc: Vec<PointRow> = Vec::new();
+    let mut last_evaluated = 0;
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.wave, (i + 1) as u64, "waves must arrive 1-based and in order");
+        assert!(
+            f.evaluated >= last_evaluated,
+            "evaluated must be nondecreasing: wave {} reports {} after {}",
+            f.wave,
+            f.evaluated,
+            last_evaluated
+        );
+        last_evaluated = f.evaluated;
+        for rm in &f.frontier_remove {
+            let pos = acc
+                .iter()
+                .position(|p| p == rm)
+                .unwrap_or_else(|| panic!("wave {} removed a point not on the frontier", f.wave));
+            acc.remove(pos);
+        }
+        for add in &f.frontier_add {
+            assert!(!acc.iter().any(|p| p == add), "wave {} re-added a live point", f.wave);
+            acc.push(add.clone());
+        }
+    }
+    acc
+}
+
+/// Order-insensitive view of a point set (PointRow is PartialEq but
+/// not Ord; the Debug form is a faithful total key).
+fn sorted_points(points: &[PointRow]) -> Vec<String> {
+    let mut v: Vec<String> = points.iter().map(|p| format!("{p:?}")).collect();
+    v.sort();
+    v
+}
+
+/// Six clients fire overlapping analyze / map / dse requests at a
+/// 2-worker daemon at once; every reply must match the serial
+/// in-process reference byte-for-byte outside the diagnostic carve-out.
+#[test]
+fn concurrent_mixed_traffic_is_bit_identical_to_serial_references() {
+    let requests = vec![
+        analyze_request(1, "vgg16"),
+        analyze_request(2, "resnet50"),
+        map_request(3),
+        exhaustive_dse(4, 4),
+        exhaustive_dse(5, 6),
+        // Same workload as id 1: coalescing onto the shared store must
+        // not change the payload, only the (scrubbed) cache counters.
+        analyze_request(6, "vgg16"),
+    ];
+
+    let store = Arc::new(SharedStore::new());
+    let references: Vec<String> =
+        requests.iter().map(|r| scrubbed_line(&reference_reply(&store, r))).collect();
+
+    let daemon = Daemon::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let addr = daemon.addr();
+
+    let replies: Vec<Response> = std::thread::scope(|scope| {
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|req| scope.spawn(move || Client::connect(addr).request(req)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    for (i, (reply, reference)) in replies.iter().zip(&references).enumerate() {
+        assert_eq!(
+            &scrubbed_line(reply),
+            reference,
+            "request {} diverged from its serial reference",
+            requests[i].id().unwrap()
+        );
+    }
+
+    let mut client = Client::connect(addr);
+    match client.request(&Request::Status) {
+        Response::Status(s) => {
+            assert_eq!(s.workers, 2, "status must report the shared pool size");
+            assert!(s.entries > 0, "the shared store must hold the traffic's analyses");
+        }
+        other => panic!("expected status reply, got {other:?}"),
+    }
+    match client.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+}
+
+/// A streaming guided dse must emit the same frame sequence on a
+/// 1-worker idle daemon and a 2-worker daemon handling concurrent
+/// traffic — and replaying the deltas must land exactly on the final
+/// reply's frontier.
+#[test]
+fn streamed_frontier_deltas_are_deterministic_and_replay_to_the_final() {
+    let run = |workers: usize, with_traffic: bool| -> (Vec<ProgressReply>, Response) {
+        let daemon = Daemon::spawn(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers,
+            ..ServeConfig::default()
+        })
+        .expect("spawn daemon");
+        let addr = daemon.addr();
+
+        // Concurrent load sharing the pool while the stream runs.
+        let traffic = with_traffic.then(|| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for id in 100..103 {
+                    match c.request(&analyze_request(id, "vgg16")) {
+                        Response::Analyze(r) => assert_eq!(r.id, Some(id)),
+                        other => panic!("expected analyze reply, got {other:?}"),
+                    }
+                }
+            })
+        });
+
+        let mut client = Client::connect(addr);
+        let (frames, final_reply) = client.request_streaming(&guided_dse(11, "vgg16", false, 10, 6));
+        if let Some(t) = traffic {
+            t.join().expect("traffic thread");
+        }
+        match client.request(&Request::Shutdown) {
+            Response::Done(d) => assert_eq!(d.what, "shutdown"),
+            other => panic!("expected done reply, got {other:?}"),
+        }
+        daemon.join().expect("clean daemon exit");
+        (frames, final_reply)
+    };
+
+    let (quiet_frames, quiet_final) = run(1, false);
+    let (busy_frames, busy_final) = run(2, true);
+
+    // Determinism: worker count and concurrent traffic must not change
+    // a single frame or the final payload.
+    assert_eq!(quiet_frames, busy_frames, "frame sequences must be identical");
+    assert_eq!(scrubbed_line(&quiet_final), scrubbed_line(&busy_final));
+
+    let dse = match &quiet_final {
+        Response::Dse(r) => r,
+        other => panic!("expected dse reply, got {other:?}"),
+    };
+    assert_eq!(dse.id, Some(11));
+    assert!(dse.search.evaluated > 0);
+    assert!(!dse.frontier.is_empty());
+    assert!(
+        quiet_frames.len() >= 2,
+        "a guided sweep must stream multiple waves, got {}",
+        quiet_frames.len()
+    );
+    for f in &quiet_frames {
+        assert_eq!(f.id, Some(11), "progress frames must echo the request id");
+    }
+
+    // The streamed prefix is the final result: one frame per wave, the
+    // last frame's counters equal the final counters, and the replayed
+    // delta sequence reconstructs the final frontier exactly.
+    let last = quiet_frames.last().unwrap();
+    assert_eq!(last.wave, dse.search.waves, "one progress frame per absorbed wave");
+    assert_eq!(last.evaluated, dse.search.evaluated);
+    let replayed = replay_frontier(&quiet_frames);
+    assert_eq!(
+        sorted_points(&replayed),
+        sorted_points(&dse.frontier),
+        "replayed frontier deltas must land on the final frontier"
+    );
+}
+
+/// Cancelling a big streaming dse mid-flight must end its frame
+/// sequence with a well-formed `cancelled` error frame, while a small
+/// concurrent stream on the same pool completes normally.
+#[test]
+fn midstream_cancel_ends_the_stream_while_other_streams_complete() {
+    let daemon = Daemon::spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let addr = daemon.addr();
+
+    // Victim: a guided network sweep big enough that the cancel lands
+    // between its refinement waves.
+    let victim = std::thread::spawn(move || {
+        Client::connect(addr).request_streaming(&guided_dse(77, "resnet50", true, 12, 12))
+    });
+
+    // Survivor: a small stream sharing the pool throughout.
+    let survivor = std::thread::spawn(move || {
+        Client::connect(addr).request_streaming(&guided_dse(78, "vgg16", false, 6, 4))
+    });
+
+    // Canceller: retry until the victim's id shows up in flight.
+    let mut canceller = Client::connect(addr);
+    let mut acknowledged = false;
+    for _ in 0..2000 {
+        match canceller.request(&Request::Cancel { id: 77 }) {
+            Response::Done(d) => {
+                assert_eq!(d.what, "cancel");
+                acknowledged = true;
+                break;
+            }
+            Response::Error(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+            other => panic!("expected done or error reply, got {other:?}"),
+        }
+    }
+    assert!(acknowledged, "cancel never found the in-flight dse");
+
+    // The victim's stream ends with a well-formed cancelled error; the
+    // frames before it are still a valid prefix of the sweep.
+    let (victim_frames, victim_final) = victim.join().expect("victim thread");
+    match &victim_final {
+        Response::Error(e) => {
+            assert_eq!(e.error.code, "cancelled", "cancel must end the stream: {e:?}");
+            assert_eq!(e.id, Some(77), "the error frame must echo the request id");
+        }
+        other => panic!("cancelled dse must reply with a cancelled error, got {other:?}"),
+    }
+    replay_frontier(&victim_frames); // prefix well-formedness only
+
+    // The survivor is untouched: full frame sequence, normal final.
+    let (survivor_frames, survivor_final) = survivor.join().expect("survivor thread");
+    let dse = match &survivor_final {
+        Response::Dse(r) => r,
+        other => panic!("survivor stream must complete normally, got {other:?}"),
+    };
+    assert_eq!(dse.id, Some(78));
+    assert!(dse.search.evaluated > 0);
+    assert_eq!(
+        sorted_points(&replay_frontier(&survivor_frames)),
+        sorted_points(&dse.frontier),
+        "survivor's streamed deltas must still replay to its final frontier"
+    );
+
+    // The daemon is healthy afterwards.
+    match canceller.request(&Request::Status) {
+        Response::Status(_) => {}
+        other => panic!("daemon wedged after cancel: {other:?}"),
+    }
+    match canceller.request(&Request::Shutdown) {
+        Response::Done(d) => assert_eq!(d.what, "shutdown"),
+        other => panic!("expected done reply, got {other:?}"),
+    }
+    daemon.join().expect("clean daemon exit");
+}

@@ -230,6 +230,7 @@ fn cancelling_an_inflight_map_degrades_gracefully_to_defaults() {
             budget: 0,
             budget_seconds: 0.0,
             threads: 1,
+            stream: false,
         }))
     });
 

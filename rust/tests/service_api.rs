@@ -13,8 +13,8 @@
 use maestro::engine::analysis::Objective;
 use maestro::service::api::{
     AnalyzeReply, AnalyzeRequest, ApiError, DoneReply, DseReply, DseRequest, DseSearch, LayerRow,
-    MapReply, MapRequest, MapSearch, PointRow, Ratios, Request, RequestStats, Response, ShapeRow,
-    SideTotals, SkippedRow, StatusReply,
+    MapReply, MapRequest, MapSearch, PointRow, ProgressReply, Ratios, Request, RequestStats,
+    Response, ShapeRow, SideTotals, SkippedRow, StatusReply,
 };
 use maestro::util::json::Json;
 
@@ -101,11 +101,14 @@ fn golden_map_request() {
         budget: 100,
         budget_seconds: 1.5,
         threads: 2,
+        stream: false,
     });
+    let line = r.encode().dump();
     assert_eq!(
-        r.encode().dump(),
+        line,
         r#"{"v":1,"kind":"map","id":2,"model":"alexnet","pes":64,"bw":32,"objective":"edp","tile_resolution":4,"budget":100,"budget_seconds":1.5,"threads":2}"#
     );
+    assert!(!line.contains("\"stream\""), "stream=false must be omitted, not encoded: {line}");
 }
 
 #[test]
@@ -126,6 +129,7 @@ fn golden_dse_request_omits_empty_layer() {
         budget_seconds: 0.0,
         threads: 2,
         keep_points: false,
+        stream: false,
     });
     let line = r.encode().dump();
     assert_eq!(
@@ -134,6 +138,44 @@ fn golden_dse_request_omits_empty_layer() {
     );
     assert!(!line.contains("\"layer\""), "empty layer must be omitted, not null: {line}");
     assert!(!line.contains("\"id\""), "absent id must be omitted: {line}");
+}
+
+#[test]
+fn golden_streaming_requests_append_the_stream_flag() {
+    // `stream: true` is the only difference from the non-streaming
+    // goldens above — the flag appends after the existing fields, so
+    // pre-streaming consumers see unchanged frames.
+    let r = Request::Map(MapRequest {
+        id: Some(2),
+        model: "alexnet".into(),
+        pes: 64,
+        bw: 32,
+        objective: Objective::Edp,
+        tile_resolution: 4,
+        budget: 100,
+        budget_seconds: 1.5,
+        threads: 2,
+        stream: true,
+    });
+    assert_eq!(
+        r.encode().dump(),
+        r#"{"v":1,"kind":"map","id":2,"model":"alexnet","pes":64,"bw":32,"objective":"edp","tile_resolution":4,"budget":100,"budget_seconds":1.5,"threads":2,"stream":true}"#
+    );
+}
+
+#[test]
+fn golden_progress_frame() {
+    let r = Response::Progress(ProgressReply {
+        id: Some(9),
+        wave: 3,
+        evaluated: 1280,
+        frontier_add: vec![sample_point()],
+        frontier_remove: Vec::new(),
+    });
+    assert_eq!(
+        r.encode_line(),
+        r#"{"v":1,"kind":"progress","id":9,"ok":true,"wave":3,"evaluated":1280,"frontier_add":[{"dataflow":"kc-p@256","pes":256,"bandwidth":64,"l1":512,"l2":262144,"runtime":123456,"energy_pj":7500000000,"area_mm2":12.25,"power_mw":420.5}],"frontier_remove":[]}"#
+    );
 }
 
 #[test]
@@ -152,10 +194,14 @@ fn golden_status_and_done_replies() {
         disk_hits: 5,
         misses: 13,
         evictions: 0,
+        queue_depth: 2,
+        inflight: 1,
+        workers: 4,
+        pool_utilization: 0.75,
     });
     assert_eq!(
         status.encode_line(),
-        r#"{"v":1,"kind":"status","ok":true,"entries":12,"max_entries":0,"hits":34,"disk_hits":5,"misses":13,"evictions":0}"#
+        r#"{"v":1,"kind":"status","ok":true,"entries":12,"max_entries":0,"hits":34,"disk_hits":5,"misses":13,"evictions":0,"queue_depth":2,"inflight":1,"workers":4,"pool_utilization":0.75}"#
     );
     let done = Response::Done(DoneReply { id: None, what: "shutdown".into() });
     assert_eq!(done.encode_line(), r#"{"v":1,"kind":"done","ok":true,"what":"shutdown"}"#);
@@ -207,6 +253,7 @@ fn every_request_variant_round_trips() {
         budget: 0,
         budget_seconds: 2.5,
         threads: 8,
+        stream: true,
     }));
     roundtrip_request(&Request::Dse(DseRequest {
         id: Some(11),
@@ -224,6 +271,7 @@ fn every_request_variant_round_trips() {
         budget_seconds: 0.5,
         threads: 4,
         keep_points: true,
+        stream: true,
     }));
     roundtrip_request(&Request::Status);
     roundtrip_request(&Request::Cancel { id: 9 });
@@ -361,8 +409,30 @@ fn control_replies_round_trip() {
         disk_hits: 1,
         misses: 3,
         evictions: 4,
+        queue_depth: 7,
+        inflight: 2,
+        workers: 8,
+        pool_utilization: 0.25,
     }));
     roundtrip_response(&Response::Done(DoneReply { id: Some(42), what: "cancel".into() }));
+}
+
+#[test]
+fn progress_frames_round_trip_full_and_minimal() {
+    roundtrip_response(&Response::Progress(ProgressReply {
+        id: Some(8),
+        wave: 12,
+        evaluated: 4096,
+        frontier_add: vec![sample_point()],
+        frontier_remove: vec![PointRow { pes: 1024, ..sample_point() }],
+    }));
+    roundtrip_response(&Response::Progress(ProgressReply {
+        id: None,
+        wave: 1,
+        evaluated: 0,
+        frontier_add: Vec::new(),
+        frontier_remove: Vec::new(),
+    }));
 }
 
 #[test]
