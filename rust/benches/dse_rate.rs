@@ -129,6 +129,12 @@ fn run_smoke(net: &Network) {
     use std::sync::Arc;
 
     section("DSE bench smoke (CI): sharded network sweep on DesignSpace::ci_smoke");
+    // Smoke runs instrumented: sampled span telemetry (the documented
+    // production mode) across every leg, exported as a validated Chrome
+    // trace next to the BENCH record. Both sides of the table-reuse
+    // rate gate below run equally traced.
+    maestro::obs::trace::clear();
+    maestro::obs::trace::enable(8);
     let space = DesignSpace::ci_smoke("kc-p");
     let runs = sweep_scaling(net, &space);
 
@@ -265,6 +271,18 @@ fn run_smoke(net: &Network) {
     let path = std::env::var("DSE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_dse_rate.json".into());
     std::fs::write(&path, json).expect("write bench smoke json");
     println!("wrote {path}");
+
+    // All sweep/mapper worker scopes have joined, so no span is open:
+    // the export must pass the structural validator before it is
+    // written (write_file refuses malformed traces).
+    let trace_path =
+        std::env::var("DSE_TRACE_OUT").unwrap_or_else(|_| "TRACE_dse_rate.json".into());
+    let summary = maestro::obs::trace::write_file(&trace_path).expect("bench trace validates");
+    assert!(summary.events > 0, "an instrumented smoke run must record spans");
+    println!(
+        "wrote {trace_path} ({} events, {} threads, max depth {})",
+        summary.events, summary.threads, summary.max_depth
+    );
 }
 
 fn main() {

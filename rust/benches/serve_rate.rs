@@ -134,6 +134,14 @@ fn main() {
         .unwrap_or(false);
     let warm_iters: u64 = if smoke { 10 } else { 100 };
 
+    // The whole bench runs with span telemetry on — sampled, the
+    // documented production mode, so the per-candidate profile.finalize
+    // span stays off the critical path. The concurrent gate below
+    // therefore measures the *instrumented* daemon; smoke mode exports
+    // the validated trace next to the BENCH record.
+    maestro::obs::trace::clear();
+    maestro::obs::trace::enable(8);
+
     let cache =
         std::env::temp_dir().join(format!("maestro_serve_bench_{}.mcache", std::process::id()));
     let _ = std::fs::remove_file(&cache);
@@ -323,6 +331,18 @@ fn main() {
         let path = std::env::var("SERVE_SMOKE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
         std::fs::write(&path, json).expect("write bench smoke json");
         println!("wrote {path}");
+
+        // Every daemon and worker thread is joined, so no span is open:
+        // the export must pass the structural validator before it is
+        // written (write_file refuses malformed traces).
+        let trace_path =
+            std::env::var("SERVE_TRACE_OUT").unwrap_or_else(|_| "TRACE_serve.json".into());
+        let summary = maestro::obs::trace::write_file(&trace_path).expect("bench trace validates");
+        assert!(summary.events > 0, "an instrumented bench run must record spans");
+        println!(
+            "wrote {trace_path} ({} events, {} threads, max depth {})",
+            summary.events, summary.threads, summary.max_depth
+        );
     }
     let _ = std::fs::remove_file(&cache);
 }

@@ -401,6 +401,7 @@ impl SharedStore {
     /// Records are written in sorted key order, so flushing the same
     /// contents always produces the same bytes.
     pub fn flush(&self, path: &Path) -> Result<FlushReport> {
+        let _span = crate::obs::trace::span("cache.flush");
         // One flush of this store at a time — the daemon's periodic
         // flusher and its shutdown flush must not interleave their
         // read-diff-append sequences on the same file.

@@ -840,6 +840,7 @@ impl SweepCtx {
     /// results absorb deterministically as long as they are handed back
     /// in shard-index order.
     pub fn run_shard(&self, wave: &SweepWave, shard: usize) -> SweepShard {
+        let _span = crate::obs::trace::span("dse.shard");
         let range = wave.shards[shard].clone();
         SweepShard(sweep_shard(
             &self.net,

@@ -344,9 +344,12 @@ impl Analyzer {
         // Profile miss: resolve, then run the bandwidth-invariant walk
         // once. Resolution failures are bandwidth-invariant too, so
         // they memoize under the same key.
-        let built = dataflow
-            .resolve(layer, hw.num_pes)
-            .and_then(|r| ReuseProfile::build_with(layer, &r, hw, &mut self.scratch));
+        let built = {
+            let _span = crate::obs::trace::span("profile.build");
+            dataflow
+                .resolve(layer, hw.num_pes)
+                .and_then(|r| ReuseProfile::build_with(layer, &r, hw, &mut self.scratch))
+        };
         self.memoize_and_finalize(pkey, built, &layer.name, &dataflow.name, hw)
     }
 
@@ -365,7 +368,10 @@ impl Analyzer {
         if let Some(out) = self.finalize_memoized(&pkey, &layer.name, &resolved.name, hw) {
             return out;
         }
-        let built = ReuseProfile::build_with(layer, resolved, hw, &mut self.scratch);
+        let built = {
+            let _span = crate::obs::trace::span("profile.build");
+            ReuseProfile::build_with(layer, resolved, hw, &mut self.scratch)
+        };
         self.memoize_and_finalize(pkey, built, &layer.name, &resolved.name, hw)
     }
 
@@ -383,6 +389,7 @@ impl Analyzer {
         self.profile_hits += 1;
         Some(match entry {
             ProfileEntry::Ready(p) => {
+                let _span = crate::obs::trace::span("profile.finalize");
                 let mut s = p.finalize(hw);
                 s.layer = layer_name.to_string();
                 s.dataflow = dataflow_name.to_string();
@@ -414,6 +421,7 @@ impl Analyzer {
     ) -> Result<LayerStats> {
         match built {
             Ok(p) => {
+                let _span = crate::obs::trace::span("profile.finalize");
                 let mut s = p.finalize(hw);
                 s.layer = layer_name.to_string();
                 s.dataflow = dataflow_name.to_string();

@@ -43,6 +43,12 @@
 //!   request/response API shared by the CLI (`--json`) and the
 //!   resident `maestro serve` daemon (warm [`SharedStore`], bounded
 //!   backpressure, cooperative cancellation).
+//! * [`obs`] — zero-dependency telemetry: a process-wide metrics
+//!   registry (counters / gauges / fixed-bucket histograms behind the
+//!   daemon's `metrics` request) and span tracing with a Chrome
+//!   trace-event exporter (`--trace-out`). Observation-only by
+//!   contract: replies and frontiers are bit-identical with telemetry
+//!   on, off, or sampled.
 //! * [`report`] — table/CSV/ASCII-scatter emitters for the experiment
 //!   drivers.
 //! * [`util`] — CLI parsing, a mini property-test harness, a bench
@@ -57,6 +63,7 @@ pub mod hw;
 pub mod ir;
 pub mod mapspace;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod service;

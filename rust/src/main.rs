@@ -109,7 +109,12 @@ fn flags() -> Vec<FlagSpec> {
             takes_value: true,
             help: "serve: seconds between background store flushes (default 30; 0 = shutdown only)",
         },
-        FlagSpec { name: "verbose", takes_value: false, help: "serve: log each request to stderr" },
+        FlagSpec { name: "verbose", takes_value: false, help: "serve: raise the log level to debug (per-request lines)" },
+        FlagSpec {
+            name: "metrics",
+            takes_value: false,
+            help: "client: fetch one telemetry snapshot frame from the daemon and exit",
+        },
     ];
     spec.extend(common_flags());
     spec
@@ -162,6 +167,28 @@ fn close_cache(store: &SharedStore, path: &Option<String>, quiet: bool) -> Resul
     Ok(())
 }
 
+/// Enable span tracing when `--trace-out FILE` is given (with the
+/// `--trace-sample` rate); returns the path to export to on completion.
+fn trace_setup(args: &Args) -> Result<Option<String>> {
+    let path = args.opt("trace-out", "");
+    if path.is_empty() {
+        return Ok(None);
+    }
+    maestro::obs::trace::enable(args.opt_u64("trace-sample", 1)?);
+    Ok(Some(path))
+}
+
+/// Validate and write the Chrome trace file `trace_setup` armed.
+fn trace_finish(path: &Option<String>, quiet: bool) -> Result<()> {
+    if let Some(path) = path {
+        let summary = maestro::obs::trace::write_file(path)?;
+        if !quiet {
+            println!("trace: wrote {} event(s) to {path}", summary.events);
+        }
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = flags();
@@ -207,6 +234,7 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let json = args.has("json");
+            let trace_path = trace_setup(&args)?;
             let (store, cache_path) = open_cache(&args, json)?;
             let out = run_analyze(&store, &req)?;
             if json {
@@ -247,6 +275,7 @@ fn main() -> Result<()> {
                 );
             }
             close_cache(&store, &cache_path, json)?;
+            trace_finish(&trace_path, json)?;
         }
         "map" => {
             // The layer-wise mapper (mapspace subsystem): per unique
@@ -259,6 +288,7 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let json = args.has("json");
+            let trace_path = trace_setup(&args)?;
             let (store, cache_path) = open_cache(&args, json)?;
             let out = run_map(&store, &req, None)?;
             if json {
@@ -311,6 +341,7 @@ fn main() -> Result<()> {
                 }
             }
             close_cache(&store, &cache_path, json)?;
+            trace_finish(&trace_path, json)?;
         }
         "validate" => {
             let (layer, _) = pick_layer(&args)?;
@@ -333,6 +364,7 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let json = args.has("json");
+            let trace_path = trace_setup(&args)?;
             let prep = prepare_dse(&req)?;
             if !json {
                 if let Some(note) = &prep.mapspace_note {
@@ -407,10 +439,19 @@ fn main() -> Result<()> {
                 }
             }
             close_cache(&store, &cache_path, json)?;
+            trace_finish(&trace_path, json)?;
         }
         "serve" => {
             let cache_file = {
                 let p = args.opt("cache-file", "");
+                if p.is_empty() {
+                    None
+                } else {
+                    Some(p)
+                }
+            };
+            let trace_out = {
+                let p = args.opt("trace-out", "");
                 if p.is_empty() {
                     None
                 } else {
@@ -426,12 +467,18 @@ fn main() -> Result<()> {
                 flush_every: args.opt_f64("flush-every", 30.0)?,
                 threads: args.opt_u64("threads", 0)? as usize,
                 verbose: args.has("verbose"),
+                trace_out,
+                trace_sample: args.opt_u64("trace-sample", 1)?,
             };
             maestro::service::serve(&cfg)?;
         }
         "client" => {
             let addr = args.opt("addr", "127.0.0.1:7733");
-            maestro::service::client::repl(&addr)?;
+            if args.has("metrics") {
+                maestro::service::client::metrics(&addr)?;
+            } else {
+                maestro::service::client::repl(&addr)?;
+            }
         }
         "cache" => {
             let action = args.positional.first().map(String::as_str).unwrap_or("");

@@ -338,6 +338,7 @@ impl MapCtx {
     /// results absorb deterministically as long as they are handed
     /// back in chunk-index order.
     pub fn run_chunk(&self, wave: &MapWave, chunk: usize) -> MapChunk {
+        let _span = crate::obs::trace::span("map.chunk");
         let mut analyzer = Analyzer::with_store(Arc::clone(&self.store));
         let range = wave.chunks[chunk].clone();
         let mut out =

@@ -1,0 +1,283 @@
+//! The process-wide metrics registry: named counters, gauges, and
+//! fixed-bucket histograms.
+//!
+//! Instruments register lazily: the first [`counter`] / [`gauge`] /
+//! [`histogram`] call for a name creates the instrument, every later
+//! call returns the same `Arc` (hot call sites may cache it). Values
+//! are plain relaxed atomics — increments and observations never block
+//! each other; only registration and [`snapshot`] take the registry
+//! lock. Names are sorted in snapshots so serialized metric frames are
+//! byte-stable for a given set of values.
+//!
+//! Cost policy: the analysis hot path (millions of design evaluations
+//! per second) never touches the global registry per evaluation —
+//! per-request counters are folded in at request granularity (the
+//! daemon's `conclude`), and point-in-time store/scheduler gauges are
+//! sampled only when a `metrics` request arrives. Everything here is
+//! observation-only: no engine code reads an instrument back.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge (an `f64` stored as its bit pattern, so
+/// `set`/`get` are single relaxed atomic ops).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A fixed-bucket histogram: `bounds` are inclusive upper edges in
+/// ascending order, plus one implicit overflow bucket, so `buckets`
+/// always has `bounds.len() + 1` slots. Buckets, count, and sum are
+/// independent relaxed atomics — a concurrent snapshot may catch them
+/// mid-update (off by an observation), which is fine for diagnostics.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut buckets = Vec::with_capacity(bounds.len() + 1);
+        buckets.resize_with(bounds.len() + 1, AtomicU64::default);
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let slot =
+            self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.buckets[slot].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.sum_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Atomic `f64 +=` via a compare-exchange loop on the bit pattern.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut current = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(current) + v).to_bits();
+        match cell.compare_exchange_weak(current, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => current = actual,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+/// The counter registered under `name` (created on first use).
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut reg = registry().lock().unwrap();
+    Arc::clone(reg.counters.entry(name.to_string()).or_default())
+}
+
+/// The gauge registered under `name` (created on first use).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut reg = registry().lock().unwrap();
+    Arc::clone(reg.gauges.entry(name.to_string()).or_default())
+}
+
+/// The histogram registered under `name`. The first call fixes the
+/// bucket bounds; later calls return the existing instrument no matter
+/// what bounds they pass (one name, one layout — keep call sites
+/// agreeing on a single bounds constant).
+pub fn histogram(name: &str, bounds: &[f64]) -> Arc<Histogram> {
+    let mut reg = registry().lock().unwrap();
+    Arc::clone(
+        reg.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new(bounds))),
+    )
+}
+
+/// One histogram's state in a [`Snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub name: String,
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts; `bounds.len() + 1` entries (last = overflow).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// A point-in-time copy of every registered instrument, names sorted.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+/// Copy every registered instrument's current value (names sorted —
+/// `BTreeMap` order — so two snapshots of the same state serialize
+/// identically).
+pub fn snapshot() -> Snapshot {
+    let reg = registry().lock().unwrap();
+    Snapshot {
+        counters: reg.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+        gauges: reg.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+        histograms: reg
+            .histograms
+            .iter()
+            .map(|(k, h)| HistogramSnapshot {
+                name: k.clone(),
+                bounds: h.bounds.clone(),
+                buckets: h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                count: h.count(),
+                sum: h.sum(),
+            })
+            .collect(),
+    }
+}
+
+/// Zero every registered instrument (tests and benches isolating
+/// legs). Registration survives; `Arc`s held by call sites stay valid.
+pub fn reset() {
+    let reg = registry().lock().unwrap();
+    for c in reg.counters.values() {
+        c.value.store(0, Ordering::Relaxed);
+    }
+    for g in reg.gauges.values() {
+        g.bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+    }
+    for h in reg.histograms.values() {
+        for b in &h.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        h.count.store(0, Ordering::Relaxed);
+        h.sum_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share_by_name() {
+        let a = counter("test.metrics.counter_a");
+        let b = counter("test.metrics.counter_a");
+        let before = a.get();
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), before + 5, "one name must mean one instrument");
+    }
+
+    #[test]
+    fn gauges_keep_the_last_value() {
+        let g = gauge("test.metrics.gauge_a");
+        g.set(0.25);
+        g.set(7.5);
+        assert_eq!(g.get(), 7.5);
+        assert_eq!(gauge("test.metrics.gauge_a").get(), 7.5);
+    }
+
+    #[test]
+    fn histograms_bucket_on_inclusive_upper_edges() {
+        let h = histogram("test.metrics.hist_a", &[1.0, 10.0, 100.0]);
+        for v in [0.5, 1.0, 5.0, 50.0, 500.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 556.5);
+        let snap = snapshot();
+        let mine = snap
+            .histograms
+            .iter()
+            .find(|s| s.name == "test.metrics.hist_a")
+            .expect("registered histogram appears in the snapshot");
+        assert_eq!(mine.bounds, vec![1.0, 10.0, 100.0]);
+        // 0.5 and 1.0 land in <=1.0; 5.0 in <=10.0; 50.0 in <=100.0;
+        // 500.0 overflows.
+        assert_eq!(mine.buckets, vec![2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn snapshot_names_are_sorted() {
+        counter("test.metrics.z_last").inc();
+        counter("test.metrics.a_first").inc();
+        let snap = snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "snapshot order must be stable for byte-stable frames");
+    }
+
+    #[test]
+    fn concurrent_observations_all_land() {
+        let h = histogram("test.metrics.hist_mt", &[0.5]);
+        let c = counter("test.metrics.counter_mt");
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        h.observe(1.0);
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.sum(), 4000.0);
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,36 @@
+//! Telemetry: process-wide metrics and span tracing for the
+//! analysis/DSE/serve stack.
+//!
+//! Two hand-rolled, zero-dependency halves (the `util::json` policy —
+//! the offline image ships only `anyhow`):
+//!
+//! * [`metrics`] — a process-wide registry of named instruments:
+//!   monotonic [`metrics::Counter`]s, last-value [`metrics::Gauge`]s,
+//!   and fixed-bucket [`metrics::Histogram`]s. Instruments register
+//!   lazily on first use and live for the process; the daemon's
+//!   `metrics` request kind serializes a [`metrics::snapshot`] of all
+//!   of them. This absorbs the diagnostics that used to live in
+//!   scattered per-request counters (cache hit/miss/evict splits,
+//!   `profile_hits`, queue depth, pool utilization, wave latencies,
+//!   per-request designs/s, `retry_after_ms` quotes) behind stable
+//!   names — see the README's instrument table.
+//!
+//! * [`trace`] — span-based tracing with per-thread event buffers and a
+//!   Chrome trace-event JSON exporter. [`trace::span`] returns an RAII
+//!   guard that records a `B` (begin) event at construction and the
+//!   matching `E` (end) at drop on the same thread, so exported traces
+//!   are balanced and per-thread-monotonic by construction
+//!   ([`trace::validate`] pins that structurally). Tracing is off by
+//!   default — a disabled `span` is one relaxed atomic load — and is
+//!   switched on by `--trace-out FILE` (CLI runs and `maestro serve`),
+//!   which writes a file loadable in `chrome://tracing` / Perfetto.
+//!
+//! **The determinism contract carve-out:** telemetry is observation
+//! only. Enabling, disabling, or sampling it never changes a reply
+//! byte, a streamed frame, or a frontier bit — instruments and spans
+//! read clocks and write side buffers, and nothing in the engine ever
+//! reads them back. `rust/tests/serve_concurrent.rs` pins replies and
+//! stream frames bit-identical with telemetry off, on, and sampled.
+
+pub mod metrics;
+pub mod trace;

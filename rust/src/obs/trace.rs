@@ -1,0 +1,304 @@
+//! Span tracing with per-thread buffers and a Chrome trace-event
+//! exporter.
+//!
+//! [`span`] is the whole instrumentation API: it returns a guard that
+//! records a `B` (begin) event now and the matching `E` (end) event
+//! when dropped. Guards must be dropped on the thread that created
+//! them (every call site here is a stack-scoped `let _span = ...`), so
+//! each thread's event stream is balanced and its timestamps are
+//! nondecreasing by construction — [`validate`] pins both properties
+//! on exported traces.
+//!
+//! "Lock-free enough": each OS thread owns one event buffer behind its
+//! own mutex, locked only by that thread while recording and by
+//! [`export`] at the end — there is no cross-thread contention on the
+//! hot path, and a disabled [`span`] is a single relaxed atomic load.
+//! Buffers cap at [`THREAD_EVENT_CAP`] begin events; beyond it, spans
+//! are counted as dropped rather than growing without bound (an `E`
+//! whose `B` was recorded always lands, so truncation never unbalances
+//! a trace).
+//!
+//! Sampling: [`enable`] takes `sample_every` — record every Nth span
+//! *per thread* (1 = all). A sampled-out span skips both its `B` and
+//! `E`, so sampled traces stay balanced.
+//!
+//! The export format is the Chrome trace-event JSON object form
+//! (`{"traceEvents": [...]}`), loadable in `chrome://tracing` and
+//! Perfetto. Timestamps are microseconds on a process-wide monotonic
+//! epoch; `pid` is constant 1; `tid`s are assigned in thread
+//! registration order.
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+/// Begin events a single thread may buffer before new spans are
+/// dropped (counted, never silently lost).
+pub const THREAD_EVENT_CAP: usize = 1 << 20;
+
+/// One recorded event. Span names are `&'static str` so recording
+/// never allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Event {
+    name: &'static str,
+    /// `b'B'` (begin) or `b'E'` (end).
+    phase: u8,
+    /// Microseconds since the process trace epoch.
+    ts_us: u64,
+}
+
+/// One thread's event buffer. Only its owner thread pushes; `export`
+/// reads under the same lock.
+struct ThreadBuf {
+    tid: u64,
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+}
+
+struct TraceState {
+    epoch: Instant,
+    sample_every: AtomicU64,
+    buffers: Mutex<Vec<Arc<ThreadBuf>>>,
+}
+
+/// Fast-path switch, outside the `OnceLock` so a disabled [`span`]
+/// costs one load and no initialization.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static TraceState {
+    static STATE: OnceLock<TraceState> = OnceLock::new();
+    STATE.get_or_init(|| TraceState {
+        epoch: Instant::now(),
+        sample_every: AtomicU64::new(1),
+        buffers: Mutex::new(Vec::new()),
+    })
+}
+
+struct Local {
+    buf: Arc<ThreadBuf>,
+    /// Spans entered on this thread (the per-thread sampling clock).
+    seen: Cell<u64>,
+}
+
+thread_local! {
+    static LOCAL: OnceCell<Local> = const { OnceCell::new() };
+}
+
+fn local_init() -> Local {
+    let st = state();
+    let mut buffers = st.buffers.lock().unwrap();
+    let buf = Arc::new(ThreadBuf {
+        tid: buffers.len() as u64 + 1,
+        events: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+    });
+    buffers.push(Arc::clone(&buf));
+    Local { buf, seen: Cell::new(0) }
+}
+
+/// Turn tracing on. `sample_every` records every Nth span per thread
+/// (values below 1 mean 1 = record everything). Sticky until
+/// [`disable`]; flipping it mid-run only changes what gets recorded,
+/// never what any engine computes.
+pub fn enable(sample_every: u64) {
+    state().sample_every.store(sample_every.max(1), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off (spans become no-ops; buffered events survive
+/// until [`clear`]).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drop every buffered event and dropped-span count (benches and tests
+/// isolating runs; registered threads keep their tids).
+pub fn clear() {
+    let st = state();
+    let buffers = st.buffers.lock().unwrap();
+    for buf in buffers.iter() {
+        buf.events.lock().unwrap().clear();
+        buf.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII span guard: `B` recorded at construction, `E` at drop. Must be
+/// dropped on the creating thread (stack scope it).
+pub struct SpanGuard {
+    /// `Some(name)` when the `B` event was recorded — the `E` event is
+    /// emitted iff the `B` was, keeping traces balanced under
+    /// sampling, capping, and mid-span disable.
+    armed: Option<&'static str>,
+}
+
+/// Open a span. With tracing disabled this is one relaxed load and a
+/// no-op guard.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { armed: None };
+    }
+    span_slow(name)
+}
+
+fn span_slow(name: &'static str) -> SpanGuard {
+    let st = state();
+    LOCAL.with(|cell| {
+        let local = cell.get_or_init(local_init);
+        let n = local.seen.get();
+        local.seen.set(n.wrapping_add(1));
+        let every = st.sample_every.load(Ordering::Relaxed).max(1);
+        if n % every != 0 {
+            return SpanGuard { armed: None };
+        }
+        let ts_us = st.epoch.elapsed().as_micros() as u64;
+        let mut events = local.buf.events.lock().unwrap();
+        if events.len() >= THREAD_EVENT_CAP {
+            local.buf.dropped.fetch_add(1, Ordering::Relaxed);
+            return SpanGuard { armed: None };
+        }
+        events.push(Event { name, phase: b'B', ts_us });
+        SpanGuard { armed: Some(name) }
+    })
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(name) = self.armed.take() else { return };
+        let st = state();
+        let ts_us = st.epoch.elapsed().as_micros() as u64;
+        LOCAL.with(|cell| {
+            // The creating thread recorded the B, so its Local exists;
+            // the E lands unconditionally (even past the cap or after
+            // disable) so the trace stays balanced.
+            if let Some(local) = cell.get() {
+                local.buf.events.lock().unwrap().push(Event { name, phase: b'E', ts_us });
+            }
+        });
+    }
+}
+
+/// Export every buffered event as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...], "otherData": {...}}`). Non-destructive;
+/// [`clear`] resets between runs.
+pub fn export() -> Json {
+    let st = state();
+    let buffers = st.buffers.lock().unwrap();
+    let mut events: Vec<Json> = Vec::new();
+    let mut dropped = 0u64;
+    for buf in buffers.iter() {
+        dropped += buf.dropped.load(Ordering::Relaxed);
+        for e in buf.events.lock().unwrap().iter() {
+            events.push(
+                Json::obj()
+                    .set("name", Json::str(e.name))
+                    .set("ph", Json::str(if e.phase == b'B' { "B" } else { "E" }))
+                    .set("ts", Json::int(e.ts_us))
+                    .set("pid", Json::int(1))
+                    .set("tid", Json::int(buf.tid)),
+            );
+        }
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .set("otherData", Json::obj().set("dropped_spans", Json::int(dropped)))
+}
+
+/// Export to a file (the CLI's `--trace-out`), validating first so a
+/// malformed trace can never be written.
+pub fn write_file(path: &str) -> Result<TraceSummary> {
+    let trace = export();
+    let summary = validate(&trace)?;
+    std::fs::write(path, trace.dump())
+        .map_err(|e| anyhow::anyhow!("trace: cannot write {path}: {e}"))?;
+    Ok(summary)
+}
+
+/// What [`validate`] measured about a structurally sound trace.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total events across all threads.
+    pub events: usize,
+    /// Distinct `tid`s seen.
+    pub threads: usize,
+    /// Deepest `B` nesting on any one thread.
+    pub max_depth: usize,
+}
+
+/// Structural validator for Chrome trace-event JSON (object form):
+/// every event carries `name`/`ph`/`ts`/`pid`/`tid`, phases are `B` or
+/// `E`, each thread's `B`/`E` events balance like a bracket sequence
+/// with matching names, and each thread's timestamps are
+/// nondecreasing in event order. Shared by the `obs_trace` test, the
+/// bench smokes, and [`write_file`] itself.
+pub fn validate(trace: &Json) -> Result<TraceSummary> {
+    let Some(events) = trace.get("traceEvents").and_then(Json::as_arr) else {
+        bail!("trace: missing 'traceEvents' array");
+    };
+    let mut per_thread: std::collections::BTreeMap<u64, (Vec<String>, u64)> =
+        std::collections::BTreeMap::new();
+    let mut max_depth = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} has no 'name'"))?;
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} has no 'ph'"))?;
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} has no integer 'ts'"))?;
+        ensure!(e.get("pid").and_then(Json::as_u64).is_some(), "trace: event {i} has no 'pid'");
+        let tid = e
+            .get("tid")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} has no integer 'tid'"))?;
+        let (stack, last_ts) = per_thread.entry(tid).or_default();
+        ensure!(
+            ts >= *last_ts,
+            "trace: tid {tid} time went backwards at event {i} ({ts} < {last_ts})"
+        );
+        *last_ts = ts;
+        match ph {
+            "B" => {
+                stack.push(name.to_string());
+                max_depth = max_depth.max(stack.len());
+            }
+            "E" => {
+                let Some(open) = stack.pop() else {
+                    bail!("trace: tid {tid} ends '{name}' with no span open (event {i})");
+                };
+                ensure!(
+                    open == name,
+                    "trace: tid {tid} ends '{name}' but '{open}' is open (event {i})"
+                );
+            }
+            other => bail!("trace: event {i} has unsupported phase '{other}'"),
+        }
+    }
+    for (tid, (stack, _)) in &per_thread {
+        ensure!(
+            stack.is_empty(),
+            "trace: tid {tid} leaves {} span(s) open ({})",
+            stack.len(),
+            stack.join(", ")
+        );
+    }
+    Ok(TraceSummary {
+        events: events.len(),
+        threads: per_thread.len(),
+        max_depth,
+    })
+}

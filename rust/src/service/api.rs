@@ -57,6 +57,9 @@ pub enum Request {
     Dse(DseRequest),
     /// Resident-store counters (daemon only; cheap, never queued).
     Status,
+    /// Full telemetry snapshot — every registered counter, gauge, and
+    /// histogram (daemon only; cheap, never queued).
+    Metrics,
     /// Cooperatively cancel the in-flight request with this client id.
     Cancel { id: u64 },
     /// Flush the store and stop the daemon.
@@ -146,6 +149,7 @@ pub enum Response {
     Map(MapReply),
     Dse(DseReply),
     Status(StatusReply),
+    Metrics(MetricsReply),
     /// Incremental progress on a streaming `map`/`dse` request; more
     /// frames follow on the same connection until a non-progress kind.
     Progress(ProgressReply),
@@ -343,6 +347,13 @@ pub struct StatusReply {
     /// Fraction of pool workers occupied by the most recent wave
     /// (`min(jobs, workers) / workers`; 0.0 when idle).
     pub pool_utilization: f64,
+    /// Milliseconds since the daemon started (monotonic clock).
+    pub uptime_ms: u64,
+    /// Work requests concluded successfully over the daemon's lifetime.
+    pub requests_done: u64,
+    /// Work requests concluded with an error frame (bad requests,
+    /// cancellations, overload rejections, worker failures).
+    pub requests_failed: u64,
 }
 
 impl From<StoreMetrics> for StatusReply {
@@ -358,8 +369,48 @@ impl From<StoreMetrics> for StatusReply {
             inflight: 0,
             workers: 0,
             pool_utilization: 0.0,
+            uptime_ms: 0,
+            requests_done: 0,
+            requests_failed: 0,
         }
     }
+}
+
+/// One counter in a [`MetricsReply`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricCounter {
+    pub name: String,
+    pub value: u64,
+}
+
+/// One gauge in a [`MetricsReply`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricGauge {
+    pub name: String,
+    pub value: f64,
+}
+
+/// One fixed-bucket histogram in a [`MetricsReply`]: `bounds` are
+/// inclusive upper edges; `buckets` has one extra overflow slot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricHistogram {
+    pub name: String,
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// The full telemetry snapshot (`metrics`): every registered
+/// instrument, names sorted, plus daemon uptime. Purely diagnostic —
+/// values depend on traffic history and timing, never the other way
+/// around.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsReply {
+    pub uptime_ms: u64,
+    pub counters: Vec<MetricCounter>,
+    pub gauges: Vec<MetricGauge>,
+    pub histograms: Vec<MetricHistogram>,
 }
 
 /// Acknowledgement frame for control requests.
@@ -547,6 +598,7 @@ impl Request {
             Request::Map(_) => "map",
             Request::Dse(_) => "dse",
             Request::Status => "status",
+            Request::Metrics => "metrics",
             Request::Cancel { .. } => "cancel",
             Request::Shutdown => "shutdown",
         }
@@ -601,6 +653,7 @@ impl Request {
                 .set("keep_points", Json::Bool(r.keep_points))
                 .set_opt("stream", r.stream.then(|| Json::Bool(true))),
             Request::Status => envelope("status", None),
+            Request::Metrics => envelope("metrics", None),
             Request::Cancel { id } => envelope("cancel", None).set("id", Json::int(*id)),
             Request::Shutdown => envelope("shutdown", None),
         }
@@ -666,6 +719,7 @@ impl Request {
                 }))
             }
             "status" => Ok(Request::Status),
+            "metrics" => Ok(Request::Metrics),
             "cancel" => {
                 let id = opt_u64(v, "id")?
                     .ok_or_else(|| ApiError::bad_request("cancel: missing 'id'"))?;
@@ -673,7 +727,7 @@ impl Request {
             }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ApiError::bad_request(format!(
-                "unknown request kind '{other}' (analyze | map | dse | status | cancel | shutdown)"
+                "unknown request kind '{other}' (analyze | map | dse | status | metrics | cancel | shutdown)"
             ))),
         }
     }
@@ -799,7 +853,63 @@ impl Response {
                 .set("queue_depth", Json::int(r.queue_depth))
                 .set("inflight", Json::int(r.inflight))
                 .set("workers", Json::int(r.workers))
-                .set("pool_utilization", Json::num(r.pool_utilization)),
+                .set("pool_utilization", Json::num(r.pool_utilization))
+                // Appended in PR 10 (v1-compatible growth: decoders
+                // default absent fields to zero).
+                .set("uptime_ms", Json::int(r.uptime_ms))
+                .set("requests_done", Json::int(r.requests_done))
+                .set("requests_failed", Json::int(r.requests_failed)),
+            Response::Metrics(r) => envelope("metrics", None)
+                .set("ok", Json::Bool(true))
+                .set("uptime_ms", Json::int(r.uptime_ms))
+                .set(
+                    "counters",
+                    Json::Arr(
+                        r.counters
+                            .iter()
+                            .map(|c| {
+                                Json::obj()
+                                    .set("name", Json::str(&c.name))
+                                    .set("value", Json::int(c.value))
+                            })
+                            .collect(),
+                    ),
+                )
+                .set(
+                    "gauges",
+                    Json::Arr(
+                        r.gauges
+                            .iter()
+                            .map(|g| {
+                                Json::obj()
+                                    .set("name", Json::str(&g.name))
+                                    .set("value", Json::num(g.value))
+                            })
+                            .collect(),
+                    ),
+                )
+                .set(
+                    "histograms",
+                    Json::Arr(
+                        r.histograms
+                            .iter()
+                            .map(|h| {
+                                Json::obj()
+                                    .set("name", Json::str(&h.name))
+                                    .set(
+                                        "bounds",
+                                        Json::Arr(h.bounds.iter().map(|b| Json::num(*b)).collect()),
+                                    )
+                                    .set(
+                                        "buckets",
+                                        Json::Arr(h.buckets.iter().map(|b| Json::int(*b)).collect()),
+                                    )
+                                    .set("count", Json::int(h.count))
+                                    .set("sum", Json::num(h.sum))
+                            })
+                            .collect(),
+                    ),
+                ),
             Response::Progress(r) => envelope("progress", r.id)
                 .set("ok", Json::Bool(true))
                 .set("wave", Json::int(r.wave))
@@ -950,6 +1060,56 @@ impl Response {
                 inflight: get_u64(v, "inflight", 0)?,
                 workers: get_u64(v, "workers", 0)?,
                 pool_utilization: get_f64(v, "pool_utilization", 0.0)?,
+                uptime_ms: get_u64(v, "uptime_ms", 0)?,
+                requests_done: get_u64(v, "requests_done", 0)?,
+                requests_failed: get_u64(v, "requests_failed", 0)?,
+            })),
+            "metrics" => Ok(Response::Metrics(MetricsReply {
+                uptime_ms: get_u64(v, "uptime_ms", 0)?,
+                counters: arr(v, "counters")?
+                    .iter()
+                    .map(|c| {
+                        Ok(MetricCounter {
+                            name: need_str(c, "name")?,
+                            value: get_u64(c, "value", 0)?,
+                        })
+                    })
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                gauges: arr(v, "gauges")?
+                    .iter()
+                    .map(|g| {
+                        Ok(MetricGauge {
+                            name: need_str(g, "name")?,
+                            value: get_f64(g, "value", 0.0)?,
+                        })
+                    })
+                    .collect::<std::result::Result<_, ApiError>>()?,
+                histograms: arr(v, "histograms")?
+                    .iter()
+                    .map(|h| {
+                        Ok(MetricHistogram {
+                            name: need_str(h, "name")?,
+                            bounds: arr(h, "bounds")?
+                                .iter()
+                                .map(|b| {
+                                    b.as_f64().ok_or_else(|| {
+                                        ApiError::bad_request("histogram bounds must be numbers")
+                                    })
+                                })
+                                .collect::<std::result::Result<_, ApiError>>()?,
+                            buckets: arr(h, "buckets")?
+                                .iter()
+                                .map(|b| {
+                                    b.as_u64().ok_or_else(|| {
+                                        ApiError::bad_request("histogram buckets must be counts")
+                                    })
+                                })
+                                .collect::<std::result::Result<_, ApiError>>()?,
+                            count: get_u64(h, "count", 0)?,
+                            sum: get_f64(h, "sum", 0.0)?,
+                        })
+                    })
+                    .collect::<std::result::Result<_, ApiError>>()?,
             })),
             "progress" => Ok(Response::Progress(ProgressReply {
                 id,

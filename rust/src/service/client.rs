@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
-use super::api::Request;
+use super::api::{Request, Response};
 
 /// A reply line ends its request unless it is a `progress` frame.
 /// Unparseable lines count as final so a broken peer can't hang us.
@@ -72,6 +72,23 @@ pub fn call(addr: &str, request: &Request) -> Result<Vec<String>> {
             return Ok(frames);
         }
     }
+}
+
+/// `maestro client --metrics`: fetch one telemetry snapshot frame from
+/// the daemon and print it. The frame is decoded into the typed
+/// [`Response`] and re-encoded before printing — a genuine round-trip
+/// through the versioned API, so a daemon/client codec drift fails
+/// here instead of printing bytes the client cannot actually parse.
+pub fn metrics(addr: &str) -> Result<()> {
+    for frame in call(addr, &Request::Metrics)? {
+        let parsed = Json::parse(&frame)
+            .map_err(|e| anyhow::anyhow!("client: malformed metrics frame: {e}"))?;
+        let response = Response::decode(&parsed).map_err(|e| {
+            anyhow::anyhow!("client: bad metrics frame ({}): {}", e.code, e.message)
+        })?;
+        println!("{}", response.encode_line());
+    }
+    Ok(())
 }
 
 /// The `maestro client` loop: forward each non-empty stdin line as a

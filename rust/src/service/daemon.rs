@@ -96,13 +96,16 @@ use crate::dse::engine::DesignPoint;
 use crate::dse::{table_identity, PairTables, SweepDriver, SweepShard};
 use crate::engine::analysis::NetworkStats;
 use crate::mapspace::{MapChunk, MapDriver};
+use crate::obs::{metrics, trace};
 use crate::util::json::Json;
+use crate::util::log;
 use crate::util::pool::WavePool;
 use crate::util::queue::JobQueue;
 
 use super::api::{
-    AnalyzeRequest, ApiError, DoneReply, DseRequest, MapRequest, PointRow, ProgressReply, Request,
-    RequestStats, Response, StatusReply,
+    AnalyzeRequest, ApiError, DoneReply, DseRequest, MapRequest, MetricCounter, MetricGauge,
+    MetricHistogram, MetricsReply, PointRow, ProgressReply, Request, RequestStats, Response,
+    StatusReply,
 };
 use super::exec::{self, AnalyzeOutcome, AnalyzePrep, DsePrep, MapPrep};
 
@@ -128,8 +131,14 @@ pub struct ServeConfig {
     /// `threads` 0 — affects only how finely their waves shard (0 =
     /// size for all cores); results are bit-identical for any value.
     pub threads: usize,
-    /// Log one line per executed request to stderr.
+    /// Raise the log level to debug (one line per executed request).
     pub verbose: bool,
+    /// Enable span tracing for the daemon's lifetime and write a
+    /// Chrome trace-event JSON file here on shutdown. `None` = off.
+    pub trace_out: Option<String>,
+    /// Record every Nth span per thread (0/1 = all; only meaningful
+    /// with `trace_out`).
+    pub trace_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -143,9 +152,19 @@ impl Default for ServeConfig {
             flush_every: 30.0,
             threads: 0,
             verbose: false,
+            trace_out: None,
+            trace_sample: 1,
         }
     }
 }
+
+// Fixed bucket layouts for the daemon's histograms (inclusive upper
+// edges; one implicit overflow bucket). One constant per instrument so
+// every call site agrees on the layout.
+const SECONDS_BOUNDS: &[f64] = &[0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0, 60.0];
+const WAVE_JOBS_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+const DESIGNS_PER_SECOND_BOUNDS: &[f64] = &[1e2, 1e3, 1e4, 1e5, 1e6, 1e7];
+const RETRY_MS_BOUNDS: &[f64] = &[100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0];
 
 /// One queued unit of work: the decoded request, the channel its
 /// frames go back on, and its cancellation flag.
@@ -175,6 +194,12 @@ struct Shared {
     cfg: ServeConfig,
     store: Arc<SharedStore>,
     shutdown: AtomicBool,
+    /// Daemon start time: `status`/`metrics` report uptime against it.
+    started: Instant,
+    /// Work requests concluded successfully since start (status field).
+    requests_done: AtomicU64,
+    /// Work requests concluded with an error reply since start.
+    requests_failed: AtomicU64,
     /// Client-id -> cancel flag for queued/running work requests.
     inflight: Mutex<HashMap<u64, Arc<AtomicBool>>>,
     tables: Mutex<TableCache>,
@@ -269,6 +294,12 @@ impl Daemon {
 }
 
 fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    if cfg.verbose {
+        log::set_level(log::Level::Debug);
+    }
+    if cfg.trace_out.is_some() {
+        trace::enable(cfg.trace_sample);
+    }
     let store = if cfg.cache_cap > 0 {
         Arc::new(SharedStore::with_max_entries(cfg.cache_cap))
     } else {
@@ -277,21 +308,30 @@ fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     if let Some(path) = &cfg.cache_file {
         let report = store.load(Path::new(path));
         if let Some(w) = &report.warning {
-            eprintln!("serve: {w}");
+            log::error("serve", w);
         }
-        println!("serve: loaded {} cached analyses from {path}", report.loaded);
+        log::info(
+            "serve",
+            &format!("loaded {} cached analyses from {path}", report.loaded),
+        );
     }
     let addr = listener.local_addr()?;
-    println!(
-        "serve: listening on {addr} ({} worker(s), queue cap {})",
-        cfg.workers.max(1),
-        cfg.queue_cap.max(1)
+    log::info(
+        "serve",
+        &format!(
+            "listening on {addr} ({} worker(s), queue cap {})",
+            cfg.workers.max(1),
+            cfg.queue_cap.max(1)
+        ),
     );
     listener.set_nonblocking(true)?;
 
     let shared = Shared {
         store: Arc::clone(&store),
         shutdown: AtomicBool::new(false),
+        started: Instant::now(),
+        requests_done: AtomicU64::new(0),
+        requests_failed: AtomicU64::new(0),
         inflight: Mutex::new(HashMap::new()),
         tables: Mutex::new(TableCache::default()),
         queue_depth: AtomicU64::new(0),
@@ -320,7 +360,7 @@ fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
                 }
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(e) => {
-                    eprintln!("serve: accept failed: {e}");
+                    log::error("serve", &format!("accept failed: {e}"));
                     break;
                 }
             }
@@ -338,9 +378,21 @@ fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
 
     if let Some(path) = &shared.cfg.cache_file {
         let report = store.flush(Path::new(path))?;
-        println!("serve: flushed {} new record(s) ({} total) to {path}", report.written, report.total);
+        log::info(
+            "serve",
+            &format!("flushed {} new record(s) ({} total) to {path}", report.written, report.total),
+        );
     }
-    println!("serve: shutdown complete");
+    if let Some(path) = &shared.cfg.trace_out {
+        match trace::write_file(path) {
+            Ok(summary) => log::info(
+                "serve",
+                &format!("wrote {} trace event(s) to {path}", summary.events),
+            ),
+            Err(e) => log::error("serve", &format!("trace export failed: {e}")),
+        }
+    }
+    log::info("serve", "shutdown complete");
     Ok(())
 }
 
@@ -359,10 +411,15 @@ fn flusher_loop(shared: &Shared) {
         last = Instant::now();
         match shared.store.flush(Path::new(&path)) {
             Ok(r) if r.written > 0 => {
-                println!("serve: flushed {} new record(s) ({} total) to {path}", r.written, r.total);
+                metrics::counter("cache.flushes").inc();
+                metrics::counter("cache.flush_records").add(r.written as u64);
+                log::info(
+                    "serve",
+                    &format!("flushed {} new record(s) ({} total) to {path}", r.written, r.total),
+                );
             }
             Ok(_) => {}
-            Err(e) => eprintln!("serve: background flush failed: {e}"),
+            Err(e) => log::error("serve", &format!("background flush failed: {e}")),
         }
     }
 }
@@ -440,21 +497,55 @@ struct Active {
 }
 
 /// Send the final frame and retire the request: inflight handle gone,
-/// drain EWMA updated, verbose log emitted. (A send error means the
-/// submitting connection died; the result is simply dropped.)
+/// drain EWMA updated, telemetry folded in, debug log emitted. (A send
+/// error means the submitting connection died; the result is simply
+/// dropped.)
 fn conclude(shared: &Shared, active: &Active, response: Response) {
     if let Some(id) = active.id {
         shared.inflight.lock().unwrap().remove(&id);
     }
-    shared.note_completion(active.started.elapsed());
-    if shared.cfg.verbose {
-        eprintln!(
-            "serve: {} request handled in {:.3}s",
-            active.kind,
-            active.started.elapsed().as_secs_f64()
-        );
-    }
+    let elapsed = active.started.elapsed();
+    shared.note_completion(elapsed);
+    record_outcome(shared, active.kind, elapsed.as_secs_f64(), &response);
     let _ = active.reply.send(response);
+}
+
+/// The diagnostic cost accounting a successful reply carries.
+fn reply_stats(response: &Response) -> Option<&RequestStats> {
+    match response {
+        Response::Analyze(r) => Some(&r.stats),
+        Response::Map(r) => Some(&r.stats),
+        Response::Dse(r) => Some(&r.stats),
+        _ => None,
+    }
+}
+
+/// Fold one retired request into the telemetry registry: outcome
+/// counters, latency/throughput histograms, and the per-request cache
+/// split from the reply's `stats`. Runs once per *request* — never per
+/// design evaluation — so the evaluation hot path stays free of global
+/// atomics.
+fn record_outcome(shared: &Shared, kind: &str, wall: f64, response: &Response) {
+    if matches!(response, Response::Error(_)) {
+        shared.requests_failed.fetch_add(1, Ordering::Relaxed);
+        metrics::counter("serve.requests_failed").inc();
+    } else {
+        shared.requests_done.fetch_add(1, Ordering::Relaxed);
+        metrics::counter("serve.requests_done").inc();
+    }
+    metrics::histogram("serve.request_seconds", SECONDS_BOUNDS).observe(wall);
+    if let Some(stats) = reply_stats(response) {
+        metrics::counter("request.analyses").add(stats.analyses);
+        metrics::counter("request.warm_hits").add(stats.warm_hits);
+        metrics::counter("request.disk_hits").add(stats.disk_hits);
+        metrics::counter("request.profile_hits").add(stats.profile_hits);
+        metrics::counter("request.designs_evaluated").add(stats.designs_evaluated);
+        if stats.designs_evaluated > 0 && wall > 0.0 {
+            metrics::histogram("serve.designs_per_second", DESIGNS_PER_SECOND_BOUNDS)
+                .observe(stats.designs_evaluated as f64 / wall);
+        }
+    }
+    log::debug("serve", &format!("{kind} request handled in {wall:.3}s"));
 }
 
 /// The daemon's one scheduler: owns every in-flight request's driver,
@@ -532,7 +623,15 @@ fn scheduler_loop(shared: &Shared, queue: JobQueue<Job>) {
                     std::thread::sleep(Duration::from_millis(5));
                 }
             } else {
-                let results = pool.run_wave(wave_jobs);
+                let njobs = wave_jobs.len();
+                let wave_started = Instant::now();
+                let results = {
+                    let _span = trace::span("serve.wave");
+                    pool.run_wave(wave_jobs)
+                };
+                metrics::histogram("serve.wave_jobs", WAVE_JOBS_BOUNDS).observe(njobs as f64);
+                metrics::histogram("serve.wave_seconds", SECONDS_BOUNDS)
+                    .observe(wave_started.elapsed().as_secs_f64());
                 let mut per: Vec<Vec<PoolResult>> = Vec::new();
                 per.resize_with(actives.len(), Vec::new);
                 for (tag, result) in tags.into_iter().zip(results) {
@@ -564,6 +663,7 @@ fn scheduler_loop(shared: &Shared, queue: JobQueue<Job>) {
 /// honor a cancel that landed while queued (analyze/dse never start;
 /// map degrades gracefully, so it still runs).
 fn admit(shared: &Shared, actives: &mut Vec<Active>, job: Job) {
+    let _span = trace::span("serve.admit");
     shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
     let Job { request, reply, cancel } = job;
     let id = request.id();
@@ -573,6 +673,9 @@ fn admit(shared: &Shared, actives: &mut Vec<Active>, job: Job) {
         if let Some(id) = id {
             shared.inflight.lock().unwrap().remove(&id);
         }
+        // Requests that never reach the pool (bad_request, queued-then-
+        // cancelled) still count as retired.
+        record_outcome(shared, kind, started.elapsed().as_secs_f64(), &response);
         let _ = reply.send(response);
     };
     if cancel.load(Ordering::Relaxed) && !matches!(request, Request::Map(_)) {
@@ -933,6 +1036,7 @@ fn handle_conn(shared: &Shared, job_tx: SyncSender<Job>, mut stream: TcpStream) 
 /// Malformed frames get a structured `bad_request` reply and the
 /// connection (and daemon) stay up.
 fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream, text: &str) -> bool {
+    let _span = trace::span("serve.request");
     let request = match Json::parse(text)
         .map_err(|e| ApiError::bad_request(format!("malformed frame: {e}")))
         .and_then(|v| Request::decode(&v))
@@ -949,7 +1053,55 @@ fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream
             reply.workers = workers;
             let jobs = shared.last_wave_jobs.load(Ordering::Relaxed);
             reply.pool_utilization = jobs.min(workers) as f64 / workers as f64;
+            reply.uptime_ms = shared.started.elapsed().as_millis() as u64;
+            reply.requests_done = shared.requests_done.load(Ordering::Relaxed);
+            reply.requests_failed = shared.requests_failed.load(Ordering::Relaxed);
             write_response(stream, &Response::Status(reply))
+        }
+        Request::Metrics => {
+            // Sample point-in-time gauges now, at request granularity —
+            // the evaluation hot path never touches the registry.
+            let m = shared.store.metrics();
+            metrics::gauge("cache.entries").set(m.entries as f64);
+            metrics::gauge("cache.hits").set(m.hits as f64);
+            metrics::gauge("cache.disk_hits").set(m.disk_hits as f64);
+            metrics::gauge("cache.misses").set(m.misses as f64);
+            metrics::gauge("cache.evictions").set(m.evictions as f64);
+            metrics::gauge("serve.queue_depth")
+                .set(shared.queue_depth.load(Ordering::Relaxed) as f64);
+            metrics::gauge("serve.inflight")
+                .set(shared.inflight_execs.load(Ordering::Relaxed) as f64);
+            metrics::gauge("serve.workers").set(shared.cfg.workers.max(1) as f64);
+            let workers = shared.cfg.workers.max(1) as u64;
+            let jobs = shared.last_wave_jobs.load(Ordering::Relaxed);
+            metrics::gauge("serve.pool_utilization")
+                .set(jobs.min(workers) as f64 / workers as f64);
+            let snap = metrics::snapshot();
+            let reply = MetricsReply {
+                uptime_ms: shared.started.elapsed().as_millis() as u64,
+                counters: snap
+                    .counters
+                    .into_iter()
+                    .map(|(name, value)| MetricCounter { name, value })
+                    .collect(),
+                gauges: snap
+                    .gauges
+                    .into_iter()
+                    .map(|(name, value)| MetricGauge { name, value })
+                    .collect(),
+                histograms: snap
+                    .histograms
+                    .into_iter()
+                    .map(|h| MetricHistogram {
+                        name: h.name,
+                        bounds: h.bounds,
+                        buckets: h.buckets,
+                        count: h.count,
+                        sum: h.sum,
+                    })
+                    .collect(),
+            };
+            write_response(stream, &Response::Metrics(reply))
         }
         Request::Cancel { id } => {
             let flagged = {
@@ -1013,14 +1165,15 @@ fn handle_line(shared: &Shared, job_tx: &SyncSender<Job>, stream: &mut TcpStream
                     if let Some(id) = id {
                         shared.inflight.lock().unwrap().remove(&id);
                     }
+                    let retry_after = shared.retry_after_ms();
+                    metrics::counter("serve.overloaded").inc();
+                    metrics::histogram("serve.retry_after_ms", RETRY_MS_BOUNDS)
+                        .observe(retry_after as f64);
                     write_response(
                         stream,
                         &Response::error(
                             id,
-                            ApiError::overloaded(
-                                shared.retry_after_ms(),
-                                shared.cfg.queue_cap.max(1),
-                            ),
+                            ApiError::overloaded(retry_after, shared.cfg.queue_cap.max(1)),
                         ),
                     )
                 }

@@ -84,6 +84,16 @@ pub fn common_flags() -> Vec<FlagSpec> {
             takes_value: true,
             help: "runtime | energy | edp (default runtime)",
         },
+        FlagSpec {
+            name: "trace-out",
+            takes_value: true,
+            help: "write a Chrome trace-event JSON file of span telemetry on exit (serve: on shutdown)",
+        },
+        FlagSpec {
+            name: "trace-sample",
+            takes_value: true,
+            help: "record every Nth span per thread (default 1 = all; only with --trace-out)",
+        },
     ]
 }
 
@@ -288,9 +298,17 @@ mod tests {
     #[test]
     fn common_flags_cover_the_shared_surface() {
         let names: Vec<&str> = common_flags().iter().map(|f| f.name).collect();
-        for expect in
-            ["cache-file", "cache-cap", "budget", "budget-seconds", "threads", "seed", "objective"]
-        {
+        for expect in [
+            "cache-file",
+            "cache-cap",
+            "budget",
+            "budget-seconds",
+            "threads",
+            "seed",
+            "objective",
+            "trace-out",
+            "trace-sample",
+        ] {
             assert!(names.contains(&expect), "missing common flag --{expect}");
         }
     }

@@ -1,0 +1,108 @@
+//! Leveled logging for the daemon and its background threads: one
+//! writer (a locked stderr handle), monotonic-clock timestamps, three
+//! levels.
+//!
+//! This replaces the daemon's ad-hoc `println!` / `--verbose`
+//! `eprintln!` mix: every line goes to **stderr** through one lock, so
+//! concurrent scheduler / flusher / connection threads can never
+//! interleave mid-line, and every line is stamped with seconds since
+//! the process log epoch (a monotonic [`Instant`], immune to wall-clock
+//! steps). The format is fixed:
+//!
+//! ```text
+//! [+12.345s] INFO serve: listening on 127.0.0.1:7733 (2 worker(s), queue cap 16)
+//! ```
+//!
+//! The default level is [`Level::Info`]; `maestro serve --verbose`
+//! raises it to [`Level::Debug`] (per-request completion lines).
+//! Filtering is a relaxed atomic load, so a suppressed [`debug`] call
+//! costs nothing measurable. Like everything in `obs`, logging is
+//! observation-only — no code path reads the level to decide real
+//! work.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// Current filter level as its discriminant (default: Info).
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Set the process-wide filter: lines above `level` are dropped.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a line at `level` currently be written?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Write one line: `[+<monotonic seconds>s] LEVEL module: msg`.
+pub fn log(level: Level, module: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = epoch().elapsed().as_secs_f64();
+    // One writer: the stderr lock serializes whole lines across
+    // threads.
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[+{t:.3}s] {} {module}: {msg}", level.tag());
+}
+
+pub fn error(module: &str, msg: &str) {
+    log(Level::Error, module, msg);
+}
+
+pub fn info(module: &str, msg: &str) {
+    log(Level::Info, module, msg);
+}
+
+pub fn debug(module: &str, msg: &str) {
+    log(Level::Debug, module, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filter_orders_error_info_debug() {
+        // The level is process-global, so exercise the whole ladder in
+        // one test and restore the default afterwards.
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,6 +1,6 @@
 //! Shared utilities: deterministic PRNG, mini property-test harness,
-//! bench harness, CLI argument parsing, JSON codec, and table
-//! formatting.
+//! bench harness, CLI argument parsing, JSON codec, leveled logging,
+//! and table formatting.
 //!
 //! The offline build image ships only the `xla` crate's dependency
 //! closure, so these modules stand in for `rand`, `proptest`,
@@ -10,6 +10,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod pool;
 pub mod propcheck;
 pub mod queue;

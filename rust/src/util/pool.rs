@@ -70,9 +70,13 @@ where
                 while let Some((job, slot)) = queue.pop() {
                     // Catch panics so the wave barrier (blocked on this
                     // slot's result) can finish the wave and the scope
-                    // join re-raises, instead of hanging.
-                    let out =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || run(job)));
+                    // join re-raises, instead of hanging. The span's E
+                    // event lands during unwind, so traces stay
+                    // balanced even across a panicking job.
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                        let _span = crate::obs::trace::span("pool.job");
+                        run(job)
+                    }));
                     match out {
                         Ok(out) => {
                             if res_tx.send((slot, out)).is_err() {

@@ -17,12 +17,11 @@ use maestro::util::stablehash::Fnv128;
 
 /// FNV-128 over the sorted engine sources (name, NUL, length, bytes
 /// with `\r` stripped so checkout line-ending policy cannot move it).
-// PR 8 repin: the two-phase split — engine/profile.rs (bandwidth-
-// invariant ReuseProfile + finalize) joined the tree and
-// engine/analysis.rs gained the profile memo. Outputs are bit-identical
-// to the monolithic path for every key (property-pinned in
-// rust/tests/properties.rs), so ANALYSIS_VERSION stays.
-const ENGINE_SRC_FINGERPRINT: u128 = 0xffb80196e0cad4019beff27641eeb239;
+// PR 10 repin: engine/analysis.rs gained observation-only trace spans
+// (profile.build / profile.finalize). No formula changed — outputs are
+// bit-identical for every key (telemetry on/off identity is pinned in
+// rust/tests/serve_concurrent.rs) — so ANALYSIS_VERSION stays.
+const ENGINE_SRC_FINGERPRINT: u128 = 0x83b85732f1167bc61a5e42b5cbfcd869;
 
 fn engine_fingerprint() -> u128 {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/engine");

@@ -1,0 +1,178 @@
+//! Structural tests for the span tracer and its Chrome trace-event
+//! validator (`obs::trace`).
+//!
+//! The trace buffers are process-global, so exactly **one** test here
+//! records live spans — it owns every recording thread and runs its
+//! phases (full, sampled, disable-mid-span) sequentially with
+//! `clear()` between them. Every other test feeds the validator
+//! hand-built JSON and never touches the recorder, so the default
+//! parallel test harness cannot race the live test.
+//!
+//! (The end-to-end determinism contract — telemetry on/off/sampled
+//! never changes a reply byte — is pinned in
+//! `rust/tests/serve_concurrent.rs`.)
+
+use maestro::obs::trace;
+use maestro::util::json::Json;
+
+fn parse(text: &str) -> Json {
+    Json::parse(text).expect("test trace JSON parses")
+}
+
+fn trace_of(events: &str) -> Json {
+    parse(&format!(r#"{{"traceEvents":[{events}]}}"#))
+}
+
+fn event(name: &str, ph: &str, ts: u64, tid: u64) -> String {
+    format!(r#"{{"name":"{name}","ph":"{ph}","ts":{ts},"pid":1,"tid":{tid}}}"#)
+}
+
+/// The one live-recording test: nested spans on the test thread plus
+/// worker threads, then a sampled phase, then an end-after-disable
+/// phase. Each phase's export must pass the validator and carry
+/// exactly the expected event count.
+#[test]
+fn recorded_spans_export_a_valid_chrome_trace() {
+    // Phase 1: record everything — nesting on this thread, flat spans
+    // on two workers.
+    trace::enable(1);
+    trace::clear();
+    {
+        let _outer = trace::span("test.outer");
+        let _inner = trace::span("test.inner");
+    }
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..5 {
+                    let _span = trace::span("test.worker");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    trace::disable();
+
+    let exported = trace::export();
+    let summary = trace::validate(&exported).expect("full trace validates");
+    // 2 spans here + 5 on each of 2 workers, a B and an E apiece.
+    assert_eq!(summary.events, (2 + 2 * 5) * 2);
+    assert_eq!(summary.threads, 3, "this thread + 2 workers");
+    assert_eq!(summary.max_depth, 2, "outer/inner nesting");
+    assert_eq!(
+        exported
+            .get("otherData")
+            .and_then(|o| o.get("dropped_spans"))
+            .and_then(Json::as_u64),
+        Some(0),
+        "nothing hit the buffer cap"
+    );
+
+    // Phase 2: sampling keeps traces balanced. A fresh thread's
+    // per-thread clock starts at 0, so every-3rd over 9 spans records
+    // spans 0, 3, 6 — three B/E pairs.
+    trace::clear();
+    trace::enable(3);
+    std::thread::spawn(|| {
+        for _ in 0..9 {
+            let _span = trace::span("test.sampled");
+        }
+    })
+    .join()
+    .expect("sampled thread");
+    trace::disable();
+    let sampled = trace::validate(&trace::export()).expect("sampled trace validates");
+    assert_eq!(sampled.events, 3 * 2, "every 3rd of 9 spans, B+E each");
+
+    // Phase 3: a span open across disable() still closes — the E lands
+    // whenever the B was recorded, so the trace stays balanced.
+    trace::clear();
+    trace::enable(1);
+    let straddle = trace::span("test.straddle");
+    trace::disable();
+    drop(straddle);
+    let closed = trace::validate(&trace::export()).expect("straddling span still balances");
+    assert_eq!(closed.events, 2);
+
+    trace::clear();
+}
+
+#[test]
+fn validator_accepts_interleaved_threads_with_per_thread_time() {
+    // Global timestamps go backwards across tids (tid 2 starts before
+    // tid 1's latest event) — legal, only per-tid order matters.
+    let trace = trace_of(&[
+        event("a", "B", 10, 1),
+        event("b", "B", 5, 2),
+        event("a", "E", 20, 1),
+        event("b", "E", 6, 2),
+    ]
+    .join(","));
+    let summary = trace::validate(&trace).expect("interleaved tids are valid");
+    assert_eq!(summary.events, 4);
+    assert_eq!(summary.threads, 2);
+    assert_eq!(summary.max_depth, 1);
+}
+
+#[test]
+fn validator_rejects_missing_trace_events_array() {
+    let err = trace::validate(&parse(r#"{"otherData":{}}"#)).unwrap_err();
+    assert!(err.to_string().contains("traceEvents"), "{err}");
+}
+
+#[test]
+fn validator_rejects_unclosed_span() {
+    let trace = trace_of(&event("a", "B", 1, 1));
+    let err = trace::validate(&trace).unwrap_err();
+    assert!(err.to_string().contains("open"), "{err}");
+}
+
+#[test]
+fn validator_rejects_end_without_begin() {
+    let trace = trace_of(&event("a", "E", 1, 1));
+    let err = trace::validate(&trace).unwrap_err();
+    assert!(err.to_string().contains("no span open"), "{err}");
+}
+
+#[test]
+fn validator_rejects_mismatched_span_names() {
+    let trace = trace_of(&[event("a", "B", 1, 1), event("b", "E", 2, 1)].join(","));
+    let err = trace::validate(&trace).unwrap_err();
+    assert!(err.to_string().contains("'a' is open"), "{err}");
+}
+
+#[test]
+fn validator_rejects_backwards_time_within_a_thread() {
+    let trace = trace_of(&[event("a", "B", 10, 1), event("a", "E", 9, 1)].join(","));
+    let err = trace::validate(&trace).unwrap_err();
+    assert!(err.to_string().contains("backwards"), "{err}");
+}
+
+#[test]
+fn validator_rejects_unknown_phase() {
+    let trace = trace_of(&event("a", "X", 1, 1));
+    let err = trace::validate(&trace).unwrap_err();
+    assert!(err.to_string().contains("phase"), "{err}");
+}
+
+#[test]
+fn validator_rejects_events_missing_required_fields() {
+    for (missing, text) in [
+        ("name", r#"{"ph":"B","ts":1,"pid":1,"tid":1}"#),
+        ("ph", r#"{"name":"a","ts":1,"pid":1,"tid":1}"#),
+        ("ts", r#"{"name":"a","ph":"B","pid":1,"tid":1}"#),
+        ("pid", r#"{"name":"a","ph":"B","ts":1,"tid":1}"#),
+        ("tid", r#"{"name":"a","ph":"B","ts":1,"pid":1}"#),
+    ] {
+        let err = trace::validate(&trace_of(text)).unwrap_err();
+        assert!(err.to_string().contains(missing), "missing {missing}: {err}");
+    }
+}
+
+#[test]
+fn validator_summarizes_empty_traces() {
+    let summary = trace::validate(&trace_of("")).expect("empty trace is valid");
+    assert_eq!(summary, trace::TraceSummary::default());
+}

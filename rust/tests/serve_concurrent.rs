@@ -371,6 +371,101 @@ fn streamed_frontier_deltas_are_deterministic_and_replay_to_the_final() {
     );
 }
 
+/// The observation-only telemetry contract (PR 10): replies and
+/// streamed frame sequences are **bit-identical** with tracing off,
+/// fully on, and sampled — and the `metrics`/`status` frames actually
+/// carry the traffic that ran.
+///
+/// (Trace *structure* is validated in `rust/tests/obs_trace.rs`, where
+/// the test owns every recording thread; here other tests' daemons may
+/// legitimately have spans open mid-export.)
+#[test]
+fn telemetry_on_off_or_sampled_never_changes_replies_or_streams() {
+    use maestro::obs::trace;
+
+    // One fixed traffic mix, exercised per telemetry mode against a
+    // fresh 2-worker daemon: three plain requests, one streaming
+    // guided dse, then status + metrics probes.
+    let run = |sample: Option<u64>| {
+        match sample {
+            None => trace::disable(),
+            Some(n) => trace::enable(n),
+        }
+        let daemon = Daemon::spawn(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            ..ServeConfig::default()
+        })
+        .expect("spawn daemon");
+        let addr = daemon.addr();
+        let replies: Vec<String> = [analyze_request(1, "vgg16"), map_request(2), exhaustive_dse(3, 4)]
+            .iter()
+            .map(|r| scrubbed_line(&Client::connect(addr).request(r)))
+            .collect();
+        let mut client = Client::connect(addr);
+        let (frames, final_reply) = client.request_streaming(&guided_dse(4, "vgg16", false, 8, 6));
+        let status = client.request(&Request::Status);
+        let metrics = client.request(&Request::Metrics);
+        match client.request(&Request::Shutdown) {
+            Response::Done(d) => assert_eq!(d.what, "shutdown"),
+            other => panic!("expected done reply, got {other:?}"),
+        }
+        daemon.join().expect("clean daemon exit");
+        (replies, frames, scrubbed_line(&final_reply), status, metrics)
+    };
+
+    let (off_replies, off_frames, off_final, _, _) = run(None);
+    let (on_replies, on_frames, on_final, on_status, on_metrics) = run(Some(1));
+    let (sampled_replies, sampled_frames, sampled_final, _, _) = run(Some(3));
+    trace::disable();
+
+    // The determinism pin: telemetry mode must not move a single byte
+    // of any reply or any streamed frame.
+    assert_eq!(off_replies, on_replies, "replies changed with tracing on");
+    assert_eq!(off_replies, sampled_replies, "replies changed with sampled tracing");
+    assert_eq!(off_frames, on_frames, "stream frames changed with tracing on");
+    assert_eq!(off_frames, sampled_frames, "stream frames changed with sampled tracing");
+    assert_eq!(off_final, on_final, "final stream reply changed with tracing on");
+    assert_eq!(off_final, sampled_final, "final stream reply changed with sampled tracing");
+
+    // The instrumented daemon saw exactly this test's 4 work requests
+    // (per-daemon counters), all successful.
+    match &on_status {
+        Response::Status(s) => {
+            assert_eq!(s.requests_done, 4, "status must count concluded work requests");
+            assert_eq!(s.requests_failed, 0, "no request in this mix fails");
+            assert!(s.uptime_ms > 0, "uptime must tick while requests run");
+        }
+        other => panic!("expected status reply, got {other:?}"),
+    }
+
+    // The metrics frame reflects the traffic (registry is process-wide,
+    // so counts are lower bounds under parallel tests).
+    match &on_metrics {
+        Response::Metrics(m) => {
+            let done = m
+                .counters
+                .iter()
+                .find(|c| c.name == "serve.requests_done")
+                .expect("serve.requests_done counter registered");
+            assert!(done.value >= 4, "at least this test's requests counted: {}", done.value);
+            let waves = m
+                .histograms
+                .iter()
+                .find(|h| h.name == "serve.wave_seconds")
+                .expect("serve.wave_seconds histogram registered");
+            assert!(waves.count > 0, "scheduler waves must be observed");
+            assert_eq!(
+                waves.buckets.len(),
+                waves.bounds.len() + 1,
+                "histogram carries its overflow bucket"
+            );
+            assert_eq!(waves.count, waves.buckets.iter().sum::<u64>());
+        }
+        other => panic!("expected metrics reply, got {other:?}"),
+    }
+}
+
 /// Cancelling a big streaming dse mid-flight must end its frame
 /// sequence with a well-formed `cancelled` error frame, while a small
 /// concurrent stream on the same pool completes normally.

@@ -13,8 +13,9 @@
 use maestro::engine::analysis::Objective;
 use maestro::service::api::{
     AnalyzeReply, AnalyzeRequest, ApiError, DoneReply, DseReply, DseRequest, DseSearch, LayerRow,
-    MapReply, MapRequest, MapSearch, PointRow, ProgressReply, Ratios, Request, RequestStats,
-    Response, ShapeRow, SideTotals, SkippedRow, StatusReply,
+    MapReply, MapRequest, MapSearch, MetricCounter, MetricGauge, MetricHistogram, MetricsReply,
+    PointRow, ProgressReply, Ratios, Request, RequestStats, Response, ShapeRow, SideTotals,
+    SkippedRow, StatusReply,
 };
 use maestro::util::json::Json;
 
@@ -181,12 +182,15 @@ fn golden_progress_frame() {
 #[test]
 fn golden_control_requests() {
     assert_eq!(Request::Status.encode().dump(), r#"{"v":1,"kind":"status"}"#);
+    assert_eq!(Request::Metrics.encode().dump(), r#"{"v":1,"kind":"metrics"}"#);
     assert_eq!(Request::Cancel { id: 42 }.encode().dump(), r#"{"v":1,"kind":"cancel","id":42}"#);
     assert_eq!(Request::Shutdown.encode().dump(), r#"{"v":1,"kind":"shutdown"}"#);
 }
 
 #[test]
 fn golden_status_and_done_replies() {
+    // The uptime/requests fields grew in PR 10: appended at the end of
+    // the frame so pre-PR-10 consumers see an unchanged prefix.
     let status = Response::Status(StatusReply {
         entries: 12,
         max_entries: 0,
@@ -198,13 +202,36 @@ fn golden_status_and_done_replies() {
         inflight: 1,
         workers: 4,
         pool_utilization: 0.75,
+        uptime_ms: 61234,
+        requests_done: 40,
+        requests_failed: 2,
     });
     assert_eq!(
         status.encode_line(),
-        r#"{"v":1,"kind":"status","ok":true,"entries":12,"max_entries":0,"hits":34,"disk_hits":5,"misses":13,"evictions":0,"queue_depth":2,"inflight":1,"workers":4,"pool_utilization":0.75}"#
+        r#"{"v":1,"kind":"status","ok":true,"entries":12,"max_entries":0,"hits":34,"disk_hits":5,"misses":13,"evictions":0,"queue_depth":2,"inflight":1,"workers":4,"pool_utilization":0.75,"uptime_ms":61234,"requests_done":40,"requests_failed":2}"#
     );
     let done = Response::Done(DoneReply { id: None, what: "shutdown".into() });
     assert_eq!(done.encode_line(), r#"{"v":1,"kind":"done","ok":true,"what":"shutdown"}"#);
+}
+
+#[test]
+fn golden_metrics_reply() {
+    let r = Response::Metrics(MetricsReply {
+        uptime_ms: 61234,
+        counters: vec![MetricCounter { name: "serve.requests_done".into(), value: 40 }],
+        gauges: vec![MetricGauge { name: "serve.pool_utilization".into(), value: 0.75 }],
+        histograms: vec![MetricHistogram {
+            name: "serve.wave_seconds".into(),
+            bounds: vec![0.5, 2.0],
+            buckets: vec![3, 1, 0],
+            count: 4,
+            sum: 2.25,
+        }],
+    });
+    assert_eq!(
+        r.encode_line(),
+        r#"{"v":1,"kind":"metrics","ok":true,"uptime_ms":61234,"counters":[{"name":"serve.requests_done","value":40}],"gauges":[{"name":"serve.pool_utilization","value":0.75}],"histograms":[{"name":"serve.wave_seconds","bounds":[0.5,2],"buckets":[3,1,0],"count":4,"sum":2.25}]}"#
+    );
 }
 
 #[test]
@@ -274,6 +301,7 @@ fn every_request_variant_round_trips() {
         stream: true,
     }));
     roundtrip_request(&Request::Status);
+    roundtrip_request(&Request::Metrics);
     roundtrip_request(&Request::Cancel { id: 9 });
     roundtrip_request(&Request::Shutdown);
 }
@@ -413,8 +441,32 @@ fn control_replies_round_trip() {
         inflight: 2,
         workers: 8,
         pool_utilization: 0.25,
+        uptime_ms: 120500,
+        requests_done: 9,
+        requests_failed: 1,
     }));
     roundtrip_response(&Response::Done(DoneReply { id: Some(42), what: "cancel".into() }));
+}
+
+#[test]
+fn metrics_reply_round_trips_full_and_minimal() {
+    roundtrip_response(&Response::Metrics(MetricsReply {
+        uptime_ms: 5000,
+        counters: vec![
+            MetricCounter { name: "cache.flushes".into(), value: 3 },
+            MetricCounter { name: "serve.requests_done".into(), value: 17 },
+        ],
+        gauges: vec![MetricGauge { name: "serve.queue_depth".into(), value: 2.0 }],
+        histograms: vec![MetricHistogram {
+            name: "serve.request_seconds".into(),
+            bounds: vec![0.001, 0.02, 0.5],
+            buckets: vec![4, 9, 3, 1],
+            count: 17,
+            sum: 1.75,
+        }],
+    }));
+    // Minimal: a daemon with no instruments registered yet.
+    roundtrip_response(&Response::Metrics(MetricsReply::default()));
 }
 
 #[test]
@@ -479,7 +531,11 @@ fn missing_and_unknown_kinds_are_rejected() {
 
     let e = decode_request_err(r#"{"v":1,"kind":"frobnicate"}"#);
     assert!(e.message.contains("unknown request kind 'frobnicate'"), "{}", e.message);
-    assert!(e.message.contains("analyze | map | dse | status | cancel | shutdown"), "{}", e.message);
+    assert!(
+        e.message.contains("analyze | map | dse | status | metrics | cancel | shutdown"),
+        "{}",
+        e.message
+    );
 }
 
 #[test]
